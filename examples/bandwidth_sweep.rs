@@ -1,0 +1,52 @@
+//! Bandwidth sweep: how the tile-based overlap (paper §III-D) changes the
+//! latency/bandwidth curve — Fig. 8's mechanism, decomposed into exposed
+//! vs hidden communication at each operating point.
+//!
+//! ```bash
+//! cargo run --release --example bandwidth_sweep
+//! ```
+
+use galaxy::metrics::Table;
+use galaxy::model::ModelConfig;
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+
+const SEQ: usize = 284;
+
+fn main() -> galaxy::Result<()> {
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b(); // 3x Nano-M
+    let profile = Profiler::analytic(&model, &env, SEQ).profile();
+    let plan = Planner::new(&model, &env, &profile).plan()?;
+
+    let mut t = Table::new(
+        "Bert-L on env B — overlap across the bandwidth range",
+        &["bandwidth", "serial total", "tiled total", "exposed comm", "hidden comm", "overlap saves"],
+    );
+    for mbps in [10.0, 25.0, 50.0, 125.0, 250.0, 500.0, 1000.0] {
+        let serial = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::None)
+            .run_inference(SEQ);
+        let tiled = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::Tiled)
+            .run_inference(SEQ);
+        t.row(&[
+            format!("{mbps:>5.0} Mbps"),
+            format!("{:.2} s", serial.total_s()),
+            format!("{:.2} s", tiled.total_s()),
+            format!("{:.2} s", tiled.exposed_comm_s),
+            format!("{:.2} s", tiled.hidden_comm_s),
+            format!("{:.1}%", 100.0 * (1.0 - tiled.total_s() / serial.total_s())),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("reading the curve (paper Fig. 8):");
+    println!(" * very low bandwidth: the wire dwarfs the boundary GEMMs — only part");
+    println!("   of each transfer hides, savings taper;");
+    println!(" * mid-range: transfers and tile GEMMs are comparable — peak savings;");
+    println!(" * high bandwidth: little to hide, but also little exposed — Galaxy");
+    println!("   converges to its compute floor.");
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT compiler: lower every shard program to HLO text artifacts.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts [--force]
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+Rust `xla` crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Every program is
+lowered with return_tuple=True, so the Rust side always unwraps a 1-tuple.
+
+Two flavors per program (DESIGN.md):
+  * ``pallas`` — calls the L1 Pallas kernels (interpret=True). Lowered for
+    the *fused* shard programs; running these through PJRT validates the
+    kernel layer end-to-end from Rust.
+  * ``xla``    — pure-jnp (ref.py) bodies; XLA-native fusion. Lowered for
+    *all* programs including the overlap tiles; this is the default hot
+    path the Rust runtime executes.
+
+The artifact set is the closed shape space of DESIGN.md §3; the Rust
+artifact registry asserts against ``manifest.json``.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+
+
+def _sd(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def enumerate_programs():
+    """Yield (name, fn, example_args, flavor) for every artifact.
+
+    Shard-size space: K heads (1..12), U MLP units (1..12), T sequence tiles
+    (full-seq and the equal partitions for 2..4 devices).
+    """
+    S, H, DH = shapes.SEQ_LEN, shapes.HIDDEN, shapes.HEAD_DIM
+    progs = []
+
+    def add(name, fn, args, flavor):
+        progs.append((name, fn, args, flavor))
+
+    for flavor in ("pallas", "xla"):
+        # Fused shard programs --------------------------------------------
+        for k in shapes.HEAD_SHARDS:
+            kd = k * DH
+            add(
+                f"mha_shard_k{k}__{flavor}",
+                functools.partial(model.mha_shard, k_heads=k, flavor=flavor),
+                (_sd(S, H), _sd(H, 3 * kd), _sd(kd, H), _sd(S)),
+                flavor,
+            )
+            add(
+                f"attn_core_k{k}__{flavor}",
+                functools.partial(model.attn_core, k_heads=k, flavor=flavor),
+                (_sd(S, kd), _sd(S, kd), _sd(S, kd), _sd(S)),
+                flavor,
+            )
+        for u in shapes.MLP_SHARDS:
+            w = u * shapes.MLP_UNIT
+            add(
+                f"mlp_shard_u{u}__{flavor}",
+                functools.partial(model.mlp_shard, flavor=flavor),
+                (_sd(S, H), _sd(H, w), _sd(w, H)),
+                flavor,
+            )
+        for t in shapes.SEQ_TILES:
+            add(
+                f"connective_t{t}__{flavor}",
+                functools.partial(model.connective_block, flavor=flavor),
+                (_sd(t, H), _sd(t, H), _sd(H), _sd(H)),
+                flavor,
+            )
+        add(
+            f"layer_local__{flavor}",
+            functools.partial(model.layer_local, flavor=flavor),
+            (
+                _sd(S, H), _sd(H, 3 * H), _sd(H, H), _sd(H, 4 * H),
+                _sd(4 * H, H), _sd(H), _sd(H), _sd(H), _sd(H), _sd(S),
+            ),
+            flavor,
+        )
+        # Overlap tiles: xla flavor only (they are plain GEMMs; the Pallas
+        # matmul kernel is already validated via the fused programs + pytest).
+        if flavor == "xla":
+            for t in shapes.SEQ_TILES:
+                for k in shapes.HEAD_SHARDS:
+                    kd = k * DH
+                    add(
+                        f"qkv_tile_t{t}_k{k}__{flavor}",
+                        functools.partial(model.qkv_tile, flavor=flavor),
+                        (_sd(t, H), _sd(H, 3 * kd)),
+                        flavor,
+                    )
+                    add(
+                        f"out_proj_tile_t{t}_k{k}__{flavor}",
+                        functools.partial(model.out_proj_tile, flavor=flavor),
+                        (_sd(t, kd), _sd(kd, H)),
+                        flavor,
+                    )
+                for u in shapes.MLP_SHARDS:
+                    w = u * shapes.MLP_UNIT
+                    add(
+                        f"mlp_gemm1_tile_t{t}_u{u}__{flavor}",
+                        functools.partial(model.mlp_gemm1_tile, flavor=flavor),
+                        (_sd(t, H), _sd(H, w)),
+                        flavor,
+                    )
+                    add(
+                        f"mlp_gemm2_tile_t{t}_u{u}__{flavor}",
+                        functools.partial(model.mlp_gemm2_tile, flavor=flavor),
+                        (_sd(t, w), _sd(w, H)),
+                        flavor,
+                    )
+    return progs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file already exists")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (debugging)")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    progs = enumerate_programs()
+    if args.only:
+        progs = [p for p in progs if args.only in p[0]]
+
+    manifest = {
+        "model": {
+            "name": "galaxy-mini",
+            "hidden": shapes.HIDDEN,
+            "n_heads": shapes.N_HEADS,
+            "head_dim": shapes.HEAD_DIM,
+            "ffn_dim": shapes.FFN_DIM,
+            "mlp_unit": shapes.MLP_UNIT,
+            "n_layers": shapes.N_LAYERS,
+            "seq_len": shapes.SEQ_LEN,
+            "seq_tiles": list(shapes.SEQ_TILES),
+            "ln_eps": shapes.LN_EPS,
+        },
+        "programs": [],
+    }
+
+    t_start = time.time()
+    n_lowered = n_skipped = 0
+    for name, fn, ex_args, flavor in progs:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        entry = {
+            "name": name,
+            "flavor": flavor,
+            "file": os.path.basename(path),
+            "inputs": [list(a.shape) for a in ex_args],
+        }
+        manifest["programs"].append(entry)
+        if os.path.exists(path) and not args.force:
+            n_skipped += 1
+            continue
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        n_lowered += 1
+        if n_lowered % 25 == 0:
+            print(f"  ... {n_lowered} lowered ({time.time() - t_start:.1f}s)",
+                  file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"aot: {n_lowered} lowered, {n_skipped} up-to-date, "
+        f"{len(manifest['programs'])} total -> {out_dir} "
+        f"({time.time() - t_start:.1f}s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Galaxy L1 Pallas kernels (build-time only; interpret=True on CPU)."""
+
+from .matmul import matmul, matmul_gelu, pick_block
+from .attention import attention
+from .layernorm import connective
+from . import ref
+
+__all__ = ["matmul", "matmul_gelu", "pick_block", "attention", "connective", "ref"]

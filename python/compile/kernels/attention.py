@@ -1,0 +1,59 @@
+"""Pallas multi-head self-attention kernel (L1).
+
+Grid = one program per attention head — the paper's key structural insight
+(§III-B.1): head-level computation is entirely independent, which is what
+lets Galaxy's TP split the MHA block with zero intra-block synchronization.
+The kernel mirrors that: each grid point loads its head's Q/K/V tiles into
+VMEM, runs the full softmax(QKᵀ/√d + mask)·V contraction on-chip, and writes
+its slice of the output. Sequence lengths on the real-execution path are
+≤60, so a head's whole [s,d] working set (~3·60·32·4B ≈ 23 KiB) is trivially
+VMEM-resident; longer sequences would add a second grid axis over query
+blocks (FlashAttention-style) without changing the interface.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, head_dim: int):
+    """One head: q,k,v blocks are [seq, head_dim]; mask is [seq] additive."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=jnp.float32))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...][None, :]
+    # Numerically-stable softmax, all in VMEM.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "head_dim"))
+def attention(q, k, v, mask, n_heads: int, head_dim: int):
+    """Multi-head attention over a head shard.
+
+    q,k,v: [seq, n_heads*head_dim] (head-major column layout); mask: [seq]
+    additive key mask. Returns [seq, n_heads*head_dim].
+    """
+    s, width = q.shape
+    assert width == n_heads * head_dim, (width, n_heads, head_dim)
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, head_dim=head_dim),
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((s, head_dim), lambda h: (0, h)),
+            pl.BlockSpec((s, head_dim), lambda h: (0, h)),
+            pl.BlockSpec((s, head_dim), lambda h: (0, h)),
+            pl.BlockSpec((s,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, head_dim), lambda h: (0, h)),
+        out_shape=jax.ShapeDtypeStruct((s, width), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,60 @@
+"""Pallas fused connective-block kernel (L1).
+
+The paper's connective block (§III-B.3, Eq. 3) is Dropout → ResidualAdd →
+LayerNorm, parallelized along the sequence dimension (SP). This kernel fuses
+all three into a single VMEM pass per row-block: one read of g and the
+residual, one write of the normalized output — exactly the memory-access
+argument the paper uses to justify parallelizing these element-wise ops
+(they are memory-bound, not compute-bound). Dropout is the identity at
+inference and is kept as a named stage for parity with the paper.
+
+Grid = sequence row-blocks; the hidden axis stays whole inside a block so
+mean/variance are single-pass reductions in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+PREF_ROWS = 128
+
+
+def _connective_kernel(g_ref, res_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    g = g_ref[...]
+    # Dropout(identity at inference) -> ResidualAdd
+    x = g + res_ref[...]
+    # LayerNorm over the hidden axis, f32 stats.
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) / jnp.sqrt(var + eps)
+    o_ref[...] = (y * gamma_ref[...][None, :] + beta_ref[...][None, :]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def connective(g, residual, gamma, beta, eps: float = 1e-5):
+    """Fused Dropout→ResidualAdd→LayerNorm over a sequence shard.
+
+    g, residual: [rows, hidden]; gamma, beta: [hidden].
+    """
+    rows, hidden = g.shape
+    br = pick_block(rows, PREF_ROWS)
+    return pl.pallas_call(
+        functools.partial(_connective_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, hidden), lambda r: (r, 0)),
+            pl.BlockSpec((br, hidden), lambda r: (r, 0)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, hidden), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), g.dtype),
+        interpret=True,
+    )(g, residual, gamma, beta)

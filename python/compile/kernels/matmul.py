@@ -1,0 +1,91 @@
+"""Pallas block-tiled GEMM kernels (L1).
+
+TPU-style structure even though this repo validates on CPU interpret mode
+(DESIGN.md §5): the GEMM is expressed as an (M/bm, N/bn, K/bk) grid with a
+VMEM accumulator scratch, so on a real TPU each (bm,bk)x(bk,bn) tile is an
+MXU-sized systolic contraction and the BlockSpec index maps express the
+HBM->VMEM streaming schedule. ``pick_block`` keeps every tile an exact
+divisor of the dim so no masking is needed.
+
+Fused epilogues (GELU for the MLP GEMM1) run on the final K step while the
+accumulator is still VMEM-resident — the same trick the paper plays with
+matrix tiling, transplanted to the memory hierarchy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred VMEM tile bounds. 128 matches the MXU lane width; 512 on K keeps
+# the (bm+bn)*bk working set well under VMEM while amortizing the loop.
+PREF_BM = 128
+PREF_BN = 128
+PREF_BK = 512
+
+
+def pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``pref``.
+
+    Guarantees grid-exact tiling (no partial tiles); falls back to the full
+    dim when it is already small.
+    """
+    if dim <= pref:
+        return dim
+    for b in range(pref, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, activation: str):
+    """Grid point (i, j, k): accumulate tile (i,k)x(k,j) into VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if activation == "gelu":
+            acc = jax.nn.gelu(acc, approximate=False)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def matmul(x, w, activation: str = "none"):
+    """``x @ w`` (optionally fused with GELU) as a Pallas kernel.
+
+    x: [m, k]; w: [k, n] -> [m, n]. f32 accumulation regardless of dtype.
+    """
+    m, kd = x.shape
+    kd2, n = w.shape
+    assert kd == kd2, f"contraction mismatch {kd} vs {kd2}"
+    bm, bn, bk = pick_block(m, PREF_BM), pick_block(n, PREF_BN), pick_block(kd, PREF_BK)
+    nk = kd // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pl.MemoryRef(jax.core.ShapedArray((bm, bn), jnp.float32), pl.ANY)
+        ],
+        interpret=True,
+    )(x, w)
+
+
+def matmul_gelu(x, w):
+    """Fused MLP GEMM1: GELU(x @ w)."""
+    return matmul(x, w, activation="gelu")

@@ -1,0 +1,154 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and shard programs.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests) asserts allclose between the Pallas kernel (interpret=True)
+and these oracles, and between the HMP shard composition and the local
+single-device layer.  The Rust test-suite mirrors the same oracles natively
+(rust/src/tensor) so both language layers are pinned to the same math.
+"""
+
+import jax.numpy as jnp
+from jax.nn import gelu as _gelu
+
+
+def ref_matmul(x, w):
+    """Plain GEMM: [m,k]@[k,n] -> [m,n] in f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ref_gelu(x):
+    """Exact (erf-based) GELU, matching the Rust tensor oracle."""
+    return _gelu(x, approximate=False)
+
+
+def ref_matmul_gelu(x, w):
+    """Fused GEMM1 of the MLP block: GELU(x @ w)."""
+    return ref_gelu(ref_matmul(x, w))
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ref_connective(g, residual, gamma, beta, eps=1e-5):
+    """Connective block (paper Eq. 3): LayerNorm(ResidualAdd(Dropout(g))).
+
+    Dropout is the identity at inference time.
+    """
+    return ref_layernorm(g + residual, gamma, beta, eps)
+
+
+def ref_attention(q, k, v, mask, n_heads, head_dim):
+    """Multi-head self-attention core over a head shard.
+
+    q,k,v: [seq, n_heads*head_dim]; mask: [seq] additive key mask (0 valid,
+    large-negative for padding). Returns [seq, n_heads*head_dim].
+    """
+    s = q.shape[0]
+    qh = q.reshape(s, n_heads, head_dim).transpose(1, 0, 2)  # [H,s,d]
+    kh = k.reshape(s, n_heads, head_dim).transpose(1, 0, 2)
+    vh = v.reshape(s, n_heads, head_dim).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / jnp.sqrt(
+        jnp.asarray(head_dim, dtype=q.dtype)
+    )
+    scores = scores + mask[None, None, :]
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", probs, vh)  # [H,s,d]
+    return out.transpose(1, 0, 2).reshape(s, n_heads * head_dim)
+
+
+def ref_mha_shard(x, wqkv, wout, mask, k_heads, head_dim):
+    """Head-sharded MHA block (paper Eq. 1), producing the partial C_i.
+
+    x: [seq, hidden]; wqkv: [hidden, 3*k*d] laid out [Q|K|V]; wout: [k*d, hidden].
+    """
+    kd = k_heads * head_dim
+    qkv = ref_matmul(x, wqkv)
+    q, k, v = qkv[:, :kd], qkv[:, kd : 2 * kd], qkv[:, 2 * kd :]
+    b = ref_attention(q, k, v, mask, k_heads, head_dim)
+    return ref_matmul(b, wout)
+
+
+def ref_mlp_shard(x, w1, w2):
+    """Column/row-sharded MLP block (paper Eq. 2), producing the partial F_i."""
+    return ref_matmul(ref_matmul_gelu(x, w1), w2)
+
+
+def ref_layer_local(x, params, mask, n_heads, head_dim, eps=1e-5):
+    """Full (unsharded) post-LN Transformer layer — the Local baseline.
+
+    params: dict with wqkv [h,3h], wout [h,h], w1 [h,4h], w2 [4h,h],
+    gamma1/beta1/gamma2/beta2 [h].
+    """
+    c = ref_mha_shard(x, params["wqkv"], params["wout"], mask, n_heads, head_dim)
+    h1 = ref_connective(c, x, params["gamma1"], params["beta1"], eps)
+    f = ref_mlp_shard(h1, params["w1"], params["w2"])
+    return ref_connective(f, h1, params["gamma2"], params["beta2"], eps)
+
+
+def shard_wqkv(wqkv, off_heads, k_heads, n_heads, head_dim):
+    """Slice the fused [Q|K|V] projection for a head shard.
+
+    The full wqkv is [hidden, 3*n_heads*head_dim] with global layout
+    [Q_all | K_all | V_all]; the shard keeps columns of its heads from each
+    of the three segments, re-fused as [Q_shard | K_shard | V_shard].
+    """
+    hd = n_heads * head_dim
+    off = off_heads * head_dim
+    kd = k_heads * head_dim
+    q = wqkv[:, off : off + kd]
+    k = wqkv[:, hd + off : hd + off + kd]
+    v = wqkv[:, 2 * hd + off : 2 * hd + off + kd]
+    return jnp.concatenate([q, k, v], axis=1)
+
+
+def ref_hmp_layer(x, params, mask, n_heads, head_dim, mlp_unit,
+                  head_parts, mlp_parts, seq_parts, eps=1e-5):
+    """Emulate the HMP execution of one layer across D logical devices.
+
+    head_parts/mlp_parts/seq_parts: per-device partition sizes (heads, MLP
+    units, sequence rows).  Returns the same [seq, hidden] output as
+    ``ref_layer_local`` up to float associativity — the equality the Rust
+    integration tests assert end-to-end over PJRT.
+    """
+    # --- TP on MHA: per-device partials
+    c_parts, off = [], 0
+    for k in head_parts:
+        if k == 0:
+            off += 0
+            continue
+        wqkv_i = shard_wqkv(params["wqkv"], off, k, n_heads, head_dim)
+        wout_i = params["wout"][off * head_dim : (off + k) * head_dim, :]
+        c_parts.append(ref_mha_shard(x, wqkv_i, wout_i, mask, k, head_dim))
+        off += k
+    g = sum(c_parts)
+    # --- ReduceScatter + SP connective
+    h_parts, row = [], 0
+    for s in seq_parts:
+        h_parts.append(
+            ref_connective(g[row : row + s], x[row : row + s],
+                           params["gamma1"], params["beta1"], eps))
+        row += s
+    h1 = jnp.concatenate(h_parts, axis=0)  # AllGather
+    # --- TP on MLP
+    f_parts, col = [], 0
+    for u in mlp_parts:
+        w = u * mlp_unit
+        if w == 0:
+            continue
+        f_parts.append(ref_mlp_shard(h1, params["w1"][:, col : col + w],
+                                     params["w2"][col : col + w, :]))
+        col += w
+    f = sum(f_parts)
+    # --- ReduceScatter + SP connective + AllGather
+    o_parts, row = [], 0
+    for s in seq_parts:
+        o_parts.append(
+            ref_connective(f[row : row + s], h1[row : row + s],
+                           params["gamma2"], params["beta2"], eps))
+        row += s
+    return jnp.concatenate(o_parts, axis=0)

@@ -1,0 +1,126 @@
+"""L2: Galaxy's per-device shard programs as JAX functions over L1 kernels.
+
+Each function here is one *shard program* — the unit of compute the Rust
+coordinator schedules on a (simulated) edge device. The HMP data flow per
+Transformer layer (paper Fig. 5) is:
+
+    [all devices hold full activations A]
+      TP-MHA:   C_i = mha_shard(A, W_i^{QKV}, W_i^B)        (Eq. 1)
+      sync:     G_shards = ReduceScatter(C_0..C_{D-1})       (Rust collective)
+      SP-conn:  H_i = connective(G_i, A_i)                   (Eq. 3)
+      sync:     D = AllGather(H_0..H_{D-1})                  (Rust collective)
+      TP-MLP:   F_i = mlp_shard(D, W_i^D, W_i^E)             (Eq. 2)
+      sync:     G'_shards = ReduceScatter(F_0..F_{D-1})
+      SP-conn:  H'_i = connective(G'_i, D_i)
+      sync:     next-layer input = AllGather(H'_0..H'_{D-1})
+
+The tiled variants (qkv_tile / out_proj_tile / mlp_gemm1_tile /
+mlp_gemm2_tile) decompose the boundary GEMMs row-wise so the Rust overlap
+engine can interleave them with Ring-AllGather / Ring-ReduceScatter steps
+(paper §III-D, Eq. 8/10). Tiling is mathematically a no-op — pytest asserts
+tile-concatenation == fused results, and the Rust integration tests assert
+the overlapped schedule reproduces the non-overlapped output.
+
+All functions exist in two flavors: ``pallas`` (calls the L1 kernels;
+validates the kernel layer end-to-end through PJRT) and ``xla`` (pure jnp
+from ref.py; XLA-native fusion, the fast hot path). ``aot.py`` lowers both.
+"""
+
+import jax.numpy as jnp
+
+from . import shapes
+from .kernels import attention, connective, matmul, matmul_gelu
+from .kernels import ref
+
+LN_EPS = shapes.LN_EPS
+
+
+# --------------------------------------------------------------------------
+# Fused shard programs (non-overlapped path)
+# --------------------------------------------------------------------------
+
+def mha_shard(x, wqkv, wout, mask, *, k_heads, head_dim=shapes.HEAD_DIM,
+              flavor="pallas"):
+    """TP-MHA shard: produce partial C_i for a k_heads-head shard (Eq. 1)."""
+    if flavor == "xla":
+        return ref.ref_mha_shard(x, wqkv, wout, mask, k_heads, head_dim)
+    kd = k_heads * head_dim
+    qkv = matmul(x, wqkv)
+    q, k, v = qkv[:, :kd], qkv[:, kd : 2 * kd], qkv[:, 2 * kd :]
+    b = attention(q, k, v, mask, n_heads=k_heads, head_dim=head_dim)
+    return matmul(b, wout)
+
+
+def mlp_shard(x, w1, w2, *, flavor="pallas"):
+    """TP-MLP shard: partial F_i = W2_i · GELU(W1_i · x) (Eq. 2)."""
+    if flavor == "xla":
+        return ref.ref_mlp_shard(x, w1, w2)
+    return matmul(matmul_gelu(x, w1), w2)
+
+
+def connective_block(g, residual, gamma, beta, *, flavor="pallas"):
+    """SP connective shard: LayerNorm(ResidualAdd(Dropout(g))) (Eq. 3)."""
+    if flavor == "xla":
+        return ref.ref_connective(g, residual, gamma, beta, LN_EPS)
+    return connective(g, residual, gamma, beta, eps=LN_EPS)
+
+
+# --------------------------------------------------------------------------
+# Tiled programs for the overlap engine (§III-D)
+# --------------------------------------------------------------------------
+
+def qkv_tile(x_tile, wqkv, *, flavor="pallas"):
+    """AllGather-overlap tile: QKV projection of one sequence tile (Eq. 8
+    applied to the MHA entry GEMM)."""
+    if flavor == "xla":
+        return ref.ref_matmul(x_tile, wqkv)
+    return matmul(x_tile, wqkv)
+
+
+def attn_core(q, k, v, mask, *, k_heads, head_dim=shapes.HEAD_DIM,
+              flavor="pallas"):
+    """Self-attention core over the full sequence for a head shard.
+
+    Runs after all QKV tiles have been gathered — attention itself needs
+    every key/value, so only the projections overlap with the ring.
+    """
+    if flavor == "xla":
+        return ref.ref_attention(q, k, v, mask, k_heads, head_dim)
+    return attention(q, k, v, mask, n_heads=k_heads, head_dim=head_dim)
+
+
+def out_proj_tile(b_tile, wout, *, flavor="pallas"):
+    """ReduceScatter-overlap tile: output projection of one row tile
+    (Eq. 10 applied to the MHA exit GEMM)."""
+    if flavor == "xla":
+        return ref.ref_matmul(b_tile, wout)
+    return matmul(b_tile, wout)
+
+
+def mlp_gemm1_tile(x_tile, w1, *, flavor="pallas"):
+    """AllGather-overlap tile: GELU(x_tile · W1_i) (Eq. 8)."""
+    if flavor == "xla":
+        return ref.ref_matmul_gelu(x_tile, w1)
+    return matmul_gelu(x_tile, w1)
+
+
+def mlp_gemm2_tile(e_tile, w2, *, flavor="pallas"):
+    """ReduceScatter-overlap tile: e_tile · W2_i partial (Eq. 10)."""
+    if flavor == "xla":
+        return ref.ref_matmul(e_tile, w2)
+    return matmul(e_tile, w2)
+
+
+# --------------------------------------------------------------------------
+# Local baseline (whole layer on one device)
+# --------------------------------------------------------------------------
+
+def layer_local(x, wqkv, wout, w1, w2, gamma1, beta1, gamma2, beta2, mask,
+                *, n_heads=shapes.N_HEADS, head_dim=shapes.HEAD_DIM,
+                flavor="pallas"):
+    """Full post-LN Transformer layer on a single device (Local baseline)."""
+    c = mha_shard(x, wqkv, wout, mask, k_heads=n_heads, head_dim=head_dim,
+                  flavor=flavor)
+    h1 = connective_block(c, x, gamma1, beta1, flavor=flavor)
+    f = mlp_shard(h1, w1, w2, flavor=flavor)
+    return connective_block(f, h1, gamma2, beta2, flavor=flavor)

@@ -1,0 +1,45 @@
+"""Shared shape constants for the real-execution model ("galaxy-mini").
+
+The Rust runtime executes AOT-compiled HLO artifacts whose shapes are static,
+so the partition space is quantized (DESIGN.md §3):
+
+  - MHA is partitioned in units of attention *heads*.
+  - MLP is partitioned in units of ``FFN_DIM // N_HEADS`` columns (one "unit"
+    per head, finer absolute granularity than a head — matching the paper's
+    observation that MLP partitioning is finer-grained than MHA).
+  - The connective (SP) blocks are partitioned in equal sequence tiles; with
+    1..4 devices over SEQ_LEN=60 the tile sizes are 60/30/20/15.
+
+``aot.py`` enumerates every artifact induced by this space; the Rust artifact
+registry (rust/src/runtime/registry.rs) must agree with these constants.
+"""
+
+# galaxy-mini model dimensions (a small but real post-LN encoder, BERT-style)
+HIDDEN = 384
+N_HEADS = 12
+HEAD_DIM = HIDDEN // N_HEADS  # 32
+FFN_DIM = 4 * HIDDEN  # 1536
+MLP_UNIT = FFN_DIM // N_HEADS  # 128 columns per MLP partition unit
+N_LAYERS = 6
+SEQ_LEN = 60
+LN_EPS = 1e-5
+
+# Device counts supported on the real-execution path; SEQ_LEN is divisible by
+# each so the equal SP partition has no remainder.
+DEVICE_COUNTS = (1, 2, 3, 4)
+SEQ_TILES = tuple(sorted({SEQ_LEN // d for d in DEVICE_COUNTS}))  # (15,20,30,60)
+
+# Shard sizes the planner may emit (0 heads/units means "device idle for this
+# block" and needs no artifact).
+HEAD_SHARDS = tuple(range(1, N_HEADS + 1))
+MLP_SHARDS = tuple(range(1, N_HEADS + 1))
+
+
+def qkv_width(k_heads: int) -> int:
+    """Width of the fused QKV projection for a ``k_heads``-head shard."""
+    return 3 * k_heads * HEAD_DIM
+
+
+def mlp_width(u_units: int) -> int:
+    """Number of FFN columns owned by a ``u_units``-unit MLP shard."""
+    return u_units * MLP_UNIT

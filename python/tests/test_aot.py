@@ -1,0 +1,97 @@
+"""AOT artifact pipeline: enumeration coverage, manifest consistency, and
+HLO-text well-formedness (the contract the Rust artifact registry relies on).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def programs():
+    return aot.enumerate_programs()
+
+
+class TestEnumeration:
+    def test_counts_match_shape_space(self):
+        progs = programs()
+        names = [p[0] for p in progs]
+        assert len(names) == len(set(names)), "duplicate artifact names"
+        n_tiles, n_heads = len(shapes.SEQ_TILES), len(shapes.HEAD_SHARDS)
+        # pallas+xla fused: 2*(12 mha + 12 attn + 12 mlp + 4 conn + 1 local)
+        fused = 2 * (3 * n_heads + n_tiles + 1)
+        # xla-only tiles: qkv + outproj + gemm1 + gemm2 per (tile, shard)
+        tiles = n_tiles * (2 * n_heads + 2 * len(shapes.MLP_SHARDS))
+        assert len(names) == fused + tiles
+
+    def test_every_device_count_covered(self):
+        """Every supported D has connective + tile artifacts for S/D rows."""
+        names = {p[0] for p in programs()}
+        for d in shapes.DEVICE_COUNTS:
+            t = shapes.SEQ_LEN // d
+            assert f"connective_t{t}__xla" in names
+            assert f"qkv_tile_t{t}_k1__xla" in names
+            assert f"mlp_gemm2_tile_t{t}_u{shapes.N_HEADS}__xla" in names
+
+    def test_full_model_shard_exists(self):
+        names = {p[0] for p in programs()}
+        assert f"mha_shard_k{shapes.N_HEADS}__pallas" in names
+        assert "layer_local__xla" in names
+
+    def test_example_arg_shapes_consistent(self):
+        """QKV width must be 3*k*head_dim; MLP width u*unit; wout rows k*d."""
+        for name, _fn, args, _flavor in programs():
+            if name.startswith("mha_shard_k"):
+                k = int(name.split("_k")[1].split("__")[0])
+                assert args[1].shape == (shapes.HIDDEN, shapes.qkv_width(k))
+                assert args[2].shape == (k * shapes.HEAD_DIM, shapes.HIDDEN)
+            if name.startswith("mlp_shard_u"):
+                u = int(name.split("_u")[1].split("__")[0])
+                assert args[1].shape == (shapes.HIDDEN, shapes.mlp_width(u))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_model_block(self, manifest):
+        m = manifest["model"]
+        assert m["hidden"] == shapes.HIDDEN
+        assert m["n_heads"] == shapes.N_HEADS
+        assert m["seq_len"] == shapes.SEQ_LEN
+        assert m["mlp_unit"] == shapes.MLP_UNIT
+        assert sorted(m["seq_tiles"]) == sorted(shapes.SEQ_TILES)
+
+    def test_all_manifest_files_exist_and_parse(self, manifest):
+        missing, malformed = [], []
+        for prog in manifest["programs"]:
+            path = os.path.join(ART_DIR, prog["file"])
+            if not os.path.exists(path):
+                missing.append(prog["name"])
+                continue
+            with open(path) as f:
+                text = f.read()
+            # Well-formed HLO text: module header + a 1-tuple root (we lower
+            # with return_tuple=True; Rust always unwraps to_tuple1).
+            if "HloModule" not in text or "ROOT" not in text:
+                malformed.append(prog["name"])
+        assert not missing, f"missing artifacts: {missing[:5]}..."
+        assert not malformed, f"malformed artifacts: {malformed[:5]}..."
+
+    def test_manifest_matches_enumeration(self, manifest):
+        assert {p["name"] for p in manifest["programs"]} == \
+               {p[0] for p in programs()}
+
+    def test_input_arity_recorded(self, manifest):
+        by_name = {p["name"]: p for p in manifest["programs"]}
+        assert len(by_name["layer_local__xla"]["inputs"]) == 10
+        assert len(by_name["mha_shard_k6__pallas"]["inputs"]) == 4
+        assert len(by_name["qkv_tile_t15_k1__xla"]["inputs"]) == 2

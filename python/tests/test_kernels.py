@@ -1,0 +1,236 @@
+"""L1 Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps the kernel shape/dtype space; fixed-shape tests pin the
+exact shard shapes the AOT artifacts use (DESIGN.md §3).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels import attention, connective, matmul, matmul_gelu, pick_block
+from compile.kernels import ref
+
+RS = np.random.RandomState
+
+
+def _rand(rs, *dims, dtype=np.float32):
+    return (rs.randn(*dims) * 0.5).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# pick_block
+# --------------------------------------------------------------------------
+
+class TestPickBlock:
+    def test_small_dim_returns_dim(self):
+        assert pick_block(60, 128) == 60
+
+    def test_exact_pref(self):
+        assert pick_block(256, 128) == 128
+
+    def test_divisor_found_below_pref(self):
+        # 384 = 128*3 -> 128 is a divisor
+        assert pick_block(384, 128) == 128
+
+    def test_awkward_dim_falls_back_to_divisor(self):
+        # 96 <= 128 so returns 96; 3*96=288 with pref 128 -> 96
+        assert pick_block(288, 128) == 96
+
+    def test_prime_dim(self):
+        # Prime above pref: only divisor <= pref is 1
+        assert pick_block(257, 128) == 1
+
+    @given(st.integers(1, 4096), st.integers(1, 512))
+    @settings(max_examples=200, deadline=None)
+    def test_always_divides(self, dim, pref):
+        b = pick_block(dim, pref)
+        assert dim % b == 0
+        assert b >= 1
+        if dim <= pref:
+            assert b == dim
+
+
+# --------------------------------------------------------------------------
+# matmul kernel
+# --------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (60, 384, 1152),   # qkv projection, full model
+        (60, 384, 96),     # qkv projection, 1-head shard
+        (15, 384, 128),    # smallest overlap tile x smallest mlp shard
+        (60, 1536, 384),   # mlp gemm2, full
+        (1, 384, 384),     # degenerate single row
+    ])
+    def test_artifact_shapes(self, m, k, n):
+        rs = RS(m * 7 + n)
+        x, w = _rand(rs, m, k), _rand(rs, k, n)
+        got = np.asarray(matmul(x, w))
+        want = x.astype(np.float64) @ w.astype(np.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(
+        m=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref_any_shape(self, m, k, n, seed):
+        rs = RS(seed)
+        x, w = _rand(rs, m, k), _rand(rs, k, n)
+        got = np.asarray(matmul(x, w))
+        want = np.asarray(ref.ref_matmul(jnp.array(x), jnp.array(w)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_gelu_fusion_matches_unfused(self):
+        rs = RS(3)
+        x, w = _rand(rs, 20, 384), _rand(rs, 384, 256)
+        fused = np.asarray(matmul_gelu(x, w))
+        unfused = np.asarray(ref.ref_gelu(jnp.array(np.asarray(matmul(x, w)))))
+        np.testing.assert_allclose(fused, unfused, rtol=1e-5, atol=1e-5)
+
+    def test_gelu_exact_not_tanh_approx(self):
+        # GELU(1) exact = 0.841345; tanh approx = 0.841192 — tell them apart.
+        x = np.ones((1, 1), np.float32)
+        w = np.ones((1, 1), np.float32)
+        got = float(np.asarray(matmul_gelu(x, w))[0, 0])
+        assert abs(got - 0.8413447) < 1e-5
+
+    def test_f32_accumulation_large_k(self):
+        # Accumulating 1536 products of ~1.0 magnitude must not drift.
+        k = 1536
+        x = np.full((4, k), 1.0, np.float32)
+        w = np.full((k, 4), 1.0, np.float32)
+        got = np.asarray(matmul(x, w))
+        np.testing.assert_array_equal(got, np.full((4, 4), float(k), np.float32))
+
+
+# --------------------------------------------------------------------------
+# attention kernel
+# --------------------------------------------------------------------------
+
+class TestAttention:
+    @pytest.mark.parametrize("k_heads", [1, 2, 6, 12])
+    def test_shard_sizes(self, k_heads):
+        rs = RS(k_heads)
+        s, d = shapes.SEQ_LEN, shapes.HEAD_DIM
+        q, k, v = (_rand(rs, s, k_heads * d) for _ in range(3))
+        mask = np.zeros(s, np.float32)
+        got = np.asarray(attention(q, k, v, mask, n_heads=k_heads, head_dim=d))
+        want = np.asarray(ref.ref_attention(
+            jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(mask), k_heads, d))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_padding_mask_blocks_keys(self):
+        """Masked keys must not influence valid-position outputs."""
+        rs = RS(11)
+        s, d, hpad = 16, 8, -1e9
+        q, k, v = (_rand(rs, s, d) for _ in range(3))
+        mask = np.zeros(s, np.float32)
+        mask[10:] = hpad
+        out_masked = np.asarray(attention(q, k, v, mask, n_heads=1, head_dim=d))
+        # Same computation with garbage in padded K/V rows: valid outputs equal.
+        k2, v2 = k.copy(), v.copy()
+        k2[10:] = 1e3
+        v2[10:] = -1e3
+        out_garbage = np.asarray(attention(q, k2, v2, mask, n_heads=1, head_dim=d))
+        np.testing.assert_allclose(out_masked[:10], out_garbage[:10],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_softmax_rows_are_convex_combination(self):
+        """Attention output lies in the convex hull of V rows -> bounded."""
+        rs = RS(5)
+        s, d = 24, 16
+        q, k = _rand(rs, s, d), _rand(rs, s, d)
+        v = rs.uniform(-1, 1, (s, d)).astype(np.float32)
+        mask = np.zeros(s, np.float32)
+        out = np.asarray(attention(q, k, v, mask, n_heads=1, head_dim=d))
+        assert out.min() >= v.min() - 1e-5
+        assert out.max() <= v.max() + 1e-5
+
+    def test_head_independence(self):
+        """Perturbing head 1's inputs must not change head 0's output —
+        the property HMP's head-partitioned TP rests on (paper §III-B.1)."""
+        rs = RS(7)
+        s, d = 20, 8
+        q, k, v = (_rand(rs, s, 2 * d) for _ in range(3))
+        mask = np.zeros(s, np.float32)
+        base = np.asarray(attention(q, k, v, mask, n_heads=2, head_dim=d))
+        q2 = q.copy()
+        q2[:, d:] += 3.0  # perturb head 1 only
+        pert = np.asarray(attention(q2, k, v, mask, n_heads=2, head_dim=d))
+        np.testing.assert_array_equal(base[:, :d], pert[:, :d])
+        assert not np.allclose(base[:, d:], pert[:, d:])
+
+    @given(
+        s=st.integers(2, 48),
+        k_heads=st.integers(1, 4),
+        head_dim=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref_any_shape(self, s, k_heads, head_dim, seed):
+        rs = RS(seed)
+        q, k, v = (_rand(rs, s, k_heads * head_dim) for _ in range(3))
+        mask = np.zeros(s, np.float32)
+        got = np.asarray(attention(q, k, v, mask, n_heads=k_heads, head_dim=head_dim))
+        want = np.asarray(ref.ref_attention(
+            jnp.array(q), jnp.array(k), jnp.array(v), jnp.array(mask),
+            k_heads, head_dim))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# connective kernel
+# --------------------------------------------------------------------------
+
+class TestConnective:
+    @pytest.mark.parametrize("rows", list(shapes.SEQ_TILES))
+    def test_artifact_tile_shapes(self, rows):
+        rs = RS(rows)
+        h = shapes.HIDDEN
+        g, res = _rand(rs, rows, h), _rand(rs, rows, h)
+        gamma, beta = _rand(rs, h), _rand(rs, h)
+        got = np.asarray(connective(g, res, gamma, beta))
+        want = np.asarray(ref.ref_connective(
+            jnp.array(g), jnp.array(res), jnp.array(gamma), jnp.array(beta)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_normalized_stats(self):
+        """With gamma=1, beta=0 the output rows have ~zero mean, unit var."""
+        rs = RS(2)
+        g, res = _rand(rs, 30, 384), _rand(rs, 30, 384)
+        out = np.asarray(connective(
+            g, res, np.ones(384, np.float32), np.zeros(384, np.float32)))
+        np.testing.assert_allclose(out.mean(axis=1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(out.var(axis=1), 1.0, rtol=1e-3)
+
+    def test_row_locality(self):
+        """SP-parallelizable: each output row depends only on its input row."""
+        rs = RS(9)
+        g, res = _rand(rs, 10, 64), _rand(rs, 10, 64)
+        gamma, beta = _rand(rs, 64), _rand(rs, 64)
+        base = np.asarray(connective(g, res, gamma, beta))
+        g2 = g.copy()
+        g2[7] += 5.0
+        pert = np.asarray(connective(g2, res, gamma, beta))
+        np.testing.assert_array_equal(np.delete(base, 7, 0), np.delete(pert, 7, 0))
+        assert not np.allclose(base[7], pert[7])
+
+    @given(
+        rows=st.integers(1, 64),
+        hidden=st.sampled_from([8, 64, 384]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref_any_shape(self, rows, hidden, seed):
+        rs = RS(seed)
+        g, res = _rand(rs, rows, hidden), _rand(rs, rows, hidden)
+        gamma, beta = _rand(rs, hidden), _rand(rs, hidden)
+        got = np.asarray(connective(g, res, gamma, beta))
+        want = np.asarray(ref.ref_connective(
+            jnp.array(g), jnp.array(res), jnp.array(gamma), jnp.array(beta)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,83 @@
+//! Ablation: the tile-based communication/computation overlap (§III-D) —
+//! simulated savings across bandwidths *and* real wall-clock on the PJRT
+//! cluster (where overlap = channel transfers proceeding during PJRT
+//! dispatch).
+//!
+//! Run: `cargo bench --bench ablation_overlap`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::{galaxy_report, time_n};
+use galaxy::cluster::RealCluster;
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::metrics::Table;
+use galaxy::model::{ModelConfig, ModelKind, WeightGen};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{DeviceClass, EdgeEnv};
+
+const SEQ: usize = 284;
+
+fn main() {
+    // --- simulated ablation -------------------------------------------
+    let mut t = Table::new(
+        "Ablation — tiled overlap vs serialized sync (simulated, env B)",
+        &["model", "bandwidth", "serial", "tiled", "saved", "hidden comm"],
+    );
+    for kind in [ModelKind::BertLarge, ModelKind::Gpt2Large] {
+        let model = ModelConfig::by_kind(kind);
+        let env = EdgeEnv::preset_b();
+        for mbps in [25.0, 125.0, 500.0] {
+            let tiled = galaxy_report(&model, &env, mbps, SEQ, OverlapMode::Tiled).unwrap();
+            let serial = galaxy_report(&model, &env, mbps, SEQ, OverlapMode::None).unwrap();
+            t.row(&[
+                model.kind.name().into(),
+                format!("{mbps:.0} Mbps"),
+                format!("{:.0} ms", serial.total_s() * 1e3),
+                format!("{:.0} ms", tiled.total_s() * 1e3),
+                format!("{:.1}%", 100.0 * (1.0 - tiled.total_s() / serial.total_s())),
+                format!("{:.0} ms", tiled.hidden_comm_s * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- real-path ablation (galaxy-mini over PJRT) --------------------
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built; skipping real-path ablation)");
+        return;
+    }
+    let model = ModelConfig::galaxy_mini();
+    let manifest = Manifest::load(&dir).unwrap();
+    let env = EdgeEnv::new("3x", &[DeviceClass::NanoM; 3]);
+    let profile = Profiler::analytic(&model, &env, 60).profile();
+    let plan = Planner::new(&model, &env, &profile).plan().unwrap();
+    let gen = WeightGen::new(&model, 42);
+    let x = gen.input(0, 60);
+    let mask = vec![0.0f32; 60];
+
+    let mut t2 = Table::new(
+        "Ablation — real PJRT cluster (galaxy-mini, 3 workers, 20 reqs)",
+        &["mode", "mean", "best", "pjrt calls/req"],
+    );
+    for overlap in [OverlapMode::None, OverlapMode::Tiled] {
+        let mut cluster =
+            RealCluster::spawn(&model, &manifest, &plan, overlap, "xla", 42).unwrap();
+        cluster.infer(&x, &mask).unwrap(); // warm
+        let (mean, best) = time_n(20, || {
+            cluster.infer(&x, &mask).unwrap();
+        });
+        let calls = cluster.report().pjrt_calls / cluster.report().requests as u64;
+        t2.row(&[
+            overlap.name().into(),
+            format!("{:.1} ms", mean * 1e3),
+            format!("{:.1} ms", best * 1e3),
+            format!("{calls}"),
+        ]);
+    }
+    println!("{}", t2.render());
+}

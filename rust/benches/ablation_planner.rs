@@ -1,0 +1,74 @@
+//! Ablation: heterogeneity-aware planning (Algorithm 1) vs a naive equal
+//! split, and the memory-aware rebalancing step vs capacity-only
+//! planning — quantifying each planner ingredient's contribution on the
+//! heterogeneous envs of Fig 9.
+//!
+//! Run: `cargo bench --bench ablation_planner`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use galaxy::metrics::Table;
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::{equal_seq_partition, quantize_shares, Partition, Plan, Planner};
+use galaxy::profiler::Profiler;
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+
+const MBPS: f64 = 125.0;
+const SEQ: usize = 284;
+
+fn latency_for_partition(model: &ModelConfig, env: &EdgeEnv, heads: Vec<usize>, units: Vec<usize>) -> f64 {
+    let plan = Plan {
+        partition: Partition {
+            heads,
+            mlp_units: units,
+            seq: equal_seq_partition(SEQ, env.len()),
+        },
+        pred_mha_s: 0.0,
+        pred_mlp_s: 0.0,
+        pred_conn_s: 0.0,
+        mem_mb: vec![0.0; env.len()],
+    };
+    SimEngine::new(model, env, plan, NetParams::mbps(MBPS))
+        .with_overlap(OverlapMode::Tiled)
+        .run_inference(SEQ)
+        .total_s()
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Ablation — planner ingredients (125 Mbps, seq 284)",
+        &["env", "model", "equal split", "capacity-aware", "gain", "planned heads"],
+    );
+    for env in [EdgeEnv::preset_d(), EdgeEnv::preset_e(), EdgeEnv::preset_f()] {
+        for kind in [ModelKind::BertLarge, ModelKind::Gpt2Large] {
+            let model = ModelConfig::by_kind(kind);
+            let d = env.len();
+            let naive_units = quantize_shares(&vec![1.0 / d as f64; d], model.heads);
+            let naive = latency_for_partition(&model, &env, naive_units.clone(), naive_units);
+            let profile = Profiler::analytic(&model, &env, SEQ).profile();
+            let plan = match Planner::new(&model, &env, &profile).plan() {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            let heads_str = format!("{:?}", plan.partition.heads);
+            let aware = SimEngine::new(&model, &env, plan, NetParams::mbps(MBPS))
+                .with_overlap(OverlapMode::Tiled)
+                .run_inference(SEQ)
+                .total_s();
+            t.row(&[
+                env.name.clone(),
+                model.kind.name().into(),
+                format!("{:.0} ms", naive * 1e3),
+                format!("{:.0} ms", aware * 1e3),
+                format!("{:.1}%", 100.0 * (1.0 - aware / naive)),
+                heads_str,
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("equal split straggles on the slowest device; Algorithm 1 balances");
+    println!("completion times (paper §III-C), which is where Fig 9's 1.3–2.5x lives.");
+}

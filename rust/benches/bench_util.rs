@@ -1,0 +1,70 @@
+//! Shared helpers for the bench harness (included via `#[path]` from each
+//! bench binary; the offline registry has no criterion, so benches are
+//! plain `harness = false` mains printing paper-style tables).
+
+use galaxy::baselines::{self, BaselineKind};
+use galaxy::model::ModelConfig;
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::{Plan, Planner};
+use galaxy::profiler::Profiler;
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine, SimReport};
+
+/// Galaxy's simulated end-to-end latency; `None` on OOM/infeasible.
+pub fn galaxy_report(
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    mbps: f64,
+    seq: usize,
+    overlap: OverlapMode,
+) -> Option<SimReport> {
+    let plan = galaxy_plan(model, env, seq)?;
+    Some(
+        SimEngine::new(model, env, plan, NetParams::mbps(mbps))
+            .with_overlap(overlap)
+            .run_inference(seq),
+    )
+}
+
+pub fn galaxy_plan(model: &ModelConfig, env: &EdgeEnv, seq: usize) -> Option<Plan> {
+    let profile = Profiler::analytic(model, env, seq).profile();
+    Planner::new(model, env, &profile).plan().ok()
+}
+
+pub fn galaxy_latency(model: &ModelConfig, env: &EdgeEnv, mbps: f64, seq: usize) -> Option<f64> {
+    galaxy_report(model, env, mbps, seq, OverlapMode::Tiled).map(|r| r.total_s())
+}
+
+pub fn baseline_latency(
+    kind: BaselineKind,
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    mbps: f64,
+    seq: usize,
+) -> Option<f64> {
+    baselines::simulate(kind, model, env, NetParams::mbps(mbps), seq)
+        .ok()
+        .map(|r| r.total_s())
+}
+
+/// "1.43x" / "OOM" speedup cell: baseline / galaxy.
+pub fn speedup_cell(galaxy_s: Option<f64>, baseline_s: Option<f64>) -> String {
+    match (galaxy_s, baseline_s) {
+        (Some(g), Some(b)) => format!("{:.2}x", b / g),
+        (Some(_), None) => "OOM".into(),
+        (None, _) => "OOM*".into(), // galaxy itself infeasible
+    }
+}
+
+/// Wall-clock a closure `n` times, returning (mean_s, min_s).
+pub fn time_n(n: usize, mut f: impl FnMut()) -> (f64, f64) {
+    let mut total = 0.0;
+    let mut best = f64::INFINITY;
+    for _ in 0..n {
+        let t0 = std::time::Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        best = best.min(dt);
+    }
+    (total / n as f64, best)
+}

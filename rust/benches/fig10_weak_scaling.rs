@@ -1,0 +1,49 @@
+//! Regenerates **paper Fig. 10**: weak scaling — fixed 96 tokens *per
+//! device*, single Transformer layer (to dodge OOM, as the paper does),
+//! 1000 Mbps, 1–4 Jetson Nano-M. Reports aggregate FLOPS and the
+//! percentage of linear scaling (paper: 81% GPT2-L, 86% OPT-XL at 4-way).
+//!
+//! Run: `cargo bench --bench fig10_weak_scaling`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::galaxy_latency;
+use galaxy::metrics::Table;
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::{DeviceClass, EdgeEnv};
+
+const MBPS: f64 = 1000.0;
+const SEQ_PER_DEVICE: usize = 96;
+
+fn main() {
+    for kind in [ModelKind::Gpt2Large, ModelKind::OptXl] {
+        let mut model = ModelConfig::by_kind(kind);
+        model.layers = 1; // paper: load a single layer, loop inference
+        let mut t = Table::new(
+            format!("Fig 10 — weak scaling, {} single layer (96 tokens/device, 1000 Mbps)", model.kind.name()),
+            &["devices", "seq", "latency/layer", "GFLOPS", "% of linear"],
+        );
+        let mut base_flops = 0.0;
+        for d in 1..=4usize {
+            let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+            let seq = SEQ_PER_DEVICE * d;
+            let lat = galaxy_latency(&model, &env, MBPS, seq).expect("single layer fits");
+            let gflops = model.total_flops(seq) as f64 / lat / 1e9;
+            if d == 1 {
+                base_flops = gflops;
+            }
+            let linear = base_flops * d as f64;
+            t.row(&[
+                format!("{d}"),
+                format!("{seq}"),
+                format!("{:.1} ms", lat * 1e3),
+                format!("{gflops:.2}"),
+                format!("{:.0}%", 100.0 * gflops / linear),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!("paper: 4-way weak scaling reaches 81% (GPT2-L) / 86% (OPT-XL) of linear.");
+}

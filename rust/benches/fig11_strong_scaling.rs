@@ -1,0 +1,47 @@
+//! Regenerates **paper Fig. 11**: strong scaling — fixed global workload
+//! (seq 384), single layer, 1000 Mbps, 1–4 Nano-M. Reports per-layer
+//! latency and the reduction vs Local (paper: 3.05x GPT2-L / 3.24x OPT-XL
+//! at 4 devices).
+//!
+//! Run: `cargo bench --bench fig11_strong_scaling`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::galaxy_latency;
+use galaxy::metrics::Table;
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::{DeviceClass, DeviceSpec, EdgeEnv};
+
+const MBPS: f64 = 1000.0;
+const SEQ: usize = 384;
+
+fn main() {
+    for kind in [ModelKind::Gpt2Large, ModelKind::OptXl] {
+        let mut model = ModelConfig::by_kind(kind);
+        model.layers = 1;
+        // Local reference: one Nano-M running the full layer (no memory
+        // gate — the paper loads a single layer precisely to avoid OOM).
+        let dev = DeviceSpec::new(0, DeviceClass::NanoM);
+        let local = dev.mha_time(&model, SEQ, model.heads)
+            + dev.mlp_time(&model, SEQ, model.heads)
+            + 2.0 * dev.connective_time(&model, SEQ);
+        let mut t = Table::new(
+            format!("Fig 11 — strong scaling, {} single layer (seq 384, 1000 Mbps)", model.kind.name()),
+            &["devices", "latency/layer", "speedup vs Local"],
+        );
+        t.row(&["1 (Local)".into(), format!("{:.1} ms", local * 1e3), "1.00x".into()]);
+        for d in 2..=4usize {
+            let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+            let lat = galaxy_latency(&model, &env, MBPS, SEQ).expect("single layer fits");
+            t.row(&[
+                format!("{d}"),
+                format!("{:.1} ms", lat * 1e3),
+                format!("{:.2}x", local / lat),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!("paper: 4-way strong scaling cuts per-layer latency 3.05x (GPT2-L) / 3.24x (OPT-XL).");
+}

@@ -1,0 +1,53 @@
+//! Regenerates **paper Fig. 8**: end-to-end latency of Galaxy vs M-LM vs
+//! SP under five simulated D2D bandwidths — the series behind the paper's
+//! 1.04x–1.45x reduction claim across network conditions.
+//!
+//! Run: `cargo bench --bench fig8_bandwidth`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::{baseline_latency, galaxy_latency};
+use galaxy::baselines::BaselineKind;
+use galaxy::metrics::{fmt_secs, Table};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::EdgeEnv;
+
+const SEQ: usize = 284;
+const BANDWIDTHS: [f64; 5] = [25.0, 50.0, 125.0, 250.0, 500.0];
+
+fn main() {
+    for (kind, env) in [
+        (ModelKind::DistilBert, EdgeEnv::preset_a()),
+        (ModelKind::BertLarge, EdgeEnv::preset_a()),
+        (ModelKind::BertLarge, EdgeEnv::preset_b()),
+        (ModelKind::Gpt2Large, EdgeEnv::preset_b()),
+        (ModelKind::OptLarge, EdgeEnv::preset_c()),
+    ] {
+        let model = ModelConfig::by_kind(kind);
+        let mut t = Table::new(
+            format!("Fig 8 — {} on env {} (latency vs bandwidth)", model.kind.name(), env.name),
+            &["bandwidth", "Galaxy", "M-LM", "SP", "Galaxy speedup vs best baseline"],
+        );
+        for mbps in BANDWIDTHS {
+            let g = galaxy_latency(&model, &env, mbps, SEQ);
+            let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, mbps, SEQ);
+            let s = baseline_latency(BaselineKind::SeqPar, &model, &env, mbps, SEQ);
+            let best = [m, s].into_iter().flatten().fold(f64::INFINITY, f64::min);
+            let cell = |v: Option<f64>| v.map(fmt_secs).unwrap_or_else(|| "OOM".into());
+            t.row(&[
+                format!("{mbps:.0} Mbps"),
+                cell(g),
+                cell(m),
+                cell(s),
+                match g {
+                    Some(gv) if best.is_finite() => format!("{:.2}x", best / gv),
+                    _ => "-".into(),
+                },
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!("paper claim: 1.04x–1.45x latency reduction across bandwidths/models.");
+}

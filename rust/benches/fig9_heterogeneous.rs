@@ -1,0 +1,65 @@
+//! Regenerates **paper Fig. 9**: latency on heterogeneous edge
+//! environments D/E/F (mixed Nano-L/M/S with skewed memory budgets) at
+//! 125 Mbps — where heterogeneity- and memory-aware planning buys Galaxy
+//! its largest wins (paper: 1.3x–2.5x).
+//!
+//! Run: `cargo bench --bench fig9_heterogeneous`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::{baseline_latency, galaxy_latency, galaxy_plan, speedup_cell};
+use galaxy::baselines::BaselineKind;
+use galaxy::metrics::{fmt_secs, Table};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::EdgeEnv;
+
+const MBPS: f64 = 125.0;
+const SEQ: usize = 284;
+
+fn main() {
+    let mut speedups: Vec<f64> = Vec::new();
+    for env in [EdgeEnv::preset_d(), EdgeEnv::preset_e(), EdgeEnv::preset_f()] {
+        let mut t = Table::new(
+            format!(
+                "Fig 9 — heterogeneous env {} ({})",
+                env.name,
+                env.devices
+                    .iter()
+                    .map(|d| format!("{}@{:.1}GB", d.class.name(), d.budget_mb / 1000.0))
+                    .collect::<Vec<_>>()
+                    .join(" + ")
+            ),
+            &["model", "Galaxy", "M-LM", "SP", "vs M-LM", "vs SP", "galaxy heads"],
+        );
+        for kind in [ModelKind::DistilBert, ModelKind::BertLarge, ModelKind::Gpt2Large, ModelKind::OptLarge] {
+            let model = ModelConfig::by_kind(kind);
+            let g = galaxy_latency(&model, &env, MBPS, SEQ);
+            let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, MBPS, SEQ);
+            let s = baseline_latency(BaselineKind::SeqPar, &model, &env, MBPS, SEQ);
+            if let (Some(gv), Some(mv)) = (g, m) {
+                speedups.push(mv / gv);
+            }
+            let heads = galaxy_plan(&model, &env, SEQ)
+                .map(|p| format!("{:?}", p.partition.heads))
+                .unwrap_or_else(|| "-".into());
+            let cell = |v: Option<f64>| v.map(fmt_secs).unwrap_or_else(|| "OOM".into());
+            t.row(&[
+                model.kind.name().into(),
+                cell(g),
+                cell(m),
+                cell(s),
+                speedup_cell(g, m),
+                speedup_cell(g, s),
+                heads,
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if !speedups.is_empty() {
+        let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speedups.iter().cloned().fold(0.0, f64::max);
+        println!("Galaxy vs M-LM speedup range: {min:.2}x – {max:.2}x (paper: 1.3x – 2.5x)");
+    }
+}

@@ -1,0 +1,108 @@
+//! §Perf hot-path bench: the real PJRT request path of `galaxy serve` —
+//! end-to-end latency distribution, PJRT dispatch counts, and ring
+//! traffic, per device count and artifact flavor. This is the bench the
+//! EXPERIMENTS.md §Perf iteration log is measured with.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use galaxy::cluster::{local::LocalRunner, RealCluster};
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::metrics::{LatencyStats, Table};
+use galaxy::model::{ModelConfig, WeightGen};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{DeviceClass, EdgeEnv};
+
+const REQS: usize = 12;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let model = ModelConfig::galaxy_mini();
+    let manifest = Manifest::load(&dir).unwrap();
+    let gen = WeightGen::new(&model, 42);
+    let x = gen.input(0, 60);
+    let mask = vec![0.0f32; 60];
+
+    let mut t = Table::new(
+        format!("§Perf — galaxy-mini request hot path ({REQS} reqs, seq 60)"),
+        &["config", "mean", "p95", "best", "pjrt/req", "ring MB/req"],
+    );
+
+    // Local single-runtime reference.
+    {
+        let mut local = LocalRunner::new(&model, &manifest, "xla", 42).unwrap();
+        local.infer(&x, &mask).unwrap();
+        let mut stats = LatencyStats::default();
+        for _ in 0..REQS {
+            let t0 = std::time::Instant::now();
+            local.infer(&x, &mask).unwrap();
+            stats.record(t0.elapsed().as_secs_f64());
+        }
+        t.row(&[
+            "local (1 runtime)".into(),
+            format!("{:.2} ms", stats.mean_s() * 1e3),
+            format!("{:.2} ms", stats.percentile_s(95.0) * 1e3),
+            format!("{:.2} ms", stats.min_s() * 1e3),
+            format!("{}", model.layers),
+            "0.00".into(),
+        ]);
+    }
+
+    for d in [2usize, 3, 4] {
+        for flavor in ["xla", "pallas"] {
+            let overlap = OverlapMode::Tiled;
+            if flavor == "pallas" && overlap == OverlapMode::Tiled {
+                // pallas tiles are not lowered (DESIGN.md); fused mode only.
+                continue;
+            }
+            run_case(&model, &manifest, d, overlap, flavor, &x, &mask, &mut t);
+        }
+        run_case(&model, &manifest, d, OverlapMode::None, "pallas", &x, &mask, &mut t);
+    }
+    println!("{}", t.render());
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_case(
+    model: &ModelConfig,
+    manifest: &Manifest,
+    d: usize,
+    overlap: OverlapMode,
+    flavor: &str,
+    x: &galaxy::tensor::Tensor2,
+    mask: &[f32],
+    t: &mut Table,
+) {
+    let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+    let profile = Profiler::analytic(model, &env, 60).profile();
+    let plan = Planner::new(model, &env, &profile).plan().unwrap();
+    let mut cluster = RealCluster::spawn(model, manifest, &plan, overlap, flavor, 42).unwrap();
+    cluster.infer(x, mask).unwrap(); // warm-up (compiles are lazy)
+    let mut stats = LatencyStats::default();
+    let before_calls = cluster.report().pjrt_calls;
+    let before_bytes = cluster.report().ring_bytes;
+    for _ in 0..REQS {
+        let t0 = std::time::Instant::now();
+        cluster.infer(x, mask).unwrap();
+        stats.record(t0.elapsed().as_secs_f64());
+    }
+    let calls = (cluster.report().pjrt_calls - before_calls) / REQS as u64;
+    let mb = (cluster.report().ring_bytes - before_bytes) as f64 / REQS as f64 / 1e6;
+    t.row(&[
+        format!("{d}w {} {}", flavor, overlap.name()),
+        format!("{:.2} ms", stats.mean_s() * 1e3),
+        format!("{:.2} ms", stats.percentile_s(95.0) * 1e3),
+        format!("{:.2} ms", stats.min_s() * 1e3),
+        format!("{calls}"),
+        format!("{mb:.2}"),
+    ]);
+}

@@ -1,0 +1,65 @@
+//! Regenerates **paper Table I**: single-device inference latency and
+//! memory footprint of five Transformer models on Nano-M vs A100 at
+//! sequence length 30 — the motivation measurement (121x gap, OOM walls).
+//!
+//! Run: `cargo bench --bench table1_ondevice`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use galaxy::baselines::full_footprint_mb;
+use galaxy::metrics::{fmt_secs, Table};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::{DeviceClass, DeviceSpec};
+
+const SEQ: usize = 30;
+
+fn local_latency(dev: &DeviceSpec, m: &ModelConfig) -> Option<f64> {
+    galaxy::baselines::local(m, dev, SEQ).ok().map(|r| r.total_s())
+}
+
+fn main() {
+    let nano_m = DeviceSpec::new(0, DeviceClass::NanoM);
+    let a100 = DeviceSpec::new(0, DeviceClass::A100);
+
+    let mut t = Table::new(
+        "Table I — on-device inference latency & memory footprint (seq 30)",
+        &["model", "Nano-M", "A100", "mem footprint", "paper Nano-M", "paper A100", "paper mem"],
+    );
+    let paper = [
+        ("DistilBert", "0.37s", "5ms", "130MB"),
+        ("Bert-L", "2.43s", "20ms", "680MB"),
+        ("GPT2-L", "OOM", "29ms", "1.6GB"),
+        ("OPT-L", "OOM", "27ms", "2.6GB"),
+        ("OPT-XL", "OOM", "38ms", "5.4GB"),
+    ];
+    for (kind, (pname, pn, pa, pm)) in ModelKind::ALL_PAPER.iter().zip(paper.iter()) {
+        let m = ModelConfig::by_kind(*kind);
+        assert_eq!(m.kind.name(), *pname);
+        let nano = match local_latency(&nano_m, &m) {
+            Some(s) => fmt_secs(s),
+            None => "OOM".into(),
+        };
+        let a = match local_latency(&a100, &m) {
+            Some(s) => fmt_secs(s),
+            None => "OOM".into(),
+        };
+        t.row(&[
+            m.kind.name().into(),
+            nano,
+            a,
+            format!("{:.0} MB", full_footprint_mb(&m, SEQ)),
+            pn.to_string(),
+            pa.to_string(),
+            pm.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("note: Nano-M budget 1.5 GB; OOM reproduces the paper's memory wall.");
+    // 121x headline: Bert-L Nano-M vs A100.
+    let bert = ModelConfig::bert_large();
+    if let (Some(n), Some(a)) = (local_latency(&nano_m, &bert), local_latency(&a100, &bert)) {
+        println!("Bert-L Nano-M/A100 slowdown: {:.0}x (paper: 121x)", n / a);
+    }
+}

@@ -1,0 +1,64 @@
+//! Regenerates **paper Table IV**: Galaxy's speedup over Megatron-LM (TP)
+//! and Sequence Parallelism across homogeneous edge environments A/B/C at
+//! 125 Mbps, sequence length 284 (QNLI subset average).
+//!
+//! Expected shape (paper): 1.26x–1.46x over M-LM, ~1.08–1.11x over SP
+//! where SP fits; SP OOMs from GPT2-L up; M-LM OOMs OPT-XL on A and B.
+//!
+//! Run: `cargo bench --bench table4_homogeneous`
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use bench_util::{baseline_latency, galaxy_latency, speedup_cell};
+use galaxy::baselines::BaselineKind;
+use galaxy::metrics::{fmt_secs, Table};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::sim::EdgeEnv;
+
+const MBPS: f64 = 125.0;
+const SEQ: usize = 284;
+
+fn main() {
+    let mut t = Table::new(
+        "Table IV — speedup over baselines (homogeneous envs, 125 Mbps, seq 284)",
+        &["model", "layers/heads/hidden", "env", "galaxy", "vs M-LM", "vs SP", "paper M-LM", "paper SP"],
+    );
+    // (model, env, paper M-LM cell, paper SP cell)
+    let env_a = EdgeEnv::preset_a();
+    let env_b = EdgeEnv::preset_b();
+    let env_c = EdgeEnv::preset_c();
+    let cases: &[(ModelKind, &EdgeEnv, &str, &str)] = &[
+        (ModelKind::DistilBert, &env_a, "1.37x", "1.08x"),
+        (ModelKind::BertLarge, &env_a, "1.36x", "1.09x"),
+        (ModelKind::BertLarge, &env_b, "1.38x", "1.11x"),
+        (ModelKind::Gpt2Large, &env_a, "1.31x", "OOM"),
+        (ModelKind::Gpt2Large, &env_b, "1.46x", "OOM"),
+        (ModelKind::OptLarge, &env_a, "1.26x", "OOM"),
+        (ModelKind::OptLarge, &env_b, "1.40x", "OOM"),
+        (ModelKind::OptLarge, &env_c, "1.43x", "OOM"),
+        (ModelKind::OptXl, &env_a, "OOM", "OOM"),
+        (ModelKind::OptXl, &env_b, "OOM", "OOM"),
+        (ModelKind::OptXl, &env_c, "1.28x", "OOM"),
+    ];
+    for (kind, env, paper_mlm, paper_sp) in cases {
+        let model = ModelConfig::by_kind(*kind);
+        let g = galaxy_latency(&model, env, MBPS, SEQ);
+        let mlm = baseline_latency(BaselineKind::MegatronLm, &model, env, MBPS, SEQ);
+        let sp = baseline_latency(BaselineKind::SeqPar, &model, env, MBPS, SEQ);
+        t.row(&[
+            model.kind.name().into(),
+            format!("{}/{}/{}", model.layers, model.heads, model.hidden),
+            env.name.clone(),
+            g.map(fmt_secs).unwrap_or_else(|| "OOM".into()),
+            speedup_cell(g, mlm),
+            speedup_cell(g, sp),
+            paper_mlm.to_string(),
+            paper_sp.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("OOM  = baseline cannot host the model (matches paper cells)");
+    println!("OOM* = cluster aggregate memory cannot host the model at all");
+}

@@ -1,0 +1,159 @@
+//! Pipeline Parallelism baseline (paper §II-C.1).
+//!
+//! PP splits the model into contiguous layer stages, one per device. For
+//! *single-shot* inference the inter-stage dependency chain serializes
+//! everything: device k cannot start until device k-1 finishes, so the
+//! end-to-end latency is the sum of stage times plus (D-1) activation
+//! hand-offs — no concurrency at all. That is exactly the paper's argument
+//! for rejecting PP, and this module exists to quantify it (and to show
+//! PP's one genuine virtue at the edge: like Galaxy, it splits the memory
+//! footprint across devices).
+
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::sim::{EdgeEnv, NetParams, SimReport};
+
+/// Balanced contiguous layer split: stage sizes proportional to device
+/// capacity (same idea the paper's planner applies within layers).
+pub fn stage_split(model: &ModelConfig, env: &EdgeEnv, seq: usize) -> Vec<usize> {
+    let caps: Vec<f64> = env
+        .devices
+        .iter()
+        .map(|d| 1.0 / (d.mha_time(model, seq, model.heads) + d.mlp_time(model, seq, model.heads)))
+        .collect();
+    let total: f64 = caps.iter().sum();
+    let mut stages: Vec<usize> = caps
+        .iter()
+        .map(|c| ((c / total) * model.layers as f64).floor() as usize)
+        .collect();
+    let n = stages.len();
+    let mut assigned: usize = stages.iter().sum();
+    let mut i = 0;
+    while assigned < model.layers {
+        stages[i % n] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    stages
+}
+
+/// Simulate single-shot PP inference; Err(Oom) when any stage's layer
+/// weights exceed its device budget.
+pub fn simulate(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) -> Result<SimReport> {
+    let stages = stage_split(model, env, seq);
+    let per_layer_mb =
+        (model.mha_bytes() + model.mlp_bytes()) as f64 / 1.0e6;
+    let mut mem_mb = Vec::with_capacity(env.len());
+    for (i, (dev, &layers)) in env.devices.iter().zip(stages.iter()).enumerate() {
+        let embed = if i == 0 {
+            (model.embed_params() * model.dtype_bytes) as f64 / 1.0e6
+        } else {
+            0.0
+        };
+        let act = model.activation_bytes(seq) as f64 / 1.0e6;
+        let need = layers as f64 * per_layer_mb + embed + act;
+        if need > dev.budget_mb {
+            return Err(GalaxyError::Oom { device: i, needed_mb: need, budget_mb: dev.budget_mb });
+        }
+        mem_mb.push(need);
+    }
+
+    let mut rep = SimReport { mem_mb, ..Default::default() };
+    // Strictly serial stage chain: Σ stage compute + (D-1) hand-offs of
+    // one [seq, hidden] activation.
+    for (dev, &layers) in env.devices.iter().zip(stages.iter()) {
+        rep.compute_s += layers as f64
+            * (dev.mha_time(model, seq, model.heads)
+                + dev.mlp_time(model, seq, model.heads)
+                + 2.0 * dev.connective_time(model, seq));
+    }
+    let handoff = (seq * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+    for _ in 0..env.len().saturating_sub(1) {
+        rep.exposed_comm_s += net.transfer_time(handoff);
+        rep.sync_points += 1;
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{self, BaselineKind};
+    use crate::model::ModelConfig;
+    use crate::sim::EdgeEnv;
+
+    #[test]
+    fn stage_split_covers_all_layers() {
+        let m = ModelConfig::bert_large();
+        for env in [EdgeEnv::preset_a(), EdgeEnv::preset_c(), EdgeEnv::preset_f()] {
+            let s = stage_split(&m, &env, 284);
+            assert_eq!(s.iter().sum::<usize>(), m.layers, "{:?}", s);
+            assert_eq!(s.len(), env.len());
+        }
+    }
+
+    #[test]
+    fn capacity_weighted_stages() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_e(); // L + S
+        let s = stage_split(&m, &env, 284);
+        assert!(s[0] > s[1], "fast device should host more layers: {s:?}");
+    }
+
+    #[test]
+    fn pp_no_faster_than_local_single_shot() {
+        // The paper's point: with one request in flight PP serializes — on
+        // a homogeneous cluster it is local-compute plus hand-off comm.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_c();
+        let pp = simulate(&m, &env, NetParams::mbps(125.0), 284).unwrap();
+        let local = baselines::simulate(
+            BaselineKind::Local,
+            &m,
+            &EdgeEnv::new("solo", &[crate::sim::DeviceClass::NanoM]),
+            NetParams::mbps(125.0),
+            284,
+        )
+        .unwrap();
+        assert!(
+            pp.total_s() >= local.total_s(),
+            "PP {} must not beat Local {} for single-shot",
+            pp.total_s(),
+            local.total_s()
+        );
+    }
+
+    #[test]
+    fn pp_splits_memory_like_the_paper_says() {
+        // GPT2-L OOMs one Nano-M but PP across 3 hosts it (memory is PP's
+        // virtue; latency is its failure).
+        let m = ModelConfig::gpt2_large();
+        let env = EdgeEnv::preset_b();
+        let rep = simulate(&m, &env, NetParams::mbps(125.0), 284).unwrap();
+        for (dev, mem) in env.devices.iter().zip(rep.mem_mb.iter()) {
+            assert!(mem <= &dev.budget_mb);
+        }
+    }
+
+    #[test]
+    fn galaxy_beats_pp_on_latency() {
+        use crate::parallel::OverlapMode;
+        use crate::planner::Planner;
+        use crate::profiler::Profiler;
+        use crate::sim::SimEngine;
+        let m = ModelConfig::gpt2_large();
+        let env = EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&m, &env, 284).profile();
+        let plan = Planner::new(&m, &env, &profile).plan().unwrap();
+        let g = SimEngine::new(&m, &env, plan, NetParams::mbps(125.0))
+            .with_overlap(OverlapMode::Tiled)
+            .run_inference(284)
+            .total_s();
+        let pp = simulate(&m, &env, NetParams::mbps(125.0), 284).unwrap().total_s();
+        assert!(
+            pp / g > 2.0,
+            "Galaxy should be >2x faster than PP for single-shot (got {:.2}x)",
+            pp / g
+        );
+    }
+}

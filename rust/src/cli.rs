@@ -1,0 +1,298 @@
+//! Hand-rolled CLI (the offline registry has no `clap`; DESIGN.md §4).
+//!
+//! ```text
+//! galaxy plan     --model bert-l --env F [--seq 284]
+//! galaxy simulate --model bert-l --env B [--seq 284] [--bandwidth 125]
+//!                 [--strategy galaxy|mlm|sp|local] [--no-overlap]
+//! galaxy serve    --devices 3 [--requests 8] [--flavor xla|pallas]
+//!                 [--no-overlap] [--artifacts DIR]
+//! ```
+
+use std::collections::HashMap;
+
+use crate::baselines::{self, BaselineKind};
+use crate::cluster::RealCluster;
+use crate::config::{default_artifacts_dir, Manifest, RunConfig};
+use crate::error::{GalaxyError, Result};
+use crate::metrics::{fmt_secs, Table};
+use crate::model::ModelConfig;
+use crate::parallel::OverlapMode;
+use crate::planner::Planner;
+use crate::profiler::Profiler;
+use crate::serving::Server;
+use crate::sim::{DeviceClass, EdgeEnv, SimEngine};
+use crate::workload::QnliWorkload;
+
+/// Parsed `--key value` flags plus the subcommand.
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv
+            .first()
+            .cloned()
+            .ok_or_else(|| GalaxyError::Config(USAGE.trim().to_string()))?;
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| GalaxyError::Config(format!("expected --flag, got `{}`", argv[i])))?
+                .to_string();
+            // boolean flags take no value
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key, argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key, "true".into());
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| GalaxyError::Config(format!("--{key}: not a number: {v}"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| GalaxyError::Config(format!("--{key}: not an integer: {v}"))),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+pub const USAGE: &str = "\
+galaxy — collaborative edge Transformer inference (paper reproduction)
+
+USAGE:
+  galaxy plan     --model <m> --env <A..F|GPU> [--seq N]
+  galaxy simulate --model <m> --env <A..F|GPU> [--seq N] [--bandwidth MBPS]
+                  [--strategy galaxy|mlm|sp|local] [--no-overlap]
+  galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
+                  [--no-overlap] [--artifacts DIR] [--seed S]
+
+MODELS: distilbert bert-l gpt2-l opt-l opt-xl galaxy-mini
+";
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(GalaxyError::Config(format!("unknown command `{other}`\n{USAGE}"))),
+    }
+}
+
+fn parse_common(args: &Args) -> Result<(ModelConfig, EdgeEnv, RunConfig)> {
+    let mut cfg = RunConfig::default();
+    cfg.model = RunConfig::parse_model(&args.get_or("model", "bert-l"))?;
+    cfg.env_name = args.get_or("env", "A");
+    cfg.seq = args.get_usize("seq", 284)?;
+    cfg.bandwidth_mbps = args.get_f64("bandwidth", 125.0)?;
+    if args.has("no-overlap") {
+        cfg.overlap = OverlapMode::None;
+    }
+    let model = cfg.model_config();
+    let env = cfg.edge_env()?;
+    Ok((model, env, cfg))
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let (model, env, cfg) = parse_common(args)?;
+    let profile = Profiler::analytic(&model, &env, cfg.seq).profile();
+    let plan = Planner::new(&model, &env, &profile).plan()?;
+    let mut t = Table::new(
+        format!("Plan: {} on env {} (seq {})", model.kind.name(), env.name, cfg.seq),
+        &["device", "class", "heads", "mlp units", "seq rows", "mem MB", "budget MB"],
+    );
+    for (i, dev) in env.devices.iter().enumerate() {
+        t.row(&[
+            format!("{i}"),
+            dev.class.name().into(),
+            format!("{}", plan.partition.heads[i]),
+            format!("{}", plan.partition.mlp_units[i]),
+            format!("{}", plan.partition.seq[i]),
+            format!("{:.0}", plan.mem_mb[i]),
+            format!("{:.0}", dev.budget_mb),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "predicted per-layer compute: MHA {} | MLP {} | CONN {}",
+        fmt_secs(plan.pred_mha_s),
+        fmt_secs(plan.pred_mlp_s),
+        fmt_secs(plan.pred_conn_s)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (model, env, cfg) = parse_common(args)?;
+    let strategy = args.get_or("strategy", "galaxy");
+    let report = match strategy.as_str() {
+        "galaxy" => {
+            let profile = Profiler::analytic(&model, &env, cfg.seq).profile();
+            let plan = Planner::new(&model, &env, &profile).plan()?;
+            SimEngine::new(&model, &env, plan, cfg.net())
+                .with_overlap(cfg.overlap)
+                .run_inference(cfg.seq)
+        }
+        "mlm" => baselines::simulate(BaselineKind::MegatronLm, &model, &env, cfg.net(), cfg.seq)?,
+        "sp" => baselines::simulate(BaselineKind::SeqPar, &model, &env, cfg.net(), cfg.seq)?,
+        "local" => baselines::simulate(BaselineKind::Local, &model, &env, cfg.net(), cfg.seq)?,
+        other => return Err(GalaxyError::Config(format!("unknown strategy `{other}`"))),
+    };
+    println!(
+        "{} | {} | env {} | {} Mbps | seq {} | {}",
+        strategy,
+        model.kind.name(),
+        env.name,
+        cfg.bandwidth_mbps,
+        cfg.seq,
+        cfg.overlap.name()
+    );
+    println!(
+        "end-to-end: {}  (compute {}, exposed comm {}, hidden comm {}, {} syncs)",
+        fmt_secs(report.total_s()),
+        fmt_secs(report.compute_s),
+        fmt_secs(report.exposed_comm_s),
+        fmt_secs(report.hidden_comm_s),
+        report.sync_points
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let d = args.get_usize("devices", 2)?;
+    if !(1..=4).contains(&d) {
+        return Err(GalaxyError::Config("--devices must be 1..=4 (artifact shapes)".into()));
+    }
+    let n_requests = args.get_usize("requests", 8)?;
+    let flavor = args.get_or("flavor", "xla");
+    let seed = args.get_usize("seed", 42)? as u64;
+    let overlap = if args.has("no-overlap") { OverlapMode::None } else { OverlapMode::Tiled };
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+
+    let model = ModelConfig::galaxy_mini();
+    let manifest = Manifest::load(&dir)?;
+    let env = EdgeEnv::new("serve", &vec![DeviceClass::NanoM; d]);
+    let seq = manifest.seq_len;
+    let profile = Profiler::analytic(&model, &env, seq).profile();
+    let plan = Planner::new(&model, &env, &profile).plan()?;
+    println!(
+        "serving galaxy-mini on {d} worker(s), flavor {flavor}, {} — partition heads {:?}",
+        overlap.name(),
+        plan.partition.heads
+    );
+
+    let cluster = RealCluster::spawn(&model, &manifest, &plan, overlap, &flavor, seed)?;
+    let mut server = Server::new(cluster, &model, seed, seq);
+    let reqs = QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
+        .generate(n_requests, seed);
+    for req in &reqs {
+        let served = server.serve(req)?;
+        println!(
+            "request {:>3}  seq {:>3}  latency {:>10}  out[0][0..4] = {:?}",
+            served.id,
+            req.seq_len,
+            fmt_secs(served.latency_s),
+            &served.output.row(0)[..4.min(served.output.cols())]
+        );
+    }
+    let stats = server.stats();
+    println!(
+        "served {} requests: mean {}  p95 {}  min {}  max {}",
+        stats.count(),
+        fmt_secs(stats.mean_s()),
+        fmt_secs(stats.percentile_s(95.0)),
+        fmt_secs(stats.min_s()),
+        fmt_secs(stats.max_s()),
+    );
+    let rep = server.cluster().report();
+    println!(
+        "ring traffic {:.2} MB, {} PJRT calls",
+        rep.ring_bytes as f64 / 1e6,
+        rep.pjrt_calls
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_booleans() {
+        let a = Args::parse(&argv("simulate --model bert-l --no-overlap --seq 64")).unwrap();
+        assert_eq!(a.cmd, "simulate");
+        assert_eq!(a.get("model"), Some("bert-l"));
+        assert!(a.has("no-overlap"));
+        assert_eq!(a.get_usize("seq", 0).unwrap(), 64);
+        assert_eq!(a.get_f64("bandwidth", 125.0).unwrap(), 125.0);
+    }
+
+    #[test]
+    fn parse_rejects_positional() {
+        assert!(Args::parse(&argv("plan bert-l")).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn plan_command_smoke() {
+        run(&argv("plan --model bert-l --env F")).unwrap();
+    }
+
+    #[test]
+    fn simulate_all_strategies_smoke() {
+        for s in ["galaxy", "mlm", "sp", "local"] {
+            run(&argv(&format!("simulate --model bert-l --env B --strategy {s}"))).unwrap();
+        }
+    }
+
+    #[test]
+    fn simulate_oom_surfaces() {
+        let err = run(&argv("simulate --model opt-xl --env A --strategy sp")).unwrap_err();
+        assert!(matches!(err, GalaxyError::Oom { .. }));
+    }
+}

@@ -1,0 +1,82 @@
+//! Local (single-device) inference runner — the paper's `Local` baseline
+//! on the real PJRT path, and the numerics oracle the distributed result
+//! is compared against.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::config::Manifest;
+use crate::error::Result;
+use crate::model::{ModelConfig, WeightGen};
+use crate::parallel::ExecReport;
+use crate::runtime::{literal, Runtime};
+use crate::tensor::Tensor2;
+
+/// Single-device runner executing the fused `layer_local` artifact.
+pub struct LocalRunner {
+    rt: Runtime,
+    model: ModelConfig,
+    layers: Vec<[xla::Literal; 9]>,
+    flavor: String,
+    report: ExecReport,
+}
+
+impl LocalRunner {
+    pub fn new(model: &ModelConfig, manifest: &Manifest, flavor: &str, seed: u64) -> Result<Self> {
+        manifest.validate_against(model)?;
+        let rt = Runtime::new(Rc::new(manifest.clone()))?;
+        let gen = WeightGen::new(model, seed);
+        let mut layers = Vec::with_capacity(model.layers);
+        for l in 0..model.layers {
+            let p = gen.layer(l);
+            layers.push([
+                literal::from_tensor(&p.wqkv)?,
+                literal::from_tensor(&p.wout)?,
+                literal::from_tensor(&p.w1)?,
+                literal::from_tensor(&p.w2)?,
+                literal::from_slice(&p.gamma1),
+                literal::from_slice(&p.beta1),
+                literal::from_slice(&p.gamma2),
+                literal::from_slice(&p.beta2),
+                literal::from_slice(&vec![0.0f32; 0]), // placeholder, unused
+            ]);
+        }
+        let runner = Self {
+            rt,
+            model: model.clone(),
+            layers,
+            flavor: flavor.to_string(),
+            report: ExecReport::default(),
+        };
+        runner.rt.warm_up([format!("layer_local__{flavor}").as_str()])?;
+        Ok(runner)
+    }
+
+    /// Run all layers on this single device.
+    pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
+        let start = Instant::now();
+        let name = format!("layer_local__{}", self.flavor);
+        let seq = x.rows();
+        let h = self.model.hidden;
+        let mask_lit = literal::from_slice(mask);
+        let mut act = x.clone();
+        for lits in &self.layers {
+            let act_lit = literal::from_tensor(&act)?;
+            // Weight literals are borrowed straight from the cache — no
+            // per-call copies on the hot path.
+            let args: [&xla::Literal; 10] = [
+                &act_lit, &lits[0], &lits[1], &lits[2], &lits[3], &lits[4], &lits[5],
+                &lits[6], &lits[7], &mask_lit,
+            ];
+            act = self.rt.exec_tensor(&name, &args, seq, h)?;
+        }
+        self.report.latencies_s.push(start.elapsed().as_secs_f64());
+        self.report.requests += 1;
+        self.report.pjrt_calls += self.model.layers as u64;
+        Ok(act)
+    }
+
+    pub fn report(&self) -> &ExecReport {
+        &self.report
+    }
+}

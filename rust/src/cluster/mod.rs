@@ -1,0 +1,175 @@
+//! The real distributed execution fabric: leader + per-device worker
+//! threads running AOT PJRT artifacts, connected in a ring.
+//!
+//! This is the execution half of the paper's prototype: each worker plays
+//! one edge device (its own PJRT runtime, its own weight shards), ring
+//! channels play the switched D2D links, and the leader plays the device
+//! that accepted the user request. The HMP schedule, the tile-based
+//! overlap step plans, and the planner output are exactly the ones the
+//! simulator times — here they move real tensors, and the integration
+//! tests assert the distributed result equals single-device inference.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so every worker constructs its own runtime after spawning — which is
+//! also the honest topology: edge devices don't share XLA clients.
+
+pub mod local;
+pub mod worker;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use crate::config::Manifest;
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
+use crate::planner::Plan;
+use crate::tensor::Tensor2;
+use worker::{LeaderCmd, WorkerReply, WorkerSpec};
+
+/// A running Galaxy cluster over `D` worker threads.
+pub struct RealCluster {
+    to_workers: Vec<Sender<LeaderCmd>>,
+    from_workers: Receiver<(usize, WorkerReply)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    schedule: LayerSchedule,
+    model: ModelConfig,
+    report: ExecReport,
+}
+
+impl RealCluster {
+    /// Spawn workers for the given plan. `flavor` selects the artifact
+    /// family (`"xla"` hot path or `"pallas"` kernel-validation path).
+    pub fn spawn(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        plan: &Plan,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+    ) -> Result<RealCluster> {
+        manifest.validate_against(model)?;
+        let schedule = LayerSchedule::from_plan(plan);
+        let d = schedule.n_devices();
+
+        // Ring links: worker i sends to (i+1)%d.
+        let mut ring_tx: Vec<Option<Sender<Tensor2>>> = (0..d).map(|_| None).collect();
+        let mut ring_rx: Vec<Option<Receiver<Tensor2>>> = (0..d).map(|_| None).collect();
+        for i in 0..d {
+            let (tx, rx) = channel();
+            ring_tx[i] = Some(tx); // i's send side
+            ring_rx[(i + 1) % d] = Some(rx); // (i+1)'s recv side
+        }
+
+        let (reply_tx, from_workers) = channel();
+        let mut to_workers = Vec::with_capacity(d);
+        let mut handles = Vec::with_capacity(d);
+
+        for i in 0..d {
+            let (cmd_tx, cmd_rx) = channel();
+            to_workers.push(cmd_tx);
+            let spec = WorkerSpec {
+                index: i,
+                n_devices: d,
+                model: model.clone(),
+                manifest: manifest.clone(),
+                shard: schedule.shards[i].clone(),
+                tiles: schedule.tiles.clone(),
+                overlap,
+                flavor: flavor.to_string(),
+                seed,
+            };
+            let next = ring_tx[i].take().expect("ring tx");
+            let prev = ring_rx[i].take().expect("ring rx");
+            let reply = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("galaxy-worker-{i}"))
+                    .spawn(move || worker::run(spec, cmd_rx, next, prev, reply))
+                    .map_err(|e| GalaxyError::Fabric(format!("spawn worker {i}: {e}")))?,
+            );
+        }
+
+        Ok(RealCluster {
+            to_workers,
+            from_workers,
+            handles,
+            schedule,
+            model: model.clone(),
+            report: ExecReport::default(),
+        })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.schedule.n_devices()
+    }
+
+    /// Run one single-shot inference: scatter `x` row-shards, execute all
+    /// layers under HMP, gather the output. `mask` is the additive key
+    /// mask (`0` valid, `-1e9` padding).
+    pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
+        let start = Instant::now();
+        let d = self.n_devices();
+        if x.cols() != self.model.hidden {
+            return Err(GalaxyError::Shape(format!(
+                "input hidden {} != model {}",
+                x.cols(),
+                self.model.hidden
+            )));
+        }
+        // Scatter SP row-shards.
+        for (i, spec) in self.schedule.shards.iter().enumerate() {
+            let shard = x.slice_rows(spec.seq_offset, spec.seq_rows)?;
+            self.to_workers[i]
+                .send(LeaderCmd::Infer { x_shard: shard, mask: mask.to_vec() })
+                .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+        }
+        // Gather per-device output shards.
+        let mut shards: Vec<Option<Tensor2>> = vec![None; d];
+        let mut ring_bytes = 0u64;
+        let mut pjrt_calls = 0u64;
+        for _ in 0..d {
+            let (i, reply) = self
+                .from_workers
+                .recv()
+                .map_err(|e| GalaxyError::Fabric(format!("cluster reply channel: {e}")))?;
+            match reply {
+                WorkerReply::Done { h_shard, ring_bytes: rb, pjrt_calls: pc } => {
+                    shards[i] = Some(h_shard);
+                    ring_bytes += rb;
+                    pjrt_calls += pc;
+                }
+                WorkerReply::Failed(msg) => {
+                    return Err(GalaxyError::Fabric(format!("worker {i}: {msg}")))
+                }
+            }
+        }
+        let parts: Vec<Tensor2> = shards.into_iter().map(|s| s.expect("all replied")).collect();
+        let out = Tensor2::concat_rows(&parts)?;
+        self.report.latencies_s.push(start.elapsed().as_secs_f64());
+        self.report.requests += 1;
+        self.report.ring_bytes += ring_bytes;
+        self.report.pjrt_calls += pjrt_calls;
+        Ok(out)
+    }
+
+    pub fn report(&self) -> &ExecReport {
+        &self.report
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(&mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(LeaderCmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RealCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

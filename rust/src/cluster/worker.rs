@@ -1,0 +1,420 @@
+//! Worker thread: one simulated edge device executing its HMP shard.
+//!
+//! Per layer (paper Fig. 5), in tiled-overlap mode (§III-D):
+//!
+//! 1. **AG ⊕ entry GEMM** — walk [`all_gather_steps`]: forward the held
+//!    sequence tile to the ring successor *before* running the entry GEMM
+//!    on it (QKV projection / MLP GEMM1), so the channel transfer proceeds
+//!    while PJRT computes; receive the next tile afterwards.
+//! 2. **attention core** — full-sequence, shard-heads only; no sync.
+//! 3. **exit GEMM ⊕ RS** — walk [`reduce_scatter_steps`]: forward the
+//!    accumulated partial while computing the next output-projection /
+//!    GEMM2 tile; reduce-add the partial arriving from the predecessor.
+//! 4. **SP connective** — fused Dropout+Residual+LayerNorm on own rows.
+//!
+//! In [`OverlapMode::None`] the same ring walks run with communication and
+//! computation strictly serialized (fused shard artifacts) — the ablation
+//! baseline and the numerics cross-check for the tiled path.
+
+use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::config::Manifest;
+use crate::error::{GalaxyError, Result};
+use crate::model::{ModelConfig, WeightGen};
+use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+use crate::parallel::schedule::ShardSpec;
+use crate::parallel::OverlapMode;
+use crate::runtime::{literal, Runtime};
+use crate::tensor::Tensor2;
+
+/// Commands from the leader.
+pub enum LeaderCmd {
+    Infer { x_shard: Tensor2, mask: Vec<f32> },
+    Shutdown,
+}
+
+/// Replies to the leader.
+pub enum WorkerReply {
+    Done { h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64 },
+    Failed(String),
+}
+
+/// Everything a worker needs to set itself up (must be `Send`).
+pub struct WorkerSpec {
+    pub index: usize,
+    pub n_devices: usize,
+    pub model: ModelConfig,
+    pub manifest: Manifest,
+    pub shard: ShardSpec,
+    pub tiles: Vec<usize>,
+    pub overlap: OverlapMode,
+    pub flavor: String,
+    pub seed: u64,
+}
+
+/// Per-layer weight shard literals, prepared once at start-up.
+struct LayerShard {
+    wqkv: Option<xla::Literal>,
+    wout: Option<xla::Literal>,
+    w1: Option<xla::Literal>,
+    w2: Option<xla::Literal>,
+    gamma1: xla::Literal,
+    beta1: xla::Literal,
+    gamma2: xla::Literal,
+    beta2: xla::Literal,
+}
+
+struct Worker {
+    spec: WorkerSpec,
+    rt: Runtime,
+    layers: Vec<LayerShard>,
+    tile_offsets: Vec<usize>,
+    next: Sender<Tensor2>,
+    prev: Receiver<Tensor2>,
+    ring_bytes: u64,
+}
+
+/// Worker thread entry point.
+pub fn run(
+    spec: WorkerSpec,
+    cmds: Receiver<LeaderCmd>,
+    next: Sender<Tensor2>,
+    prev: Receiver<Tensor2>,
+    reply: Sender<(usize, WorkerReply)>,
+) {
+    let index = spec.index;
+    let mut worker = match Worker::new(spec, next, prev) {
+        Ok(w) => w,
+        Err(e) => {
+            let _ = reply.send((index, WorkerReply::Failed(format!("init: {e}"))));
+            return;
+        }
+    };
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            LeaderCmd::Shutdown => break,
+            LeaderCmd::Infer { x_shard, mask } => {
+                let calls_before = worker.rt.pjrt_calls();
+                let bytes_before = worker.ring_bytes;
+                let msg = match worker.infer(x_shard, &mask) {
+                    Ok(h_shard) => WorkerReply::Done {
+                        h_shard,
+                        ring_bytes: worker.ring_bytes - bytes_before,
+                        pjrt_calls: worker.rt.pjrt_calls() - calls_before,
+                    },
+                    Err(e) => WorkerReply::Failed(e.to_string()),
+                };
+                if reply.send((index, msg)).is_err() {
+                    break; // leader gone
+                }
+            }
+        }
+    }
+}
+
+impl Worker {
+    fn new(spec: WorkerSpec, next: Sender<Tensor2>, prev: Receiver<Tensor2>) -> Result<Self> {
+        let rt = Runtime::new(Rc::new(spec.manifest.clone()))?;
+        // Weight shards are reconstructed deterministically (same seed as
+        // the leader/tests) and converted to literals once.
+        let gen = WeightGen::new(&spec.model, spec.seed);
+        let m = &spec.model;
+        let s = &spec.shard;
+        let mut layers = Vec::with_capacity(m.layers);
+        for l in 0..m.layers {
+            let p = gen.layer(l);
+            let wqkv = (s.k_heads > 0)
+                .then(|| {
+                    p.shard_wqkv(s.head_offset, s.k_heads, m.heads, m.head_dim())
+                        .and_then(|t| literal::from_tensor(&t))
+                })
+                .transpose()?;
+            let wout = (s.k_heads > 0)
+                .then(|| {
+                    p.shard_wout(s.head_offset, s.k_heads, m.head_dim())
+                        .and_then(|t| literal::from_tensor(&t))
+                })
+                .transpose()?;
+            let unit = m.mlp_unit();
+            let w1 = (s.u_units > 0)
+                .then(|| {
+                    p.shard_w1(s.unit_offset * unit, s.u_units * unit)
+                        .and_then(|t| literal::from_tensor(&t))
+                })
+                .transpose()?;
+            let w2 = (s.u_units > 0)
+                .then(|| {
+                    p.shard_w2(s.unit_offset * unit, s.u_units * unit)
+                        .and_then(|t| literal::from_tensor(&t))
+                })
+                .transpose()?;
+            layers.push(LayerShard {
+                wqkv,
+                wout,
+                w1,
+                w2,
+                gamma1: literal::from_slice(&p.gamma1),
+                beta1: literal::from_slice(&p.beta1),
+                gamma2: literal::from_slice(&p.gamma2),
+                beta2: literal::from_slice(&p.beta2),
+            });
+        }
+        // Warm-up: compile every artifact this shard will use, off the
+        // request path.
+        let names =
+            s.artifact_names(&spec.tiles, &spec.flavor, spec.overlap == OverlapMode::Tiled);
+        rt.warm_up(names.iter().map(|n| n.as_str()))?;
+        let tile_offsets = (0..spec.tiles.len())
+            .map(|t| spec.tiles[..t].iter().sum())
+            .collect();
+        Ok(Worker { spec, rt, layers, tile_offsets, next, prev, ring_bytes: 0 })
+    }
+
+    fn send(&mut self, t: Tensor2) -> Result<()> {
+        self.ring_bytes += t.size_bytes() as u64;
+        self.next
+            .send(t)
+            .map_err(|e| GalaxyError::Fabric(format!("ring send: {e}")))
+    }
+
+    fn recv(&mut self) -> Result<Tensor2> {
+        self.prev
+            .recv()
+            .map_err(|e| GalaxyError::Fabric(format!("ring recv: {e}")))
+    }
+
+    fn art(&self, base: &str) -> String {
+        format!("{base}__{}", self.spec.flavor)
+    }
+
+    /// Full multi-layer HMP inference over this worker's shard.
+    fn infer(&mut self, mut x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
+        let layers = self.spec.model.layers;
+        for l in 0..layers {
+            x_shard = self.layer(l, x_shard, mask)?;
+        }
+        Ok(x_shard)
+    }
+
+    /// One HMP layer; input/output are this device's SP row-shards.
+    fn layer(&mut self, l: usize, x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
+        let m = self.spec.model.clone();
+        let s = self.spec.shard.clone();
+        let h = m.hidden;
+        let kd = s.k_heads * m.head_dim();
+        let width = s.u_units * m.mlp_unit();
+        let mask_lit = literal::from_slice(mask);
+        let seq: usize = self.spec.tiles.iter().sum();
+        let tiled = self.spec.overlap == OverlapMode::Tiled;
+
+        // ---- MHA block -------------------------------------------------
+        // Entry AllGather ⊕ QKV tiles.
+        let (x_full, qkv_tiles) = self.ag_phase(x_shard, |w, slot, xt| {
+            if !tiled || s.k_heads == 0 {
+                return Ok(None);
+            }
+            let rows = w.spec.tiles[slot];
+            let name = w.art(&format!("qkv_tile_t{rows}_k{}", s.k_heads));
+            let xt_lit = literal::from_tensor(xt)?;
+            let wqkv = w.layers[l].wqkv.as_ref().expect("wqkv");
+            Ok(Some(w.rt.exec_tensor(&name, &[&xt_lit, wqkv], rows, 3 * kd)?))
+        })?;
+
+        // Attention core over the full sequence (tiled mode), or the whole
+        // fused MHA shard (serial mode).
+        let c_partial_tile: Box<dyn Fn(&mut Worker, usize) -> Result<Tensor2>>;
+        if s.k_heads == 0 {
+            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                Ok(Tensor2::zeros(w.spec.tiles[slot], h))
+            });
+        } else if tiled {
+            let qkv = Tensor2::concat_rows(
+                &qkv_tiles.into_iter().map(|t| t.expect("qkv tile")).collect::<Vec<_>>(),
+            )?;
+            let q = qkv.slice_cols(0, kd)?;
+            let k = qkv.slice_cols(kd, kd)?;
+            let v = qkv.slice_cols(2 * kd, kd)?;
+            let q_lit = literal::from_tensor(&q)?;
+            let k_lit = literal::from_tensor(&k)?;
+            let v_lit = literal::from_tensor(&v)?;
+            let b = self.rt.exec_tensor(
+                &self.art(&format!("attn_core_k{}", s.k_heads)),
+                &[&q_lit, &k_lit, &v_lit, &mask_lit],
+                seq,
+                kd,
+            )?;
+            let k_heads = s.k_heads;
+            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                let rows = w.spec.tiles[slot];
+                let off = w.tile_offsets[slot];
+                let name = w.art(&format!("out_proj_tile_t{rows}_k{k_heads}"));
+                let bt = b.slice_rows(off, rows)?;
+                let bt_lit = literal::from_tensor(&bt)?;
+                let wout = w.layers[l].wout.as_ref().expect("wout");
+                w.rt.exec_tensor(&name, &[&bt_lit, wout], rows, h)
+            });
+        } else {
+            // Serial mode: one fused artifact produces the full partial C_i.
+            let x_lit = literal::from_tensor(&x_full)?;
+            let c = self.rt.exec_tensor(
+                &self.art(&format!("mha_shard_k{}", s.k_heads)),
+                &[
+                    &x_lit,
+                    self.layers[l].wqkv.as_ref().expect("wqkv"),
+                    self.layers[l].wout.as_ref().expect("wout"),
+                    &mask_lit,
+                ],
+                seq,
+                h,
+            )?;
+            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                c.slice_rows(w.tile_offsets[slot], w.spec.tiles[slot])
+            });
+        }
+
+        // Exit GEMM ⊕ ReduceScatter.
+        let g_mine = self.rs_phase(&c_partial_tile)?;
+        drop(c_partial_tile);
+
+        // SP connective #1: H_i = LN(G_i + A_i).
+        let a_mine = x_full.slice_rows(s.seq_offset, s.seq_rows)?;
+        let g_lit = literal::from_tensor(&g_mine)?;
+        let a_lit = literal::from_tensor(&a_mine)?;
+        let h1_shard = self.rt.exec_tensor(
+            &self.art(&format!("connective_t{}", s.seq_rows)),
+            &[&g_lit, &a_lit, &self.layers[l].gamma1, &self.layers[l].beta1],
+            s.seq_rows,
+            h,
+        )?;
+
+        // ---- MLP block --------------------------------------------------
+        // Entry AllGather ⊕ GEMM1 tiles.
+        let (h1_full, e_tiles) = self.ag_phase(h1_shard, |w, slot, ht| {
+            if !tiled || s.u_units == 0 {
+                return Ok(None);
+            }
+            let rows = w.spec.tiles[slot];
+            let name = w.art(&format!("mlp_gemm1_tile_t{rows}_u{}", s.u_units));
+            let ht_lit = literal::from_tensor(ht)?;
+            let w1 = w.layers[l].w1.as_ref().expect("w1");
+            Ok(Some(w.rt.exec_tensor(&name, &[&ht_lit, w1], rows, width)?))
+        })?;
+
+        let f_partial_tile: Box<dyn Fn(&mut Worker, usize) -> Result<Tensor2>>;
+        if s.u_units == 0 {
+            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                Ok(Tensor2::zeros(w.spec.tiles[slot], h))
+            });
+        } else if tiled {
+            let e = Tensor2::concat_rows(
+                &e_tiles.into_iter().map(|t| t.expect("e tile")).collect::<Vec<_>>(),
+            )?;
+            let u_units = s.u_units;
+            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                let rows = w.spec.tiles[slot];
+                let off = w.tile_offsets[slot];
+                let name = w.art(&format!("mlp_gemm2_tile_t{rows}_u{u_units}"));
+                let et = e.slice_rows(off, rows)?;
+                let et_lit = literal::from_tensor(&et)?;
+                let w2 = w.layers[l].w2.as_ref().expect("w2");
+                w.rt.exec_tensor(&name, &[&et_lit, w2], rows, h)
+            });
+        } else {
+            let h1_lit = literal::from_tensor(&h1_full)?;
+            let f = self.rt.exec_tensor(
+                &self.art(&format!("mlp_shard_u{}", s.u_units)),
+                &[
+                    &h1_lit,
+                    self.layers[l].w1.as_ref().expect("w1"),
+                    self.layers[l].w2.as_ref().expect("w2"),
+                ],
+                seq,
+                h,
+            )?;
+            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
+                f.slice_rows(w.tile_offsets[slot], w.spec.tiles[slot])
+            });
+        }
+
+        // Exit GEMM2 ⊕ ReduceScatter.
+        let g2_mine = self.rs_phase(&f_partial_tile)?;
+        drop(f_partial_tile);
+
+        // SP connective #2: H'_i = LN(G'_i + H_i).
+        let res_mine = h1_full.slice_rows(s.seq_offset, s.seq_rows)?;
+        let g2_lit = literal::from_tensor(&g2_mine)?;
+        let res_lit = literal::from_tensor(&res_mine)?;
+        self.rt.exec_tensor(
+            &self.art(&format!("connective_t{}", s.seq_rows)),
+            &[&g2_lit, &res_lit, &self.layers[l].gamma2, &self.layers[l].beta2],
+            s.seq_rows,
+            h,
+        )
+    }
+
+    /// Ring-AllGather phase (paper Fig. 6): returns the fully gathered
+    /// activation and the per-slot outputs of the overlapped entry GEMM.
+    ///
+    /// `compute(worker, slot, tile)` runs while the just-sent tile is in
+    /// flight; it returns `None` when there is nothing to overlap (serial
+    /// mode / empty shard).
+    fn ag_phase(
+        &mut self,
+        my_tile: Tensor2,
+        compute: impl Fn(&mut Worker, usize, &Tensor2) -> Result<Option<Tensor2>>,
+    ) -> Result<(Tensor2, Vec<Option<Tensor2>>)> {
+        let i = self.spec.index;
+        let d = self.spec.n_devices;
+        let steps = all_gather_steps(i, d);
+        let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
+        tiles[i] = Some(my_tile);
+        let mut outs: Vec<Option<Tensor2>> = vec![None; d];
+        for step in &steps {
+            let slot = step.compute_tile;
+            let xt = tiles[slot]
+                .clone()
+                .ok_or_else(|| GalaxyError::Fabric(format!("AG: tile {slot} missing")))?;
+            // Send first so the transfer overlaps the GEMM below.
+            if step.send_tile.is_some() {
+                self.send(xt.clone())?;
+            }
+            outs[slot] = compute(self, slot, &xt)?;
+            if let Some(r) = step.recv_tile {
+                tiles[r] = Some(self.recv()?);
+            }
+        }
+        let full = Tensor2::concat_rows(
+            &(0..d).map(|r| tiles[r].take().expect("gathered")).collect::<Vec<_>>(),
+        )?;
+        Ok((full, outs))
+    }
+
+    /// Ring-ReduceScatter phase (paper Fig. 7): `partial(worker, slot)`
+    /// produces this device's partial for sequence tile `slot` (the exit
+    /// GEMM); returns this device's fully reduced tile.
+    fn rs_phase(
+        &mut self,
+        partial: &dyn Fn(&mut Worker, usize) -> Result<Tensor2>,
+    ) -> Result<Tensor2> {
+        let i = self.spec.index;
+        let d = self.spec.n_devices;
+        let steps = reduce_scatter_steps(i, d);
+        let mut acc: Option<Tensor2> = None;
+        for step in &steps {
+            // Forward last step's accumulation first (overlaps the GEMM).
+            if step.send_tile.is_some() {
+                let t = acc.take().ok_or_else(|| {
+                    GalaxyError::Fabric("RS: nothing accumulated to send".into())
+                })?;
+                self.send(t)?;
+            }
+            let mut o = partial(self, step.compute_tile)?;
+            if step.recv_tile.is_some() {
+                o.add_assign(&self.recv()?)?;
+            }
+            acc = Some(o);
+        }
+        acc.ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))
+    }
+}

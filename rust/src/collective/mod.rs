@@ -1,0 +1,316 @@
+//! Ring collectives over sequence-partitioned activations.
+//!
+//! HMP needs exactly two primitives (paper §III-B.4): **ReduceScatter** at
+//! the end of every TP block and **AllGather** at the end of every SP
+//! block. A Ring-AllReduce (what Megatron-LM uses) is provided for the
+//! baseline; by the standard identity its volume equals RS followed by AG
+//! (paper cites Horovod [27]) — asserted by a test below.
+//!
+//! Two layers of implementation:
+//! * [`reference`] — naive direct computations, the semantic ground truth.
+//! * [`lockstep`] — step-by-step ring execution driven by the overlap
+//!   schedules in [`crate::parallel::overlap`], exercising the exact
+//!   send/recv/reduce dance the real worker threads perform. Property
+//!   tests assert lockstep == reference for arbitrary device counts and
+//!   partitions; the threaded cluster reuses the same step plans.
+
+use crate::error::{GalaxyError, Result};
+use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+use crate::tensor::Tensor2;
+
+/// Naive reference implementations (ground truth).
+pub mod reference {
+    use super::*;
+
+    /// AllGather: concatenate per-device row shards; every device gets the
+    /// full tensor.
+    pub fn all_gather(shards: &[Tensor2]) -> Result<Tensor2> {
+        Tensor2::concat_rows(shards)
+    }
+
+    /// ReduceScatter: element-wise sum the per-device partials, then split
+    /// the sum into row shards of sizes `seq_parts`.
+    pub fn reduce_scatter(partials: &[Tensor2], seq_parts: &[usize]) -> Result<Vec<Tensor2>> {
+        let mut sum = partials
+            .first()
+            .ok_or_else(|| GalaxyError::Shape("reduce_scatter: empty".into()))?
+            .clone();
+        for p in &partials[1..] {
+            sum.add_assign(p)?;
+        }
+        let mut out = Vec::with_capacity(seq_parts.len());
+        let mut row = 0;
+        for &rows in seq_parts {
+            out.push(sum.slice_rows(row, rows)?);
+            row += rows;
+        }
+        Ok(out)
+    }
+
+    /// AllReduce: every device ends with the element-wise sum.
+    pub fn all_reduce(partials: &[Tensor2]) -> Result<Tensor2> {
+        let mut sum = partials
+            .first()
+            .ok_or_else(|| GalaxyError::Shape("all_reduce: empty".into()))?
+            .clone();
+        for p in &partials[1..] {
+            sum.add_assign(p)?;
+        }
+        Ok(sum)
+    }
+}
+
+/// Bytes a ring AllGather moves per device: (D-1) steps × shard bytes.
+pub fn ag_bytes_per_device(shard_bytes: u64, d: usize) -> u64 {
+    shard_bytes * (d as u64 - 1)
+}
+
+/// Bytes a ring ReduceScatter moves per device.
+pub fn rs_bytes_per_device(chunk_bytes: u64, d: usize) -> u64 {
+    chunk_bytes * (d as u64 - 1)
+}
+
+/// Ring-AllGather executed in lockstep across all devices, following the
+/// per-device step schedules of [`all_gather_steps`]. `shards[r]` is the
+/// row-tile owned by device `r`; returns, per device, the gathered tiles
+/// in slot order (equal to the reference concat for every device).
+pub fn ring_all_gather(shards: &[Tensor2]) -> Result<Vec<Tensor2>> {
+    let d = shards.len();
+    if d == 0 {
+        return Err(GalaxyError::Shape("ring_all_gather: empty".into()));
+    }
+    // tiles[i][r] = Some(tile r) once device i holds it.
+    let mut tiles: Vec<Vec<Option<Tensor2>>> = (0..d)
+        .map(|i| {
+            (0..d)
+                .map(|r| if r == i { Some(shards[r].clone()) } else { None })
+                .collect()
+        })
+        .collect();
+    let plans: Vec<_> = (0..d).map(|i| all_gather_steps(i, d)).collect();
+    for s in 0..d {
+        // Gather the wire traffic for this step first (lockstep barrier),
+        // then deliver — models simultaneous full-duplex sends.
+        let mut deliveries: Vec<(usize, usize, Tensor2)> = Vec::new();
+        for i in 0..d {
+            if let Some(t) = plans[i][s].send_tile {
+                let payload = tiles[i][t]
+                    .clone()
+                    .ok_or_else(|| GalaxyError::Fabric(format!("dev {i} step {s}: tile {t} not yet held")))?;
+                deliveries.push(((i + 1) % d, t, payload));
+            }
+        }
+        for (to, t, payload) in deliveries {
+            tiles[to][t] = Some(payload);
+        }
+        // (compute_tile is where the engine would run the entry GEMM.)
+        for (i, plan) in plans.iter().enumerate() {
+            let ct = plan[s].compute_tile;
+            if tiles[i][ct].is_none() {
+                return Err(GalaxyError::Fabric(format!(
+                    "dev {i} step {s}: compute tile {ct} missing — schedule broken"
+                )));
+            }
+        }
+    }
+    (0..d)
+        .map(|i| {
+            let parts: Vec<Tensor2> = (0..d).map(|r| tiles[i][r].take().unwrap()).collect();
+            Tensor2::concat_rows(&parts)
+        })
+        .collect()
+}
+
+/// Ring-ReduceScatter executed in lockstep, following
+/// [`reduce_scatter_steps`]. `partials[i]` is device i's full `[seq, h]`
+/// partial; `seq_parts` the row-tile sizes. Returns, per device, its fully
+/// reduced tile (device i gets tile i).
+pub fn ring_reduce_scatter(partials: &[Tensor2], seq_parts: &[usize]) -> Result<Vec<Tensor2>> {
+    let d = partials.len();
+    if d == 0 || seq_parts.len() != d {
+        return Err(GalaxyError::Shape(format!(
+            "ring_reduce_scatter: {d} devices vs {} parts",
+            seq_parts.len()
+        )));
+    }
+    let offsets: Vec<usize> = (0..d).map(|r| seq_parts[..r].iter().sum()).collect();
+    let tile_of = |i: usize, r: usize| -> Result<Tensor2> {
+        partials[i].slice_rows(offsets[r], seq_parts[r])
+    };
+    let plans: Vec<_> = (0..d).map(|i| reduce_scatter_steps(i, d)).collect();
+    // acc[i] = the partial-sum tile device i accumulated in its last step.
+    let mut acc: Vec<Option<Tensor2>> = vec![None; d];
+    for s in 0..d {
+        // Each device computes its step's GEMM-output tile (here: slices
+        // its own partial — the engine plugs real GEMMs in).
+        let mut computed: Vec<Tensor2> = Vec::with_capacity(d);
+        for (i, plan) in plans.iter().enumerate() {
+            computed.push(tile_of(i, plan[s].compute_tile)?);
+        }
+        // Wire: forward last step's accumulation, reduce-add into computed.
+        let sends: Vec<Option<Tensor2>> = (0..d)
+            .map(|i| plans[i][s].send_tile.map(|_| acc[i].clone().expect("acc present")))
+            .collect();
+        for i in 0..d {
+            let mut mine = computed[i].clone();
+            if plans[i][s].recv_tile.is_some() {
+                let from = (i + d - 1) % d;
+                let payload = sends[from]
+                    .clone()
+                    .ok_or_else(|| GalaxyError::Fabric(format!("dev {from} had nothing to send at step {s}")))?;
+                mine.add_assign(&payload)?;
+            }
+            acc[i] = Some(mine);
+        }
+    }
+    Ok(acc.into_iter().map(|a| a.unwrap()).collect())
+}
+
+/// Ring-AllReduce = Ring-ReduceScatter + Ring-AllGather (the Megatron-LM
+/// baseline synchronization; paper §III-B.5 merit 2).
+pub fn ring_all_reduce(partials: &[Tensor2], seq_parts: &[usize]) -> Result<Vec<Tensor2>> {
+    let scattered = ring_reduce_scatter(partials, seq_parts)?;
+    ring_all_gather(&scattered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Pcg64};
+
+    fn rand_tensor(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect()).unwrap()
+    }
+
+    #[test]
+    fn ring_ag_matches_reference_equal_parts() {
+        let mut rng = Pcg64::new(1);
+        for d in 1..=5 {
+            let shards: Vec<Tensor2> = (0..d).map(|_| rand_tensor(&mut rng, 4, 6)).collect();
+            let want = reference::all_gather(&shards).unwrap();
+            for got in ring_all_gather(&shards).unwrap() {
+                assert_eq!(got, want, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_ag_unequal_parts() {
+        let mut rng = Pcg64::new(2);
+        let shards = vec![
+            rand_tensor(&mut rng, 5, 3),
+            rand_tensor(&mut rng, 2, 3),
+            rand_tensor(&mut rng, 7, 3),
+        ];
+        let want = reference::all_gather(&shards).unwrap();
+        for got in ring_all_gather(&shards).unwrap() {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn ring_rs_matches_reference() {
+        let mut rng = Pcg64::new(3);
+        for d in 1..=5 {
+            let parts: Vec<usize> = (0..d).map(|r| 2 + r).collect();
+            let seq: usize = parts.iter().sum();
+            let partials: Vec<Tensor2> = (0..d).map(|_| rand_tensor(&mut rng, seq, 4)).collect();
+            let want = reference::reduce_scatter(&partials, &parts).unwrap();
+            let got = ring_reduce_scatter(&partials, &parts).unwrap();
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!(g.allclose(w, 1e-5, 1e-5), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_matches_reference() {
+        let mut rng = Pcg64::new(4);
+        let d = 3;
+        let parts = vec![3usize, 3, 2];
+        let partials: Vec<Tensor2> = (0..d).map(|_| rand_tensor(&mut rng, 8, 5)).collect();
+        let want = reference::all_reduce(&partials).unwrap();
+        for got in ring_all_reduce(&partials, &parts).unwrap() {
+            assert!(got.allclose(&want, 1e-5, 1e-5));
+        }
+    }
+
+    #[test]
+    fn allreduce_volume_identity() {
+        // Paper §III-B.5: Ring-AllReduce volume == Ring-RS + Ring-AG.
+        // AllReduce classic volume per device: 2*(D-1)/D * N bytes; our RS
+        // and AG helpers each move (D-1)*chunk where chunk = N/D.
+        let n_bytes = 1_000_000u64;
+        for d in 2..=6 {
+            let chunk = n_bytes / d as u64;
+            let rs_ag = rs_bytes_per_device(chunk, d) + ag_bytes_per_device(chunk, d);
+            let allreduce = 2 * (d as u64 - 1) * chunk;
+            assert_eq!(rs_ag, allreduce, "d={d}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_error() {
+        assert!(ring_all_gather(&[]).is_err());
+        assert!(ring_reduce_scatter(&[], &[]).is_err());
+        assert!(reference::all_reduce(&[]).is_err());
+    }
+
+    #[test]
+    fn prop_ring_ag_equals_reference() {
+        forall(
+            "ring_ag==naive_ag",
+            7,
+            60,
+            |rng| {
+                let d = rng.range(1, 6) as usize;
+                let cols = rng.range(1, 8) as usize;
+                let shards: Vec<Tensor2> = (0..d)
+                    .map(|_| {
+                        let rows = rng.range(1, 6) as usize;
+                        rand_tensor(rng, rows, cols)
+                    })
+                    .collect();
+                shards
+            },
+            |shards| {
+                let want = reference::all_gather(shards).map_err(|e| e.to_string())?;
+                let got = ring_all_gather(shards).map_err(|e| e.to_string())?;
+                for g in got {
+                    if g != want {
+                        return Err("mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ring_rs_equals_reference() {
+        forall(
+            "ring_rs==naive_rs",
+            8,
+            60,
+            |rng| {
+                let d = rng.range(1, 6) as usize;
+                let cols = rng.range(1, 8) as usize;
+                let parts: Vec<usize> = (0..d).map(|_| rng.range(1, 5) as usize).collect();
+                let seq: usize = parts.iter().sum();
+                let partials: Vec<Tensor2> =
+                    (0..d).map(|_| rand_tensor(rng, seq, cols)).collect();
+                (partials, parts)
+            },
+            |(partials, parts)| {
+                let want = reference::reduce_scatter(partials, parts).map_err(|e| e.to_string())?;
+                let got = ring_reduce_scatter(partials, parts).map_err(|e| e.to_string())?;
+                for (g, w) in got.iter().zip(want.iter()) {
+                    if !g.allclose(w, 1e-4, 1e-4) {
+                        return Err(format!("diff {}", g.max_abs_diff(w).unwrap()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! Typed run configuration + the artifact manifest contract.
+//!
+//! [`RunConfig`] is what the CLI and examples construct; [`Manifest`] is
+//! the parsed `artifacts/manifest.json` the Python AOT step emits, which
+//! the runtime registry validates against before serving.
+
+pub mod json;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{GalaxyError, Result};
+use crate::model::{ModelConfig, ModelKind};
+use crate::parallel::OverlapMode;
+use crate::sim::{EdgeEnv, NetParams};
+use json::Json;
+
+/// One AOT-compiled program as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ManifestProgram {
+    pub name: String,
+    pub flavor: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model_name: String,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub mlp_unit: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub seq_tiles: Vec<usize>,
+    pub programs: Vec<ManifestProgram>,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            GalaxyError::Config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let m = j.get("model")?;
+        let programs = j
+            .get("programs")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ManifestProgram {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    flavor: p.get("flavor")?.as_str()?.to_string(),
+                    file: p.get("file")?.as_str()?.to_string(),
+                    input_shapes: p
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|dims| {
+                            dims.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<Vec<_>>>()
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model_name: m.get("name")?.as_str()?.to_string(),
+            hidden: m.get("hidden")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            head_dim: m.get("head_dim")?.as_usize()?,
+            ffn_dim: m.get("ffn_dim")?.as_usize()?,
+            mlp_unit: m.get("mlp_unit")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            seq_tiles: m
+                .get("seq_tiles")?
+                .as_arr()?
+                .iter()
+                .map(|t| t.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            programs,
+            dir,
+        })
+    }
+
+    /// Cross-check the manifest against the Rust-side model constants.
+    pub fn validate_against(&self, model: &ModelConfig) -> Result<()> {
+        let checks = [
+            ("hidden", self.hidden, model.hidden),
+            ("n_heads", self.n_heads, model.heads),
+            ("head_dim", self.head_dim, model.head_dim()),
+            ("ffn_dim", self.ffn_dim, model.ffn),
+            ("mlp_unit", self.mlp_unit, model.mlp_unit()),
+            ("n_layers", self.n_layers, model.layers),
+        ];
+        for (name, got, want) in checks {
+            if got != want {
+                return Err(GalaxyError::Config(format!(
+                    "manifest/{name}={got} disagrees with rust model {want}; \
+                     re-run `make artifacts`"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn program(&self, name: &str) -> Option<&ManifestProgram> {
+        self.programs.iter().find(|p| p.name == name)
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.program(name).map(|p| self.dir.join(&p.file))
+    }
+}
+
+/// Default artifacts directory: `$GALAXY_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("GALAXY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// A fully-specified run (CLI and examples build these).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelKind,
+    pub env_name: String,
+    pub bandwidth_mbps: f64,
+    pub seq: usize,
+    pub overlap: OverlapMode,
+    pub requests: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelKind::BertLarge,
+            env_name: "A".into(),
+            bandwidth_mbps: 125.0,
+            seq: 284,
+            overlap: OverlapMode::Tiled,
+            requests: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn model_config(&self) -> ModelConfig {
+        ModelConfig::by_kind(self.model)
+    }
+
+    pub fn edge_env(&self) -> Result<EdgeEnv> {
+        EdgeEnv::by_name(&self.env_name)
+            .ok_or_else(|| GalaxyError::Config(format!("unknown edge env `{}`", self.env_name)))
+    }
+
+    pub fn net(&self) -> NetParams {
+        NetParams::mbps(self.bandwidth_mbps)
+    }
+
+    pub fn parse_model(name: &str) -> Result<ModelKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "distilbert" => Ok(ModelKind::DistilBert),
+            "bert-l" | "bert-large" | "bertl" => Ok(ModelKind::BertLarge),
+            "gpt2-l" | "gpt2-large" | "gpt2l" => Ok(ModelKind::Gpt2Large),
+            "opt-l" | "opt-1.3b" | "optl" => Ok(ModelKind::OptLarge),
+            "opt-xl" | "opt-2.7b" | "optxl" => Ok(ModelKind::OptXl),
+            "galaxy-mini" | "mini" => Ok(ModelKind::GalaxyMini),
+            other => Err(GalaxyError::Config(format!("unknown model `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_model_aliases() {
+        assert_eq!(RunConfig::parse_model("Bert-L").unwrap(), ModelKind::BertLarge);
+        assert_eq!(RunConfig::parse_model("opt-2.7b").unwrap(), ModelKind::OptXl);
+        assert_eq!(RunConfig::parse_model("mini").unwrap(), ModelKind::GalaxyMini);
+        assert!(RunConfig::parse_model("llama").is_err());
+    }
+
+    #[test]
+    fn default_config_is_paper_default() {
+        let c = RunConfig::default();
+        assert_eq!(c.bandwidth_mbps, 125.0);
+        assert_eq!(c.seq, 284);
+        assert_eq!(c.overlap, OverlapMode::Tiled);
+    }
+
+    #[test]
+    fn manifest_loads_and_validates_if_built() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model_name, "galaxy-mini");
+        m.validate_against(&ModelConfig::galaxy_mini()).unwrap();
+        let p = m.program("layer_local__xla").unwrap();
+        assert_eq!(p.input_shapes.len(), 10);
+        assert!(m.artifact_path("layer_local__xla").unwrap().exists());
+    }
+
+    #[test]
+    fn manifest_validation_catches_drift() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let mut wrong = ModelConfig::galaxy_mini();
+        wrong.hidden = 999;
+        assert!(m.validate_against(&wrong).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_mention_make() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

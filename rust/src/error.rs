@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+/// Unified error for every Galaxy subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum GalaxyError {
+    /// The planner could not fit the model in the cluster's aggregate
+    /// memory (paper Algorithm 1 lines 23-24: "Exit with Fail").
+    #[error("planning failed: {0}")]
+    PlanInfeasible(String),
+
+    /// An artifact required by the execution engine is missing from the
+    /// registry (i.e. `make artifacts` output is stale or incomplete).
+    #[error("missing AOT artifact: {0}")]
+    MissingArtifact(String),
+
+    /// Shape mismatch in tensor algebra or collective payloads.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// A simulated or real device exceeded its memory budget at runtime.
+    #[error("out of memory on device {device}: need {needed_mb:.1} MB, budget {budget_mb:.1} MB")]
+    Oom {
+        device: usize,
+        needed_mb: f64,
+        budget_mb: f64,
+    },
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Configuration parsing or validation failure.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Cluster fabric failure (a worker died or a channel closed).
+    #[error("fabric: {0}")]
+    Fabric(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for GalaxyError {
+    fn from(e: xla::Error) -> Self {
+        GalaxyError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, GalaxyError>;

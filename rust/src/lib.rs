@@ -1,0 +1,51 @@
+//! # Galaxy — collaborative edge AI for in-situ Transformer inference
+//!
+//! Reproduction of *"Galaxy: A Resource-Efficient Collaborative Edge AI
+//! System for In-situ Transformer Inference"* (CS.DC 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — Pallas kernels + JAX shard programs,
+//!   AOT-lowered to HLO-text artifacts in `artifacts/` (see `python/`).
+//! * **L3 (this crate)** — the paper's system contribution: the Hybrid
+//!   Model Parallelism engine ([`parallel`]), the heterogeneity- and
+//!   memory-aware workload planner ([`planner`], paper Algorithm 1), the
+//!   tile-based communication/computation overlap ([`parallel::overlap`],
+//!   paper §III-D), ring collectives ([`collective`]), the calibrated edge
+//!   testbed simulator ([`sim`]), the profiler ([`profiler`]), baselines
+//!   ([`baselines`]), and a single-shot serving front-end ([`serving`]).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts once via PJRT (`xla` crate) and executes them natively.
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod collective;
+pub mod config;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod parallel;
+pub mod planner;
+pub mod profiler;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod tensor;
+pub mod testkit;
+pub mod workload;
+
+pub use error::{GalaxyError, Result};
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::baselines::BaselineKind;
+    pub use crate::collective::{ring_all_gather, ring_reduce_scatter};
+    pub use crate::error::{GalaxyError, Result};
+    pub use crate::model::{ModelConfig, ModelKind};
+    pub use crate::parallel::{ExecReport, OverlapMode};
+    pub use crate::planner::{Partition, Plan, Planner};
+    pub use crate::profiler::{Profile, Profiler};
+    pub use crate::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
+    pub use crate::tensor::Tensor2;
+}

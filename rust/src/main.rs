@@ -1,0 +1,9 @@
+//! `galaxy` binary — leader entry point + CLI.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = galaxy::cli::run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

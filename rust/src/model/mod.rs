@@ -1,0 +1,322 @@
+//! Transformer model zoo, shape algebra, FLOPs and memory accounting.
+//!
+//! The five paper models (Table IV) plus `galaxy-mini`, the small real
+//! model executed end-to-end through PJRT. FLOP/byte accounting feeds the
+//! calibrated device cost model (`sim::device`), the profiler, and the
+//! planner's memory constraint (paper Eq. 5).
+
+pub mod weights;
+
+pub use weights::WeightGen;
+
+/// Which published model a config describes (Table IV of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    DistilBert,
+    BertLarge,
+    Gpt2Large,
+    OptLarge,
+    OptXl,
+    /// The ~10M-param real-execution model (DESIGN.md §3).
+    GalaxyMini,
+}
+
+impl ModelKind {
+    pub const ALL_PAPER: [ModelKind; 5] = [
+        ModelKind::DistilBert,
+        ModelKind::BertLarge,
+        ModelKind::Gpt2Large,
+        ModelKind::OptLarge,
+        ModelKind::OptXl,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::DistilBert => "DistilBert",
+            ModelKind::BertLarge => "Bert-L",
+            ModelKind::Gpt2Large => "GPT2-L",
+            ModelKind::OptLarge => "OPT-L",
+            ModelKind::OptXl => "OPT-XL",
+            ModelKind::GalaxyMini => "galaxy-mini",
+        }
+    }
+}
+
+/// Static architecture description of an encoder/decoder-only Transformer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub kind: ModelKind,
+    pub layers: usize,
+    pub heads: usize,
+    pub hidden: usize,
+    /// FFN inner width; 4*hidden for every model we model.
+    pub ffn: usize,
+    /// Token-embedding vocabulary size (counted in the full-copy memory
+    /// footprint, as in paper Table I; the planner's Eq. 5 constraint only
+    /// partitions MHA/MLP weights, matching the paper).
+    pub vocab: usize,
+    /// Bytes per weight scalar (paper deploys half precision: 2).
+    pub dtype_bytes: usize,
+    pub ln_eps: f32,
+}
+
+impl ModelConfig {
+    /// DistilBERT: 6 layers, 12 heads, hidden 768 (66M params).
+    pub fn distilbert() -> Self {
+        Self::new(ModelKind::DistilBert, 6, 12, 768, 30522)
+    }
+
+    /// BERT-Large: 24 layers, 16 heads, hidden 1024 (340M params).
+    pub fn bert_large() -> Self {
+        Self::new(ModelKind::BertLarge, 24, 16, 1024, 30522)
+    }
+
+    /// GPT2-Large: 36 layers, 20 heads, hidden 1280 (774M params).
+    pub fn gpt2_large() -> Self {
+        Self::new(ModelKind::Gpt2Large, 36, 20, 1280, 50257)
+    }
+
+    /// OPT-1.3B ("OPT-L" in the paper): 24 layers, 16 heads (paper Table IV
+    /// lists 16), hidden 2048.
+    pub fn opt_large() -> Self {
+        Self::new(ModelKind::OptLarge, 24, 16, 2048, 50272)
+    }
+
+    /// OPT-2.7B ("OPT-XL"): 32 layers, 32 heads, hidden 2560.
+    pub fn opt_xl() -> Self {
+        Self::new(ModelKind::OptXl, 32, 32, 2560, 50272)
+    }
+
+    /// The real-execution model; must match `python/compile/shapes.py`.
+    pub fn galaxy_mini() -> Self {
+        let mut m = Self::new(ModelKind::GalaxyMini, 6, 12, 384, 1000);
+        m.dtype_bytes = 4; // f32 end-to-end on the PJRT CPU path
+        m
+    }
+
+    pub fn by_kind(kind: ModelKind) -> Self {
+        match kind {
+            ModelKind::DistilBert => Self::distilbert(),
+            ModelKind::BertLarge => Self::bert_large(),
+            ModelKind::Gpt2Large => Self::gpt2_large(),
+            ModelKind::OptLarge => Self::opt_large(),
+            ModelKind::OptXl => Self::opt_xl(),
+            ModelKind::GalaxyMini => Self::galaxy_mini(),
+        }
+    }
+
+    fn new(kind: ModelKind, layers: usize, heads: usize, hidden: usize, vocab: usize) -> Self {
+        Self {
+            kind,
+            layers,
+            heads,
+            hidden,
+            ffn: 4 * hidden,
+            vocab,
+            dtype_bytes: 2,
+            ln_eps: 1e-5,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// FFN columns per MLP partition unit (one unit per head; DESIGN.md §3).
+    pub fn mlp_unit(&self) -> usize {
+        self.ffn / self.heads
+    }
+
+    // ---------------------------------------------------------------------
+    // Parameter counts / memory (paper Eq. 5 inputs)
+    // ---------------------------------------------------------------------
+
+    /// Weight scalars in one MHA block: QKV projection + output projection.
+    pub fn mha_params(&self) -> usize {
+        self.hidden * 3 * self.hidden + self.hidden * self.hidden
+    }
+
+    /// Weight scalars in one MLP block: two GEMMs hidden <-> ffn.
+    pub fn mlp_params(&self) -> usize {
+        2 * self.hidden * self.ffn
+    }
+
+    /// Weight scalars in the two LayerNorms of a layer (gamma+beta each).
+    pub fn connective_params(&self) -> usize {
+        4 * self.hidden
+    }
+
+    /// Parameters of the stacked layers (excluding embeddings).
+    pub fn layer_params(&self) -> usize {
+        self.layers * (self.mha_params() + self.mlp_params() + self.connective_params())
+    }
+
+    /// Token-embedding parameters.
+    pub fn embed_params(&self) -> usize {
+        self.vocab * self.hidden
+    }
+
+    /// Total parameters (stacked layers + embeddings).
+    pub fn total_params(&self) -> usize {
+        self.layer_params() + self.embed_params()
+    }
+
+    /// `M_att` of Eq. 5: bytes to load one full MHA block.
+    pub fn mha_bytes(&self) -> usize {
+        self.mha_params() * self.dtype_bytes
+    }
+
+    /// `M_mlp` of Eq. 5: bytes to load one full MLP block.
+    pub fn mlp_bytes(&self) -> usize {
+        self.mlp_params() * self.dtype_bytes
+    }
+
+    /// Model-weights memory footprint of a *full* copy, in MB.
+    pub fn weight_footprint_mb(&self) -> f64 {
+        (self.total_params() * self.dtype_bytes) as f64 / 1.0e6
+    }
+
+    /// Peak activation bytes for a single-shot inference at `seq` tokens:
+    /// dominated by the FFN intermediate + attention scores per layer.
+    pub fn activation_bytes(&self, seq: usize) -> usize {
+        let ffn_act = seq * self.ffn;
+        let attn_scores = self.heads * seq * seq;
+        let residuals = 4 * seq * self.hidden;
+        (ffn_act + attn_scores + residuals) * self.dtype_bytes
+    }
+
+    // ---------------------------------------------------------------------
+    // FLOP counts (feed the calibrated device model)
+    // ---------------------------------------------------------------------
+
+    /// FLOPs of one MHA block at `seq` tokens for a shard of `k` heads
+    /// (k == heads gives the full block). GEMMs count 2*m*k*n.
+    pub fn mha_flops(&self, seq: usize, k_heads: usize) -> u64 {
+        let d = self.head_dim();
+        let kd = k_heads * d;
+        let qkv = 2 * seq * self.hidden * 3 * kd;
+        let scores = 2 * seq * seq * kd; // QK^T over shard heads
+        let ctx = 2 * seq * seq * kd; // probs @ V
+        let out = 2 * seq * kd * self.hidden;
+        (qkv + scores + ctx + out) as u64
+    }
+
+    /// FLOPs of one MLP block at `seq` tokens for a shard of `u` units.
+    pub fn mlp_flops(&self, seq: usize, u_units: usize) -> u64 {
+        let w = u_units * self.mlp_unit();
+        (2 * seq * self.hidden * w + 2 * seq * w * self.hidden) as u64
+    }
+
+    /// Bytes touched by one connective block over `rows` sequence rows
+    /// (read g + residual, write out; LN stats are in-register).
+    pub fn connective_bytes(&self, rows: usize) -> u64 {
+        (3 * rows * self.hidden * self.dtype_bytes) as u64
+    }
+
+    /// Total FLOPs of a full single-shot inference at `seq` tokens
+    /// (embedding lookup is a copy, not FLOPs).
+    pub fn total_flops(&self, seq: usize) -> u64 {
+        self.layers as u64 * (self.mha_flops(seq, self.heads) + self.mlp_flops(seq, self.heads))
+    }
+
+    /// Activation tensor bytes crossing a sync point at `seq` tokens
+    /// (one [seq, hidden] activation).
+    pub fn activation_tensor_bytes(&self, seq: usize) -> u64 {
+        (seq * self.hidden * self.dtype_bytes) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table4_dims() {
+        let db = ModelConfig::distilbert();
+        assert_eq!((db.layers, db.heads, db.hidden), (6, 12, 768));
+        let bl = ModelConfig::bert_large();
+        assert_eq!((bl.layers, bl.heads, bl.hidden), (24, 16, 1024));
+        let g2 = ModelConfig::gpt2_large();
+        assert_eq!((g2.layers, g2.heads, g2.hidden), (36, 20, 1280));
+        let ol = ModelConfig::opt_large();
+        assert_eq!((ol.layers, ol.heads, ol.hidden), (24, 16, 2048));
+        let ox = ModelConfig::opt_xl();
+        assert_eq!((ox.layers, ox.heads, ox.hidden), (32, 32, 2560));
+    }
+
+    #[test]
+    fn param_counts_near_published() {
+        // Published totals: DistilBert 66M, Bert-L 340M, GPT2-L 774M,
+        // OPT-L 1.3B, OPT-XL 2.7B. Ours count layers + token embeddings
+        // (no position embeddings / task heads), so expect within ~15%.
+        let approx = |m: &ModelConfig| m.total_params() as f64 / 1e6;
+        assert!((58.0..70.0).contains(&approx(&ModelConfig::distilbert())));
+        assert!((300.0..345.0).contains(&approx(&ModelConfig::bert_large())));
+        assert!((700.0..790.0).contains(&approx(&ModelConfig::gpt2_large())));
+        assert!((1150.0..1350.0).contains(&approx(&ModelConfig::opt_large())));
+        assert!((2450.0..2750.0).contains(&approx(&ModelConfig::opt_xl())));
+    }
+
+    #[test]
+    fn table1_memory_footprints() {
+        // Paper Table I: DistilBert 130MB, Bert-L 680MB, GPT2-L 1.6GB,
+        // OPT-L 2.6GB, OPT-XL 5.4GB (fp16). Ours must land within ~10%.
+        let mb = |m: ModelConfig| m.weight_footprint_mb();
+        assert!((117.0..143.0).contains(&mb(ModelConfig::distilbert())));
+        assert!((612.0..748.0).contains(&mb(ModelConfig::bert_large())));
+        assert!((1440.0..1760.0).contains(&mb(ModelConfig::gpt2_large())));
+        assert!((2340.0..2860.0).contains(&mb(ModelConfig::opt_large())));
+        assert!((4860.0..5940.0).contains(&mb(ModelConfig::opt_xl())));
+    }
+
+    #[test]
+    fn galaxy_mini_matches_python_shapes() {
+        // Must agree with python/compile/shapes.py
+        let m = ModelConfig::galaxy_mini();
+        assert_eq!(m.hidden, 384);
+        assert_eq!(m.heads, 12);
+        assert_eq!(m.head_dim(), 32);
+        assert_eq!(m.ffn, 1536);
+        assert_eq!(m.mlp_unit(), 128);
+        assert_eq!(m.layers, 6);
+        assert_eq!(m.dtype_bytes, 4);
+        // ~10M params
+        let p = m.total_params() as f64 / 1e6;
+        assert!((9.0..13.0).contains(&p), "params {p}M");
+    }
+
+    #[test]
+    fn shard_flops_sum_to_full() {
+        let m = ModelConfig::bert_large();
+        let full = m.mha_flops(284, m.heads);
+        let sum: u64 = [4, 5, 7].iter().map(|&k| m.mha_flops(284, k)).sum();
+        assert_eq!(full, sum);
+        let fullm = m.mlp_flops(284, m.heads);
+        let summ: u64 = [10, 6].iter().map(|&u| m.mlp_flops(284, u)).sum();
+        assert_eq!(fullm, summ);
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_shard() {
+        let m = ModelConfig::gpt2_large();
+        assert_eq!(m.mlp_flops(100, 10), 10 * m.mlp_flops(100, 1));
+    }
+
+    #[test]
+    fn activation_tensor_bytes_match_sync_volume() {
+        let m = ModelConfig::bert_large();
+        // [284, 1024] fp16 = 581,632 bytes
+        assert_eq!(m.activation_tensor_bytes(284), 284 * 1024 * 2);
+    }
+
+    #[test]
+    fn mha_flops_quadratic_in_seq() {
+        let m = ModelConfig::distilbert();
+        let f1 = m.mha_flops(100, m.heads) as f64;
+        let f2 = m.mha_flops(200, m.heads) as f64;
+        assert!(f2 / f1 > 2.0, "attention term must make growth superlinear");
+        let g1 = m.mlp_flops(100, m.heads) as f64;
+        let g2 = m.mlp_flops(200, m.heads) as f64;
+        assert!((g2 / g1 - 2.0).abs() < 1e-9, "mlp is exactly linear in seq");
+    }
+}

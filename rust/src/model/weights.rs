@@ -1,0 +1,129 @@
+//! Deterministic synthetic weight generation.
+//!
+//! The paper loads pretrained HF checkpoints; offline we substitute
+//! deterministic Gaussian weights (DESIGN.md §4 — latency and memory are
+//! content-independent, and numerics are validated by HMP-vs-Local
+//! equality, which holds for *any* weights). Seeding is (model, layer)
+//! keyed so leader, workers, tests, and benches independently reconstruct
+//! identical tensors without shipping them around.
+
+use super::ModelConfig;
+use crate::tensor::nn::LayerParams;
+use crate::tensor::Tensor2;
+use crate::testkit::Pcg64;
+
+/// Deterministic weight factory for one model.
+#[derive(Clone, Debug)]
+pub struct WeightGen {
+    cfg: ModelConfig,
+    seed: u64,
+    /// Scale of the Gaussian init; ~0.02/sqrt(layers) keeps post-LN
+    /// activations well-conditioned at any depth.
+    scale: f32,
+}
+
+impl WeightGen {
+    pub fn new(cfg: &ModelConfig, seed: u64) -> Self {
+        let scale = 0.08 / (cfg.layers as f32).sqrt();
+        Self { cfg: cfg.clone(), seed, scale }
+    }
+
+    fn layer_rng(&self, layer: usize, tag: u64) -> Pcg64 {
+        // Mix model kind, seed, layer, and tensor tag into one stream seed.
+        let kind = self.cfg.kind as u64;
+        Pcg64::new(
+            self.seed
+                .wrapping_mul(0x9e3779b97f4a7c15)
+                .wrapping_add(kind << 48)
+                .wrapping_add((layer as u64) << 8)
+                .wrapping_add(tag),
+        )
+    }
+
+    fn tensor(&self, layer: usize, tag: u64, rows: usize, cols: usize) -> Tensor2 {
+        let mut rng = self.layer_rng(layer, tag);
+        let data = (0..rows * cols).map(|_| rng.normal() * self.scale).collect();
+        Tensor2::from_vec(rows, cols, data).expect("weight shape")
+    }
+
+    fn vector(&self, layer: usize, tag: u64, len: usize, center: f32) -> Vec<f32> {
+        let mut rng = self.layer_rng(layer, tag);
+        (0..len).map(|_| center + rng.normal() * 0.02).collect()
+    }
+
+    /// Full parameters of layer `l`.
+    pub fn layer(&self, l: usize) -> LayerParams {
+        let h = self.cfg.hidden;
+        LayerParams {
+            wqkv: self.tensor(l, 1, h, 3 * h),
+            wout: self.tensor(l, 2, h, h),
+            w1: self.tensor(l, 3, h, self.cfg.ffn),
+            w2: self.tensor(l, 4, self.cfg.ffn, h),
+            gamma1: self.vector(l, 5, h, 1.0),
+            beta1: self.vector(l, 6, h, 0.0),
+            gamma2: self.vector(l, 7, h, 1.0),
+            beta2: self.vector(l, 8, h, 0.0),
+        }
+    }
+
+    /// Deterministic input activations `[seq, hidden]` for request `id`.
+    pub fn input(&self, id: u64, seq: usize) -> Tensor2 {
+        let mut rng = Pcg64::new(self.seed ^ 0xabcd_ef01_2345_6789 ^ id);
+        let h = self.cfg.hidden;
+        Tensor2::from_vec(seq, h, (0..seq * h).map(|_| rng.normal() * 0.5).collect())
+            .expect("input shape")
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_across_instances() {
+        let cfg = ModelConfig::galaxy_mini();
+        let a = WeightGen::new(&cfg, 7).layer(2);
+        let b = WeightGen::new(&cfg, 7).layer(2);
+        assert_eq!(a.wqkv, b.wqkv);
+        assert_eq!(a.w2, b.w2);
+        assert_eq!(a.gamma1, b.gamma1);
+    }
+
+    #[test]
+    fn layers_differ() {
+        let cfg = ModelConfig::galaxy_mini();
+        let gen = WeightGen::new(&cfg, 7);
+        assert!(gen.layer(0).wqkv.max_abs_diff(&gen.layer(1).wqkv).unwrap() > 1e-3);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let cfg = ModelConfig::galaxy_mini();
+        let a = WeightGen::new(&cfg, 1).layer(0);
+        let b = WeightGen::new(&cfg, 2).layer(0);
+        assert!(a.wqkv.max_abs_diff(&b.wqkv).unwrap() > 1e-3);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::galaxy_mini();
+        let p = WeightGen::new(&cfg, 0).layer(0);
+        assert_eq!(p.wqkv.shape(), (384, 1152));
+        assert_eq!(p.wout.shape(), (384, 384));
+        assert_eq!(p.w1.shape(), (384, 1536));
+        assert_eq!(p.w2.shape(), (1536, 384));
+        assert_eq!(p.gamma1.len(), 384);
+    }
+
+    #[test]
+    fn input_deterministic_and_request_keyed() {
+        let cfg = ModelConfig::galaxy_mini();
+        let gen = WeightGen::new(&cfg, 3);
+        assert_eq!(gen.input(0, 60), gen.input(0, 60));
+        assert!(gen.input(0, 60).max_abs_diff(&gen.input(1, 60)).unwrap() > 1e-3);
+    }
+}

@@ -1,0 +1,109 @@
+//! Hybrid Model Parallelism: schedule construction and execution reports.
+//!
+//! The HMP layer schedule (paper Fig. 5) is built once from a
+//! [`crate::planner::Plan`] and walked by two engines:
+//!
+//! * [`crate::sim::SimEngine`] — closed-form timing on the calibrated
+//!   testbed model (paper-scale experiments), and
+//! * [`crate::cluster::RealCluster`] — actual execution of the AOT PJRT
+//!   artifacts across worker threads with ring channels (galaxy-mini),
+//!   which validates that the schedule produces numerics identical to
+//!   local inference.
+//!
+//! [`overlap`] holds the tile-based ring schedules (paper §III-D): the
+//! step-by-step (tile index, send, recv) sequences for Ring-AllGather and
+//! Ring-ReduceScatter overlapping, proven equivalent to the plain
+//! collectives by the property tests.
+
+pub mod overlap;
+pub mod schedule;
+
+pub use schedule::{LayerSchedule, ShardSpec};
+
+/// Whether tensor synchronizations overlap with boundary GEMMs (§III-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Serialize compute and communication (ablation / baselines).
+    None,
+    /// Tile-based fine-grained overlapping (Galaxy's optimization).
+    Tiled,
+}
+
+impl OverlapMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::None => "serial",
+            OverlapMode::Tiled => "tiled-overlap",
+        }
+    }
+}
+
+/// Wall-clock execution report from the real (PJRT) engine.
+#[derive(Clone, Debug, Default)]
+pub struct ExecReport {
+    /// End-to-end latency per request, seconds.
+    pub latencies_s: Vec<f64>,
+    /// Requests served.
+    pub requests: usize,
+    /// Bytes moved through ring channels.
+    pub ring_bytes: u64,
+    /// Number of PJRT executions issued.
+    pub pjrt_calls: u64,
+}
+
+impl ExecReport {
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)]
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let total: f64 = self.latencies_s.iter().sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_report_stats() {
+        let rep = ExecReport {
+            latencies_s: vec![0.1, 0.2, 0.3, 0.4],
+            requests: 4,
+            ..Default::default()
+        };
+        assert!((rep.mean_latency_s() - 0.25).abs() < 1e-12);
+        assert!((rep.p95_latency_s() - 0.4).abs() < 1e-12);
+        assert!((rep.throughput_rps() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let rep = ExecReport::default();
+        assert_eq!(rep.mean_latency_s(), 0.0);
+        assert_eq!(rep.p95_latency_s(), 0.0);
+        assert_eq!(rep.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn overlap_mode_names() {
+        assert_eq!(OverlapMode::None.name(), "serial");
+        assert_eq!(OverlapMode::Tiled.name(), "tiled-overlap");
+    }
+}

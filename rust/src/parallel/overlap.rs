@@ -1,0 +1,189 @@
+//! Tile-based ring-overlap step schedules (paper §III-D, Fig. 6/7).
+//!
+//! These are the *pure* step plans — which tile each device computes, and
+//! what it sends/receives, at every ring step. The real cluster engine
+//! executes them against channels + PJRT; the property tests prove that
+//! following the plans reproduces the plain AllGather / ReduceScatter
+//! results for any device count.
+//!
+//! Conventions: `D` devices in a ring; device `i` sends to `(i+1)%D` and
+//! receives from `(i-1)%D`. Tile `r` is the sequence slot owned by device
+//! `r` in the SP partition.
+
+/// One step of the Ring-AllGather overlap (Fig. 6) for one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AgStep {
+    /// Tile index to run the entry GEMM on during this step.
+    pub compute_tile: usize,
+    /// Tile index to forward to the successor (None on the last step).
+    pub send_tile: Option<usize>,
+    /// Tile index arriving from the predecessor (None on the last step).
+    pub recv_tile: Option<usize>,
+}
+
+/// Full Ring-AllGather overlap schedule for device `i` of `d`.
+///
+/// Step `s` (0-based): compute GEMM on tile `(i - s) mod d`; concurrently
+/// forward that same tile and receive tile `(i - s - 1) mod d`. The final
+/// step computes the last received tile with no communication.
+pub fn all_gather_steps(i: usize, d: usize) -> Vec<AgStep> {
+    assert!(d >= 1 && i < d);
+    (0..d)
+        .map(|s| {
+            let tile = (i + d - s % d) % d;
+            let last = s == d - 1;
+            AgStep {
+                compute_tile: tile,
+                send_tile: (!last).then_some(tile),
+                recv_tile: (!last).then_some((i + d - (s + 1) % d) % d),
+            }
+        })
+        .collect()
+}
+
+/// One step of the Ring-ReduceScatter overlap (Fig. 7) for one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RsStep {
+    /// Tile index to run the exit GEMM on during this step.
+    pub compute_tile: usize,
+    /// Partial-sum tile to forward to the successor (from the *previous*
+    /// step's result), None on the first step.
+    pub send_tile: Option<usize>,
+    /// Partial-sum tile arriving from the predecessor, to be reduce-added
+    /// into this step's GEMM output. None on the first step.
+    pub recv_tile: Option<usize>,
+}
+
+/// Full Ring-ReduceScatter overlap schedule for device `i` of `d`.
+///
+/// Step `s` computes the GEMM on tile `(i + (d - 1) - s) mod d` (paper:
+/// `E_{i,(i+2)%3}` first for d=3). From step 1 on, the previous step's
+/// accumulated partial rides the ring: device `i` forwards it while
+/// reduce-adding the partial received from its predecessor into the tile
+/// it just computed. After step `d-1`, device `i` holds the fully reduced
+/// tile `i` — exactly the ReduceScatter output.
+pub fn reduce_scatter_steps(i: usize, d: usize) -> Vec<RsStep> {
+    assert!(d >= 1 && i < d);
+    (0..d)
+        .map(|s| {
+            let tile = (i + (d - 1) - s + d) % d;
+            let first = s == 0;
+            RsStep {
+                compute_tile: tile,
+                // forward what we finished last step: tile (i + d - s) % d
+                send_tile: (!first).then_some((i + d - s) % d),
+                recv_tile: (!first).then_some(tile),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn ag_paper_example_three_devices() {
+        // Paper Fig. 6, device i of 3: step1 computes H_i, step2 H_{i-1},
+        // step3 H_{i-2}; last step silent.
+        for i in 0..3 {
+            let steps = all_gather_steps(i, 3);
+            assert_eq!(steps[0].compute_tile, i);
+            assert_eq!(steps[1].compute_tile, (i + 2) % 3);
+            assert_eq!(steps[2].compute_tile, (i + 1) % 3);
+            assert_eq!(steps[2].send_tile, None);
+            assert_eq!(steps[2].recv_tile, None);
+        }
+    }
+
+    #[test]
+    fn rs_paper_example_three_devices() {
+        // Paper Fig. 7, device i of 3: computes E_{i,(i+2)%3}, then
+        // E_{i,(i+1)%3}, then E_{i,i}; ends holding tile i.
+        for i in 0..3 {
+            let steps = reduce_scatter_steps(i, 3);
+            assert_eq!(steps[0].compute_tile, (i + 2) % 3);
+            assert_eq!(steps[1].compute_tile, (i + 1) % 3);
+            assert_eq!(steps[2].compute_tile, i);
+            assert_eq!(steps[0].send_tile, None);
+        }
+    }
+
+    #[test]
+    fn ag_covers_every_tile_once() {
+        for d in 1..=6 {
+            for i in 0..d {
+                let tiles: HashSet<usize> =
+                    all_gather_steps(i, d).iter().map(|s| s.compute_tile).collect();
+                assert_eq!(tiles.len(), d, "device {i} of {d} must GEMM every tile");
+            }
+        }
+    }
+
+    #[test]
+    fn rs_final_tile_is_own_slot() {
+        for d in 1..=6 {
+            for i in 0..d {
+                let steps = reduce_scatter_steps(i, d);
+                assert_eq!(steps.last().unwrap().compute_tile, i);
+            }
+        }
+    }
+
+    #[test]
+    fn ag_send_matches_successor_recv() {
+        // What device i sends at step s must be what device (i+1)%d
+        // expects to receive at step s.
+        for d in 2..=5 {
+            for i in 0..d {
+                let me = all_gather_steps(i, d);
+                let succ = all_gather_steps((i + 1) % d, d);
+                for s in 0..d - 1 {
+                    assert_eq!(
+                        me[s].send_tile, succ[s].recv_tile,
+                        "d={d} i={i} step={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_send_matches_successor_recv() {
+        for d in 2..=5 {
+            for i in 0..d {
+                let me = reduce_scatter_steps(i, d);
+                let succ = reduce_scatter_steps((i + 1) % d, d);
+                for s in 1..d {
+                    assert_eq!(
+                        me[s].send_tile, succ[s].recv_tile,
+                        "d={d} i={i} step={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_comm_rounds_match_paper() {
+        // §III-D: D-1 rounds of ring communication overlap D rounds of GEMM.
+        for d in 1..=6 {
+            let steps = all_gather_steps(0, d);
+            assert_eq!(steps.len(), d);
+            assert_eq!(steps.iter().filter(|s| s.send_tile.is_some()).count(), d - 1);
+            let rs = reduce_scatter_steps(0, d);
+            assert_eq!(rs.len(), d);
+            assert_eq!(rs.iter().filter(|s| s.send_tile.is_some()).count(), d - 1);
+        }
+    }
+
+    #[test]
+    fn single_device_schedules_degenerate() {
+        let ag = all_gather_steps(0, 1);
+        assert_eq!(ag.len(), 1);
+        assert_eq!(ag[0].send_tile, None);
+        let rs = reduce_scatter_steps(0, 1);
+        assert_eq!(rs[0].compute_tile, 0);
+    }
+}

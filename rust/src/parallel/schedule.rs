@@ -1,0 +1,198 @@
+//! Per-device shard specifications derived from a [`Plan`].
+//!
+//! A [`LayerSchedule`] is the static description of who computes what in
+//! one Transformer layer under HMP — the artifact names, weight-shard
+//! slices, and ring-tile shapes each device needs. Both engines derive
+//! their behaviour from this single structure, which is what makes the
+//! simulated and real execution paths comparable.
+
+use crate::model::ModelConfig;
+use crate::planner::Plan;
+
+/// Everything device `d` needs to know about its share of one layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub device: usize,
+    /// Attention heads owned (may be 0 → skip MHA compute, still ring).
+    pub k_heads: usize,
+    /// Head offset into the full model (for weight slicing).
+    pub head_offset: usize,
+    /// MLP units owned (unit = ffn/heads columns).
+    pub u_units: usize,
+    /// Unit offset into the full FFN width.
+    pub unit_offset: usize,
+    /// Sequence rows owned by this device's SP shard.
+    pub seq_rows: usize,
+    /// Row offset of the SP shard.
+    pub seq_offset: usize,
+}
+
+impl ShardSpec {
+    /// QKV projection width for this shard, in columns.
+    pub fn qkv_width(&self, m: &ModelConfig) -> usize {
+        3 * self.k_heads * m.head_dim()
+    }
+
+    /// FFN columns owned by this shard.
+    pub fn mlp_width(&self, m: &ModelConfig) -> usize {
+        self.u_units * m.mlp_unit()
+    }
+
+    /// AOT artifact names this shard invokes. Tiled mode uses the tile
+    /// programs + attention core; serial mode uses the fused shard
+    /// programs. Empty-shard devices need only their connective.
+    pub fn artifact_names(&self, tiles: &[usize], flavor: &str, tiled: bool) -> Vec<String> {
+        let mut names = Vec::new();
+        if self.k_heads > 0 {
+            if tiled {
+                names.push(format!("attn_core_k{}__{flavor}", self.k_heads));
+                for &t in tiles {
+                    names.push(format!("qkv_tile_t{t}_k{}__{flavor}", self.k_heads));
+                    names.push(format!("out_proj_tile_t{t}_k{}__{flavor}", self.k_heads));
+                }
+            } else {
+                names.push(format!("mha_shard_k{}__{flavor}", self.k_heads));
+            }
+        }
+        if self.u_units > 0 {
+            if tiled {
+                for &t in tiles {
+                    names.push(format!("mlp_gemm1_tile_t{t}_u{}__{flavor}", self.u_units));
+                    names.push(format!("mlp_gemm2_tile_t{t}_u{}__{flavor}", self.u_units));
+                }
+            } else {
+                names.push(format!("mlp_shard_u{}__{flavor}", self.u_units));
+            }
+        }
+        if self.seq_rows > 0 {
+            names.push(format!("connective_t{}__{flavor}", self.seq_rows));
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+/// The full static schedule of one HMP layer across the cluster.
+#[derive(Clone, Debug)]
+pub struct LayerSchedule {
+    pub shards: Vec<ShardSpec>,
+    /// Ring-tile row counts, indexed by ring slot = SP partition.
+    pub tiles: Vec<usize>,
+}
+
+impl LayerSchedule {
+    /// Derive the schedule from a plan (identical for every layer — HMP
+    /// partitions each layer the same way, paper §III-C).
+    pub fn from_plan(plan: &Plan) -> Self {
+        let p = &plan.partition;
+        let d = p.n_devices();
+        let shards = (0..d)
+            .map(|i| ShardSpec {
+                device: i,
+                k_heads: p.heads[i],
+                head_offset: p.head_offset(i),
+                u_units: p.mlp_units[i],
+                unit_offset: p.mlp_offset(i),
+                seq_rows: p.seq[i],
+                seq_offset: p.seq_offset(i),
+            })
+            .collect();
+        LayerSchedule { shards, tiles: p.seq.clone() }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Union of artifact names needed cluster-wide.
+    pub fn all_artifacts(&self, flavor: &str, tiled: bool) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.artifact_names(&self.tiles, flavor, tiled))
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::planner::{Partition, Plan};
+
+    fn plan(heads: Vec<usize>, units: Vec<usize>, seq: Vec<usize>) -> Plan {
+        Plan {
+            partition: Partition { heads, mlp_units: units, seq },
+            pred_mha_s: 0.0,
+            pred_mlp_s: 0.0,
+            pred_conn_s: 0.0,
+            mem_mb: vec![],
+        }
+    }
+
+    #[test]
+    fn shard_offsets_cover_model() {
+        let p = plan(vec![5, 4, 3], vec![6, 3, 3], vec![20, 20, 20]);
+        let s = LayerSchedule::from_plan(&p);
+        assert_eq!(s.shards[0].head_offset, 0);
+        assert_eq!(s.shards[1].head_offset, 5);
+        assert_eq!(s.shards[2].head_offset, 9);
+        assert_eq!(s.shards[2].unit_offset, 9);
+        assert_eq!(s.shards[2].seq_offset, 40);
+    }
+
+    #[test]
+    fn artifact_names_for_shard() {
+        let m = ModelConfig::galaxy_mini();
+        let spec = ShardSpec {
+            device: 0,
+            k_heads: 6,
+            head_offset: 0,
+            u_units: 6,
+            unit_offset: 0,
+            seq_rows: 30,
+            seq_offset: 0,
+        };
+        let names = spec.artifact_names(&[30, 30], "xla", true);
+        assert!(names.contains(&"attn_core_k6__xla".to_string()));
+        assert!(names.contains(&"qkv_tile_t30_k6__xla".to_string()));
+        assert!(names.contains(&"mlp_gemm1_tile_t30_u6__xla".to_string()));
+        assert!(names.contains(&"connective_t30__xla".to_string()));
+        let fused = spec.artifact_names(&[30, 30], "pallas", false);
+        assert!(fused.contains(&"mha_shard_k6__pallas".to_string()));
+        assert!(fused.contains(&"mlp_shard_u6__pallas".to_string()));
+        assert!(!fused.iter().any(|n| n.contains("tile")));
+        assert_eq!(spec.qkv_width(&m), 576);
+        assert_eq!(spec.mlp_width(&m), 768);
+    }
+
+    #[test]
+    fn zero_shard_needs_only_connective() {
+        let spec = ShardSpec {
+            device: 1,
+            k_heads: 0,
+            head_offset: 12,
+            u_units: 0,
+            unit_offset: 12,
+            seq_rows: 30,
+            seq_offset: 30,
+        };
+        let names = spec.artifact_names(&[30, 30], "xla", true);
+        assert_eq!(names, vec!["connective_t30__xla".to_string()]);
+    }
+
+    #[test]
+    fn all_artifacts_dedup_across_devices() {
+        let p = plan(vec![6, 6], vec![6, 6], vec![30, 30]);
+        let s = LayerSchedule::from_plan(&p);
+        let names = s.all_artifacts("xla", true);
+        let uniq: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(names.len(), uniq.len());
+        // both devices share identical shard sizes => single set
+        assert!(names.iter().any(|n| n == "attn_core_k6__xla"));
+    }
+}

@@ -1,0 +1,251 @@
+//! The paper's "straw-man" planner (§III-C.2): exhaustive search over all
+//! partition combinations, selecting the latency-optimal one that
+//! satisfies the memory constraints.
+//!
+//! The paper rejects this for its exponential complexity; we implement it
+//! anyway as (a) the optimality oracle that Algorithm 1 is tested against
+//! (property: the heuristic's objective is within a few percent of optimal
+//! on every feasible case we can enumerate), and (b) the
+//! `ablation_planner` upper bound.
+//!
+//! Eq. 5's objective is separable — Σ of three independent straggler
+//! terms — but the memory constraint couples `A` and `B` per device. We
+//! exploit the structure: enumerate MHA compositions, and for each,
+//! enumerate MLP compositions only over the *residual* per-device memory,
+//! pruning dominated branches. Still exponential in D (compositions of H
+//! into D parts), fine for the paper's D <= 4.
+
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::profiler::Profile;
+use crate::sim::EdgeEnv;
+
+use super::{equal_seq_partition, Partition, Plan};
+
+/// All compositions of `total` into `n` non-negative parts.
+fn compositions(total: usize, n: usize) -> Vec<Vec<usize>> {
+    fn rec(total: usize, n: usize, prefix: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if n == 1 {
+            prefix.push(total);
+            out.push(prefix.clone());
+            prefix.pop();
+            return;
+        }
+        for first in 0..=total {
+            prefix.push(first);
+            rec(total - first, n - 1, prefix, out);
+            prefix.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(total, n, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Exhaustively optimal plan under paper Eq. 5, or `PlanInfeasible`.
+pub fn exhaustive_plan(model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan> {
+    let d = env.len();
+    let h = model.heads;
+    let l = profile.layers as f64;
+    let mha_unit_mb = l * profile.mha_bytes as f64 / h as f64 / 1.0e6;
+    let mlp_unit_mb = l * profile.mlp_bytes as f64 / h as f64 / 1.0e6;
+
+    let comps = compositions(h, d);
+    // Straggler latency of one composition under a per-shard cost table.
+    let straggler = |c: &[usize], cost: &dyn Fn(usize, usize) -> f64| -> f64 {
+        c.iter().enumerate().map(|(i, &u)| cost(i, u)).fold(0.0, f64::max)
+    };
+
+    // Pre-sort MLP compositions by their (memory-free) straggler so the
+    // inner loop can stop at the first feasible one.
+    let mut mlp_sorted: Vec<(f64, &Vec<usize>)> = comps
+        .iter()
+        .map(|c| (straggler(c, &|i, u| profile.mlp_time(i, u)), c))
+        .collect();
+    mlp_sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
+    for a in &comps {
+        let t_mha = straggler(a, &|i, u| profile.mha_time(i, u));
+        if let Some((obj, _, _)) = &best {
+            if t_mha >= *obj {
+                continue; // cannot beat the incumbent even with free MLP
+            }
+        }
+        // Residual memory for MLP units per device.
+        let residual: Vec<f64> = env
+            .devices
+            .iter()
+            .zip(a.iter())
+            .map(|(dev, &ad)| dev.budget_mb - ad as f64 * mha_unit_mb)
+            .collect();
+        if residual.iter().any(|r| *r < 0.0) {
+            continue; // MHA shard alone busts a budget
+        }
+        // First (fastest) feasible MLP composition.
+        for (t_mlp, b) in &mlp_sorted {
+            if let Some((obj, _, _)) = &best {
+                if t_mha + t_mlp >= *obj {
+                    break; // sorted: nothing below can win
+                }
+            }
+            let fits = b
+                .iter()
+                .zip(residual.iter())
+                .all(|(&bd, &r)| bd as f64 * mlp_unit_mb <= r + 1e-9);
+            if fits {
+                let obj = t_mha + t_mlp;
+                if best.as_ref().map_or(true, |(o, _, _)| obj < *o) {
+                    best = Some((obj, a.clone(), (*b).clone()));
+                }
+                break;
+            }
+        }
+    }
+
+    let (_, heads, mlp_units) = best.ok_or_else(|| {
+        GalaxyError::PlanInfeasible("exhaustive search found no feasible partition".into())
+    })?;
+    let seq = equal_seq_partition(profile.seq, d);
+    let pred_mha_s = straggler(&heads, &|i, u| profile.mha_time(i, u));
+    let pred_mlp_s = straggler(&mlp_units, &|i, u| profile.mlp_time(i, u));
+    let pred_conn_s = seq
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| profile.conn_time(i, r))
+        .fold(0.0, f64::max);
+    let mem_mb = heads
+        .iter()
+        .zip(mlp_units.iter())
+        .map(|(&a, &b)| a as f64 * mha_unit_mb + b as f64 * mlp_unit_mb)
+        .collect();
+    Ok(Plan {
+        partition: Partition { heads, mlp_units, seq },
+        pred_mha_s,
+        pred_mlp_s,
+        pred_conn_s,
+        mem_mb,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelKind};
+    use crate::planner::Planner;
+    use crate::profiler::Profiler;
+    use crate::sim::{DeviceClass, DeviceSpec, EdgeEnv};
+    use crate::testkit::{forall, Pcg64};
+
+    #[test]
+    fn compositions_count_and_sum() {
+        // C(total + n - 1, n - 1) compositions, each summing to total.
+        let cs = compositions(5, 3);
+        assert_eq!(cs.len(), 21);
+        assert!(cs.iter().all(|c| c.iter().sum::<usize>() == 5));
+    }
+
+    #[test]
+    fn optimal_matches_heuristic_on_homogeneous() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let opt = exhaustive_plan(&model, &env, &profile).unwrap();
+        let heur = Planner::new(&model, &env, &profile).plan().unwrap();
+        // Equal splits are optimal on homogeneous clusters.
+        assert_eq!(opt.pred_mha_s, heur.pred_mha_s);
+        assert_eq!(opt.pred_mlp_s, heur.pred_mlp_s);
+    }
+
+    #[test]
+    fn heuristic_near_optimal_heterogeneous() {
+        // Algorithm 1 vs the straw-man on the paper's hetero envs: within
+        // 10% on the Eq. 5 objective.
+        for env in [EdgeEnv::preset_d(), EdgeEnv::preset_e(), EdgeEnv::preset_f()] {
+            for kind in [ModelKind::BertLarge, ModelKind::Gpt2Large] {
+                let model = ModelConfig::by_kind(kind);
+                let profile = Profiler::analytic(&model, &env, 284).profile();
+                let (Ok(opt), Ok(heur)) = (
+                    exhaustive_plan(&model, &env, &profile),
+                    Planner::new(&model, &env, &profile).plan(),
+                ) else {
+                    continue;
+                };
+                let o = opt.pred_mha_s + opt.pred_mlp_s;
+                let g = heur.pred_mha_s + heur.pred_mlp_s;
+                assert!(
+                    g <= o * 1.10 + 1e-9,
+                    "{} env {}: heuristic {g:.4} vs optimal {o:.4}",
+                    model.kind.name(),
+                    env.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_matches_heuristic_failure() {
+        let model = ModelConfig::opt_xl();
+        let env = EdgeEnv::preset_a();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        assert!(exhaustive_plan(&model, &env, &profile).is_err());
+        assert!(Planner::new(&model, &env, &profile).plan().is_err());
+    }
+
+    #[test]
+    fn prop_heuristic_never_far_from_optimal() {
+        // Bound 25%: with only 12 integer head-units over strongly skewed
+        // capacities, largest-remainder quantization can sit a few units
+        // from the integer optimum. The paper's own envs stay within 10%
+        // (see `heuristic_near_optimal_heterogeneous`).
+        forall(
+            "Algorithm-1 within 25% of straw-man optimum",
+            211,
+            25,
+            |rng: &mut Pcg64| {
+                let d = rng.range(2, 3) as usize;
+                let classes = [DeviceClass::NanoS, DeviceClass::NanoM, DeviceClass::NanoL];
+                let env = EdgeEnv {
+                    name: "r".into(),
+                    devices: (0..d)
+                        .map(|i| {
+                            DeviceSpec::with_budget(
+                                i,
+                                *rng.choose(&classes),
+                                rng.range(400, 1600) as f64,
+                            )
+                        })
+                        .collect(),
+                };
+                let model = ModelConfig::by_kind(*rng.choose(&[
+                    ModelKind::DistilBert,
+                    ModelKind::BertLarge,
+                ]));
+                (model, env, rng.range(32, 384) as usize)
+            },
+            |(model, env, seq)| {
+                let profile = Profiler::analytic(model, env, *seq).profile();
+                match (
+                    exhaustive_plan(model, env, &profile),
+                    Planner::new(model, env, &profile).plan(),
+                ) {
+                    (Err(_), Err(_)) => Ok(()),
+                    (Ok(opt), Ok(heur)) => {
+                        let o = opt.pred_mha_s + opt.pred_mlp_s;
+                        let g = heur.pred_mha_s + heur.pred_mlp_s;
+                        if g <= o * 1.25 + 1e-9 {
+                            Ok(())
+                        } else {
+                            Err(format!("heuristic {g} vs optimal {o}"))
+                        }
+                    }
+                    (Ok(_), Err(e)) => Err(format!("heuristic failed on feasible case: {e}")),
+                    // The heuristic can occasionally place what the
+                    // sorted exhaustive search proves infeasible? No —
+                    // both honour the same constraint; flag it.
+                    (Err(e), Ok(_)) => Err(format!("exhaustive failed but heuristic ok: {e}")),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,457 @@
+//! Heterogeneity and memory-aware workload planning (paper §III-C,
+//! Algorithm 1).
+//!
+//! The planner decides, per device: how many attention *heads* of each MHA
+//! block (`A`), how many *column units* of each MLP block (`B`), and how
+//! many sequence rows of each connective block (`S`) it executes.
+//!
+//! Faithful to the paper's two-step heuristic:
+//!  1. `BalancedPartition` — distribute workload proportional to each
+//!     device's computing capacity `V_d` (Eq. 6), ignoring memory.
+//!  2. `MemoryAwareBalancing` — shift overflowing units away from devices
+//!     that exceed their budget, proportional to the free devices'
+//!     capacities; recurse with the overflowed device frozen. MLP first
+//!     (finer granularity), then MHA (lines 21-22); fail if OOM persists
+//!     (lines 23-24).
+//!
+//! Connective blocks use equal partition (§III-C.2): their cost is
+//! memory-bandwidth-bound, and equal split keeps ring-chunk sizes uniform
+//! for the tile-based overlap.
+
+pub mod exhaustive;
+
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::profiler::Profile;
+use crate::sim::EdgeEnv;
+
+/// Per-device partition of one Transformer layer's workload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// `A`: attention heads per device (sums to model.heads).
+    pub heads: Vec<usize>,
+    /// `B`: MLP column units per device (sums to model.heads — one unit is
+    /// `ffn/heads` columns; DESIGN.md §3).
+    pub mlp_units: Vec<usize>,
+    /// `S`: sequence rows per device (sums to seq).
+    pub seq: Vec<usize>,
+}
+
+impl Partition {
+    pub fn n_devices(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Head offset (in heads) of device `d`'s MHA shard.
+    pub fn head_offset(&self, d: usize) -> usize {
+        self.heads[..d].iter().sum()
+    }
+
+    /// Unit offset of device `d`'s MLP shard.
+    pub fn mlp_offset(&self, d: usize) -> usize {
+        self.mlp_units[..d].iter().sum()
+    }
+
+    /// Row offset of device `d`'s sequence shard.
+    pub fn seq_offset(&self, d: usize) -> usize {
+        self.seq[..d].iter().sum()
+    }
+}
+
+/// A complete plan: the partition plus predicted per-device facts.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub partition: Partition,
+    /// Predicted per-layer straggler times (Eq. 4), seconds.
+    pub pred_mha_s: f64,
+    pub pred_mlp_s: f64,
+    pub pred_conn_s: f64,
+    /// Per-device model-weight memory requirement, MB (Eq. 5 LHS).
+    pub mem_mb: Vec<f64>,
+}
+
+impl Plan {
+    /// Predicted compute-only layer latency (no synchronization), Eq. 5
+    /// objective value.
+    pub fn pred_layer_compute_s(&self) -> f64 {
+        // Two connective blocks per layer (post-MHA and post-MLP).
+        self.pred_mha_s + self.pred_mlp_s + 2.0 * self.pred_conn_s
+    }
+}
+
+/// Equal sequence partition with the remainder spread over the first
+/// devices (paper §III-C.2).
+pub fn equal_seq_partition(seq: usize, n: usize) -> Vec<usize> {
+    let base = seq / n;
+    let rem = seq % n;
+    (0..n).map(|d| base + usize::from(d < rem)).collect()
+}
+
+/// Largest-remainder quantization of continuous shares into integer unit
+/// counts summing to `total`.
+pub fn quantize_shares(shares: &[f64], total: usize) -> Vec<usize> {
+    let raw: Vec<f64> = shares.iter().map(|s| s * total as f64).collect();
+    let mut units: Vec<usize> = raw.iter().map(|r| r.floor() as usize).collect();
+    let assigned: usize = units.iter().sum();
+    // Hand out the remaining units by descending fractional part.
+    let mut order: Vec<usize> = (0..shares.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - raw[a].floor();
+        let fb = raw[b] - raw[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for i in 0..total.saturating_sub(assigned) {
+        units[order[i % order.len()]] += 1;
+    }
+    units
+}
+
+/// Which block a `MemoryAwareBalancing` pass is adjusting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockKind {
+    Mha,
+    Mlp,
+}
+
+/// The workload planner (paper Algorithm 1).
+pub struct Planner<'a> {
+    model: &'a ModelConfig,
+    env: &'a EdgeEnv,
+    profile: &'a Profile,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(model: &'a ModelConfig, env: &'a EdgeEnv, profile: &'a Profile) -> Self {
+        assert_eq!(env.len(), profile.n_devices(), "profile/env device count");
+        Self { model, env, profile }
+    }
+
+    /// Run Algorithm 1 and return a [`Plan`], or
+    /// [`GalaxyError::PlanInfeasible`] when the cluster cannot host the
+    /// model (lines 23-24).
+    pub fn plan(&self) -> Result<Plan> {
+        let d = self.env.len();
+        let total_units = self.model.heads;
+        let shares = self.profile.capacity_shares();
+
+        // ---- Step 1: BalancedPartition (lines 1-8) ----------------------
+        let mut a = quantize_shares(&shares, total_units);
+        let mut b = quantize_shares(&shares, total_units);
+
+        // ---- Step 2: MemoryAwareBalancing (lines 9-22) ------------------
+        // MLP first (finer granularity), then MHA.
+        self.memory_aware_balancing(BlockKind::Mlp, &mut b, &a)?;
+        self.memory_aware_balancing(BlockKind::Mha, &mut a, &b)?;
+
+        // Final feasibility check (lines 23-24).
+        let mem = self.mem_per_device(&a, &b);
+        for (dev, &need) in self.env.devices.iter().zip(mem.iter()) {
+            if need > dev.budget_mb {
+                return Err(GalaxyError::PlanInfeasible(format!(
+                    "device {} needs {:.0} MB > budget {:.0} MB even after balancing",
+                    dev.id, need, dev.budget_mb
+                )));
+            }
+        }
+
+        let seq = equal_seq_partition(self.profile.seq, d);
+        let partition = Partition { heads: a, mlp_units: b, seq };
+
+        // Predicted straggler latencies (Eq. 4).
+        let pred_mha_s = (0..d)
+            .map(|i| self.profile.mha_time(i, partition.heads[i]))
+            .fold(0.0, f64::max);
+        let pred_mlp_s = (0..d)
+            .map(|i| self.profile.mlp_time(i, partition.mlp_units[i]))
+            .fold(0.0, f64::max);
+        let pred_conn_s = (0..d)
+            .map(|i| self.profile.conn_time(i, partition.seq[i]))
+            .fold(0.0, f64::max);
+
+        let mem_mb = self.mem_per_device(&partition.heads, &partition.mlp_units);
+        Ok(Plan { partition, pred_mha_s, pred_mlp_s, pred_conn_s, mem_mb })
+    }
+
+    /// Eq. 5 LHS per device: l * (M_att * a_d/ΣA + M_mlp * b_d/ΣB), in MB.
+    fn mem_per_device(&self, a: &[usize], b: &[usize]) -> Vec<f64> {
+        let total = self.model.heads as f64;
+        let l = self.profile.layers as f64;
+        a.iter()
+            .zip(b.iter())
+            .map(|(&ad, &bd)| {
+                l * (self.profile.mha_bytes as f64 * ad as f64 / total
+                    + self.profile.mlp_bytes as f64 * bd as f64 / total)
+                    / 1.0e6
+            })
+            .collect()
+    }
+
+    /// Bytes of model weights one unit of `kind` costs a device across all
+    /// layers, in MB.
+    fn unit_mb(&self, kind: BlockKind) -> f64 {
+        let total = self.model.heads as f64;
+        let l = self.profile.layers as f64;
+        match kind {
+            BlockKind::Mha => l * self.profile.mha_bytes as f64 / total / 1.0e6,
+            BlockKind::Mlp => l * self.profile.mlp_bytes as f64 / total / 1.0e6,
+        }
+    }
+
+    /// MB of budget left on device `d` for `kind`-units, given the *other*
+    /// block's current allocation.
+    fn budget_for(&self, d: usize, kind: BlockKind, other_units: &[usize]) -> f64 {
+        let other_kind = match kind {
+            BlockKind::Mha => BlockKind::Mlp,
+            BlockKind::Mlp => BlockKind::Mha,
+        };
+        self.env.devices[d].budget_mb - other_units[d] as f64 * self.unit_mb(other_kind)
+    }
+
+    /// Paper Algorithm 1, `MemoryAwareBalancing` (lines 9-19), iterative
+    /// form of the paper's tail recursion. `units` is the block's current
+    /// partition `C`; `other` the already-fixed other block's partition.
+    fn memory_aware_balancing(
+        &self,
+        kind: BlockKind,
+        units: &mut [usize],
+        other: &[usize],
+    ) -> Result<()> {
+        let unit_mb = self.unit_mb(kind);
+        let shares = self.profile.capacity_shares();
+        // `live`: devices still eligible to receive shifted workload (the
+        // algorithm's device list L; OOM devices are removed as processed).
+        let mut live: Vec<bool> = vec![true; units.len()];
+
+        loop {
+            // Max units each device can hold within its remaining budget.
+            let cap: Vec<usize> = (0..units.len())
+                .map(|d| (self.budget_for(d, kind, other) / unit_mb).floor().max(0.0) as usize)
+                .collect();
+            let oom: Vec<usize> = (0..units.len())
+                .filter(|&d| live[d] && units[d] > cap[d])
+                .collect();
+            if oom.is_empty() {
+                return Ok(());
+            }
+            // Process one OOM device per round (paper recurses per device).
+            let o = oom[0];
+            let overflow = units[o] - cap[o];
+            units[o] = cap[o];
+            live[o] = false;
+
+            let free: Vec<usize> = (0..units.len())
+                .filter(|&d| live[d] && units[d] < cap[d])
+                .collect();
+            if free.is_empty() {
+                return Err(GalaxyError::PlanInfeasible(format!(
+                    "{kind:?}: {overflow} unit(s) overflow device {o} and no device has spare memory"
+                )));
+            }
+            // Shift proportional to free devices' capacities (line 17),
+            // clamped by their remaining room; leftovers spill round-robin.
+            let free_share_sum: f64 = free.iter().map(|&f| shares[f]).sum();
+            let mut remaining = overflow;
+            for &f in &free {
+                let want =
+                    ((shares[f] / free_share_sum) * overflow as f64).round() as usize;
+                let take = want.min(cap[f] - units[f]).min(remaining);
+                units[f] += take;
+                remaining -= take;
+            }
+            // Greedy spill of rounding leftovers into any remaining room.
+            while remaining > 0 {
+                match free.iter().find(|&&f| units[f] < cap[f]) {
+                    Some(&f) => {
+                        units[f] += 1;
+                        remaining -= 1;
+                    }
+                    None => {
+                        return Err(GalaxyError::PlanInfeasible(format!(
+                            "{kind:?}: {remaining} unit(s) cannot be placed within any budget"
+                        )))
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::profiler::Profiler;
+    use crate::sim::{DeviceClass, DeviceSpec, EdgeEnv};
+
+    fn plan_for(model: ModelConfig, env: &EdgeEnv, seq: usize) -> Result<Plan> {
+        let profile = Profiler::analytic(&model, env, seq).profile();
+        Planner::new(&model, env, &profile).plan()
+    }
+
+    #[test]
+    fn equal_seq_partition_sums_and_balance() {
+        assert_eq!(equal_seq_partition(60, 4), vec![15, 15, 15, 15]);
+        assert_eq!(equal_seq_partition(10, 3), vec![4, 3, 3]);
+        let p = equal_seq_partition(284, 3);
+        assert_eq!(p.iter().sum::<usize>(), 284);
+        assert!(p.iter().max().unwrap() - p.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn quantize_preserves_total() {
+        let u = quantize_shares(&[0.5, 0.3, 0.2], 16);
+        assert_eq!(u.iter().sum::<usize>(), 16);
+        assert_eq!(u, vec![8, 5, 3]);
+    }
+
+    #[test]
+    fn quantize_handles_tiny_shares() {
+        let u = quantize_shares(&[0.98, 0.01, 0.01], 12);
+        assert_eq!(u.iter().sum::<usize>(), 12);
+        assert!(u[0] >= 11);
+    }
+
+    #[test]
+    fn homogeneous_plan_is_balanced() {
+        let env = EdgeEnv::preset_c(); // 4 x Nano-M
+        let plan = plan_for(ModelConfig::bert_large(), &env, 284).unwrap();
+        assert_eq!(plan.partition.heads, vec![4, 4, 4, 4]);
+        assert_eq!(plan.partition.mlp_units, vec![4, 4, 4, 4]);
+        assert_eq!(plan.partition.seq, vec![71, 71, 71, 71]);
+    }
+
+    #[test]
+    fn heterogeneous_plan_tracks_capacity() {
+        let env = EdgeEnv::preset_f(); // L + M + S
+        let plan = plan_for(ModelConfig::bert_large(), &env, 284).unwrap();
+        let h = &plan.partition.heads;
+        assert_eq!(h.iter().sum::<usize>(), 16);
+        assert!(h[0] > h[1] && h[1] > h[2], "heads {h:?} should follow L>M>S");
+        // SP stays equal regardless of capacity (paper §III-C.2)
+        let s = &plan.partition.seq;
+        assert!(s.iter().max().unwrap() - s.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn plan_respects_memory_budgets() {
+        // OPT-XL across env C: per-device share must fit 1.5 GB though the
+        // balanced share of the 5 GB model would not fit a single device.
+        let env = EdgeEnv::preset_c();
+        let plan = plan_for(ModelConfig::opt_xl(), &env, 284).unwrap();
+        for (dev, mem) in env.devices.iter().zip(plan.mem_mb.iter()) {
+            assert!(mem <= &dev.budget_mb, "dev {} mem {mem:.0}MB", dev.id);
+        }
+    }
+
+    #[test]
+    fn memory_shifts_load_off_small_device() {
+        // Env E: Nano-L (1.5GB) + Nano-S (0.7GB) on OPT-L (~2.4GB layers).
+        // Balanced-by-capacity would give S ~22% ≈ 0.53GB; that fits, but
+        // GPT2-L on a 3x(Nano-M@0.5GB) cluster must shift.
+        let mut env = EdgeEnv::preset_b();
+        for d in &mut env.devices {
+            d.budget_mb = 500.0;
+        }
+        let model = ModelConfig::gpt2_large(); // ~1.42GB layer weights
+        let plan = plan_for(model, &env, 284).unwrap();
+        for (dev, mem) in env.devices.iter().zip(plan.mem_mb.iter()) {
+            assert!(mem <= &dev.budget_mb);
+        }
+        // Aggregate check: everything still placed.
+        assert_eq!(plan.partition.heads.iter().sum::<usize>(), 20);
+        assert_eq!(plan.partition.mlp_units.iter().sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn infeasible_model_fails_cleanly() {
+        // OPT-XL (~5GB) into 2 x 1.5GB = 3GB aggregate: must fail (matches
+        // paper Table IV "OOM" for OPT-XL on env A).
+        let env = EdgeEnv::preset_a();
+        let err = plan_for(ModelConfig::opt_xl(), &env, 284).unwrap_err();
+        assert!(matches!(err, GalaxyError::PlanInfeasible(_)), "{err}");
+    }
+
+    #[test]
+    fn single_device_plan_degenerates_to_local() {
+        let env = EdgeEnv::new("solo", &[DeviceClass::NanoM]);
+        let plan = plan_for(ModelConfig::distilbert(), &env, 128).unwrap();
+        assert_eq!(plan.partition.heads, vec![12]);
+        assert_eq!(plan.partition.mlp_units, vec![12]);
+        assert_eq!(plan.partition.seq, vec![128]);
+    }
+
+    #[test]
+    fn offsets_are_prefix_sums() {
+        let p = Partition {
+            heads: vec![5, 4, 3],
+            mlp_units: vec![2, 6, 4],
+            seq: vec![20, 20, 20],
+        };
+        assert_eq!(p.head_offset(0), 0);
+        assert_eq!(p.head_offset(2), 9);
+        assert_eq!(p.mlp_offset(2), 8);
+        assert_eq!(p.seq_offset(1), 20);
+    }
+
+    #[test]
+    fn zero_budget_device_gets_zero_units() {
+        let mut env = EdgeEnv::preset_b();
+        env.devices[2].budget_mb = 0.0;
+        let plan = plan_for(ModelConfig::bert_large(), &env, 284).unwrap();
+        assert_eq!(plan.partition.heads[2], 0);
+        assert_eq!(plan.partition.mlp_units[2], 0);
+        assert_eq!(plan.partition.heads.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn predicted_times_are_straggler_maxima() {
+        let env = EdgeEnv::preset_f();
+        let model = ModelConfig::bert_large();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let plan = Planner::new(&model, &env, &profile).plan().unwrap();
+        let direct = (0..3)
+            .map(|d| profile.mha_time(d, plan.partition.heads[d]))
+            .fold(0.0, f64::max);
+        assert!((plan.pred_mha_s - direct).abs() < 1e-15);
+    }
+
+    #[test]
+    fn heterogeneity_awareness_beats_equal_split() {
+        // The planner's predicted straggler must be no worse than a naive
+        // equal split's straggler in a heterogeneous env.
+        let env = EdgeEnv::preset_f();
+        let model = ModelConfig::gpt2_large();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let plan = Planner::new(&model, &env, &profile).plan().unwrap();
+        let naive = quantize_shares(&[1.0 / 3.0; 3], model.heads);
+        let naive_straggler = (0..3)
+            .map(|d| profile.mha_time(d, naive[d]))
+            .fold(0.0, f64::max);
+        assert!(
+            plan.pred_mha_s <= naive_straggler + 1e-12,
+            "planned {} vs naive {naive_straggler}",
+            plan.pred_mha_s
+        );
+    }
+
+    #[test]
+    fn budget_tightening_monotonically_moves_units() {
+        // As device 1's budget shrinks, its unit count must not increase.
+        let model = ModelConfig::gpt2_large();
+        let mut prev_units = usize::MAX;
+        for budget in [1500.0, 1000.0, 700.0, 500.0, 300.0] {
+            let env = EdgeEnv {
+                name: "t".into(),
+                devices: vec![
+                    DeviceSpec::with_budget(0, DeviceClass::NanoM, 1500.0),
+                    DeviceSpec::with_budget(1, DeviceClass::NanoM, budget),
+                    DeviceSpec::with_budget(2, DeviceClass::NanoM, 1500.0),
+                ],
+            };
+            let plan = plan_for(model.clone(), &env, 284).unwrap();
+            let units = plan.partition.heads[1] + plan.partition.mlp_units[1];
+            assert!(units <= prev_units, "budget {budget}: {units} > {prev_units}");
+            prev_units = units;
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Galaxy Profiler (paper §III-A step 1, §III-C.1).
+//!
+//! Runs a calibration inference per (block, partition, device) and records
+//! the latency tables `L(MHA, a, d)`, `L(MLP, b, d)`, `L(CON, s, d)` the
+//! planner consumes, plus the model memory facts (`M_att`, `M_mlp`).
+//!
+//! Two sources, one [`Profile`] format:
+//! * [`Profiler::analytic`] — evaluates the calibrated device cost model
+//!   (`sim::device`); instant, used for the paper-scale experiments.
+//! * [`Profiler::measured`] — fills the same tables from caller-supplied
+//!   per-shard measurements (the real PJRT path measures its artifacts and
+//!   hands them in; keeps this module free of runtime deps).
+
+pub mod real;
+
+use crate::model::ModelConfig;
+use crate::sim::{DeviceSpec, EdgeEnv};
+
+/// Profiled latency tables for one (model, env, seq) triple.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// `mha[d][k]` seconds for a k-head MHA shard on device d; k in 0..=H.
+    pub mha: Vec<Vec<f64>>,
+    /// `mlp[d][u]` seconds for a u-unit MLP shard on device d; u in 0..=H.
+    pub mlp: Vec<Vec<f64>>,
+    /// Connective cost model per device: seconds = base + per_row * rows.
+    pub conn: Vec<(f64, f64)>,
+    /// Sequence length the tables were profiled at.
+    pub seq: usize,
+    /// Model memory facts (bytes) recorded alongside (paper Eq. 5 inputs).
+    pub mha_bytes: usize,
+    pub mlp_bytes: usize,
+    pub layers: usize,
+}
+
+impl Profile {
+    /// `L(MHA, k, d)` with clamping for out-of-table shards.
+    pub fn mha_time(&self, d: usize, k_heads: usize) -> f64 {
+        self.mha[d][k_heads.min(self.mha[d].len() - 1)]
+    }
+
+    pub fn mlp_time(&self, d: usize, u_units: usize) -> f64 {
+        self.mlp[d][u_units.min(self.mlp[d].len() - 1)]
+    }
+
+    pub fn conn_time(&self, d: usize, rows: usize) -> f64 {
+        if rows == 0 {
+            return 0.0;
+        }
+        let (base, per_row) = self.conn[d];
+        base + per_row * rows as f64
+    }
+
+    /// Device computing capacity `V_d` (paper Eq. 6): inverse of the time
+    /// to execute one full MHA + one full MLP block.
+    pub fn capacity(&self, d: usize) -> f64 {
+        let h = self.mha[d].len() - 1;
+        let u = self.mlp[d].len() - 1;
+        1.0 / (self.mha[d][h] + self.mlp[d][u])
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.mha.len()
+    }
+
+    /// All capacities, normalized to sum 1 (convenient for partitioning).
+    pub fn capacity_shares(&self) -> Vec<f64> {
+        let caps: Vec<f64> = (0..self.n_devices()).map(|d| self.capacity(d)).collect();
+        let sum: f64 = caps.iter().sum();
+        caps.into_iter().map(|c| c / sum).collect()
+    }
+}
+
+/// Builder for [`Profile`].
+pub struct Profiler<'a> {
+    model: &'a ModelConfig,
+    env: &'a EdgeEnv,
+    seq: usize,
+}
+
+impl<'a> Profiler<'a> {
+    /// Profile through the calibrated analytic device model.
+    pub fn analytic(model: &'a ModelConfig, env: &'a EdgeEnv, seq: usize) -> Self {
+        Self { model, env, seq }
+    }
+
+    /// Evaluate the tables (the "calibration inference" over every
+    /// partition configuration, paper §III-C.1).
+    pub fn profile(&self) -> Profile {
+        let h = self.model.heads;
+        let mha = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| (0..=h).map(|k| dev.mha_time(self.model, self.seq, k)).collect())
+            .collect();
+        let mlp = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| (0..=h).map(|u| dev.mlp_time(self.model, self.seq, u)).collect())
+            .collect();
+        let conn = self.env.devices.iter().map(|dev| Self::fit_conn(dev, self.model)).collect();
+        Profile {
+            mha,
+            mlp,
+            conn,
+            seq: self.seq,
+            mha_bytes: self.model.mha_bytes(),
+            mlp_bytes: self.model.mlp_bytes(),
+            layers: self.model.layers,
+        }
+    }
+
+    /// Fit the linear connective model from two evaluation points.
+    fn fit_conn(dev: &DeviceSpec, model: &ModelConfig) -> (f64, f64) {
+        let t1 = dev.connective_time(model, 1);
+        let t100 = dev.connective_time(model, 100);
+        let per_row = (t100 - t1) / 99.0;
+        (t1 - per_row, per_row)
+    }
+}
+
+/// Build a [`Profile`] from caller-supplied measurements (real PJRT path).
+///
+/// `mha`/`mlp`: per device, per shard size 0..=H in seconds; `conn`:
+/// (base, per_row) per device.
+pub fn measured_profile(
+    model: &ModelConfig,
+    mha: Vec<Vec<f64>>,
+    mlp: Vec<Vec<f64>>,
+    conn: Vec<(f64, f64)>,
+    seq: usize,
+) -> Profile {
+    assert_eq!(mha.len(), mlp.len());
+    assert_eq!(mha.len(), conn.len());
+    Profile {
+        mha,
+        mlp,
+        conn,
+        seq,
+        mha_bytes: model.mha_bytes(),
+        mlp_bytes: model.mlp_bytes(),
+        layers: model.layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::sim::EdgeEnv;
+
+    #[test]
+    fn tables_cover_all_shards() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_c();
+        let p = Profiler::analytic(&m, &env, 284).profile();
+        assert_eq!(p.n_devices(), 4);
+        assert_eq!(p.mha[0].len(), m.heads + 1);
+        assert_eq!(p.mlp[0].len(), m.heads + 1);
+        assert_eq!(p.mha_time(0, 0), 0.0);
+    }
+
+    #[test]
+    fn capacity_reflects_heterogeneity() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_f(); // L + M + S
+        let p = Profiler::analytic(&m, &env, 284).profile();
+        let caps: Vec<f64> = (0..3).map(|d| p.capacity(d)).collect();
+        assert!(caps[0] > caps[1] && caps[1] > caps[2], "{caps:?}");
+        // Frequency ratio L:S is 1470:403 ≈ 3.6; GEMM-bound capacity ratio
+        // should land in the same ballpark.
+        let ratio = caps[0] / caps[2];
+        assert!((2.5..=4.5).contains(&ratio), "L/S capacity ratio {ratio}");
+    }
+
+    #[test]
+    fn capacity_shares_sum_to_one() {
+        let m = ModelConfig::gpt2_large();
+        let env = EdgeEnv::preset_f();
+        let p = Profiler::analytic(&m, &env, 128).profile();
+        let s: f64 = p.capacity_shares().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_shares_equal() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_c();
+        let p = Profiler::analytic(&m, &env, 284).profile();
+        for s in p.capacity_shares() {
+            assert!((s - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn conn_linear_model_matches_direct() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_a();
+        let p = Profiler::analytic(&m, &env, 284).profile();
+        let dev = &env.devices[0];
+        for rows in [1usize, 17, 142, 284] {
+            let direct = dev.connective_time(&m, rows);
+            let fitted = p.conn_time(0, rows);
+            assert!((direct - fitted).abs() < 1e-9, "rows {rows}");
+        }
+    }
+
+    #[test]
+    fn measured_profile_roundtrip() {
+        let m = ModelConfig::galaxy_mini();
+        let mha = vec![vec![0.0; 13], vec![0.0; 13]];
+        let mlp = vec![vec![0.0; 13], vec![0.0; 13]];
+        let conn = vec![(0.0, 1e-6), (0.0, 2e-6)];
+        let p = measured_profile(&m, mha, mlp, conn, 60);
+        assert_eq!(p.layers, 6);
+        assert!((p.conn_time(1, 30) - 6e-5).abs() < 1e-12);
+    }
+}

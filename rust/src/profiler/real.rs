@@ -1,0 +1,155 @@
+//! Real-path Galaxy Profiler: measure the AOT artifacts through PJRT.
+//!
+//! This is the paper's actual profiling procedure (§III-A step 1):
+//! execute each block under each partition configuration on the physical
+//! device with calibration inputs, record latencies, and hand the tables
+//! to the planner. On our testbed the "physical device" is the host CPU
+//! running the PJRT executables — useful both to plan real `serve`
+//! deployments by measured (not modeled) cost, and to sanity-check the
+//! analytic model's *orderings* (monotonicity in shard size), which is all
+//! the planner consumes.
+
+use crate::error::Result;
+use crate::model::{ModelConfig, WeightGen};
+use crate::runtime::{literal, Runtime};
+use crate::tensor::Tensor2;
+
+use super::Profile;
+
+/// Measure L(MHA,k), L(MLP,u), L(CON,rows) for one device's runtime.
+pub struct RealProfiler<'a> {
+    rt: &'a Runtime,
+    model: &'a ModelConfig,
+    /// Repetitions per configuration (min is taken — calibration runs on
+    /// an otherwise idle device, so min is the stable statistic).
+    pub reps: usize,
+    pub seed: u64,
+}
+
+impl<'a> RealProfiler<'a> {
+    pub fn new(rt: &'a Runtime, model: &'a ModelConfig) -> Self {
+        Self { rt, model, reps: 3, seed: 7 }
+    }
+
+    fn time_min(&self, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..self.reps {
+            let t0 = std::time::Instant::now();
+            f()?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok(best)
+    }
+
+    /// Produce a measured [`Profile`] for a cluster of `n_devices` copies
+    /// of this runtime's device (homogeneous real path).
+    pub fn profile(&self, n_devices: usize, seq: usize) -> Result<Profile> {
+        let m = self.model;
+        let gen = WeightGen::new(m, self.seed);
+        let p = gen.layer(0);
+        let x = gen.input(0, seq);
+        let x_lit = literal::from_tensor(&x)?;
+        let mask = vec![0.0f32; seq];
+        let mask_lit = literal::from_slice(&mask);
+
+        // MHA table over every head-shard size.
+        let mut mha_row = vec![0.0f64; m.heads + 1];
+        for k in 1..=m.heads {
+            let wqkv = p.shard_wqkv(0, k, m.heads, m.head_dim())?;
+            let wout = p.shard_wout(0, k, m.head_dim())?;
+            let wqkv_lit = literal::from_tensor(&wqkv)?;
+            let wout_lit = literal::from_tensor(&wout)?;
+            let name = format!("mha_shard_k{k}__xla");
+            self.rt.warm_up([name.as_str()])?;
+            mha_row[k] = self.time_min(|| {
+                self.rt
+                    .exec(&name, &[&x_lit, &wqkv_lit, &wout_lit, &mask_lit])
+                    .map(|_| ())
+            })?;
+        }
+
+        // MLP table over every unit-shard size.
+        let unit = m.mlp_unit();
+        let mut mlp_row = vec![0.0f64; m.heads + 1];
+        for u in 1..=m.heads {
+            let w1 = p.shard_w1(0, u * unit)?;
+            let w2 = p.shard_w2(0, u * unit)?;
+            let w1_lit = literal::from_tensor(&w1)?;
+            let w2_lit = literal::from_tensor(&w2)?;
+            let name = format!("mlp_shard_u{u}__xla");
+            self.rt.warm_up([name.as_str()])?;
+            mlp_row[u] = self.time_min(|| {
+                self.rt.exec(&name, &[&x_lit, &w1_lit, &w2_lit]).map(|_| ())
+            })?;
+        }
+
+        // Connective linear fit from the two smallest artifact tiles.
+        let tiles = &self.rt.manifest().seq_tiles;
+        let (t_small, t_large) = (tiles[0], *tiles.last().unwrap());
+        let gamma = literal::from_slice(&p.gamma1);
+        let beta = literal::from_slice(&p.beta1);
+        let measure_conn = |rows: usize| -> Result<f64> {
+            let g = Tensor2::zeros(rows, m.hidden);
+            let r = gen.input(1, rows);
+            let g_lit = literal::from_tensor(&g)?;
+            let r_lit = literal::from_tensor(&r)?;
+            let name = format!("connective_t{rows}__xla");
+            self.rt.warm_up([name.as_str()])?;
+            self.time_min(|| self.rt.exec(&name, &[&g_lit, &r_lit, &gamma, &beta]).map(|_| ()))
+        };
+        let c_small = measure_conn(t_small)?;
+        let c_large = measure_conn(t_large)?;
+        let per_row = ((c_large - c_small) / (t_large - t_small) as f64).max(0.0);
+        let base = (c_small - per_row * t_small as f64).max(0.0);
+
+        Ok(super::measured_profile(
+            m,
+            vec![mha_row; n_devices],
+            vec![mlp_row; n_devices],
+            vec![(base, per_row); n_devices],
+            seq,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{default_artifacts_dir, Manifest};
+    use crate::planner::Planner;
+    use crate::sim::{DeviceClass, EdgeEnv};
+    use std::rc::Rc;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(Rc::new(Manifest::load(&dir).unwrap())).unwrap())
+    }
+
+    #[test]
+    fn measured_profile_plans_successfully() {
+        let Some(rt) = runtime() else { return };
+        let model = ModelConfig::galaxy_mini();
+        let prof = RealProfiler::new(&rt, &model).profile(3, 60).unwrap();
+        assert_eq!(prof.n_devices(), 3);
+        // full-shard time must exceed single-head time
+        assert!(prof.mha_time(0, 12) > prof.mha_time(0, 1));
+        assert!(prof.mlp_time(0, 12) > prof.mlp_time(0, 1));
+        // and the planner can consume it
+        let env = EdgeEnv::new("3x", &[DeviceClass::NanoM; 3]);
+        let plan = Planner::new(&model, &env, &prof).plan().unwrap();
+        assert_eq!(plan.partition.heads.iter().sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn measured_times_roughly_monotone() {
+        // PJRT CPU timings are noisy; require the broad trend only:
+        // 12-head shard at least 2x a 1-head shard.
+        let Some(rt) = runtime() else { return };
+        let model = ModelConfig::galaxy_mini();
+        let prof = RealProfiler::new(&rt, &model).profile(1, 60).unwrap();
+        assert!(prof.mha_time(0, 12) > 2.0 * prof.mha_time(0, 1));
+    }
+}

@@ -1,0 +1,257 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them natively.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`). One [`Runtime`] per worker
+//! thread (the crate's `PjRtClient` is `Rc`-based and not `Send`, which
+//! conveniently mirrors one-runtime-per-edge-device). Executables compile
+//! lazily on first use and are cached for the life of the runtime —
+//! compilation never happens on the request hot path after warm-up.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::config::Manifest;
+use crate::error::{GalaxyError, Result};
+use crate::tensor::Tensor2;
+
+/// Host↔device literal conversions.
+pub mod literal {
+    use super::*;
+
+    /// `Tensor2` → rank-2 `xla::Literal` (f32).
+    pub fn from_tensor(t: &Tensor2) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(t.data());
+        Ok(lit.reshape(&[t.rows() as i64, t.cols() as i64])?)
+    }
+
+    /// Rank-1 f32 vector literal.
+    pub fn from_slice(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    /// Rank-2 literal → `Tensor2` with the given shape.
+    pub fn to_tensor(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Tensor2> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor2::from_vec(rows, cols, data)
+    }
+}
+
+/// Cached, lazily-compiled PJRT executables over one artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Rc<Manifest>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// PJRT executions issued (drives ExecReport.pjrt_calls).
+    calls: RefCell<u64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the given manifest.
+    pub fn new(manifest: Rc<Manifest>) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn pjrt_calls(&self) -> u64 {
+        *self.calls.borrow()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Get (compiling + caching on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self
+            .manifest
+            .artifact_path(name)
+            .ok_or_else(|| GalaxyError::MissingArtifact(name.to_string()))?;
+        if !path.exists() {
+            return Err(GalaxyError::MissingArtifact(format!(
+                "{name} (file {} not found — re-run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (worker warm-up, off the hot path).
+    pub fn warm_up<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> Result<usize> {
+        let mut n = 0;
+        for name in names {
+            self.executable(name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the single
+    /// result literal (all programs are lowered with `return_tuple=True`,
+    /// so the raw output is a 1-tuple we unwrap here).
+    ///
+    /// Inputs are borrowed — cached weight literals are passed by
+    /// reference, never copied on the hot path (§Perf: removing per-call
+    /// weight clones cut tiled-mode latency ~10x; see EXPERIMENTS.md).
+    pub fn exec(&self, name: &str, inputs: &[&xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(name)?;
+        *self.calls.borrow_mut() += 1;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| GalaxyError::Xla(format!("{name}: empty result")))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Execute a program whose output is a `[rows, cols]` tensor.
+    pub fn exec_tensor(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+        rows: usize,
+        cols: usize,
+    ) -> Result<Tensor2> {
+        let lit = self.exec(name, inputs)?;
+        literal::to_tensor(&lit, rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+    use crate::model::{ModelConfig, WeightGen};
+    use crate::tensor::nn;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built; exercised by `make test`
+        }
+        let m = Rc::new(Manifest::load(&dir).unwrap());
+        Some(Runtime::new(m).unwrap())
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor2::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = literal::from_tensor(&t).unwrap();
+        let back = literal::to_tensor(&lit, 2, 3).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn exec_connective_matches_oracle() {
+        let Some(rt) = runtime() else { return };
+        let cfg = ModelConfig::galaxy_mini();
+        let gen = WeightGen::new(&cfg, 11);
+        let p = gen.layer(0);
+        let g = gen.input(1, 30);
+        let res = gen.input(2, 30);
+        let g_lit = literal::from_tensor(&g).unwrap();
+        let res_lit = literal::from_tensor(&res).unwrap();
+        let gamma = literal::from_slice(&p.gamma1);
+        let beta = literal::from_slice(&p.beta1);
+        let out = rt
+            .exec_tensor("connective_t30__xla", &[&g_lit, &res_lit, &gamma, &beta], 30, cfg.hidden)
+            .unwrap();
+        let want = nn::connective(&g, &res, &p.gamma1, &p.beta1, cfg.ln_eps).unwrap();
+        assert!(
+            out.allclose(&want, 1e-4, 1e-4),
+            "diff {}",
+            out.max_abs_diff(&want).unwrap()
+        );
+    }
+
+    #[test]
+    fn exec_mha_shard_matches_oracle() {
+        let Some(rt) = runtime() else { return };
+        let cfg = ModelConfig::galaxy_mini();
+        let gen = WeightGen::new(&cfg, 12);
+        let p = gen.layer(0);
+        let x = gen.input(0, 60);
+        let mask = vec![0.0f32; 60];
+        let k = 5usize;
+        let wqkv = p.shard_wqkv(0, k, cfg.heads, cfg.head_dim()).unwrap();
+        let wout = p.shard_wout(0, k, cfg.head_dim()).unwrap();
+        let x_lit = literal::from_tensor(&x).unwrap();
+        let wqkv_lit = literal::from_tensor(&wqkv).unwrap();
+        let wout_lit = literal::from_tensor(&wout).unwrap();
+        let mask_lit = literal::from_slice(&mask);
+        let out = rt
+            .exec_tensor(
+                &format!("mha_shard_k{k}__xla"),
+                &[&x_lit, &wqkv_lit, &wout_lit, &mask_lit],
+                60,
+                cfg.hidden,
+            )
+            .unwrap();
+        let want = nn::mha_shard(&x, &wqkv, &wout, &mask, k, cfg.head_dim()).unwrap();
+        assert!(
+            out.allclose(&want, 1e-3, 1e-3),
+            "diff {}",
+            out.max_abs_diff(&want).unwrap()
+        );
+    }
+
+    #[test]
+    fn pallas_flavor_agrees_with_xla_flavor() {
+        let Some(rt) = runtime() else { return };
+        let cfg = ModelConfig::galaxy_mini();
+        let gen = WeightGen::new(&cfg, 13);
+        let p = gen.layer(1);
+        let x = gen.input(3, 60);
+        let mask = vec![0.0f32; 60];
+        let x_lit = literal::from_tensor(&x).unwrap();
+        let wqkv_lit =
+            literal::from_tensor(&p.shard_wqkv(0, 6, cfg.heads, cfg.head_dim()).unwrap()).unwrap();
+        let wout_lit =
+            literal::from_tensor(&p.shard_wout(0, 6, cfg.head_dim()).unwrap()).unwrap();
+        let mask_lit = literal::from_slice(&mask);
+        let args: [&xla::Literal; 4] = [&x_lit, &wqkv_lit, &wout_lit, &mask_lit];
+        let a = rt.exec_tensor("mha_shard_k6__xla", &args, 60, cfg.hidden).unwrap();
+        let b = rt.exec_tensor("mha_shard_k6__pallas", &args, 60, cfg.hidden).unwrap();
+        assert!(a.allclose(&b, 1e-3, 1e-3), "pallas/xla flavor drift");
+    }
+
+    #[test]
+    fn missing_artifact_error() {
+        let Some(rt) = runtime() else { return };
+        let err = match rt.exec("no_such_program__xla", &[]) {
+            Ok(_) => panic!("expected MissingArtifact"),
+            Err(e) => e,
+        };
+        assert!(matches!(err, GalaxyError::MissingArtifact(_)));
+    }
+
+    #[test]
+    fn cache_compiles_once() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.cached_executables(), 0);
+        rt.executable("connective_t15__xla").unwrap();
+        rt.executable("connective_t15__xla").unwrap();
+        assert_eq!(rt.cached_executables(), 1);
+    }
+}

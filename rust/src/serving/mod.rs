@@ -1,0 +1,123 @@
+//! Single-shot serving front-end: the leader loop that accepts requests,
+//! pads them to the artifact sequence length, runs the HMP cluster, and
+//! reports latency/throughput — the "AI assistant in a smart home"
+//! deployment of paper Fig. 1.
+//!
+//! Requests are served FIFO one at a time: the paper's setting is
+//! single-shot (no batch dimension exists to batch over — that is exactly
+//! why DP is inapplicable, §II-C.1), so the serving layer's job is
+//! latency, padding, masking, and metrics, not batching.
+
+use crate::cluster::RealCluster;
+use crate::error::{GalaxyError, Result};
+use crate::metrics::LatencyStats;
+use crate::model::{ModelConfig, WeightGen};
+use crate::tensor::Tensor2;
+use crate::workload::Request;
+
+/// Additive mask value for padded key positions.
+pub const MASK_NEG: f32 = -1.0e9;
+
+/// Pad `x` with zero rows to `target` rows and build the key mask.
+pub fn pad_and_mask(x: &Tensor2, target: usize) -> Result<(Tensor2, Vec<f32>)> {
+    if x.rows() > target {
+        return Err(GalaxyError::Shape(format!(
+            "request of {} tokens exceeds artifact seq_len {target}",
+            x.rows()
+        )));
+    }
+    let mut mask = vec![0.0f32; target];
+    for m in mask.iter_mut().skip(x.rows()) {
+        *m = MASK_NEG;
+    }
+    if x.rows() == target {
+        return Ok((x.clone(), mask));
+    }
+    let pad = Tensor2::zeros(target - x.rows(), x.cols());
+    Ok((Tensor2::concat_rows(&[x.clone(), pad])?, mask))
+}
+
+/// Serving outcome for one request.
+#[derive(Clone, Debug)]
+pub struct Served {
+    pub id: u64,
+    /// Output activations for the *valid* (unpadded) rows.
+    pub output: Tensor2,
+    pub latency_s: f64,
+}
+
+/// FIFO single-shot server over a running cluster.
+pub struct Server {
+    cluster: RealCluster,
+    weights: WeightGen,
+    seq_len: usize,
+    stats: LatencyStats,
+}
+
+impl Server {
+    pub fn new(cluster: RealCluster, model: &ModelConfig, seed: u64, seq_len: usize) -> Self {
+        Self {
+            cluster,
+            weights: WeightGen::new(model, seed),
+            seq_len,
+            stats: LatencyStats::default(),
+        }
+    }
+
+    /// Serve one request: synthesize its input activations (stand-in for
+    /// tokenizer+embedding lookup of the voice command), pad, infer, slice
+    /// valid rows.
+    pub fn serve(&mut self, req: &Request) -> Result<Served> {
+        let x = self.weights.input(req.id, req.seq_len.min(self.seq_len));
+        let (padded, mask) = pad_and_mask(&x, self.seq_len)?;
+        let t0 = std::time::Instant::now();
+        let full = self.cluster.infer(&padded, &mask)?;
+        let latency_s = t0.elapsed().as_secs_f64();
+        self.stats.record(latency_s);
+        Ok(Served { id: req.id, output: full.slice_rows(0, x.rows())?, latency_s })
+    }
+
+    /// Serve a whole workload in arrival order; returns per-request results.
+    pub fn serve_all(&mut self, reqs: &[Request]) -> Result<Vec<Served>> {
+        reqs.iter().map(|r| self.serve(r)).collect()
+    }
+
+    pub fn stats(&self) -> &LatencyStats {
+        &self.stats
+    }
+
+    pub fn cluster(&self) -> &RealCluster {
+        &self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_mask_shapes() {
+        let x = Tensor2::full(40, 8, 1.0);
+        let (p, m) = pad_and_mask(&x, 60).unwrap();
+        assert_eq!(p.shape(), (60, 8));
+        assert_eq!(m.len(), 60);
+        assert!(m[..40].iter().all(|&v| v == 0.0));
+        assert!(m[40..].iter().all(|&v| v == MASK_NEG));
+        // padded rows are zeros
+        assert!(p.slice_rows(40, 20).unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn exact_length_passthrough() {
+        let x = Tensor2::full(60, 4, 2.0);
+        let (p, m) = pad_and_mask(&x, 60).unwrap();
+        assert_eq!(p, x);
+        assert!(m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn oversize_request_rejected() {
+        let x = Tensor2::zeros(61, 4);
+        assert!(pad_and_mask(&x, 60).is_err());
+    }
+}

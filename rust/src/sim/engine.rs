@@ -1,0 +1,355 @@
+//! Closed-form execution timeline over the calibrated device + network
+//! models.
+//!
+//! Every parallel strategy in the paper is bulk-synchronous at block
+//! granularity: TP/SP blocks end at a synchronization point, and ring
+//! collectives advance in lock-step steps. That makes the end-to-end
+//! latency a deterministic function of the per-device block times (Eq. 4)
+//! and per-step wire times — evaluated here without an event queue, so a
+//! full Table IV sweep costs microseconds.
+//!
+//! The HMP timeline follows paper Fig. 5 exactly; with
+//! [`OverlapMode::Tiled`], the entry AllGather hides behind the entry GEMM
+//! tiles and the exit ReduceScatter behind the exit GEMM tiles (Fig. 6/7):
+//!
+//! ```text
+//! entry  (AG ⊕ GEMM):  D steps;  steps 1..D-1 carry a tile on the wire
+//! middle (attention core / GELU path): compute only
+//! exit   (GEMM ⊕ RS):  D steps;  steps 2..D carry partials + reduce-add
+//! ```
+
+use crate::model::ModelConfig;
+use crate::parallel::OverlapMode;
+use crate::planner::{equal_seq_partition, Plan};
+use crate::sim::device::EdgeEnv;
+use crate::sim::net::NetParams;
+
+/// Latency breakdown of one simulated single-shot inference.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Straggler compute seconds (sum over blocks of per-block maxima).
+    pub compute_s: f64,
+    /// Wire seconds that could not be hidden behind compute.
+    pub exposed_comm_s: f64,
+    /// Wire seconds that were hidden behind compute by overlapping.
+    pub hidden_comm_s: f64,
+    /// Number of synchronization points executed.
+    pub sync_points: usize,
+    /// Peak per-device memory demand in MB.
+    pub mem_mb: Vec<f64>,
+}
+
+impl SimReport {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.exposed_comm_s
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_s() * 1e3
+    }
+
+    fn add_compute(&mut self, s: f64) {
+        self.compute_s += s;
+    }
+
+    /// Account one ring step: `wire` on the link while `compute` runs.
+    fn add_step(&mut self, wire_s: f64, compute_s: f64, overlapped: bool) {
+        if overlapped {
+            self.compute_s += compute_s;
+            if wire_s > compute_s {
+                self.exposed_comm_s += wire_s - compute_s;
+                self.hidden_comm_s += compute_s;
+            } else {
+                self.hidden_comm_s += wire_s;
+            }
+        } else {
+            self.compute_s += compute_s;
+            self.exposed_comm_s += wire_s;
+        }
+    }
+}
+
+/// Simulated HMP execution engine (the paper's Galaxy runtime on the
+/// modeled testbed).
+pub struct SimEngine<'a> {
+    model: &'a ModelConfig,
+    env: &'a EdgeEnv,
+    plan: Plan,
+    net: NetParams,
+    overlap: OverlapMode,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(model: &'a ModelConfig, env: &'a EdgeEnv, plan: Plan, net: NetParams) -> Self {
+        Self { model, env, plan, net, overlap: OverlapMode::Tiled }
+    }
+
+    /// Select overlapped (default) or serialized synchronization.
+    pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
+        self.overlap = overlap;
+        self
+    }
+
+    /// Simulate one single-shot inference of `seq` tokens end-to-end.
+    pub fn run_inference(&self, seq: usize) -> SimReport {
+        let d = self.env.len();
+        let p = &self.plan.partition;
+        let m = self.model;
+        let mut rep = SimReport { mem_mb: self.plan.mem_mb.clone(), ..Default::default() };
+
+        let seq_parts = equal_seq_partition(seq, d);
+        let max_tile = *seq_parts.iter().max().unwrap();
+        let chunk_bytes = (max_tile * m.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+        let wire = self.net.ring_step_time(chunk_bytes);
+        // Per-step collective CPU work (non-hideable; see DeviceClass).
+        let step_cpu = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| dev.class.collective_step_overhead_s())
+            .fold(0.0, f64::max);
+        let overlapped = self.overlap == OverlapMode::Tiled && d > 1;
+
+        for _layer in 0..m.layers {
+            // ---- MHA block (TP) ----------------------------------------
+            // entry: AllGather of the previous connective's shards, which
+            // the tiled mode hides behind the QKV projections (Fig. 6).
+            let kd = |i: usize| p.heads[i] * m.head_dim();
+            if d > 1 {
+                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                    self.env.devices[i].gemm_time(m, rows, m.hidden, 3 * kd(i))
+                }, &seq_parts);
+                rep.sync_points += 1;
+            } else {
+                rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, 3 * kd(0)));
+            }
+            // middle: per-head attention cores (never synchronized).
+            rep.add_compute(
+                (0..d)
+                    .map(|i| self.env.devices[i].attn_core_time(m, seq, p.heads[i]))
+                    .fold(0.0, f64::max),
+            );
+            // exit: output projection tiles ⊕ ReduceScatter (Fig. 7).
+            if d > 1 {
+                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                    self.env.devices[i].gemm_time(m, rows, kd(i), m.hidden)
+                }, &seq_parts);
+                rep.sync_points += 1;
+            } else {
+                rep.add_compute(self.env.devices[0].gemm_time(m, seq, kd(0), m.hidden));
+            }
+            // ---- connective (SP) ---------------------------------------
+            rep.add_compute(self.conn_straggler(&seq_parts));
+
+            // ---- MLP block (TP) ----------------------------------------
+            let w = |i: usize| p.mlp_units[i] * m.mlp_unit();
+            if d > 1 {
+                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                    self.env.devices[i].gemm_time(m, rows, m.hidden, w(i))
+                }, &seq_parts);
+                rep.sync_points += 1;
+                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                    self.env.devices[i].gemm_time(m, rows, w(i), m.hidden)
+                }, &seq_parts);
+                rep.sync_points += 1;
+            } else {
+                rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, w(0)));
+                rep.add_compute(self.env.devices[0].gemm_time(m, seq, w(0), m.hidden));
+            }
+            // ---- connective (SP) ---------------------------------------
+            rep.add_compute(self.conn_straggler(&seq_parts));
+        }
+        rep
+    }
+
+    /// Straggler connective-block time over the SP partition.
+    fn conn_straggler(&self, seq_parts: &[usize]) -> f64 {
+        self.env
+            .devices
+            .iter()
+            .zip(seq_parts.iter())
+            .map(|(dev, &rows)| dev.connective_time(self.model, rows))
+            .fold(0.0, f64::max)
+    }
+
+    /// Entry boundary: AllGather ⊕ tile GEMMs (paper Fig. 6).
+    ///
+    /// D ring steps; in step r every device GEMMs one sequence tile while
+    /// forwarding the previously received tile. The last step has no wire.
+    /// Non-overlapped mode: (D-1) wire steps, then one fused GEMM.
+    fn ring_entry(
+        &self,
+        rep: &mut SimReport,
+        d: usize,
+        wire: f64,
+        step_cpu: f64,
+        overlapped: bool,
+        gemm: impl Fn(usize, usize) -> f64,
+        seq_parts: &[usize],
+    ) {
+        if overlapped {
+            for step in 0..d {
+                // Device i processes tile (i - step) mod d in step `step`.
+                let compute = (0..d)
+                    .map(|i| gemm(i, seq_parts[(i + d - step) % d]))
+                    .fold(0.0, f64::max);
+                let wire_s = if step < d - 1 { wire } else { 0.0 };
+                let cpu = if step < d - 1 { step_cpu } else { 0.0 };
+                rep.add_step(wire_s, compute + cpu, true);
+            }
+        } else {
+            for _ in 0..d - 1 {
+                rep.add_step(wire, step_cpu, false);
+            }
+            let total_rows: usize = seq_parts.iter().sum();
+            rep.add_compute((0..d).map(|i| gemm(i, total_rows)).fold(0.0, f64::max));
+        }
+    }
+
+    /// Exit boundary: tile GEMMs ⊕ ReduceScatter (paper Fig. 7).
+    ///
+    /// D rounds of tile GEMMs; from round 2 on, the previous round's
+    /// partial rides the ring and is reduce-added on arrival. Non-
+    /// overlapped: one fused GEMM, then (D-1) wire+add steps.
+    fn ring_exit(
+        &self,
+        rep: &mut SimReport,
+        d: usize,
+        wire: f64,
+        step_cpu: f64,
+        overlapped: bool,
+        gemm: impl Fn(usize, usize) -> f64,
+        seq_parts: &[usize],
+    ) {
+        let max_tile = *seq_parts.iter().max().unwrap();
+        let add = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| {
+                dev.reduce_add_time(
+                    (max_tile * self.model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64,
+                )
+            })
+            .fold(0.0, f64::max);
+        if overlapped {
+            for step in 0..d {
+                let compute = (0..d)
+                    .map(|i| gemm(i, seq_parts[(i + 2 * d - 2 - step) % d]))
+                    .fold(0.0, f64::max);
+                if step == 0 {
+                    rep.add_step(0.0, compute, true);
+                } else {
+                    rep.add_step(wire + add, compute + step_cpu, true);
+                }
+            }
+        } else {
+            let total_rows: usize = seq_parts.iter().sum();
+            rep.add_compute((0..d).map(|i| gemm(i, total_rows)).fold(0.0, f64::max));
+            for _ in 0..d - 1 {
+                rep.add_step(wire, add + step_cpu, false);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::planner::Planner;
+    use crate::profiler::Profiler;
+    use crate::sim::EdgeEnv;
+
+    fn plan(model: &ModelConfig, env: &EdgeEnv, seq: usize) -> Plan {
+        let profile = Profiler::analytic(model, env, seq).profile();
+        Planner::new(model, env, &profile).plan().unwrap()
+    }
+
+    fn run(model: &ModelConfig, env: &EdgeEnv, seq: usize, mbps: f64, ov: OverlapMode) -> SimReport {
+        let p = plan(model, env, seq);
+        SimEngine::new(model, env, p, NetParams::mbps(mbps))
+            .with_overlap(ov)
+            .run_inference(seq)
+    }
+
+    #[test]
+    fn overlap_is_never_slower() {
+        for mbps in [25.0, 125.0, 500.0] {
+            let m = ModelConfig::bert_large();
+            let env = EdgeEnv::preset_b();
+            let with = run(&m, &env, 284, mbps, OverlapMode::Tiled);
+            let without = run(&m, &env, 284, mbps, OverlapMode::None);
+            assert!(
+                with.total_s() <= without.total_s() + 1e-9,
+                "{mbps} Mbps: tiled {} > serial {}",
+                with.total_s(),
+                without.total_s()
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_gains_shrink_with_bandwidth() {
+        // Fig 8 trend: the higher the bandwidth, the less there is to hide.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let gain = |mbps: f64| {
+            let with = run(&m, &env, 284, mbps, OverlapMode::Tiled).total_s();
+            let without = run(&m, &env, 284, mbps, OverlapMode::None).total_s();
+            without / with
+        };
+        let g25 = gain(25.0);
+        let g500 = gain(500.0);
+        assert!(g25 > g500, "gain at 25Mbps {g25} should exceed 500Mbps {g500}");
+    }
+
+    #[test]
+    fn more_devices_reduce_latency_at_high_bandwidth() {
+        // Strong-scaling sanity (Fig 11 direction) at 1000 Mbps.
+        let m = ModelConfig::gpt2_large();
+        let t2 = run(&m, &EdgeEnv::preset_a(), 384, 1000.0, OverlapMode::Tiled).total_s();
+        let t4 = run(&m, &EdgeEnv::preset_c(), 384, 1000.0, OverlapMode::Tiled).total_s();
+        assert!(t4 < t2, "4-dev {t4} should beat 2-dev {t2}");
+    }
+
+    #[test]
+    fn single_device_has_no_comm() {
+        let m = ModelConfig::distilbert();
+        let env = EdgeEnv::new("solo", &[crate::sim::DeviceClass::NanoM]);
+        let rep = run(&m, &env, 128, 125.0, OverlapMode::Tiled);
+        assert_eq!(rep.exposed_comm_s, 0.0);
+        assert_eq!(rep.hidden_comm_s, 0.0);
+        assert_eq!(rep.sync_points, 0);
+    }
+
+    #[test]
+    fn sync_points_count_matches_hmp() {
+        // 4 sync points per layer (2 RS + 2 AG), times layers.
+        let m = ModelConfig::bert_large();
+        let rep = run(&m, &EdgeEnv::preset_a(), 284, 125.0, OverlapMode::Tiled);
+        assert_eq!(rep.sync_points, 4 * m.layers);
+    }
+
+    #[test]
+    fn low_bandwidth_exposes_comm() {
+        let m = ModelConfig::bert_large();
+        let rep = run(&m, &EdgeEnv::preset_b(), 284, 25.0, OverlapMode::Tiled);
+        assert!(rep.exposed_comm_s > 0.0, "25 Mbps must leave exposed comm");
+        let rep2 = run(&m, &EdgeEnv::preset_b(), 284, 1000.0, OverlapMode::Tiled);
+        assert!(rep2.exposed_comm_s < rep.exposed_comm_s);
+    }
+
+    #[test]
+    fn hidden_plus_exposed_equals_serial_comm() {
+        // Conservation: the wire seconds either hide or expose; their sum
+        // must equal the non-overlapped exposed comm (same wire volume).
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let tiled = run(&m, &env, 284, 125.0, OverlapMode::Tiled);
+        let serial = run(&m, &env, 284, 125.0, OverlapMode::None);
+        let tiled_wire = tiled.hidden_comm_s + tiled.exposed_comm_s;
+        let rel = (tiled_wire - serial.exposed_comm_s).abs() / serial.exposed_comm_s;
+        assert!(rel < 0.05, "wire volume drift {rel}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Edge-testbed simulator: calibrated device cost model + D2D network
+//! model + the closed-form execution timeline.
+//!
+//! The paper evaluates on physical Jetson Nano clusters; we have none, so
+//! per the substitution rule (DESIGN.md §4) this module reproduces the
+//! *behaviourally relevant* properties:
+//!
+//! * per-device compute latency for each HMP block under any partition
+//!   (a calibrated FLOPs/memory-bandwidth model anchored to the paper's
+//!   own Table I measurements),
+//! * D2D transfer latency under configurable bandwidth (the paper's
+//!   traffic-controlled switch),
+//! * memory budgets per device frequency class.
+//!
+//! All parallel strategies (HMP / Megatron TP / SP / Local) are executed
+//! against this model through [`SimEngine`], which walks the same
+//! [`crate::parallel::schedule`] structures the real PJRT engine executes.
+
+pub mod device;
+pub mod engine;
+pub mod net;
+
+pub use device::{DeviceClass, DeviceSpec, EdgeEnv};
+pub use engine::{SimEngine, SimReport};
+pub use net::{NetParams, RingStepTimer};

@@ -1,0 +1,164 @@
+//! D2D network model: the paper's traffic-controlled switched LAN.
+//!
+//! All devices hang off one switch; each device has a full-duplex NIC
+//! capped at the configured bandwidth (the paper throttles 25–1000 Mbps
+//! with `tc`). Ring collectives send on one port and receive on the other
+//! concurrently, so a ring step's wire time is the slowest link's
+//! serialization time plus a fixed per-message latency.
+
+/// Bytes per activation element on the wire. The paper's PyTorch/C++
+/// prototype stores weights in fp16 but exchanges activation tensors in
+/// fp32 (framework default for distributed ops), so synchronization volume
+/// is 4 B/elem regardless of the storage dtype — a factor that hits the
+/// serialized baselines harder than overlap-hiding Galaxy (see
+/// EXPERIMENTS.md calibration notes).
+pub const WIRE_BYTES_PER_ELEM: usize = 4;
+
+/// Link parameters applied uniformly to every D2D connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetParams {
+    /// Per-direction link bandwidth in Mbps.
+    pub bandwidth_mbps: f64,
+    /// Fixed one-way message latency in seconds (switch + stack).
+    pub latency_s: f64,
+}
+
+impl NetParams {
+    /// The paper's default LAN latency is sub-millisecond; 0.3 ms models
+    /// the Jetson's software stack + switch.
+    pub fn mbps(bandwidth_mbps: f64) -> Self {
+        Self { bandwidth_mbps, latency_s: 0.3e-3 }
+    }
+
+    /// Paper default for Table IV / Fig 9 (125 Mbps).
+    pub fn paper_default() -> Self {
+        Self::mbps(125.0)
+    }
+
+    /// Seconds to move `bytes` across one link, one direction.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// Wire time of one ring step where every device forwards `bytes`
+    /// simultaneously (full-duplex NICs: send || recv).
+    pub fn ring_step_time(&self, bytes: u64) -> f64 {
+        self.transfer_time(bytes)
+    }
+}
+
+/// Helper that accumulates the duration of a multi-step ring collective,
+/// optionally overlapping each step's wire time with per-device compute
+/// (the tile-based optimization of §III-D).
+#[derive(Clone, Debug, Default)]
+pub struct RingStepTimer {
+    total_s: f64,
+    steps: usize,
+}
+
+impl RingStepTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A step where communication and computation are serialized
+    /// (baselines / non-overlapped Galaxy).
+    pub fn serial_step(&mut self, wire_s: f64, compute_s: f64) {
+        self.total_s += wire_s + compute_s;
+        self.steps += 1;
+    }
+
+    /// A step where the wire transfer hides behind compute (or vice
+    /// versa): cost is the max of the two (paper Fig. 6/7).
+    pub fn overlapped_step(&mut self, wire_s: f64, compute_s: f64) {
+        self.total_s += wire_s.max(compute_s);
+        self.steps += 1;
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.total_s
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let net = NetParams::mbps(100.0);
+        let t1 = net.transfer_time(1_000_000);
+        let t2 = net.transfer_time(2_000_000);
+        // Slope: 8 Mbit at 100 Mbps = 80 ms
+        assert!(((t2 - t1) - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(NetParams::mbps(10.0).transfer_time(0), 0.0);
+    }
+
+    #[test]
+    fn latency_floor_applies() {
+        let net = NetParams::mbps(1000.0);
+        assert!(net.transfer_time(1) >= net.latency_s);
+    }
+
+    #[test]
+    fn bandwidth_inverse_scaling() {
+        let fast = NetParams::mbps(500.0);
+        let slow = NetParams::mbps(125.0);
+        let b = 10_000_000u64;
+        let ratio = (slow.transfer_time(b) - slow.latency_s)
+            / (fast.transfer_time(b) - fast.latency_s);
+        assert!((ratio - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapped_step_hides_smaller_side() {
+        let mut t = RingStepTimer::new();
+        t.overlapped_step(0.010, 0.004);
+        assert!((t.total_s() - 0.010).abs() < 1e-12);
+        let mut t2 = RingStepTimer::new();
+        t2.overlapped_step(0.004, 0.010);
+        assert!((t2.total_s() - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_step_sums() {
+        let mut t = RingStepTimer::new();
+        t.serial_step(0.010, 0.004);
+        t.serial_step(0.001, 0.002);
+        assert!((t.total_s() - 0.017).abs() < 1e-12);
+        assert_eq!(t.steps(), 2);
+    }
+
+    #[test]
+    fn overlap_never_worse_than_serial() {
+        // For any (wire, compute) pair the overlapped step is <= serial.
+        crate::testkit::forall(
+            "overlap<=serial",
+            42,
+            200,
+            |rng| (rng.uniform() as f64 * 0.1, rng.uniform() as f64 * 0.1),
+            |&(w, c)| {
+                let mut a = RingStepTimer::new();
+                a.overlapped_step(w, c);
+                let mut b = RingStepTimer::new();
+                b.serial_step(w, c);
+                if a.total_s() <= b.total_s() + 1e-15 {
+                    Ok(())
+                } else {
+                    Err(format!("overlap {} > serial {}", a.total_s(), b.total_s()))
+                }
+            },
+        );
+    }
+}

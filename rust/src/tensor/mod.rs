@@ -1,0 +1,415 @@
+//! Minimal row-major `f32` tensor algebra.
+//!
+//! This is the native math substrate of the L3 layer. It serves three
+//! roles:
+//!
+//! 1. **Oracle** — [`nn`] mirrors the pure-jnp reference (`python/compile/
+//!    kernels/ref.py`) op-for-op, so Rust integration tests can pin the
+//!    PJRT-executed artifacts against native numerics.
+//! 2. **Payloads** — collectives and the overlap engine move `Tensor2`
+//!    values through the cluster fabric with exact byte accounting.
+//! 3. **Host-side glue** — partial-sum reduction, row scatter/gather and
+//!    weight sharding on the leader.
+//!
+//! Deliberately *not* a general ndarray: two dimensions, `f32`, row-major,
+//! panic-free fallible ops where shapes come from the wire.
+
+pub mod nn;
+
+use crate::error::{GalaxyError, Result};
+
+/// Dense row-major 2-D `f32` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor2 {
+    /// Build from an existing buffer. `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(GalaxyError::Shape(format!(
+                "from_vec: {}x{} needs {} elems, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity-like: 1.0 on the main diagonal.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(n, n);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Payload size in bytes (what a link transfer of this tensor costs).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of rows `[start, start+len)`.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Result<Tensor2> {
+        if start + len > self.rows {
+            return Err(GalaxyError::Shape(format!(
+                "slice_rows: [{start}, {}) out of {} rows",
+                start + len,
+                self.rows
+            )));
+        }
+        Ok(Tensor2 {
+            rows: len,
+            cols: self.cols,
+            data: self.data[start * self.cols..(start + len) * self.cols].to_vec(),
+        })
+    }
+
+    /// Copy of columns `[start, start+len)`.
+    pub fn slice_cols(&self, start: usize, len: usize) -> Result<Tensor2> {
+        if start + len > self.cols {
+            return Err(GalaxyError::Shape(format!(
+                "slice_cols: [{start}, {}) out of {} cols",
+                start + len,
+                self.cols
+            )));
+        }
+        let mut data = Vec::with_capacity(self.rows * len);
+        for r in 0..self.rows {
+            let off = r * self.cols + start;
+            data.extend_from_slice(&self.data[off..off + len]);
+        }
+        Ok(Tensor2 { rows: self.rows, cols: len, data })
+    }
+
+    /// Vertically stack tensors (all must share `cols`).
+    pub fn concat_rows(parts: &[Tensor2]) -> Result<Tensor2> {
+        let first = parts
+            .first()
+            .ok_or_else(|| GalaxyError::Shape("concat_rows: empty".into()))?;
+        let cols = first.cols;
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.cols != cols {
+                return Err(GalaxyError::Shape(format!(
+                    "concat_rows: cols {} != {}",
+                    p.cols, cols
+                )));
+            }
+            rows += p.rows;
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor2 { rows, cols, data })
+    }
+
+    /// Horizontally stack tensors (all must share `rows`).
+    pub fn concat_cols(parts: &[Tensor2]) -> Result<Tensor2> {
+        let first = parts
+            .first()
+            .ok_or_else(|| GalaxyError::Shape("concat_cols: empty".into()))?;
+        let rows = first.rows;
+        let total_cols: usize = parts.iter().map(|p| p.cols).sum();
+        for p in parts {
+            if p.rows != rows {
+                return Err(GalaxyError::Shape(format!(
+                    "concat_cols: rows {} != {}",
+                    p.rows, rows
+                )));
+            }
+        }
+        let mut data = Vec::with_capacity(rows * total_cols);
+        for r in 0..rows {
+            for p in parts {
+                data.extend_from_slice(p.row(r));
+            }
+        }
+        Ok(Tensor2 { rows, cols: total_cols, data })
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self @ rhs` with f32 accumulation.
+    ///
+    /// Blocked i-k-j loop: the inner j-loop is a saxpy over contiguous rows,
+    /// which autovectorizes; good enough for the oracle/host-glue role (the
+    /// hot GEMMs run inside XLA).
+    pub fn matmul(&self, rhs: &Tensor2) -> Result<Tensor2> {
+        if self.cols != rhs.rows {
+            return Err(GalaxyError::Shape(format!(
+                "matmul: {}x{} @ {}x{}",
+                self.rows, self.cols, rhs.rows, rhs.cols
+            )));
+        }
+        let (m, k, n) = (self.rows, self.cols, rhs.cols);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &rhs.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(Tensor2 { rows: m, cols: n, data: out })
+    }
+
+    /// Element-wise sum (shapes must match).
+    pub fn add(&self, rhs: &Tensor2) -> Result<Tensor2> {
+        self.zip_with(rhs, |a, b| a + b)
+    }
+
+    /// In-place element-wise accumulation.
+    pub fn add_assign(&mut self, rhs: &Tensor2) -> Result<()> {
+        if self.shape() != rhs.shape() {
+            return Err(GalaxyError::Shape(format!(
+                "add_assign: {:?} vs {:?}",
+                self.shape(),
+                rhs.shape()
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(rhs.data.iter()) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Element-wise binary map.
+    pub fn zip_with(&self, rhs: &Tensor2, f: impl Fn(f32, f32) -> f32) -> Result<Tensor2> {
+        if self.shape() != rhs.shape() {
+            return Err(GalaxyError::Shape(format!(
+                "zip_with: {:?} vs {:?}",
+                self.shape(),
+                rhs.shape()
+            )));
+        }
+        Ok(Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(rhs.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    /// Element-wise unary map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor2 {
+        Tensor2 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&a| f(a)).collect(),
+        }
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f32) -> Tensor2 {
+        self.map(|a| a * s)
+    }
+
+    /// Largest absolute element difference against `rhs`.
+    pub fn max_abs_diff(&self, rhs: &Tensor2) -> Result<f32> {
+        if self.shape() != rhs.shape() {
+            return Err(GalaxyError::Shape(format!(
+                "max_abs_diff: {:?} vs {:?}",
+                self.shape(),
+                rhs.shape()
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(rhs.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// `true` when every element differs by at most `atol + rtol*|b|`.
+    pub fn allclose(&self, rhs: &Tensor2, rtol: f32, atol: f32) -> bool {
+        self.shape() == rhs.shape()
+            && self
+                .data
+                .iter()
+                .zip(rhs.data.iter())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rows: usize, cols: usize, v: &[f32]) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, v.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Tensor2::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = t(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity_is_noop() {
+        let a = t(3, 3, &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        assert_eq!(a.matmul(&Tensor2::eye(3)).unwrap(), a);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch() {
+        let a = Tensor2::zeros(2, 3);
+        let b = Tensor2::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = t(1, 3, &[1.0, 2.0, 3.0]);
+        let b = t(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape(), (1, 2));
+        assert_eq!(c.data(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_and_concat_rows_roundtrip() {
+        let a = t(4, 2, &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        let top = a.slice_rows(0, 2).unwrap();
+        let bot = a.slice_rows(2, 2).unwrap();
+        assert_eq!(Tensor2::concat_rows(&[top, bot]).unwrap(), a);
+    }
+
+    #[test]
+    fn slice_and_concat_cols_roundtrip() {
+        let a = t(2, 4, &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        let l = a.slice_cols(0, 1).unwrap();
+        let r = a.slice_cols(1, 3).unwrap();
+        assert_eq!(Tensor2::concat_cols(&[l, r]).unwrap(), a);
+    }
+
+    #[test]
+    fn slice_rows_out_of_range() {
+        assert!(Tensor2::zeros(3, 1).slice_rows(2, 2).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = t(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn add_and_add_assign_agree() {
+        let a = t(2, 2, &[1., 2., 3., 4.]);
+        let b = t(2, 2, &[10., 20., 30., 40.]);
+        let mut c = a.clone();
+        c.add_assign(&b).unwrap();
+        assert_eq!(c, a.add(&b).unwrap());
+    }
+
+    #[test]
+    fn size_bytes_counts_f32() {
+        assert_eq!(Tensor2::zeros(3, 5).size_bytes(), 60);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor2::full(1, 3, 1.0);
+        let b = Tensor2::full(1, 3, 1.0 + 1e-6);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 1e-8));
+    }
+
+    #[test]
+    fn allclose_shape_mismatch_is_false() {
+        assert!(!Tensor2::zeros(1, 2).allclose(&Tensor2::zeros(2, 1), 1.0, 1.0));
+    }
+}

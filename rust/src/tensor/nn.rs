@@ -1,0 +1,393 @@
+//! Native Transformer ops mirroring the JAX reference oracle
+//! (`python/compile/kernels/ref.py`) op-for-op.
+//!
+//! Used by integration tests to pin PJRT-executed artifacts against an
+//! independent implementation, and by the leader for host-side glue.
+
+use super::Tensor2;
+use crate::error::{GalaxyError, Result};
+
+/// erf(x) via Abramowitz & Stegun 7.1.26 (|err| <= 1.5e-7, plenty for f32).
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f32 = 0.254829592;
+    const A2: f32 = -0.284496736;
+    const A3: f32 = 1.421413741;
+    const A4: f32 = -1.453152027;
+    const A5: f32 = 1.061405429;
+    const P: f32 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Exact (erf-based) GELU — matches `jax.nn.gelu(approximate=False)`.
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x * std::f32::consts::FRAC_1_SQRT_2))
+}
+
+/// Row-wise LayerNorm over the last axis with learned scale/shift.
+pub fn layernorm(x: &Tensor2, gamma: &[f32], beta: &[f32], eps: f32) -> Result<Tensor2> {
+    if gamma.len() != x.cols() || beta.len() != x.cols() {
+        return Err(GalaxyError::Shape(format!(
+            "layernorm: gamma/beta len {}/{} vs cols {}",
+            gamma.len(),
+            beta.len(),
+            x.cols()
+        )));
+    }
+    let mut out = Tensor2::zeros(x.rows(), x.cols());
+    let n = x.cols() as f32;
+    for r in 0..x.rows() {
+        let row = x.row(r);
+        let mu: f32 = row.iter().sum::<f32>() / n;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for c in 0..x.cols() {
+            out.set(r, c, (row[c] - mu) * inv * gamma[c] + beta[c]);
+        }
+    }
+    Ok(out)
+}
+
+/// Connective block (paper Eq. 3): LayerNorm(ResidualAdd(Dropout(g))).
+/// Dropout is the identity at inference.
+pub fn connective(
+    g: &Tensor2,
+    residual: &Tensor2,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> Result<Tensor2> {
+    layernorm(&g.add(residual)?, gamma, beta, eps)
+}
+
+/// Numerically-stable row softmax with an additive key mask.
+pub fn masked_softmax_rows(scores: &mut Tensor2, mask: &[f32]) -> Result<()> {
+    if mask.len() != scores.cols() {
+        return Err(GalaxyError::Shape(format!(
+            "softmax: mask len {} vs cols {}",
+            mask.len(),
+            scores.cols()
+        )));
+    }
+    let cols = scores.cols();
+    for r in 0..scores.rows() {
+        let row = &mut scores.data_mut()[r * cols..(r + 1) * cols];
+        let mut mx = f32::NEG_INFINITY;
+        for (v, m) in row.iter_mut().zip(mask.iter()) {
+            *v += m;
+            mx = mx.max(*v);
+        }
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Ok(())
+}
+
+/// Multi-head self-attention core over a head shard (ref_attention).
+///
+/// q,k,v: `[seq, n_heads*head_dim]` head-major columns; `mask`: `[seq]`
+/// additive key mask. Returns `[seq, n_heads*head_dim]`.
+pub fn attention(
+    q: &Tensor2,
+    k: &Tensor2,
+    v: &Tensor2,
+    mask: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+) -> Result<Tensor2> {
+    let s = q.rows();
+    if q.cols() != n_heads * head_dim || k.shape() != q.shape() || v.shape() != q.shape() {
+        return Err(GalaxyError::Shape(format!(
+            "attention: q {:?} k {:?} v {:?} heads {} dim {}",
+            q.shape(),
+            k.shape(),
+            v.shape(),
+            n_heads,
+            head_dim
+        )));
+    }
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = Tensor2::zeros(s, n_heads * head_dim);
+    for h in 0..n_heads {
+        let qh = q.slice_cols(h * head_dim, head_dim)?;
+        let kh = k.slice_cols(h * head_dim, head_dim)?;
+        let vh = v.slice_cols(h * head_dim, head_dim)?;
+        let mut scores = qh.matmul(&kh.transpose())?.scale(scale);
+        masked_softmax_rows(&mut scores, mask)?;
+        let oh = scores.matmul(&vh)?;
+        for r in 0..s {
+            for c in 0..head_dim {
+                out.set(r, h * head_dim + c, oh.get(r, c));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Head-sharded MHA block producing the partial `C_i` (paper Eq. 1).
+///
+/// `wqkv`: `[hidden, 3*k*d]` laid out `[Q|K|V]`; `wout`: `[k*d, hidden]`.
+pub fn mha_shard(
+    x: &Tensor2,
+    wqkv: &Tensor2,
+    wout: &Tensor2,
+    mask: &[f32],
+    k_heads: usize,
+    head_dim: usize,
+) -> Result<Tensor2> {
+    let kd = k_heads * head_dim;
+    let qkv = x.matmul(wqkv)?;
+    let q = qkv.slice_cols(0, kd)?;
+    let k = qkv.slice_cols(kd, kd)?;
+    let v = qkv.slice_cols(2 * kd, kd)?;
+    let b = attention(&q, &k, &v, mask, k_heads, head_dim)?;
+    b.matmul(wout)
+}
+
+/// Column/row-sharded MLP block producing the partial `F_i` (paper Eq. 2).
+pub fn mlp_shard(x: &Tensor2, w1: &Tensor2, w2: &Tensor2) -> Result<Tensor2> {
+    x.matmul(w1)?.map(gelu).matmul(w2)
+}
+
+/// Full-layer parameters (one Transformer layer, post-LN / BERT style).
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub wqkv: Tensor2,
+    pub wout: Tensor2,
+    pub w1: Tensor2,
+    pub w2: Tensor2,
+    pub gamma1: Vec<f32>,
+    pub beta1: Vec<f32>,
+    pub gamma2: Vec<f32>,
+    pub beta2: Vec<f32>,
+}
+
+impl LayerParams {
+    /// Slice the fused `[Q|K|V]` projection for a head shard
+    /// (ref.shard_wqkv): keep the shard's columns from each segment.
+    pub fn shard_wqkv(&self, off_heads: usize, k_heads: usize, n_heads: usize, head_dim: usize) -> Result<Tensor2> {
+        let hd = n_heads * head_dim;
+        let off = off_heads * head_dim;
+        let kd = k_heads * head_dim;
+        let q = self.wqkv.slice_cols(off, kd)?;
+        let k = self.wqkv.slice_cols(hd + off, kd)?;
+        let v = self.wqkv.slice_cols(2 * hd + off, kd)?;
+        Tensor2::concat_cols(&[q, k, v])
+    }
+
+    /// Row slice of the output projection matching a head shard.
+    pub fn shard_wout(&self, off_heads: usize, k_heads: usize, head_dim: usize) -> Result<Tensor2> {
+        self.wout.slice_rows(off_heads * head_dim, k_heads * head_dim)
+    }
+
+    /// Column slice of W1 for an MLP shard of `width` columns at `col`.
+    pub fn shard_w1(&self, col: usize, width: usize) -> Result<Tensor2> {
+        self.w1.slice_cols(col, width)
+    }
+
+    /// Row slice of W2 aligned with [`Self::shard_w1`].
+    pub fn shard_w2(&self, col: usize, width: usize) -> Result<Tensor2> {
+        self.w2.slice_rows(col, width)
+    }
+}
+
+/// Full (unsharded) post-LN Transformer layer — the Local baseline oracle.
+pub fn layer_local(
+    x: &Tensor2,
+    p: &LayerParams,
+    mask: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+    eps: f32,
+) -> Result<Tensor2> {
+    let c = mha_shard(x, &p.wqkv, &p.wout, mask, n_heads, head_dim)?;
+    let h1 = connective(&c, x, &p.gamma1, &p.beta1, eps)?;
+    let f = mlp_shard(&h1, &p.w1, &p.w2)?;
+    connective(&f, &h1, &p.gamma2, &p.beta2, eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Pcg64;
+
+    fn randt(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.5).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427008).abs() < 2e-6);
+        assert!((erf(-1.0) + 0.8427008).abs() < 2e-6);
+        assert!((erf(3.0) - 0.9999779).abs() < 2e-6);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        // jax.nn.gelu(1.0, approximate=False) = 0.8413447
+        assert!((gelu(1.0) - 0.8413447).abs() < 2e-6);
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(-1.0) + (-1.0f32 * 0.15865526).abs()).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gelu_monotone_nonsaturating_positive() {
+        let mut prev = gelu(-6.0);
+        let mut x = -6.0f32;
+        while x < 6.0 {
+            x += 0.25;
+            let g = gelu(x);
+            // GELU is not globally monotone but is above -0.2 everywhere
+            assert!(g >= -0.2);
+            if x > 1.0 {
+                assert!(g >= prev);
+            }
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Pcg64::new(1);
+        let x = randt(&mut rng, 8, 64);
+        let out = layernorm(&x, &vec![1.0; 64], &vec![0.0; 64], 1e-5).unwrap();
+        for r in 0..8 {
+            let row = out.row(r);
+            let mu: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 64.0;
+            assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_with_mask() {
+        let mut rng = Pcg64::new(2);
+        let mut s = randt(&mut rng, 5, 10);
+        let mut mask = vec![0.0f32; 10];
+        mask[7..].fill(-1e9);
+        masked_softmax_rows(&mut s, &mask).unwrap();
+        for r in 0..5 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s.row(r)[7..].iter().all(|&p| p < 1e-12));
+        }
+    }
+
+    #[test]
+    fn attention_head_independence() {
+        let mut rng = Pcg64::new(3);
+        let (s, d) = (12, 8);
+        let q = randt(&mut rng, s, 2 * d);
+        let k = randt(&mut rng, s, 2 * d);
+        let v = randt(&mut rng, s, 2 * d);
+        let mask = vec![0.0; s];
+        let base = attention(&q, &k, &v, &mask, 2, d).unwrap();
+        let mut q2 = q.clone();
+        for r in 0..s {
+            for c in d..2 * d {
+                q2.set(r, c, q2.get(r, c) + 3.0);
+            }
+        }
+        let pert = attention(&q2, &k, &v, &mask, 2, d).unwrap();
+        assert_eq!(
+            base.slice_cols(0, d).unwrap(),
+            pert.slice_cols(0, d).unwrap()
+        );
+        assert!(base
+            .slice_cols(d, d)
+            .unwrap()
+            .max_abs_diff(&pert.slice_cols(d, d).unwrap())
+            .unwrap()
+            > 1e-3);
+    }
+
+    #[test]
+    fn mha_partials_sum_to_full() {
+        // The core TP identity (paper Eq. 1): sum of head-shard partials
+        // equals the full MHA block output.
+        let mut rng = Pcg64::new(4);
+        let (s, nh, d) = (10, 4, 8);
+        let h = nh * d;
+        let x = randt(&mut rng, s, h);
+        let p = LayerParams {
+            wqkv: randt(&mut rng, h, 3 * h),
+            wout: randt(&mut rng, h, h),
+            w1: randt(&mut rng, h, 4 * h),
+            w2: randt(&mut rng, 4 * h, h),
+            gamma1: vec![1.0; h],
+            beta1: vec![0.0; h],
+            gamma2: vec![1.0; h],
+            beta2: vec![0.0; h],
+        };
+        let mask = vec![0.0; s];
+        let full = mha_shard(&x, &p.wqkv, &p.wout, &mask, nh, d).unwrap();
+        for split in [vec![4], vec![2, 2], vec![1, 3], vec![1, 1, 1, 1]] {
+            let mut acc = Tensor2::zeros(s, h);
+            let mut off = 0;
+            for k in split {
+                let wqkv_i = p.shard_wqkv(off, k, nh, d).unwrap();
+                let wout_i = p.shard_wout(off, k, d).unwrap();
+                acc.add_assign(&mha_shard(&x, &wqkv_i, &wout_i, &mask, k, d).unwrap())
+                    .unwrap();
+                off += k;
+            }
+            assert!(
+                acc.allclose(&full, 1e-4, 1e-4),
+                "split partials != full, diff {}",
+                acc.max_abs_diff(&full).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_partials_sum_to_full() {
+        let mut rng = Pcg64::new(5);
+        let (s, h) = (6, 16);
+        let x = randt(&mut rng, s, h);
+        let w1 = randt(&mut rng, h, 4 * h);
+        let w2 = randt(&mut rng, 4 * h, h);
+        let full = mlp_shard(&x, &w1, &w2).unwrap();
+        let mut acc = Tensor2::zeros(s, h);
+        for (col, width) in [(0usize, 16usize), (16, 32), (48, 16)] {
+            let w1i = w1.slice_cols(col, width).unwrap();
+            let w2i = w2.slice_rows(col, width).unwrap();
+            acc.add_assign(&mlp_shard(&x, &w1i, &w2i).unwrap()).unwrap();
+        }
+        assert!(acc.allclose(&full, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn layer_local_finite_and_normalized() {
+        let mut rng = Pcg64::new(6);
+        let (s, nh, d) = (8, 2, 4);
+        let h = nh * d;
+        let p = LayerParams {
+            wqkv: randt(&mut rng, h, 3 * h),
+            wout: randt(&mut rng, h, h),
+            w1: randt(&mut rng, h, 4 * h),
+            w2: randt(&mut rng, 4 * h, h),
+            gamma1: vec![1.0; h],
+            beta1: vec![0.0; h],
+            gamma2: vec![1.0; h],
+            beta2: vec![0.0; h],
+        };
+        let x = randt(&mut rng, s, h);
+        let out = layer_local(&x, &p, &vec![0.0; s], nh, d, 1e-5).unwrap();
+        assert!(out.data().iter().all(|v| v.is_finite()));
+        // post-LN output rows are normalized
+        let mu: f32 = out.row(0).iter().sum::<f32>() / h as f32;
+        assert!(mu.abs() < 1e-4);
+    }
+}

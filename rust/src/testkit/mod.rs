@@ -1,0 +1,240 @@
+//! Deterministic randomness + a small property-testing harness.
+//!
+//! The offline vendored registry has neither `rand` nor `proptest`
+//! (DESIGN.md §4), so this module provides the two pieces the rest of the
+//! crate needs:
+//!
+//! * [`Pcg64`] — PCG-XSH-RR 64/32, the same deterministic generator used
+//!   for synthetic weight generation (seeded by model + layer id, so every
+//!   process — leader, workers, tests — reconstructs identical weights).
+//! * [`forall`] — a minimal property-test driver: N random cases from a
+//!   seeded RNG, failure reporting with the case index and seed so any
+//!   counterexample is reproducible by construction.
+
+/// PCG-XSH-RR 64/32 — small, fast, statistically solid, and trivially
+/// portable (the Python side never needs to match it; weights only cross
+/// the language boundary as runtime tensors).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Seeded constructor; distinct seeds yield independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (seed << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(0x853c49e6748fea9b ^ seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive). Panics if `lo > hi`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range: {lo} > {hi}");
+        let span = hi - lo + 1;
+        lo + self.next_u64() % span
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-9);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Random positive integer partition of `total` into `n` parts
+    /// (each >= 1). Panics if `n == 0` or `n > total`.
+    pub fn partition(&mut self, total: usize, n: usize) -> Vec<usize> {
+        assert!(n >= 1 && n <= total, "partition({total}, {n})");
+        // n-1 distinct cut points in [1, total)
+        let mut cuts = Vec::with_capacity(n - 1);
+        while cuts.len() < n - 1 {
+            let c = self.range(1, total as u64 - 1) as usize;
+            if !cuts.contains(&c) {
+                cuts.push(c);
+            }
+        }
+        cuts.sort_unstable();
+        cuts.push(total);
+        let mut parts = Vec::with_capacity(n);
+        let mut prev = 0;
+        for c in cuts {
+            parts.push(c - prev);
+            prev = c;
+        }
+        parts
+    }
+
+    /// Shuffle a slice in place (Fisher-Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len() as u64 - 1) as usize]
+    }
+}
+
+/// Minimal property-test driver: run `prop` on `cases` random inputs drawn
+/// through the provided closure. On failure, panics with the case index and
+/// derived seed so the exact input is reproducible.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> std::result::Result<(), String>,
+) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(i as u64);
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} (seed {case_seed}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut rng = Pcg64::new(8);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn range_bounds_inclusive() {
+        let mut rng = Pcg64::new(10);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..1000 {
+            let v = rng.range(3, 6);
+            assert!((3..=6).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn partition_sums_and_positivity() {
+        let mut rng = Pcg64::new(11);
+        for _ in 0..200 {
+            let total = rng.range(4, 40) as usize;
+            let n = rng.range(1, total.min(6) as u64) as usize;
+            let parts = rng.partition(total, n);
+            assert_eq!(parts.len(), n);
+            assert_eq!(parts.iter().sum::<usize>(), total);
+            assert!(parts.iter().all(|&p| p >= 1));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(12);
+        let mut xs: Vec<u32> = (0..20).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn forall_reports_failures() {
+        forall("always_fails", 1, 5, |rng| rng.range(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall(
+            "partition_sum",
+            2,
+            50,
+            |rng| {
+                let total = rng.range(5, 30) as usize;
+                let n = rng.range(1, 4) as usize;
+                (total, n, rng.partition(total, n))
+            },
+            |(total, _n, parts)| {
+                if parts.iter().sum::<usize>() == *total {
+                    Ok(())
+                } else {
+                    Err("sum mismatch".into())
+                }
+            },
+        );
+    }
+}

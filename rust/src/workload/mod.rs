@@ -1,0 +1,104 @@
+//! Synthetic request workloads standing in for the paper's QNLI/GLUE
+//! subset (DESIGN.md §4): only the sequence-length distribution matters to
+//! the systems behaviour, so we reproduce that — mean length 284, the
+//! paper's reported subset average — plus the fixed-length workloads the
+//! scaling experiments use.
+
+use crate::testkit::Pcg64;
+
+/// One single-shot inference request (the paper's "single voice command").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Token count of the input sequence.
+    pub seq_len: usize,
+    /// Arrival offset from workload start, seconds.
+    pub arrival_s: f64,
+}
+
+/// QNLI-like length distribution: clipped normal around the paper's
+/// average of 284 tokens.
+#[derive(Clone, Debug)]
+pub struct QnliWorkload {
+    pub mean_len: usize,
+    pub std_len: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Mean inter-arrival gap in seconds (single-shot requests are sparse).
+    pub mean_gap_s: f64,
+}
+
+impl Default for QnliWorkload {
+    fn default() -> Self {
+        Self { mean_len: 284, std_len: 60.0, min_len: 16, max_len: 512, mean_gap_s: 2.0 }
+    }
+}
+
+impl QnliWorkload {
+    /// Generate `n` requests deterministically from `seed`.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Pcg64::new(seed ^ 0x9a1_1e57);
+        let mut t = 0.0f64;
+        (0..n as u64)
+            .map(|id| {
+                let len = (self.mean_len as f64 + rng.normal() as f64 * self.std_len)
+                    .round()
+                    .clamp(self.min_len as f64, self.max_len as f64) as usize;
+                // Exponential inter-arrival via inverse CDF.
+                t += -self.mean_gap_s * (1.0 - rng.uniform() as f64).ln();
+                Request { id, seq_len: len, arrival_s: t }
+            })
+            .collect()
+    }
+}
+
+/// Fixed-length workload (Table I uses 30; Fig 10 uses 96/device; Fig 11
+/// uses 384).
+pub fn fixed_length(n: usize, seq_len: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| Request { id, seq_len, arrival_s: id as f64 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let w = QnliWorkload::default();
+        assert_eq!(w.generate(20, 1), w.generate(20, 1));
+        assert_ne!(w.generate(20, 1), w.generate(20, 2));
+    }
+
+    #[test]
+    fn mean_length_near_paper_subset() {
+        let w = QnliWorkload::default();
+        let reqs = w.generate(2000, 7);
+        let mean: f64 = reqs.iter().map(|r| r.seq_len as f64).sum::<f64>() / 2000.0;
+        assert!((mean - 284.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let w = QnliWorkload { std_len: 500.0, ..Default::default() };
+        for r in w.generate(500, 3) {
+            assert!((w.min_len..=w.max_len).contains(&r.seq_len));
+        }
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let reqs = QnliWorkload::default().generate(100, 4);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn fixed_length_is_fixed() {
+        let reqs = fixed_length(5, 384);
+        assert!(reqs.iter().all(|r| r.seq_len == 384));
+        assert_eq!(reqs.len(), 5);
+    }
+}

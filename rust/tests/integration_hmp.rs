@@ -1,0 +1,218 @@
+//! End-to-end numerics: distributed HMP over real PJRT workers must equal
+//! single-device local inference — the correctness contract of the whole
+//! paper ("ensure consistency between collaborative and local inference
+//! results", §III-B.4), verified across device counts, overlap modes,
+//! artifact flavors, and planner-shaped (non-uniform) partitions.
+
+use galaxy::cluster::{local::LocalRunner, RealCluster};
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::model::{ModelConfig, WeightGen};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::{equal_seq_partition, Partition, Plan};
+use galaxy::tensor::{nn, Tensor2};
+
+const SEED: u64 = 42;
+const TOL: f32 = 2e-3;
+
+fn manifest() -> Manifest {
+    let dir = default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    Manifest::load(&dir).unwrap()
+}
+
+fn plan_with(heads: Vec<usize>, units: Vec<usize>, seq: usize) -> Plan {
+    let d = heads.len();
+    Plan {
+        partition: Partition {
+            heads,
+            mlp_units: units,
+            seq: equal_seq_partition(seq, d),
+        },
+        pred_mha_s: 0.0,
+        pred_mlp_s: 0.0,
+        pred_conn_s: 0.0,
+        mem_mb: vec![0.0; d],
+    }
+}
+
+/// Native (pure-Rust oracle) full-model forward.
+fn oracle_forward(model: &ModelConfig, x: &Tensor2, mask: &[f32]) -> Tensor2 {
+    let gen = WeightGen::new(model, SEED);
+    let mut act = x.clone();
+    for l in 0..model.layers {
+        let p = gen.layer(l);
+        act = nn::layer_local(&act, &p, mask, model.heads, model.head_dim(), model.ln_eps)
+            .unwrap();
+    }
+    act
+}
+
+fn run_cluster(
+    plan: &Plan,
+    overlap: OverlapMode,
+    flavor: &str,
+    x: &Tensor2,
+    mask: &[f32],
+) -> Tensor2 {
+    let model = ModelConfig::galaxy_mini();
+    let m = manifest();
+    let mut cluster = RealCluster::spawn(&model, &m, plan, overlap, flavor, SEED).unwrap();
+    cluster.infer(x, mask).unwrap()
+}
+
+fn input(seq: usize) -> (Tensor2, Vec<f32>) {
+    let model = ModelConfig::galaxy_mini();
+    let x = WeightGen::new(&model, SEED).input(7, seq);
+    (x, vec![0.0; seq])
+}
+
+#[test]
+fn hmp_equals_local_two_devices() {
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let got = run_cluster(&plan_with(vec![6, 6], vec![6, 6], 60), OverlapMode::Tiled, "xla", &x, &mask);
+    assert!(
+        got.allclose(&want, TOL, TOL),
+        "HMP(2) vs oracle diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn hmp_equals_local_three_devices_heterogeneous_partition() {
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    // planner-like skewed partition (fast/medium/slow device)
+    let got = run_cluster(&plan_with(vec![6, 4, 2], vec![7, 3, 2], 60), OverlapMode::Tiled, "xla", &x, &mask);
+    assert!(
+        got.allclose(&want, TOL, TOL),
+        "HMP(3, skewed) vs oracle diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn hmp_equals_local_four_devices() {
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let got = run_cluster(&plan_with(vec![3, 3, 3, 3], vec![3, 3, 3, 3], 60), OverlapMode::Tiled, "xla", &x, &mask);
+    assert!(
+        got.allclose(&want, TOL, TOL),
+        "HMP(4) vs oracle diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn single_device_cluster_degenerates_to_local() {
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let got = run_cluster(&plan_with(vec![12], vec![12], 60), OverlapMode::Tiled, "xla", &x, &mask);
+    assert!(got.allclose(&want, TOL, TOL));
+}
+
+#[test]
+fn overlap_and_serial_modes_agree() {
+    // The tile-based overlapping must not change results (paper §III-D:
+    // "without ... yielding results inconsistent with non-overlapping").
+    let (x, mask) = input(60);
+    let plan = plan_with(vec![5, 4, 3], vec![4, 4, 4], 60);
+    let tiled = run_cluster(&plan, OverlapMode::Tiled, "xla", &x, &mask);
+    let serial = run_cluster(&plan, OverlapMode::None, "xla", &x, &mask);
+    assert!(
+        tiled.allclose(&serial, 1e-4, 1e-4),
+        "overlap changed numerics: diff {}",
+        tiled.max_abs_diff(&serial).unwrap()
+    );
+}
+
+#[test]
+fn pallas_flavor_cluster_matches_xla_flavor() {
+    // Serial mode exercises the fused pallas-kernel artifacts end-to-end.
+    let (x, mask) = input(60);
+    let plan = plan_with(vec![6, 6], vec![6, 6], 60);
+    let a = run_cluster(&plan, OverlapMode::None, "pallas", &x, &mask);
+    let b = run_cluster(&plan, OverlapMode::None, "xla", &x, &mask);
+    assert!(
+        a.allclose(&b, 1e-3, 1e-3),
+        "pallas/xla drift {}",
+        a.max_abs_diff(&b).unwrap()
+    );
+}
+
+#[test]
+fn local_runner_matches_oracle() {
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let mut local = LocalRunner::new(&model, &manifest(), "xla", SEED).unwrap();
+    let got = local.infer(&x, &mask).unwrap();
+    assert!(
+        got.allclose(&want, TOL, TOL),
+        "local PJRT vs native oracle diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn zero_head_device_still_correct() {
+    // A device can end up with 0 heads/units (memory-starved) — it must
+    // still relay ring traffic and contribute zero partials.
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let got = run_cluster(&plan_with(vec![12, 0], vec![0, 12], 60), OverlapMode::Tiled, "xla", &x, &mask);
+    assert!(
+        got.allclose(&want, TOL, TOL),
+        "zero-shard device broke numerics: diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn masked_padding_preserves_valid_rows() {
+    // Pad to 60 with masked tail; valid rows must match an HMP run whose
+    // padded rows hold different garbage.
+    let model = ModelConfig::galaxy_mini();
+    let gen = WeightGen::new(&model, SEED);
+    let valid = 45usize;
+    let xv = gen.input(9, valid);
+    let mut mask = vec![0.0f32; 60];
+    for m in mask.iter_mut().skip(valid) {
+        *m = -1.0e9;
+    }
+    let pad_zero = Tensor2::concat_rows(&[xv.clone(), Tensor2::zeros(60 - valid, model.hidden)]).unwrap();
+    let pad_garbage =
+        Tensor2::concat_rows(&[xv, Tensor2::full(60 - valid, model.hidden, 3.5)]).unwrap();
+    let plan = plan_with(vec![6, 6], vec![6, 6], 60);
+    let a = run_cluster(&plan, OverlapMode::Tiled, "xla", &pad_zero, &mask);
+    let b = run_cluster(&plan, OverlapMode::Tiled, "xla", &pad_garbage, &mask);
+    let av = a.slice_rows(0, valid).unwrap();
+    let bv = b.slice_rows(0, valid).unwrap();
+    assert!(
+        av.allclose(&bv, 1e-4, 1e-4),
+        "padding leaked into valid rows: diff {}",
+        av.max_abs_diff(&bv).unwrap()
+    );
+}
+
+#[test]
+fn repeated_inference_is_deterministic() {
+    let (x, mask) = input(60);
+    let plan = plan_with(vec![4, 4, 4], vec![4, 4, 4], 60);
+    let model = ModelConfig::galaxy_mini();
+    let m = manifest();
+    let mut cluster = RealCluster::spawn(&model, &m, &plan, OverlapMode::Tiled, "xla", SEED).unwrap();
+    let a = cluster.infer(&x, &mask).unwrap();
+    let b = cluster.infer(&x, &mask).unwrap();
+    assert_eq!(a, b, "same input twice must be bit-identical");
+    assert_eq!(cluster.report().requests, 2);
+    assert!(cluster.report().ring_bytes > 0);
+}

@@ -1,0 +1,299 @@
+//! Planner + simulator integration: the OOM matrix and speedup directions
+//! of paper Table IV / Fig 9 must emerge from the composed system
+//! (profiler → planner → sim engine → baselines).
+
+use galaxy::baselines::{self, BaselineKind};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+
+const SEQ: usize = 284;
+
+fn galaxy_latency(model: &ModelConfig, env: &EdgeEnv, mbps: f64) -> Option<f64> {
+    let profile = Profiler::analytic(model, env, SEQ).profile();
+    let plan = Planner::new(model, env, &profile).plan().ok()?;
+    Some(
+        SimEngine::new(model, env, plan, NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::Tiled)
+            .run_inference(SEQ)
+            .total_s(),
+    )
+}
+
+fn baseline_latency(kind: BaselineKind, model: &ModelConfig, env: &EdgeEnv, mbps: f64) -> Option<f64> {
+    baselines::simulate(kind, model, env, NetParams::mbps(mbps), SEQ)
+        .ok()
+        .map(|r| r.total_s())
+}
+
+#[test]
+fn table4_oom_matrix() {
+    // Paper Table IV availability matrix at 125 Mbps:
+    //   DistilBert/Bert-L on A: all three run.
+    //   GPT2-L on A/B: Galaxy + M-LM run, SP OOM.
+    //   OPT-L on A/B/C: Galaxy + M-LM run, SP OOM.
+    //   OPT-XL on A/B: only Galaxy on... (A: M-LM OOM; B: M-LM OOM);
+    //   OPT-XL on C: Galaxy + M-LM run.
+    let a = EdgeEnv::preset_a();
+    let b = EdgeEnv::preset_b();
+    let c = EdgeEnv::preset_c();
+
+    for m in [ModelConfig::distilbert(), ModelConfig::bert_large()] {
+        assert!(galaxy_latency(&m, &a, 125.0).is_some());
+        assert!(baseline_latency(BaselineKind::MegatronLm, &m, &a, 125.0).is_some());
+        assert!(baseline_latency(BaselineKind::SeqPar, &m, &a, 125.0).is_some());
+    }
+    let gpt2 = ModelConfig::gpt2_large();
+    for env in [&a, &b] {
+        assert!(galaxy_latency(&gpt2, env, 125.0).is_some());
+        assert!(baseline_latency(BaselineKind::MegatronLm, &gpt2, env, 125.0).is_some());
+        assert!(baseline_latency(BaselineKind::SeqPar, &gpt2, env, 125.0).is_none(), "SP must OOM GPT2-L");
+    }
+    let optl = ModelConfig::opt_large();
+    for env in [&a, &b, &c] {
+        assert!(galaxy_latency(&optl, env, 125.0).is_some());
+        assert!(baseline_latency(BaselineKind::SeqPar, &optl, env, 125.0).is_none());
+    }
+    let optxl = ModelConfig::opt_xl();
+    assert!(baseline_latency(BaselineKind::MegatronLm, &optxl, &a, 125.0).is_none());
+    assert!(baseline_latency(BaselineKind::MegatronLm, &optxl, &b, 125.0).is_none());
+    assert!(baseline_latency(BaselineKind::MegatronLm, &optxl, &c, 125.0).is_some());
+    assert!(galaxy_latency(&optxl, &c, 125.0).is_some());
+    // Galaxy itself cannot host OPT-XL on env A (3 GB aggregate < 5 GB).
+    assert!(galaxy_latency(&optxl, &a, 125.0).is_none());
+}
+
+#[test]
+fn galaxy_beats_mlm_homogeneous() {
+    // Table IV: 1.26x–1.46x over M-LM across models/envs at 125 Mbps.
+    for (model, env) in [
+        (ModelConfig::distilbert(), EdgeEnv::preset_a()),
+        (ModelConfig::bert_large(), EdgeEnv::preset_a()),
+        (ModelConfig::bert_large(), EdgeEnv::preset_b()),
+        (ModelConfig::gpt2_large(), EdgeEnv::preset_b()),
+        (ModelConfig::opt_large(), EdgeEnv::preset_c()),
+    ] {
+        let g = galaxy_latency(&model, &env, 125.0).unwrap();
+        let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, 125.0).unwrap();
+        let speedup = m / g;
+        assert!(
+            (1.05..=1.8).contains(&speedup),
+            "{} env {}: speedup {speedup:.2} out of paper band",
+            model.kind.name(),
+            env.name
+        );
+    }
+}
+
+#[test]
+fn galaxy_close_to_or_beats_sp_where_sp_fits() {
+    // Table IV: ~1.08-1.11x over SP (SP needs less sync). Allow a narrow
+    // band around parity.
+    for (model, env) in [
+        (ModelConfig::distilbert(), EdgeEnv::preset_a()),
+        (ModelConfig::bert_large(), EdgeEnv::preset_a()),
+        (ModelConfig::bert_large(), EdgeEnv::preset_b()),
+    ] {
+        let g = galaxy_latency(&model, &env, 125.0).unwrap();
+        let s = baseline_latency(BaselineKind::SeqPar, &model, &env, 125.0).unwrap();
+        let speedup = s / g;
+        assert!(
+            (0.95..=1.35).contains(&speedup),
+            "{} env {}: Galaxy-vs-SP {speedup:.2}",
+            model.kind.name(),
+            env.name
+        );
+    }
+}
+
+#[test]
+fn fig9_heterogeneous_wins_grow() {
+    // Fig 9: in heterogeneous envs Galaxy's margin over M-LM/SP grows to
+    // 1.3x–2.5x, because the baselines split equally and straggle on the
+    // slow device.
+    for env in [EdgeEnv::preset_d(), EdgeEnv::preset_e(), EdgeEnv::preset_f()] {
+        let model = ModelConfig::bert_large();
+        let g = galaxy_latency(&model, &env, 125.0).unwrap();
+        let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, 125.0).unwrap();
+        let speedup = m / g;
+        assert!(
+            speedup > 1.2,
+            "env {}: heterogeneous speedup {speedup:.2} should exceed 1.2x",
+            env.name
+        );
+        assert!(speedup < 3.0, "env {}: speedup {speedup:.2} implausibly high", env.name);
+    }
+}
+
+#[test]
+fn heterogeneous_speedup_exceeds_homogeneous() {
+    let model = ModelConfig::bert_large();
+    let homog = {
+        let env = EdgeEnv::preset_a();
+        let g = galaxy_latency(&model, &env, 125.0).unwrap();
+        baseline_latency(BaselineKind::MegatronLm, &model, &env, 125.0).unwrap() / g
+    };
+    let hetero = {
+        let env = EdgeEnv::preset_e(); // L + S: max capacity spread
+        let g = galaxy_latency(&model, &env, 125.0).unwrap();
+        baseline_latency(BaselineKind::MegatronLm, &model, &env, 125.0).unwrap() / g
+    };
+    assert!(
+        hetero > homog,
+        "hetero margin {hetero:.2} should beat homog {homog:.2}"
+    );
+}
+
+#[test]
+fn fig8_bandwidth_trend() {
+    // Fig 8: Galaxy wins at every bandwidth (paper band 1.04x–1.45x), and
+    // latency itself falls monotonically as bandwidth rises. The *margin*
+    // is not monotone — it peaks where overlap can hide the most (both
+    // strategies ship the same wire volume, so at very low bandwidth the
+    // ratio compresses toward 1, and at very high bandwidth comm stops
+    // mattering).
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let mut prev_latency = f64::INFINITY;
+    let mut speedups = Vec::new();
+    for mbps in [25.0, 50.0, 125.0, 250.0, 500.0] {
+        let g = galaxy_latency(&model, &env, mbps).unwrap();
+        let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, mbps).unwrap();
+        let speedup = m / g;
+        assert!(
+            (1.02..=1.7).contains(&speedup),
+            "{mbps} Mbps: speedup {speedup:.2} out of Fig-8 band"
+        );
+        // Non-increasing: once overlap fully hides the wire, latency
+        // plateaus at the compute floor.
+        assert!(
+            g <= prev_latency * (1.0 + 1e-9),
+            "{mbps} Mbps: latency must not rise with bandwidth"
+        );
+        prev_latency = g;
+        speedups.push(speedup);
+    }
+    // High-bandwidth margin is below the peak margin.
+    let peak = speedups.iter().cloned().fold(0.0, f64::max);
+    assert!(*speedups.last().unwrap() <= peak + 1e-12);
+}
+
+#[test]
+fn fig10_weak_scaling_efficiency() {
+    // Fig 10: 4-way weak scaling (seq 96/device, 1000 Mbps, single layer)
+    // reaches >= ~75% of linear FLOPS scaling (paper: 81% GPT2-L, 86%
+    // OPT-XL; our band is slightly wider to absorb model differences).
+    for kind in [ModelKind::Gpt2Large, ModelKind::OptXl] {
+        let mut model = ModelConfig::by_kind(kind);
+        model.layers = 1; // paper: single layer to dodge OOM
+        let envs = [EdgeEnv::preset_a(), EdgeEnv::preset_b(), EdgeEnv::preset_c()];
+        let flops_1 = {
+            let env = EdgeEnv::new("1", &[galaxy::sim::DeviceClass::NanoM]);
+            let t = galaxy_latency_seq(&model, &env, 1000.0, 96).unwrap();
+            model.total_flops(96) as f64 / t
+        };
+        let (env4, seq4) = (&envs[2], 96 * 4);
+        let t4 = galaxy_latency_seq(&model, env4, 1000.0, seq4).unwrap();
+        let flops_4 = model.total_flops(seq4) as f64 / t4;
+        let eff = flops_4 / (4.0 * flops_1);
+        assert!(
+            (0.6..=1.02).contains(&eff),
+            "{}: weak-scaling efficiency {eff:.2}",
+            model.kind.name()
+        );
+    }
+}
+
+fn galaxy_latency_seq(model: &ModelConfig, env: &EdgeEnv, mbps: f64, seq: usize) -> Option<f64> {
+    let profile = Profiler::analytic(model, env, seq).profile();
+    let plan = Planner::new(model, env, &profile).plan().ok()?;
+    Some(
+        SimEngine::new(model, env, plan, NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::Tiled)
+            .run_inference(seq)
+            .total_s(),
+    )
+}
+
+#[test]
+fn fig11_strong_scaling_over_local() {
+    // Fig 11: at seq 384 and 1000 Mbps, 4-way Galaxy cuts per-layer latency
+    // ~3x vs Local (paper: 3.05x GPT2-L, 3.24x OPT-XL).
+    for kind in [ModelKind::Gpt2Large, ModelKind::OptXl] {
+        let mut model = ModelConfig::by_kind(kind);
+        model.layers = 1;
+        let solo = EdgeEnv::new("1", &[galaxy::sim::DeviceClass::NanoM]);
+        let local = {
+            let dev = &solo.devices[0];
+            dev.mha_time(&model, 384, model.heads)
+                + dev.mlp_time(&model, 384, model.heads)
+                + 2.0 * dev.connective_time(&model, 384)
+        };
+        let t4 = galaxy_latency_seq(&model, &EdgeEnv::preset_c(), 1000.0, 384).unwrap();
+        let speedup = local / t4;
+        assert!(
+            (2.3..=4.0).contains(&speedup),
+            "{}: strong-scaling speedup {speedup:.2}",
+            model.kind.name()
+        );
+    }
+}
+
+#[test]
+fn table5_gpu_environment() {
+    // Table V: 2x Nano-GPU @ 500 Mbps — Galaxy beats M-LM on every model
+    // it can host, with larger margins than CPU env A shows at 125 Mbps.
+    let env = EdgeEnv::preset_gpu();
+    for model in [ModelConfig::distilbert(), ModelConfig::bert_large(), ModelConfig::gpt2_large()] {
+        let g = galaxy_latency(&model, &env, 500.0).unwrap();
+        let m = baseline_latency(BaselineKind::MegatronLm, &model, &env, 500.0).unwrap();
+        let speedup = m / g;
+        assert!(
+            speedup > 1.1,
+            "GPU {}: speedup {speedup:.2} too small",
+            model.kind.name()
+        );
+    }
+}
+
+#[test]
+fn planner_runtime_feasibility_equivalence() {
+    // If the planner says feasible, the sim must report per-device memory
+    // within budget; if infeasible, no baseline trick can place it under
+    // Galaxy's own partitioning rules.
+    for kind in ModelKind::ALL_PAPER {
+        let model = ModelConfig::by_kind(kind);
+        for env in [EdgeEnv::preset_a(), EdgeEnv::preset_e(), EdgeEnv::preset_f()] {
+            let profile = Profiler::analytic(&model, &env, SEQ).profile();
+            match Planner::new(&model, &env, &profile).plan() {
+                Ok(plan) => {
+                    for (dev, mem) in env.devices.iter().zip(plan.mem_mb.iter()) {
+                        assert!(
+                            mem <= &dev.budget_mb,
+                            "{} env {}: planned {mem:.0}MB > {:.0}MB",
+                            model.kind.name(),
+                            env.name,
+                            dev.budget_mb
+                        );
+                    }
+                }
+                Err(_) => {
+                    // Aggregate budget must genuinely be tight: the model's
+                    // layer weights alone exceed 95% of the cluster budget.
+                    let layer_mb =
+                        (model.layers * (model.mha_bytes() + model.mlp_bytes())) as f64 / 1e6;
+                    assert!(
+                        layer_mb > env.total_budget_mb() * 0.95,
+                        "{} env {}: planner failed despite {:.0}MB fitting {:.0}MB",
+                        model.kind.name(),
+                        env.name,
+                        layer_mb,
+                        env.total_budget_mb()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Runtime/artifact integration: every artifact the schedules can request
+//! exists, compiles, and composes — the tile algebra (paper Eq. 8/10) is
+//! verified through PJRT itself, not just in Python.
+
+use std::rc::Rc;
+
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::model::{ModelConfig, WeightGen};
+use galaxy::parallel::schedule::ShardSpec;
+use galaxy::planner::equal_seq_partition;
+use galaxy::runtime::{literal, Runtime};
+use galaxy::tensor::{nn, Tensor2};
+
+fn runtime() -> Runtime {
+    let dir = default_artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts`"
+    );
+    Runtime::new(Rc::new(Manifest::load(&dir).unwrap())).unwrap()
+}
+
+#[test]
+fn every_schedulable_artifact_exists() {
+    // Any shard the planner can emit (k, u in 0..=12, any D in 1..=4) must
+    // have its artifacts in the manifest for both modes.
+    let rt = runtime();
+    let model = ModelConfig::galaxy_mini();
+    for d in 1..=4usize {
+        let tiles = equal_seq_partition(model.hidden * 0 + 60, d);
+        for k in 0..=model.heads {
+            let spec = ShardSpec {
+                device: 0,
+                k_heads: k,
+                head_offset: 0,
+                u_units: model.heads - k,
+                unit_offset: 0,
+                seq_rows: tiles[0],
+                seq_offset: 0,
+            };
+            for tiled in [true, false] {
+                for name in spec.artifact_names(&tiles, "xla", tiled) {
+                    assert!(
+                        rt.manifest().program(&name).is_some(),
+                        "missing artifact {name} (d={d}, k={k}, tiled={tiled})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qkv_tiles_compose_to_fused_qkv_through_pjrt() {
+    // Eq. 8 on real executables: concat of per-tile QKV == full-GEMM rows.
+    let rt = runtime();
+    let model = ModelConfig::galaxy_mini();
+    let gen = WeightGen::new(&model, 5);
+    let p = gen.layer(0);
+    let x = gen.input(0, 60);
+    let k = 6usize;
+    let kd = k * model.head_dim();
+    let wqkv = p.shard_wqkv(0, k, model.heads, model.head_dim()).unwrap();
+    let w_lit = literal::from_tensor(&wqkv).unwrap();
+    // Fused: qkv over all 60 rows via tile t60.
+    let x_lit = literal::from_tensor(&x).unwrap();
+    let fused = rt
+        .exec_tensor("qkv_tile_t60_k6__xla", &[&x_lit, &w_lit], 60, 3 * kd)
+        .unwrap();
+    // Tiled 3x20.
+    let mut parts = Vec::new();
+    for r in 0..3 {
+        let xt = x.slice_rows(r * 20, 20).unwrap();
+        let xt_lit = literal::from_tensor(&xt).unwrap();
+        parts.push(
+            rt.exec_tensor("qkv_tile_t20_k6__xla", &[&xt_lit, &w_lit], 20, 3 * kd)
+                .unwrap(),
+        );
+    }
+    let tiled = Tensor2::concat_rows(&parts).unwrap();
+    assert!(
+        tiled.allclose(&fused, 1e-5, 1e-5),
+        "tile concat != fused, diff {}",
+        tiled.max_abs_diff(&fused).unwrap()
+    );
+}
+
+#[test]
+fn gemm2_tile_partials_reduce_to_full_mlp() {
+    // Eq. 10 on real executables: summing per-device GEMM2 partials equals
+    // the fused MLP shard output.
+    let rt = runtime();
+    let model = ModelConfig::galaxy_mini();
+    let gen = WeightGen::new(&model, 6);
+    let p = gen.layer(1);
+    let x = gen.input(1, 60);
+    let unit = model.mlp_unit();
+    let x_lit = literal::from_tensor(&x).unwrap();
+    let w1_lit = literal::from_tensor(&p.w1).unwrap();
+    let w2_lit = literal::from_tensor(&p.w2).unwrap();
+    let full = rt
+        .exec_tensor("mlp_shard_u12__xla", &[&x_lit, &w1_lit, &w2_lit], 60, model.hidden)
+        .unwrap();
+    // Two shards of 6 units each, each computing gemm1 then tiled gemm2.
+    let mut acc = Tensor2::zeros(60, model.hidden);
+    for s in 0..2 {
+        let w1 = p.shard_w1(s * 6 * unit, 6 * unit).unwrap();
+        let w2 = p.shard_w2(s * 6 * unit, 6 * unit).unwrap();
+        let w1s_lit = literal::from_tensor(&w1).unwrap();
+        let w2s_lit = literal::from_tensor(&w2).unwrap();
+        let e = rt
+            .exec_tensor("mlp_gemm1_tile_t60_u6__xla", &[&x_lit, &w1s_lit], 60, 6 * unit)
+            .unwrap();
+        // gemm2 in two row-tiles of 30
+        for r in 0..2 {
+            let et = e.slice_rows(r * 30, 30).unwrap();
+            let et_lit = literal::from_tensor(&et).unwrap();
+            let o = rt
+                .exec_tensor("mlp_gemm2_tile_t30_u6__xla", &[&et_lit, &w2s_lit], 30, model.hidden)
+                .unwrap();
+            for rr in 0..30 {
+                for c in 0..model.hidden {
+                    acc.set(r * 30 + rr, c, acc.get(r * 30 + rr, c) + o.get(rr, c));
+                }
+            }
+        }
+    }
+    assert!(
+        acc.allclose(&full, 1e-3, 1e-3),
+        "partials != fused, diff {}",
+        acc.max_abs_diff(&full).unwrap()
+    );
+}
+
+#[test]
+fn attn_core_matches_native_oracle() {
+    let rt = runtime();
+    let model = ModelConfig::galaxy_mini();
+    let gen = WeightGen::new(&model, 7);
+    let k = 4usize;
+    let kd = k * model.head_dim();
+    let q = gen.input(10, 60).slice_cols(0, kd).unwrap();
+    let kk = gen.input(11, 60).slice_cols(0, kd).unwrap();
+    let v = gen.input(12, 60).slice_cols(0, kd).unwrap();
+    let mut mask = vec![0.0f32; 60];
+    mask[50..].fill(-1e9);
+    let q_lit = literal::from_tensor(&q).unwrap();
+    let k_lit = literal::from_tensor(&kk).unwrap();
+    let v_lit = literal::from_tensor(&v).unwrap();
+    let m_lit = literal::from_slice(&mask);
+    let got = rt
+        .exec_tensor("attn_core_k4__xla", &[&q_lit, &k_lit, &v_lit, &m_lit], 60, kd)
+        .unwrap();
+    let want = nn::attention(&q, &kk, &v, &mask, k, model.head_dim()).unwrap();
+    assert!(
+        got.allclose(&want, 1e-4, 1e-4),
+        "attn_core vs oracle diff {}",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn pallas_connective_matches_xla_connective() {
+    let rt = runtime();
+    let model = ModelConfig::galaxy_mini();
+    let gen = WeightGen::new(&model, 8);
+    let p = gen.layer(2);
+    let g = gen.input(20, 15);
+    let res = gen.input(21, 15);
+    let g_lit = literal::from_tensor(&g).unwrap();
+    let res_lit = literal::from_tensor(&res).unwrap();
+    let gamma = literal::from_slice(&p.gamma2);
+    let beta = literal::from_slice(&p.beta2);
+    let args: [&xla::Literal; 4] = [&g_lit, &res_lit, &gamma, &beta];
+    let a = rt.exec_tensor("connective_t15__xla", &args, 15, model.hidden).unwrap();
+    let b = rt.exec_tensor("connective_t15__pallas", &args, 15, model.hidden).unwrap();
+    assert!(a.allclose(&b, 1e-4, 1e-4));
+}
+
+#[test]
+fn warm_up_counts_and_caches() {
+    let rt = runtime();
+    let n = rt
+        .warm_up(["connective_t15__xla", "connective_t20__xla", "connective_t15__xla"])
+        .unwrap();
+    assert_eq!(n, 3);
+    assert_eq!(rt.cached_executables(), 2);
+    assert_eq!(rt.pjrt_calls(), 0, "warm-up must not execute");
+}
+
+#[test]
+fn manifest_covers_all_seq_tiles() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert_eq!(m.seq_tiles, vec![15, 20, 30, 60]);
+    for &t in &m.seq_tiles {
+        for flavor in ["xla", "pallas"] {
+            assert!(m.program(&format!("connective_t{t}__{flavor}")).is_some());
+        }
+    }
+}

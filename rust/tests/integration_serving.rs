@@ -1,0 +1,99 @@
+//! Serving-path integration: the FIFO single-shot server over a live
+//! cluster — padding/masking, workload batches, metrics, and the
+//! profiler-planner-cluster composition the `galaxy serve` command uses.
+
+use galaxy::cluster::RealCluster;
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::model::ModelConfig;
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::serving::{pad_and_mask, Server};
+use galaxy::sim::{DeviceClass, EdgeEnv};
+use galaxy::tensor::Tensor2;
+use galaxy::workload::{fixed_length, QnliWorkload};
+
+const SEED: u64 = 99;
+
+fn spawn(d: usize, overlap: OverlapMode) -> (ModelConfig, RealCluster) {
+    let dir = default_artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let model = ModelConfig::galaxy_mini();
+    let manifest = Manifest::load(&dir).unwrap();
+    let env = EdgeEnv::new("test", &vec![DeviceClass::NanoM; d]);
+    let profile = Profiler::analytic(&model, &env, 60).profile();
+    let plan = Planner::new(&model, &env, &profile).plan().unwrap();
+    let cluster = RealCluster::spawn(&model, &manifest, &plan, overlap, "xla", SEED).unwrap();
+    (model, cluster)
+}
+
+#[test]
+fn serve_mixed_length_workload() {
+    let (model, cluster) = spawn(2, OverlapMode::Tiled);
+    let mut server = Server::new(cluster, &model, SEED, 60);
+    let reqs = QnliWorkload {
+        mean_len: 40,
+        std_len: 12.0,
+        min_len: 8,
+        max_len: 60,
+        mean_gap_s: 0.0,
+    }
+    .generate(6, SEED);
+    let served = server.serve_all(&reqs).unwrap();
+    assert_eq!(served.len(), 6);
+    for (req, s) in reqs.iter().zip(served.iter()) {
+        assert_eq!(s.output.rows(), req.seq_len, "valid rows preserved");
+        assert_eq!(s.output.cols(), model.hidden);
+        assert!(s.output.data().iter().all(|v| v.is_finite()));
+        assert!(s.latency_s > 0.0);
+    }
+    assert_eq!(server.stats().count(), 6);
+    assert!(server.stats().mean_s() > 0.0);
+    assert!(server.stats().percentile_s(95.0) >= server.stats().percentile_s(50.0));
+}
+
+#[test]
+fn identical_requests_identical_outputs() {
+    let (model, cluster) = spawn(3, OverlapMode::Tiled);
+    let mut server = Server::new(cluster, &model, SEED, 60);
+    let reqs = fixed_length(2, 48);
+    // fixed_length gives ids 0 and 1 → different inputs; same id twice
+    // must give the same output.
+    let a = server.serve(&reqs[0]).unwrap();
+    let b = server.serve(&reqs[0]).unwrap();
+    let c = server.serve(&reqs[1]).unwrap();
+    assert_eq!(a.output, b.output);
+    assert_ne!(a.output, c.output);
+}
+
+#[test]
+fn full_length_requests_unpadded() {
+    let (model, cluster) = spawn(2, OverlapMode::None);
+    let mut server = Server::new(cluster, &model, SEED, 60);
+    let served = server.serve(&fixed_length(1, 60)[0]).unwrap();
+    assert_eq!(served.output.rows(), 60);
+}
+
+#[test]
+fn throughput_report_accumulates() {
+    let (model, cluster) = spawn(2, OverlapMode::Tiled);
+    let mut server = Server::new(cluster, &model, SEED, 60);
+    for r in fixed_length(4, 30) {
+        server.serve(&r).unwrap();
+    }
+    let rep = server.cluster().report();
+    assert_eq!(rep.requests, 4);
+    assert!(rep.pjrt_calls > 0);
+    assert!(rep.ring_bytes > 0);
+    assert!(rep.mean_latency_s() > 0.0);
+    assert!(rep.throughput_rps() > 0.0);
+}
+
+#[test]
+fn pad_and_mask_is_what_cluster_receives() {
+    // Glue-level check used by Server::serve.
+    let x = Tensor2::full(10, 4, 1.5);
+    let (p, m) = pad_and_mask(&x, 16).unwrap();
+    assert_eq!(p.rows(), 16);
+    assert_eq!(m.iter().filter(|&&v| v == 0.0).count(), 10);
+}

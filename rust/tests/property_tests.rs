@@ -1,0 +1,370 @@
+//! Property tests over the coordinator's invariants (planner, collectives,
+//! overlap schedules, cost model, sim engine), driven by the in-repo
+//! `testkit::forall` harness (DESIGN.md §4: offline registry has no
+//! proptest; counterexamples reproduce from the reported seed).
+
+use galaxy::collective::{reference, ring_all_gather, ring_reduce_scatter};
+use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::{equal_seq_partition, quantize_shares, Planner};
+use galaxy::profiler::Profiler;
+use galaxy::sim::{DeviceClass, DeviceSpec, EdgeEnv, NetParams, SimEngine};
+use galaxy::tensor::Tensor2;
+use galaxy::testkit::{forall, Pcg64};
+
+fn rand_tensor(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor2 {
+    Tensor2::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect()).unwrap()
+}
+
+fn random_env(rng: &mut Pcg64, d: usize) -> EdgeEnv {
+    let classes = [DeviceClass::NanoS, DeviceClass::NanoM, DeviceClass::NanoL];
+    EdgeEnv {
+        name: "rand".into(),
+        devices: (0..d)
+            .map(|i| {
+                let class = *rng.choose(&classes);
+                let budget = rng.range(300, 2000) as f64;
+                DeviceSpec::with_budget(i, class, budget)
+            })
+            .collect(),
+    }
+}
+
+fn random_model(rng: &mut Pcg64) -> ModelConfig {
+    let kind = *rng.choose(&[
+        ModelKind::DistilBert,
+        ModelKind::BertLarge,
+        ModelKind::Gpt2Large,
+        ModelKind::OptLarge,
+        ModelKind::OptXl,
+    ]);
+    ModelConfig::by_kind(kind)
+}
+
+// ---------------------------------------------------------------------
+// Planner invariants (paper Algorithm 1)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_planner_partitions_conserve_and_fit() {
+    forall(
+        "planner: Σheads=H, Σunits=H, Σseq=S, mem<=budget",
+        101,
+        150,
+        |rng| {
+            let d = rng.range(1, 4) as usize;
+            let env = random_env(rng, d);
+            let model = random_model(rng);
+            let seq = rng.range(16, 512) as usize;
+            (model, env, seq)
+        },
+        |(model, env, seq)| {
+            let profile = Profiler::analytic(model, env, *seq).profile();
+            match Planner::new(model, env, &profile).plan() {
+                Err(_) => Ok(()), // infeasible is a legal outcome
+                Ok(plan) => {
+                    let p = &plan.partition;
+                    if p.heads.iter().sum::<usize>() != model.heads {
+                        return Err(format!("heads {:?} != {}", p.heads, model.heads));
+                    }
+                    if p.mlp_units.iter().sum::<usize>() != model.heads {
+                        return Err(format!("units {:?} != {}", p.mlp_units, model.heads));
+                    }
+                    if p.seq.iter().sum::<usize>() != *seq {
+                        return Err(format!("seq {:?} != {seq}", p.seq));
+                    }
+                    for (dev, mem) in env.devices.iter().zip(plan.mem_mb.iter()) {
+                        if mem > &dev.budget_mb {
+                            return Err(format!(
+                                "dev {} mem {mem:.1} > budget {:.1}",
+                                dev.id, dev.budget_mb
+                            ));
+                        }
+                    }
+                    // Equal SP partition: spread <= 1 row.
+                    let (mn, mx) = (p.seq.iter().min().unwrap(), p.seq.iter().max().unwrap());
+                    if mx - mn > 1 {
+                        return Err(format!("seq partition {:?} not equal-split", p.seq));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_planner_feasible_whenever_generous_budgets() {
+    forall(
+        "planner: feasible when every device fits the whole model",
+        103,
+        60,
+        |rng| {
+            let d = rng.range(1, 4) as usize;
+            let model = random_model(rng);
+            let generous = model.weight_footprint_mb() * 2.0;
+            let env = EdgeEnv {
+                name: "gen".into(),
+                devices: (0..d)
+                    .map(|i| DeviceSpec::with_budget(i, DeviceClass::NanoM, generous))
+                    .collect(),
+            };
+            (model, env)
+        },
+        |(model, env)| {
+            let profile = Profiler::analytic(model, env, 128).profile();
+            Planner::new(model, env, &profile)
+                .plan()
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_conserves_total() {
+    forall(
+        "quantize_shares: Σ == total for any share vector",
+        104,
+        300,
+        |rng| {
+            let n = rng.range(1, 8) as usize;
+            let total = rng.range(1, 64) as usize;
+            let raw: Vec<f64> = (0..n).map(|_| rng.uniform() as f64 + 1e-6).collect();
+            let sum: f64 = raw.iter().sum();
+            (raw.into_iter().map(|r| r / sum).collect::<Vec<_>>(), total)
+        },
+        |(shares, total)| {
+            let q = quantize_shares(shares, *total);
+            if q.iter().sum::<usize>() == *total {
+                Ok(())
+            } else {
+                Err(format!("{q:?} sums to {} != {total}", q.iter().sum::<usize>()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_equal_seq_partition_balanced() {
+    forall(
+        "equal_seq_partition: sums, spread<=1, deterministic",
+        105,
+        300,
+        |rng| (rng.range(1, 2048) as usize, rng.range(1, 16) as usize),
+        |&(seq, n)| {
+            if n > seq {
+                return Ok(()); // degenerate; planner never asks for it
+            }
+            let p = equal_seq_partition(seq, n);
+            if p.iter().sum::<usize>() != seq {
+                return Err("sum".into());
+            }
+            let (mn, mx) = (p.iter().min().unwrap(), p.iter().max().unwrap());
+            if mx - mn > 1 {
+                return Err(format!("spread {p:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Collectives / overlap schedules (paper §III-D correctness claim)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ring_collectives_match_reference() {
+    forall(
+        "ring AG/RS == naive reference for any D, parts, payloads",
+        106,
+        120,
+        |rng| {
+            let d = rng.range(1, 6) as usize;
+            let cols = rng.range(1, 12) as usize;
+            let parts: Vec<usize> = (0..d).map(|_| rng.range(1, 6) as usize).collect();
+            let seq: usize = parts.iter().sum();
+            let partials: Vec<Tensor2> = (0..d).map(|_| rand_tensor(rng, seq, cols)).collect();
+            let shards: Vec<Tensor2> = parts.iter().map(|&r| rand_tensor(rng, r, cols)).collect();
+            (shards, partials, parts)
+        },
+        |(shards, partials, parts)| {
+            let want_ag = reference::all_gather(shards).map_err(|e| e.to_string())?;
+            for got in ring_all_gather(shards).map_err(|e| e.to_string())? {
+                if got != want_ag {
+                    return Err("AG mismatch".into());
+                }
+            }
+            let want_rs = reference::reduce_scatter(partials, parts).map_err(|e| e.to_string())?;
+            let got_rs = ring_reduce_scatter(partials, parts).map_err(|e| e.to_string())?;
+            for (g, w) in got_rs.iter().zip(want_rs.iter()) {
+                if !g.allclose(w, 1e-4, 1e-4) {
+                    return Err(format!("RS diff {}", g.max_abs_diff(w).unwrap()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overlap_schedules_are_conflict_free() {
+    // At every step, each device sends at most one tile and the tile it
+    // computes is one it already holds (AG) / can produce (RS); sends and
+    // receives pair up ring-consistently.
+    forall(
+        "overlap schedules: pairing + coverage for any D",
+        107,
+        50,
+        |rng| rng.range(1, 12) as usize,
+        |&d| {
+            for i in 0..d {
+                let ag = all_gather_steps(i, d);
+                if ag.len() != d {
+                    return Err("AG steps".into());
+                }
+                let rs = reduce_scatter_steps(i, d);
+                if rs.last().unwrap().compute_tile != i {
+                    return Err("RS must end on own tile".into());
+                }
+                // pairing with successor
+                let succ_ag = all_gather_steps((i + 1) % d, d);
+                for s in 0..d {
+                    if ag[s].send_tile != succ_ag[s].recv_tile {
+                        return Err(format!("AG pairing d={d} i={i} s={s}"));
+                    }
+                }
+                let succ_rs = reduce_scatter_steps((i + 1) % d, d);
+                for s in 0..d {
+                    if rs[s].send_tile != succ_rs[s].recv_tile {
+                        return Err(format!("RS pairing d={d} i={i} s={s}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Cost model / sim engine monotonicities
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_block_times_monotone_in_workload() {
+    forall(
+        "device model: time monotone in shard size and seq",
+        108,
+        100,
+        |rng| {
+            let model = random_model(rng);
+            let class = *rng.choose(&[DeviceClass::NanoS, DeviceClass::NanoM, DeviceClass::NanoL, DeviceClass::NanoGpu]);
+            let seq = rng.range(8, 512) as usize;
+            let k = rng.range(1, model.heads as u64 - 1) as usize;
+            (model, class, seq, k)
+        },
+        |(model, class, seq, k)| {
+            let dev = DeviceSpec::new(0, *class);
+            if dev.mha_time(model, *seq, *k) >= dev.mha_time(model, *seq, *k + 1) {
+                return Err("mha not monotone in heads".into());
+            }
+            if dev.mlp_time(model, *seq, *k) >= dev.mlp_time(model, *seq, *k + 1) {
+                return Err("mlp not monotone in units".into());
+            }
+            if dev.mha_time(model, *seq, *k) >= dev.mha_time(model, *seq * 2, *k) {
+                return Err("mha not monotone in seq".into());
+            }
+            if dev.connective_time(model, *seq) >= dev.connective_time(model, *seq * 2) {
+                return Err("conn not monotone in rows".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overlap_never_hurts_and_conserves_wire() {
+    forall(
+        "sim: tiled <= serial; wire volume conserved",
+        109,
+        60,
+        |rng| {
+            let model = random_model(rng);
+            let d = rng.range(2, 4) as usize;
+            let env = EdgeEnv {
+                name: "p".into(),
+                devices: (0..d)
+                    .map(|i| {
+                        DeviceSpec::with_budget(
+                            i,
+                            *rng.choose(&[DeviceClass::NanoM, DeviceClass::NanoL]),
+                            1_000_000.0, // memory out of the picture
+                        )
+                    })
+                    .collect(),
+            };
+            let mbps = *rng.choose(&[25.0, 125.0, 500.0, 1000.0]);
+            let seq = rng.range(32, 512) as usize;
+            (model, env, mbps, seq)
+        },
+        |(model, env, mbps, seq)| {
+            let profile = Profiler::analytic(model, env, *seq).profile();
+            let plan = Planner::new(model, env, &profile).plan().map_err(|e| e.to_string())?;
+            let tiled = SimEngine::new(model, env, plan.clone(), NetParams::mbps(*mbps))
+                .with_overlap(OverlapMode::Tiled)
+                .run_inference(*seq);
+            let serial = SimEngine::new(model, env, plan, NetParams::mbps(*mbps))
+                .with_overlap(OverlapMode::None)
+                .run_inference(*seq);
+            if tiled.total_s() > serial.total_s() * 1.001 {
+                return Err(format!(
+                    "tiled {} > serial {}",
+                    tiled.total_s(),
+                    serial.total_s()
+                ));
+            }
+            let tiled_wire = tiled.hidden_comm_s + tiled.exposed_comm_s;
+            let rel = (tiled_wire - serial.exposed_comm_s).abs()
+                / serial.exposed_comm_s.max(1e-12);
+            if rel > 0.25 {
+                return Err(format!("wire drift {rel:.3}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_nonincreasing_in_bandwidth() {
+    forall(
+        "sim: more bandwidth never slower",
+        110,
+        40,
+        |rng| {
+            let model = random_model(rng);
+            let env = EdgeEnv {
+                name: "b".into(),
+                devices: (0..rng.range(2, 4) as usize)
+                    .map(|i| DeviceSpec::with_budget(i, DeviceClass::NanoM, 1e9))
+                    .collect(),
+            };
+            (model, env, rng.range(32, 400) as usize)
+        },
+        |(model, env, seq)| {
+            let profile = Profiler::analytic(model, env, *seq).profile();
+            let plan = Planner::new(model, env, &profile).plan().map_err(|e| e.to_string())?;
+            let mut prev = f64::INFINITY;
+            for mbps in [10.0, 50.0, 250.0, 1000.0] {
+                let t = SimEngine::new(model, env, plan.clone(), NetParams::mbps(mbps))
+                    .run_inference(*seq)
+                    .total_s();
+                if t > prev * (1.0 + 1e-9) {
+                    return Err(format!("{mbps} Mbps: {t} > {prev}"));
+                }
+                prev = t;
+            }
+            Ok(())
+        },
+    );
+}
