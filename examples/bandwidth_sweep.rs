@@ -6,6 +6,7 @@
 //! cargo run --release --example bandwidth_sweep
 //! ```
 
+use galaxy::engine::{Engine, InferRequest};
 use galaxy::metrics::Table;
 use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
@@ -20,18 +21,19 @@ fn main() -> galaxy::Result<()> {
     let env = EdgeEnv::preset_b(); // 3x Nano-M
     let profile = Profiler::analytic(&model, &env, SEQ).profile();
     let plan = Planner::new(&model, &env, &profile).plan()?;
+    let req = InferRequest::new(0, SEQ, SEQ);
 
     let mut t = Table::new(
         "Bert-L on env B — overlap across the bandwidth range",
         &["bandwidth", "serial total", "tiled total", "exposed comm", "hidden comm", "overlap saves"],
     );
     for mbps in [10.0, 25.0, 50.0, 125.0, 250.0, 500.0, 1000.0] {
-        let serial = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
-            .with_overlap(OverlapMode::None)
-            .run_inference(SEQ);
-        let tiled = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
-            .with_overlap(OverlapMode::Tiled)
-            .run_inference(SEQ);
+        let mut serial_eng = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::None);
+        let serial = (&mut serial_eng as &mut dyn Engine).infer(&req)?;
+        let mut tiled_eng = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(mbps))
+            .with_overlap(OverlapMode::Tiled);
+        let tiled = (&mut tiled_eng as &mut dyn Engine).infer(&req)?;
         t.row(&[
             format!("{mbps:>5.0} Mbps"),
             format!("{:.2} s", serial.total_s()),

@@ -7,6 +7,7 @@
 //! ```
 
 use galaxy::baselines::{self, BaselineKind};
+use galaxy::engine::{Engine, InferRequest};
 use galaxy::metrics::{fmt_secs, Table};
 use galaxy::model::ModelConfig;
 use galaxy::planner::Planner;
@@ -35,9 +36,8 @@ fn main() -> galaxy::Result<()> {
         let profile = Profiler::analytic(&model, &env, SEQ).profile();
         let plan = Planner::new(&model, &env, &profile).plan()?;
         let heads = format!("{:?}", plan.partition.heads);
-        let g = SimEngine::new(&model, &env, plan, NetParams::mbps(MBPS))
-            .run_inference(SEQ)
-            .total_s();
+        let mut eng = SimEngine::new(&model, &env, plan, NetParams::mbps(MBPS));
+        let g = (&mut eng as &mut dyn Engine).infer(&InferRequest::new(0, SEQ, SEQ))?.total_s();
         let m = baselines::simulate(BaselineKind::MegatronLm, &model, &env, NetParams::mbps(MBPS), SEQ)
             .map(|r| r.total_s());
         t.row(&[

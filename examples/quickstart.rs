@@ -1,5 +1,5 @@
 //! Quickstart: plan, simulate, and really-execute collaborative inference
-//! in ~60 lines.
+//! in ~60 lines — both executors driven through the one `Engine` trait.
 //!
 //! ```bash
 //! make artifacts            # once: AOT-lower the JAX/Pallas programs
@@ -8,7 +8,8 @@
 
 use galaxy::cluster::RealCluster;
 use galaxy::config::{default_artifacts_dir, Manifest};
-use galaxy::model::{ModelConfig, WeightGen};
+use galaxy::engine::{Engine, InferRequest};
+use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::Planner;
 use galaxy::profiler::Profiler;
@@ -27,36 +28,42 @@ fn main() -> galaxy::Result<()> {
     );
 
     // ---- 2. Simulate it on the calibrated testbed at 125 Mbps ----------
-    let report = SimEngine::new(&bert, &env, plan, NetParams::paper_default()).run_inference(284);
+    let mut sim = SimEngine::new(&bert, &env, plan, NetParams::paper_default());
+    let engine: &mut dyn Engine = &mut sim;
+    let outcome = engine.infer(&InferRequest::new(0, 284, 284))?;
     println!(
         "simulated end-to-end: {:.2} s (compute {:.2} s, exposed comm {:.2} s, hidden {:.2} s)",
-        report.total_s(),
-        report.compute_s,
-        report.exposed_comm_s,
-        report.hidden_comm_s
+        outcome.total_s(),
+        outcome.compute_s,
+        outcome.exposed_comm_s,
+        outcome.hidden_comm_s
     );
 
     // ---- 3. Really execute galaxy-mini across 3 PJRT workers -----------
+    // Same trait, different backend: the cluster synthesizes the request's
+    // input activations, pads to its artifact bucket, and runs for real.
     let mini = ModelConfig::galaxy_mini();
     let manifest = Manifest::load(default_artifacts_dir())?;
     let env3 = EdgeEnv::new("3x", &[DeviceClass::NanoM; 3]);
     let profile3 = Profiler::analytic(&mini, &env3, manifest.seq_len).profile();
     let plan3 = Planner::new(&mini, &env3, &profile3).plan()?;
     let mut cluster = RealCluster::spawn(&mini, &manifest, &plan3, OverlapMode::Tiled, "xla", 42)?;
+    let engine: &mut dyn Engine = &mut cluster;
+    let bucket = engine.caps().bucket_for(manifest.seq_len).expect("artifact bucket");
+    let real = engine.infer(&InferRequest::new(0, manifest.seq_len, bucket))?;
 
-    let x = WeightGen::new(&mini, 42).input(0, manifest.seq_len);
-    let mask = vec![0.0f32; manifest.seq_len];
-    let out = cluster.infer(&x, &mask)?;
+    let out = real.output.as_ref().expect("real engines return activations");
     println!(
         "real 3-worker HMP inference done: output {:?}, first values {:?}",
         out.shape(),
         &out.row(0)[..4]
     );
     println!(
-        "wall latency {:.1} ms, ring traffic {:.2} MB, {} PJRT calls",
-        cluster.report().mean_latency_s() * 1e3,
-        cluster.report().ring_bytes as f64 / 1e6,
-        cluster.report().pjrt_calls
+        "wall latency {:.1} ms, ring traffic {:.2} MB, {} PJRT calls, {} sync points",
+        real.total_ms(),
+        real.ring_bytes as f64 / 1e6,
+        real.pjrt_calls,
+        real.sync_points
     );
     Ok(())
 }

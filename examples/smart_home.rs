@@ -2,10 +2,10 @@
 //! **end-to-end serving driver** (the repo's e2e validation run, recorded
 //! in EXPERIMENTS.md).
 //!
-//! A tablet + smart speaker + television pool their resources; single-shot
-//! voice-command requests arrive one at a time; Galaxy serves them through
-//! real AOT-compiled PJRT artifacts across 3 worker threads, and we report
-//! per-request latency, p95, throughput, and an apples-to-apples
+//! A tablet + smart speaker + television pool their resources; voice
+//! commands arrive as a trace; the serving scheduler admits, buckets, and
+//! dispatches them over the PJRT cluster through the `Engine` trait, and
+//! we report queueing vs service latency plus an apples-to-apples
 //! comparison against single-device Local inference on the same runtime.
 //!
 //! ```bash
@@ -19,7 +19,7 @@ use galaxy::model::{ModelConfig, WeightGen};
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::Planner;
 use galaxy::profiler::Profiler;
-use galaxy::serving::Server;
+use galaxy::serving::{pad_and_mask, Scheduler};
 use galaxy::sim::{DeviceClass, EdgeEnv};
 use galaxy::workload::QnliWorkload;
 
@@ -48,7 +48,7 @@ fn main() -> galaxy::Result<()> {
         plan.partition.heads, plan.partition.mlp_units, plan.partition.seq
     );
 
-    // Voice commands are short; pad+mask to the artifact length.
+    // Voice commands are short; the scheduler buckets + pads them.
     let workload = QnliWorkload {
         mean_len: 36,
         std_len: 10.0,
@@ -58,10 +58,10 @@ fn main() -> galaxy::Result<()> {
     };
     let requests = workload.generate(N_REQUESTS, SEED);
 
-    // ---- Galaxy HMP serving ------------------------------------------
+    // ---- Galaxy HMP serving (scheduler over the Engine trait) ---------
     let cluster = RealCluster::spawn(&model, &manifest, &plan, OverlapMode::Tiled, "xla", SEED)?;
-    let mut server = Server::new(cluster, &model, SEED, seq);
-    let served = server.serve_all(&requests)?;
+    let mut scheduler = Scheduler::new(cluster);
+    let report = scheduler.run(&requests)?;
 
     // ---- Local baseline on the same runtime stack ---------------------
     let mut local = LocalRunner::new(&model, &manifest, "xla", SEED)?;
@@ -69,7 +69,7 @@ fn main() -> galaxy::Result<()> {
     let mut local_stats = LatencyStats::default();
     for req in &requests {
         let x = gen.input(req.id, req.seq_len.min(seq));
-        let (padded, mask) = galaxy::serving::pad_and_mask(&x, seq)?;
+        let (padded, mask) = pad_and_mask(&x, seq)?;
         let t0 = std::time::Instant::now();
         local.infer(&padded, &mask)?;
         local_stats.record(t0.elapsed().as_secs_f64());
@@ -80,29 +80,34 @@ fn main() -> galaxy::Result<()> {
         format!("Smart-home assistant — {N_REQUESTS} voice commands, galaxy-mini (seq {seq})"),
         &["system", "mean", "p50", "p95", "max", "throughput"],
     );
-    let stats = server.stats();
-    for (name, s) in [("Galaxy HMP (3 devices)", stats), ("Local (1 device)", &local_stats)] {
+    let stats = &report.metrics.service;
+    for (name, s, rps) in [
+        ("Galaxy HMP (3 devices)", stats, report.metrics.throughput_rps()),
+        ("Local (1 device)", &local_stats, 1.0 / local_stats.mean_s()),
+    ] {
         t.row(&[
             name.into(),
             fmt_secs(s.mean_s()),
-            fmt_secs(s.percentile_s(50.0)),
-            fmt_secs(s.percentile_s(95.0)),
+            fmt_secs(s.p50_s()),
+            fmt_secs(s.p95_s()),
             fmt_secs(s.max_s()),
-            format!("{:.1} req/s", 1.0 / s.mean_s()),
+            format!("{rps:.1} req/s"),
         ]);
     }
     println!("{}", t.render());
-    let rep = server.cluster().report();
+    println!(
+        "queueing: mean {}  p95 {}  (service and queueing reported separately)",
+        fmt_secs(report.metrics.queueing.mean_s()),
+        fmt_secs(report.metrics.queueing.p95_s())
+    );
     println!(
         "cluster: {} PJRT calls, {:.2} MB ring traffic over {} requests",
-        rep.pjrt_calls,
-        rep.ring_bytes as f64 / 1e6,
-        rep.requests
+        report.pjrt_calls(),
+        report.ring_bytes() as f64 / 1e6,
+        report.served()
     );
-    println!(
-        "first request output sample: {:?}",
-        &served[0].output.row(0)[..4]
-    );
+    let first_out = report.completions[0].outcome.output.as_ref().expect("real output");
+    println!("first request output sample: {:?}", &first_out.row(0)[..4]);
     println!("\n(on this x86 host all 'devices' share one CPU, so distributed wall-clock");
     println!("is bounded by dispatch overhead — the Jetson-scale latency story is in");
     println!("`cargo bench`; this driver proves the full stack composes end-to-end.)");

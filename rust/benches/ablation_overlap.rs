@@ -12,8 +12,9 @@ mod bench_util;
 use bench_util::{galaxy_report, time_n};
 use galaxy::cluster::RealCluster;
 use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::engine::{Engine, InferRequest};
 use galaxy::metrics::Table;
-use galaxy::model::{ModelConfig, ModelKind, WeightGen};
+use galaxy::model::{ModelConfig, ModelKind};
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::Planner;
 use galaxy::profiler::Profiler;
@@ -54,11 +55,10 @@ fn main() {
     let model = ModelConfig::galaxy_mini();
     let manifest = Manifest::load(&dir).unwrap();
     let env = EdgeEnv::new("3x", &[DeviceClass::NanoM; 3]);
-    let profile = Profiler::analytic(&model, &env, 60).profile();
+    let seq = manifest.seq_len;
+    let profile = Profiler::analytic(&model, &env, seq).profile();
     let plan = Planner::new(&model, &env, &profile).plan().unwrap();
-    let gen = WeightGen::new(&model, 42);
-    let x = gen.input(0, 60);
-    let mask = vec![0.0f32; 60];
+    let req = InferRequest::new(0, seq, seq);
 
     let mut t2 = Table::new(
         "Ablation — real PJRT cluster (galaxy-mini, 3 workers, 20 reqs)",
@@ -67,11 +67,17 @@ fn main() {
     for overlap in [OverlapMode::None, OverlapMode::Tiled] {
         let mut cluster =
             RealCluster::spawn(&model, &manifest, &plan, overlap, "xla", 42).unwrap();
-        cluster.infer(&x, &mask).unwrap(); // warm
+        {
+            let engine: &mut dyn Engine = &mut cluster;
+            engine.infer(&req).unwrap(); // warm
+        }
+        cluster.reset_report(); // scope measurement after lazy compiles
+        let engine: &mut dyn Engine = &mut cluster;
         let (mean, best) = time_n(20, || {
-            cluster.infer(&x, &mask).unwrap();
+            engine.infer(&req).unwrap();
         });
-        let calls = cluster.report().pjrt_calls / cluster.report().requests as u64;
+        let rep = cluster.report();
+        let calls = rep.pjrt_calls / rep.requests as u64;
         t2.row(&[
             overlap.name().into(),
             format!("{:.1} ms", mean * 1e3),

@@ -9,12 +9,13 @@
 #[allow(dead_code)]
 mod bench_util;
 
+use bench_util::plan_outcome;
 use galaxy::metrics::Table;
 use galaxy::model::{ModelConfig, ModelKind};
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::{equal_seq_partition, quantize_shares, Partition, Plan, Planner};
 use galaxy::profiler::Profiler;
-use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+use galaxy::sim::EdgeEnv;
 
 const MBPS: f64 = 125.0;
 const SEQ: usize = 284;
@@ -31,10 +32,7 @@ fn latency_for_partition(model: &ModelConfig, env: &EdgeEnv, heads: Vec<usize>, 
         pred_conn_s: 0.0,
         mem_mb: vec![0.0; env.len()],
     };
-    SimEngine::new(model, env, plan, NetParams::mbps(MBPS))
-        .with_overlap(OverlapMode::Tiled)
-        .run_inference(SEQ)
-        .total_s()
+    plan_outcome(model, env, plan, MBPS, SEQ, OverlapMode::Tiled).total_s()
 }
 
 fn main() {
@@ -54,10 +52,7 @@ fn main() {
                 Err(_) => continue,
             };
             let heads_str = format!("{:?}", plan.partition.heads);
-            let aware = SimEngine::new(&model, &env, plan, NetParams::mbps(MBPS))
-                .with_overlap(OverlapMode::Tiled)
-                .run_inference(SEQ)
-                .total_s();
+            let aware = plan_outcome(&model, &env, plan, MBPS, SEQ, OverlapMode::Tiled).total_s();
             t.row(&[
                 env.name.clone(),
                 model.kind.name().into(),

@@ -1,28 +1,44 @@
 //! Shared helpers for the bench harness (included via `#[path]` from each
 //! bench binary; the offline registry has no criterion, so benches are
 //! plain `harness = false` mains printing paper-style tables).
+//!
+//! All Galaxy HMP runs go through the unified [`Engine`] trait — benches
+//! never dispatch on a concrete engine type.
 
 use galaxy::baselines::{self, BaselineKind};
+use galaxy::engine::{Engine, InferOutcome, InferRequest};
 use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::{Plan, Planner};
 use galaxy::profiler::Profiler;
-use galaxy::sim::{EdgeEnv, NetParams, SimEngine, SimReport};
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
 
-/// Galaxy's simulated end-to-end latency; `None` on OOM/infeasible.
+/// Run a prepared plan on the simulated backend through the engine trait.
+pub fn plan_outcome(
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    plan: Plan,
+    mbps: f64,
+    seq: usize,
+    overlap: OverlapMode,
+) -> InferOutcome {
+    let mut sim = SimEngine::new(model, env, plan, NetParams::mbps(mbps)).with_overlap(overlap);
+    let engine: &mut dyn Engine = &mut sim;
+    engine
+        .infer(&InferRequest::new(0, seq, seq))
+        .expect("simulated engines are infallible")
+}
+
+/// Galaxy's simulated end-to-end outcome; `None` on OOM/infeasible.
 pub fn galaxy_report(
     model: &ModelConfig,
     env: &EdgeEnv,
     mbps: f64,
     seq: usize,
     overlap: OverlapMode,
-) -> Option<SimReport> {
+) -> Option<InferOutcome> {
     let plan = galaxy_plan(model, env, seq)?;
-    Some(
-        SimEngine::new(model, env, plan, NetParams::mbps(mbps))
-            .with_overlap(overlap)
-            .run_inference(seq),
-    )
+    Some(plan_outcome(model, env, plan, mbps, seq, overlap))
 }
 
 pub fn galaxy_plan(model: &ModelConfig, env: &EdgeEnv, seq: usize) -> Option<Plan> {

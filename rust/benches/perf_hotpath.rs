@@ -3,6 +3,10 @@
 //! traffic, per device count and artifact flavor. This is the bench the
 //! EXPERIMENTS.md §Perf iteration log is measured with.
 //!
+//! The distributed cases drive the cluster through the unified `Engine`
+//! trait (the same surface the serving scheduler uses); the single-device
+//! `LocalRunner` stays tensor-level as the non-engine oracle.
+//!
 //! Run: `cargo bench --bench perf_hotpath`
 
 #[path = "bench_util.rs"]
@@ -11,6 +15,7 @@ mod bench_util;
 
 use galaxy::cluster::{local::LocalRunner, RealCluster};
 use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::engine::{Engine, InferRequest};
 use galaxy::metrics::{LatencyStats, Table};
 use galaxy::model::{ModelConfig, WeightGen};
 use galaxy::parallel::OverlapMode;
@@ -28,17 +33,18 @@ fn main() {
     }
     let model = ModelConfig::galaxy_mini();
     let manifest = Manifest::load(&dir).unwrap();
-    let gen = WeightGen::new(&model, 42);
-    let x = gen.input(0, 60);
-    let mask = vec![0.0f32; 60];
+    let seq = manifest.seq_len;
 
     let mut t = Table::new(
-        format!("§Perf — galaxy-mini request hot path ({REQS} reqs, seq 60)"),
+        format!("§Perf — galaxy-mini request hot path ({REQS} reqs, seq {seq})"),
         &["config", "mean", "p95", "best", "pjrt/req", "ring MB/req"],
     );
 
-    // Local single-runtime reference.
+    // Local single-runtime reference (non-engine numerics oracle).
     {
+        let gen = WeightGen::new(&model, 42);
+        let x = gen.input(0, seq);
+        let mask = vec![0.0f32; seq];
         let mut local = LocalRunner::new(&model, &manifest, "xla", 42).unwrap();
         local.infer(&x, &mask).unwrap();
         let mut stats = LatencyStats::default();
@@ -50,7 +56,7 @@ fn main() {
         t.row(&[
             "local (1 runtime)".into(),
             format!("{:.2} ms", stats.mean_s() * 1e3),
-            format!("{:.2} ms", stats.percentile_s(95.0) * 1e3),
+            format!("{:.2} ms", stats.p95_s() * 1e3),
             format!("{:.2} ms", stats.min_s() * 1e3),
             format!("{}", model.layers),
             "0.00".into(),
@@ -64,45 +70,48 @@ fn main() {
                 // pallas tiles are not lowered (DESIGN.md); fused mode only.
                 continue;
             }
-            run_case(&model, &manifest, d, overlap, flavor, &x, &mask, &mut t);
+            run_case(&model, &manifest, d, overlap, flavor, &mut t);
         }
-        run_case(&model, &manifest, d, OverlapMode::None, "pallas", &x, &mask, &mut t);
+        run_case(&model, &manifest, d, OverlapMode::None, "pallas", &mut t);
     }
     println!("{}", t.render());
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_case(
     model: &ModelConfig,
     manifest: &Manifest,
     d: usize,
     overlap: OverlapMode,
     flavor: &str,
-    x: &galaxy::tensor::Tensor2,
-    mask: &[f32],
     t: &mut Table,
 ) {
+    let seq = manifest.seq_len;
     let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
-    let profile = Profiler::analytic(model, &env, 60).profile();
+    let profile = Profiler::analytic(model, &env, seq).profile();
     let plan = Planner::new(model, &env, &profile).plan().unwrap();
     let mut cluster = RealCluster::spawn(model, manifest, &plan, overlap, flavor, 42).unwrap();
-    cluster.infer(x, mask).unwrap(); // warm-up (compiles are lazy)
-    let mut stats = LatencyStats::default();
-    let before_calls = cluster.report().pjrt_calls;
-    let before_bytes = cluster.report().ring_bytes;
-    for _ in 0..REQS {
-        let t0 = std::time::Instant::now();
-        cluster.infer(x, mask).unwrap();
-        stats.record(t0.elapsed().as_secs_f64());
+    let req = InferRequest::new(0, seq, seq);
+    {
+        let engine: &mut dyn Engine = &mut cluster;
+        engine.infer(&req).unwrap(); // warm-up (compiles are lazy)
     }
-    let calls = (cluster.report().pjrt_calls - before_calls) / REQS as u64;
-    let mb = (cluster.report().ring_bytes - before_bytes) as f64 / REQS as f64 / 1e6;
+    cluster.reset_report(); // scope the measurement window
+    let engine: &mut dyn Engine = &mut cluster;
+    let mut stats = LatencyStats::default();
+    let mut calls = 0u64;
+    let mut bytes = 0u64;
+    for _ in 0..REQS {
+        let outcome = engine.infer(&req).unwrap();
+        stats.record(outcome.service_s);
+        calls += outcome.pjrt_calls;
+        bytes += outcome.ring_bytes;
+    }
     t.row(&[
         format!("{d}w {} {}", flavor, overlap.name()),
         format!("{:.2} ms", stats.mean_s() * 1e3),
-        format!("{:.2} ms", stats.percentile_s(95.0) * 1e3),
+        format!("{:.2} ms", stats.p95_s() * 1e3),
         format!("{:.2} ms", stats.min_s() * 1e3),
-        format!("{calls}"),
-        format!("{mb:.2}"),
+        format!("{}", calls / REQS as u64),
+        format!("{:.2}", bytes as f64 / REQS as f64 / 1e6),
     ]);
 }

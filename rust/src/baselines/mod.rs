@@ -60,6 +60,14 @@ pub fn simulate(
     }
 }
 
+/// Channel bytes of a 2(d-1)-step ring collective in which every device
+/// forwards one `chunk` per step — the same counting rule as the real
+/// workers' channel sends and `SimEngine`'s phase accounting, so
+/// baseline ring traffic is comparable to Galaxy's.
+fn ring_collective_bytes(d: usize, chunk: u64) -> u64 {
+    d as u64 * 2 * (d as u64 - 1) * chunk
+}
+
 /// Full single-device footprint in MB: weights (incl. embeddings) plus
 /// peak activations.
 pub fn full_footprint_mb(model: &ModelConfig, seq: usize) -> f64 {
@@ -134,6 +142,7 @@ pub fn megatron(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) 
                 rep.compute_s += add + step_cpu;
                 rep.exposed_comm_s += step_wire;
             }
+            rep.ring_bytes += ring_collective_bytes(d, chunk);
             rep.sync_points += 1;
         }
         // Connective redundantly on ALL devices over the FULL sequence —
@@ -152,6 +161,7 @@ pub fn megatron(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) 
                 rep.compute_s += add + step_cpu;
                 rep.exposed_comm_s += step_wire;
             }
+            rep.ring_bytes += ring_collective_bytes(d, chunk);
             rep.sync_points += 1;
         }
         rep.compute_s += env
@@ -210,6 +220,7 @@ pub fn seqpar(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) ->
                 rep.exposed_comm_s += step_wire;
                 rep.compute_s += step_cpu;
             }
+            rep.ring_bytes += ring_collective_bytes(d, chunk);
             rep.sync_points += 2;
         }
         // Connective + MLP stay row-local (no sync — SP's strength).
@@ -301,6 +312,20 @@ mod tests {
         assert_eq!(BaselineKind::Local.name(), "Local");
         assert_eq!(BaselineKind::MegatronLm.name(), "M-LM");
         assert_eq!(BaselineKind::SeqPar.name(), "SP");
+    }
+
+    #[test]
+    fn baseline_ring_traffic_is_counted() {
+        let env = EdgeEnv::preset_b();
+        let mlm = run(BaselineKind::MegatronLm, ModelConfig::bert_large(), &env).unwrap();
+        let sp = run(BaselineKind::SeqPar, ModelConfig::bert_large(), &env).unwrap();
+        assert!(mlm.ring_bytes > 0);
+        assert!(sp.ring_bytes > 0);
+        // M-LM synchronizes roughly twice the bytes SP does (paper §IV-B
+        // criticism of straight TP); Local has no D2D traffic at all.
+        assert!(mlm.ring_bytes > sp.ring_bytes);
+        let local_rep = run(BaselineKind::Local, ModelConfig::bert_large(), &env).unwrap();
+        assert_eq!(local_rep.ring_bytes, 0);
     }
 
     #[test]

@@ -13,13 +13,15 @@ use std::collections::HashMap;
 use crate::baselines::{self, BaselineKind};
 use crate::cluster::RealCluster;
 use crate::config::{default_artifacts_dir, Manifest, RunConfig};
+use crate::engine::sim::outcome_from_sim;
+use crate::engine::{Engine, InferRequest};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::{fmt_secs, Table};
 use crate::model::ModelConfig;
 use crate::parallel::OverlapMode;
 use crate::planner::Planner;
 use crate::profiler::Profiler;
-use crate::serving::Server;
+use crate::serving::{Policy, Scheduler, SchedulerConfig};
 use crate::sim::{DeviceClass, EdgeEnv, SimEngine};
 use crate::workload::QnliWorkload;
 
@@ -93,6 +95,7 @@ USAGE:
   galaxy simulate --model <m> --env <A..F|GPU> [--seq N] [--bandwidth MBPS]
                   [--strategy galaxy|mlm|sp|local] [--no-overlap]
   galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
+                  [--policy fifo|sjf|edf] [--window N] [--slo SECONDS]
                   [--no-overlap] [--artifacts DIR] [--seed S]
 
 MODELS: distilbert bert-l gpt2-l opt-l opt-xl galaxy-mini
@@ -159,17 +162,29 @@ fn cmd_plan(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let (model, env, cfg) = parse_common(args)?;
     let strategy = args.get_or("strategy", "galaxy");
-    let report = match strategy.as_str() {
+    // Galaxy runs through the unified Engine trait; the non-engine
+    // baseline strategies are converted into the same outcome shape.
+    let outcome = match strategy.as_str() {
         "galaxy" => {
             let profile = Profiler::analytic(&model, &env, cfg.seq).profile();
             let plan = Planner::new(&model, &env, &profile).plan()?;
-            SimEngine::new(&model, &env, plan, cfg.net())
-                .with_overlap(cfg.overlap)
-                .run_inference(cfg.seq)
+            let mut sim =
+                SimEngine::new(&model, &env, plan, cfg.net()).with_overlap(cfg.overlap);
+            let engine: &mut dyn Engine = &mut sim;
+            engine.infer(&InferRequest::new(0, cfg.seq, cfg.seq))?
         }
-        "mlm" => baselines::simulate(BaselineKind::MegatronLm, &model, &env, cfg.net(), cfg.seq)?,
-        "sp" => baselines::simulate(BaselineKind::SeqPar, &model, &env, cfg.net(), cfg.seq)?,
-        "local" => baselines::simulate(BaselineKind::Local, &model, &env, cfg.net(), cfg.seq)?,
+        "mlm" => outcome_from_sim(
+            0,
+            &baselines::simulate(BaselineKind::MegatronLm, &model, &env, cfg.net(), cfg.seq)?,
+        ),
+        "sp" => outcome_from_sim(
+            0,
+            &baselines::simulate(BaselineKind::SeqPar, &model, &env, cfg.net(), cfg.seq)?,
+        ),
+        "local" => outcome_from_sim(
+            0,
+            &baselines::simulate(BaselineKind::Local, &model, &env, cfg.net(), cfg.seq)?,
+        ),
         other => return Err(GalaxyError::Config(format!("unknown strategy `{other}`"))),
     };
     println!(
@@ -182,12 +197,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.overlap.name()
     );
     println!(
-        "end-to-end: {}  (compute {}, exposed comm {}, hidden comm {}, {} syncs)",
-        fmt_secs(report.total_s()),
-        fmt_secs(report.compute_s),
-        fmt_secs(report.exposed_comm_s),
-        fmt_secs(report.hidden_comm_s),
-        report.sync_points
+        "end-to-end: {}  (compute {}, exposed comm {}, hidden comm {}, {} syncs, ring {:.2} MB)",
+        fmt_secs(outcome.total_s()),
+        fmt_secs(outcome.compute_s),
+        fmt_secs(outcome.exposed_comm_s),
+        fmt_secs(outcome.hidden_comm_s),
+        outcome.sync_points,
+        outcome.ring_bytes as f64 / 1e6
     );
     Ok(())
 }
@@ -201,6 +217,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let flavor = args.get_or("flavor", "xla");
     let seed = args.get_usize("seed", 42)? as u64;
     let overlap = if args.has("no-overlap") { OverlapMode::None } else { OverlapMode::Tiled };
+    let sched_cfg = SchedulerConfig {
+        policy: Policy::parse(&args.get_or("policy", "fifo"))?,
+        slo_s: args.get_f64("slo", 10.0)?,
+        max_in_flight: args.get_usize("window", 0)?,
+    };
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
@@ -213,39 +234,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let profile = Profiler::analytic(&model, &env, seq).profile();
     let plan = Planner::new(&model, &env, &profile).plan()?;
     println!(
-        "serving galaxy-mini on {d} worker(s), flavor {flavor}, {} — partition heads {:?}",
+        "serving galaxy-mini on {d} worker(s), flavor {flavor}, {}, policy {} — partition heads {:?}",
         overlap.name(),
+        sched_cfg.policy.name(),
         plan.partition.heads
     );
 
     let cluster = RealCluster::spawn(&model, &manifest, &plan, overlap, &flavor, seed)?;
-    let mut server = Server::new(cluster, &model, seed, seq);
+    let mut scheduler = Scheduler::with_config(cluster, sched_cfg);
     let reqs = QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
         .generate(n_requests, seed);
-    for req in &reqs {
-        let served = server.serve(req)?;
+    let report = scheduler.run(&reqs)?;
+    for c in &report.completions {
+        let sample: &[f32] = match &c.outcome.output {
+            Some(out) => &out.row(0)[..4.min(out.cols())],
+            None => &[],
+        };
         println!(
-            "request {:>3}  seq {:>3}  latency {:>10}  out[0][0..4] = {:?}",
-            served.id,
-            req.seq_len,
-            fmt_secs(served.latency_s),
-            &served.output.row(0)[..4.min(served.output.cols())]
+            "request {:>3}  seq {:>3} → bucket {:>3}  queued {:>10}  service {:>10}  out[0][0..4] = {sample:?}",
+            c.id,
+            c.seq_len,
+            c.bucket,
+            fmt_secs(c.queueing_s),
+            fmt_secs(c.service_s),
         );
     }
-    let stats = server.stats();
+    for r in &report.rejections {
+        println!("request {:>3} rejected: {}", r.id, r.reason);
+    }
+    let m = &report.metrics;
     println!(
-        "served {} requests: mean {}  p95 {}  min {}  max {}",
-        stats.count(),
-        fmt_secs(stats.mean_s()),
-        fmt_secs(stats.percentile_s(95.0)),
-        fmt_secs(stats.min_s()),
-        fmt_secs(stats.max_s()),
+        "served {} ({} rejected): queueing mean {} p95 {} | service mean {} p50 {} p95 {} p99 {}",
+        m.served,
+        m.rejected,
+        fmt_secs(m.queueing.mean_s()),
+        fmt_secs(m.queueing.p95_s()),
+        fmt_secs(m.service.mean_s()),
+        fmt_secs(m.service.p50_s()),
+        fmt_secs(m.service.p95_s()),
+        fmt_secs(m.service.p99_s()),
     );
-    let rep = server.cluster().report();
+    println!(
+        "wall span {}  throughput {:.2} req/s  peak in-flight {}",
+        fmt_secs(m.wall_span_s),
+        m.throughput_rps(),
+        report.peak_in_flight
+    );
     println!(
         "ring traffic {:.2} MB, {} PJRT calls",
-        rep.ring_bytes as f64 / 1e6,
-        rep.pjrt_calls
+        report.ring_bytes() as f64 / 1e6,
+        report.pjrt_calls()
     );
     Ok(())
 }

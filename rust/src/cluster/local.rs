@@ -19,6 +19,7 @@ pub struct LocalRunner {
     layers: Vec<[xla::Literal; 9]>,
     flavor: String,
     report: ExecReport,
+    first_start: Option<Instant>,
 }
 
 impl LocalRunner {
@@ -47,6 +48,7 @@ impl LocalRunner {
             layers,
             flavor: flavor.to_string(),
             report: ExecReport::default(),
+            first_start: None,
         };
         runner.rt.warm_up([format!("layer_local__{flavor}").as_str()])?;
         Ok(runner)
@@ -55,6 +57,7 @@ impl LocalRunner {
     /// Run all layers on this single device.
     pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
         let start = Instant::now();
+        let first = *self.first_start.get_or_insert(start);
         let name = format!("layer_local__{}", self.flavor);
         let seq = x.rows();
         let h = self.model.hidden;
@@ -73,10 +76,18 @@ impl LocalRunner {
         self.report.latencies_s.push(start.elapsed().as_secs_f64());
         self.report.requests += 1;
         self.report.pjrt_calls += self.model.layers as u64;
+        self.report.wall_span_s = first.elapsed().as_secs_f64();
         Ok(act)
     }
 
     pub fn report(&self) -> &ExecReport {
         &self.report
+    }
+
+    /// Reset the accumulated report and wall-clock anchor (scope the
+    /// measurement window after warm-up).
+    pub fn reset_report(&mut self) {
+        self.report = ExecReport::default();
+        self.first_start = None;
     }
 }

@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use crate::config::Manifest;
 use crate::error::{GalaxyError, Result};
-use crate::model::ModelConfig;
+use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
 use crate::planner::Plan;
 use crate::tensor::Tensor2;
@@ -35,6 +35,15 @@ pub struct RealCluster {
     schedule: LayerSchedule,
     model: ModelConfig,
     report: ExecReport,
+    overlap: OverlapMode,
+    /// Artifact sequence length — the one padded bucket this cluster's
+    /// AOT programs were lowered for.
+    seq_len: usize,
+    /// Deterministic input synthesis (stand-in for tokenizer+embedding),
+    /// seeded identically to the workers' weight reconstruction.
+    weights: WeightGen,
+    /// Start instant of the first request, for wall-clock span tracking.
+    first_start: Option<Instant>,
 }
 
 impl RealCluster {
@@ -97,6 +106,10 @@ impl RealCluster {
             schedule,
             model: model.clone(),
             report: ExecReport::default(),
+            overlap,
+            seq_len: manifest.seq_len,
+            weights: WeightGen::new(model, seed),
+            first_start: None,
         })
     }
 
@@ -104,11 +117,30 @@ impl RealCluster {
         self.schedule.n_devices()
     }
 
+    pub fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    pub fn overlap(&self) -> OverlapMode {
+        self.overlap
+    }
+
+    /// The single padded sequence length the loaded artifacts support.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Deterministic request-input synthesizer (same seed as the workers).
+    pub fn weights(&self) -> &WeightGen {
+        &self.weights
+    }
+
     /// Run one single-shot inference: scatter `x` row-shards, execute all
     /// layers under HMP, gather the output. `mask` is the additive key
     /// mask (`0` valid, `-1e9` padding).
     pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
         let start = Instant::now();
+        let first = *self.first_start.get_or_insert(start);
         let d = self.n_devices();
         if x.cols() != self.model.hidden {
             return Err(GalaxyError::Shape(format!(
@@ -128,16 +160,20 @@ impl RealCluster {
         let mut shards: Vec<Option<Tensor2>> = vec![None; d];
         let mut ring_bytes = 0u64;
         let mut pjrt_calls = 0u64;
+        let mut sync_points = 0u64;
         for _ in 0..d {
             let (i, reply) = self
                 .from_workers
                 .recv()
                 .map_err(|e| GalaxyError::Fabric(format!("cluster reply channel: {e}")))?;
             match reply {
-                WorkerReply::Done { h_shard, ring_bytes: rb, pjrt_calls: pc } => {
+                WorkerReply::Done { h_shard, ring_bytes: rb, pjrt_calls: pc, sync_points: sp } => {
                     shards[i] = Some(h_shard);
                     ring_bytes += rb;
                     pjrt_calls += pc;
+                    // Every device walks every ring phase; the cluster's
+                    // sync count is the straggler's (max), not the sum.
+                    sync_points = sync_points.max(sp);
                 }
                 WorkerReply::Failed(msg) => {
                     return Err(GalaxyError::Fabric(format!("worker {i}: {msg}")))
@@ -150,11 +186,21 @@ impl RealCluster {
         self.report.requests += 1;
         self.report.ring_bytes += ring_bytes;
         self.report.pjrt_calls += pjrt_calls;
+        self.report.sync_points += sync_points;
+        self.report.wall_span_s = first.elapsed().as_secs_f64();
         Ok(out)
     }
 
     pub fn report(&self) -> &ExecReport {
         &self.report
+    }
+
+    /// Reset the accumulated report and wall-clock anchor — scope the
+    /// measurement window after warm-up requests (lazy PJRT compiles),
+    /// so `throughput_rps` reflects only what follows.
+    pub fn reset_report(&mut self) {
+        self.report = ExecReport::default();
+        self.first_start = None;
     }
 
     /// Graceful shutdown (also runs on drop).

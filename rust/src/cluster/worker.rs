@@ -36,7 +36,7 @@ pub enum LeaderCmd {
 
 /// Replies to the leader.
 pub enum WorkerReply {
-    Done { h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64 },
+    Done { h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64, sync_points: u64 },
     Failed(String),
 }
 
@@ -73,6 +73,9 @@ struct Worker {
     next: Sender<Tensor2>,
     prev: Receiver<Tensor2>,
     ring_bytes: u64,
+    /// Ring synchronization phases actually walked (counted, not derived,
+    /// so the cross-engine parity test measures real behaviour).
+    sync_points: u64,
 }
 
 /// Worker thread entry point.
@@ -97,11 +100,13 @@ pub fn run(
             LeaderCmd::Infer { x_shard, mask } => {
                 let calls_before = worker.rt.pjrt_calls();
                 let bytes_before = worker.ring_bytes;
+                let syncs_before = worker.sync_points;
                 let msg = match worker.infer(x_shard, &mask) {
                     Ok(h_shard) => WorkerReply::Done {
                         h_shard,
                         ring_bytes: worker.ring_bytes - bytes_before,
                         pjrt_calls: worker.rt.pjrt_calls() - calls_before,
+                        sync_points: worker.sync_points - syncs_before,
                     },
                     Err(e) => WorkerReply::Failed(e.to_string()),
                 };
@@ -168,7 +173,7 @@ impl Worker {
         let tile_offsets = (0..spec.tiles.len())
             .map(|t| spec.tiles[..t].iter().sum())
             .collect();
-        Ok(Worker { spec, rt, layers, tile_offsets, next, prev, ring_bytes: 0 })
+        Ok(Worker { spec, rt, layers, tile_offsets, next, prev, ring_bytes: 0, sync_points: 0 })
     }
 
     fn send(&mut self, t: Tensor2) -> Result<()> {
@@ -366,6 +371,9 @@ impl Worker {
     ) -> Result<(Tensor2, Vec<Option<Tensor2>>)> {
         let i = self.spec.index;
         let d = self.spec.n_devices;
+        if d > 1 {
+            self.sync_points += 1;
+        }
         let steps = all_gather_steps(i, d);
         let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
         tiles[i] = Some(my_tile);
@@ -399,6 +407,9 @@ impl Worker {
     ) -> Result<Tensor2> {
         let i = self.spec.index;
         let d = self.spec.n_devices;
+        if d > 1 {
+            self.sync_points += 1;
+        }
         let steps = reduce_scatter_steps(i, d);
         let mut acc: Option<Tensor2> = None;
         for step in &steps {

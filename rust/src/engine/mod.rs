@@ -1,0 +1,180 @@
+//! The unified execution-engine abstraction.
+//!
+//! Galaxy has two ways to walk one HMP layer schedule: the calibrated
+//! closed-form timeline ([`crate::sim::SimEngine`], paper-scale
+//! experiments) and the real PJRT worker fabric
+//! ([`crate::cluster::RealCluster`], galaxy-mini). Historically every
+//! consumer — CLI, benches, the serving layer — special-cased the two.
+//! This module gives them one surface:
+//!
+//! * [`Engine`] — `infer(&InferRequest) -> InferOutcome` plus capability
+//!   metadata ([`EngineCaps`]): device count, admissible padded
+//!   sequence-length buckets, overlap mode, and the pipeline depth
+//!   available for overlapping consecutive requests.
+//! * [`InferOutcome`] — the per-request execution report both engines
+//!   fill with the *same semantics*: service time, sync-point count and
+//!   ring-byte totals are properties of the schedule, so for the same
+//!   plan the simulated and real engines must report identical counts
+//!   (asserted by the cross-engine integration test).
+//!
+//! The serving scheduler ([`crate::serving`]) drives any `Engine` and
+//! overlaps up to [`EngineCaps::pipeline_depth`] requests through the HMP
+//! layer pipeline; benches and the CLI run Galaxy through `&mut dyn
+//! Engine` and never dispatch on the concrete type.
+
+pub mod cluster;
+pub mod sim;
+
+use crate::error::Result;
+use crate::parallel::OverlapMode;
+use crate::tensor::Tensor2;
+
+/// Default padded-length ladder for engines without AOT artifacts (the
+/// simulator): requests are padded up to the nearest bucket instead of
+/// always the maximum.
+pub const DEFAULT_SEQ_BUCKETS: &[usize] =
+    &[32, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512];
+
+/// Capability metadata an engine advertises to its callers.
+#[derive(Clone, Debug)]
+pub struct EngineCaps {
+    /// Short backend name ("sim", "pjrt").
+    pub name: &'static str,
+    /// Number of collaborating edge devices.
+    pub devices: usize,
+    /// Ascending admissible padded sequence lengths. A request longer
+    /// than the last bucket cannot be served by this engine.
+    pub seq_buckets: Vec<usize>,
+    /// Whether boundary synchronizations overlap with tile GEMMs.
+    pub overlap: OverlapMode,
+    /// How many consecutive requests can overlap through the HMP layer
+    /// pipeline (request *n+1* enters layer 0 while request *n* occupies
+    /// later layers). 1 means strictly serial service. This is the
+    /// schedule-granularity upper bound; the scheduler further bounds
+    /// each inter-start gap by the request's compute occupancy
+    /// ([`InferOutcome::compute_s`]), since under tensor parallelism
+    /// overlapped requests share every device and can only fill
+    /// communication bubbles.
+    pub pipeline_depth: usize,
+}
+
+impl EngineCaps {
+    /// Smallest admissible bucket that fits `seq_len` tokens.
+    pub fn bucket_for(&self, seq_len: usize) -> Option<usize> {
+        self.seq_buckets.iter().copied().find(|&b| b >= seq_len)
+    }
+
+    /// Largest admissible padded length (0 when no buckets exist).
+    pub fn max_seq(&self) -> usize {
+        self.seq_buckets.last().copied().unwrap_or(0)
+    }
+}
+
+/// One inference request as the engine sees it: identity, valid token
+/// count, and the padded bucket the scheduler selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InferRequest {
+    pub id: u64,
+    /// Valid (unpadded) token count.
+    pub seq_len: usize,
+    /// Padded sequence length to execute. The scheduler always selects
+    /// an admissible bucket from [`EngineCaps::seq_buckets`]; engines
+    /// whose programs are shape-specialized (the PJRT cluster) reject
+    /// any other value, while the closed-form simulator can execute an
+    /// arbitrary length (which direct callers — CLI `simulate`, the
+    /// benches — rely on to sweep exact paper sequence lengths).
+    pub bucket: usize,
+}
+
+impl InferRequest {
+    pub fn new(id: u64, seq_len: usize, bucket: usize) -> Self {
+        Self { id, seq_len, bucket }
+    }
+}
+
+/// Per-request execution report, filled by every backend with identical
+/// semantics (an `ExecReport`-style surface at request granularity).
+#[derive(Clone, Debug, Default)]
+pub struct InferOutcome {
+    pub id: u64,
+    /// Service (execution) time in seconds — modeled time for the
+    /// simulator, measured wall time for the PJRT fabric.
+    pub service_s: f64,
+    /// Straggler compute seconds (for the real engine, which cannot
+    /// separate compute from hidden transfers, this equals `service_s`).
+    pub compute_s: f64,
+    /// Wire seconds not hidden behind compute (modeled engines only).
+    pub exposed_comm_s: f64,
+    /// Wire seconds hidden behind compute (modeled engines only).
+    pub hidden_comm_s: f64,
+    /// Synchronization points executed — a schedule property: identical
+    /// across engines for the same plan.
+    pub sync_points: u64,
+    /// Bytes moved through ring channels — also a schedule property.
+    pub ring_bytes: u64,
+    /// PJRT executions issued (0 for modeled engines).
+    pub pjrt_calls: u64,
+    /// Output activations for the valid rows (None for modeled engines).
+    pub output: Option<Tensor2>,
+}
+
+impl InferOutcome {
+    /// End-to-end service latency, seconds.
+    pub fn total_s(&self) -> f64 {
+        self.service_s
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.service_s * 1e3
+    }
+}
+
+/// A Galaxy execution engine: anything that can run one padded single-shot
+/// inference under the HMP schedule and report what it did.
+pub trait Engine {
+    /// Capability metadata (device count, buckets, overlap, pipelining).
+    fn caps(&self) -> EngineCaps;
+
+    /// Execute one request end to end.
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn caps(buckets: &[usize]) -> EngineCaps {
+        EngineCaps {
+            name: "test",
+            devices: 2,
+            seq_buckets: buckets.to_vec(),
+            overlap: OverlapMode::Tiled,
+            pipeline_depth: 4,
+        }
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_admissible() {
+        let c = caps(&[64, 128, 256]);
+        assert_eq!(c.bucket_for(1), Some(64));
+        assert_eq!(c.bucket_for(64), Some(64));
+        assert_eq!(c.bucket_for(65), Some(128));
+        assert_eq!(c.bucket_for(200), Some(256));
+        assert_eq!(c.bucket_for(256), Some(256));
+    }
+
+    #[test]
+    fn oversize_has_no_bucket() {
+        let c = caps(&[64, 128]);
+        assert_eq!(c.bucket_for(129), None);
+        assert_eq!(c.max_seq(), 128);
+        assert_eq!(caps(&[]).max_seq(), 0);
+    }
+
+    #[test]
+    fn outcome_totals() {
+        let o = InferOutcome { service_s: 0.25, ..Default::default() };
+        assert!((o.total_s() - 0.25).abs() < 1e-12);
+        assert!((o.total_ms() - 250.0).abs() < 1e-9);
+    }
+}

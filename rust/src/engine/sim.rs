@@ -1,0 +1,98 @@
+//! [`Engine`] implementation for the calibrated simulator.
+
+use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest};
+use crate::error::Result;
+use crate::sim::{SimEngine, SimReport};
+
+/// Convert a closed-form timeline report into the unified per-request
+/// outcome (also used by the CLI to print baseline runs uniformly).
+pub fn outcome_from_sim(id: u64, rep: &SimReport) -> InferOutcome {
+    InferOutcome {
+        id,
+        service_s: rep.total_s(),
+        compute_s: rep.compute_s,
+        exposed_comm_s: rep.exposed_comm_s,
+        hidden_comm_s: rep.hidden_comm_s,
+        sync_points: rep.sync_points as u64,
+        ring_bytes: rep.ring_bytes,
+        pjrt_calls: 0,
+        output: None,
+    }
+}
+
+impl Engine for SimEngine<'_> {
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            name: "sim",
+            devices: self.n_devices(),
+            seq_buckets: self.buckets().to_vec(),
+            overlap: self.overlap(),
+            // Upper bound from schedule granularity: request n+1 may
+            // enter layer 0 once request n has left it. The scheduler
+            // additionally bounds the stage gap by each request's
+            // compute occupancy (InferOutcome::compute_s) — overlap only
+            // fills communication bubbles, never multiplies compute.
+            pipeline_depth: self.model().layers.max(1),
+        }
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+        let rep = self.run_inference(req.bucket);
+        Ok(outcome_from_sim(req.id, &rep))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::parallel::OverlapMode;
+    use crate::planner::Planner;
+    use crate::profiler::Profiler;
+    use crate::sim::{EdgeEnv, NetParams};
+
+    fn engine<'a>(model: &'a ModelConfig, env: &'a EdgeEnv, seq: usize) -> SimEngine<'a> {
+        let profile = Profiler::analytic(model, env, seq).profile();
+        let plan = Planner::new(model, env, &profile).plan().unwrap();
+        SimEngine::new(model, env, plan, NetParams::paper_default())
+    }
+
+    #[test]
+    fn caps_reflect_model_and_env() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let eng = engine(&model, &env, 284).with_buckets(vec![128, 284, 512]);
+        let caps = eng.caps();
+        assert_eq!(caps.name, "sim");
+        assert_eq!(caps.devices, 3);
+        assert_eq!(caps.seq_buckets, vec![128, 284, 512]);
+        assert_eq!(caps.overlap, OverlapMode::Tiled);
+        assert_eq!(caps.pipeline_depth, model.layers);
+    }
+
+    #[test]
+    fn trait_infer_matches_direct_run() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = engine(&model, &env, 284);
+        let direct = eng.run_inference(284);
+        let outcome = eng.infer(&InferRequest::new(7, 200, 284)).unwrap();
+        assert_eq!(outcome.id, 7);
+        assert!((outcome.service_s - direct.total_s()).abs() < 1e-12);
+        assert_eq!(outcome.sync_points, direct.sync_points as u64);
+        assert_eq!(outcome.ring_bytes, direct.ring_bytes);
+        assert!(outcome.output.is_none());
+    }
+
+    #[test]
+    fn smaller_bucket_is_faster() {
+        // The whole point of bucketing: padding to 128 instead of 512
+        // must cut modeled service time.
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = engine(&model, &env, 512);
+        let small = eng.infer(&InferRequest::new(0, 100, 128)).unwrap();
+        let large = eng.infer(&InferRequest::new(0, 100, 512)).unwrap();
+        assert!(small.service_s < large.service_s);
+    }
+}

@@ -1,24 +1,23 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline registry has no `thiserror`).
+
+use std::fmt;
 
 /// Unified error for every Galaxy subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GalaxyError {
     /// The planner could not fit the model in the cluster's aggregate
     /// memory (paper Algorithm 1 lines 23-24: "Exit with Fail").
-    #[error("planning failed: {0}")]
     PlanInfeasible(String),
 
     /// An artifact required by the execution engine is missing from the
     /// registry (i.e. `make artifacts` output is stale or incomplete).
-    #[error("missing AOT artifact: {0}")]
     MissingArtifact(String),
 
     /// Shape mismatch in tensor algebra or collective payloads.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// A simulated or real device exceeded its memory budget at runtime.
-    #[error("out of memory on device {device}: need {needed_mb:.1} MB, budget {budget_mb:.1} MB")]
     Oom {
         device: usize,
         needed_mb: f64,
@@ -26,19 +25,48 @@ pub enum GalaxyError {
     },
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Configuration parsing or validation failure.
-    #[error("config: {0}")]
     Config(String),
 
     /// Cluster fabric failure (a worker died or a channel closed).
-    #[error("fabric: {0}")]
     Fabric(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for GalaxyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GalaxyError::PlanInfeasible(m) => write!(f, "planning failed: {m}"),
+            GalaxyError::MissingArtifact(m) => write!(f, "missing AOT artifact: {m}"),
+            GalaxyError::Shape(m) => write!(f, "shape error: {m}"),
+            GalaxyError::Oom { device, needed_mb, budget_mb } => write!(
+                f,
+                "out of memory on device {device}: need {needed_mb:.1} MB, budget {budget_mb:.1} MB"
+            ),
+            GalaxyError::Xla(m) => write!(f, "xla runtime: {m}"),
+            GalaxyError::Config(m) => write!(f, "config: {m}"),
+            GalaxyError::Fabric(m) => write!(f, "fabric: {m}"),
+            GalaxyError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for GalaxyError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GalaxyError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for GalaxyError {
+    fn from(e: std::io::Error) -> Self {
+        GalaxyError::Io(e)
+    }
 }
 
 impl From<xla::Error> for GalaxyError {
@@ -48,3 +76,20 @@ impl From<xla::Error> for GalaxyError {
 }
 
 pub type Result<T> = std::result::Result<T, GalaxyError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_format() {
+        assert_eq!(
+            GalaxyError::PlanInfeasible("x".into()).to_string(),
+            "planning failed: x"
+        );
+        assert_eq!(
+            GalaxyError::Oom { device: 1, needed_mb: 10.0, budget_mb: 5.0 }.to_string(),
+            "out of memory on device 1: need 10.0 MB, budget 5.0 MB"
+        );
+    }
+}

@@ -12,16 +12,47 @@
 //!   tile-based communication/computation overlap ([`parallel::overlap`],
 //!   paper §III-D), ring collectives ([`collective`]), the calibrated edge
 //!   testbed simulator ([`sim`]), the profiler ([`profiler`]), baselines
-//!   ([`baselines`]), and a single-shot serving front-end ([`serving`]).
+//!   ([`baselines`]), and a scheduling serving front-end ([`serving`]).
 //!
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts once via PJRT (`xla` crate) and executes them natively.
+//!
+//! ## The engine layer
+//!
+//! [`engine`] is the load-bearing abstraction between the HMP schedule
+//! and everything that runs requests. Both executors implement the
+//! [`engine::Engine`] trait — `infer(&InferRequest) -> InferOutcome`
+//! plus capability metadata (device count, admissible sequence-length
+//! buckets, overlap mode, pipeline depth):
+//!
+//! * [`sim::SimEngine`] — closed-form timing on the calibrated testbed
+//!   model (paper-scale experiments; reports modeled time),
+//! * [`cluster::RealCluster`] — real execution of the AOT PJRT artifacts
+//!   across worker threads with ring channels (galaxy-mini; reports
+//!   measured wall time).
+//!
+//! CLI, benches, and the serving scheduler drive `&mut dyn Engine` and
+//! never dispatch on the concrete backend. [`serving`] builds on it: an
+//! admission queue with pluggable ordering (FIFO/SJF/EDF), padding to
+//! the nearest artifact bucket, and pipelined dispatch that overlaps
+//! consecutive requests through the HMP layer schedule.
+//!
+//! ## Paper-section → module map
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | §III-B HMP block schedule (Fig. 5) | [`parallel::schedule`] |
+//! | §III-C planner (Algorithm 1, Eq. 4-6) | [`planner`] |
+//! | §III-D tile-based overlap (Fig. 6/7) | [`parallel::overlap`], [`sim::engine`] |
+//! | §IV testbed + baselines (Tables I/IV) | [`sim`], [`baselines`] |
+//! | Fig. 1 in-situ serving scenario | [`serving`], [`engine`] |
 
 pub mod baselines;
 pub mod cli;
 pub mod cluster;
 pub mod collective;
 pub mod config;
+pub mod engine;
 pub mod error;
 pub mod metrics;
 pub mod model;
@@ -41,11 +72,13 @@ pub use error::{GalaxyError, Result};
 pub mod prelude {
     pub use crate::baselines::BaselineKind;
     pub use crate::collective::{ring_all_gather, ring_reduce_scatter};
+    pub use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest};
     pub use crate::error::{GalaxyError, Result};
     pub use crate::model::{ModelConfig, ModelKind};
     pub use crate::parallel::{ExecReport, OverlapMode};
     pub use crate::planner::{Partition, Plan, Planner};
     pub use crate::profiler::{Profile, Profiler};
+    pub use crate::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
     pub use crate::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
     pub use crate::tensor::Tensor2;
 }

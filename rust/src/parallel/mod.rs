@@ -49,6 +49,14 @@ pub struct ExecReport {
     pub ring_bytes: u64,
     /// Number of PJRT executions issued.
     pub pjrt_calls: u64,
+    /// Ring synchronization phases executed (as counted by the workers;
+    /// every device walks every phase, so this is the per-cluster count).
+    pub sync_points: u64,
+    /// Wall-clock span from the first request's start to the latest
+    /// completion, seconds. This — not the sum of per-request latencies —
+    /// is the denominator for throughput, which matters as soon as
+    /// requests overlap in flight.
+    pub wall_span_s: f64,
 }
 
 impl ExecReport {
@@ -59,21 +67,32 @@ impl ExecReport {
         self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64
     }
 
-    pub fn p95_latency_s(&self) -> f64 {
-        if self.latencies_s.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_s.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[((v.len() as f64 * 0.95) as usize).min(v.len() - 1)]
+    pub fn p50_latency_s(&self) -> f64 {
+        crate::metrics::percentile_nearest_rank(&self.latencies_s, 50.0)
     }
 
+    pub fn p95_latency_s(&self) -> f64 {
+        crate::metrics::percentile_nearest_rank(&self.latencies_s, 95.0)
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        crate::metrics::percentile_nearest_rank(&self.latencies_s, 99.0)
+    }
+
+    /// Requests per second over the wall-clock span. Falls back to the
+    /// summed-latency span when no wall span was recorded (e.g. a report
+    /// assembled from individual samples), which is exact for strictly
+    /// serial execution.
     pub fn throughput_rps(&self) -> f64 {
-        let total: f64 = self.latencies_s.iter().sum();
-        if total == 0.0 {
+        let span = if self.wall_span_s > 0.0 {
+            self.wall_span_s
+        } else {
+            self.latencies_s.iter().sum()
+        };
+        if span <= 0.0 {
             return 0.0;
         }
-        self.requests as f64 / total
+        self.requests as f64 / span
     }
 }
 
@@ -89,8 +108,35 @@ mod tests {
             ..Default::default()
         };
         assert!((rep.mean_latency_s() - 0.25).abs() < 1e-12);
+        assert!((rep.p50_latency_s() - 0.2).abs() < 1e-12);
         assert!((rep.p95_latency_s() - 0.4).abs() < 1e-12);
+        assert!((rep.p99_latency_s() - 0.4).abs() < 1e-12);
+        // No wall span recorded → serial fallback: 4 requests / 1.0 s.
         assert!((rep.throughput_rps() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_uses_wall_span_when_requests_overlap() {
+        // 4 requests of 1 s each, but pipelined into a 2 s wall span:
+        // the old sum-of-latencies formula reported 1 rps; correct is 2.
+        let rep = ExecReport {
+            latencies_s: vec![1.0; 4],
+            requests: 4,
+            wall_span_s: 2.0,
+            ..Default::default()
+        };
+        assert!((rep.throughput_rps() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p95_is_nearest_rank_not_max() {
+        let rep = ExecReport {
+            latencies_s: (1..=20).map(|i| i as f64).collect(),
+            requests: 20,
+            ..Default::default()
+        };
+        assert_eq!(rep.p95_latency_s(), 19.0);
+        assert_eq!(rep.p99_latency_s(), 20.0);
     }
 
     #[test]

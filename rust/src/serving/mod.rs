@@ -1,19 +1,29 @@
-//! Single-shot serving front-end: the leader loop that accepts requests,
-//! pads them to the artifact sequence length, runs the HMP cluster, and
-//! reports latency/throughput — the "AI assistant in a smart home"
-//! deployment of paper Fig. 1.
+//! Serving subsystem: admission, bucketing, scheduling, and padding for
+//! the "AI assistant in a smart home" deployment of paper Fig. 1 — grown
+//! from the paper's single-shot FIFO loop into a concurrent request
+//! scheduler over the unified [`crate::engine::Engine`] abstraction.
 //!
-//! Requests are served FIFO one at a time: the paper's setting is
-//! single-shot (no batch dimension exists to batch over — that is exactly
-//! why DP is inapplicable, §II-C.1), so the serving layer's job is
-//! latency, padding, masking, and metrics, not batching.
+//! * [`scheduler::Scheduler`] — admission queue with arrival timestamps,
+//!   sequence-length bucketing to the nearest artifact bucket, pluggable
+//!   ordering ([`policy::Policy`]: FIFO / SJF / EDF), and pipelined
+//!   dispatch of up to `EngineCaps::pipeline_depth` in-flight requests
+//!   through the HMP layer schedule.
+//! * [`pad_and_mask`] — request padding + additive key-mask construction
+//!   shared by every real-execution path.
+//!
+//! The paper's setting remains single-shot per request (no batch
+//! dimension exists to batch over — exactly why DP is inapplicable,
+//! §II-C.1); concurrency comes from overlapping *consecutive* requests
+//! in the layer pipeline, not from batching.
 
-use crate::cluster::RealCluster;
+pub mod policy;
+pub mod scheduler;
+
+pub use policy::{Policy, Queued};
+pub use scheduler::{Completion, Rejection, SchedReport, Scheduler, SchedulerConfig};
+
 use crate::error::{GalaxyError, Result};
-use crate::metrics::LatencyStats;
-use crate::model::{ModelConfig, WeightGen};
 use crate::tensor::Tensor2;
-use crate::workload::Request;
 
 /// Additive mask value for padded key positions.
 pub const MASK_NEG: f32 = -1.0e9;
@@ -35,60 +45,6 @@ pub fn pad_and_mask(x: &Tensor2, target: usize) -> Result<(Tensor2, Vec<f32>)> {
     }
     let pad = Tensor2::zeros(target - x.rows(), x.cols());
     Ok((Tensor2::concat_rows(&[x.clone(), pad])?, mask))
-}
-
-/// Serving outcome for one request.
-#[derive(Clone, Debug)]
-pub struct Served {
-    pub id: u64,
-    /// Output activations for the *valid* (unpadded) rows.
-    pub output: Tensor2,
-    pub latency_s: f64,
-}
-
-/// FIFO single-shot server over a running cluster.
-pub struct Server {
-    cluster: RealCluster,
-    weights: WeightGen,
-    seq_len: usize,
-    stats: LatencyStats,
-}
-
-impl Server {
-    pub fn new(cluster: RealCluster, model: &ModelConfig, seed: u64, seq_len: usize) -> Self {
-        Self {
-            cluster,
-            weights: WeightGen::new(model, seed),
-            seq_len,
-            stats: LatencyStats::default(),
-        }
-    }
-
-    /// Serve one request: synthesize its input activations (stand-in for
-    /// tokenizer+embedding lookup of the voice command), pad, infer, slice
-    /// valid rows.
-    pub fn serve(&mut self, req: &Request) -> Result<Served> {
-        let x = self.weights.input(req.id, req.seq_len.min(self.seq_len));
-        let (padded, mask) = pad_and_mask(&x, self.seq_len)?;
-        let t0 = std::time::Instant::now();
-        let full = self.cluster.infer(&padded, &mask)?;
-        let latency_s = t0.elapsed().as_secs_f64();
-        self.stats.record(latency_s);
-        Ok(Served { id: req.id, output: full.slice_rows(0, x.rows())?, latency_s })
-    }
-
-    /// Serve a whole workload in arrival order; returns per-request results.
-    pub fn serve_all(&mut self, reqs: &[Request]) -> Result<Vec<Served>> {
-        reqs.iter().map(|r| self.serve(r)).collect()
-    }
-
-    pub fn stats(&self) -> &LatencyStats {
-        &self.stats
-    }
-
-    pub fn cluster(&self) -> &RealCluster {
-        &self.cluster
-    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,126 @@
+//! Pluggable admission-queue ordering policies.
+//!
+//! The scheduler keeps every arrived-but-not-yet-dispatched request in an
+//! admission queue; whenever the engine pipeline can accept a new request
+//! the active policy picks which queued request enters next.
+
+use crate::error::{GalaxyError, Result};
+
+/// One queued request as the policy sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Queued {
+    pub id: u64,
+    /// Valid token count (SJF's job-size proxy).
+    pub seq_len: usize,
+    /// Arrival timestamp, seconds from trace start.
+    pub arrival_s: f64,
+    /// Completion deadline (arrival + SLO), seconds from trace start.
+    pub deadline_s: f64,
+}
+
+/// Admission-queue ordering policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// First-in, first-out (arrival order).
+    Fifo,
+    /// Shortest job first: fewest valid tokens dispatches first.
+    ShortestJobFirst,
+    /// Earliest deadline first (deadline = arrival + SLO).
+    EarliestDeadline,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::ShortestJobFirst => "sjf",
+            Policy::EarliestDeadline => "edf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(Policy::Fifo),
+            "sjf" | "shortest" => Ok(Policy::ShortestJobFirst),
+            "edf" | "deadline" => Ok(Policy::EarliestDeadline),
+            other => Err(GalaxyError::Config(format!(
+                "unknown scheduling policy `{other}` (expected fifo|sjf|edf)"
+            ))),
+        }
+    }
+
+    /// Index of the queued request to dispatch next. Ties break by
+    /// arrival time then id, so every policy is deterministic.
+    pub fn pick(&self, queue: &[Queued]) -> usize {
+        assert!(!queue.is_empty(), "policy over empty queue");
+        let key = |q: &Queued| -> (f64, f64, u64) {
+            match self {
+                Policy::Fifo => (q.arrival_s, q.arrival_s, q.id),
+                Policy::ShortestJobFirst => (q.seq_len as f64, q.arrival_s, q.id),
+                Policy::EarliestDeadline => (q.deadline_s, q.arrival_s, q.id),
+            }
+        };
+        let mut best = 0;
+        for i in 1..queue.len() {
+            let (a, b, c) = key(&queue[i]);
+            let (ba, bb, bc) = key(&queue[best]);
+            if (a, b, c) < (ba, bb, bc) {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, seq_len: usize, arrival_s: f64, deadline_s: f64) -> Queued {
+        Queued { id, seq_len, arrival_s, deadline_s }
+    }
+
+    /// Drain a queue through repeated picks; returns dispatch order.
+    fn drain(policy: Policy, mut queue: Vec<Queued>) -> Vec<u64> {
+        let mut order = Vec::new();
+        while !queue.is_empty() {
+            let i = policy.pick(&queue);
+            order.push(queue.remove(i).id);
+        }
+        order
+    }
+
+    #[test]
+    fn fifo_is_arrival_order() {
+        let queue = vec![q(2, 10, 0.2, 9.0), q(0, 99, 0.0, 9.0), q(1, 50, 0.1, 9.0)];
+        assert_eq!(drain(Policy::Fifo, queue), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sjf_is_length_order() {
+        let queue = vec![q(0, 300, 0.0, 9.0), q(1, 20, 0.1, 9.0), q(2, 150, 0.2, 9.0)];
+        assert_eq!(drain(Policy::ShortestJobFirst, queue), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn edf_is_deadline_order() {
+        let queue = vec![q(0, 10, 0.0, 5.0), q(1, 10, 0.1, 1.5), q(2, 10, 0.2, 3.0)];
+        assert_eq!(drain(Policy::EarliestDeadline, queue), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ties_break_by_arrival_then_id() {
+        let queue = vec![q(5, 64, 0.3, 2.0), q(3, 64, 0.1, 2.0), q(4, 64, 0.1, 2.0)];
+        assert_eq!(drain(Policy::ShortestJobFirst, queue.clone()), vec![3, 4, 5]);
+        assert_eq!(drain(Policy::EarliestDeadline, queue), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in [Policy::Fifo, Policy::ShortestJobFirst, Policy::EarliestDeadline] {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Policy::parse("deadline").unwrap(), Policy::EarliestDeadline);
+        assert!(Policy::parse("lifo").is_err());
+    }
+}

@@ -35,6 +35,10 @@ pub struct SimReport {
     pub hidden_comm_s: f64,
     /// Number of synchronization points executed.
     pub sync_points: usize,
+    /// Bytes the ring channels would carry — counted per tile actually
+    /// forwarded, exactly as [`crate::cluster::RealCluster`] counts its
+    /// channel sends, so the two engines report comparable totals.
+    pub ring_bytes: u64,
     /// Peak per-device memory demand in MB.
     pub mem_mb: Vec<f64>,
 }
@@ -77,17 +81,50 @@ pub struct SimEngine<'a> {
     plan: Plan,
     net: NetParams,
     overlap: OverlapMode,
+    buckets: Vec<usize>,
 }
 
 impl<'a> SimEngine<'a> {
     pub fn new(model: &'a ModelConfig, env: &'a EdgeEnv, plan: Plan, net: NetParams) -> Self {
-        Self { model, env, plan, net, overlap: OverlapMode::Tiled }
+        Self {
+            model,
+            env,
+            plan,
+            net,
+            overlap: OverlapMode::Tiled,
+            buckets: crate::engine::DEFAULT_SEQ_BUCKETS.to_vec(),
+        }
     }
 
     /// Select overlapped (default) or serialized synchronization.
     pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
         self.overlap = overlap;
         self
+    }
+
+    /// Override the admissible padded sequence lengths this engine
+    /// advertises to the scheduler (sorted + deduplicated).
+    pub fn with_buckets(mut self, mut buckets: Vec<usize>) -> Self {
+        buckets.sort_unstable();
+        buckets.dedup();
+        self.buckets = buckets;
+        self
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn overlap(&self) -> OverlapMode {
+        self.overlap
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        self.model
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.env.len()
     }
 
     /// Simulate one single-shot inference of `seq` tokens end-to-end.
@@ -116,9 +153,10 @@ impl<'a> SimEngine<'a> {
             // the tiled mode hides behind the QKV projections (Fig. 6).
             let kd = |i: usize| p.heads[i] * m.head_dim();
             if d > 1 {
-                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                let qkv = |i: usize, rows: usize| {
                     self.env.devices[i].gemm_time(m, rows, m.hidden, 3 * kd(i))
-                }, &seq_parts);
+                };
+                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, qkv, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, 3 * kd(0)));
@@ -131,9 +169,10 @@ impl<'a> SimEngine<'a> {
             );
             // exit: output projection tiles ⊕ ReduceScatter (Fig. 7).
             if d > 1 {
-                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                let out_proj = |i: usize, rows: usize| {
                     self.env.devices[i].gemm_time(m, rows, kd(i), m.hidden)
-                }, &seq_parts);
+                };
+                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, out_proj, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 rep.add_compute(self.env.devices[0].gemm_time(m, seq, kd(0), m.hidden));
@@ -144,13 +183,15 @@ impl<'a> SimEngine<'a> {
             // ---- MLP block (TP) ----------------------------------------
             let w = |i: usize| p.mlp_units[i] * m.mlp_unit();
             if d > 1 {
-                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                let gemm1 = |i: usize, rows: usize| {
                     self.env.devices[i].gemm_time(m, rows, m.hidden, w(i))
-                }, &seq_parts);
+                };
+                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, gemm1, &seq_parts);
                 rep.sync_points += 1;
-                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, |i, rows| {
+                let gemm2 = |i: usize, rows: usize| {
                     self.env.devices[i].gemm_time(m, rows, w(i), m.hidden)
-                }, &seq_parts);
+                };
+                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, gemm2, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, w(0)));
@@ -160,6 +201,18 @@ impl<'a> SimEngine<'a> {
             rep.add_compute(self.conn_straggler(&seq_parts));
         }
         rep
+    }
+
+    /// Cluster-wide channel bytes of one ring phase. In a Ring-AllGather
+    /// every tile traverses `d-1` hops; in a Ring-ReduceScatter every
+    /// partial is forwarded `d-1` times — identical totals either way,
+    /// and exactly what the real workers' channel-send counters sum to.
+    fn phase_ring_bytes(d: usize, seq_parts: &[usize], hidden: usize) -> u64 {
+        (d - 1) as u64
+            * seq_parts
+                .iter()
+                .map(|&r| (r * hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64)
+                .sum::<u64>()
     }
 
     /// Straggler connective-block time over the SP partition.
@@ -187,6 +240,7 @@ impl<'a> SimEngine<'a> {
         gemm: impl Fn(usize, usize) -> f64,
         seq_parts: &[usize],
     ) {
+        rep.ring_bytes += Self::phase_ring_bytes(d, seq_parts, self.model.hidden);
         if overlapped {
             for step in 0..d {
                 // Device i processes tile (i - step) mod d in step `step`.
@@ -221,6 +275,7 @@ impl<'a> SimEngine<'a> {
         gemm: impl Fn(usize, usize) -> f64,
         seq_parts: &[usize],
     ) {
+        rep.ring_bytes += Self::phase_ring_bytes(d, seq_parts, self.model.hidden);
         let max_tile = *seq_parts.iter().max().unwrap();
         let add = self
             .env
@@ -321,6 +376,25 @@ mod tests {
         assert_eq!(rep.exposed_comm_s, 0.0);
         assert_eq!(rep.hidden_comm_s, 0.0);
         assert_eq!(rep.sync_points, 0);
+        assert_eq!(rep.ring_bytes, 0);
+    }
+
+    #[test]
+    fn ring_bytes_match_collective_volume() {
+        // 4 ring phases per layer, each moving (d-1) * seq * hidden fp32
+        // elements cluster-wide — and the volume is a property of the
+        // schedule, so overlap mode must not change it.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let seq = 284;
+        let tiled = run(&m, &env, seq, 125.0, OverlapMode::Tiled);
+        let serial = run(&m, &env, seq, 125.0, OverlapMode::None);
+        let d = env.len() as u64;
+        let want = 4 * m.layers as u64
+            * (d - 1)
+            * (seq * m.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+        assert_eq!(tiled.ring_bytes, want);
+        assert_eq!(serial.ring_bytes, want);
     }
 
     #[test]

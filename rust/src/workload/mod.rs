@@ -60,6 +60,14 @@ pub fn fixed_length(n: usize, seq_len: usize) -> Vec<Request> {
         .collect()
 }
 
+/// Poisson arrival trace at `rate_rps` requests/second with QNLI-like
+/// lengths — the traffic-replay input for the serving scheduler.
+/// Equivalent to [`QnliWorkload`] with `mean_gap_s = 1/rate_rps`.
+pub fn poisson_trace(n: usize, rate_rps: f64, seed: u64) -> Vec<Request> {
+    assert!(rate_rps > 0.0, "poisson_trace: rate must be positive");
+    QnliWorkload { mean_gap_s: 1.0 / rate_rps, ..Default::default() }.generate(n, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +98,17 @@ mod tests {
     #[test]
     fn arrivals_strictly_increase() {
         let reqs = QnliWorkload::default().generate(100, 4);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn poisson_trace_mean_rate() {
+        let reqs = poisson_trace(4000, 2.0, 11);
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 2.0).abs() < 0.2, "empirical rate {rate}");
         for w in reqs.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s);
         }
