@@ -9,14 +9,26 @@
 //! simulator times — here they move real tensors, and the integration
 //! tests assert the distributed result equals single-device inference.
 //!
+//! Since the per-layer protocol rebuild the leader is a **multi-request
+//! dispatcher**: [`RealCluster::submit_padded`] scatters a request and
+//! registers it in flight, the [`protocol::Dispatcher`] interleaves the
+//! per-layer command streams of concurrent requests round-robin (request
+//! *n+1* enters layer 0 as soon as request *n* vacates it), and
+//! completions are harvested out of one shared reply channel via
+//! [`RealCluster::poll_finished`] / [`RealCluster::wait_finished`] with
+//! *measured* start/finish instants. [`RealCluster::infer`] remains the
+//! blocking single-shot surface on top.
+//!
 //! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
 //! so every worker constructs its own runtime after spawning — which is
 //! also the honest topology: edge devices don't share XLA clients.
 
 pub mod local;
+pub mod protocol;
 pub mod worker;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
 
 use crate::config::Manifest;
@@ -25,7 +37,50 @@ use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
 use crate::planner::Plan;
 use crate::tensor::Tensor2;
-use worker::{LeaderCmd, WorkerReply, WorkerSpec};
+use protocol::{Cmd, Dispatcher};
+use worker::{LeaderCmd, WorkerReply};
+
+/// Issue-window credit for the per-layer protocol: keep one command
+/// queued ahead of the one executing (workers never starve on the
+/// leader round-trip) without letting one request's stream monopolize
+/// the worker queues ahead of later submissions.
+const ISSUE_WINDOW: usize = 2;
+
+/// One request currently moving through the worker fabric.
+struct InFlight {
+    /// Dispatch instant (wall clock) and its epoch-relative stamp.
+    started: Instant,
+    started_s: f64,
+    /// Valid (unpadded) rows, derived from the leading zeros of the mask.
+    valid_rows: usize,
+    /// Output shards as workers finish.
+    shards: Vec<Option<Tensor2>>,
+    done_workers: usize,
+    ring_bytes: u64,
+    pjrt_calls: u64,
+    sync_points: u64,
+}
+
+/// A completed pipelined request, with measured instants relative to the
+/// cluster's timing epoch (spawn, or the last idle report reset).
+#[derive(Clone, Debug)]
+pub struct FinishedRequest {
+    pub id: u64,
+    /// Full padded output (all artifact rows); callers slice the valid
+    /// prefix via [`FinishedRequest::valid_rows`].
+    pub output: Tensor2,
+    pub valid_rows: usize,
+    /// Measured dispatch instant, seconds since the cluster epoch.
+    pub started_s: f64,
+    /// Measured completion instant, seconds since the cluster epoch.
+    pub finished_s: f64,
+    /// Measured wall-clock service time (`finished_s - started_s`,
+    /// including any interleaving with concurrent requests).
+    pub service_s: f64,
+    pub ring_bytes: u64,
+    pub pjrt_calls: u64,
+    pub sync_points: u64,
+}
 
 /// A running Galaxy cluster over `D` worker threads.
 pub struct RealCluster {
@@ -44,6 +99,20 @@ pub struct RealCluster {
     weights: WeightGen,
     /// Start instant of the first request, for wall-clock span tracking.
     first_start: Option<Instant>,
+    /// Timing epoch for measured per-request instants. Anchored at spawn
+    /// (and re-anchored by [`RealCluster::reset_report`] while idle) so
+    /// the measured clock always ticks — callers that need a different
+    /// origin (the scheduler's trace clock) subtract their own anchor.
+    epoch: Instant,
+    dispatcher: Dispatcher,
+    inflight: HashMap<u64, InFlight>,
+    completed: VecDeque<FinishedRequest>,
+    /// Id source for the blocking single-shot surface, descending from
+    /// `u64::MAX` so it never collides with scheduler-assigned ids.
+    oneshot_id: u64,
+    /// Set on the first fatal worker failure: the ring is desynchronized
+    /// and every subsequent operation fails fast with this message.
+    poisoned: Option<String>,
 }
 
 impl RealCluster {
@@ -77,7 +146,7 @@ impl RealCluster {
         for i in 0..d {
             let (cmd_tx, cmd_rx) = channel();
             to_workers.push(cmd_tx);
-            let spec = WorkerSpec {
+            let spec = worker::WorkerSpec {
                 index: i,
                 n_devices: d,
                 model: model.clone(),
@@ -110,6 +179,12 @@ impl RealCluster {
             seq_len: manifest.seq_len,
             weights: WeightGen::new(model, seed),
             first_start: None,
+            epoch: Instant::now(),
+            dispatcher: Dispatcher::new(model.layers, ISSUE_WINDOW),
+            inflight: HashMap::new(),
+            completed: VecDeque::new(),
+            oneshot_id: u64::MAX,
+            poisoned: None,
         })
     }
 
@@ -135,13 +210,32 @@ impl RealCluster {
         &self.weights
     }
 
-    /// Run one single-shot inference: scatter `x` row-shards, execute all
-    /// layers under HMP, gather the output. `mask` is the additive key
-    /// mask (`0` valid, `-1e9` padding).
-    pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
-        let start = Instant::now();
-        let first = *self.first_start.get_or_insert(start);
-        let d = self.n_devices();
+    /// Requests currently moving through the fabric (submitted, not yet
+    /// harvested as [`FinishedRequest`]s).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len() + self.completed.len()
+    }
+
+    /// Measured seconds since the cluster's timing epoch (spawn, or the
+    /// last idle [`RealCluster::reset_report`]). Always ticking.
+    pub fn elapsed_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn check_poisoned(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(msg) => Err(GalaxyError::Fabric(format!("cluster poisoned: {msg}"))),
+            None => Ok(()),
+        }
+    }
+
+    /// Submit one padded request into the pipeline without waiting for
+    /// it: scatter SP row-shards of `x` behind a `Begin`, then let the
+    /// dispatcher interleave its layer commands with every other
+    /// in-flight request. `mask` is the additive key mask (`0` valid,
+    /// `-1e9` padding); its leading zeros define the valid output rows.
+    pub fn submit_padded(&mut self, id: u64, x: &Tensor2, mask: &[f32]) -> Result<()> {
+        self.check_poisoned()?;
         if x.cols() != self.model.hidden {
             return Err(GalaxyError::Shape(format!(
                 "input hidden {} != model {}",
@@ -149,58 +243,205 @@ impl RealCluster {
                 self.model.hidden
             )));
         }
-        // Scatter SP row-shards.
-        for (i, spec) in self.schedule.shards.iter().enumerate() {
-            let shard = x.slice_rows(spec.seq_offset, spec.seq_rows)?;
-            self.to_workers[i]
-                .send(LeaderCmd::Infer { x_shard: shard, mask: mask.to_vec() })
-                .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+        if self.inflight.contains_key(&id) || self.completed.iter().any(|f| f.id == id) {
+            return Err(GalaxyError::Fabric(format!("request id {id} already in flight")));
         }
-        // Gather per-device output shards.
-        let mut shards: Vec<Option<Tensor2>> = vec![None; d];
-        let mut ring_bytes = 0u64;
-        let mut pjrt_calls = 0u64;
-        let mut sync_points = 0u64;
-        for _ in 0..d {
+        let now = Instant::now();
+        self.first_start.get_or_insert(now);
+        self.inflight.insert(
+            id,
+            InFlight {
+                started: now,
+                started_s: now.duration_since(self.epoch).as_secs_f64(),
+                valid_rows: mask.iter().take_while(|&&v| v == 0.0).count(),
+                shards: vec![None; self.n_devices()],
+                done_workers: 0,
+                ring_bytes: 0,
+                pjrt_calls: 0,
+                sync_points: 0,
+            },
+        );
+        let cmds = self.dispatcher.submit(id);
+        self.issue(&cmds, Some((x, mask)))
+    }
+
+    /// Harvest the next completed request. With `wait` the call blocks
+    /// until one completes; returns `None` when nothing is in flight (or,
+    /// without `wait`, nothing has completed yet).
+    pub fn poll_finished(&mut self, wait: bool) -> Result<Option<FinishedRequest>> {
+        self.check_poisoned()?;
+        loop {
+            if let Some(fin) = self.completed.pop_front() {
+                return Ok(Some(fin));
+            }
+            if self.inflight.is_empty() {
+                return Ok(None);
+            }
+            let (i, reply) = if wait {
+                self.from_workers
+                    .recv()
+                    .map_err(|e| GalaxyError::Fabric(format!("cluster reply channel: {e}")))?
+            } else {
+                match self.from_workers.try_recv() {
+                    Ok(r) => r,
+                    Err(TryRecvError::Empty) => return Ok(None),
+                    Err(e) => {
+                        return Err(GalaxyError::Fabric(format!("cluster reply channel: {e}")))
+                    }
+                }
+            };
+            self.handle_reply(i, reply)?;
+        }
+    }
+
+    /// Block until the given request completes; completions of other
+    /// requests stay queued for later polls.
+    pub fn wait_finished(&mut self, id: u64) -> Result<FinishedRequest> {
+        self.check_poisoned()?;
+        loop {
+            if let Some(pos) = self.completed.iter().position(|f| f.id == id) {
+                return Ok(self.completed.remove(pos).expect("position just found"));
+            }
+            if !self.inflight.contains_key(&id) {
+                return Err(GalaxyError::Fabric(format!("request {id} is not in flight")));
+            }
             let (i, reply) = self
                 .from_workers
                 .recv()
                 .map_err(|e| GalaxyError::Fabric(format!("cluster reply channel: {e}")))?;
-            match reply {
-                WorkerReply::Done { h_shard, ring_bytes: rb, pjrt_calls: pc, sync_points: sp } => {
-                    shards[i] = Some(h_shard);
-                    ring_bytes += rb;
-                    pjrt_calls += pc;
-                    // Every device walks every ring phase; the cluster's
-                    // sync count is the straggler's (max), not the sum.
-                    sync_points = sync_points.max(sp);
+            self.handle_reply(i, reply)?;
+        }
+    }
+
+    /// Run one single-shot inference: submit, then drain the fabric until
+    /// this request exits the pipeline. Concurrent submissions keep
+    /// advancing (their completions queue up for their own polls).
+    pub fn infer(&mut self, x: &Tensor2, mask: &[f32]) -> Result<Tensor2> {
+        let id = self.oneshot_id;
+        self.oneshot_id -= 1;
+        self.submit_padded(id, x, mask)?;
+        Ok(self.wait_finished(id)?.output)
+    }
+
+    /// Broadcast dispatcher commands to the workers, in order. `Begin`
+    /// carries per-worker input shards, so it is only legal inside the
+    /// submission that provides them.
+    fn issue(&mut self, cmds: &[Cmd], begin_payload: Option<(&Tensor2, &[f32])>) -> Result<()> {
+        for cmd in cmds {
+            match *cmd {
+                Cmd::Begin { req } => {
+                    let (x, mask) =
+                        begin_payload.expect("Begin emitted outside its own submission");
+                    for (i, spec) in self.schedule.shards.iter().enumerate() {
+                        let shard = x.slice_rows(spec.seq_offset, spec.seq_rows)?;
+                        self.to_workers[i]
+                            .send(LeaderCmd::Begin { req, x_shard: shard, mask: mask.to_vec() })
+                            .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+                    }
                 }
-                WorkerReply::Failed(msg) => {
-                    return Err(GalaxyError::Fabric(format!("worker {i}: {msg}")))
+                Cmd::Layer { req, layer } => {
+                    for (i, tx) in self.to_workers.iter().enumerate() {
+                        tx.send(LeaderCmd::Layer { req, layer })
+                            .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+                    }
+                }
+                Cmd::Finish { req } => {
+                    for (i, tx) in self.to_workers.iter().enumerate() {
+                        tx.send(LeaderCmd::Finish { req })
+                            .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+                    }
                 }
             }
         }
-        let parts: Vec<Tensor2> = shards.into_iter().map(|s| s.expect("all replied")).collect();
-        let out = Tensor2::concat_rows(&parts)?;
-        self.report.latencies_s.push(start.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Process one worker reply: pacing acks advance the dispatcher,
+    /// `Done`s accumulate into the in-flight record until every worker
+    /// has reported, failures poison the fabric.
+    fn handle_reply(&mut self, i: usize, reply: WorkerReply) -> Result<()> {
+        match reply {
+            WorkerReply::LayerDone { .. } => {
+                let cmds = self.dispatcher.ack();
+                self.issue(&cmds, None)?;
+            }
+            WorkerReply::Done { req, h_shard, ring_bytes, pjrt_calls, sync_points } => {
+                // Worker 0's Done is also the pacing ack for `Finish`.
+                if i == 0 {
+                    let cmds = self.dispatcher.ack();
+                    self.issue(&cmds, None)?;
+                }
+                let d = self.n_devices();
+                let fl = self.inflight.get_mut(&req).ok_or_else(|| {
+                    GalaxyError::Fabric(format!("worker {i} finished unknown request {req}"))
+                })?;
+                fl.shards[i] = Some(h_shard);
+                fl.ring_bytes += ring_bytes;
+                fl.pjrt_calls += pjrt_calls;
+                // Every device walks every ring phase; the cluster's
+                // sync count is the straggler's (max), not the sum.
+                fl.sync_points = fl.sync_points.max(sync_points);
+                fl.done_workers += 1;
+                if fl.done_workers == d {
+                    self.finalize(req)?;
+                }
+            }
+            WorkerReply::Failed(msg) => {
+                let msg = format!("worker {i}: {msg}");
+                self.poisoned = Some(msg.clone());
+                return Err(GalaxyError::Fabric(msg));
+            }
+        }
+        Ok(())
+    }
+
+    /// All workers reported: gather the output, stamp measured instants,
+    /// fold the counters into the cumulative report, and queue the
+    /// completion for harvesting.
+    fn finalize(&mut self, req: u64) -> Result<()> {
+        let fl = self.inflight.remove(&req).expect("finalize of in-flight request");
+        let parts: Vec<Tensor2> =
+            fl.shards.into_iter().map(|s| s.expect("all workers replied")).collect();
+        let output = Tensor2::concat_rows(&parts)?;
+        let service_s = fl.started.elapsed().as_secs_f64();
+        let finished_s = fl.started_s + service_s;
+        self.report.latencies_s.push(service_s);
         self.report.requests += 1;
-        self.report.ring_bytes += ring_bytes;
-        self.report.pjrt_calls += pjrt_calls;
-        self.report.sync_points += sync_points;
-        self.report.wall_span_s = first.elapsed().as_secs_f64();
-        Ok(out)
+        self.report.ring_bytes += fl.ring_bytes;
+        self.report.pjrt_calls += fl.pjrt_calls;
+        self.report.sync_points += fl.sync_points;
+        if let Some(first) = self.first_start {
+            self.report.wall_span_s = first.elapsed().as_secs_f64();
+        }
+        self.completed.push_back(FinishedRequest {
+            id: req,
+            output,
+            valid_rows: fl.valid_rows,
+            started_s: fl.started_s,
+            finished_s,
+            service_s,
+            ring_bytes: fl.ring_bytes,
+            pjrt_calls: fl.pjrt_calls,
+            sync_points: fl.sync_points,
+        });
+        Ok(())
     }
 
     pub fn report(&self) -> &ExecReport {
         &self.report
     }
 
-    /// Reset the accumulated report and wall-clock anchor — scope the
-    /// measurement window after warm-up requests (lazy PJRT compiles),
-    /// so `throughput_rps` reflects only what follows.
+    /// Reset the accumulated report, wall-clock anchor, and timing epoch
+    /// — scope the measurement window after warm-up requests (lazy PJRT
+    /// compiles), so `throughput_rps` reflects only what follows. Only
+    /// meaningful while nothing is in flight (the epoch is kept when
+    /// requests are still moving, so their instants stay coherent).
     pub fn reset_report(&mut self) {
         self.report = ExecReport::default();
         self.first_start = None;
+        if self.inflight.is_empty() && self.completed.is_empty() {
+            self.epoch = Instant::now();
+        }
     }
 
     /// Graceful shutdown (also runs on drop).

@@ -1,0 +1,272 @@
+//! Leader-side state machine of the per-layer worker protocol.
+//!
+//! The leader no longer hands a worker a whole request; it broadcasts a
+//! stream of per-layer commands, and every worker processes the *same
+//! global command order* — which is what keeps the blocking ring channels
+//! deadlock-free: tile sends and receives pair up because all devices
+//! walk the (request, layer) steps in one agreed sequence.
+//!
+//! [`Dispatcher`] decides that sequence. It interleaves in-flight
+//! requests round-robin at layer granularity, so request *n+1* enters
+//! layer 0 as soon as request *n* has vacated it, and it paces issuance
+//! with a small credit window: at most [`Dispatcher::window`] unacked
+//! layer/finish commands are outstanding, with worker 0's progress
+//! reports as the acks. The window keeps one command queued ahead of the
+//! one executing (workers never starve) while preventing the leader from
+//! dumping a whole request's command stream at once — which would push a
+//! later submission entirely *behind* it and silently serialize the
+//! fabric again.
+//!
+//! The machine is pure (no channels, no PJRT, no clocks), so the
+//! protocol's invariants — interleaving, window bounds, per-request
+//! command shape — are unit-tested artifact-free below.
+
+use std::collections::{HashMap, VecDeque};
+
+/// One broadcast command, in the exact order every worker must see it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmd {
+    /// Register per-request state (the leader scatters input shards
+    /// alongside this command).
+    Begin { req: u64 },
+    /// Execute one HMP layer of the request on the worker's shard.
+    Layer { req: u64, layer: usize },
+    /// Emit the request's output shard and drop its state.
+    Finish { req: u64 },
+}
+
+/// Round-robin per-layer interleaver with a bounded issue window.
+#[derive(Debug)]
+pub struct Dispatcher {
+    layers: usize,
+    window: usize,
+    /// Requests with commands still to issue, in round-robin order.
+    rotation: VecDeque<u64>,
+    /// Next layer to issue per rotating request (== `layers` → Finish).
+    next_layer: HashMap<u64, usize>,
+    /// Paced (Layer/Finish) commands issued and acknowledged.
+    issued: u64,
+    acked: u64,
+}
+
+impl Dispatcher {
+    /// A dispatcher for `layers`-layer requests pacing at most `window`
+    /// unacknowledged commands (clamped to ≥ 1).
+    pub fn new(layers: usize, window: usize) -> Self {
+        Self {
+            layers,
+            window: window.max(1),
+            rotation: VecDeque::new(),
+            next_layer: HashMap::new(),
+            issued: 0,
+            acked: 0,
+        }
+    }
+
+    /// Paced commands currently issued but not yet acknowledged.
+    pub fn outstanding(&self) -> u64 {
+        self.issued - self.acked
+    }
+
+    /// Requests that still have commands to issue.
+    pub fn active(&self) -> usize {
+        self.rotation.len()
+    }
+
+    /// Admit a request: returns the commands to broadcast now — its
+    /// `Begin` (unpaced: it only registers state) plus whatever the
+    /// credit window allows across all active requests.
+    pub fn submit(&mut self, req: u64) -> Vec<Cmd> {
+        debug_assert!(!self.next_layer.contains_key(&req), "duplicate request id {req}");
+        self.next_layer.insert(req, 0);
+        self.rotation.push_back(req);
+        let mut cmds = vec![Cmd::Begin { req }];
+        self.pump(&mut cmds);
+        cmds
+    }
+
+    /// One paced command was acknowledged (worker 0 finished a layer or a
+    /// finish); returns the follow-on commands the freed credit allows.
+    pub fn ack(&mut self) -> Vec<Cmd> {
+        debug_assert!(self.acked < self.issued, "ack without outstanding command");
+        self.acked += 1;
+        let mut cmds = Vec::new();
+        self.pump(&mut cmds);
+        cmds
+    }
+
+    /// Issue while credit remains: pop the front request, emit its next
+    /// layer (or its finish), rotate it to the back — so concurrent
+    /// requests advance through the layer pipeline in lockstep.
+    fn pump(&mut self, cmds: &mut Vec<Cmd>) {
+        while self.outstanding() < self.window as u64 {
+            let Some(req) = self.rotation.pop_front() else { break };
+            let layer = self.next_layer[&req];
+            if layer < self.layers {
+                cmds.push(Cmd::Layer { req, layer });
+                self.next_layer.insert(req, layer + 1);
+                self.rotation.push_back(req);
+            } else {
+                cmds.push(Cmd::Finish { req });
+                self.next_layer.remove(&req);
+            }
+            self.issued += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a dispatcher to completion, acking every outstanding paced
+    /// command in issue order; returns the full broadcast stream.
+    fn drain(d: &mut Dispatcher, mut stream: Vec<Cmd>) -> Vec<Cmd> {
+        while d.outstanding() > 0 {
+            let more = d.ack();
+            stream.extend(more);
+        }
+        stream
+    }
+
+    /// Per-request command shape: one Begin, then layers 0..L in order,
+    /// then one Finish, in stream order.
+    fn assert_request_shape(stream: &[Cmd], req: u64, layers: usize) {
+        let mine: Vec<&Cmd> = stream
+            .iter()
+            .filter(|c| match c {
+                Cmd::Begin { req: r } | Cmd::Layer { req: r, .. } | Cmd::Finish { req: r } => {
+                    *r == req
+                }
+            })
+            .collect();
+        assert_eq!(mine.len(), layers + 2, "req {req}: {mine:?}");
+        assert_eq!(*mine[0], Cmd::Begin { req });
+        for (l, c) in mine[1..=layers].iter().enumerate() {
+            assert_eq!(**c, Cmd::Layer { req, layer: l });
+        }
+        assert_eq!(*mine[layers + 1], Cmd::Finish { req });
+    }
+
+    #[test]
+    fn single_request_issues_layers_in_order() {
+        let mut d = Dispatcher::new(4, 2);
+        let submitted = d.submit(7);
+        let stream = drain(&mut d, submitted);
+        assert_request_shape(&stream, 7, 4);
+        assert_eq!(d.active(), 0);
+        assert_eq!(d.outstanding(), 0);
+    }
+
+    #[test]
+    fn window_bounds_outstanding_commands() {
+        let mut d = Dispatcher::new(8, 2);
+        let first = d.submit(0);
+        // Begin is unpaced; exactly `window` layer commands follow it.
+        assert_eq!(
+            first,
+            vec![
+                Cmd::Begin { req: 0 },
+                Cmd::Layer { req: 0, layer: 0 },
+                Cmd::Layer { req: 0, layer: 1 }
+            ]
+        );
+        assert_eq!(d.outstanding(), 2);
+        // A second submission must not burst past the window either.
+        let second = d.submit(1);
+        assert_eq!(second, vec![Cmd::Begin { req: 1 }]);
+        assert_eq!(d.outstanding(), 2);
+        // Each ack frees exactly one slot.
+        assert_eq!(d.ack().len(), 1);
+        assert_eq!(d.outstanding(), 2);
+    }
+
+    #[test]
+    fn concurrent_requests_interleave_layerwise() {
+        let mut d = Dispatcher::new(3, 1);
+        let mut stream = d.submit(0);
+        stream.extend(d.submit(1));
+        let stream = drain(&mut d, stream);
+        assert_request_shape(&stream, 0, 3);
+        assert_request_shape(&stream, 1, 3);
+        // Request 0 gets one layer of head start (it was alone when the
+        // window had credit); from then on the paced stream alternates
+        // between the two requests: request 1 enters each layer as soon
+        // as request 0 vacates it, never after request 0 completes.
+        let paced: Vec<Cmd> =
+            stream.iter().copied().filter(|c| !matches!(c, Cmd::Begin { .. })).collect();
+        assert_eq!(
+            paced,
+            vec![
+                Cmd::Layer { req: 0, layer: 0 },
+                Cmd::Layer { req: 0, layer: 1 },
+                Cmd::Layer { req: 1, layer: 0 },
+                Cmd::Layer { req: 0, layer: 2 },
+                Cmd::Layer { req: 1, layer: 1 },
+                Cmd::Finish { req: 0 },
+                Cmd::Layer { req: 1, layer: 2 },
+                Cmd::Finish { req: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn late_submission_joins_the_interleave() {
+        let mut d = Dispatcher::new(6, 1);
+        let mut stream = d.submit(0);
+        // Let request 0 run two layers solo, then admit request 1.
+        stream.extend(d.ack());
+        stream.extend(d.ack());
+        stream.extend(d.submit(1));
+        let stream = drain(&mut d, stream);
+        assert_request_shape(&stream, 0, 6);
+        assert_request_shape(&stream, 1, 6);
+        // Request 1's layer 0 must be issued before request 0's last
+        // layer — interleaved, not appended after request 0's stream.
+        let pos = |c: Cmd| stream.iter().position(|x| *x == c).unwrap();
+        assert!(
+            pos(Cmd::Layer { req: 1, layer: 0 }) < pos(Cmd::Layer { req: 0, layer: 5 }),
+            "late request serialized behind the running one: {stream:?}"
+        );
+    }
+
+    #[test]
+    fn window_never_exceeded_under_random_churn() {
+        // Deterministic pseudo-random churn of submits/acks: the window
+        // invariant and per-request shapes must hold throughout.
+        let (layers, window) = (5usize, 3usize);
+        let mut d = Dispatcher::new(layers, window);
+        let mut stream = Vec::new();
+        let mut rng = 0x2545F4914F6CDD1Du64;
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            if rng % 3 == 0 && next_id < 12 {
+                next_id += 1;
+                stream.extend(d.submit(next_id - 1));
+            } else if d.outstanding() > 0 {
+                stream.extend(d.ack());
+            } else {
+                continue;
+            }
+            assert!(d.outstanding() <= window as u64, "window violated");
+        }
+        let stream = drain(&mut d, stream);
+        assert!(next_id >= 2, "churn must admit several requests");
+        for req in 0..next_id {
+            assert_request_shape(&stream, req, layers);
+        }
+        assert_eq!(d.active(), 0);
+    }
+
+    #[test]
+    fn zero_layer_model_goes_straight_to_finish() {
+        let mut d = Dispatcher::new(0, 2);
+        let stream = d.submit(3);
+        assert_eq!(stream, vec![Cmd::Begin { req: 3 }, Cmd::Finish { req: 3 }]);
+        let _ = d.ack();
+        assert_eq!(d.active(), 0);
+    }
+}

@@ -1,5 +1,11 @@
 //! Worker thread: one simulated edge device executing its HMP shard.
 //!
+//! The worker speaks the per-layer protocol: the leader broadcasts
+//! [`LeaderCmd::Begin`]/[`LeaderCmd::Layer`]/[`LeaderCmd::Finish`]
+//! commands carrying request ids, and the worker keeps one [`ReqState`]
+//! per in-flight request — so consecutive requests interleave layer-wise
+//! through the ring instead of serializing whole requests.
+//!
 //! Per layer (paper Fig. 5), in tiled-overlap mode (§III-D):
 //!
 //! 1. **AG ⊕ entry GEMM** — walk [`all_gather_steps`]: forward the held
@@ -16,6 +22,7 @@
 //! computation strictly serialized (fused shard artifacts) — the ablation
 //! baseline and the numerics cross-check for the tiled path.
 
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::mpsc::{Receiver, Sender};
 
@@ -28,16 +35,43 @@ use crate::parallel::OverlapMode;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor2;
 
-/// Commands from the leader.
+/// Commands from the leader — per-layer granularity, carrying a request
+/// id, so consecutive requests interleave layer-wise through the ring
+/// (see [`crate::cluster::protocol`] for the ordering contract).
 pub enum LeaderCmd {
-    Infer { x_shard: Tensor2, mask: Vec<f32> },
+    /// Register a request: its input row-shard and additive key mask.
+    Begin { req: u64, x_shard: Tensor2, mask: Vec<f32> },
+    /// Execute one HMP layer of a registered request.
+    Layer { req: u64, layer: usize },
+    /// Emit the request's output shard and drop its state.
+    Finish { req: u64 },
     Shutdown,
 }
 
 /// Replies to the leader.
 pub enum WorkerReply {
-    Done { h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64, sync_points: u64 },
+    /// Pacing acknowledgement (worker 0 only): one `Layer` command done.
+    LayerDone { req: u64 },
+    /// A request's `Finish`: output shard plus this worker's per-request
+    /// counters (accumulated across its interleaved layer commands).
+    Done { req: u64, h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64, sync_points: u64 },
+    /// Fatal: the worker cannot continue (its ring position is now
+    /// desynchronized), so the leader must poison the fabric.
     Failed(String),
+}
+
+/// Per-request execution state held by a worker between layer commands.
+struct ReqState {
+    /// Current activation row-shard (layer l's output, layer l+1's input).
+    x_shard: Tensor2,
+    mask: Vec<f32>,
+    /// Counters attributed to this request across its layer commands —
+    /// deltas of the worker's ambient counters, so interleaved requests
+    /// never bleed into each other's totals (the cross-engine parity
+    /// test depends on per-request counts being schedule properties).
+    ring_bytes: u64,
+    pjrt_calls: u64,
+    sync_points: u64,
 }
 
 /// Everything a worker needs to set itself up (must be `Send`).
@@ -76,9 +110,13 @@ struct Worker {
     /// Ring synchronization phases actually walked (counted, not derived,
     /// so the cross-engine parity test measures real behaviour).
     sync_points: u64,
+    /// In-flight request states, keyed by request id.
+    states: HashMap<u64, ReqState>,
 }
 
-/// Worker thread entry point.
+/// Worker thread entry point: processes the leader's per-layer command
+/// stream strictly in order. Every worker sees the same global order, so
+/// ring sends and receives pair up across interleaved requests.
 pub fn run(
     spec: WorkerSpec,
     cmds: Receiver<LeaderCmd>,
@@ -97,21 +135,44 @@ pub fn run(
     while let Ok(cmd) = cmds.recv() {
         match cmd {
             LeaderCmd::Shutdown => break,
-            LeaderCmd::Infer { x_shard, mask } => {
-                let calls_before = worker.rt.pjrt_calls();
-                let bytes_before = worker.ring_bytes;
-                let syncs_before = worker.sync_points;
-                let msg = match worker.infer(x_shard, &mask) {
-                    Ok(h_shard) => WorkerReply::Done {
-                        h_shard,
-                        ring_bytes: worker.ring_bytes - bytes_before,
-                        pjrt_calls: worker.rt.pjrt_calls() - calls_before,
-                        sync_points: worker.sync_points - syncs_before,
+            LeaderCmd::Begin { req, x_shard, mask } => {
+                worker.states.insert(
+                    req,
+                    ReqState { x_shard, mask, ring_bytes: 0, pjrt_calls: 0, sync_points: 0 },
+                );
+            }
+            LeaderCmd::Layer { req, layer } => match worker.exec_layer(req, layer) {
+                Ok(()) => {
+                    // Worker 0 paces the leader's issue window.
+                    if index == 0 && reply.send((index, WorkerReply::LayerDone { req })).is_err() {
+                        break; // leader gone
+                    }
+                }
+                Err(e) => {
+                    // A failed layer skipped its ring phases: this
+                    // worker's ring position is desynchronized and no
+                    // further command can run safely.
+                    let _ = reply.send((
+                        index,
+                        WorkerReply::Failed(format!("request {req} layer {layer}: {e}")),
+                    ));
+                    break;
+                }
+            },
+            LeaderCmd::Finish { req } => {
+                let msg = match worker.states.remove(&req) {
+                    Some(st) => WorkerReply::Done {
+                        req,
+                        h_shard: st.x_shard,
+                        ring_bytes: st.ring_bytes,
+                        pjrt_calls: st.pjrt_calls,
+                        sync_points: st.sync_points,
                     },
-                    Err(e) => WorkerReply::Failed(e.to_string()),
+                    None => WorkerReply::Failed(format!("finish for unknown request {req}")),
                 };
-                if reply.send((index, msg)).is_err() {
-                    break; // leader gone
+                let fatal = matches!(msg, WorkerReply::Failed(_));
+                if reply.send((index, msg)).is_err() || fatal {
+                    break;
                 }
             }
         }
@@ -173,7 +234,17 @@ impl Worker {
         let tile_offsets = (0..spec.tiles.len())
             .map(|t| spec.tiles[..t].iter().sum())
             .collect();
-        Ok(Worker { spec, rt, layers, tile_offsets, next, prev, ring_bytes: 0, sync_points: 0 })
+        Ok(Worker {
+            spec,
+            rt,
+            layers,
+            tile_offsets,
+            next,
+            prev,
+            ring_bytes: 0,
+            sync_points: 0,
+            states: HashMap::new(),
+        })
     }
 
     fn send(&mut self, t: Tensor2) -> Result<()> {
@@ -193,13 +264,29 @@ impl Worker {
         format!("{base}__{}", self.spec.flavor)
     }
 
-    /// Full multi-layer HMP inference over this worker's shard.
-    fn infer(&mut self, mut x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
-        let layers = self.spec.model.layers;
-        for l in 0..layers {
-            x_shard = self.layer(l, x_shard, mask)?;
-        }
-        Ok(x_shard)
+    /// One layer command: advance the request's activation shard by one
+    /// HMP layer, attributing the counter deltas to that request.
+    fn exec_layer(&mut self, req: u64, l: usize) -> Result<()> {
+        let st = self
+            .states
+            .remove(&req)
+            .ok_or_else(|| GalaxyError::Fabric(format!("layer {l} for unknown request {req}")))?;
+        let ReqState { x_shard, mask, ring_bytes, pjrt_calls, sync_points } = st;
+        let calls0 = self.rt.pjrt_calls();
+        let bytes0 = self.ring_bytes;
+        let syncs0 = self.sync_points;
+        let out = self.layer(l, x_shard, &mask)?;
+        self.states.insert(
+            req,
+            ReqState {
+                x_shard: out,
+                mask,
+                ring_bytes: ring_bytes + (self.ring_bytes - bytes0),
+                pjrt_calls: pjrt_calls + (self.rt.pjrt_calls() - calls0),
+                sync_points: sync_points + (self.sync_points - syncs0),
+            },
+        );
+        Ok(())
     }
 
     /// One HMP layer; input/output are this device's SP row-shards.

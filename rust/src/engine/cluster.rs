@@ -1,10 +1,60 @@
 //! [`Engine`] implementation for the real PJRT worker fabric.
+//!
+//! The cluster is the one backend with *native* request pipelining: its
+//! per-layer worker protocol interleaves consecutive requests layer-wise
+//! through the ring, so [`Engine::submit`] maps straight onto
+//! [`RealCluster::submit_padded`] and completions come back from
+//! [`RealCluster::poll_finished`] with measured start/finish instants.
+//! The blocking [`Engine::infer`] remains a submit-then-wait on top.
 
-use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest};
+use crate::cluster::{FinishedRequest, RealCluster};
+use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest, Submitted};
 use crate::error::{GalaxyError, Result};
 use crate::serving::pad_and_mask;
+use crate::tensor::Tensor2;
 
-use crate::cluster::RealCluster;
+impl RealCluster {
+    /// Validate the request against the loaded artifacts and synthesize
+    /// its padded input activations + key mask (stand-in for the
+    /// tokenizer+embedding lookup).
+    fn prepare(&self, req: &InferRequest) -> Result<(Tensor2, Vec<f32>)> {
+        if req.bucket != self.seq_len() {
+            return Err(GalaxyError::Shape(format!(
+                "bucket {} not admissible: artifacts are lowered for seq_len {}",
+                req.bucket,
+                self.seq_len()
+            )));
+        }
+        // Oversize requests are a Shape error (like `pad_and_mask`), not
+        // a silent truncation.
+        let valid = req.valid_len()?;
+        let x = self.weights().input(req.id, valid);
+        pad_and_mask(&x, req.bucket)
+    }
+}
+
+/// Convert a harvested fabric completion into the unified outcome.
+fn outcome_from_finished(fin: FinishedRequest) -> Result<InferOutcome> {
+    let output = fin.output.slice_rows(0, fin.valid_rows)?;
+    Ok(InferOutcome {
+        id: fin.id,
+        service_s: fin.service_s,
+        // The real fabric cannot split compute from hidden transfers;
+        // all measured time is busy time.
+        compute_s: fin.service_s,
+        exposed_comm_s: 0.0,
+        hidden_comm_s: 0.0,
+        // Counted by the workers as they walk the ring phases — the
+        // cross-engine parity test compares this against the simulator's
+        // count for the same plan, and per-request counts must be
+        // unchanged by interleaving.
+        sync_points: fin.sync_points,
+        ring_bytes: fin.ring_bytes,
+        pjrt_calls: fin.pjrt_calls,
+        output: Some(output),
+        measured_span_s: Some((fin.started_s, fin.finished_s)),
+    })
+}
 
 impl Engine for RealCluster {
     fn caps(&self) -> EngineCaps {
@@ -14,52 +64,33 @@ impl Engine for RealCluster {
             // The AOT artifacts are lowered for exactly one padded length.
             seq_buckets: vec![self.seq_len()],
             overlap: self.overlap(),
-            // The worker protocol executes one request at a time (layer-
-            // level request interleaving is future work — see ROADMAP).
-            pipeline_depth: 1,
+            // Per-layer worker protocol: request n+1 enters layer 0 as
+            // soon as request n vacates it, so up to `layers` requests
+            // interleave through the ring.
+            pipeline_depth: self.model().layers.max(1),
         }
     }
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
-        if req.bucket != self.seq_len() {
-            return Err(GalaxyError::Shape(format!(
-                "bucket {} not admissible: artifacts are lowered for seq_len {}",
-                req.bucket,
-                self.seq_len()
-            )));
+        let (padded, mask) = self.prepare(req)?;
+        self.submit_padded(req.id, &padded, &mask)?;
+        outcome_from_finished(self.wait_finished(req.id)?)
+    }
+
+    fn submit(&mut self, req: &InferRequest) -> Result<Submitted> {
+        let (padded, mask) = self.prepare(req)?;
+        self.submit_padded(req.id, &padded, &mask)?;
+        Ok(Submitted::InFlight)
+    }
+
+    fn poll_complete(&mut self, wait: bool) -> Result<Option<InferOutcome>> {
+        match self.poll_finished(wait)? {
+            Some(fin) => Ok(Some(outcome_from_finished(fin)?)),
+            None => Ok(None),
         }
-        // Synthesize the request's input activations (stand-in for the
-        // tokenizer+embedding lookup), pad to the artifact bucket.
-        let valid = req.seq_len.min(req.bucket);
-        let x = self.weights().input(req.id, valid);
-        let (padded, mask) = pad_and_mask(&x, req.bucket)?;
+    }
 
-        // Snapshot the scalar counters only — cloning the whole report
-        // would copy the unbounded latency vector on every request.
-        let (sync0, ring0, pjrt0) = {
-            let r = self.report();
-            (r.sync_points, r.ring_bytes, r.pjrt_calls)
-        };
-        // Explicitly the inherent tensor-level entry point, not a
-        // recursive trait call.
-        let full = RealCluster::infer(self, &padded, &mask)?;
-        let after = self.report();
-
-        Ok(InferOutcome {
-            id: req.id,
-            service_s: after.latencies_s.last().copied().unwrap_or(0.0),
-            // The real fabric cannot split compute from hidden transfers;
-            // all measured time is busy time.
-            compute_s: after.latencies_s.last().copied().unwrap_or(0.0),
-            exposed_comm_s: 0.0,
-            hidden_comm_s: 0.0,
-            // Counted by the workers as they walk the ring phases — the
-            // cross-engine parity test compares this against the
-            // simulator's count for the same plan.
-            sync_points: after.sync_points - sync0,
-            ring_bytes: after.ring_bytes - ring0,
-            pjrt_calls: after.pjrt_calls - pjrt0,
-            output: Some(full.slice_rows(0, valid)?),
-        })
+    fn measured_now_s(&self) -> Option<f64> {
+        Some(self.elapsed_s())
     }
 }

@@ -21,11 +21,20 @@
 //! overlaps up to [`EngineCaps::pipeline_depth`] requests through the HMP
 //! layer pipeline; benches and the CLI run Galaxy through `&mut dyn
 //! Engine` and never dispatch on the concrete type.
+//!
+//! Engines that execute in real time additionally expose a non-blocking
+//! [`Engine::submit`] / [`Engine::poll_complete`] surface: submissions
+//! enter the backend's own request pipeline and completions come back
+//! with *measured* start/finish instants
+//! ([`InferOutcome::measured_span_s`]), which the scheduler uses instead
+//! of modeled stage arithmetic. Backends without native pipelining (the
+//! simulator, test mocks) are untouched — the default `submit` is a
+//! serial shim that executes inline and hands the outcome straight back.
 
 pub mod cluster;
 pub mod sim;
 
-use crate::error::Result;
+use crate::error::{GalaxyError, Result};
 use crate::parallel::OverlapMode;
 use crate::tensor::Tensor2;
 
@@ -90,6 +99,19 @@ impl InferRequest {
     pub fn new(id: u64, seq_len: usize, bucket: usize) -> Self {
         Self { id, seq_len, bucket }
     }
+
+    /// Valid row count after bucket validation. A request whose valid
+    /// length exceeds its padded bucket is a [`GalaxyError::Shape`] error
+    /// — matching `pad_and_mask` — never a silent truncation.
+    pub fn valid_len(&self) -> Result<usize> {
+        if self.seq_len > self.bucket {
+            return Err(GalaxyError::Shape(format!(
+                "request of {} tokens exceeds its padded bucket {}",
+                self.seq_len, self.bucket
+            )));
+        }
+        Ok(self.seq_len)
+    }
 }
 
 /// Per-request execution report, filled by every backend with identical
@@ -116,6 +138,11 @@ pub struct InferOutcome {
     pub pjrt_calls: u64,
     /// Output activations for the valid rows (None for modeled engines).
     pub output: Option<Tensor2>,
+    /// Measured (start, finish) instants in seconds since the engine's
+    /// timing epoch — `Some` only for engines that execute in real time.
+    /// The scheduler prefers these over modeled stage arithmetic when
+    /// placing the request on its timeline.
+    pub measured_span_s: Option<(f64, f64)>,
 }
 
 impl InferOutcome {
@@ -129,6 +156,17 @@ impl InferOutcome {
     }
 }
 
+/// Result of a non-blocking [`Engine::submit`].
+#[derive(Debug)]
+pub enum Submitted {
+    /// The engine executed the request inline (the default serial shim
+    /// for backends without native request pipelining).
+    Completed(InferOutcome),
+    /// The request entered the backend's pipeline; harvest it through
+    /// [`Engine::poll_complete`].
+    InFlight,
+}
+
 /// A Galaxy execution engine: anything that can run one padded single-shot
 /// inference under the HMP schedule and report what it did.
 pub trait Engine {
@@ -137,6 +175,30 @@ pub trait Engine {
 
     /// Execute one request end to end.
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome>;
+
+    /// Begin executing `req` without waiting for its completion, so
+    /// consecutive requests can interleave inside the backend. The
+    /// default is a serial shim — execute inline via [`Engine::infer`]
+    /// and return the outcome immediately — so modeled engines and mocks
+    /// need not implement anything.
+    fn submit(&mut self, req: &InferRequest) -> Result<Submitted> {
+        Ok(Submitted::Completed(self.infer(req)?))
+    }
+
+    /// Harvest one asynchronously completed request ([`Submitted::InFlight`]
+    /// submissions only). With `wait` the engine blocks until a request
+    /// completes; `None` means nothing is (or, without `wait`, nothing
+    /// has yet) completed. Serial-shim engines never have any.
+    fn poll_complete(&mut self, _wait: bool) -> Result<Option<InferOutcome>> {
+        Ok(None)
+    }
+
+    /// Measured seconds since the engine's timing epoch — `Some` only
+    /// for engines executing in real time. The scheduler uses it to gate
+    /// trace arrivals against the wall clock.
+    fn measured_now_s(&self) -> Option<f64> {
+        None
+    }
 }
 
 #[cfg(test)]
@@ -176,5 +238,46 @@ mod tests {
         let o = InferOutcome { service_s: 0.25, ..Default::default() };
         assert!((o.total_s() - 0.25).abs() < 1e-12);
         assert!((o.total_ms() - 250.0).abs() < 1e-9);
+        assert_eq!(o.measured_span_s, None, "modeled outcomes carry no measured instants");
+    }
+
+    #[test]
+    fn oversize_valid_len_is_shape_error_not_truncation() {
+        // Regression: the real engine used to silently truncate a request
+        // with seq_len > bucket (`seq_len.min(bucket)`); it must be a
+        // Shape error, exactly like `pad_and_mask`.
+        assert_eq!(InferRequest::new(0, 60, 60).valid_len().unwrap(), 60);
+        assert_eq!(InferRequest::new(0, 10, 60).valid_len().unwrap(), 10);
+        let err = InferRequest::new(0, 61, 60).valid_len().unwrap_err();
+        assert!(matches!(err, GalaxyError::Shape(_)), "got {err}");
+    }
+
+    struct ShimOnly;
+
+    impl Engine for ShimOnly {
+        fn caps(&self) -> EngineCaps {
+            caps(&[64])
+        }
+
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+            Ok(InferOutcome { id: req.id, service_s: 1.0, ..Default::default() })
+        }
+    }
+
+    #[test]
+    fn default_submit_is_a_serial_shim() {
+        // An engine implementing only `infer` gets submit/poll for free:
+        // submit completes inline, poll never has anything to harvest.
+        let mut e = ShimOnly;
+        match e.submit(&InferRequest::new(9, 32, 64)).unwrap() {
+            Submitted::Completed(o) => {
+                assert_eq!(o.id, 9);
+                assert_eq!(o.measured_span_s, None);
+            }
+            Submitted::InFlight => panic!("serial shim must complete inline"),
+        }
+        assert!(e.poll_complete(false).unwrap().is_none());
+        assert!(e.poll_complete(true).unwrap().is_none());
+        assert_eq!(e.measured_now_s(), None);
     }
 }

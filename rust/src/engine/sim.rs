@@ -17,6 +17,7 @@ pub fn outcome_from_sim(id: u64, rep: &SimReport) -> InferOutcome {
         ring_bytes: rep.ring_bytes,
         pjrt_calls: 0,
         output: None,
+        measured_span_s: None,
     }
 }
 

@@ -21,6 +21,14 @@ pub struct AgStep {
     pub recv_tile: Option<usize>,
 }
 
+/// Euclidean wrap of a (possibly negative) tile index into `0..d` — the
+/// explicit form of every schedule formula below, immune to the
+/// `a + b - c % d` precedence trap (`%` binds tighter than `-`, which
+/// happened to be harmless only because step indices stay below `d`).
+fn wrap(tile: isize, d: usize) -> usize {
+    tile.rem_euclid(d as isize) as usize
+}
+
 /// Full Ring-AllGather overlap schedule for device `i` of `d`.
 ///
 /// Step `s` (0-based): compute GEMM on tile `(i - s) mod d`; concurrently
@@ -28,15 +36,12 @@ pub struct AgStep {
 /// step computes the last received tile with no communication.
 pub fn all_gather_steps(i: usize, d: usize) -> Vec<AgStep> {
     assert!(d >= 1 && i < d);
+    let (i, last) = (i as isize, d - 1);
     (0..d)
-        .map(|s| {
-            let tile = (i + d - s % d) % d;
-            let last = s == d - 1;
-            AgStep {
-                compute_tile: tile,
-                send_tile: (!last).then_some(tile),
-                recv_tile: (!last).then_some((i + d - (s + 1) % d) % d),
-            }
+        .map(|s| AgStep {
+            compute_tile: wrap(i - s as isize, d),
+            send_tile: (s != last).then_some(wrap(i - s as isize, d)),
+            recv_tile: (s != last).then_some(wrap(i - s as isize - 1, d)),
         })
         .collect()
 }
@@ -64,15 +69,15 @@ pub struct RsStep {
 /// tile `i` — exactly the ReduceScatter output.
 pub fn reduce_scatter_steps(i: usize, d: usize) -> Vec<RsStep> {
     assert!(d >= 1 && i < d);
+    let i = i as isize;
     (0..d)
         .map(|s| {
-            let tile = (i + (d - 1) - s + d) % d;
-            let first = s == 0;
+            let s_i = s as isize;
             RsStep {
-                compute_tile: tile,
-                // forward what we finished last step: tile (i + d - s) % d
-                send_tile: (!first).then_some((i + d - s) % d),
-                recv_tile: (!first).then_some(tile),
+                compute_tile: wrap(i - 1 - s_i, d),
+                // Forward what we finished last step: tile (i - s) mod d.
+                send_tile: (s != 0).then_some(wrap(i - s_i, d)),
+                recv_tile: (s != 0).then_some(wrap(i - 1 - s_i, d)),
             }
         })
         .collect()
@@ -175,6 +180,43 @@ mod tests {
             let rs = reduce_scatter_steps(0, d);
             assert_eq!(rs.len(), d);
             assert_eq!(rs.iter().filter(|s| s.send_tile.is_some()).count(), d - 1);
+        }
+    }
+
+    #[test]
+    fn explicit_formulas_match_legacy_schedules_exhaustively() {
+        // Regression for the precedence rewrite: the legacy expressions
+        // (verbatim, including the `s % d` that parses as `s % d` inside
+        // `i + d - s % d`) must produce byte-identical schedules for
+        // every device and step at all d ≤ 8.
+        for d in 1..=8usize {
+            for i in 0..d {
+                let legacy_ag: Vec<AgStep> = (0..d)
+                    .map(|s| {
+                        let tile = (i + d - s % d) % d;
+                        let last = s == d - 1;
+                        AgStep {
+                            compute_tile: tile,
+                            send_tile: (!last).then_some(tile),
+                            recv_tile: (!last).then_some((i + d - (s + 1) % d) % d),
+                        }
+                    })
+                    .collect();
+                assert_eq!(all_gather_steps(i, d), legacy_ag, "AG d={d} i={i}");
+
+                let legacy_rs: Vec<RsStep> = (0..d)
+                    .map(|s| {
+                        let tile = (i + (d - 1) - s + d) % d;
+                        let first = s == 0;
+                        RsStep {
+                            compute_tile: tile,
+                            send_tile: (!first).then_some((i + d - s) % d),
+                            recv_tile: (!first).then_some(tile),
+                        }
+                    })
+                    .collect();
+                assert_eq!(reduce_scatter_steps(i, d), legacy_rs, "RS d={d} i={i}");
+            }
         }
     }
 

@@ -7,7 +7,10 @@
 //!   sequence-length bucketing to the nearest artifact bucket, pluggable
 //!   ordering ([`policy::Policy`]: FIFO / SJF / EDF), and pipelined
 //!   dispatch of up to `EngineCaps::pipeline_depth` in-flight requests
-//!   through the HMP layer schedule.
+//!   through the HMP layer schedule — modeled stage arithmetic for
+//!   serial-shim engines, measured start/finish instants for engines
+//!   with native request pipelining (the PJRT cluster's per-layer
+//!   worker protocol).
 //! * [`pad_and_mask`] — request padding + additive key-mask construction
 //!   shared by every real-execution path.
 //!

@@ -14,13 +14,26 @@
 //! * metrics that keep **queueing delay**, **service time**, and
 //!   **wall-clock throughput** separate ([`ServeMetrics`]).
 //!
-//! The timeline is driven by the workload's arrival timestamps plus the
-//! engine-reported service times — modeled time for the simulator,
-//! measured wall time for the PJRT fabric — so the same scheduler code
-//! serves both backends without dispatching on the concrete engine type.
+//! The timeline depends on how the engine executes. Serial-shim engines
+//! (the simulator, mocks) complete each [`Engine::submit`] inline, and
+//! the scheduler *models* the pipeline: start/finish instants come from
+//! stage arithmetic over the engine-reported service times. Engines with
+//! native request pipelining (the PJRT fabric's per-layer worker
+//! protocol) accept submissions as [`Submitted::InFlight`] and hand back
+//! completions with **measured** start/finish instants
+//! ([`InferOutcome::measured_span_s`]); the scheduler places those on
+//! the timeline as reported instead of re-deriving them from modeled
+//! stage arithmetic. Either way the same scheduler code serves both
+//! backends without dispatching on the concrete engine type.
+//!
+//! Malformed traces are rejected at admission: a request whose arrival
+//! timestamp is NaN, infinite, or negative becomes a [`Rejection`]
+//! (never a panic inside a sort comparator).
 
-use crate::engine::{Engine, InferOutcome, InferRequest};
-use crate::error::Result;
+use std::collections::HashMap;
+
+use crate::engine::{Engine, InferOutcome, InferRequest, Submitted};
+use crate::error::{GalaxyError, Result};
 use crate::metrics::ServeMetrics;
 use crate::serving::policy::{Policy, Queued};
 use crate::workload::Request;
@@ -160,21 +173,46 @@ impl<E: Engine> Scheduler<E> {
         }
         .max(1);
 
-        let mut pending: Vec<Queued> = trace.to_vec();
-        pending.sort_by(|a, b| {
-            a.arrival_s.partial_cmp(&b.arrival_s).unwrap().then(a.id.cmp(&b.id))
-        });
-
         let mut report = SchedReport::default();
+        // Trace validation: a NaN/infinite/negative arrival timestamp is
+        // a malformed request — reject it up front rather than letting it
+        // poison a sort comparator or the admission clock.
+        let mut pending: Vec<Queued> = Vec::with_capacity(trace.len());
+        for q in trace {
+            if q.arrival_s.is_finite() && q.arrival_s >= 0.0 {
+                pending.push(*q);
+            } else {
+                report.rejections.push(Rejection {
+                    id: q.id,
+                    seq_len: q.seq_len,
+                    reason: format!("malformed arrival timestamp {}", q.arrival_s),
+                });
+            }
+        }
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+
         let mut queue: Vec<Queued> = Vec::new();
         let mut next = 0usize;
         let mut t = 0.0f64;
-        // Finish instants in dispatch order. The no-overtake rule makes
-        // this non-decreasing, so window checks index it directly.
+        // Anchor for translating the engine's measured clock (seconds
+        // since *its* epoch, which keeps ticking across runs and
+        // warm-ups) into this run's trace clock, whose origin is now.
+        let clock0 = self.engine.measured_now_s().unwrap_or(0.0);
+        // Modeled-pipeline state (serial-shim engines): finish instants
+        // in dispatch order. The no-overtake rule makes this
+        // non-decreasing, so window checks index it directly.
         let mut finishes: Vec<f64> = Vec::new();
         let mut last_stage_gate = f64::NEG_INFINITY;
+        // Native-pipeline state (engines that accept submissions as
+        // `Submitted::InFlight`): dispatched, not yet harvested.
+        let mut in_flight: HashMap<u64, (Queued, usize)> = HashMap::new();
 
         while next < pending.len() || !queue.is_empty() {
+            // Engines executing in real time advance the clock on their
+            // own; the trace clock never runs behind the measured one.
+            if let Some(now) = self.engine.measured_now_s() {
+                t = t.max(now - clock0);
+            }
             // Admit everything that has arrived by `t`. Unservable
             // requests are rejected here, at admission — not at dispatch,
             // where a reordering policy (SJF) could starve them forever
@@ -201,17 +239,42 @@ impl<E: Engine> Scheduler<E> {
                     // Everything remaining was rejected at admission.
                     break;
                 }
-                // Idle: jump to the next arrival.
-                t = t.max(pending[next].arrival_s);
+                // Idle until the next arrival: first fold in anything the
+                // native pipeline finished meanwhile, then advance — a
+                // modeled clock jumps, a measured one waits out the gap
+                // in short slices, keeping the engine polled (a native
+                // pipeline's command pacing only advances while polled).
+                if self.harvest(&mut in_flight, &mut report, false, clock0)? {
+                    continue;
+                }
+                let target = pending[next].arrival_s;
+                while let Some(now) = self.engine.measured_now_s() {
+                    let now = now - clock0;
+                    if now >= target {
+                        break;
+                    }
+                    if !self.harvest(&mut in_flight, &mut report, false, clock0)? {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            (target - now).min(0.01),
+                        ));
+                    }
+                }
+                t = t.max(target);
                 continue;
             }
-            // Pipeline entry gate: the previous request must have cleared
-            // layer 0 before a new one may enter.
+            // Native-pipeline window gate: at most `depth` requests in
+            // flight; block on a completion before dispatching more.
+            if !in_flight.is_empty() && in_flight.len() >= depth {
+                self.harvest(&mut in_flight, &mut report, true, clock0)?;
+                continue;
+            }
+            // Modeled pipeline entry gate: the previous request must have
+            // cleared layer 0 before a new one may enter.
             if t + 1e-12 < last_stage_gate {
                 t = last_stage_gate;
                 continue;
             }
-            // Window gate: at most `depth` requests in flight at once.
+            // Modeled window gate: at most `depth` requests in flight.
             if finishes.len() >= depth {
                 let free_at = finishes[finishes.len() - depth];
                 if t + 1e-12 < free_at {
@@ -225,7 +288,16 @@ impl<E: Engine> Scheduler<E> {
             // Admission already filtered unservable requests.
             let bucket = caps.bucket_for(q.seq_len).expect("admitted request has a bucket");
 
-            let outcome = self.engine.infer(&InferRequest::new(q.id, q.seq_len, bucket))?;
+            let submitted = self.engine.submit(&InferRequest::new(q.id, q.seq_len, bucket))?;
+            let outcome = match submitted {
+                Submitted::InFlight => {
+                    // The engine pipelines natively; its completion
+                    // arrives with measured instants via harvest.
+                    in_flight.insert(q.id, (q, bucket));
+                    continue;
+                }
+                Submitted::Completed(outcome) => outcome,
+            };
             let start = t.max(q.arrival_s);
             // Pipeline stage gap. Two lower bounds: (a) layer granularity
             // — the successor enters layer 0 one stage later at best; and
@@ -257,10 +329,67 @@ impl<E: Engine> Scheduler<E> {
                 outcome,
             });
         }
+        // Drain the native pipeline.
+        while !in_flight.is_empty() {
+            self.harvest(&mut in_flight, &mut report, true, clock0)?;
+        }
 
         report.peak_in_flight = peak_in_flight(&report.completions);
         report.metrics = build_metrics(&report);
         Ok(report)
+    }
+
+    /// Harvest one completion from a natively pipelined engine and place
+    /// it on the timeline at its measured start/finish instants, shifted
+    /// from the engine's clock domain into this run's trace clock by
+    /// `clock0` (falling back to arrival + service when the engine
+    /// reports no instants). Returns whether a completion was folded in.
+    fn harvest(
+        &mut self,
+        in_flight: &mut HashMap<u64, (Queued, usize)>,
+        report: &mut SchedReport,
+        wait: bool,
+        clock0: f64,
+    ) -> Result<bool> {
+        if in_flight.is_empty() {
+            return Ok(false);
+        }
+        let Some(mut outcome) = self.engine.poll_complete(wait)? else {
+            if wait {
+                return Err(GalaxyError::Fabric(
+                    "engine reported no completion with requests in flight".into(),
+                ));
+            }
+            return Ok(false);
+        };
+        let (q, bucket) = in_flight.remove(&outcome.id).ok_or_else(|| {
+            GalaxyError::Fabric(format!("engine completed unknown request {}", outcome.id))
+        })?;
+        let (start, finish) = match outcome.measured_span_s {
+            Some((s, f)) => {
+                // Re-express in the run's clock so arrivals, starts, and
+                // finishes share one origin (a warm engine's epoch long
+                // predates this run).
+                let span = (s - clock0, f - clock0);
+                outcome.measured_span_s = Some(span);
+                span
+            }
+            None => (q.arrival_s, q.arrival_s + outcome.service_s),
+        };
+        report.completions.push(Completion {
+            id: q.id,
+            seq_len: q.seq_len,
+            bucket,
+            arrival_s: q.arrival_s,
+            start_s: start,
+            finish_s: finish,
+            // Measured dispatch can land an epsilon before the trace
+            // arrival stamp; queueing delay is never negative.
+            queueing_s: (start - q.arrival_s).max(0.0),
+            service_s: outcome.service_s,
+            outcome,
+        });
+        Ok(true)
     }
 }
 
@@ -273,7 +402,7 @@ fn peak_in_flight(completions: &[Completion]) -> usize {
         events.push((c.start_s, 1));
         events.push((c.finish_s, -1));
     }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     let mut cur = 0i64;
     let mut peak = 0i64;
     for (_, delta) in events {
@@ -498,6 +627,153 @@ mod tests {
         assert_eq!(rep.completions[1].queueing_s, 0.0);
         // Sparse arrivals → no overlap, idle gap in between.
         assert_eq!(rep.peak_in_flight, 1);
+    }
+
+    /// Mock of a natively pipelined engine (the real cluster's per-layer
+    /// protocol): submissions queue up, completions come back in order
+    /// with fabricated measured instants on a perfect `stage_s` cadence.
+    struct AsyncMockEngine {
+        depth: usize,
+        service_s: f64,
+        stage_s: f64,
+        /// Pre-advanced measured clock — models a warm engine whose
+        /// epoch (spawn) long predates the scheduler run.
+        clock_offset: f64,
+        queue: std::collections::VecDeque<InferRequest>,
+        started: u64,
+        high_water: usize,
+    }
+
+    impl AsyncMockEngine {
+        fn new(depth: usize) -> Self {
+            Self {
+                depth,
+                service_s: 0.2,
+                stage_s: 0.05,
+                clock_offset: 0.0,
+                queue: Default::default(),
+                started: 0,
+                high_water: 0,
+            }
+        }
+
+        fn fabricate(&mut self, req: &InferRequest) -> InferOutcome {
+            let start = self.clock_offset + self.started as f64 * self.stage_s;
+            self.started += 1;
+            InferOutcome {
+                id: req.id,
+                service_s: self.service_s,
+                compute_s: self.service_s / 4.0,
+                sync_points: 48,
+                ring_bytes: (req.bucket * 1024) as u64,
+                measured_span_s: Some((start, start + self.service_s)),
+                ..Default::default()
+            }
+        }
+    }
+
+    impl Engine for AsyncMockEngine {
+        fn caps(&self) -> EngineCaps {
+            EngineCaps {
+                name: "mock-async",
+                devices: 2,
+                seq_buckets: vec![64, 128, 256],
+                overlap: OverlapMode::Tiled,
+                pipeline_depth: self.depth,
+            }
+        }
+
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+            Ok(self.fabricate(req))
+        }
+
+        fn submit(&mut self, req: &InferRequest) -> Result<crate::engine::Submitted> {
+            self.queue.push_back(*req);
+            self.high_water = self.high_water.max(self.queue.len());
+            Ok(crate::engine::Submitted::InFlight)
+        }
+
+        fn poll_complete(&mut self, _wait: bool) -> Result<Option<InferOutcome>> {
+            let Some(req) = self.queue.pop_front() else { return Ok(None) };
+            Ok(Some(self.fabricate(&req)))
+        }
+
+        fn measured_now_s(&self) -> Option<f64> {
+            Some(self.clock_offset + self.started as f64 * self.stage_s)
+        }
+    }
+
+    #[test]
+    fn async_engine_timeline_uses_measured_instants() {
+        let mut s = Scheduler::new(AsyncMockEngine::new(8));
+        let rep = s.run(&burst(&[64; 6])).unwrap();
+        assert_eq!(rep.served(), 6);
+        // start/finish come from the engine's measured spans, not stage
+        // arithmetic: request k starts at k * stage_s.
+        for (k, c) in rep.completions.iter().enumerate() {
+            assert!((c.start_s - k as f64 * 0.05).abs() < 1e-12, "start {}", c.start_s);
+            assert!((c.finish_s - (c.start_s + 0.2)).abs() < 1e-12);
+            assert_eq!(c.outcome.measured_span_s, Some((c.start_s, c.finish_s)));
+        }
+        // 0.2 s of service on a 0.05 s cadence → 4 requests overlap.
+        assert_eq!(rep.peak_in_flight, 4);
+        assert!(rep.metrics.queueing.mean_s() < rep.metrics.e2e.mean_s());
+    }
+
+    #[test]
+    fn warm_engine_clock_is_rebased_to_the_run() {
+        // Regression: a warm engine's measured clock (epoch at spawn,
+        // already advanced by warm-up requests) must not leak into the
+        // trace timeline — the scheduler re-bases measured instants to
+        // the run's own origin, so queueing/e2e stay honest.
+        let mut e = AsyncMockEngine::new(8);
+        e.clock_offset = 5.0;
+        let mut s = Scheduler::with_config(e, SchedulerConfig::default());
+        let rep = s.run(&burst(&[64; 4])).unwrap();
+        assert_eq!(rep.served(), 4);
+        for (k, c) in rep.completions.iter().enumerate() {
+            assert!((c.start_s - k as f64 * 0.05).abs() < 1e-12, "start {}", c.start_s);
+            assert!(c.queueing_s < 1.0, "queueing inflated by engine uptime: {}", c.queueing_s);
+        }
+        assert!(rep.metrics.wall_span_s < 1.0, "span {}", rep.metrics.wall_span_s);
+    }
+
+    #[test]
+    fn async_engine_respects_in_flight_cap() {
+        let cfg = SchedulerConfig { max_in_flight: 2, ..Default::default() };
+        let mut s = Scheduler::with_config(AsyncMockEngine::new(8), cfg);
+        let rep = s.run(&burst(&[64; 10])).unwrap();
+        assert_eq!(rep.served(), 10);
+        // The scheduler never had more than 2 submissions un-harvested.
+        assert!(s.engine().high_water <= 2, "high water {}", s.engine().high_water);
+    }
+
+    #[test]
+    fn nan_and_negative_arrivals_rejected_not_panicking() {
+        // Regression: NaN arrivals used to panic inside the admission
+        // sort's `partial_cmp().unwrap()`; negative ones predate the
+        // trace clock. Both are admission rejections now.
+        let trace = vec![
+            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 10.0 },
+            Queued { id: 1, seq_len: 64, arrival_s: f64::NAN, deadline_s: 10.0 },
+            Queued { id: 2, seq_len: 64, arrival_s: -3.0, deadline_s: 10.0 },
+            Queued { id: 3, seq_len: 64, arrival_s: f64::INFINITY, deadline_s: 10.0 },
+        ];
+        let rep = Scheduler::new(MockEngine::new(4)).run_trace(&trace).unwrap();
+        assert_eq!(rep.served(), 1);
+        assert_eq!(rep.completions[0].id, 0);
+        assert_eq!(rep.rejections.len(), 3);
+        let rejected: Vec<u64> = rep.rejections.iter().map(|r| r.id).collect();
+        assert_eq!(rejected, vec![1, 2, 3]);
+        for r in &rep.rejections {
+            assert!(r.reason.contains("malformed arrival"), "reason: {}", r.reason);
+        }
+        // An entirely malformed trace terminates cleanly too.
+        let rep = Scheduler::new(MockEngine::new(4))
+            .run_trace(&[Queued { id: 9, seq_len: 64, arrival_s: f64::NAN, deadline_s: 1.0 }])
+            .unwrap();
+        assert_eq!(rep.served(), 0);
+        assert_eq!(rep.rejections.len(), 1);
     }
 
     #[test]

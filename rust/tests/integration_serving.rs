@@ -10,16 +10,24 @@ use common::artifacts_built;
 use galaxy::cluster::RealCluster;
 use galaxy::config::{default_artifacts_dir, Manifest};
 use galaxy::engine::{Engine, InferRequest};
+use galaxy::error::GalaxyError;
 use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::{Plan, Planner};
 use galaxy::profiler::Profiler;
-use galaxy::serving::{pad_and_mask, Scheduler};
+use galaxy::serving::{pad_and_mask, Scheduler, SchedulerConfig};
 use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
 use galaxy::tensor::Tensor2;
-use galaxy::workload::{fixed_length, QnliWorkload};
+use galaxy::workload::{fixed_length, QnliWorkload, Request};
 
 const SEED: u64 = 99;
+
+/// `n` requests of `seq_len` tokens all arriving at t=0 — the real
+/// cluster executes in wall time, so pipelining tests want a burst, not
+/// `fixed_length`'s 1 s arrival gaps.
+fn burst(n: usize, seq_len: usize) -> Vec<Request> {
+    (0..n as u64).map(|id| Request { id, seq_len, arrival_s: 0.0 }).collect()
+}
 
 fn spawn(d: usize, overlap: OverlapMode) -> (ModelConfig, Plan, EdgeEnv, RealCluster) {
     let model = ModelConfig::galaxy_mini();
@@ -116,6 +124,77 @@ fn throughput_report_accumulates() {
 }
 
 #[test]
+fn real_cluster_keeps_multiple_requests_in_flight() {
+    // The tentpole acceptance check: the per-layer worker protocol must
+    // let the scheduler overlap requests on the *real* fabric — measured
+    // start/finish instants, not modeled stage arithmetic.
+    if !artifacts_built() {
+        return;
+    }
+    let (_, _, _, cluster) = spawn(2, OverlapMode::Tiled);
+    assert!(
+        Engine::caps(&cluster).pipeline_depth > 1,
+        "real cluster must advertise layer-granular pipelining"
+    );
+    let mut scheduler = Scheduler::new(cluster);
+    let report = scheduler.run(&burst(6, 30)).unwrap();
+    assert_eq!(report.served(), 6);
+    assert!(report.rejections.is_empty());
+    assert!(
+        report.peak_in_flight >= 2,
+        "pipelined dispatch never overlapped requests (peak {})",
+        report.peak_in_flight
+    );
+    for c in &report.completions {
+        let (start, finish) = c.outcome.measured_span_s.expect("real engine reports instants");
+        assert_eq!((c.start_s, c.finish_s), (start, finish));
+        assert!(finish > start);
+        assert!(c.outcome.output.is_some());
+    }
+}
+
+#[test]
+fn interleaving_preserves_outputs_and_schedule_counts() {
+    // Per-request numerics, sync points, and ring bytes are properties
+    // of the HMP schedule — layer-wise interleaving must not change any
+    // of them relative to strictly serial service.
+    if !artifacts_built() {
+        return;
+    }
+    let reqs = burst(4, 30);
+    let (_, _, _, cluster) = spawn(2, OverlapMode::Tiled);
+    let serial_cfg = SchedulerConfig { max_in_flight: 1, ..Default::default() };
+    let serial = Scheduler::with_config(cluster, serial_cfg).run(&reqs).unwrap();
+    assert_eq!(serial.peak_in_flight, 1);
+
+    let (_, _, _, cluster) = spawn(2, OverlapMode::Tiled);
+    let piped = Scheduler::new(cluster).run(&reqs).unwrap();
+
+    assert_eq!(piped.served(), serial.served());
+    for (a, b) in serial.completions.iter().zip(piped.completions.iter()) {
+        assert_eq!(a.id, b.id, "FIFO burst completes in request order");
+        assert_eq!(a.outcome.sync_points, b.outcome.sync_points, "req {}", a.id);
+        assert_eq!(a.outcome.ring_bytes, b.outcome.ring_bytes, "req {}", a.id);
+        assert_eq!(a.outcome.pjrt_calls, b.outcome.pjrt_calls, "req {}", a.id);
+        assert_eq!(a.outcome.output, b.outcome.output, "req {}", a.id);
+    }
+}
+
+#[test]
+fn oversize_request_is_shape_error_not_truncation() {
+    // Regression: the engine adapter used to clamp seq_len to the bucket
+    // (`seq_len.min(bucket)`) and silently serve a truncated request.
+    if !artifacts_built() {
+        return;
+    }
+    let (_, _, _, mut cluster) = spawn(2, OverlapMode::Tiled);
+    let seq = cluster.seq_len();
+    let engine: &mut dyn Engine = &mut cluster;
+    let err = engine.infer(&InferRequest::new(0, seq + 1, seq)).unwrap_err();
+    assert!(matches!(err, GalaxyError::Shape(_)), "got {err}");
+}
+
+#[test]
 fn cross_engine_sync_points_and_ring_bytes_agree() {
     // Sync-point counts and ring-byte totals are schedule properties:
     // for the same plan, the simulated and real engines must report
@@ -143,6 +222,23 @@ fn cross_engine_sync_points_and_ring_bytes_agree() {
             real.ring_bytes, modeled.ring_bytes,
             "d={d}: ring bytes diverged"
         );
+        // Parity must survive interleaved execution: pipeline a burst
+        // through the same fabric and compare each request's counts with
+        // the simulator's single-shot numbers for the same plan.
+        let piped = Scheduler::new(cluster).run(&burst(3, seq)).unwrap();
+        assert_eq!(piped.served(), 3);
+        for c in &piped.completions {
+            assert_eq!(
+                c.outcome.sync_points, modeled.sync_points,
+                "d={d} req {}: interleaving changed sync points",
+                c.id
+            );
+            assert_eq!(
+                c.outcome.ring_bytes, modeled.ring_bytes,
+                "d={d} req {}: interleaving changed ring bytes",
+                c.id
+            );
+        }
     }
 }
 
