@@ -15,6 +15,7 @@
 
 use galaxy::metrics::{fmt_secs, Table};
 use galaxy::model::ModelConfig;
+use galaxy::parallel::OverlapMode;
 use galaxy::planner::Planner;
 use galaxy::profiler::Profiler;
 use galaxy::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
@@ -87,6 +88,39 @@ fn main() -> galaxy::Result<()> {
         "bucketed padding executed {padded} padded tokens vs {max_pad} under pad-to-max \
          ({:.0}% saved)",
         100.0 * (1.0 - padded as f64 / max_pad as f64)
+    );
+
+    // Comm accounting: replay the same trace with serialized links
+    // (OverlapMode::None) to see how much wire time the double-buffered
+    // ring transport actually hid.
+    let serial_links = {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+            .with_overlap(OverlapMode::None);
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        Scheduler::with_config(engine, cfg).run(&trace)?
+    };
+    println!(
+        "transport: tiled overlap hid {} of wire time ({} exposed); \
+         serialized links expose {}",
+        fmt_secs(fifo.metrics.hidden_comm_s),
+        fmt_secs(fifo.metrics.exposed_comm_s),
+        fmt_secs(serial_links.metrics.exposed_comm_s),
+    );
+    assert!(
+        fifo.metrics.hidden_comm_s > 0.0,
+        "tiled transport hid no communication on a multi-device schedule"
+    );
+    assert_eq!(
+        serial_links.metrics.hidden_comm_s, 0.0,
+        "serialized links must hide nothing"
+    );
+    // Hiding must not conjure extra exposure (5% conservation headroom,
+    // matching the sim's wire-volume drift tolerance).
+    assert!(
+        fifo.metrics.exposed_comm_s <= serial_links.metrics.exposed_comm_s * 1.05 + 1e-9,
+        "tiled exposed comm {} exceeds serialized {}",
+        fifo.metrics.exposed_comm_s,
+        serial_links.metrics.exposed_comm_s
     );
 
     let speedup = fifo.metrics.throughput_rps() / serial.metrics.throughput_rps();

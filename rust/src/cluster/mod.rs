@@ -19,6 +19,13 @@
 //! *measured* start/finish instants. [`RealCluster::infer`] remains the
 //! blocking single-shot surface on top.
 //!
+//! Ring tiles move through the non-blocking [`crate::transport`]
+//! subsystem: [`RealCluster::spawn`] wires a [`transport::threaded_ring`]
+//! of double-buffered [`transport::RingIo`] endpoints (io-thread per
+//! link) instead of raw channel halves, so a tile transfer proceeds
+//! while the receiving worker's PJRT GEMM runs. Tests inject faulty
+//! links through [`RealCluster::spawn_with_links`].
+//!
 //! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
 //! so every worker constructs its own runtime after spawning — which is
 //! also the honest topology: edge devices don't share XLA clients.
@@ -37,6 +44,7 @@ use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
 use crate::planner::Plan;
 use crate::tensor::Tensor2;
+use crate::transport::{self, RingIo};
 use protocol::{Cmd, Dispatcher};
 use worker::{LeaderCmd, WorkerReply};
 
@@ -59,6 +67,8 @@ struct InFlight {
     ring_bytes: u64,
     pjrt_calls: u64,
     sync_points: u64,
+    exposed_comm_s: f64,
+    hidden_comm_s: f64,
 }
 
 /// A completed pipelined request, with measured instants relative to the
@@ -80,6 +90,11 @@ pub struct FinishedRequest {
     pub ring_bytes: u64,
     pub pjrt_calls: u64,
     pub sync_points: u64,
+    /// Measured straggler wire-stall seconds: the largest per-worker time
+    /// spent blocked on ring receives / send backpressure (exposed comm).
+    pub exposed_comm_s: f64,
+    /// Measured straggler wire seconds the transport hid behind compute.
+    pub hidden_comm_s: f64,
 }
 
 /// A running Galaxy cluster over `D` worker threads.
@@ -118,6 +133,8 @@ pub struct RealCluster {
 impl RealCluster {
     /// Spawn workers for the given plan. `flavor` selects the artifact
     /// family (`"xla"` hot path or `"pallas"` kernel-validation path).
+    /// Ring links are the default non-blocking double-buffered transport
+    /// ([`transport::threaded_ring`]).
     pub fn spawn(
         model: &ModelConfig,
         manifest: &Manifest,
@@ -126,24 +143,40 @@ impl RealCluster {
         flavor: &str,
         seed: u64,
     ) -> Result<RealCluster> {
+        let d = LayerSchedule::from_plan(plan).n_devices();
+        let links = transport::threaded_ring(d)?;
+        Self::spawn_with_links(model, manifest, plan, overlap, flavor, seed, links)
+    }
+
+    /// Spawn workers over caller-provided ring links — `links[i]` is
+    /// worker `i`'s endpoint pair (send to `(i+1)%d`, receive from
+    /// `(i-1)%d`). This is the fault-injection seam: tests wrap default
+    /// endpoints in [`crate::testkit::FaultLink`] to drop or delay tiles
+    /// and assert the cluster poisons instead of deadlocking.
+    pub fn spawn_with_links(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        plan: &Plan,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+        links: Vec<RingIo>,
+    ) -> Result<RealCluster> {
         manifest.validate_against(model)?;
         let schedule = LayerSchedule::from_plan(plan);
         let d = schedule.n_devices();
-
-        // Ring links: worker i sends to (i+1)%d.
-        let mut ring_tx: Vec<Option<Sender<Tensor2>>> = (0..d).map(|_| None).collect();
-        let mut ring_rx: Vec<Option<Receiver<Tensor2>>> = (0..d).map(|_| None).collect();
-        for i in 0..d {
-            let (tx, rx) = channel();
-            ring_tx[i] = Some(tx); // i's send side
-            ring_rx[(i + 1) % d] = Some(rx); // (i+1)'s recv side
+        if links.len() != d {
+            return Err(GalaxyError::Fabric(format!(
+                "ring has {} link pairs for {d} devices",
+                links.len()
+            )));
         }
 
         let (reply_tx, from_workers) = channel();
         let mut to_workers = Vec::with_capacity(d);
         let mut handles = Vec::with_capacity(d);
 
-        for i in 0..d {
+        for (i, io) in links.into_iter().enumerate() {
             let (cmd_tx, cmd_rx) = channel();
             to_workers.push(cmd_tx);
             let spec = worker::WorkerSpec {
@@ -157,13 +190,11 @@ impl RealCluster {
                 flavor: flavor.to_string(),
                 seed,
             };
-            let next = ring_tx[i].take().expect("ring tx");
-            let prev = ring_rx[i].take().expect("ring rx");
             let reply = reply_tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("galaxy-worker-{i}"))
-                    .spawn(move || worker::run(spec, cmd_rx, next, prev, reply))
+                    .spawn(move || worker::run(spec, cmd_rx, io, reply))
                     .map_err(|e| GalaxyError::Fabric(format!("spawn worker {i}: {e}")))?,
             );
         }
@@ -259,6 +290,8 @@ impl RealCluster {
                 ring_bytes: 0,
                 pjrt_calls: 0,
                 sync_points: 0,
+                exposed_comm_s: 0.0,
+                hidden_comm_s: 0.0,
             },
         );
         let cmds = self.dispatcher.submit(id);
@@ -365,7 +398,15 @@ impl RealCluster {
                 let cmds = self.dispatcher.ack();
                 self.issue(&cmds, None)?;
             }
-            WorkerReply::Done { req, h_shard, ring_bytes, pjrt_calls, sync_points } => {
+            WorkerReply::Done {
+                req,
+                h_shard,
+                ring_bytes,
+                pjrt_calls,
+                sync_points,
+                exposed_comm_s,
+                hidden_comm_s,
+            } => {
                 // Worker 0's Done is also the pacing ack for `Finish`.
                 if i == 0 {
                     let cmds = self.dispatcher.ack();
@@ -379,8 +420,13 @@ impl RealCluster {
                 fl.ring_bytes += ring_bytes;
                 fl.pjrt_calls += pjrt_calls;
                 // Every device walks every ring phase; the cluster's
-                // sync count is the straggler's (max), not the sum.
+                // sync count is the straggler's (max), not the sum — and
+                // likewise the wire-stall/hidden seconds on the critical
+                // path are the straggler's, not a sum over workers that
+                // stalled concurrently.
                 fl.sync_points = fl.sync_points.max(sync_points);
+                fl.exposed_comm_s = fl.exposed_comm_s.max(exposed_comm_s);
+                fl.hidden_comm_s = fl.hidden_comm_s.max(hidden_comm_s);
                 fl.done_workers += 1;
                 if fl.done_workers == d {
                     self.finalize(req)?;
@@ -423,6 +469,8 @@ impl RealCluster {
             ring_bytes: fl.ring_bytes,
             pjrt_calls: fl.pjrt_calls,
             sync_points: fl.sync_points,
+            exposed_comm_s: fl.exposed_comm_s,
+            hidden_comm_s: fl.hidden_comm_s,
         });
         Ok(())
     }

@@ -6,16 +6,26 @@
 //! per in-flight request — so consecutive requests interleave layer-wise
 //! through the ring instead of serializing whole requests.
 //!
+//! Ring tiles move through the non-blocking [`crate::transport`]
+//! subsystem: each worker owns a [`RingIo`] (send endpoint toward its
+//! successor, receive endpoint from its predecessor) whose
+//! double-buffered links let a tile transfer proceed while the PJRT GEMM
+//! runs — the walks post **before** dispatching the overlapped GEMM and
+//! reap the arrival after, so communication genuinely hides behind
+//! compute inside a layer (measured per request as
+//! `hidden_comm_s`/`exposed_comm_s`).
+//!
 //! Per layer (paper Fig. 5), in tiled-overlap mode (§III-D):
 //!
-//! 1. **AG ⊕ entry GEMM** — walk [`all_gather_steps`]: forward the held
-//!    sequence tile to the ring successor *before* running the entry GEMM
-//!    on it (QKV projection / MLP GEMM1), so the channel transfer proceeds
-//!    while PJRT computes; receive the next tile afterwards.
+//! 1. **AG ⊕ entry GEMM** — [`RingIo::ag_walk`] over [`all_gather_steps`]:
+//!    post the held sequence tile to the ring successor *before* running
+//!    the entry GEMM on it (QKV projection / MLP GEMM1); reap the next
+//!    tile afterwards.
 //! 2. **attention core** — full-sequence, shard-heads only; no sync.
-//! 3. **exit GEMM ⊕ RS** — walk [`reduce_scatter_steps`]: forward the
-//!    accumulated partial while computing the next output-projection /
-//!    GEMM2 tile; reduce-add the partial arriving from the predecessor.
+//! 3. **exit GEMM ⊕ RS** — [`RingIo::rs_walk`] over
+//!    [`reduce_scatter_steps`]: forward the accumulated partial while
+//!    computing the next output-projection / GEMM2 tile; reduce-add the
+//!    partial arriving from the predecessor.
 //! 4. **SP connective** — fused Dropout+Residual+LayerNorm on own rows.
 //!
 //! In [`OverlapMode::None`] the same ring walks run with communication and
@@ -34,6 +44,7 @@ use crate::parallel::schedule::ShardSpec;
 use crate::parallel::OverlapMode;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor2;
+use crate::transport::RingIo;
 
 /// Commands from the leader — per-layer granularity, carrying a request
 /// id, so consecutive requests interleave layer-wise through the ring
@@ -54,7 +65,18 @@ pub enum WorkerReply {
     LayerDone { req: u64 },
     /// A request's `Finish`: output shard plus this worker's per-request
     /// counters (accumulated across its interleaved layer commands).
-    Done { req: u64, h_shard: Tensor2, ring_bytes: u64, pjrt_calls: u64, sync_points: u64 },
+    Done {
+        req: u64,
+        h_shard: Tensor2,
+        ring_bytes: u64,
+        pjrt_calls: u64,
+        sync_points: u64,
+        /// Seconds this worker stalled on the wire for the request
+        /// (blocked receives + send backpressure).
+        exposed_comm_s: f64,
+        /// Wire seconds the transport hid behind this worker's compute.
+        hidden_comm_s: f64,
+    },
     /// Fatal: the worker cannot continue (its ring position is now
     /// desynchronized), so the leader must poison the fabric.
     Failed(String),
@@ -66,12 +88,15 @@ struct ReqState {
     x_shard: Tensor2,
     mask: Vec<f32>,
     /// Counters attributed to this request across its layer commands —
-    /// deltas of the worker's ambient counters, so interleaved requests
-    /// never bleed into each other's totals (the cross-engine parity
-    /// test depends on per-request counts being schedule properties).
+    /// deltas of the transport/runtime ambient counters, so interleaved
+    /// requests never bleed into each other's totals (the cross-engine
+    /// parity test depends on per-request counts being schedule
+    /// properties).
     ring_bytes: u64,
     pjrt_calls: u64,
     sync_points: u64,
+    exposed_comm_s: f64,
+    hidden_comm_s: f64,
 }
 
 /// Everything a worker needs to set itself up (must be `Send`).
@@ -104,28 +129,23 @@ struct Worker {
     rt: Runtime,
     layers: Vec<LayerShard>,
     tile_offsets: Vec<usize>,
-    next: Sender<Tensor2>,
-    prev: Receiver<Tensor2>,
-    ring_bytes: u64,
-    /// Ring synchronization phases actually walked (counted, not derived,
-    /// so the cross-engine parity test measures real behaviour).
-    sync_points: u64,
     /// In-flight request states, keyed by request id.
     states: HashMap<u64, ReqState>,
 }
 
 /// Worker thread entry point: processes the leader's per-layer command
 /// stream strictly in order. Every worker sees the same global order, so
-/// ring sends and receives pair up across interleaved requests.
+/// ring posts and receives pair up across interleaved requests; if a
+/// layer fails, the worker drops its [`RingIo`] on exit, which unblocks
+/// both ring neighbors with `Fabric` errors instead of deadlocking them.
 pub fn run(
     spec: WorkerSpec,
     cmds: Receiver<LeaderCmd>,
-    next: Sender<Tensor2>,
-    prev: Receiver<Tensor2>,
+    mut io: RingIo,
     reply: Sender<(usize, WorkerReply)>,
 ) {
     let index = spec.index;
-    let mut worker = match Worker::new(spec, next, prev) {
+    let mut worker = match Worker::new(spec) {
         Ok(w) => w,
         Err(e) => {
             let _ = reply.send((index, WorkerReply::Failed(format!("init: {e}"))));
@@ -138,10 +158,18 @@ pub fn run(
             LeaderCmd::Begin { req, x_shard, mask } => {
                 worker.states.insert(
                     req,
-                    ReqState { x_shard, mask, ring_bytes: 0, pjrt_calls: 0, sync_points: 0 },
+                    ReqState {
+                        x_shard,
+                        mask,
+                        ring_bytes: 0,
+                        pjrt_calls: 0,
+                        sync_points: 0,
+                        exposed_comm_s: 0.0,
+                        hidden_comm_s: 0.0,
+                    },
                 );
             }
-            LeaderCmd::Layer { req, layer } => match worker.exec_layer(req, layer) {
+            LeaderCmd::Layer { req, layer } => match worker.exec_layer(&mut io, req, layer) {
                 Ok(()) => {
                     // Worker 0 paces the leader's issue window.
                     if index == 0 && reply.send((index, WorkerReply::LayerDone { req })).is_err() {
@@ -167,6 +195,8 @@ pub fn run(
                         ring_bytes: st.ring_bytes,
                         pjrt_calls: st.pjrt_calls,
                         sync_points: st.sync_points,
+                        exposed_comm_s: st.exposed_comm_s,
+                        hidden_comm_s: st.hidden_comm_s,
                     },
                     None => WorkerReply::Failed(format!("finish for unknown request {req}")),
                 };
@@ -180,7 +210,7 @@ pub fn run(
 }
 
 impl Worker {
-    fn new(spec: WorkerSpec, next: Sender<Tensor2>, prev: Receiver<Tensor2>) -> Result<Self> {
+    fn new(spec: WorkerSpec) -> Result<Self> {
         let rt = Runtime::new(Rc::new(spec.manifest.clone()))?;
         // Weight shards are reconstructed deterministically (same seed as
         // the leader/tests) and converted to literals once.
@@ -234,30 +264,7 @@ impl Worker {
         let tile_offsets = (0..spec.tiles.len())
             .map(|t| spec.tiles[..t].iter().sum())
             .collect();
-        Ok(Worker {
-            spec,
-            rt,
-            layers,
-            tile_offsets,
-            next,
-            prev,
-            ring_bytes: 0,
-            sync_points: 0,
-            states: HashMap::new(),
-        })
-    }
-
-    fn send(&mut self, t: Tensor2) -> Result<()> {
-        self.ring_bytes += t.size_bytes() as u64;
-        self.next
-            .send(t)
-            .map_err(|e| GalaxyError::Fabric(format!("ring send: {e}")))
-    }
-
-    fn recv(&mut self) -> Result<Tensor2> {
-        self.prev
-            .recv()
-            .map_err(|e| GalaxyError::Fabric(format!("ring recv: {e}")))
+        Ok(Worker { spec, rt, layers, tile_offsets, states: HashMap::new() })
     }
 
     fn art(&self, base: &str) -> String {
@@ -266,31 +273,43 @@ impl Worker {
 
     /// One layer command: advance the request's activation shard by one
     /// HMP layer, attributing the counter deltas to that request.
-    fn exec_layer(&mut self, req: u64, l: usize) -> Result<()> {
+    fn exec_layer(&mut self, io: &mut RingIo, req: u64, l: usize) -> Result<()> {
         let st = self
             .states
             .remove(&req)
             .ok_or_else(|| GalaxyError::Fabric(format!("layer {l} for unknown request {req}")))?;
-        let ReqState { x_shard, mask, ring_bytes, pjrt_calls, sync_points } = st;
+        let ReqState {
+            x_shard,
+            mask,
+            ring_bytes,
+            pjrt_calls,
+            sync_points,
+            exposed_comm_s,
+            hidden_comm_s,
+        } = st;
         let calls0 = self.rt.pjrt_calls();
-        let bytes0 = self.ring_bytes;
-        let syncs0 = self.sync_points;
-        let out = self.layer(l, x_shard, &mask)?;
+        let bytes0 = io.bytes;
+        let syncs0 = io.sync_points;
+        let stats0 = io.link_stats();
+        let out = self.layer(io, l, x_shard, &mask)?;
+        let stats = io.link_stats();
         self.states.insert(
             req,
             ReqState {
                 x_shard: out,
                 mask,
-                ring_bytes: ring_bytes + (self.ring_bytes - bytes0),
+                ring_bytes: ring_bytes + (io.bytes - bytes0),
                 pjrt_calls: pjrt_calls + (self.rt.pjrt_calls() - calls0),
-                sync_points: sync_points + (self.sync_points - syncs0),
+                sync_points: sync_points + (io.sync_points - syncs0),
+                exposed_comm_s: exposed_comm_s + (stats.exposed_s - stats0.exposed_s),
+                hidden_comm_s: hidden_comm_s + (stats.hidden_s - stats0.hidden_s),
             },
         );
         Ok(())
     }
 
     /// One HMP layer; input/output are this device's SP row-shards.
-    fn layer(&mut self, l: usize, x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
+    fn layer(&self, io: &mut RingIo, l: usize, x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
         let m = self.spec.model.clone();
         let s = self.spec.shard.clone();
         let h = m.hidden;
@@ -301,25 +320,25 @@ impl Worker {
         let tiled = self.spec.overlap == OverlapMode::Tiled;
 
         // ---- MHA block -------------------------------------------------
-        // Entry AllGather ⊕ QKV tiles.
-        let (x_full, qkv_tiles) = self.ag_phase(x_shard, |w, slot, xt| {
+        // Entry AllGather ⊕ QKV tiles: the transport posts each tile
+        // before this closure dispatches its GEMM.
+        let (x_full, qkv_tiles) = self.ag_phase(io, x_shard, |slot, xt| {
             if !tiled || s.k_heads == 0 {
                 return Ok(None);
             }
-            let rows = w.spec.tiles[slot];
-            let name = w.art(&format!("qkv_tile_t{rows}_k{}", s.k_heads));
+            let rows = self.spec.tiles[slot];
+            let name = self.art(&format!("qkv_tile_t{rows}_k{}", s.k_heads));
             let xt_lit = literal::from_tensor(xt)?;
-            let wqkv = w.layers[l].wqkv.as_ref().expect("wqkv");
-            Ok(Some(w.rt.exec_tensor(&name, &[&xt_lit, wqkv], rows, 3 * kd)?))
+            let wqkv = self.layers[l].wqkv.as_ref().expect("wqkv");
+            Ok(Some(self.rt.exec_tensor(&name, &[&xt_lit, wqkv], rows, 3 * kd)?))
         })?;
 
         // Attention core over the full sequence (tiled mode), or the whole
         // fused MHA shard (serial mode).
-        let c_partial_tile: Box<dyn Fn(&mut Worker, usize) -> Result<Tensor2>>;
+        let c_partial_tile: Box<dyn FnMut(usize) -> Result<Tensor2> + '_>;
         if s.k_heads == 0 {
-            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                Ok(Tensor2::zeros(w.spec.tiles[slot], h))
-            });
+            let tiles = self.spec.tiles.clone();
+            c_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
             let qkv = Tensor2::concat_rows(
                 &qkv_tiles.into_iter().map(|t| t.expect("qkv tile")).collect::<Vec<_>>(),
@@ -337,14 +356,14 @@ impl Worker {
                 kd,
             )?;
             let k_heads = s.k_heads;
-            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                let rows = w.spec.tiles[slot];
-                let off = w.tile_offsets[slot];
-                let name = w.art(&format!("out_proj_tile_t{rows}_k{k_heads}"));
+            c_partial_tile = Box::new(move |slot| {
+                let rows = self.spec.tiles[slot];
+                let off = self.tile_offsets[slot];
+                let name = self.art(&format!("out_proj_tile_t{rows}_k{k_heads}"));
                 let bt = b.slice_rows(off, rows)?;
                 let bt_lit = literal::from_tensor(&bt)?;
-                let wout = w.layers[l].wout.as_ref().expect("wout");
-                w.rt.exec_tensor(&name, &[&bt_lit, wout], rows, h)
+                let wout = self.layers[l].wout.as_ref().expect("wout");
+                self.rt.exec_tensor(&name, &[&bt_lit, wout], rows, h)
             });
         } else {
             // Serial mode: one fused artifact produces the full partial C_i.
@@ -360,14 +379,12 @@ impl Worker {
                 seq,
                 h,
             )?;
-            c_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                c.slice_rows(w.tile_offsets[slot], w.spec.tiles[slot])
-            });
+            c_partial_tile =
+                Box::new(move |slot| c.slice_rows(self.tile_offsets[slot], self.spec.tiles[slot]));
         }
 
         // Exit GEMM ⊕ ReduceScatter.
-        let g_mine = self.rs_phase(&c_partial_tile)?;
-        drop(c_partial_tile);
+        let g_mine = self.rs_phase(io, c_partial_tile)?;
 
         // SP connective #1: H_i = LN(G_i + A_i).
         let a_mine = x_full.slice_rows(s.seq_offset, s.seq_rows)?;
@@ -382,35 +399,34 @@ impl Worker {
 
         // ---- MLP block --------------------------------------------------
         // Entry AllGather ⊕ GEMM1 tiles.
-        let (h1_full, e_tiles) = self.ag_phase(h1_shard, |w, slot, ht| {
+        let (h1_full, e_tiles) = self.ag_phase(io, h1_shard, |slot, ht| {
             if !tiled || s.u_units == 0 {
                 return Ok(None);
             }
-            let rows = w.spec.tiles[slot];
-            let name = w.art(&format!("mlp_gemm1_tile_t{rows}_u{}", s.u_units));
+            let rows = self.spec.tiles[slot];
+            let name = self.art(&format!("mlp_gemm1_tile_t{rows}_u{}", s.u_units));
             let ht_lit = literal::from_tensor(ht)?;
-            let w1 = w.layers[l].w1.as_ref().expect("w1");
-            Ok(Some(w.rt.exec_tensor(&name, &[&ht_lit, w1], rows, width)?))
+            let w1 = self.layers[l].w1.as_ref().expect("w1");
+            Ok(Some(self.rt.exec_tensor(&name, &[&ht_lit, w1], rows, width)?))
         })?;
 
-        let f_partial_tile: Box<dyn Fn(&mut Worker, usize) -> Result<Tensor2>>;
+        let f_partial_tile: Box<dyn FnMut(usize) -> Result<Tensor2> + '_>;
         if s.u_units == 0 {
-            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                Ok(Tensor2::zeros(w.spec.tiles[slot], h))
-            });
+            let tiles = self.spec.tiles.clone();
+            f_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
             let e = Tensor2::concat_rows(
                 &e_tiles.into_iter().map(|t| t.expect("e tile")).collect::<Vec<_>>(),
             )?;
             let u_units = s.u_units;
-            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                let rows = w.spec.tiles[slot];
-                let off = w.tile_offsets[slot];
-                let name = w.art(&format!("mlp_gemm2_tile_t{rows}_u{u_units}"));
+            f_partial_tile = Box::new(move |slot| {
+                let rows = self.spec.tiles[slot];
+                let off = self.tile_offsets[slot];
+                let name = self.art(&format!("mlp_gemm2_tile_t{rows}_u{u_units}"));
                 let et = e.slice_rows(off, rows)?;
                 let et_lit = literal::from_tensor(&et)?;
-                let w2 = w.layers[l].w2.as_ref().expect("w2");
-                w.rt.exec_tensor(&name, &[&et_lit, w2], rows, h)
+                let w2 = self.layers[l].w2.as_ref().expect("w2");
+                self.rt.exec_tensor(&name, &[&et_lit, w2], rows, h)
             });
         } else {
             let h1_lit = literal::from_tensor(&h1_full)?;
@@ -424,14 +440,12 @@ impl Worker {
                 seq,
                 h,
             )?;
-            f_partial_tile = Box::new(move |w: &mut Worker, slot: usize| {
-                f.slice_rows(w.tile_offsets[slot], w.spec.tiles[slot])
-            });
+            f_partial_tile =
+                Box::new(move |slot| f.slice_rows(self.tile_offsets[slot], self.spec.tiles[slot]));
         }
 
         // Exit GEMM2 ⊕ ReduceScatter.
-        let g2_mine = self.rs_phase(&f_partial_tile)?;
-        drop(f_partial_tile);
+        let g2_mine = self.rs_phase(io, f_partial_tile)?;
 
         // SP connective #2: H'_i = LN(G'_i + H_i).
         let res_mine = h1_full.slice_rows(s.seq_offset, s.seq_rows)?;
@@ -448,71 +462,46 @@ impl Worker {
     /// Ring-AllGather phase (paper Fig. 6): returns the fully gathered
     /// activation and the per-slot outputs of the overlapped entry GEMM.
     ///
-    /// `compute(worker, slot, tile)` runs while the just-sent tile is in
+    /// `compute(slot, tile)` runs while the just-posted tile is in
     /// flight; it returns `None` when there is nothing to overlap (serial
-    /// mode / empty shard).
+    /// mode / empty shard). The walk itself lives in
+    /// [`RingIo::ag_walk`] — the transport-order test pins that the post
+    /// precedes the GEMM on every step.
     fn ag_phase(
-        &mut self,
+        &self,
+        io: &mut RingIo,
         my_tile: Tensor2,
-        compute: impl Fn(&mut Worker, usize, &Tensor2) -> Result<Option<Tensor2>>,
+        compute: impl FnMut(usize, &Tensor2) -> Result<Option<Tensor2>>,
     ) -> Result<(Tensor2, Vec<Option<Tensor2>>)> {
         let i = self.spec.index;
         let d = self.spec.n_devices;
         if d > 1 {
-            self.sync_points += 1;
+            io.sync_points += 1;
         }
         let steps = all_gather_steps(i, d);
         let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
         tiles[i] = Some(my_tile);
-        let mut outs: Vec<Option<Tensor2>> = vec![None; d];
-        for step in &steps {
-            let slot = step.compute_tile;
-            let xt = tiles[slot]
-                .clone()
-                .ok_or_else(|| GalaxyError::Fabric(format!("AG: tile {slot} missing")))?;
-            // Send first so the transfer overlaps the GEMM below.
-            if step.send_tile.is_some() {
-                self.send(xt.clone())?;
-            }
-            outs[slot] = compute(self, slot, &xt)?;
-            if let Some(r) = step.recv_tile {
-                tiles[r] = Some(self.recv()?);
-            }
-        }
+        let outs = io.ag_walk(&steps, &mut tiles, compute)?;
         let full = Tensor2::concat_rows(
             &(0..d).map(|r| tiles[r].take().expect("gathered")).collect::<Vec<_>>(),
         )?;
         Ok((full, outs))
     }
 
-    /// Ring-ReduceScatter phase (paper Fig. 7): `partial(worker, slot)`
-    /// produces this device's partial for sequence tile `slot` (the exit
-    /// GEMM); returns this device's fully reduced tile.
+    /// Ring-ReduceScatter phase (paper Fig. 7): `partial(slot)` produces
+    /// this device's partial for sequence tile `slot` (the exit GEMM);
+    /// returns this device's fully reduced tile.
     fn rs_phase(
-        &mut self,
-        partial: &dyn Fn(&mut Worker, usize) -> Result<Tensor2>,
+        &self,
+        io: &mut RingIo,
+        partial: impl FnMut(usize) -> Result<Tensor2>,
     ) -> Result<Tensor2> {
         let i = self.spec.index;
         let d = self.spec.n_devices;
         if d > 1 {
-            self.sync_points += 1;
+            io.sync_points += 1;
         }
         let steps = reduce_scatter_steps(i, d);
-        let mut acc: Option<Tensor2> = None;
-        for step in &steps {
-            // Forward last step's accumulation first (overlaps the GEMM).
-            if step.send_tile.is_some() {
-                let t = acc.take().ok_or_else(|| {
-                    GalaxyError::Fabric("RS: nothing accumulated to send".into())
-                })?;
-                self.send(t)?;
-            }
-            let mut o = partial(self, step.compute_tile)?;
-            if step.recv_tile.is_some() {
-                o.add_assign(&self.recv()?)?;
-            }
-            acc = Some(o);
-        }
-        acc.ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))
+        io.rs_walk(&steps, partial)
     }
 }

@@ -8,15 +8,21 @@
 //!
 //! Two layers of implementation:
 //! * [`reference`] — naive direct computations, the semantic ground truth.
-//! * [`lockstep`] — step-by-step ring execution driven by the overlap
-//!   schedules in [`crate::parallel::overlap`], exercising the exact
-//!   send/recv/reduce dance the real worker threads perform. Property
-//!   tests assert lockstep == reference for arbitrary device counts and
-//!   partitions; the threaded cluster reuses the same step plans.
+//! * lockstep — step-by-step ring execution driven by the overlap
+//!   schedules in [`crate::parallel::overlap`], moving every tile through
+//!   the in-process [`crate::transport::MemLink`] endpoints with the
+//!   same double-buffered slot/backpressure contract the threaded
+//!   cluster links enforce. Property tests assert lockstep ==
+//!   reference for arbitrary device counts and partitions — including
+//!   **interleaved multi-request traffic**, where two requests' tiles
+//!   share each link's two slots ([`ring_all_gather_multi`] /
+//!   [`ring_reduce_scatter_multi`]); a third concurrent request
+//!   backpressures, which is exactly the transport contract.
 
 use crate::error::{GalaxyError, Result};
 use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
 use crate::tensor::Tensor2;
+use crate::transport::{mem_ring, RingLink, LINK_SLOTS};
 
 /// Naive reference implementations (ground truth).
 pub mod reference {
@@ -75,48 +81,88 @@ pub fn rs_bytes_per_device(chunk_bytes: u64, d: usize) -> u64 {
 /// row-tile owned by device `r`; returns, per device, the gathered tiles
 /// in slot order (equal to the reference concat for every device).
 pub fn ring_all_gather(shards: &[Tensor2]) -> Result<Vec<Tensor2>> {
-    let d = shards.len();
+    let mut per_req = ring_all_gather_multi(std::slice::from_ref(&shards.to_vec()))?;
+    Ok(per_req.pop().expect("one request in, one out"))
+}
+
+/// Lockstep Ring-AllGather for one or more **interleaved requests** over
+/// one shared set of double-buffered in-process links — the transport
+/// picture of the cluster's layer-granular request interleaving, where
+/// consecutive requests' tiles ride the same links. Each round posts
+/// every request's tile before any is consumed, so two requests occupy
+/// exactly the [`LINK_SLOTS`] slots; a third errors with backpressure.
+///
+/// `requests[q][r]` is request `q`'s row-tile owned by device `r`.
+/// Returns, per request, the per-device gathered tensors.
+pub fn ring_all_gather_multi(requests: &[Vec<Tensor2>]) -> Result<Vec<Vec<Tensor2>>> {
+    let d = requests.first().map(|r| r.len()).unwrap_or(0);
     if d == 0 {
         return Err(GalaxyError::Shape("ring_all_gather: empty".into()));
     }
-    // tiles[i][r] = Some(tile r) once device i holds it.
-    let mut tiles: Vec<Vec<Option<Tensor2>>> = (0..d)
-        .map(|i| {
+    if requests.iter().any(|r| r.len() != d) {
+        return Err(GalaxyError::Shape("ring_all_gather: uneven device counts".into()));
+    }
+    let nq = requests.len();
+    let mut links = mem_ring(d, LINK_SLOTS);
+    // tiles[q][i][r] = Some(tile r) once device i holds it for request q.
+    let mut tiles: Vec<Vec<Vec<Option<Tensor2>>>> = (0..nq)
+        .map(|q| {
             (0..d)
-                .map(|r| if r == i { Some(shards[r].clone()) } else { None })
+                .map(|i| {
+                    (0..d)
+                        .map(|r| if r == i { Some(requests[q][r].clone()) } else { None })
+                        .collect()
+                })
                 .collect()
         })
         .collect();
     let plans: Vec<_> = (0..d).map(|i| all_gather_steps(i, d)).collect();
     for s in 0..d {
-        // Gather the wire traffic for this step first (lockstep barrier),
-        // then deliver — models simultaneous full-duplex sends.
-        let mut deliveries: Vec<(usize, usize, Tensor2)> = Vec::new();
-        for i in 0..d {
-            if let Some(t) = plans[i][s].send_tile {
-                let payload = tiles[i][t]
-                    .clone()
-                    .ok_or_else(|| GalaxyError::Fabric(format!("dev {i} step {s}: tile {t} not yet held")))?;
-                deliveries.push(((i + 1) % d, t, payload));
+        // Wire: every device posts its step-s tile for every request —
+        // interleaved traffic sharing each link's slots (lockstep models
+        // simultaneous full-duplex sends).
+        for q in 0..nq {
+            for i in 0..d {
+                if let Some(t) = plans[i][s].send_tile {
+                    let payload = tiles[q][i][t].clone().ok_or_else(|| {
+                        GalaxyError::Fabric(format!("dev {i} step {s}: tile {t} not yet held"))
+                    })?;
+                    links[i].0.post_send(payload)?;
+                }
             }
         }
-        for (to, t, payload) in deliveries {
-            tiles[to][t] = Some(payload);
-        }
-        // (compute_tile is where the engine would run the entry GEMM.)
-        for (i, plan) in plans.iter().enumerate() {
-            let ct = plan[s].compute_tile;
-            if tiles[i][ct].is_none() {
-                return Err(GalaxyError::Fabric(format!(
-                    "dev {i} step {s}: compute tile {ct} missing — schedule broken"
-                )));
+        // (compute_tile is where the engine would run the entry GEMM,
+        // overlapping the in-flight transfers posted above.)
+        for q in 0..nq {
+            for i in 0..d {
+                if let Some(r) = plans[i][s].recv_tile {
+                    if !links[i].1.try_recv()? {
+                        return Err(GalaxyError::Fabric(format!(
+                            "dev {i} step {s}: tile {r} did not arrive — schedule broken"
+                        )));
+                    }
+                    tiles[q][i][r] = Some(links[i].1.complete_recv()?);
+                }
+                let ct = plans[i][s].compute_tile;
+                if tiles[q][i][ct].is_none() {
+                    return Err(GalaxyError::Fabric(format!(
+                        "dev {i} step {s}: compute tile {ct} missing — schedule broken"
+                    )));
+                }
             }
         }
     }
-    (0..d)
-        .map(|i| {
-            let parts: Vec<Tensor2> = (0..d).map(|r| tiles[i][r].take().unwrap()).collect();
-            Tensor2::concat_rows(&parts)
+    tiles
+        .into_iter()
+        .map(|per_dev| {
+            per_dev
+                .into_iter()
+                .map(|mut held| {
+                    let parts: Vec<Tensor2> =
+                        (0..d).map(|r| held[r].take().expect("gathered")).collect();
+                    Tensor2::concat_rows(&parts)
+                })
+                .collect()
         })
         .collect()
 }
@@ -126,44 +172,74 @@ pub fn ring_all_gather(shards: &[Tensor2]) -> Result<Vec<Tensor2>> {
 /// partial; `seq_parts` the row-tile sizes. Returns, per device, its fully
 /// reduced tile (device i gets tile i).
 pub fn ring_reduce_scatter(partials: &[Tensor2], seq_parts: &[usize]) -> Result<Vec<Tensor2>> {
-    let d = partials.len();
-    if d == 0 || seq_parts.len() != d {
-        return Err(GalaxyError::Shape(format!(
-            "ring_reduce_scatter: {d} devices vs {} parts",
-            seq_parts.len()
-        )));
+    let req = (partials.to_vec(), seq_parts.to_vec());
+    let mut per_req = ring_reduce_scatter_multi(std::slice::from_ref(&req))?;
+    Ok(per_req.pop().expect("one request in, one out"))
+}
+
+/// Lockstep Ring-ReduceScatter for one or more interleaved requests over
+/// one shared set of double-buffered in-process links (see
+/// [`ring_all_gather_multi`]). `requests[q]` is `(partials, seq_parts)`
+/// — partitions may differ per request. Returns, per request, each
+/// device's fully reduced tile.
+pub fn ring_reduce_scatter_multi(
+    requests: &[(Vec<Tensor2>, Vec<usize>)],
+) -> Result<Vec<Vec<Tensor2>>> {
+    let d = requests.first().map(|(p, _)| p.len()).unwrap_or(0);
+    if d == 0 {
+        return Err(GalaxyError::Shape("ring_reduce_scatter: empty".into()));
     }
-    let offsets: Vec<usize> = (0..d).map(|r| seq_parts[..r].iter().sum()).collect();
-    let tile_of = |i: usize, r: usize| -> Result<Tensor2> {
-        partials[i].slice_rows(offsets[r], seq_parts[r])
+    for (partials, seq_parts) in requests {
+        if partials.len() != d || seq_parts.len() != d {
+            return Err(GalaxyError::Shape(format!(
+                "ring_reduce_scatter: {} devices vs {} parts",
+                partials.len(),
+                seq_parts.len()
+            )));
+        }
+    }
+    let nq = requests.len();
+    let mut links = mem_ring(d, LINK_SLOTS);
+    let offsets: Vec<Vec<usize>> = requests
+        .iter()
+        .map(|(_, parts)| (0..d).map(|r| parts[..r].iter().sum()).collect())
+        .collect();
+    let tile_of = |q: usize, i: usize, r: usize| -> Result<Tensor2> {
+        requests[q].0[i].slice_rows(offsets[q][r], requests[q].1[r])
     };
     let plans: Vec<_> = (0..d).map(|i| reduce_scatter_steps(i, d)).collect();
-    // acc[i] = the partial-sum tile device i accumulated in its last step.
-    let mut acc: Vec<Option<Tensor2>> = vec![None; d];
+    // acc[q][i] = the partial-sum tile device i accumulated last step.
+    let mut acc: Vec<Vec<Option<Tensor2>>> = vec![vec![None; d]; nq];
     for s in 0..d {
-        // Each device computes its step's GEMM-output tile (here: slices
-        // its own partial — the engine plugs real GEMMs in).
-        let mut computed: Vec<Tensor2> = Vec::with_capacity(d);
-        for (i, plan) in plans.iter().enumerate() {
-            computed.push(tile_of(i, plan[s].compute_tile)?);
-        }
-        // Wire: forward last step's accumulation, reduce-add into computed.
-        let sends: Vec<Option<Tensor2>> = (0..d)
-            .map(|i| plans[i][s].send_tile.map(|_| acc[i].clone().expect("acc present")))
-            .collect();
-        for i in 0..d {
-            let mut mine = computed[i].clone();
-            if plans[i][s].recv_tile.is_some() {
-                let from = (i + d - 1) % d;
-                let payload = sends[from]
-                    .clone()
-                    .ok_or_else(|| GalaxyError::Fabric(format!("dev {from} had nothing to send at step {s}")))?;
-                mine.add_assign(&payload)?;
+        // Wire: forward last step's accumulations first (they ride the
+        // ring while this step's exit GEMMs run).
+        for q in 0..nq {
+            for i in 0..d {
+                if plans[i][s].send_tile.is_some() {
+                    let t = acc[q][i].take().ok_or_else(|| {
+                        GalaxyError::Fabric(format!("dev {i} had nothing to send at step {s}"))
+                    })?;
+                    links[i].0.post_send(t)?;
+                }
             }
-            acc[i] = Some(mine);
+        }
+        // Compute each device's GEMM-output tile (here: slices its own
+        // partial — the engine plugs real GEMMs in), then reduce-add the
+        // partial arriving from the predecessor.
+        for q in 0..nq {
+            for i in 0..d {
+                let mut mine = tile_of(q, i, plans[i][s].compute_tile)?;
+                if plans[i][s].recv_tile.is_some() {
+                    mine.add_assign(&links[i].1.complete_recv()?)?;
+                }
+                acc[q][i] = Some(mine);
+            }
         }
     }
-    Ok(acc.into_iter().map(|a| a.unwrap()).collect())
+    Ok(acc
+        .into_iter()
+        .map(|per_dev| per_dev.into_iter().map(|a| a.expect("reduced")).collect())
+        .collect())
 }
 
 /// Ring-AllReduce = Ring-ReduceScatter + Ring-AllGather (the Megatron-LM
@@ -254,6 +330,66 @@ mod tests {
         assert!(ring_all_gather(&[]).is_err());
         assert!(ring_reduce_scatter(&[], &[]).is_err());
         assert!(reference::all_reduce(&[]).is_err());
+        assert!(ring_all_gather_multi(&[]).is_err());
+        assert!(ring_reduce_scatter_multi(&[]).is_err());
+    }
+
+    #[test]
+    fn transport_interleaved_requests_share_link_slots() {
+        // Two requests' tiles ride the same double-buffered links and
+        // both still match the reference — the collective-level picture
+        // of the cluster's layer-granular request interleaving.
+        let mut rng = Pcg64::new(21);
+        for d in 1..=5 {
+            let reqs: Vec<Vec<Tensor2>> = (0..2)
+                .map(|_| (0..d).map(|_| rand_tensor(&mut rng, 3, 4)).collect())
+                .collect();
+            let got = ring_all_gather_multi(&reqs).unwrap();
+            for (q, req) in reqs.iter().enumerate() {
+                let want = reference::all_gather(req).unwrap();
+                for per_dev in &got[q] {
+                    assert_eq!(*per_dev, want, "d={d} q={q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transport_third_interleaved_request_backpressures() {
+        // The links double-buffer: two interleaved requests fit the
+        // slots exactly, a third must surface as backpressure (in the
+        // single-threaded lockstep a would-block is a deadlock).
+        let mut rng = Pcg64::new(22);
+        let d = 3;
+        let reqs: Vec<Vec<Tensor2>> = (0..3)
+            .map(|_| (0..d).map(|_| rand_tensor(&mut rng, 2, 2)).collect())
+            .collect();
+        let err = ring_all_gather_multi(&reqs).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+    }
+
+    #[test]
+    fn transport_interleaved_rs_with_uneven_partitions() {
+        let mut rng = Pcg64::new(23);
+        for d in 2..=5 {
+            let reqs: Vec<(Vec<Tensor2>, Vec<usize>)> = (0..2)
+                .map(|_| {
+                    let parts: Vec<usize> =
+                        (0..d).map(|_| rng.range(1, 4) as usize).collect();
+                    let seq: usize = parts.iter().sum();
+                    let partials: Vec<Tensor2> =
+                        (0..d).map(|_| rand_tensor(&mut rng, seq, 3)).collect();
+                    (partials, parts)
+                })
+                .collect();
+            let got = ring_reduce_scatter_multi(&reqs).unwrap();
+            for (q, (partials, parts)) in reqs.iter().enumerate() {
+                let want = reference::reduce_scatter(partials, parts).unwrap();
+                for (g, w) in got[q].iter().zip(want.iter()) {
+                    assert!(g.allclose(w, 1e-5, 1e-5), "d={d} q={q}");
+                }
+            }
+        }
     }
 
     #[test]

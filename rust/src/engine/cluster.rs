@@ -39,11 +39,11 @@ fn outcome_from_finished(fin: FinishedRequest) -> Result<InferOutcome> {
     Ok(InferOutcome {
         id: fin.id,
         service_s: fin.service_s,
-        // The real fabric cannot split compute from hidden transfers;
-        // all measured time is busy time.
-        compute_s: fin.service_s,
-        exposed_comm_s: 0.0,
-        hidden_comm_s: 0.0,
+        // The transport measures the straggler's wire stalls, so busy
+        // (compute) time is the measured service minus the exposed comm.
+        compute_s: (fin.service_s - fin.exposed_comm_s).max(0.0),
+        exposed_comm_s: fin.exposed_comm_s,
+        hidden_comm_s: fin.hidden_comm_s,
         // Counted by the workers as they walk the ring phases — the
         // cross-engine parity test compares this against the simulator's
         // count for the same plan, and per-request counts must be
@@ -68,6 +68,9 @@ impl Engine for RealCluster {
             // soon as request n vacates it, so up to `layers` requests
             // interleave through the ring.
             pipeline_depth: self.model().layers.max(1),
+            // Double-buffered threaded transport: two tiles in flight
+            // per ring link, backpressure on the third.
+            link_slots: crate::transport::LINK_SLOTS,
         }
     }
 

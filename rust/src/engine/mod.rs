@@ -65,6 +65,11 @@ pub struct EngineCaps {
     /// overlapped requests share every device and can only fill
     /// communication bubbles.
     pub pipeline_depth: usize,
+    /// Tiles the ring transport keeps in flight per link before
+    /// backpressuring the poster (1 = strictly serialized links; 2 = the
+    /// double-buffered transport of §III-D, so a tile transfer overlaps
+    /// the next tile's GEMM inside one request).
+    pub link_slots: usize,
 }
 
 impl EngineCaps {
@@ -122,12 +127,16 @@ pub struct InferOutcome {
     /// Service (execution) time in seconds — modeled time for the
     /// simulator, measured wall time for the PJRT fabric.
     pub service_s: f64,
-    /// Straggler compute seconds (for the real engine, which cannot
-    /// separate compute from hidden transfers, this equals `service_s`).
+    /// Straggler compute seconds (modeled for the simulator; for the
+    /// real engine, measured service time minus measured wire stalls).
     pub compute_s: f64,
-    /// Wire seconds not hidden behind compute (modeled engines only).
+    /// Wire seconds not hidden behind compute — modeled by the simulator,
+    /// *measured* by the real transport as straggler blocked-receive /
+    /// send-backpressure time.
     pub exposed_comm_s: f64,
-    /// Wire seconds hidden behind compute (modeled engines only).
+    /// Wire seconds hidden behind compute — modeled by the simulator,
+    /// measured by the real transport as in-flight time that never
+    /// stalled the consumer.
     pub hidden_comm_s: f64,
     /// Synchronization points executed — a schedule property: identical
     /// across engines for the same plan.
@@ -212,6 +221,7 @@ mod tests {
             seq_buckets: buckets.to_vec(),
             overlap: OverlapMode::Tiled,
             pipeline_depth: 4,
+            link_slots: 2,
         }
     }
 

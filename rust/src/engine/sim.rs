@@ -34,6 +34,11 @@ impl Engine for SimEngine<'_> {
             // compute occupancy (InferOutcome::compute_s) — overlap only
             // fills communication bubbles, never multiplies compute.
             pipeline_depth: self.model().layers.max(1),
+            // The timeline's closed-form per-step accounting is proven
+            // equivalent to the double-buffered link model the real
+            // transport uses (sim::net::LinkModel agreement test), so
+            // the sim advertises the same slot capability.
+            link_slots: crate::transport::LINK_SLOTS,
         }
     }
 
@@ -69,6 +74,7 @@ mod tests {
         assert_eq!(caps.seq_buckets, vec![128, 284, 512]);
         assert_eq!(caps.overlap, OverlapMode::Tiled);
         assert_eq!(caps.pipeline_depth, model.layers);
+        assert_eq!(caps.link_slots, crate::transport::LINK_SLOTS);
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! |---|---|
 //! | §III-B HMP block schedule (Fig. 5) | [`parallel::schedule`] |
 //! | §III-C planner (Algorithm 1, Eq. 4-6) | [`planner`] |
-//! | §III-D tile-based overlap (Fig. 6/7) | [`parallel::overlap`], [`sim::engine`] |
+//! | §III-D tile-based overlap (Fig. 6/7) | [`parallel::overlap`], [`transport`], [`sim::engine`] |
 //! | §IV testbed + baselines (Tables I/IV) | [`sim`], [`baselines`] |
 //! | Fig. 1 in-situ serving scenario | [`serving`], [`engine`] |
 
@@ -64,6 +64,7 @@ pub mod serving;
 pub mod sim;
 pub mod tensor;
 pub mod testkit;
+pub mod transport;
 pub mod workload;
 
 pub use error::{GalaxyError, Result};
@@ -81,4 +82,5 @@ pub mod prelude {
     pub use crate::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
     pub use crate::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
     pub use crate::tensor::Tensor2;
+    pub use crate::transport::{RingIo, RingLink};
 }

@@ -424,6 +424,8 @@ fn build_metrics(report: &SchedReport) -> ServeMetrics {
         m.queueing.record(c.queueing_s);
         m.service.record(c.service_s);
         m.e2e.record(c.finish_s - c.arrival_s);
+        m.exposed_comm_s += c.outcome.exposed_comm_s;
+        m.hidden_comm_s += c.outcome.hidden_comm_s;
         first_arrival = first_arrival.min(c.arrival_s);
         last_finish = last_finish.max(c.finish_s);
     }
@@ -462,6 +464,7 @@ mod tests {
                 seq_buckets: vec![64, 128, 256],
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
+                link_slots: 1,
             }
         }
 
@@ -474,6 +477,10 @@ mod tests {
                 // 25% compute occupancy: 75% of the service time is
                 // communication bubbles that pipelined successors fill.
                 compute_s: service_s / 4.0,
+                // Of the wire time, half hides behind compute and an
+                // eighth stays exposed (folded into ServeMetrics).
+                hidden_comm_s: service_s / 2.0,
+                exposed_comm_s: service_s / 8.0,
                 sync_points: 48,
                 ring_bytes: (req.bucket * 1024) as u64,
                 ..Default::default()
@@ -538,6 +545,18 @@ mod tests {
         .unwrap();
         assert!(rep.peak_in_flight <= 3, "peak {}", rep.peak_in_flight);
         assert!(rep.peak_in_flight >= 2);
+    }
+
+    #[test]
+    fn metrics_fold_comm_accounting() {
+        // ServeMetrics totals the per-request hidden/exposed comm the
+        // engine reports, so callers can see how much communication the
+        // fabric hid across a whole trace.
+        let mut s = Scheduler::new(MockEngine::new(4));
+        let rep = s.run(&burst(&[64, 64])).unwrap();
+        let service: f64 = rep.completions.iter().map(|c| c.service_s).sum();
+        assert!((rep.metrics.hidden_comm_s - service / 2.0).abs() < 1e-12);
+        assert!((rep.metrics.exposed_comm_s - service / 8.0).abs() < 1e-12);
     }
 
     #[test]
@@ -680,6 +699,7 @@ mod tests {
                 seq_buckets: vec![64, 128, 256],
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
+                link_slots: 2,
             }
         }
 

@@ -22,4 +22,4 @@ pub mod net;
 
 pub use device::{DeviceClass, DeviceSpec, EdgeEnv};
 pub use engine::{SimEngine, SimReport};
-pub use net::{NetParams, RingStepTimer};
+pub use net::{LinkModel, NetParams, RingStepTimer};

@@ -50,6 +50,84 @@ impl NetParams {
     }
 }
 
+/// Modeled double-buffered ring link — the simulator's twin of the real
+/// [`crate::transport`] link: up to [`crate::transport::LINK_SLOTS`]
+/// tiles in flight (posted but not yet consumed), posting into a full
+/// link errors (the modeled walk, like the single-threaded lockstep, has
+/// nobody to drain a slot mid-call), and consumption splits each tile's
+/// wire time into *hidden* seconds (elapsed while the consumer computed)
+/// and *exposed* seconds (the consumer's stall). Driving one ring step
+/// through `post`/`recv` reproduces the closed-form
+/// `max(wire, compute)` accounting of the timeline exactly — asserted by
+/// the model-agreement test below, which is what lets the sim and the
+/// real fabric agree on *when a transfer is exposed*.
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    slots: usize,
+    /// (post instant, delivery instant) per in-flight tile, FIFO.
+    in_flight: std::collections::VecDeque<(f64, f64)>,
+    /// When the serialized wire next frees up.
+    wire_free_s: f64,
+    /// Consumer stall seconds (transfer not done when asked for).
+    pub exposed_s: f64,
+    /// Wire seconds that elapsed while the consumer was busy elsewhere.
+    pub hidden_s: f64,
+}
+
+impl LinkModel {
+    pub fn new(slots: usize) -> Self {
+        Self {
+            slots,
+            in_flight: std::collections::VecDeque::new(),
+            wire_free_s: 0.0,
+            exposed_s: 0.0,
+            hidden_s: 0.0,
+        }
+    }
+
+    /// The default double-buffered link, matching the real transport.
+    pub fn double_buffered() -> Self {
+        Self::new(crate::transport::LINK_SLOTS)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Post a tile at modeled time `now_s` whose transfer occupies the
+    /// wire for `wire_s`; returns its delivery instant. Errors when all
+    /// slots are in flight (backpressure — the bulk-synchronous ring
+    /// walks never exceed the slots, so hitting this is a schedule bug).
+    pub fn post(&mut self, now_s: f64, wire_s: f64) -> crate::error::Result<f64> {
+        if self.in_flight.len() >= self.slots {
+            return Err(crate::error::GalaxyError::Fabric(format!(
+                "link model backpressure: {} tiles already in flight",
+                self.slots
+            )));
+        }
+        let start = now_s.max(self.wire_free_s);
+        let delivery = start + wire_s;
+        self.wire_free_s = delivery;
+        self.in_flight.push_back((now_s, delivery));
+        Ok(delivery)
+    }
+
+    /// Consume the oldest in-flight tile at modeled time `now_s`;
+    /// returns the instant the consumer can proceed. The wait (if the
+    /// transfer is still in progress) accrues as exposed seconds; the
+    /// rest of the tile's post-to-ready span was hidden behind whatever
+    /// the consumer did meanwhile.
+    pub fn recv(&mut self, now_s: f64) -> crate::error::Result<f64> {
+        let (post_s, delivery_s) = self.in_flight.pop_front().ok_or_else(|| {
+            crate::error::GalaxyError::Fabric("link model recv with nothing in flight".into())
+        })?;
+        let stall = (delivery_s - now_s).max(0.0);
+        self.exposed_s += stall;
+        self.hidden_s += ((delivery_s - post_s) - stall).max(0.0);
+        Ok(now_s.max(delivery_s))
+    }
+}
+
 /// Helper that accumulates the duration of a multi-step ring collective,
 /// optionally overlapping each step's wire time with per-device compute
 /// (the tile-based optimization of §III-D).
@@ -138,6 +216,72 @@ mod tests {
         t.serial_step(0.001, 0.002);
         assert!((t.total_s() - 0.017).abs() < 1e-12);
         assert_eq!(t.steps(), 2);
+    }
+
+    #[test]
+    fn link_model_backpressures_on_third_tile() {
+        let mut link = LinkModel::double_buffered();
+        link.post(0.0, 0.010).unwrap();
+        link.post(0.0, 0.010).unwrap();
+        assert_eq!(link.in_flight(), 2);
+        let err = link.post(0.0, 0.010).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        // Consuming frees the slot; deliveries serialize on the wire.
+        let t1 = link.recv(0.0).unwrap();
+        assert!((t1 - 0.010).abs() < 1e-12);
+        link.post(t1, 0.010).unwrap();
+        let t2 = link.recv(t1).unwrap();
+        assert!((t2 - 0.020).abs() < 1e-12);
+        assert!(link.recv(100.0).is_ok());
+        assert!(link.recv(100.0).is_err(), "nothing left in flight");
+    }
+
+    #[test]
+    fn link_model_agrees_with_closed_form_timeline() {
+        // The acceptance invariant that lets sim and real agree on when
+        // a transfer is exposed: walking ring steps through the
+        // double-buffered LinkModel (post at step start, compute, recv)
+        // reproduces the timeline's closed-form per-step accounting —
+        // duration max(wire, compute), exposed max(0, wire-compute),
+        // hidden min(wire, compute) — for arbitrary step sequences.
+        crate::testkit::forall(
+            "LinkModel == closed-form overlapped-step accounting",
+            11,
+            100,
+            |rng| {
+                (0..(1 + rng.range(0, 9) as usize))
+                    .map(|_| (rng.uniform() as f64 * 0.05, rng.uniform() as f64 * 0.05))
+                    .collect::<Vec<(f64, f64)>>()
+            },
+            |steps| {
+                let mut link = LinkModel::double_buffered();
+                let mut timer = RingStepTimer::new();
+                let (mut t, mut exposed, mut hidden) = (0.0f64, 0.0f64, 0.0f64);
+                for &(wire_s, compute_s) in steps {
+                    link.post(t, wire_s).map_err(|e| e.to_string())?;
+                    timer.overlapped_step(wire_s, compute_s);
+                    exposed += (wire_s - compute_s).max(0.0);
+                    hidden += wire_s.min(compute_s);
+                    t = link.recv(t + compute_s).map_err(|e| e.to_string())?;
+                }
+                let ok = |a: f64, b: f64| (a - b).abs() < 1e-9;
+                if !ok(t, timer.total_s()) {
+                    return Err(format!("duration {} != timer {}", t, timer.total_s()));
+                }
+                if !ok(link.exposed_s, exposed) {
+                    return Err(format!("exposed {} != {}", link.exposed_s, exposed));
+                }
+                if !ok(link.hidden_s, hidden) {
+                    return Err(format!("hidden {} != {}", link.hidden_s, hidden));
+                }
+                // Conservation: every wire second either hides or exposes.
+                let wire_total: f64 = steps.iter().map(|s| s.0).sum();
+                if !ok(link.exposed_s + link.hidden_s, wire_total) {
+                    return Err("wire seconds leaked".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

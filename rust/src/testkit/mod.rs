@@ -10,6 +10,115 @@
 //! * [`forall`] — a minimal property-test driver: N random cases from a
 //!   seeded RNG, failure reporting with the case index and seed so any
 //!   counterexample is reproducible by construction.
+//! * [`FaultLink`] — a fault-injection [`RingLink`] wrapper
+//!   (drop-after-N-tiles, delayed delivery) for asserting that a
+//!   mid-layer link failure poisons the cluster with a `Fabric` error
+//!   instead of deadlocking both ring neighbors.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::error::{GalaxyError, Result};
+use crate::tensor::Tensor2;
+use crate::transport::{LinkStats, RingLink};
+
+/// Fault-injection wrapper around any ring-link endpoint.
+///
+/// Wrap a *send* endpoint with [`FaultLink::dropping`] to make it fail
+/// after N successful posts (a link going down mid-layer), or either
+/// endpoint with [`FaultLink::delaying`] to slow every transfer by a
+/// fixed duration — on a send endpoint the tile is posted late (a slow
+/// wire, which the receiver measures as exposed comm), on a receive
+/// endpoint consumption is held back (a slow consumer). Either way a
+/// delay is a timing fault only: correctness must be unaffected. Inject
+/// through [`crate::cluster::RealCluster::spawn_with_links`].
+pub struct FaultLink {
+    inner: Box<dyn RingLink + Send>,
+    /// Posts succeed this many times, then every post fails.
+    drop_after: Option<u64>,
+    posted: u64,
+    /// Added to every transfer through this endpoint.
+    delay: Duration,
+}
+
+impl FaultLink {
+    /// Fail every `post_send` after `after` successful ones.
+    pub fn dropping(inner: Box<dyn RingLink + Send>, after: u64) -> Self {
+        Self { inner, drop_after: Some(after), posted: 0, delay: Duration::ZERO }
+    }
+
+    /// Delay every transfer by `delay` (timing fault, not a failure).
+    pub fn delaying(inner: Box<dyn RingLink + Send>, delay: Duration) -> Self {
+        Self { inner, drop_after: None, posted: 0, delay }
+    }
+}
+
+impl RingLink for FaultLink {
+    fn post_send(&mut self, tile: Tensor2) -> Result<()> {
+        if let Some(n) = self.drop_after {
+            if self.posted >= n {
+                return Err(GalaxyError::Fabric(format!(
+                    "fault injection: link dropped tile after {n} transfers"
+                )));
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.post_send(tile)?;
+        self.posted += 1;
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Result<bool> {
+        self.inner.try_recv()
+    }
+
+    fn complete_recv(&mut self) -> Result<Tensor2> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.complete_recv()
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.inner.stats()
+    }
+}
+
+/// In-memory receive endpoint fed from a fixed script of tiles — handy
+/// for unit-testing walk logic without wiring a live link.
+pub struct ScriptedRx {
+    tiles: VecDeque<Tensor2>,
+    stats: LinkStats,
+}
+
+impl ScriptedRx {
+    pub fn new(tiles: Vec<Tensor2>) -> Self {
+        Self { tiles: tiles.into(), stats: LinkStats::default() }
+    }
+}
+
+impl RingLink for ScriptedRx {
+    fn post_send(&mut self, _tile: Tensor2) -> Result<()> {
+        Err(GalaxyError::Fabric("post_send on a receive endpoint".into()))
+    }
+
+    fn try_recv(&mut self) -> Result<bool> {
+        Ok(!self.tiles.is_empty())
+    }
+
+    fn complete_recv(&mut self) -> Result<Tensor2> {
+        self.stats.tiles += 1;
+        self.tiles
+            .pop_front()
+            .ok_or_else(|| GalaxyError::Fabric("scripted link exhausted".into()))
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
 
 /// PCG-XSH-RR 64/32 — small, fast, statistically solid, and trivially
 /// portable (the Python side never needs to match it; weights only cross
@@ -215,6 +324,71 @@ mod tests {
     #[should_panic(expected = "property `always_fails` failed")]
     fn forall_reports_failures() {
         forall("always_fails", 1, 5, |rng| rng.range(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn fault_link_drop_unblocks_both_ring_neighbors() {
+        // Two threads play ring neighbors over a threaded link whose send
+        // endpoint drops after one tile. The sender must get the injected
+        // Fabric error; when it then exits (dropping its endpoints, as a
+        // failed worker does), the receiver's blocking complete_recv must
+        // return a Fabric error too — neither side deadlocks, which is
+        // what lets the leader poison the cluster.
+        let (tx, mut rx) = crate::transport::threaded_pair().unwrap();
+        let mut faulty = FaultLink::dropping(Box::new(tx), 1);
+        let sender = std::thread::spawn(move || {
+            faulty.post_send(Tensor2::full(1, 2, 1.0)).unwrap();
+            let err = faulty.post_send(Tensor2::full(1, 2, 2.0)).unwrap_err();
+            assert!(err.to_string().contains("fault injection"), "{err}");
+            // Thread exit drops `faulty` (and the inner endpoint).
+        });
+        let receiver = std::thread::spawn(move || {
+            let first = rx.complete_recv().unwrap();
+            assert_eq!(first, Tensor2::full(1, 2, 1.0));
+            // The second tile never comes; the dropped sender must turn
+            // this into an error, not a hang.
+            let err = rx.complete_recv().unwrap_err();
+            assert!(matches!(err, GalaxyError::Fabric(_)), "{err}");
+        });
+        sender.join().unwrap();
+        receiver.join().unwrap();
+    }
+
+    #[test]
+    fn fault_link_delay_preserves_delivery() {
+        // Delayed delivery is a timing fault only: every tile still
+        // arrives, in order.
+        let (mut tx, rx) = crate::transport::threaded_pair().unwrap();
+        let mut slow = FaultLink::delaying(Box::new(rx), Duration::from_millis(5));
+        tx.post_send(Tensor2::full(1, 2, 1.0)).unwrap();
+        tx.post_send(Tensor2::full(1, 2, 2.0)).unwrap();
+        assert_eq!(slow.complete_recv().unwrap(), Tensor2::full(1, 2, 1.0));
+        assert_eq!(slow.complete_recv().unwrap(), Tensor2::full(1, 2, 2.0));
+        assert_eq!(slow.stats().tiles, 2);
+    }
+
+    #[test]
+    fn fault_link_drop_counts_only_successful_posts() {
+        let (tx, mut rx) = crate::transport::threaded_pair().unwrap();
+        let mut faulty = FaultLink::dropping(Box::new(tx), 2);
+        faulty.post_send(Tensor2::full(1, 1, 1.0)).unwrap();
+        faulty.post_send(Tensor2::full(1, 1, 2.0)).unwrap();
+        assert!(faulty.post_send(Tensor2::full(1, 1, 3.0)).is_err());
+        assert!(faulty.post_send(Tensor2::full(1, 1, 4.0)).is_err());
+        assert_eq!(faulty.stats().tiles, 2);
+        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 2.0));
+    }
+
+    #[test]
+    fn scripted_rx_replays_in_order() {
+        let mut rx = ScriptedRx::new(vec![Tensor2::full(1, 1, 1.0), Tensor2::full(1, 1, 2.0)]);
+        assert!(rx.try_recv().unwrap());
+        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 2.0));
+        assert!(!rx.try_recv().unwrap());
+        assert!(rx.complete_recv().is_err());
+        assert!(rx.post_send(Tensor2::full(1, 1, 0.0)).is_err());
     }
 
     #[test]

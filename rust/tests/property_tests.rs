@@ -3,7 +3,10 @@
 //! `testkit::forall` harness (DESIGN.md §4: offline registry has no
 //! proptest; counterexamples reproduce from the reported seed).
 
-use galaxy::collective::{reference, ring_all_gather, ring_reduce_scatter};
+use galaxy::collective::{
+    reference, ring_all_gather, ring_all_gather_multi, ring_reduce_scatter,
+    ring_reduce_scatter_multi,
+};
 use galaxy::model::{ModelConfig, ModelKind};
 use galaxy::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
 use galaxy::parallel::OverlapMode;
@@ -201,6 +204,70 @@ fn prop_ring_collectives_match_reference() {
             for (g, w) in got_rs.iter().zip(want_rs.iter()) {
                 if !g.allclose(w, 1e-4, 1e-4) {
                     return Err(format!("RS diff {}", g.max_abs_diff(w).unwrap()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transport_lockstep_matches_reference_interleaved() {
+    // The double-buffered transport preserves lockstep == reference for
+    // arbitrary device counts (d ≤ 8) and uneven sequence partitions,
+    // including interleaved multi-request traffic: one or two requests'
+    // tiles share each in-process link's two slots, exactly like
+    // consecutive requests interleaving layer-wise through the cluster.
+    forall(
+        "double-buffered lockstep AG/RS == reference, d<=8, 1-2 requests",
+        109,
+        80,
+        |rng| {
+            let d = rng.range(1, 8) as usize;
+            let nq = rng.range(1, 2) as usize;
+            let ag_reqs: Vec<Vec<Tensor2>> = (0..nq)
+                .map(|_| {
+                    let cols = rng.range(1, 6) as usize;
+                    (0..d)
+                        .map(|_| {
+                            let rows = rng.range(1, 5) as usize;
+                            rand_tensor(rng, rows, cols)
+                        })
+                        .collect()
+                })
+                .collect();
+            let rs_reqs: Vec<(Vec<Tensor2>, Vec<usize>)> = (0..nq)
+                .map(|_| {
+                    let cols = rng.range(1, 6) as usize;
+                    let parts: Vec<usize> = (0..d).map(|_| rng.range(1, 5) as usize).collect();
+                    let seq: usize = parts.iter().sum();
+                    let partials: Vec<Tensor2> =
+                        (0..d).map(|_| rand_tensor(rng, seq, cols)).collect();
+                    (partials, parts)
+                })
+                .collect();
+            (ag_reqs, rs_reqs)
+        },
+        |(ag_reqs, rs_reqs)| {
+            let got_ag = ring_all_gather_multi(ag_reqs).map_err(|e| e.to_string())?;
+            for (q, req) in ag_reqs.iter().enumerate() {
+                let want = reference::all_gather(req).map_err(|e| e.to_string())?;
+                for per_dev in &got_ag[q] {
+                    if *per_dev != want {
+                        return Err(format!("AG mismatch (request {q})"));
+                    }
+                }
+            }
+            let got_rs = ring_reduce_scatter_multi(rs_reqs).map_err(|e| e.to_string())?;
+            for (q, (partials, parts)) in rs_reqs.iter().enumerate() {
+                let want = reference::reduce_scatter(partials, parts).map_err(|e| e.to_string())?;
+                for (g, w) in got_rs[q].iter().zip(want.iter()) {
+                    if !g.allclose(w, 1e-4, 1e-4) {
+                        return Err(format!(
+                            "RS diff {} (request {q})",
+                            g.max_abs_diff(w).unwrap()
+                        ));
+                    }
                 }
             }
             Ok(())
