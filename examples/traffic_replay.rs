@@ -82,13 +82,58 @@ fn main() -> galaxy::Result<()> {
     println!("{}", t.render());
 
     // Bucketing: how much padding the bucket ladder saved vs pad-to-max.
-    let padded: usize = fifo.completions.iter().map(|c| c.bucket).sum();
-    let max_pad = fifo.served() * 512;
+    let padded = fifo.metrics.padded_tokens;
+    let max_pad = fifo.served() as u64 * 512;
     println!(
-        "bucketed padding executed {padded} padded tokens vs {max_pad} under pad-to-max \
-         ({:.0}% saved)",
+        "bucketed padding executed {padded} padded tokens ({} waste over {} valid) vs \
+         {max_pad} under pad-to-max ({:.0}% saved)",
+        fifo.metrics.waste_tokens(),
+        fifo.metrics.valid_tokens,
         100.0 * (1.0 - padded as f64 / max_pad as f64)
     );
+    assert_eq!(
+        fifo.metrics.waste_tokens(),
+        fifo.completions.iter().map(|c| (c.bucket - c.seq_len) as u64).sum::<u64>(),
+        "padded-waste accounting must equal Σ(bucket − seq_len)"
+    );
+
+    // Continuous batching over a coarse 3-rung ladder: bucket-compatible
+    // requests enter the layer pipeline together and share ring walks;
+    // ServeMetrics splits out the occupancy and padding cost. The
+    // unbatched run on the same ladder is the control.
+    let coarse = |max_batch: usize| -> galaxy::Result<SchedReport> {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+            .with_buckets(vec![128, 256, 512])
+            .with_max_batch(max_batch);
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        Scheduler::with_config(engine, cfg).run(&trace)
+    };
+    let unbatched = coarse(1)?;
+    let batched = coarse(4)?;
+    println!(
+        "batching (3-rung ladder, max batch 4): {} requests in {} batches \
+         (mean occupancy {:.2}), padding waste {:.0}% of executed tokens",
+        batched.served(),
+        batched.metrics.batches,
+        batched.metrics.batch_occupancy(),
+        100.0 * batched.metrics.padding_waste_frac()
+    );
+    assert_eq!(batched.served(), unbatched.served());
+    assert!(
+        batched.metrics.batches <= batched.served(),
+        "batches can never outnumber requests"
+    );
+    // Only batch leaders pay exposed wire time — followers hide theirs
+    // behind the batch's compute — so batching can only cut the exposed
+    // total relative to the unbatched run on the same ladder.
+    assert!(
+        batched.metrics.exposed_comm_s <= unbatched.metrics.exposed_comm_s + 1e-9,
+        "batched exposed {} > unbatched {}",
+        batched.metrics.exposed_comm_s,
+        unbatched.metrics.exposed_comm_s
+    );
+    // Same trace, same ladder → identical padded-waste accounting.
+    assert_eq!(batched.metrics.waste_tokens(), unbatched.metrics.waste_tokens());
 
     // Comm accounting: replay the same trace with serialized links
     // (OverlapMode::None) to see how much wire time the double-buffered

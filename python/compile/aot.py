@@ -49,42 +49,54 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
+def bucket_name(base, shard, bucket, flavor):
+    """Whole-sequence program name at one bucket of the ladder: legacy
+    (untagged) at the reference SEQ_LEN, `_s{bucket}`-tagged otherwise —
+    matching rust/src/parallel/schedule.rs::seq_program."""
+    if bucket == shapes.SEQ_LEN:
+        return f"{base}_{shard}__{flavor}"
+    return f"{base}_s{bucket}_{shard}__{flavor}"
+
+
 def enumerate_programs():
     """Yield (name, fn, example_args, flavor) for every artifact.
 
     Shard-size space: K heads (1..12), U MLP units (1..12), T sequence tiles
-    (full-seq and the equal partitions for 2..4 devices).
+    (the equal partitions of every bucket over 1..4 devices), and per-bucket
+    whole-sequence programs for every rung of SEQ_BUCKETS.
     """
-    S, H, DH = shapes.SEQ_LEN, shapes.HIDDEN, shapes.HEAD_DIM
+    H, DH = shapes.HIDDEN, shapes.HEAD_DIM
+    S = shapes.SEQ_LEN
     progs = []
 
     def add(name, fn, args, flavor):
         progs.append((name, fn, args, flavor))
 
     for flavor in ("pallas", "xla"):
-        # Fused shard programs --------------------------------------------
-        for k in shapes.HEAD_SHARDS:
-            kd = k * DH
-            add(
-                f"mha_shard_k{k}__{flavor}",
-                functools.partial(model.mha_shard, k_heads=k, flavor=flavor),
-                (_sd(S, H), _sd(H, 3 * kd), _sd(kd, H), _sd(S)),
-                flavor,
-            )
-            add(
-                f"attn_core_k{k}__{flavor}",
-                functools.partial(model.attn_core, k_heads=k, flavor=flavor),
-                (_sd(S, kd), _sd(S, kd), _sd(S, kd), _sd(S)),
-                flavor,
-            )
-        for u in shapes.MLP_SHARDS:
-            w = u * shapes.MLP_UNIT
-            add(
-                f"mlp_shard_u{u}__{flavor}",
-                functools.partial(model.mlp_shard, flavor=flavor),
-                (_sd(S, H), _sd(H, w), _sd(w, H)),
-                flavor,
-            )
+        # Fused shard programs, one set per bucket of the ladder ----------
+        for b in shapes.SEQ_BUCKETS:
+            for k in shapes.HEAD_SHARDS:
+                kd = k * DH
+                add(
+                    bucket_name("mha_shard", f"k{k}", b, flavor),
+                    functools.partial(model.mha_shard, k_heads=k, flavor=flavor),
+                    (_sd(b, H), _sd(H, 3 * kd), _sd(kd, H), _sd(b)),
+                    flavor,
+                )
+                add(
+                    bucket_name("attn_core", f"k{k}", b, flavor),
+                    functools.partial(model.attn_core, k_heads=k, flavor=flavor),
+                    (_sd(b, kd), _sd(b, kd), _sd(b, kd), _sd(b)),
+                    flavor,
+                )
+            for u in shapes.MLP_SHARDS:
+                w = u * shapes.MLP_UNIT
+                add(
+                    bucket_name("mlp_shard", f"u{u}", b, flavor),
+                    functools.partial(model.mlp_shard, flavor=flavor),
+                    (_sd(b, H), _sd(H, w), _sd(w, H)),
+                    flavor,
+                )
         for t in shapes.SEQ_TILES:
             add(
                 f"connective_t{t}__{flavor}",
@@ -163,6 +175,7 @@ def main() -> None:
             "n_layers": shapes.N_LAYERS,
             "seq_len": shapes.SEQ_LEN,
             "seq_tiles": list(shapes.SEQ_TILES),
+            "seq_buckets": list(shapes.SEQ_BUCKETS),
             "ln_eps": shapes.LN_EPS,
         },
         "programs": [],

@@ -24,10 +24,22 @@ N_LAYERS = 6
 SEQ_LEN = 60
 LN_EPS = 1e-5
 
-# Device counts supported on the real-execution path; SEQ_LEN is divisible by
-# each so the equal SP partition has no remainder.
+# Device counts supported on the real-execution path; every bucket is
+# divisible by each so the equal SP partition has no remainder.
 DEVICE_COUNTS = (1, 2, 3, 4)
-SEQ_TILES = tuple(sorted({SEQ_LEN // d for d in DEVICE_COUNTS}))  # (15,20,30,60)
+
+# Artifact bucket ladder: the padded sequence lengths programs are lowered
+# for (multiples of lcm(1..4)=12 so each bucket tiles evenly over every
+# device count). The largest bucket is the reference SEQ_LEN; whole-sequence
+# programs for smaller buckets carry an `_s{bucket}` tag in their names.
+SEQ_BUCKETS = (24, 36, SEQ_LEN)
+assert SEQ_BUCKETS[-1] == SEQ_LEN and all(b % d == 0
+                                          for b in SEQ_BUCKETS
+                                          for d in DEVICE_COUNTS)
+
+# Ring-tile sizes: the equal partitions of every bucket over every device
+# count (tile/connective programs are shared across buckets by row count).
+SEQ_TILES = tuple(sorted({b // d for b in SEQ_BUCKETS for d in DEVICE_COUNTS}))
 
 # Shard sizes the planner may emit (0 heads/units means "device idle for this
 # block" and needs no artifact).

@@ -22,20 +22,34 @@ class TestEnumeration:
         names = [p[0] for p in progs]
         assert len(names) == len(set(names)), "duplicate artifact names"
         n_tiles, n_heads = len(shapes.SEQ_TILES), len(shapes.HEAD_SHARDS)
-        # pallas+xla fused: 2*(12 mha + 12 attn + 12 mlp + 4 conn + 1 local)
-        fused = 2 * (3 * n_heads + n_tiles + 1)
+        n_buckets = len(shapes.SEQ_BUCKETS)
+        # pallas+xla fused: per bucket (12 mha + 12 attn + 12 mlp), plus
+        # conn per tile and 1 local
+        fused = 2 * (n_buckets * 3 * n_heads + n_tiles + 1)
         # xla-only tiles: qkv + outproj + gemm1 + gemm2 per (tile, shard)
         tiles = n_tiles * (2 * n_heads + 2 * len(shapes.MLP_SHARDS))
         assert len(names) == fused + tiles
 
     def test_every_device_count_covered(self):
-        """Every supported D has connective + tile artifacts for S/D rows."""
+        """Every (bucket, D) has connective + tile artifacts for B/D rows."""
         names = {p[0] for p in programs()}
-        for d in shapes.DEVICE_COUNTS:
-            t = shapes.SEQ_LEN // d
-            assert f"connective_t{t}__xla" in names
-            assert f"qkv_tile_t{t}_k1__xla" in names
-            assert f"mlp_gemm2_tile_t{t}_u{shapes.N_HEADS}__xla" in names
+        for b in shapes.SEQ_BUCKETS:
+            for d in shapes.DEVICE_COUNTS:
+                t = b // d
+                assert f"connective_t{t}__xla" in names
+                assert f"qkv_tile_t{t}_k1__xla" in names
+                assert f"mlp_gemm2_tile_t{t}_u{shapes.N_HEADS}__xla" in names
+
+    def test_bucket_programs_tagged_except_reference(self):
+        names = {p[0] for p in programs()}
+        for b in shapes.SEQ_BUCKETS:
+            if b == shapes.SEQ_LEN:
+                assert "attn_core_k6__xla" in names
+            else:
+                assert f"attn_core_s{b}_k6__xla" in names
+                assert f"mha_shard_s{b}_k6__pallas" in names
+        # The reference names never carry a tag.
+        assert f"attn_core_s{shapes.SEQ_LEN}_k6__xla" not in names
 
     def test_full_model_shard_exists(self):
         names = {p[0] for p in programs()}

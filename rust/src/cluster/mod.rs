@@ -42,7 +42,7 @@ use crate::config::Manifest;
 use crate::error::{GalaxyError, Result};
 use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
-use crate::planner::Plan;
+use crate::planner::{equal_seq_partition, Plan};
 use crate::tensor::Tensor2;
 use crate::transport::{self, RingIo};
 use protocol::{Cmd, Dispatcher};
@@ -54,11 +54,46 @@ use worker::{LeaderCmd, WorkerReply};
 /// the worker queues ahead of later submissions.
 const ISSUE_WINDOW: usize = 2;
 
+/// Ring-tile geometry of one artifact bucket: how a request padded to
+/// `seq_len` splits into per-device sequence tiles. Indexed by bucket id
+/// (the rung's position on the ascending ladder); leader and workers
+/// derive the same geometry, so `Begin { bucket }` is all the wire needs
+/// to carry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketGeom {
+    /// Padded sequence length of this bucket.
+    pub seq_len: usize,
+    /// Per-device sequence-tile row counts (the SP partition == the ring
+    /// tile partition).
+    pub tiles: Vec<usize>,
+    /// Row offset of each device's tile.
+    pub offsets: Vec<usize>,
+}
+
+impl BucketGeom {
+    fn from_tiles(seq_len: usize, tiles: Vec<usize>) -> Self {
+        let offsets = (0..tiles.len()).map(|i| tiles[..i].iter().sum()).collect();
+        Self { seq_len, tiles, offsets }
+    }
+
+    /// Equal SP partition of `seq_len` over `d` devices (how every
+    /// non-reference bucket is tiled).
+    pub fn equal(seq_len: usize, d: usize) -> Self {
+        Self::from_tiles(seq_len, equal_seq_partition(seq_len, d))
+    }
+}
+
 /// One request currently moving through the worker fabric.
 struct InFlight {
     /// Dispatch instant (wall clock) and its epoch-relative stamp.
     started: Instant,
     started_s: f64,
+    /// Padded bucket length the request executes under.
+    bucket: usize,
+    /// Whether the request had the fabric to itself for its whole span.
+    /// Only solo spans feed the measured per-bucket layer cost —
+    /// interleaved spans include neighbors' layers and would inflate it.
+    solo: bool,
     /// Valid (unpadded) rows, derived from the leading zeros of the mask.
     valid_rows: usize,
     /// Output shards as workers finish.
@@ -80,6 +115,8 @@ pub struct FinishedRequest {
     /// prefix via [`FinishedRequest::valid_rows`].
     pub output: Tensor2,
     pub valid_rows: usize,
+    /// Padded bucket length the request executed under.
+    pub bucket: usize,
     /// Measured dispatch instant, seconds since the cluster epoch.
     pub started_s: f64,
     /// Measured completion instant, seconds since the cluster epoch.
@@ -106,9 +143,14 @@ pub struct RealCluster {
     model: ModelConfig,
     report: ExecReport,
     overlap: OverlapMode,
-    /// Artifact sequence length — the one padded bucket this cluster's
-    /// AOT programs were lowered for.
+    /// Reference artifact sequence length (the largest bucket).
     seq_len: usize,
+    /// Per-bucket ring-tile geometry, ascending by padded length; the
+    /// index is the bucket id carried by `Begin`.
+    geoms: Vec<BucketGeom>,
+    /// Measured per-bucket service accumulators (sum_s, count) feeding
+    /// the ladder's measured per-layer cost.
+    bucket_stats: HashMap<usize, (f64, u64)>,
     /// Deterministic input synthesis (stand-in for tokenizer+embedding),
     /// seeded identically to the workers' weight reconstruction.
     weights: WeightGen,
@@ -172,6 +214,37 @@ impl RealCluster {
             )));
         }
 
+        // Per-bucket ring-tile geometry, bucket id = ladder position. The
+        // reference bucket keeps the plan's SP partition; smaller buckets
+        // tile as the equal partition of their own length (the planner's
+        // SP partition *is* the equal split, so the two agree at the
+        // reference length whenever it divides evenly).
+        let geoms: Vec<BucketGeom> = manifest
+            .seq_buckets
+            .iter()
+            .map(|&b| {
+                if b == manifest.seq_len {
+                    BucketGeom::from_tiles(b, schedule.tiles.clone())
+                } else {
+                    BucketGeom::equal(b, d)
+                }
+            })
+            .collect();
+        // Fail fast on a ladder the artifact set cannot serve: every
+        // non-reference rung must have at least one `_s{b}`-tagged
+        // program declared, or worker warm-up would die later with an
+        // opaque per-artifact error (e.g. a hand-edited manifest whose
+        // rung was never AOT-lowered).
+        for &b in &manifest.seq_buckets {
+            let tag = format!("_s{b}_");
+            if b != manifest.seq_len && !manifest.programs.iter().any(|p| p.name.contains(&tag)) {
+                return Err(GalaxyError::Config(format!(
+                    "manifest declares seq bucket {b} but no `_s{b}`-tagged programs; \
+                     re-run `make artifacts`"
+                )));
+            }
+        }
+
         let (reply_tx, from_workers) = channel();
         let mut to_workers = Vec::with_capacity(d);
         let mut handles = Vec::with_capacity(d);
@@ -185,7 +258,7 @@ impl RealCluster {
                 model: model.clone(),
                 manifest: manifest.clone(),
                 shard: schedule.shards[i].clone(),
-                tiles: schedule.tiles.clone(),
+                geoms: geoms.clone(),
                 overlap,
                 flavor: flavor.to_string(),
                 seed,
@@ -208,6 +281,8 @@ impl RealCluster {
             report: ExecReport::default(),
             overlap,
             seq_len: manifest.seq_len,
+            geoms,
+            bucket_stats: HashMap::new(),
             weights: WeightGen::new(model, seed),
             first_start: None,
             epoch: Instant::now(),
@@ -231,9 +306,30 @@ impl RealCluster {
         self.overlap
     }
 
-    /// The single padded sequence length the loaded artifacts support.
+    /// Reference (largest) padded sequence length of the loaded
+    /// artifacts.
     pub fn seq_len(&self) -> usize {
         self.seq_len
+    }
+
+    /// Ascending padded bucket lengths the loaded artifacts support.
+    pub fn seq_buckets(&self) -> Vec<usize> {
+        self.geoms.iter().map(|g| g.seq_len).collect()
+    }
+
+    /// Per-bucket ring-tile geometry (indexed by bucket id).
+    pub fn geoms(&self) -> &[BucketGeom] {
+        &self.geoms
+    }
+
+    /// Measured mean per-layer service seconds at `bucket`, from the
+    /// *solo* (uncontended) requests served so far — interleaved spans
+    /// are excluded so the number means the same thing as the sim's
+    /// single-shot `layer_cost`. `None` until a solo completion at that
+    /// bucket (warm-up single-shot inferences qualify).
+    pub fn measured_layer_cost_s(&self, bucket: usize) -> Option<f64> {
+        let layers = self.model.layers.max(1) as f64;
+        self.bucket_stats.get(&bucket).map(|&(sum, n)| sum / n as f64 / layers)
     }
 
     /// Deterministic request-input synthesizer (same seed as the workers).
@@ -261,10 +357,12 @@ impl RealCluster {
     }
 
     /// Submit one padded request into the pipeline without waiting for
-    /// it: scatter SP row-shards of `x` behind a `Begin`, then let the
-    /// dispatcher interleave its layer commands with every other
-    /// in-flight request. `mask` is the additive key mask (`0` valid,
-    /// `-1e9` padding); its leading zeros define the valid output rows.
+    /// it: scatter SP row-shards of `x` behind a `Begin` carrying the
+    /// bucket id (the padded row count must match a rung of the artifact
+    /// ladder), then let the dispatcher interleave its layer commands
+    /// with every other in-flight request. `mask` is the additive key
+    /// mask (`0` valid, `-1e9` padding); its leading zeros define the
+    /// valid output rows.
     pub fn submit_padded(&mut self, id: u64, x: &Tensor2, mask: &[f32]) -> Result<()> {
         self.check_poisoned()?;
         if x.cols() != self.model.hidden {
@@ -274,16 +372,39 @@ impl RealCluster {
                 self.model.hidden
             )));
         }
+        let Some(bucket_id) = self.geoms.iter().position(|g| g.seq_len == x.rows()) else {
+            return Err(GalaxyError::Shape(format!(
+                "padded length {} matches no artifact bucket {:?}",
+                x.rows(),
+                self.seq_buckets()
+            )));
+        };
+        if mask.len() != x.rows() {
+            return Err(GalaxyError::Shape(format!(
+                "mask length {} != padded rows {}",
+                mask.len(),
+                x.rows()
+            )));
+        }
         if self.inflight.contains_key(&id) || self.completed.iter().any(|f| f.id == id) {
             return Err(GalaxyError::Fabric(format!("request id {id} already in flight")));
         }
         let now = Instant::now();
         self.first_start.get_or_insert(now);
+        // A new submission overlaps everything already in flight: their
+        // spans (and this one's, unless the fabric is idle) stop being
+        // usable as single-request cost measurements.
+        let solo = self.inflight.is_empty();
+        for fl in self.inflight.values_mut() {
+            fl.solo = false;
+        }
         self.inflight.insert(
             id,
             InFlight {
                 started: now,
                 started_s: now.duration_since(self.epoch).as_secs_f64(),
+                bucket: x.rows(),
+                solo,
                 valid_rows: mask.iter().take_while(|&&v| v == 0.0).count(),
                 shards: vec![None; self.n_devices()],
                 done_workers: 0,
@@ -294,7 +415,7 @@ impl RealCluster {
                 hidden_comm_s: 0.0,
             },
         );
-        let cmds = self.dispatcher.submit(id);
+        let cmds = self.dispatcher.submit(id, bucket_id);
         self.issue(&cmds, Some((x, mask)))
     }
 
@@ -362,14 +483,19 @@ impl RealCluster {
     fn issue(&mut self, cmds: &[Cmd], begin_payload: Option<(&Tensor2, &[f32])>) -> Result<()> {
         for cmd in cmds {
             match *cmd {
-                Cmd::Begin { req } => {
+                Cmd::Begin { req, bucket } => {
                     let (x, mask) =
                         begin_payload.expect("Begin emitted outside its own submission");
-                    for (i, spec) in self.schedule.shards.iter().enumerate() {
-                        let shard = x.slice_rows(spec.seq_offset, spec.seq_rows)?;
-                        self.to_workers[i]
-                            .send(LeaderCmd::Begin { req, x_shard: shard, mask: mask.to_vec() })
-                            .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
+                    let geom = &self.geoms[bucket];
+                    for (i, tx) in self.to_workers.iter().enumerate() {
+                        let shard = x.slice_rows(geom.offsets[i], geom.tiles[i])?;
+                        tx.send(LeaderCmd::Begin {
+                            req,
+                            bucket,
+                            x_shard: shard,
+                            mask: mask.to_vec(),
+                        })
+                        .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
                     }
                 }
                 Cmd::Layer { req, layer } => {
@@ -456,6 +582,16 @@ impl RealCluster {
         self.report.ring_bytes += fl.ring_bytes;
         self.report.pjrt_calls += fl.pjrt_calls;
         self.report.sync_points += fl.sync_points;
+        // Feed the ladder's measured per-bucket layer cost — solo spans
+        // only: an interleaved span includes neighbors' layer commands
+        // and would overstate the per-request cost by the concurrency
+        // factor (the sim's layer_cost is single-shot; the measured twin
+        // must mean the same thing).
+        if fl.solo {
+            let stat = self.bucket_stats.entry(fl.bucket).or_insert((0.0, 0));
+            stat.0 += service_s;
+            stat.1 += 1;
+        }
         if let Some(first) = self.first_start {
             self.report.wall_span_s = first.elapsed().as_secs_f64();
         }
@@ -463,6 +599,7 @@ impl RealCluster {
             id: req,
             output,
             valid_rows: fl.valid_rows,
+            bucket: fl.bucket,
             started_s: fl.started_s,
             finished_s,
             service_s,

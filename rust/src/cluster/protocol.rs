@@ -27,8 +27,11 @@ use std::collections::{HashMap, VecDeque};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Cmd {
     /// Register per-request state (the leader scatters input shards
-    /// alongside this command).
-    Begin { req: u64 },
+    /// alongside this command). `bucket` is the artifact bucket id — the
+    /// request's rung on the engine's [`crate::engine::BucketLadder`] —
+    /// selecting which per-bucket executables and ring-tile geometry the
+    /// workers use for every subsequent `Layer` of this request.
+    Begin { req: u64, bucket: usize },
     /// Execute one HMP layer of the request on the worker's shard.
     Layer { req: u64, layer: usize },
     /// Emit the request's output shard and drop its state.
@@ -73,14 +76,15 @@ impl Dispatcher {
         self.rotation.len()
     }
 
-    /// Admit a request: returns the commands to broadcast now — its
-    /// `Begin` (unpaced: it only registers state) plus whatever the
-    /// credit window allows across all active requests.
-    pub fn submit(&mut self, req: u64) -> Vec<Cmd> {
+    /// Admit a request executing against bucket id `bucket`: returns the
+    /// commands to broadcast now — its `Begin` (unpaced: it only
+    /// registers state) plus whatever the credit window allows across all
+    /// active requests.
+    pub fn submit(&mut self, req: u64, bucket: usize) -> Vec<Cmd> {
         debug_assert!(!self.next_layer.contains_key(&req), "duplicate request id {req}");
         self.next_layer.insert(req, 0);
         self.rotation.push_back(req);
-        let mut cmds = vec![Cmd::Begin { req }];
+        let mut cmds = vec![Cmd::Begin { req, bucket }];
         self.pump(&mut cmds);
         cmds
     }
@@ -135,13 +139,17 @@ mod tests {
         let mine: Vec<&Cmd> = stream
             .iter()
             .filter(|c| match c {
-                Cmd::Begin { req: r } | Cmd::Layer { req: r, .. } | Cmd::Finish { req: r } => {
+                Cmd::Begin { req: r, .. } | Cmd::Layer { req: r, .. } | Cmd::Finish { req: r } => {
                     *r == req
                 }
             })
             .collect();
         assert_eq!(mine.len(), layers + 2, "req {req}: {mine:?}");
-        assert_eq!(*mine[0], Cmd::Begin { req });
+        assert!(
+            matches!(mine[0], Cmd::Begin { req: r, .. } if *r == req),
+            "req {req} must open with Begin: {:?}",
+            mine[0]
+        );
         for (l, c) in mine[1..=layers].iter().enumerate() {
             assert_eq!(**c, Cmd::Layer { req, layer: l });
         }
@@ -151,7 +159,7 @@ mod tests {
     #[test]
     fn single_request_issues_layers_in_order() {
         let mut d = Dispatcher::new(4, 2);
-        let submitted = d.submit(7);
+        let submitted = d.submit(7, 0);
         let stream = drain(&mut d, submitted);
         assert_request_shape(&stream, 7, 4);
         assert_eq!(d.active(), 0);
@@ -159,22 +167,38 @@ mod tests {
     }
 
     #[test]
+    fn begin_carries_the_submitted_bucket_id() {
+        // Multi-bucket serving: each request's Begin must name its rung
+        // on the artifact ladder so workers select the matching
+        // per-bucket executables; Layer/Finish stay bucket-free (worker
+        // state remembers).
+        let mut d = Dispatcher::new(2, 4);
+        let a = d.submit(0, 2);
+        let b = d.submit(1, 0);
+        assert_eq!(a[0], Cmd::Begin { req: 0, bucket: 2 });
+        assert_eq!(b[0], Cmd::Begin { req: 1, bucket: 0 });
+        let stream = drain(&mut d, [a, b].concat());
+        assert_request_shape(&stream, 0, 2);
+        assert_request_shape(&stream, 1, 2);
+    }
+
+    #[test]
     fn window_bounds_outstanding_commands() {
         let mut d = Dispatcher::new(8, 2);
-        let first = d.submit(0);
+        let first = d.submit(0, 0);
         // Begin is unpaced; exactly `window` layer commands follow it.
         assert_eq!(
             first,
             vec![
-                Cmd::Begin { req: 0 },
+                Cmd::Begin { req: 0, bucket: 0 },
                 Cmd::Layer { req: 0, layer: 0 },
                 Cmd::Layer { req: 0, layer: 1 }
             ]
         );
         assert_eq!(d.outstanding(), 2);
         // A second submission must not burst past the window either.
-        let second = d.submit(1);
-        assert_eq!(second, vec![Cmd::Begin { req: 1 }]);
+        let second = d.submit(1, 0);
+        assert_eq!(second, vec![Cmd::Begin { req: 1, bucket: 0 }]);
         assert_eq!(d.outstanding(), 2);
         // Each ack frees exactly one slot.
         assert_eq!(d.ack().len(), 1);
@@ -184,8 +208,8 @@ mod tests {
     #[test]
     fn concurrent_requests_interleave_layerwise() {
         let mut d = Dispatcher::new(3, 1);
-        let mut stream = d.submit(0);
-        stream.extend(d.submit(1));
+        let mut stream = d.submit(0, 0);
+        stream.extend(d.submit(1, 0));
         let stream = drain(&mut d, stream);
         assert_request_shape(&stream, 0, 3);
         assert_request_shape(&stream, 1, 3);
@@ -213,11 +237,11 @@ mod tests {
     #[test]
     fn late_submission_joins_the_interleave() {
         let mut d = Dispatcher::new(6, 1);
-        let mut stream = d.submit(0);
+        let mut stream = d.submit(0, 0);
         // Let request 0 run two layers solo, then admit request 1.
         stream.extend(d.ack());
         stream.extend(d.ack());
-        stream.extend(d.submit(1));
+        stream.extend(d.submit(1, 0));
         let stream = drain(&mut d, stream);
         assert_request_shape(&stream, 0, 6);
         assert_request_shape(&stream, 1, 6);
@@ -245,7 +269,7 @@ mod tests {
             rng ^= rng << 17;
             if rng % 3 == 0 && next_id < 12 {
                 next_id += 1;
-                stream.extend(d.submit(next_id - 1));
+                stream.extend(d.submit(next_id - 1, (next_id - 1) as usize % 3));
             } else if d.outstanding() > 0 {
                 stream.extend(d.ack());
             } else {
@@ -264,8 +288,8 @@ mod tests {
     #[test]
     fn zero_layer_model_goes_straight_to_finish() {
         let mut d = Dispatcher::new(0, 2);
-        let stream = d.submit(3);
-        assert_eq!(stream, vec![Cmd::Begin { req: 3 }, Cmd::Finish { req: 3 }]);
+        let stream = d.submit(3, 2);
+        assert_eq!(stream, vec![Cmd::Begin { req: 3, bucket: 2 }, Cmd::Finish { req: 3 }]);
         let _ = d.ack();
         assert_eq!(d.active(), 0);
     }

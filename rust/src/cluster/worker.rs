@@ -40,7 +40,7 @@ use crate::config::Manifest;
 use crate::error::{GalaxyError, Result};
 use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
-use crate::parallel::schedule::ShardSpec;
+use crate::parallel::schedule::{seq_program, ShardSpec};
 use crate::parallel::OverlapMode;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor2;
@@ -50,8 +50,10 @@ use crate::transport::RingIo;
 /// id, so consecutive requests interleave layer-wise through the ring
 /// (see [`crate::cluster::protocol`] for the ordering contract).
 pub enum LeaderCmd {
-    /// Register a request: its input row-shard and additive key mask.
-    Begin { req: u64, x_shard: Tensor2, mask: Vec<f32> },
+    /// Register a request: its bucket id on the artifact ladder, its
+    /// input row-shard (sliced by that bucket's tile geometry), and its
+    /// additive key mask (one entry per padded bucket row).
+    Begin { req: u64, bucket: usize, x_shard: Tensor2, mask: Vec<f32> },
     /// Execute one HMP layer of a registered request.
     Layer { req: u64, layer: usize },
     /// Emit the request's output shard and drop its state.
@@ -84,6 +86,10 @@ pub enum WorkerReply {
 
 /// Per-request execution state held by a worker between layer commands.
 struct ReqState {
+    /// Bucket id (rung of the artifact ladder) the request executes
+    /// under — selects the per-bucket executables and tile geometry for
+    /// every layer command.
+    bucket: usize,
     /// Current activation row-shard (layer l's output, layer l+1's input).
     x_shard: Tensor2,
     mask: Vec<f32>,
@@ -106,7 +112,9 @@ pub struct WorkerSpec {
     pub model: ModelConfig,
     pub manifest: Manifest,
     pub shard: ShardSpec,
-    pub tiles: Vec<usize>,
+    /// Per-bucket ring-tile geometry (indexed by bucket id); the last
+    /// entry is the reference bucket.
+    pub geoms: Vec<super::BucketGeom>,
     pub overlap: OverlapMode,
     pub flavor: String,
     pub seed: u64,
@@ -128,7 +136,6 @@ struct Worker {
     spec: WorkerSpec,
     rt: Runtime,
     layers: Vec<LayerShard>,
-    tile_offsets: Vec<usize>,
     /// In-flight request states, keyed by request id.
     states: HashMap<u64, ReqState>,
 }
@@ -155,10 +162,11 @@ pub fn run(
     while let Ok(cmd) = cmds.recv() {
         match cmd {
             LeaderCmd::Shutdown => break,
-            LeaderCmd::Begin { req, x_shard, mask } => {
+            LeaderCmd::Begin { req, bucket, x_shard, mask } => {
                 worker.states.insert(
                     req,
                     ReqState {
+                        bucket,
                         x_shard,
                         mask,
                         ring_bytes: 0,
@@ -256,19 +264,31 @@ impl Worker {
                 beta2: literal::from_slice(&p.beta2),
             });
         }
-        // Warm-up: compile every artifact this shard will use, off the
-        // request path.
-        let names =
-            s.artifact_names(&spec.tiles, &spec.flavor, spec.overlap == OverlapMode::Tiled);
-        rt.warm_up(names.iter().map(|n| n.as_str()))?;
-        let tile_offsets = (0..spec.tiles.len())
-            .map(|t| spec.tiles[..t].iter().sum())
+        // Warm-up: compile every artifact this shard will use at every
+        // bucket of the ladder, off the request path.
+        let tiled = spec.overlap == OverlapMode::Tiled;
+        let full_seq = spec.manifest.seq_len;
+        let mut names: Vec<String> = spec
+            .geoms
+            .iter()
+            .flat_map(|g| {
+                s.artifact_names_bucket(g.seq_len, full_seq, &g.tiles, &spec.flavor, tiled)
+            })
             .collect();
-        Ok(Worker { spec, rt, layers, tile_offsets, states: HashMap::new() })
+        names.sort();
+        names.dedup();
+        rt.warm_up(names.iter().map(|n| n.as_str()))?;
+        Ok(Worker { spec, rt, layers, states: HashMap::new() })
     }
 
     fn art(&self, base: &str) -> String {
         format!("{base}__{}", self.spec.flavor)
+    }
+
+    /// Whole-sequence program name at one bucket: the legacy name at the
+    /// reference length, the `_s{seq}`-tagged variant otherwise.
+    fn art_seq(&self, base: &str, shard: &str, seq: usize) -> String {
+        seq_program(base, shard, seq, self.spec.manifest.seq_len, &self.spec.flavor)
     }
 
     /// One layer command: advance the request's activation shard by one
@@ -279,6 +299,7 @@ impl Worker {
             .remove(&req)
             .ok_or_else(|| GalaxyError::Fabric(format!("layer {l} for unknown request {req}")))?;
         let ReqState {
+            bucket,
             x_shard,
             mask,
             ring_bytes,
@@ -291,11 +312,12 @@ impl Worker {
         let bytes0 = io.bytes;
         let syncs0 = io.sync_points;
         let stats0 = io.link_stats();
-        let out = self.layer(io, l, x_shard, &mask)?;
+        let out = self.layer(io, l, bucket, x_shard, &mask)?;
         let stats = io.link_stats();
         self.states.insert(
             req,
             ReqState {
+                bucket,
                 x_shard: out,
                 mask,
                 ring_bytes: ring_bytes + (io.bytes - bytes0),
@@ -308,15 +330,30 @@ impl Worker {
         Ok(())
     }
 
-    /// One HMP layer; input/output are this device's SP row-shards.
-    fn layer(&self, io: &mut RingIo, l: usize, x_shard: Tensor2, mask: &[f32]) -> Result<Tensor2> {
+    /// One HMP layer; input/output are this device's SP row-shards,
+    /// tiled by the request's bucket geometry.
+    fn layer(
+        &self,
+        io: &mut RingIo,
+        l: usize,
+        bucket: usize,
+        x_shard: Tensor2,
+        mask: &[f32],
+    ) -> Result<Tensor2> {
         let m = self.spec.model.clone();
         let s = self.spec.shard.clone();
+        let geom = self
+            .spec
+            .geoms
+            .get(bucket)
+            .ok_or_else(|| GalaxyError::Fabric(format!("unknown bucket id {bucket}")))?;
         let h = m.hidden;
         let kd = s.k_heads * m.head_dim();
         let width = s.u_units * m.mlp_unit();
         let mask_lit = literal::from_slice(mask);
-        let seq: usize = self.spec.tiles.iter().sum();
+        let seq = geom.seq_len;
+        let my_rows = geom.tiles[self.spec.index];
+        let my_off = geom.offsets[self.spec.index];
         let tiled = self.spec.overlap == OverlapMode::Tiled;
 
         // ---- MHA block -------------------------------------------------
@@ -326,7 +363,7 @@ impl Worker {
             if !tiled || s.k_heads == 0 {
                 return Ok(None);
             }
-            let rows = self.spec.tiles[slot];
+            let rows = geom.tiles[slot];
             let name = self.art(&format!("qkv_tile_t{rows}_k{}", s.k_heads));
             let xt_lit = literal::from_tensor(xt)?;
             let wqkv = self.layers[l].wqkv.as_ref().expect("wqkv");
@@ -337,7 +374,7 @@ impl Worker {
         // fused MHA shard (serial mode).
         let c_partial_tile: Box<dyn FnMut(usize) -> Result<Tensor2> + '_>;
         if s.k_heads == 0 {
-            let tiles = self.spec.tiles.clone();
+            let tiles = geom.tiles.clone();
             c_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
             let qkv = Tensor2::concat_rows(
@@ -350,15 +387,15 @@ impl Worker {
             let k_lit = literal::from_tensor(&k)?;
             let v_lit = literal::from_tensor(&v)?;
             let b = self.rt.exec_tensor(
-                &self.art(&format!("attn_core_k{}", s.k_heads)),
+                &self.art_seq("attn_core", &format!("k{}", s.k_heads), seq),
                 &[&q_lit, &k_lit, &v_lit, &mask_lit],
                 seq,
                 kd,
             )?;
             let k_heads = s.k_heads;
             c_partial_tile = Box::new(move |slot| {
-                let rows = self.spec.tiles[slot];
-                let off = self.tile_offsets[slot];
+                let rows = geom.tiles[slot];
+                let off = geom.offsets[slot];
                 let name = self.art(&format!("out_proj_tile_t{rows}_k{k_heads}"));
                 let bt = b.slice_rows(off, rows)?;
                 let bt_lit = literal::from_tensor(&bt)?;
@@ -369,7 +406,7 @@ impl Worker {
             // Serial mode: one fused artifact produces the full partial C_i.
             let x_lit = literal::from_tensor(&x_full)?;
             let c = self.rt.exec_tensor(
-                &self.art(&format!("mha_shard_k{}", s.k_heads)),
+                &self.art_seq("mha_shard", &format!("k{}", s.k_heads), seq),
                 &[
                     &x_lit,
                     self.layers[l].wqkv.as_ref().expect("wqkv"),
@@ -380,20 +417,20 @@ impl Worker {
                 h,
             )?;
             c_partial_tile =
-                Box::new(move |slot| c.slice_rows(self.tile_offsets[slot], self.spec.tiles[slot]));
+                Box::new(move |slot| c.slice_rows(geom.offsets[slot], geom.tiles[slot]));
         }
 
         // Exit GEMM ⊕ ReduceScatter.
         let g_mine = self.rs_phase(io, c_partial_tile)?;
 
         // SP connective #1: H_i = LN(G_i + A_i).
-        let a_mine = x_full.slice_rows(s.seq_offset, s.seq_rows)?;
+        let a_mine = x_full.slice_rows(my_off, my_rows)?;
         let g_lit = literal::from_tensor(&g_mine)?;
         let a_lit = literal::from_tensor(&a_mine)?;
         let h1_shard = self.rt.exec_tensor(
-            &self.art(&format!("connective_t{}", s.seq_rows)),
+            &self.art(&format!("connective_t{my_rows}")),
             &[&g_lit, &a_lit, &self.layers[l].gamma1, &self.layers[l].beta1],
-            s.seq_rows,
+            my_rows,
             h,
         )?;
 
@@ -403,7 +440,7 @@ impl Worker {
             if !tiled || s.u_units == 0 {
                 return Ok(None);
             }
-            let rows = self.spec.tiles[slot];
+            let rows = geom.tiles[slot];
             let name = self.art(&format!("mlp_gemm1_tile_t{rows}_u{}", s.u_units));
             let ht_lit = literal::from_tensor(ht)?;
             let w1 = self.layers[l].w1.as_ref().expect("w1");
@@ -412,7 +449,7 @@ impl Worker {
 
         let f_partial_tile: Box<dyn FnMut(usize) -> Result<Tensor2> + '_>;
         if s.u_units == 0 {
-            let tiles = self.spec.tiles.clone();
+            let tiles = geom.tiles.clone();
             f_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
             let e = Tensor2::concat_rows(
@@ -420,8 +457,8 @@ impl Worker {
             )?;
             let u_units = s.u_units;
             f_partial_tile = Box::new(move |slot| {
-                let rows = self.spec.tiles[slot];
-                let off = self.tile_offsets[slot];
+                let rows = geom.tiles[slot];
+                let off = geom.offsets[slot];
                 let name = self.art(&format!("mlp_gemm2_tile_t{rows}_u{u_units}"));
                 let et = e.slice_rows(off, rows)?;
                 let et_lit = literal::from_tensor(&et)?;
@@ -431,7 +468,7 @@ impl Worker {
         } else {
             let h1_lit = literal::from_tensor(&h1_full)?;
             let f = self.rt.exec_tensor(
-                &self.art(&format!("mlp_shard_u{}", s.u_units)),
+                &self.art_seq("mlp_shard", &format!("u{}", s.u_units), seq),
                 &[
                     &h1_lit,
                     self.layers[l].w1.as_ref().expect("w1"),
@@ -441,20 +478,20 @@ impl Worker {
                 h,
             )?;
             f_partial_tile =
-                Box::new(move |slot| f.slice_rows(self.tile_offsets[slot], self.spec.tiles[slot]));
+                Box::new(move |slot| f.slice_rows(geom.offsets[slot], geom.tiles[slot]));
         }
 
         // Exit GEMM2 ⊕ ReduceScatter.
         let g2_mine = self.rs_phase(io, f_partial_tile)?;
 
         // SP connective #2: H'_i = LN(G'_i + H_i).
-        let res_mine = h1_full.slice_rows(s.seq_offset, s.seq_rows)?;
+        let res_mine = h1_full.slice_rows(my_off, my_rows)?;
         let g2_lit = literal::from_tensor(&g2_mine)?;
         let res_lit = literal::from_tensor(&res_mine)?;
         self.rt.exec_tensor(
-            &self.art(&format!("connective_t{}", s.seq_rows)),
+            &self.art(&format!("connective_t{my_rows}")),
             &[&g2_lit, &res_lit, &self.layers[l].gamma2, &self.layers[l].beta2],
-            s.seq_rows,
+            my_rows,
             h,
         )
     }

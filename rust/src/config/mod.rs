@@ -33,8 +33,14 @@ pub struct Manifest {
     pub ffn_dim: usize,
     pub mlp_unit: usize,
     pub n_layers: usize,
+    /// Largest (reference) padded sequence length the artifacts support.
     pub seq_len: usize,
     pub seq_tiles: Vec<usize>,
+    /// Ascending artifact bucket ladder: every padded sequence length the
+    /// AOT programs were lowered for. Single-bucket manifests (no
+    /// `seq_buckets` key) degrade to `[seq_len]`; the largest rung must
+    /// equal `seq_len`.
+    pub seq_buckets: Vec<usize>,
     pub programs: Vec<ManifestProgram>,
     /// Directory the manifest was loaded from (artifact files live here).
     pub dir: PathBuf,
@@ -71,6 +77,23 @@ impl Manifest {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let seq_len = m.get("seq_len")?.as_usize()?;
+        // Older manifests predate the bucket ladder: absent key means a
+        // single-bucket ladder at the artifact seq_len.
+        let mut seq_buckets = match m.as_obj()?.get("seq_buckets") {
+            Some(v) => {
+                v.as_arr()?.iter().map(|b| b.as_usize()).collect::<Result<Vec<_>>>()?
+            }
+            None => vec![seq_len],
+        };
+        seq_buckets.sort_unstable();
+        seq_buckets.dedup();
+        if seq_buckets.last() != Some(&seq_len) || seq_buckets.contains(&0) {
+            return Err(GalaxyError::Config(format!(
+                "manifest seq_buckets {seq_buckets:?} must be positive and end at \
+                 seq_len {seq_len}; re-run `make artifacts`"
+            )));
+        }
         Ok(Manifest {
             model_name: m.get("name")?.as_str()?.to_string(),
             hidden: m.get("hidden")?.as_usize()?,
@@ -79,13 +102,14 @@ impl Manifest {
             ffn_dim: m.get("ffn_dim")?.as_usize()?,
             mlp_unit: m.get("mlp_unit")?.as_usize()?,
             n_layers: m.get("n_layers")?.as_usize()?,
-            seq_len: m.get("seq_len")?.as_usize()?,
+            seq_len,
             seq_tiles: m
                 .get("seq_tiles")?
                 .as_arr()?
                 .iter()
                 .map(|t| t.as_usize())
                 .collect::<Result<Vec<_>>>()?,
+            seq_buckets,
             programs,
             dir,
         })
@@ -211,6 +235,9 @@ mod tests {
         let p = m.program("layer_local__xla").unwrap();
         assert_eq!(p.input_shapes.len(), 10);
         assert!(m.artifact_path("layer_local__xla").unwrap().exists());
+        // The ladder always ends at the reference seq_len (single-bucket
+        // manifests degrade to [seq_len]).
+        assert_eq!(m.seq_buckets.last(), Some(&m.seq_len));
     }
 
     #[test]
@@ -229,5 +256,51 @@ mod tests {
     fn missing_dir_errors_mention_make() {
         let err = Manifest::load("/nonexistent/dir").unwrap_err().to_string();
         assert!(err.contains("make artifacts"));
+    }
+
+    fn manifest_json(extra_model_keys: &str) -> String {
+        format!(
+            r#"{{"model": {{"name": "galaxy-mini", "hidden": 384, "n_heads": 12,
+                "head_dim": 32, "ffn_dim": 1536, "mlp_unit": 128, "n_layers": 6,
+                "seq_len": 60, "seq_tiles": [15, 20, 30, 60]{extra_model_keys}}},
+              "programs": []}}"#
+        )
+    }
+
+    fn load_from_str(tag: &str, text: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("galaxy-manifest-test-{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(&dir)
+    }
+
+    #[test]
+    fn manifest_without_bucket_ladder_degrades_to_single_bucket() {
+        let m = load_from_str("single", &manifest_json("")).unwrap();
+        assert_eq!(m.seq_len, 60);
+        assert_eq!(m.seq_buckets, vec![60]);
+    }
+
+    #[test]
+    fn manifest_bucket_ladder_parses_sorted_and_deduped() {
+        let m = load_from_str(
+            "ladder",
+            &manifest_json(r#", "seq_buckets": [60, 24, 36, 36]"#),
+        )
+        .unwrap();
+        assert_eq!(m.seq_buckets, vec![24, 36, 60]);
+        assert_eq!(m.seq_len, 60);
+    }
+
+    #[test]
+    fn manifest_ladder_must_end_at_seq_len() {
+        let err = load_from_str("bad", &manifest_json(r#", "seq_buckets": [24, 36]"#))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seq_buckets"), "{err}");
+        let err = load_from_str("zero", &manifest_json(r#", "seq_buckets": [0, 60]"#))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("positive"), "{err}");
     }
 }

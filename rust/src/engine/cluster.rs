@@ -5,24 +5,35 @@
 //! through the ring, so [`Engine::submit`] maps straight onto
 //! [`RealCluster::submit_padded`] and completions come back from
 //! [`RealCluster::poll_finished`] with measured start/finish instants.
+//! A batch ([`Engine::submit_batch`]) is its members submitted
+//! back-to-back: the per-layer dispatcher advances them through the
+//! layer pipeline in lockstep, which *is* batched entry on this backend.
 //! The blocking [`Engine::infer`] remains a submit-then-wait on top.
+//!
+//! The advertised [`crate::engine::BucketLadder`] is the manifest's
+//! `seq_buckets` — one rung per padded length the AOT programs were
+//! lowered for — with *measured* per-layer costs once requests have been
+//! served at a rung (0.0 until then).
 
 use crate::cluster::{FinishedRequest, RealCluster};
-use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest, Submitted};
+use crate::engine::{
+    BucketLadder, BucketSpec, Engine, EngineCaps, InferOutcome, InferRequest, Submitted,
+    SubmittedBatch, DEFAULT_MAX_BATCH,
+};
 use crate::error::{GalaxyError, Result};
 use crate::serving::pad_and_mask;
 use crate::tensor::Tensor2;
 
 impl RealCluster {
-    /// Validate the request against the loaded artifacts and synthesize
-    /// its padded input activations + key mask (stand-in for the
-    /// tokenizer+embedding lookup).
+    /// Validate the request against the loaded artifact ladder and
+    /// synthesize its padded input activations + key mask (stand-in for
+    /// the tokenizer+embedding lookup).
     fn prepare(&self, req: &InferRequest) -> Result<(Tensor2, Vec<f32>)> {
-        if req.bucket != self.seq_len() {
+        if !self.seq_buckets().contains(&req.bucket) {
             return Err(GalaxyError::Shape(format!(
-                "bucket {} not admissible: artifacts are lowered for seq_len {}",
+                "bucket {} not admissible: artifacts are lowered for {:?}",
                 req.bucket,
-                self.seq_len()
+                self.seq_buckets()
             )));
         }
         // Oversize requests are a Shape error (like `pad_and_mask`), not
@@ -58,11 +69,21 @@ fn outcome_from_finished(fin: FinishedRequest) -> Result<InferOutcome> {
 
 impl Engine for RealCluster {
     fn caps(&self) -> EngineCaps {
+        // The ladder is the manifest's bucket set; per-layer costs are
+        // measured from served requests (0.0 until a rung has served).
+        let ladder = BucketLadder::new(
+            self.seq_buckets()
+                .into_iter()
+                .map(|b| BucketSpec {
+                    seq_len: b,
+                    layer_cost_s: self.measured_layer_cost_s(b).unwrap_or(0.0),
+                })
+                .collect(),
+        );
         EngineCaps {
             name: "pjrt",
             devices: self.n_devices(),
-            // The AOT artifacts are lowered for exactly one padded length.
-            seq_buckets: vec![self.seq_len()],
+            ladder,
             overlap: self.overlap(),
             // Per-layer worker protocol: request n+1 enters layer 0 as
             // soon as request n vacates it, so up to `layers` requests
@@ -71,6 +92,8 @@ impl Engine for RealCluster {
             // Double-buffered threaded transport: two tiles in flight
             // per ring link, backpressure on the third.
             link_slots: crate::transport::LINK_SLOTS,
+            // Batch members ride the native per-layer interleave.
+            max_batch: DEFAULT_MAX_BATCH,
         }
     }
 
@@ -84,6 +107,21 @@ impl Engine for RealCluster {
         let (padded, mask) = self.prepare(req)?;
         self.submit_padded(req.id, &padded, &mask)?;
         Ok(Submitted::InFlight)
+    }
+
+    fn submit_batch(&mut self, reqs: &[InferRequest]) -> Result<SubmittedBatch> {
+        // Consecutive submissions enter the per-layer dispatcher's
+        // round-robin rotation together — lockstep layer advance is the
+        // native form of batched pipeline entry.
+        for req in reqs {
+            self.submit(req)?;
+        }
+        Ok(SubmittedBatch::InFlight)
+    }
+
+    fn infer_batch(&mut self, reqs: &[InferRequest]) -> Result<Vec<InferOutcome>> {
+        self.submit_batch(reqs)?;
+        reqs.iter().map(|r| outcome_from_finished(self.wait_finished(r.id)?)).collect()
     }
 
     fn poll_complete(&mut self, wait: bool) -> Result<Option<InferOutcome>> {

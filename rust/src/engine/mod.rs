@@ -8,9 +8,11 @@
 //! This module gives them one surface:
 //!
 //! * [`Engine`] — `infer(&InferRequest) -> InferOutcome` plus capability
-//!   metadata ([`EngineCaps`]): device count, admissible padded
-//!   sequence-length buckets, overlap mode, and the pipeline depth
-//!   available for overlapping consecutive requests.
+//!   metadata ([`EngineCaps`]): device count, the artifact bucket ladder
+//!   ([`BucketLadder`] — admissible padded lengths with per-bucket
+//!   modeled/measured per-layer cost), overlap mode, the pipeline depth
+//!   available for overlapping consecutive requests, and the batch cap
+//!   for bucket-compatible requests entering the pipeline together.
 //! * [`InferOutcome`] — the per-request execution report both engines
 //!   fill with the *same semantics*: service time, sync-point count and
 //!   ring-byte totals are properties of the schedule, so for the same
@@ -44,6 +46,93 @@ use crate::tensor::Tensor2;
 pub const DEFAULT_SEQ_BUCKETS: &[usize] =
     &[32, 64, 96, 128, 160, 192, 224, 256, 320, 384, 448, 512];
 
+/// Default cap on how many bucket-compatible requests the scheduler may
+/// group into one batch for engines that support batched entry into the
+/// layer pipeline.
+pub const DEFAULT_MAX_BATCH: usize = 4;
+
+/// One rung of the artifact bucket ladder: a padded sequence length the
+/// engine can execute, plus the engine's per-layer cost estimate for a
+/// request padded to it (modeled by the simulator, measured by the real
+/// fabric; 0.0 when the engine has no estimate yet).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketSpec {
+    /// Padded sequence length of this bucket.
+    pub seq_len: usize,
+    /// Straggler cost of one HMP layer at this bucket, seconds.
+    pub layer_cost_s: f64,
+}
+
+/// The engine-visible artifact bucket ladder: ascending padded sequence
+/// lengths with per-bucket cost estimates. Bucket *ids* are positions in
+/// the ladder — [`crate::cluster::protocol::Cmd::Begin`] carries them so
+/// workers can select the matching per-bucket executables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketLadder {
+    buckets: Vec<BucketSpec>,
+}
+
+impl BucketLadder {
+    /// Build a ladder from explicit specs (sorted + deduplicated by
+    /// sequence length; on duplicates the first spec wins).
+    pub fn new(mut buckets: Vec<BucketSpec>) -> Self {
+        buckets.sort_by_key(|b| b.seq_len);
+        buckets.dedup_by_key(|b| b.seq_len);
+        Self { buckets }
+    }
+
+    /// Ladder of bare lengths with no cost estimates.
+    pub fn from_lens(lens: &[usize]) -> Self {
+        Self::new(lens.iter().map(|&l| BucketSpec { seq_len: l, layer_cost_s: 0.0 }).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &BucketSpec> {
+        self.buckets.iter()
+    }
+
+    /// Spec of bucket id `id` (its position in the ascending ladder).
+    pub fn get(&self, id: usize) -> Option<&BucketSpec> {
+        self.buckets.get(id)
+    }
+
+    /// Ascending padded lengths (the legacy flat-list view).
+    pub fn lens(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.seq_len).collect()
+    }
+
+    /// Minimal admissible bucket for `seq_len` valid tokens: the first
+    /// (smallest) rung whose padded length fits. Returns `(id, spec)`.
+    pub fn bucket_for(&self, seq_len: usize) -> Option<(usize, &BucketSpec)> {
+        self.buckets.iter().enumerate().find(|(_, b)| b.seq_len >= seq_len)
+    }
+
+    /// Bucket id of an exact padded length (what the cluster uses to map
+    /// a padded submission onto its per-bucket executables).
+    pub fn id_of(&self, padded_len: usize) -> Option<usize> {
+        self.buckets.iter().position(|b| b.seq_len == padded_len)
+    }
+
+    /// Largest admissible padded length (0 when no buckets exist).
+    pub fn max_seq(&self) -> usize {
+        self.buckets.last().map_or(0, |b| b.seq_len)
+    }
+
+    /// Padded-token waste of serving `seq_len` valid tokens through the
+    /// minimal admissible bucket (`bucket − seq_len`); `None` when no
+    /// bucket fits.
+    pub fn waste(&self, seq_len: usize) -> Option<usize> {
+        self.bucket_for(seq_len).map(|(_, b)| b.seq_len - seq_len)
+    }
+}
+
 /// Capability metadata an engine advertises to its callers.
 #[derive(Clone, Debug)]
 pub struct EngineCaps {
@@ -51,9 +140,10 @@ pub struct EngineCaps {
     pub name: &'static str,
     /// Number of collaborating edge devices.
     pub devices: usize,
-    /// Ascending admissible padded sequence lengths. A request longer
-    /// than the last bucket cannot be served by this engine.
-    pub seq_buckets: Vec<usize>,
+    /// Admissible padded sequence lengths with per-bucket cost estimates,
+    /// ascending. A request longer than the last rung cannot be served by
+    /// this engine.
+    pub ladder: BucketLadder,
     /// Whether boundary synchronizations overlap with tile GEMMs.
     pub overlap: OverlapMode,
     /// How many consecutive requests can overlap through the HMP layer
@@ -70,17 +160,23 @@ pub struct EngineCaps {
     /// double-buffered transport of §III-D, so a tile transfer overlaps
     /// the next tile's GEMM inside one request).
     pub link_slots: usize,
+    /// How many bucket-compatible requests may enter the layer pipeline
+    /// together as one batch (1 = no batching). Engines advertising more
+    /// than 1 must either implement [`Engine::infer_batch`] with genuine
+    /// batched semantics or accept batch members through the native
+    /// [`Engine::submit`] pipeline.
+    pub max_batch: usize,
 }
 
 impl EngineCaps {
-    /// Smallest admissible bucket that fits `seq_len` tokens.
+    /// Smallest admissible padded length that fits `seq_len` tokens.
     pub fn bucket_for(&self, seq_len: usize) -> Option<usize> {
-        self.seq_buckets.iter().copied().find(|&b| b >= seq_len)
+        self.ladder.bucket_for(seq_len).map(|(_, b)| b.seq_len)
     }
 
     /// Largest admissible padded length (0 when no buckets exist).
     pub fn max_seq(&self) -> usize {
-        self.seq_buckets.last().copied().unwrap_or(0)
+        self.ladder.max_seq()
     }
 }
 
@@ -92,7 +188,7 @@ pub struct InferRequest {
     /// Valid (unpadded) token count.
     pub seq_len: usize,
     /// Padded sequence length to execute. The scheduler always selects
-    /// an admissible bucket from [`EngineCaps::seq_buckets`]; engines
+    /// an admissible bucket from [`EngineCaps::ladder`]; engines
     /// whose programs are shape-specialized (the PJRT cluster) reject
     /// any other value, while the closed-form simulator can execute an
     /// arbitrary length (which direct callers — CLI `simulate`, the
@@ -176,6 +272,19 @@ pub enum Submitted {
     InFlight,
 }
 
+/// Result of a [`Engine::submit_batch`] of bucket-compatible requests.
+#[derive(Debug)]
+pub enum SubmittedBatch {
+    /// The engine executed the batch inline and reports one outcome per
+    /// member (same order as the submitted slice).
+    Completed(Vec<InferOutcome>),
+    /// Every member entered the backend's native pipeline (the per-layer
+    /// dispatcher interleaves them in lockstep — the batch literally
+    /// enters the layer pipeline together); harvest each member through
+    /// [`Engine::poll_complete`].
+    InFlight,
+}
+
 /// A Galaxy execution engine: anything that can run one padded single-shot
 /// inference under the HMP schedule and report what it did.
 pub trait Engine {
@@ -192,6 +301,36 @@ pub trait Engine {
     /// need not implement anything.
     fn submit(&mut self, req: &InferRequest) -> Result<Submitted> {
         Ok(Submitted::Completed(self.infer(req)?))
+    }
+
+    /// Execute a batch of bucket-compatible requests that enter the layer
+    /// pipeline together, returning one outcome per member (same order).
+    ///
+    /// The default is a *serial fallback* — it loops [`Engine::infer`]
+    /// with no shared-walk benefit, so each member's `service_s` is its
+    /// own serial time. The scheduler therefore only forms multi-request
+    /// batches when [`EngineCaps::max_batch`] > 1, which an engine must
+    /// advertise only if it implements genuinely batched semantics here
+    /// (every member's `service_s` is the lockstep batch span) or accepts
+    /// members through the native [`Engine::submit`] pipeline instead.
+    fn infer_batch(&mut self, reqs: &[InferRequest]) -> Result<Vec<InferOutcome>> {
+        reqs.iter().map(|r| self.infer(r)).collect()
+    }
+
+    /// Begin executing a batch of bucket-compatible requests without
+    /// waiting. Default: single-member batches route through
+    /// [`Engine::submit`] (preserving native pipelining); larger batches
+    /// execute inline via [`Engine::infer_batch`]. Natively pipelined
+    /// engines override this to feed every member into their per-layer
+    /// dispatcher.
+    fn submit_batch(&mut self, reqs: &[InferRequest]) -> Result<SubmittedBatch> {
+        if let [req] = reqs {
+            return Ok(match self.submit(req)? {
+                Submitted::Completed(o) => SubmittedBatch::Completed(vec![o]),
+                Submitted::InFlight => SubmittedBatch::InFlight,
+            });
+        }
+        Ok(SubmittedBatch::Completed(self.infer_batch(reqs)?))
     }
 
     /// Harvest one asynchronously completed request ([`Submitted::InFlight`]
@@ -218,10 +357,11 @@ mod tests {
         EngineCaps {
             name: "test",
             devices: 2,
-            seq_buckets: buckets.to_vec(),
+            ladder: BucketLadder::from_lens(buckets),
             overlap: OverlapMode::Tiled,
             pipeline_depth: 4,
             link_slots: 2,
+            max_batch: 1,
         }
     }
 
@@ -241,6 +381,29 @@ mod tests {
         assert_eq!(c.bucket_for(129), None);
         assert_eq!(c.max_seq(), 128);
         assert_eq!(caps(&[]).max_seq(), 0);
+    }
+
+    #[test]
+    fn ladder_sorts_dedups_and_indexes() {
+        let ladder = BucketLadder::from_lens(&[256, 64, 128, 64]);
+        assert_eq!(ladder.lens(), vec![64, 128, 256]);
+        assert_eq!(ladder.len(), 3);
+        assert_eq!(ladder.id_of(128), Some(1));
+        assert_eq!(ladder.id_of(100), None);
+        let (id, spec) = ladder.bucket_for(65).unwrap();
+        assert_eq!((id, spec.seq_len), (1, 128));
+        assert_eq!(ladder.get(2).unwrap().seq_len, 256);
+        assert!(ladder.get(3).is_none());
+    }
+
+    #[test]
+    fn ladder_waste_is_bucket_minus_len() {
+        let ladder = BucketLadder::from_lens(&[64, 128]);
+        assert_eq!(ladder.waste(10), Some(54));
+        assert_eq!(ladder.waste(64), Some(0));
+        assert_eq!(ladder.waste(65), Some(63));
+        assert_eq!(ladder.waste(129), None);
+        assert!(BucketLadder::default().is_empty());
     }
 
     #[test]
@@ -289,5 +452,26 @@ mod tests {
         assert!(e.poll_complete(false).unwrap().is_none());
         assert!(e.poll_complete(true).unwrap().is_none());
         assert_eq!(e.measured_now_s(), None);
+    }
+
+    #[test]
+    fn default_submit_batch_routes_singletons_through_submit() {
+        let mut e = ShimOnly;
+        match e.submit_batch(&[InferRequest::new(1, 32, 64)]).unwrap() {
+            SubmittedBatch::Completed(outs) => {
+                assert_eq!(outs.len(), 1);
+                assert_eq!(outs[0].id, 1);
+            }
+            SubmittedBatch::InFlight => panic!("serial shim must complete inline"),
+        }
+        // Multi-member fallback: serial loop, one outcome per member in
+        // submission order.
+        let reqs = [InferRequest::new(2, 10, 64), InferRequest::new(3, 20, 64)];
+        match e.submit_batch(&reqs).unwrap() {
+            SubmittedBatch::Completed(outs) => {
+                assert_eq!(outs.iter().map(|o| o.id).collect::<Vec<_>>(), vec![2, 3]);
+            }
+            SubmittedBatch::InFlight => panic!("fallback executes inline"),
+        }
     }
 }

@@ -1,7 +1,8 @@
 //! [`Engine`] implementation for the calibrated simulator.
 
-use crate::engine::{Engine, EngineCaps, InferOutcome, InferRequest};
-use crate::error::Result;
+use crate::engine::{BucketLadder, BucketSpec, Engine, EngineCaps, InferOutcome, InferRequest};
+use crate::error::{GalaxyError, Result};
+use crate::parallel::OverlapMode;
 use crate::sim::{SimEngine, SimReport};
 
 /// Convert a closed-form timeline report into the unified per-request
@@ -23,10 +24,19 @@ pub fn outcome_from_sim(id: u64, rep: &SimReport) -> InferOutcome {
 
 impl Engine for SimEngine<'_> {
     fn caps(&self) -> EngineCaps {
+        // The ladder carries the closed-form per-layer cost of each
+        // bucket, so schedulers and admission controllers can reason
+        // about bucket selection without probing the engine.
+        let ladder = BucketLadder::new(
+            self.buckets()
+                .iter()
+                .map(|&b| BucketSpec { seq_len: b, layer_cost_s: self.layer_cost(b).total_s() })
+                .collect(),
+        );
         EngineCaps {
             name: "sim",
             devices: self.n_devices(),
-            seq_buckets: self.buckets().to_vec(),
+            ladder,
             overlap: self.overlap(),
             // Upper bound from schedule granularity: request n+1 may
             // enter layer 0 once request n has left it. The scheduler
@@ -39,6 +49,7 @@ impl Engine for SimEngine<'_> {
             // transport uses (sim::net::LinkModel agreement test), so
             // the sim advertises the same slot capability.
             link_slots: crate::transport::LINK_SLOTS,
+            max_batch: self.max_batch(),
         }
     }
 
@@ -46,13 +57,64 @@ impl Engine for SimEngine<'_> {
         let rep = self.run_inference(req.bucket);
         Ok(outcome_from_sim(req.id, &rep))
     }
+
+    /// Batched execution of bucket-compatible requests: the members enter
+    /// the layer pipeline together and advance layers in lockstep, their
+    /// tiles sharing each layer's ring walks. Modeled cost under tiled
+    /// overlap: the batch pays every member's compute serially (tensor
+    /// parallelism shares all devices) but only one walk's worth of
+    /// exposed wire time — the extra members' tiles ride the
+    /// double-buffered slots behind the batch's own compute, so their
+    /// wire time is accounted as hidden. With serialized links
+    /// ([`OverlapMode::None`]) there is nothing to hide behind and the
+    /// batch degenerates to serial service.
+    fn infer_batch(&mut self, reqs: &[InferRequest]) -> Result<Vec<InferOutcome>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bucket = reqs[0].bucket;
+        if reqs.iter().any(|r| r.bucket != bucket) {
+            return Err(GalaxyError::Shape(format!(
+                "batch mixes buckets: {:?}",
+                reqs.iter().map(|r| r.bucket).collect::<Vec<_>>()
+            )));
+        }
+        for r in reqs {
+            r.valid_len()?;
+        }
+        let single = self.run_inference(bucket);
+        let serialized = self.overlap() == OverlapMode::None;
+        let span = if serialized {
+            reqs.len() as f64 * single.total_s()
+        } else {
+            single.total_s() + (reqs.len() - 1) as f64 * single.compute_s
+        };
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(k, r)| {
+                // Sync points and ring bytes stay schedule properties of
+                // each member's bucket — batching shares walk *time*, not
+                // wire volume (the cross-engine parity test relies on
+                // per-request counts being invariant to batching).
+                let mut o = outcome_from_sim(r.id, &single);
+                o.service_s = span;
+                if !serialized && k > 0 {
+                    // Followers' wire rides entirely behind the batch's
+                    // compute; total wire per member is conserved.
+                    o.hidden_comm_s = single.hidden_comm_s + single.exposed_comm_s;
+                    o.exposed_comm_s = 0.0;
+                }
+                o
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::ModelConfig;
-    use crate::parallel::OverlapMode;
     use crate::planner::Planner;
     use crate::profiler::Profiler;
     use crate::sim::{EdgeEnv, NetParams};
@@ -63,18 +125,34 @@ mod tests {
         SimEngine::new(model, env, plan, NetParams::paper_default())
     }
 
+    /// Low-bandwidth engine: wire time dominates, so exposed comm is
+    /// guaranteed non-zero (what the batch wire-accounting tests need).
+    fn slow_engine<'a>(model: &'a ModelConfig, env: &'a EdgeEnv, seq: usize) -> SimEngine<'a> {
+        let profile = Profiler::analytic(model, env, seq).profile();
+        let plan = Planner::new(model, env, &profile).plan().unwrap();
+        SimEngine::new(model, env, plan, NetParams::mbps(10.0))
+    }
+
     #[test]
     fn caps_reflect_model_and_env() {
         let model = ModelConfig::bert_large();
         let env = EdgeEnv::preset_b();
-        let eng = engine(&model, &env, 284).with_buckets(vec![128, 284, 512]);
+        let eng = engine(&model, &env, 284).with_buckets(vec![128, 284, 512]).with_max_batch(3);
         let caps = eng.caps();
         assert_eq!(caps.name, "sim");
         assert_eq!(caps.devices, 3);
-        assert_eq!(caps.seq_buckets, vec![128, 284, 512]);
+        assert_eq!(caps.ladder.lens(), vec![128, 284, 512]);
         assert_eq!(caps.overlap, OverlapMode::Tiled);
         assert_eq!(caps.pipeline_depth, model.layers);
         assert_eq!(caps.link_slots, crate::transport::LINK_SLOTS);
+        assert_eq!(caps.max_batch, 3);
+        // Ladder rungs carry the modeled per-layer cost, ascending with
+        // the bucket.
+        let costs: Vec<f64> = caps.ladder.iter().map(|b| b.layer_cost_s).collect();
+        assert!(costs.iter().all(|&c| c > 0.0));
+        assert!(costs[0] < costs[2], "per-layer cost must grow with the bucket");
+        let want = eng.layer_cost(284).total_s();
+        assert!((caps.ladder.get(1).unwrap().layer_cost_s - want).abs() < 1e-12);
     }
 
     #[test]
@@ -101,5 +179,65 @@ mod tests {
         let small = eng.infer(&InferRequest::new(0, 100, 128)).unwrap();
         let large = eng.infer(&InferRequest::new(0, 100, 512)).unwrap();
         assert!(small.service_s < large.service_s);
+    }
+
+    #[test]
+    fn batch_shares_walks_and_conserves_wire() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = slow_engine(&model, &env, 512);
+        let single = eng.infer(&InferRequest::new(0, 100, 128)).unwrap();
+        let reqs: Vec<InferRequest> =
+            (0..3).map(|i| InferRequest::new(i, 100, 128)).collect();
+        let batch = eng.infer_batch(&reqs).unwrap();
+        assert_eq!(batch.len(), 3);
+        let span = single.service_s + 2.0 * single.compute_s;
+        for (k, o) in batch.iter().enumerate() {
+            assert_eq!(o.id, k as u64);
+            assert!((o.service_s - span).abs() < 1e-12, "lockstep span");
+            // Schedule properties are per member, invariant to batching.
+            assert_eq!(o.sync_points, single.sync_points);
+            assert_eq!(o.ring_bytes, single.ring_bytes);
+            // Per-member wire volume is conserved: hidden + exposed is
+            // the same whether the member led or followed.
+            let wire = o.hidden_comm_s + o.exposed_comm_s;
+            let want = single.hidden_comm_s + single.exposed_comm_s;
+            assert!((wire - want).abs() < 1e-12);
+        }
+        // Only the batch leader pays exposed wire time.
+        assert!(batch[0].exposed_comm_s > 0.0);
+        assert_eq!(batch[1].exposed_comm_s, 0.0);
+        assert_eq!(batch[2].exposed_comm_s, 0.0);
+        // A batch never takes longer than serial service of its members.
+        assert!(span <= 3.0 * single.service_s + 1e-12);
+    }
+
+    #[test]
+    fn serialized_links_batch_degenerates_to_serial() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = slow_engine(&model, &env, 512).with_overlap(OverlapMode::None);
+        let single = eng.infer(&InferRequest::new(0, 100, 128)).unwrap();
+        let reqs: Vec<InferRequest> =
+            (0..2).map(|i| InferRequest::new(i, 100, 128)).collect();
+        let batch = eng.infer_batch(&reqs).unwrap();
+        for o in &batch {
+            assert!((o.service_s - 2.0 * single.service_s).abs() < 1e-12);
+            // Serialized links hide nothing — batching must not conjure
+            // hidden comm out of thin air.
+            assert_eq!(o.hidden_comm_s, 0.0);
+            assert!((o.exposed_comm_s - single.exposed_comm_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mixed_bucket_batch_is_a_shape_error() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = engine(&model, &env, 512);
+        let reqs = [InferRequest::new(0, 50, 64), InferRequest::new(1, 100, 128)];
+        let err = eng.infer_batch(&reqs).unwrap_err();
+        assert!(matches!(err, GalaxyError::Shape(_)), "got {err}");
+        assert!(eng.infer_batch(&[]).unwrap().is_empty());
     }
 }

@@ -38,20 +38,64 @@ impl ShardSpec {
         self.u_units * m.mlp_unit()
     }
 
-    /// AOT artifact names this shard invokes. Tiled mode uses the tile
-    /// programs + attention core; serial mode uses the fused shard
-    /// programs. Empty-shard devices need only their connective.
+    /// AOT artifact names this shard invokes at the reference sequence
+    /// length. Tiled mode uses the tile programs + attention core; serial
+    /// mode uses the fused shard programs. Empty-shard devices need only
+    /// their connective.
     pub fn artifact_names(&self, tiles: &[usize], flavor: &str, tiled: bool) -> Vec<String> {
+        self.artifact_names_for_bucket(
+            self.seq_rows,
+            tiles,
+            |base, shard| format!("{base}_{shard}__{flavor}"),
+            flavor,
+            tiled,
+        )
+    }
+
+    /// AOT artifact names this shard invokes at one bucket of the ladder:
+    /// `seq_len` is the bucket's padded length, `full_seq` the reference
+    /// length the legacy (untagged) programs were lowered at, and `tiles`
+    /// the bucket's ring-tile partition. Tile and connective programs are
+    /// already parameterized by row count; the whole-sequence programs
+    /// (attention core, fused shards) get per-bucket `_s{seq}` variants.
+    pub fn artifact_names_bucket(
+        &self,
+        seq_len: usize,
+        full_seq: usize,
+        tiles: &[usize],
+        flavor: &str,
+        tiled: bool,
+    ) -> Vec<String> {
+        self.artifact_names_for_bucket(
+            tiles[self.device],
+            tiles,
+            |base, shard| seq_program(base, shard, seq_len, full_seq, flavor),
+            flavor,
+            tiled,
+        )
+    }
+
+    fn artifact_names_for_bucket<F>(
+        &self,
+        conn_rows: usize,
+        tiles: &[usize],
+        seq_name: F,
+        flavor: &str,
+        tiled: bool,
+    ) -> Vec<String>
+    where
+        F: Fn(&str, &str) -> String,
+    {
         let mut names = Vec::new();
         if self.k_heads > 0 {
             if tiled {
-                names.push(format!("attn_core_k{}__{flavor}", self.k_heads));
+                names.push(seq_name("attn_core", &format!("k{}", self.k_heads)));
                 for &t in tiles {
                     names.push(format!("qkv_tile_t{t}_k{}__{flavor}", self.k_heads));
                     names.push(format!("out_proj_tile_t{t}_k{}__{flavor}", self.k_heads));
                 }
             } else {
-                names.push(format!("mha_shard_k{}__{flavor}", self.k_heads));
+                names.push(seq_name("mha_shard", &format!("k{}", self.k_heads)));
             }
         }
         if self.u_units > 0 {
@@ -61,15 +105,27 @@ impl ShardSpec {
                     names.push(format!("mlp_gemm2_tile_t{t}_u{}__{flavor}", self.u_units));
                 }
             } else {
-                names.push(format!("mlp_shard_u{}__{flavor}", self.u_units));
+                names.push(seq_name("mlp_shard", &format!("u{}", self.u_units)));
             }
         }
-        if self.seq_rows > 0 {
-            names.push(format!("connective_t{}__{flavor}", self.seq_rows));
+        if conn_rows > 0 {
+            names.push(format!("connective_t{conn_rows}__{flavor}"));
         }
         names.sort();
         names.dedup();
         names
+    }
+}
+
+/// Name of a whole-sequence program at one bucket: programs lowered at
+/// the reference `full_seq` keep their legacy names
+/// (`attn_core_k6__xla`); per-bucket variants carry an `_s{seq}` tag
+/// (`attn_core_s36_k6__xla`). The Python AOT step emits both.
+pub fn seq_program(base: &str, shard: &str, seq: usize, full_seq: usize, flavor: &str) -> String {
+    if seq == full_seq {
+        format!("{base}_{shard}__{flavor}")
+    } else {
+        format!("{base}_s{seq}_{shard}__{flavor}")
     }
 }
 
@@ -168,6 +224,36 @@ mod tests {
         assert!(!fused.iter().any(|n| n.contains("tile")));
         assert_eq!(spec.qkv_width(&m), 576);
         assert_eq!(spec.mlp_width(&m), 768);
+    }
+
+    #[test]
+    fn bucket_artifact_names_tag_whole_sequence_programs() {
+        let spec = ShardSpec {
+            device: 1,
+            k_heads: 6,
+            head_offset: 0,
+            u_units: 6,
+            unit_offset: 0,
+            seq_rows: 30,
+            seq_offset: 30,
+        };
+        // Reference bucket (60): legacy names, untouched.
+        let full = spec.artifact_names_bucket(60, 60, &[30, 30], "xla", true);
+        assert!(full.contains(&"attn_core_k6__xla".to_string()));
+        assert!(full.contains(&"connective_t30__xla".to_string()));
+        // Smaller bucket (36 over 2 devices → 18-row tiles): the
+        // attention core is tagged with its seq, tiles carry their rows.
+        let small = spec.artifact_names_bucket(36, 60, &[18, 18], "xla", true);
+        assert!(small.contains(&"attn_core_s36_k6__xla".to_string()));
+        assert!(small.contains(&"qkv_tile_t18_k6__xla".to_string()));
+        assert!(small.contains(&"connective_t18__xla".to_string()));
+        assert!(!small.iter().any(|n| n == "attn_core_k6__xla"));
+        // Serial mode tags the fused shards.
+        let fused = spec.artifact_names_bucket(36, 60, &[18, 18], "pallas", false);
+        assert!(fused.contains(&"mha_shard_s36_k6__pallas".to_string()));
+        assert!(fused.contains(&"mlp_shard_s36_u6__pallas".to_string()));
+        assert_eq!(seq_program("attn_core", "k3", 60, 60, "xla"), "attn_core_k3__xla");
+        assert_eq!(seq_program("attn_core", "k3", 24, 60, "xla"), "attn_core_s24_k3__xla");
     }
 
     #[test]

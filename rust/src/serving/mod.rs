@@ -4,20 +4,27 @@
 //! scheduler over the unified [`crate::engine::Engine`] abstraction.
 //!
 //! * [`scheduler::Scheduler`] — admission queue with arrival timestamps,
-//!   sequence-length bucketing to the nearest artifact bucket, pluggable
-//!   ordering ([`policy::Policy`]: FIFO / SJF / EDF), and pipelined
-//!   dispatch of up to `EngineCaps::pipeline_depth` in-flight requests
-//!   through the HMP layer schedule — modeled stage arithmetic for
-//!   serial-shim engines, measured start/finish instants for engines
+//!   sequence-length bucketing to the minimal admissible rung of the
+//!   engine's artifact bucket ladder, pluggable ordering
+//!   ([`policy::Policy`]: FIFO / SJF / EDF, tie-broken by arrival
+//!   index), continuous batching of bucket-compatible requests, and
+//!   pipelined dispatch of up to `EngineCaps::pipeline_depth` in-flight
+//!   requests through the HMP layer schedule — modeled stage arithmetic
+//!   for serial-shim engines, measured start/finish instants for engines
 //!   with native request pipelining (the PJRT cluster's per-layer
 //!   worker protocol).
 //! * [`pad_and_mask`] — request padding + additive key-mask construction
 //!   shared by every real-execution path.
 //!
-//! The paper's setting remains single-shot per request (no batch
-//! dimension exists to batch over — exactly why DP is inapplicable,
-//! §II-C.1); concurrency comes from overlapping *consecutive* requests
-//! in the layer pipeline, not from batching.
+//! The paper's setting is single-shot per request (no batch dimension —
+//! why DP is inapplicable, §II-C.1); concurrency comes from overlapping
+//! *consecutive* requests in the layer pipeline. Continuous batching
+//! extends that: requests padded to the *same* bucket enter the layer
+//! pipeline together and advance in lockstep, sharing each layer's ring
+//! walks (the shape-flexible batched-execution direction of Jupiter
+//! (arXiv:2504.08242) and CoFormer (arXiv:2508.20375)), with
+//! padded-token waste and batch occupancy reported by
+//! [`crate::metrics::ServeMetrics`].
 
 pub mod policy;
 pub mod scheduler;

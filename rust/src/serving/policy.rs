@@ -3,6 +3,14 @@
 //! The scheduler keeps every arrived-but-not-yet-dispatched request in an
 //! admission queue; whenever the engine pipeline can accept a new request
 //! the active policy picks which queued request enters next.
+//!
+//! Tie-breaking is deterministic and *stable by arrival index*: the
+//! scheduler stamps every admitted request with its position in the
+//! arrival order ([`Queued::arrival_idx`]) and every policy's key ends
+//! with it. Ties therefore resolve identically no matter how the queue
+//! was mutated in between (batch extraction removes several entries per
+//! dispatch, making ties common) and no matter what ids the caller
+//! assigned (duplicate or non-monotone ids used to leak into the order).
 
 use crate::error::{GalaxyError, Result};
 
@@ -16,6 +24,10 @@ pub struct Queued {
     pub arrival_s: f64,
     /// Completion deadline (arrival + SLO), seconds from trace start.
     pub deadline_s: f64,
+    /// Position in the arrival order, stamped by the scheduler at
+    /// admission (callers constructing traces may leave it 0 — the
+    /// scheduler overwrites it). The final tie-break key of every policy.
+    pub arrival_idx: u64,
 }
 
 /// Admission-queue ordering policy.
@@ -50,14 +62,15 @@ impl Policy {
     }
 
     /// Index of the queued request to dispatch next. Ties break by
-    /// arrival time then id, so every policy is deterministic.
+    /// arrival time then arrival index, so every policy is deterministic
+    /// and independent of queue-internal order and caller-assigned ids.
     pub fn pick(&self, queue: &[Queued]) -> usize {
         assert!(!queue.is_empty(), "policy over empty queue");
         let key = |q: &Queued| -> (f64, f64, u64) {
             match self {
-                Policy::Fifo => (q.arrival_s, q.arrival_s, q.id),
-                Policy::ShortestJobFirst => (q.seq_len as f64, q.arrival_s, q.id),
-                Policy::EarliestDeadline => (q.deadline_s, q.arrival_s, q.id),
+                Policy::Fifo => (q.arrival_s, 0.0, q.arrival_idx),
+                Policy::ShortestJobFirst => (q.seq_len as f64, q.arrival_s, q.arrival_idx),
+                Policy::EarliestDeadline => (q.deadline_s, q.arrival_s, q.arrival_idx),
             }
         };
         let mut best = 0;
@@ -76,8 +89,8 @@ impl Policy {
 mod tests {
     use super::*;
 
-    fn q(id: u64, seq_len: usize, arrival_s: f64, deadline_s: f64) -> Queued {
-        Queued { id, seq_len, arrival_s, deadline_s }
+    fn q(id: u64, seq_len: usize, arrival_s: f64, deadline_s: f64, arrival_idx: u64) -> Queued {
+        Queued { id, seq_len, arrival_s, deadline_s, arrival_idx }
     }
 
     /// Drain a queue through repeated picks; returns dispatch order.
@@ -92,27 +105,53 @@ mod tests {
 
     #[test]
     fn fifo_is_arrival_order() {
-        let queue = vec![q(2, 10, 0.2, 9.0), q(0, 99, 0.0, 9.0), q(1, 50, 0.1, 9.0)];
+        let queue = vec![q(2, 10, 0.2, 9.0, 2), q(0, 99, 0.0, 9.0, 0), q(1, 50, 0.1, 9.0, 1)];
         assert_eq!(drain(Policy::Fifo, queue), vec![0, 1, 2]);
     }
 
     #[test]
     fn sjf_is_length_order() {
-        let queue = vec![q(0, 300, 0.0, 9.0), q(1, 20, 0.1, 9.0), q(2, 150, 0.2, 9.0)];
+        let queue = vec![q(0, 300, 0.0, 9.0, 0), q(1, 20, 0.1, 9.0, 1), q(2, 150, 0.2, 9.0, 2)];
         assert_eq!(drain(Policy::ShortestJobFirst, queue), vec![1, 2, 0]);
     }
 
     #[test]
     fn edf_is_deadline_order() {
-        let queue = vec![q(0, 10, 0.0, 5.0), q(1, 10, 0.1, 1.5), q(2, 10, 0.2, 3.0)];
+        let queue = vec![q(0, 10, 0.0, 5.0, 0), q(1, 10, 0.1, 1.5, 1), q(2, 10, 0.2, 3.0, 2)];
         assert_eq!(drain(Policy::EarliestDeadline, queue), vec![1, 2, 0]);
     }
 
     #[test]
-    fn ties_break_by_arrival_then_id() {
-        let queue = vec![q(5, 64, 0.3, 2.0), q(3, 64, 0.1, 2.0), q(4, 64, 0.1, 2.0)];
+    fn ties_break_by_arrival_then_arrival_index() {
+        let queue =
+            vec![q(5, 64, 0.3, 2.0, 2), q(3, 64, 0.1, 2.0, 0), q(4, 64, 0.1, 2.0, 1)];
         assert_eq!(drain(Policy::ShortestJobFirst, queue.clone()), vec![3, 4, 5]);
         assert_eq!(drain(Policy::EarliestDeadline, queue), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn ties_ignore_caller_ids_and_queue_order() {
+        // Regression: full ties used to fall back to caller-assigned ids
+        // (or, with duplicate ids, to whatever order the queue happened
+        // to hold internally). The arrival index is the only tail key
+        // now, so shuffled/duplicate ids cannot change the order.
+        let queue = vec![
+            q(7, 64, 0.0, 2.0, 1),
+            q(7, 64, 0.0, 2.0, 0),
+            q(1, 64, 0.0, 2.0, 2),
+        ];
+        for p in [Policy::Fifo, Policy::ShortestJobFirst, Policy::EarliestDeadline] {
+            let idxs: Vec<u64> = {
+                let mut order = Vec::new();
+                let mut queue = queue.clone();
+                while !queue.is_empty() {
+                    let i = p.pick(&queue);
+                    order.push(queue.remove(i).arrival_idx);
+                }
+                order
+            };
+            assert_eq!(idxs, vec![0, 1, 2], "{p:?} must follow arrival indices");
+        }
     }
 
     #[test]

@@ -1,18 +1,28 @@
-//! Concurrent request scheduler over any [`Engine`].
+//! Concurrent request scheduler with continuous batching over any
+//! [`Engine`].
 //!
 //! Replaces the old one-at-a-time FIFO server loop with:
 //!
 //! * an **admission queue** holding arrival-stamped requests, ordered by a
 //!   pluggable [`Policy`] (FIFO / shortest-job-first / earliest-deadline),
 //! * **sequence-length bucketing** — each request is padded to the
-//!   smallest admissible artifact bucket ([`EngineCaps::seq_buckets`]),
-//!   not blindly to the maximum; oversize requests are rejected,
+//!   smallest admissible rung of the engine's artifact bucket ladder
+//!   ([`EngineCaps::ladder`]), not blindly to the maximum; oversize
+//!   requests are rejected,
+//! * **continuous batching** — each dispatch takes the policy's pick as
+//!   the batch leader, then pulls further *bucket-compatible* queued
+//!   requests (same minimal bucket, still in policy order) until
+//!   [`EngineCaps::max_batch`] or the pipeline window is exhausted; the
+//!   batch enters the layer pipeline together ([`Engine::submit_batch`]).
+//!   Requests arriving later join later batches — admission is
+//!   continuous, not epoch-based,
 //! * **pipelined dispatch** — up to [`EngineCaps::pipeline_depth`]
 //!   requests overlap through the HMP layer schedule: request *n+1*
 //!   enters layer 0 one pipeline stage after request *n* vacates it, and
 //!   never overtakes it at the exit,
-//! * metrics that keep **queueing delay**, **service time**, and
-//!   **wall-clock throughput** separate ([`ServeMetrics`]).
+//! * metrics that keep **queueing delay**, **service time**,
+//!   **wall-clock throughput**, **padded-token waste**, and **batch
+//!   occupancy** separate ([`ServeMetrics`]).
 //!
 //! The timeline depends on how the engine executes. Serial-shim engines
 //! (the simulator, mocks) complete each [`Engine::submit`] inline, and
@@ -30,9 +40,9 @@
 //! timestamp is NaN, infinite, or negative becomes a [`Rejection`]
 //! (never a panic inside a sort comparator).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::engine::{Engine, InferOutcome, InferRequest, Submitted};
+use crate::engine::{Engine, InferOutcome, InferRequest, SubmittedBatch};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::ServeMetrics;
 use crate::serving::policy::{Policy, Queued};
@@ -65,6 +75,9 @@ pub struct Completion {
     pub seq_len: usize,
     /// Padded bucket the request executed under.
     pub bucket: usize,
+    /// Dispatch batch the request entered the layer pipeline in (batch
+    /// ids are consecutive per run; members share a bucket).
+    pub batch: u64,
     pub arrival_s: f64,
     /// Dispatch instant (entry into HMP layer 0).
     pub start_s: f64,
@@ -158,12 +171,15 @@ impl<E: Engine> Scheduler<E> {
                 seq_len: r.seq_len,
                 arrival_s: r.arrival_s,
                 deadline_s: r.arrival_s + slo,
+                arrival_idx: 0, // stamped at admission
             })
             .collect();
         self.run_trace(&trace)
     }
 
     /// Replay a trace that carries explicit per-request deadlines.
+    /// `Queued::arrival_idx` is re-stamped from the arrival order — the
+    /// caller's values are ignored.
     pub fn run_trace(&mut self, trace: &[Queued]) -> Result<SchedReport> {
         let caps = self.engine.caps();
         let stages = caps.pipeline_depth.max(1);
@@ -172,6 +188,7 @@ impl<E: Engine> Scheduler<E> {
             n => n.min(caps.pipeline_depth),
         }
         .max(1);
+        let max_batch = caps.max_batch.max(1);
 
         let mut report = SchedReport::default();
         // Trace validation: a NaN/infinite/negative arrival timestamp is
@@ -190,6 +207,11 @@ impl<E: Engine> Scheduler<E> {
             }
         }
         pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+        // Stamp the arrival order: the stable tie-break key every policy
+        // ends with, independent of queue-internal order and caller ids.
+        for (k, q) in pending.iter_mut().enumerate() {
+            q.arrival_idx = k as u64;
+        }
 
         let mut queue: Vec<Queued> = Vec::new();
         let mut next = 0usize;
@@ -204,8 +226,9 @@ impl<E: Engine> Scheduler<E> {
         let mut finishes: Vec<f64> = Vec::new();
         let mut last_stage_gate = f64::NEG_INFINITY;
         // Native-pipeline state (engines that accept submissions as
-        // `Submitted::InFlight`): dispatched, not yet harvested.
-        let mut in_flight: HashMap<u64, (Queued, usize)> = HashMap::new();
+        // `SubmittedBatch::InFlight`): dispatched, not yet harvested.
+        let mut in_flight: HashMap<u64, (Queued, usize, u64)> = HashMap::new();
+        let mut next_batch: u64 = 0;
 
         while next < pending.len() || !queue.is_empty() {
             // Engines executing in real time advance the clock on their
@@ -268,7 +291,7 @@ impl<E: Engine> Scheduler<E> {
                 self.harvest(&mut in_flight, &mut report, true, clock0)?;
                 continue;
             }
-            // Modeled pipeline entry gate: the previous request must have
+            // Modeled pipeline entry gate: the previous batch must have
             // cleared layer 0 before a new one may enter.
             if t + 1e-12 < last_stage_gate {
                 t = last_stage_gate;
@@ -283,51 +306,110 @@ impl<E: Engine> Scheduler<E> {
                 }
             }
 
-            let i = self.cfg.policy.pick(&queue);
-            let q = queue.remove(i);
-            // Admission already filtered unservable requests.
-            let bucket = caps.bucket_for(q.seq_len).expect("admitted request has a bucket");
+            // Continuous batching: the policy's pick leads the batch;
+            // further queued requests sharing its minimal bucket join (in
+            // policy order) until the batch cap or the pipeline window is
+            // exhausted. Window headroom counts both native in-flight
+            // submissions and modeled requests still on the timeline.
+            let modeled_in_flight =
+                finishes.len() - finishes.partition_point(|&f| f <= t + 1e-12);
+            let headroom = depth.saturating_sub(in_flight.len() + modeled_in_flight).max(1);
+            let batch_cap = max_batch.min(headroom);
 
-            let submitted = self.engine.submit(&InferRequest::new(q.id, q.seq_len, bucket))?;
-            let outcome = match submitted {
-                Submitted::InFlight => {
-                    // The engine pipelines natively; its completion
-                    // arrives with measured instants via harvest.
-                    in_flight.insert(q.id, (q, bucket));
+            let i = self.cfg.policy.pick(&queue);
+            let leader = queue.remove(i);
+            // Admission already filtered unservable requests.
+            let bucket = caps.bucket_for(leader.seq_len).expect("admitted request has a bucket");
+            let mut batch = vec![leader];
+            if batch_cap > 1 {
+                // One scan builds the bucket-compatible pool; picks then
+                // shrink it in policy order without rescanning the queue.
+                let mut mates: Vec<usize> = (0..queue.len())
+                    .filter(|&j| caps.bucket_for(queue[j].seq_len) == Some(bucket))
+                    .collect();
+                let mut pool: Vec<Queued> = mates.iter().map(|&j| queue[j]).collect();
+                let mut chosen: Vec<usize> = Vec::new();
+                while batch.len() < batch_cap && !pool.is_empty() {
+                    let k = self.cfg.policy.pick(&pool);
+                    batch.push(pool.remove(k));
+                    chosen.push(mates.remove(k));
+                }
+                // Queue indices stayed valid throughout; drop the taken
+                // slots highest-first so earlier ones don't shift.
+                chosen.sort_unstable();
+                for j in chosen.into_iter().rev() {
+                    queue.remove(j);
+                }
+            }
+            let batch_id = next_batch;
+            next_batch += 1;
+
+            let reqs: Vec<InferRequest> =
+                batch.iter().map(|q| InferRequest::new(q.id, q.seq_len, bucket)).collect();
+            let outcomes = match self.engine.submit_batch(&reqs)? {
+                SubmittedBatch::InFlight => {
+                    // The engine pipelines natively: the per-layer
+                    // dispatcher interleaves the members in lockstep and
+                    // completions arrive with measured instants via
+                    // harvest.
+                    for q in batch {
+                        in_flight.insert(q.id, (q, bucket, batch_id));
+                    }
                     continue;
                 }
-                Submitted::Completed(outcome) => outcome,
+                SubmittedBatch::Completed(outcomes) => outcomes,
             };
-            let start = t.max(q.arrival_s);
+            if outcomes.len() != batch.len() {
+                return Err(GalaxyError::Fabric(format!(
+                    "engine returned {} outcomes for a batch of {}",
+                    outcomes.len(),
+                    batch.len()
+                )));
+            }
+            let mut by_id: HashMap<u64, InferOutcome> =
+                outcomes.into_iter().map(|o| (o.id, o)).collect();
+            // The batch enters the pipeline together: one start instant,
+            // one lockstep exit. Batched engines report every member's
+            // service as the batch span; a single-member batch reduces
+            // exactly to the old per-request placement.
+            let start = batch.iter().map(|q| q.arrival_s).fold(t, f64::max);
+            let span = by_id.values().map(|o| o.service_s).fold(0.0, f64::max);
             // Pipeline stage gap. Two lower bounds: (a) layer granularity
             // — the successor enters layer 0 one stage later at best; and
             // (b) compute occupancy — under tensor parallelism every
             // device works on every layer, so overlapped requests only
             // fill communication bubbles: the devices are busy for
-            // `compute_s` per request no matter how deep the pipeline,
+            // `compute_s` per member no matter how deep the pipeline,
             // which caps sustained throughput at 1/compute_s.
-            let stage_s = outcome.compute_s.max(outcome.service_s / stages as f64);
-            // Exit: own service, but never overtaking the predecessor —
-            // at best one stage behind it.
-            let mut finish = start + outcome.service_s;
+            let batch_compute: f64 = by_id.values().map(|o| o.compute_s).sum();
+            let stage_s = batch_compute.max(span / stages as f64);
+            // Exit: own span, but never overtaking the predecessor — at
+            // best one stage behind it.
+            let mut finish = start + span;
             if let Some(&prev) = finishes.last() {
                 finish = finish.max(prev + stage_s);
             }
-            finishes.push(finish);
             last_stage_gate = start + stage_s;
             t = start;
 
-            report.completions.push(Completion {
-                id: q.id,
-                seq_len: q.seq_len,
-                bucket,
-                arrival_s: q.arrival_s,
-                start_s: start,
-                finish_s: finish,
-                queueing_s: start - q.arrival_s,
-                service_s: outcome.service_s,
-                outcome,
-            });
+            for q in batch {
+                let outcome = by_id.remove(&q.id).ok_or_else(|| {
+                    GalaxyError::Fabric(format!("engine returned no outcome for request {}", q.id))
+                })?;
+                finishes.push(finish);
+                report.completions.push(Completion {
+                    id: q.id,
+                    seq_len: q.seq_len,
+                    bucket,
+                    batch: batch_id,
+                    arrival_s: q.arrival_s,
+                    start_s: start,
+                    finish_s: finish,
+                    queueing_s: start - q.arrival_s,
+                    service_s: outcome.service_s,
+                    outcome,
+                });
+            }
         }
         // Drain the native pipeline.
         while !in_flight.is_empty() {
@@ -346,7 +428,7 @@ impl<E: Engine> Scheduler<E> {
     /// reports no instants). Returns whether a completion was folded in.
     fn harvest(
         &mut self,
-        in_flight: &mut HashMap<u64, (Queued, usize)>,
+        in_flight: &mut HashMap<u64, (Queued, usize, u64)>,
         report: &mut SchedReport,
         wait: bool,
         clock0: f64,
@@ -362,7 +444,7 @@ impl<E: Engine> Scheduler<E> {
             }
             return Ok(false);
         };
-        let (q, bucket) = in_flight.remove(&outcome.id).ok_or_else(|| {
+        let (q, bucket, batch) = in_flight.remove(&outcome.id).ok_or_else(|| {
             GalaxyError::Fabric(format!("engine completed unknown request {}", outcome.id))
         })?;
         let (start, finish) = match outcome.measured_span_s {
@@ -380,6 +462,7 @@ impl<E: Engine> Scheduler<E> {
             id: q.id,
             seq_len: q.seq_len,
             bucket,
+            batch,
             arrival_s: q.arrival_s,
             start_s: start,
             finish_s: finish,
@@ -420,15 +503,20 @@ fn build_metrics(report: &SchedReport) -> ServeMetrics {
     };
     let mut first_arrival = f64::INFINITY;
     let mut last_finish = 0.0f64;
+    let mut batch_ids: HashSet<u64> = HashSet::new();
     for c in &report.completions {
         m.queueing.record(c.queueing_s);
         m.service.record(c.service_s);
         m.e2e.record(c.finish_s - c.arrival_s);
         m.exposed_comm_s += c.outcome.exposed_comm_s;
         m.hidden_comm_s += c.outcome.hidden_comm_s;
+        m.padded_tokens += c.bucket as u64;
+        m.valid_tokens += c.seq_len as u64;
+        batch_ids.insert(c.batch);
         first_arrival = first_arrival.min(c.arrival_s);
         last_finish = last_finish.max(c.finish_s);
     }
+    m.batches = batch_ids.len();
     if !report.completions.is_empty() {
         m.wall_span_s = last_finish - first_arrival;
     }
@@ -438,7 +526,7 @@ fn build_metrics(report: &SchedReport) -> ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{EngineCaps, InferOutcome};
+    use crate::engine::{BucketLadder, EngineCaps, InferOutcome};
     use crate::parallel::OverlapMode;
     use crate::workload::Request;
 
@@ -461,10 +549,11 @@ mod tests {
             EngineCaps {
                 name: "mock",
                 devices: 2,
-                seq_buckets: vec![64, 128, 256],
+                ladder: BucketLadder::from_lens(&[64, 128, 256]),
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
                 link_slots: 1,
+                max_batch: 1,
             }
         }
 
@@ -621,9 +710,9 @@ mod tests {
     #[test]
     fn edf_honors_explicit_deadlines() {
         let trace = vec![
-            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 9.0 },
-            Queued { id: 1, seq_len: 64, arrival_s: 0.0, deadline_s: 0.1 },
-            Queued { id: 2, seq_len: 64, arrival_s: 0.0, deadline_s: 1.0 },
+            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 9.0, arrival_idx: 0 },
+            Queued { id: 1, seq_len: 64, arrival_s: 0.0, deadline_s: 0.1, arrival_idx: 0 },
+            Queued { id: 2, seq_len: 64, arrival_s: 0.0, deadline_s: 1.0, arrival_idx: 0 },
         ];
         let cfg = SchedulerConfig {
             policy: Policy::EarliestDeadline,
@@ -696,10 +785,11 @@ mod tests {
             EngineCaps {
                 name: "mock-async",
                 devices: 2,
-                seq_buckets: vec![64, 128, 256],
+                ladder: BucketLadder::from_lens(&[64, 128, 256]),
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
                 link_slots: 2,
+                max_batch: 1,
             }
         }
 
@@ -774,10 +864,16 @@ mod tests {
         // sort's `partial_cmp().unwrap()`; negative ones predate the
         // trace clock. Both are admission rejections now.
         let trace = vec![
-            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 10.0 },
-            Queued { id: 1, seq_len: 64, arrival_s: f64::NAN, deadline_s: 10.0 },
-            Queued { id: 2, seq_len: 64, arrival_s: -3.0, deadline_s: 10.0 },
-            Queued { id: 3, seq_len: 64, arrival_s: f64::INFINITY, deadline_s: 10.0 },
+            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 10.0, arrival_idx: 0 },
+            Queued { id: 1, seq_len: 64, arrival_s: f64::NAN, deadline_s: 10.0, arrival_idx: 0 },
+            Queued { id: 2, seq_len: 64, arrival_s: -3.0, deadline_s: 10.0, arrival_idx: 0 },
+            Queued {
+                id: 3,
+                seq_len: 64,
+                arrival_s: f64::INFINITY,
+                deadline_s: 10.0,
+                arrival_idx: 0,
+            },
         ];
         let rep = Scheduler::new(MockEngine::new(4)).run_trace(&trace).unwrap();
         assert_eq!(rep.served(), 1);
@@ -790,7 +886,13 @@ mod tests {
         }
         // An entirely malformed trace terminates cleanly too.
         let rep = Scheduler::new(MockEngine::new(4))
-            .run_trace(&[Queued { id: 9, seq_len: 64, arrival_s: f64::NAN, deadline_s: 1.0 }])
+            .run_trace(&[Queued {
+                id: 9,
+                seq_len: 64,
+                arrival_s: f64::NAN,
+                deadline_s: 1.0,
+                arrival_idx: 0,
+            }])
             .unwrap();
         assert_eq!(rep.served(), 0);
         assert_eq!(rep.rejections.len(), 1);
@@ -809,5 +911,179 @@ mod tests {
         let c1 = &rep.completions[1];
         assert!(c1.start_s < c0.finish_s, "should overlap");
         assert!(c1.finish_s > c0.finish_s, "must not overtake");
+    }
+
+    /// Mock of a batch-capable lockstep engine: every batch member's
+    /// service is the batch span (leader's full service plus each
+    /// follower's compute), like the simulator's batched path. Records
+    /// the batches it was driven with.
+    struct BatchMock {
+        depth: usize,
+        max_batch: usize,
+        per_token_s: f64,
+        batches: Vec<Vec<InferRequest>>,
+    }
+
+    impl BatchMock {
+        fn new(depth: usize, max_batch: usize) -> Self {
+            Self { depth, max_batch, per_token_s: 1e-3, batches: Vec::new() }
+        }
+
+        fn single(&self, req: &InferRequest) -> InferOutcome {
+            let service_s = req.bucket as f64 * self.per_token_s;
+            InferOutcome {
+                id: req.id,
+                service_s,
+                compute_s: service_s / 4.0,
+                hidden_comm_s: service_s / 2.0,
+                exposed_comm_s: service_s / 4.0,
+                sync_points: 48,
+                ring_bytes: (req.bucket * 1024) as u64,
+                ..Default::default()
+            }
+        }
+    }
+
+    impl Engine for BatchMock {
+        fn caps(&self) -> EngineCaps {
+            EngineCaps {
+                name: "mock-batch",
+                devices: 2,
+                ladder: BucketLadder::from_lens(&[64, 128, 256]),
+                overlap: OverlapMode::Tiled,
+                pipeline_depth: self.depth,
+                link_slots: 2,
+                max_batch: self.max_batch,
+            }
+        }
+
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+            self.batches.push(vec![*req]);
+            Ok(self.single(req))
+        }
+
+        fn infer_batch(&mut self, reqs: &[InferRequest]) -> Result<Vec<InferOutcome>> {
+            assert!(reqs.iter().all(|r| r.bucket == reqs[0].bucket), "bucket-compatible only");
+            self.batches.push(reqs.to_vec());
+            let singles: Vec<InferOutcome> = reqs.iter().map(|r| self.single(r)).collect();
+            let span = singles[0].service_s
+                + singles[1..].iter().map(|o| o.compute_s).sum::<f64>();
+            Ok(singles
+                .into_iter()
+                .map(|mut o| {
+                    o.service_s = span;
+                    o
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn batches_group_bucket_compatible_requests() {
+        // A burst mixing two buckets: batches must never mix buckets, and
+        // same-bucket requests group up to max_batch.
+        let reqs = burst(&[60, 60, 60, 100, 100, 60]);
+        let mut s = Scheduler::new(BatchMock::new(12, 3));
+        let rep = s.run(&reqs).unwrap();
+        assert_eq!(rep.served(), 6);
+        for b in &s.engine().batches {
+            assert!(b.iter().all(|r| r.bucket == b[0].bucket), "mixed-bucket batch");
+            assert!(b.len() <= 3);
+        }
+        // FIFO leader 0 (bucket 64) pulls mates 1 and 2 up to the cap of
+        // 3 (5 waits); leader 3 (bucket 128) pulls 4; 5 goes alone.
+        let sizes: Vec<usize> = s.engine().batches.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![3, 2, 1]);
+        assert_eq!(rep.metrics.batches, 3);
+        assert!((rep.metrics.batch_occupancy() - 2.0).abs() < 1e-12);
+        // Batch members share start/finish instants and a batch id.
+        let c: Vec<&Completion> =
+            rep.completions.iter().filter(|c| c.batch == 0).collect();
+        assert_eq!(c.len(), 3);
+        assert!(c.windows(2).all(|w| w[0].start_s == w[1].start_s));
+        assert!(c.windows(2).all(|w| w[0].finish_s == w[1].finish_s));
+    }
+
+    #[test]
+    fn padded_waste_is_sum_of_bucket_minus_len() {
+        let reqs = burst(&[10, 64, 65, 200, 300]);
+        let rep = Scheduler::new(BatchMock::new(12, 3)).run(&reqs).unwrap();
+        let want: u64 =
+            rep.completions.iter().map(|c| (c.bucket - c.seq_len) as u64).sum();
+        assert_eq!(rep.metrics.waste_tokens(), want);
+        assert_eq!(rep.metrics.valid_tokens, 10 + 64 + 65 + 200 + 300);
+        assert_eq!(rep.metrics.padded_tokens, 64 + 64 + 128 + 256 + 256);
+        assert!(rep.metrics.padding_waste_frac() > 0.0);
+    }
+
+    #[test]
+    fn batching_never_slows_the_trace() {
+        let reqs = burst(&[64; 9]);
+        let unbatched = Scheduler::new(BatchMock::new(12, 1)).run(&reqs).unwrap();
+        let batched = Scheduler::new(BatchMock::new(12, 3)).run(&reqs).unwrap();
+        assert_eq!(batched.served(), unbatched.served());
+        assert!(unbatched.metrics.batches == 9);
+        assert!(batched.metrics.batches <= 3);
+        assert!(
+            batched.metrics.wall_span_s <= unbatched.metrics.wall_span_s + 1e-12,
+            "batched {} > unbatched {}",
+            batched.metrics.wall_span_s,
+            unbatched.metrics.wall_span_s
+        );
+        // Work is conserved: same ring bytes either way.
+        assert_eq!(batched.ring_bytes(), unbatched.ring_bytes());
+    }
+
+    #[test]
+    fn batch_respects_pipeline_window() {
+        // max_in_flight 2 with a batch cap of 4: no batch may exceed the
+        // window headroom.
+        let reqs = burst(&[64; 8]);
+        let cfg = SchedulerConfig { max_in_flight: 2, ..Default::default() };
+        let mut s = Scheduler::with_config(BatchMock::new(12, 4), cfg);
+        let rep = s.run(&reqs).unwrap();
+        assert_eq!(rep.served(), 8);
+        assert!(rep.peak_in_flight <= 2, "peak {}", rep.peak_in_flight);
+        assert!(s.engine().batches.iter().all(|b| b.len() <= 2));
+    }
+
+    #[test]
+    fn later_arrivals_join_later_batches() {
+        // Continuous batching: a request arriving after the first batch
+        // dispatched must not time-travel into it.
+        let reqs = vec![
+            Request { id: 0, seq_len: 64, arrival_s: 0.0 },
+            Request { id: 1, seq_len: 64, arrival_s: 0.0 },
+            Request { id: 2, seq_len: 64, arrival_s: 5.0 },
+        ];
+        let rep = Scheduler::new(BatchMock::new(12, 4)).run(&reqs).unwrap();
+        let by_id = |id: u64| rep.completions.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(0).batch, by_id(1).batch);
+        assert_ne!(by_id(0).batch, by_id(2).batch);
+        assert!(by_id(2).start_s >= 5.0);
+    }
+
+    #[test]
+    fn fifo_ties_dispatch_in_arrival_order_under_batching() {
+        // Regression (tie-break bugfix): batching makes ties common — a
+        // burst of identical requests with shuffled, duplicate ids must
+        // dispatch in admission (arrival-index) order, deterministically.
+        let trace: Vec<Queued> = [(3u64, 0.0), (3, 0.0), (1, 0.0), (9, 1e-9)]
+            .iter()
+            .map(|&(id, arrival_s)| Queued {
+                id,
+                seq_len: 64,
+                arrival_s,
+                deadline_s: 10.0,
+                arrival_idx: 0,
+            })
+            .collect();
+        let rep1 = Scheduler::new(BatchMock::new(12, 2)).run_trace(&trace).unwrap();
+        let rep2 = Scheduler::new(BatchMock::new(12, 2)).run_trace(&trace).unwrap();
+        let order1: Vec<u64> = rep1.completions.iter().map(|c| c.id).collect();
+        let order2: Vec<u64> = rep2.completions.iter().map(|c| c.id).collect();
+        assert_eq!(order1, order2, "tie-breaking must be deterministic");
+        // Admission sorts by (arrival, id) stably: 1, 3, 3, then 9.
+        assert_eq!(order1, vec![1, 3, 3, 9]);
     }
 }

@@ -73,6 +73,28 @@ impl SimReport {
     }
 }
 
+/// Modeled straggler cost of one HMP layer at one artifact bucket — the
+/// per-bucket cost estimate the [`crate::engine::BucketLadder`] carries,
+/// derived from the closed-form timeline (total over layers ÷ layers).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerCost {
+    /// Padded sequence length the cost was evaluated at.
+    pub seq_len: usize,
+    /// Straggler compute seconds per layer.
+    pub compute_s: f64,
+    /// Exposed wire seconds per layer.
+    pub exposed_comm_s: f64,
+    /// Hidden wire seconds per layer.
+    pub hidden_comm_s: f64,
+}
+
+impl LayerCost {
+    /// Critical-path seconds per layer (compute + exposed comm).
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.exposed_comm_s
+    }
+}
+
 /// Simulated HMP execution engine (the paper's Galaxy runtime on the
 /// modeled testbed).
 pub struct SimEngine<'a> {
@@ -82,6 +104,7 @@ pub struct SimEngine<'a> {
     net: NetParams,
     overlap: OverlapMode,
     buckets: Vec<usize>,
+    max_batch: usize,
 }
 
 impl<'a> SimEngine<'a> {
@@ -93,6 +116,7 @@ impl<'a> SimEngine<'a> {
             net,
             overlap: OverlapMode::Tiled,
             buckets: crate::engine::DEFAULT_SEQ_BUCKETS.to_vec(),
+            max_batch: 1,
         }
     }
 
@@ -111,8 +135,32 @@ impl<'a> SimEngine<'a> {
         self
     }
 
+    /// Allow the scheduler to group up to `n` bucket-compatible requests
+    /// into one batch entering the layer pipeline together (clamped ≥ 1;
+    /// default 1 = no batching).
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
     pub fn buckets(&self) -> &[usize] {
         &self.buckets
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Modeled per-layer straggler cost at one bucket.
+    pub fn layer_cost(&self, bucket: usize) -> LayerCost {
+        let rep = self.run_inference(bucket);
+        let layers = self.model.layers.max(1) as f64;
+        LayerCost {
+            seq_len: bucket,
+            compute_s: rep.compute_s / layers,
+            exposed_comm_s: rep.exposed_comm_s / layers,
+            hidden_comm_s: rep.hidden_comm_s / layers,
+        }
     }
 
     pub fn overlap(&self) -> OverlapMode {
@@ -403,6 +451,21 @@ mod tests {
         let m = ModelConfig::bert_large();
         let rep = run(&m, &EdgeEnv::preset_a(), 284, 125.0, OverlapMode::Tiled);
         assert_eq!(rep.sync_points, 4 * m.layers);
+    }
+
+    #[test]
+    fn layer_cost_is_total_over_layers() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let eng = SimEngine::new(&m, &env, p, NetParams::mbps(125.0));
+        let rep = eng.run_inference(284);
+        let lc = eng.layer_cost(284);
+        assert_eq!(lc.seq_len, 284);
+        assert!((lc.total_s() * m.layers as f64 - rep.total_s()).abs() < 1e-9);
+        assert!((lc.hidden_comm_s * m.layers as f64 - rep.hidden_comm_s).abs() < 1e-9);
+        // Per-layer cost is monotone in the bucket, like the timeline.
+        assert!(eng.layer_cost(128).total_s() < eng.layer_cost(512).total_s());
     }
 
     #[test]

@@ -21,5 +21,5 @@ pub mod engine;
 pub mod net;
 
 pub use device::{DeviceClass, DeviceSpec, EdgeEnv};
-pub use engine::{SimEngine, SimReport};
+pub use engine::{LayerCost, SimEngine, SimReport};
 pub use net::{LinkModel, NetParams, RingStepTimer};

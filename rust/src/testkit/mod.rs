@@ -14,6 +14,13 @@
 //!   (drop-after-N-tiles, delayed delivery) for asserting that a
 //!   mid-layer link failure poisons the cluster with a `Fabric` error
 //!   instead of deadlocking both ring neighbors.
+//! * [`TraceGen`] — seeded workload/trace generation (arrival processes,
+//!   sequence-length mixtures, deadline mixes) so scheduler tests stop
+//!   hand-rolling request vectors.
+
+pub mod trace;
+
+pub use trace::{Arrival, TraceGen};
 
 use std::collections::VecDeque;
 use std::time::Duration;

@@ -1,0 +1,186 @@
+//! Cross-engine parity on the multi-bucket path — artifact-free.
+//!
+//! Sync-point counts and ring-byte totals are *schedule properties*: for
+//! the same plan and the same bucket they must not depend on which
+//! engine executes the request, nor on how requests interleave. The real
+//! PJRT fabric is artifact-gated, so this suite drives the pure
+//! [`Dispatcher`] exactly as the leader does and replays the broadcast
+//! command stream through a mock worker that applies the real workers'
+//! accounting rules (4 ring phases per layer, `(d-1) · Σtiles · hidden`
+//! fp32 elements per phase, per-bucket tile geometry) — then asserts the
+//! per-request counts agree with [`SimEngine`] for **every bucket in the
+//! ladder** and every device count.
+
+use std::collections::HashMap;
+
+use galaxy::cluster::protocol::{Cmd, Dispatcher};
+use galaxy::cluster::BucketGeom;
+use galaxy::engine::{Engine, InferRequest};
+use galaxy::model::ModelConfig;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
+
+const LADDER: [usize; 3] = [128, 256, 512];
+
+/// Per-request schedule-property counters, as one worker accumulates
+/// them: every `Layer` command walks 2 AllGather and 2 ReduceScatter
+/// phases; each phase moves `(d-1) · Σtiles · hidden` fp32 elements
+/// cluster-wide and is one synchronization point (none on one device).
+#[derive(Default, Clone, Copy, Debug, PartialEq, Eq)]
+struct Counters {
+    sync_points: u64,
+    ring_bytes: u64,
+    layers: usize,
+}
+
+/// Dispatcher-driven mock cluster: executes the broadcast command stream
+/// with the workers' accounting rules and per-bucket geometry.
+struct MockCluster {
+    d: usize,
+    hidden: usize,
+    geoms: Vec<BucketGeom>,
+    states: HashMap<u64, (usize, Counters)>,
+    finished: HashMap<u64, (usize, Counters)>,
+}
+
+impl MockCluster {
+    fn new(d: usize, hidden: usize) -> Self {
+        let geoms = LADDER.iter().map(|&b| BucketGeom::equal(b, d)).collect();
+        Self { d, hidden, geoms, states: HashMap::new(), finished: HashMap::new() }
+    }
+
+    fn exec(&mut self, cmds: &[Cmd]) {
+        for cmd in cmds {
+            match *cmd {
+                Cmd::Begin { req, bucket } => {
+                    assert!(
+                        self.states.insert(req, (bucket, Counters::default())).is_none(),
+                        "duplicate Begin for request {req}"
+                    );
+                }
+                Cmd::Layer { req, .. } => {
+                    let (bucket, c) = self.states.get_mut(&req).expect("Layer before Begin");
+                    let geom = &self.geoms[*bucket];
+                    let tile_elems: usize =
+                        geom.tiles.iter().map(|&t| t * self.hidden).sum();
+                    let phase_bytes = (self.d - 1) as u64
+                        * (tile_elems * galaxy::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+                    c.ring_bytes += 4 * phase_bytes;
+                    if self.d > 1 {
+                        c.sync_points += 4;
+                    }
+                    c.layers += 1;
+                }
+                Cmd::Finish { req } => {
+                    let st = self.states.remove(&req).expect("Finish before Begin");
+                    self.finished.insert(req, st);
+                }
+            }
+        }
+    }
+}
+
+fn env(d: usize) -> EdgeEnv {
+    // Generous budgets: parity is about schedule properties, not memory
+    // feasibility (a single Nano cannot actually hold Bert-L).
+    EdgeEnv {
+        name: "parity".into(),
+        devices: (0..d)
+            .map(|i| galaxy::sim::DeviceSpec::with_budget(i, DeviceClass::NanoM, 1e9))
+            .collect(),
+    }
+}
+
+fn sim_engine<'a>(model: &'a ModelConfig, env: &'a EdgeEnv) -> SimEngine<'a> {
+    let profile = Profiler::analytic(model, env, *LADDER.last().unwrap()).profile();
+    let plan = Planner::new(model, env, &profile).plan().unwrap();
+    SimEngine::new(model, env, plan, NetParams::paper_default())
+        .with_buckets(LADDER.to_vec())
+}
+
+#[test]
+fn parity_mock_cluster_matches_sim_for_every_bucket() {
+    let model = ModelConfig::bert_large();
+    for d in [1usize, 2, 3, 4] {
+        let env = env(d);
+        let mut sim = sim_engine(&model, &env);
+
+        // Interleave one request per bucket through one dispatcher, the
+        // way the leader's continuous batching submits them.
+        let mut mock = MockCluster::new(d, model.hidden);
+        let mut dispatcher = Dispatcher::new(model.layers, 2);
+        for (bucket_id, _) in LADDER.iter().enumerate() {
+            let cmds = dispatcher.submit(bucket_id as u64, bucket_id);
+            mock.exec(&cmds);
+        }
+        while dispatcher.outstanding() > 0 {
+            let cmds = dispatcher.ack();
+            mock.exec(&cmds);
+        }
+
+        for (bucket_id, &bucket) in LADDER.iter().enumerate() {
+            let modeled = {
+                let engine: &mut dyn Engine = &mut sim;
+                engine.infer(&InferRequest::new(99, bucket, bucket)).unwrap()
+            };
+            let (got_bucket, c) = mock.finished[&(bucket_id as u64)];
+            assert_eq!(got_bucket, bucket_id, "Begin must carry the bucket id");
+            assert_eq!(c.layers, model.layers, "one Layer command per HMP layer");
+            assert_eq!(
+                c.sync_points, modeled.sync_points,
+                "d={d} bucket={bucket}: sync points diverged"
+            );
+            assert_eq!(
+                c.ring_bytes, modeled.ring_bytes,
+                "d={d} bucket={bucket}: ring bytes diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn parity_interleaving_does_not_mix_bucket_accounting() {
+    // Two requests on different buckets interleaving layer-wise must
+    // each keep their own bucket's counts — per-request attribution is
+    // what the worker's ReqState deltas guarantee on the real path.
+    let model = ModelConfig::bert_large();
+    let d = 3;
+    let env = env(d);
+    let mut sim = sim_engine(&model, &env);
+
+    let mut mock = MockCluster::new(d, model.hidden);
+    let mut dispatcher = Dispatcher::new(model.layers, 1);
+    // Tight window forces maximal interleaving of the two streams.
+    mock.exec(&dispatcher.submit(0, 0));
+    mock.exec(&dispatcher.submit(1, 2));
+    while dispatcher.outstanding() > 0 {
+        let cmds = dispatcher.ack();
+        mock.exec(&cmds);
+    }
+
+    for (req, bucket_id) in [(0u64, 0usize), (1, 2)] {
+        let bucket = LADDER[bucket_id];
+        let modeled = {
+            let engine: &mut dyn Engine = &mut sim;
+            engine.infer(&InferRequest::new(7, bucket, bucket)).unwrap()
+        };
+        let (_, c) = mock.finished[&req];
+        assert_eq!(c.sync_points, modeled.sync_points, "req {req}");
+        assert_eq!(c.ring_bytes, modeled.ring_bytes, "req {req}");
+    }
+}
+
+#[test]
+fn parity_ladder_ring_bytes_scale_with_bucket() {
+    // Sanity on the ladder itself: wire volume is linear in the padded
+    // length, so the 128-bucket moves a quarter of the 512-bucket bytes.
+    let model = ModelConfig::bert_large();
+    let env = env(3);
+    let mut sim = sim_engine(&model, &env);
+    let engine: &mut dyn Engine = &mut sim;
+    let small = engine.infer(&InferRequest::new(0, 128, 128)).unwrap();
+    let large = engine.infer(&InferRequest::new(0, 512, 512)).unwrap();
+    assert_eq!(small.ring_bytes * 4, large.ring_bytes);
+    assert_eq!(small.sync_points, large.sync_points, "syncs are per layer, not per token");
+}

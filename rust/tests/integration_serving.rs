@@ -1,8 +1,9 @@
 //! Serving-path integration: the request scheduler over a live PJRT
-//! cluster — padding/masking, bucketing, workload batches, metrics, and
-//! the profiler-planner-cluster composition the `galaxy serve` command
-//! uses, all through the unified `Engine` trait. Every test that needs a
-//! live cluster is gated on the AOT artifacts being built.
+//! cluster — padding/masking, bucketing over the artifact ladder,
+//! `testkit::TraceGen` workloads, metrics, and the
+//! profiler-planner-cluster composition the `galaxy serve` command uses,
+//! all through the unified `Engine` trait. Every test that needs a live
+//! cluster is gated on the AOT artifacts being built.
 
 mod common;
 
@@ -18,15 +19,16 @@ use galaxy::profiler::Profiler;
 use galaxy::serving::{pad_and_mask, Scheduler, SchedulerConfig};
 use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
 use galaxy::tensor::Tensor2;
-use galaxy::workload::{fixed_length, QnliWorkload, Request};
+use galaxy::testkit::TraceGen;
+use galaxy::workload::Request;
 
 const SEED: u64 = 99;
 
 /// `n` requests of `seq_len` tokens all arriving at t=0 — the real
-/// cluster executes in wall time, so pipelining tests want a burst, not
-/// `fixed_length`'s 1 s arrival gaps.
+/// cluster executes in wall time, so pipelining tests want a burst
+/// (`TraceGen` defaults to burst arrivals).
 fn burst(n: usize, seq_len: usize) -> Vec<Request> {
-    (0..n as u64).map(|id| Request { id, seq_len, arrival_s: 0.0 }).collect()
+    TraceGen::new(SEED).fixed_len(seq_len).requests(n)
 }
 
 fn spawn(d: usize, overlap: OverlapMode) -> (ModelConfig, Plan, EdgeEnv, RealCluster) {
@@ -46,22 +48,22 @@ fn serve_mixed_length_workload() {
     }
     let (model, _, _, cluster) = spawn(2, OverlapMode::Tiled);
     let seq = cluster.seq_len();
+    let caps = Engine::caps(&cluster);
     let mut scheduler = Scheduler::new(cluster);
-    let reqs = QnliWorkload {
-        mean_len: 40,
-        std_len: 12.0,
-        min_len: 8,
-        max_len: seq,
-        mean_gap_s: 0.0,
-    }
-    .generate(6, SEED);
+    let reqs = TraceGen::new(SEED).lengths(&[(1.0, 8, seq)]).requests(6);
     let report = scheduler.run(&reqs).unwrap();
     assert_eq!(report.served(), 6);
     assert!(report.rejections.is_empty());
-    // Burst arrivals + FIFO tie-break by id → completions in request order.
-    for (req, c) in reqs.iter().zip(report.completions.iter()) {
-        assert_eq!(c.id, req.id);
-        assert_eq!(c.bucket, seq, "single-bucket artifacts pad to seq_len");
+    // Continuous batching groups bucket-compatible requests, so match
+    // completions by id (dispatch order follows buckets, not ids).
+    for req in &reqs {
+        let c = report.completions.iter().find(|c| c.id == req.id).expect("served");
+        assert_eq!(c.seq_len, req.seq_len);
+        assert_eq!(
+            Some(c.bucket),
+            caps.bucket_for(c.seq_len),
+            "padded to the minimal admissible rung of the artifact ladder"
+        );
         let out = c.outcome.output.as_ref().expect("real engine output");
         assert_eq!(out.rows(), req.seq_len, "valid rows preserved");
         assert_eq!(out.cols(), model.hidden);
@@ -98,7 +100,7 @@ fn full_length_requests_unpadded() {
     let (_, _, _, cluster) = spawn(2, OverlapMode::None);
     let seq = cluster.seq_len();
     let mut scheduler = Scheduler::new(cluster);
-    let report = scheduler.run(&fixed_length(1, seq)).unwrap();
+    let report = scheduler.run(&burst(1, seq)).unwrap();
     let out = report.completions[0].outcome.output.as_ref().unwrap();
     assert_eq!(out.rows(), seq);
 }
@@ -110,7 +112,7 @@ fn throughput_report_accumulates() {
     }
     let (_, _, _, cluster) = spawn(2, OverlapMode::Tiled);
     let mut scheduler = Scheduler::new(cluster);
-    let report = scheduler.run(&fixed_length(4, 30)).unwrap();
+    let report = scheduler.run(&burst(4, 30)).unwrap();
     assert_eq!(report.served(), 4);
     assert!(report.pjrt_calls() > 0);
     assert!(report.ring_bytes() > 0);
@@ -205,23 +207,33 @@ fn cross_engine_sync_points_and_ring_bytes_agree() {
     for d in [1usize, 2, 3] {
         let (model, plan, env, mut cluster) = spawn(d, OverlapMode::Tiled);
         let seq = cluster.seq_len();
-        let real = {
-            let engine: &mut dyn Engine = &mut cluster;
-            engine.infer(&InferRequest::new(3, seq, seq)).unwrap()
-        };
-        let mut sim = SimEngine::new(&model, &env, plan, NetParams::paper_default());
+        let buckets = cluster.seq_buckets();
+        let mut sim = SimEngine::new(&model, &env, plan, NetParams::paper_default())
+            .with_buckets(buckets.clone());
+        // Parity must hold at every rung of the artifact ladder, not just
+        // the reference length.
+        for &bucket in &buckets {
+            let real = {
+                let engine: &mut dyn Engine = &mut cluster;
+                engine.infer(&InferRequest::new(3, bucket, bucket)).unwrap()
+            };
+            let modeled = {
+                let engine: &mut dyn Engine = &mut sim;
+                engine.infer(&InferRequest::new(3, bucket, bucket)).unwrap()
+            };
+            assert_eq!(
+                real.sync_points, modeled.sync_points,
+                "d={d} bucket={bucket}: sync points diverged"
+            );
+            assert_eq!(
+                real.ring_bytes, modeled.ring_bytes,
+                "d={d} bucket={bucket}: ring bytes diverged"
+            );
+        }
         let modeled = {
             let engine: &mut dyn Engine = &mut sim;
             engine.infer(&InferRequest::new(3, seq, seq)).unwrap()
         };
-        assert_eq!(
-            real.sync_points, modeled.sync_points,
-            "d={d}: sync points diverged"
-        );
-        assert_eq!(
-            real.ring_bytes, modeled.ring_bytes,
-            "d={d}: ring bytes diverged"
-        );
         // Parity must survive interleaved execution: pipeline a burst
         // through the same fabric and compare each request's counts with
         // the simulator's single-shot numbers for the same plan.
@@ -239,6 +251,50 @@ fn cross_engine_sync_points_and_ring_bytes_agree() {
                 c.id
             );
         }
+    }
+}
+
+#[test]
+fn multi_bucket_artifacts_serve_every_rung() {
+    // Multi-bucket manifests: every rung of the ladder must execute for
+    // real — correct valid-row outputs, finite numerics — and requests
+    // padded to different rungs must interleave through one fabric.
+    if !artifacts_built() {
+        return;
+    }
+    let (model, _, _, mut cluster) = spawn(2, OverlapMode::Tiled);
+    let buckets = cluster.seq_buckets();
+    for (k, &bucket) in buckets.iter().enumerate() {
+        let valid = bucket - 2;
+        let engine: &mut dyn Engine = &mut cluster;
+        let out = engine.infer(&InferRequest::new(k as u64, valid, bucket)).unwrap();
+        let h = out.output.as_ref().expect("real engine output");
+        assert_eq!(h.rows(), valid, "bucket {bucket}: valid rows preserved");
+        assert_eq!(h.cols(), model.hidden);
+        assert!(h.data().iter().all(|v| v.is_finite()), "bucket {bucket}");
+    }
+    // The solo single-shot inferences above feed the measured per-bucket
+    // layer cost the ladder advertises.
+    for &bucket in &buckets {
+        let cost = cluster.measured_layer_cost_s(bucket);
+        assert!(cost.unwrap_or(0.0) > 0.0, "bucket {bucket}: no measured layer cost");
+    }
+    if buckets.len() < 2 {
+        return; // single-bucket artifact set: nothing to interleave
+    }
+    // Interleave one request per rung through the scheduler; each must
+    // come back padded to its own (minimal admissible) rung.
+    let caps = Engine::caps(&cluster);
+    let reqs: Vec<Request> = buckets
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| Request { id: i as u64, seq_len: b - 1, arrival_s: 0.0 })
+        .collect();
+    let report = Scheduler::new(cluster).run(&reqs).unwrap();
+    assert_eq!(report.served(), reqs.len());
+    for c in &report.completions {
+        assert_eq!(Some(c.bucket), caps.bucket_for(c.seq_len));
+        assert!(c.outcome.output.is_some());
     }
 }
 

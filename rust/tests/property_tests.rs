@@ -7,7 +7,11 @@ use galaxy::collective::{
     reference, ring_all_gather, ring_all_gather_multi, ring_reduce_scatter,
     ring_reduce_scatter_multi,
 };
+use galaxy::engine::{BucketLadder, Engine, EngineCaps, InferOutcome, InferRequest};
+use galaxy::error::{GalaxyError, Result as GalaxyResult};
 use galaxy::model::{ModelConfig, ModelKind};
+use galaxy::serving::Scheduler;
+use galaxy::testkit::{Arrival, TraceGen};
 use galaxy::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::{equal_seq_partition, quantize_shares, Planner};
@@ -167,6 +171,170 @@ fn prop_equal_seq_partition_balanced() {
             let (mn, mx) = (p.iter().min().unwrap(), p.iter().max().unwrap());
             if mx - mn > 1 {
                 return Err(format!("spread {p:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Bucket ladder / padded-waste accounting (continuous batching)
+// ---------------------------------------------------------------------
+
+fn random_ladder(rng: &mut Pcg64) -> Vec<usize> {
+    let n = rng.range(1, 6) as usize;
+    let mut lens: Vec<usize> = (0..n).map(|_| rng.range(8, 512) as usize).collect();
+    lens.sort_unstable();
+    lens.dedup();
+    lens
+}
+
+#[test]
+fn prop_bucket_selection_minimal_admissible_and_monotone() {
+    forall(
+        "ladder: minimal admissible bucket, monotone in seq_len",
+        111,
+        300,
+        |rng| (random_ladder(rng), rng.range(1, 600) as usize),
+        |(lens, seq)| {
+            let ladder = BucketLadder::from_lens(lens);
+            match ladder.bucket_for(*seq) {
+                Some((id, spec)) => {
+                    if spec.seq_len < *seq {
+                        return Err(format!("bucket {} < seq {seq}", spec.seq_len));
+                    }
+                    // Minimal: every smaller rung must be inadmissible.
+                    if lens.iter().any(|&b| b < spec.seq_len && b >= *seq) {
+                        return Err(format!("{} not minimal for {seq}", spec.seq_len));
+                    }
+                    if ladder.get(id).map(|s| s.seq_len) != Some(spec.seq_len) {
+                        return Err("id/spec mismatch".into());
+                    }
+                    // Monotone: a longer request never gets a smaller
+                    // bucket (when it is admissible at all).
+                    if let Some((_, next)) = ladder.bucket_for(*seq + 1) {
+                        if next.seq_len < spec.seq_len {
+                            return Err(format!(
+                                "not monotone: {}@{seq} then {}@{}",
+                                spec.seq_len,
+                                next.seq_len,
+                                seq + 1
+                            ));
+                        }
+                    }
+                    // Waste is exactly bucket − seq_len.
+                    if ladder.waste(*seq) != Some(spec.seq_len - *seq) {
+                        return Err("waste != bucket - seq".into());
+                    }
+                    Ok(())
+                }
+                None => {
+                    if lens.iter().any(|&b| b >= *seq) {
+                        Err(format!("missed an admissible bucket for {seq}"))
+                    } else {
+                        Ok(())
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Minimal ladder-driven mock engine for scheduler-level properties.
+struct LadderMock {
+    lens: Vec<usize>,
+}
+
+impl Engine for LadderMock {
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            name: "ladder-mock",
+            devices: 2,
+            ladder: BucketLadder::from_lens(&self.lens),
+            overlap: OverlapMode::Tiled,
+            pipeline_depth: 8,
+            link_slots: 2,
+            max_batch: 1,
+        }
+    }
+
+    fn infer(&mut self, req: &InferRequest) -> GalaxyResult<InferOutcome> {
+        let service_s = req.bucket as f64 * 1e-4;
+        Ok(InferOutcome {
+            id: req.id,
+            service_s,
+            compute_s: service_s / 4.0,
+            ..Default::default()
+        })
+    }
+}
+
+#[test]
+fn prop_padded_waste_accounting_is_exact() {
+    forall(
+        "scheduler: waste == Σ(bucket − seq_len); oversize rejected",
+        112,
+        60,
+        |rng| {
+            let lens = random_ladder(rng);
+            let trace = TraceGen::new(rng.next_u64())
+                .arrivals(Arrival::Poisson { rate_rps: 50.0 })
+                .lengths(&[(0.7, 1, 300), (0.3, 200, 600)])
+                .requests(rng.range(5, 40) as usize);
+            (lens, trace)
+        },
+        |(lens, trace)| {
+            let ladder = BucketLadder::from_lens(lens);
+            let report = Scheduler::new(LadderMock { lens: lens.clone() })
+                .run(trace)
+                .map_err(|e| e.to_string())?;
+            if report.served() + report.rejections.len() != trace.len() {
+                return Err("served + rejected != trace".into());
+            }
+            let mut want_waste = 0u64;
+            for c in &report.completions {
+                let (_, spec) = ladder
+                    .bucket_for(c.seq_len)
+                    .ok_or_else(|| format!("served an oversize request {}", c.seq_len))?;
+                if c.bucket != spec.seq_len {
+                    return Err(format!(
+                        "request of {} padded to {} (minimal is {})",
+                        c.seq_len, c.bucket, spec.seq_len
+                    ));
+                }
+                want_waste += (c.bucket - c.seq_len) as u64;
+            }
+            if report.metrics.waste_tokens() != want_waste {
+                return Err(format!(
+                    "metrics waste {} != Σ(bucket − seq_len) {want_waste}",
+                    report.metrics.waste_tokens()
+                ));
+            }
+            // Every oversize request is rejected, none served.
+            for r in &report.rejections {
+                if ladder.bucket_for(r.seq_len).is_some() {
+                    return Err(format!("rejected servable request of {}", r.seq_len));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_oversize_for_every_bucket_stays_a_shape_error() {
+    forall(
+        "oversize: valid_len and engine batch stay Shape errors",
+        113,
+        200,
+        |rng| {
+            let bucket = rng.range(8, 256) as usize;
+            (bucket, bucket + rng.range(1, 64) as usize)
+        },
+        |&(bucket, seq)| {
+            let err = InferRequest::new(0, seq, bucket).valid_len().unwrap_err();
+            if !matches!(err, GalaxyError::Shape(_)) {
+                return Err(format!("valid_len: wrong error kind {err}"));
             }
             Ok(())
         },
