@@ -16,11 +16,11 @@
 use galaxy::metrics::{fmt_secs, Table};
 use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
-use galaxy::planner::Planner;
+use galaxy::planner::{Deployment, Planner, StrategyKind};
 use galaxy::profiler::Profiler;
-use galaxy::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
+use galaxy::serving::{GovernorConfig, PlanGovernor, Policy, SchedReport, Scheduler, SchedulerConfig};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
-use galaxy::workload::poisson_trace;
+use galaxy::workload::{fixed_length, poisson_trace};
 
 const N: usize = 48;
 const RATE_RPS: f64 = 2.0;
@@ -181,6 +181,65 @@ fn main() -> galaxy::Result<()> {
     assert!(
         fifo.metrics.throughput_rps() > serial.metrics.throughput_rps(),
         "pipelined FIFO did not beat the serial baseline"
+    );
+
+    // Measurement-driven replanning: the per-bucket deployment is the
+    // engines' single source of partition truth, and a PlanGovernor
+    // folds per-device busy telemetry back into the profile. Inject a
+    // 2x slowdown on device 1 and replay the trace with and without
+    // governance — the governor must replan and cut the tail.
+    let deployment =
+        Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[128, 256, 512])?;
+    println!("\nactive per-bucket deployment (generation {}):", deployment.generation());
+    for rung in deployment.rungs() {
+        println!(
+            "  bucket {:>3}: heads {:?}  mlp units {:?}  seq rows {:?}  pred layer {}",
+            rung.bucket,
+            rung.plan.partition.heads,
+            rung.plan.partition.mlp_units,
+            rung.plan.partition.seq,
+            fmt_secs(rung.plan.pred_layer_compute_s()),
+        );
+    }
+    // Fixed-length traces: every request pads to the 128 rung, so the
+    // p95 comparison isolates the replanning effect from the length
+    // mixture. The governor calibrates on a healthy phase; device 1
+    // then throttles to half speed mid-trace.
+    let healthy_trace = fixed_length(8, 100);
+    let drift_trace = fixed_length(N, 100);
+    let drifted = |governed: bool| -> galaxy::Result<SchedReport> {
+        let engine =
+            SimEngine::from_deployment(&model, &env, deployment.clone(), NetParams::mbps(MBPS))?;
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let mut sched = Scheduler::with_config(engine, cfg);
+        if governed {
+            sched = sched.with_governor(PlanGovernor::with_config(
+                deployment.clone(),
+                GovernorConfig { min_observations: 2, cooldown: 2, ..Default::default() },
+            ));
+        }
+        let warm = sched.run(&healthy_trace)?;
+        assert_eq!(warm.metrics.replans, 0, "no drift, no replan");
+        sched.engine_mut().set_device_slowdown(1, 2.0);
+        sched.run(&drift_trace)
+    };
+    let stat = drifted(false)?;
+    let gov = drifted(true)?;
+    println!(
+        "drift (device 1 at 2x): static p95 {} | governed p95 {} after {} replan(s)",
+        fmt_secs(stat.metrics.service.p95_s()),
+        fmt_secs(gov.metrics.service.p95_s()),
+        gov.metrics.replans,
+    );
+    assert!(
+        gov.metrics.replans >= 1,
+        "governor failed to replan under an injected 2x profile drift"
+    );
+    assert!(
+        gov.metrics.service.p95_s() < stat.metrics.service.p95_s(),
+        "governed p95 {} !< static p95 {}",
+        gov.metrics.service.p95_s(),
+        stat.metrics.service.p95_s()
     );
     Ok(())
 }

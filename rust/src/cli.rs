@@ -14,12 +14,12 @@ use crate::baselines::{self, BaselineKind};
 use crate::cluster::RealCluster;
 use crate::config::{default_artifacts_dir, Manifest, RunConfig};
 use crate::engine::sim::outcome_from_sim;
-use crate::engine::{Engine, InferRequest};
+use crate::engine::{Engine, InferRequest, DEFAULT_SEQ_BUCKETS};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::{fmt_secs, Table};
 use crate::model::ModelConfig;
 use crate::parallel::OverlapMode;
-use crate::planner::Planner;
+use crate::planner::{Deployment, Planner, StrategyKind};
 use crate::profiler::Profiler;
 use crate::serving::{Policy, Scheduler, SchedulerConfig};
 use crate::sim::{DeviceClass, EdgeEnv, SimEngine};
@@ -92,6 +92,7 @@ galaxy — collaborative edge Transformer inference (paper reproduction)
 
 USAGE:
   galaxy plan     --model <m> --env <A..F|GPU> [--seq N]
+                  [--strategy heuristic|exhaustive]
   galaxy simulate --model <m> --env <A..F|GPU> [--seq N] [--bandwidth MBPS]
                   [--strategy galaxy|mlm|sp|local] [--no-overlap]
   galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
@@ -131,11 +132,28 @@ fn parse_common(args: &Args) -> Result<(ModelConfig, EdgeEnv, RunConfig)> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    let (model, env, cfg) = parse_common(args)?;
+    let (model, env, mut cfg) = parse_common(args)?;
+    cfg.strategy = StrategyKind::parse(&args.get_or("strategy", "heuristic"))?;
     let profile = Profiler::analytic(&model, &env, cfg.seq).profile();
-    let plan = Planner::new(&model, &env, &profile).plan()?;
+    // Per-bucket deployment over the default ladder capped at the
+    // reference length (always including the reference itself).
+    let mut buckets: Vec<usize> =
+        DEFAULT_SEQ_BUCKETS.iter().copied().filter(|&b| b < cfg.seq).collect();
+    buckets.push(cfg.seq);
+    let deployment = Deployment::plan(cfg.strategy, &model, &env, &profile, &buckets)?;
+
+    let reference = deployment
+        .rung(cfg.seq)
+        .expect("deployment covers the reference length");
+    let plan = &reference.plan;
     let mut t = Table::new(
-        format!("Plan: {} on env {} (seq {})", model.kind.name(), env.name, cfg.seq),
+        format!(
+            "Plan: {} on env {} (seq {}, strategy {})",
+            model.kind.name(),
+            env.name,
+            cfg.seq,
+            crate::planner::PlanStrategy::name(&cfg.strategy)
+        ),
         &["device", "class", "heads", "mlp units", "seq rows", "mem MB", "budget MB"],
     );
     for (i, dev) in env.devices.iter().enumerate() {
@@ -156,6 +174,27 @@ fn cmd_plan(args: &Args) -> Result<()> {
         fmt_secs(plan.pred_mlp_s),
         fmt_secs(plan.pred_conn_s)
     );
+
+    // Per-bucket view: the planner's Eq. 5 prediction against the
+    // calibrated timeline's per-layer cost (the measured twin on the
+    // modeled testbed — the real fabric fills the same column with
+    // measured_layer_cost_s once rungs have served).
+    let sim = SimEngine::from_deployment(&model, &env, deployment.clone(), cfg.net())?;
+    let mut tb = Table::new(
+        format!("Per-bucket deployment (generation {})", deployment.generation()),
+        &["bucket", "heads", "mlp units", "seq rows", "pred layer (Eq.5)", "timeline layer"],
+    );
+    for rung in deployment.rungs() {
+        tb.row(&[
+            format!("{}", rung.bucket),
+            format!("{:?}", rung.plan.partition.heads),
+            format!("{:?}", rung.plan.partition.mlp_units),
+            format!("{:?}", rung.plan.partition.seq),
+            fmt_secs(rung.plan.pred_layer_compute_s()),
+            fmt_secs(sim.layer_cost(rung.bucket).total_s()),
+        ]);
+    }
+    println!("{}", tb.render());
     Ok(())
 }
 
@@ -319,6 +358,14 @@ mod tests {
     #[test]
     fn plan_command_smoke() {
         run(&argv("plan --model bert-l --env F")).unwrap();
+    }
+
+    #[test]
+    fn plan_strategy_flag() {
+        // The oracle strategy is practical on a 2-device env.
+        run(&argv("plan --model bert-l --env A --seq 128 --strategy exhaustive")).unwrap();
+        let err = run(&argv("plan --model bert-l --env A --strategy bogus")).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
     }
 
     #[test]

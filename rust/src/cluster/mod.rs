@@ -42,7 +42,7 @@ use crate::config::Manifest;
 use crate::error::{GalaxyError, Result};
 use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
-use crate::planner::{equal_seq_partition, Plan};
+use crate::planner::{Deployment, Plan};
 use crate::tensor::Tensor2;
 use crate::transport::{self, RingIo};
 use protocol::{Cmd, Dispatcher};
@@ -58,7 +58,8 @@ const ISSUE_WINDOW: usize = 2;
 /// `seq_len` splits into per-device sequence tiles. Indexed by bucket id
 /// (the rung's position on the ascending ladder); leader and workers
 /// derive the same geometry, so `Begin { bucket }` is all the wire needs
-/// to carry.
+/// to carry. The tiles come from the [`Deployment`]'s rung partition —
+/// the cluster never derives a sequence split of its own.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BucketGeom {
     /// Padded sequence length of this bucket.
@@ -71,15 +72,14 @@ pub struct BucketGeom {
 }
 
 impl BucketGeom {
-    fn from_tiles(seq_len: usize, tiles: Vec<usize>) -> Self {
+    pub fn from_tiles(seq_len: usize, tiles: Vec<usize>) -> Self {
         let offsets = (0..tiles.len()).map(|i| tiles[..i].iter().sum()).collect();
         Self { seq_len, tiles, offsets }
     }
 
-    /// Equal SP partition of `seq_len` over `d` devices (how every
-    /// non-reference bucket is tiled).
-    pub fn equal(seq_len: usize, d: usize) -> Self {
-        Self::from_tiles(seq_len, equal_seq_partition(seq_len, d))
+    /// Geometry of the deployment's rung serving `seq_len` rows.
+    pub fn from_deployment(dep: &Deployment, seq_len: usize) -> Self {
+        Self::from_tiles(seq_len, dep.partition_for(seq_len).seq)
     }
 }
 
@@ -104,6 +104,8 @@ struct InFlight {
     sync_points: u64,
     exposed_comm_s: f64,
     hidden_comm_s: f64,
+    /// Per-worker busy seconds (layer-command time net of wire stalls).
+    device_busy_s: Vec<f64>,
 }
 
 /// A completed pipelined request, with measured instants relative to the
@@ -132,6 +134,9 @@ pub struct FinishedRequest {
     pub exposed_comm_s: f64,
     /// Measured straggler wire seconds the transport hid behind compute.
     pub hidden_comm_s: f64,
+    /// Measured per-worker busy seconds for this request (each worker's
+    /// layer-command wall time net of its wire stalls).
+    pub device_busy_s: Vec<f64>,
 }
 
 /// A running Galaxy cluster over `D` worker threads.
@@ -145,6 +150,14 @@ pub struct RealCluster {
     overlap: OverlapMode,
     /// Reference artifact sequence length (the largest bucket).
     seq_len: usize,
+    /// The per-bucket partition truth the fabric executes under; geoms
+    /// and the layer schedule are derived from it.
+    deployment: Deployment,
+    /// What [`RealCluster::swap_deployment`] needs to re-spawn the
+    /// worker ring against a new partition.
+    manifest: Manifest,
+    flavor: String,
+    seed: u64,
     /// Per-bucket ring-tile geometry, ascending by padded length; the
     /// index is the bucket id carried by `Begin`.
     geoms: Vec<BucketGeom>,
@@ -185,9 +198,24 @@ impl RealCluster {
         flavor: &str,
         seed: u64,
     ) -> Result<RealCluster> {
-        let d = LayerSchedule::from_plan(plan).n_devices();
+        let deployment = Deployment::from_plan(plan.clone(), &manifest.seq_buckets);
+        Self::spawn_deployment(model, manifest, &deployment, overlap, flavor, seed)
+    }
+
+    /// Spawn workers for a per-bucket [`Deployment`] — the general entry
+    /// point; [`RealCluster::spawn`] lifts a single plan into a
+    /// deployment over the manifest's bucket ladder.
+    pub fn spawn_deployment(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        deployment: &Deployment,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+    ) -> Result<RealCluster> {
+        let d = deployment.n_devices();
         let links = transport::threaded_ring(d)?;
-        Self::spawn_with_links(model, manifest, plan, overlap, flavor, seed, links)
+        Self::spawn_deployment_with_links(model, manifest, deployment, overlap, flavor, seed, links)
     }
 
     /// Spawn workers over caller-provided ring links — `links[i]` is
@@ -204,8 +232,27 @@ impl RealCluster {
         seed: u64,
         links: Vec<RingIo>,
     ) -> Result<RealCluster> {
+        let deployment = Deployment::from_plan(plan.clone(), &manifest.seq_buckets);
+        Self::spawn_deployment_with_links(model, manifest, &deployment, overlap, flavor, seed, links)
+    }
+
+    /// The deployment-driven spawn path everything funnels through.
+    pub fn spawn_deployment_with_links(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        deployment: &Deployment,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+        links: Vec<RingIo>,
+    ) -> Result<RealCluster> {
         manifest.validate_against(model)?;
-        let schedule = LayerSchedule::from_plan(plan);
+        // Weight shards are loaded once per worker, so every rung must
+        // share the reference rung's head/MLP-unit partition (per-bucket
+        // weight partitions would need per-bucket artifacts); only the
+        // SP ring tiles vary per bucket.
+        let reference = deployment.partition_for(manifest.seq_len);
+        let schedule = LayerSchedule::from_partition(&reference);
         let d = schedule.n_devices();
         if links.len() != d {
             return Err(GalaxyError::Fabric(format!(
@@ -214,22 +261,20 @@ impl RealCluster {
             )));
         }
 
-        // Per-bucket ring-tile geometry, bucket id = ladder position. The
-        // reference bucket keeps the plan's SP partition; smaller buckets
-        // tile as the equal partition of their own length (the planner's
-        // SP partition *is* the equal split, so the two agree at the
-        // reference length whenever it divides evenly).
-        let geoms: Vec<BucketGeom> = manifest
-            .seq_buckets
-            .iter()
-            .map(|&b| {
-                if b == manifest.seq_len {
-                    BucketGeom::from_tiles(b, schedule.tiles.clone())
-                } else {
-                    BucketGeom::equal(b, d)
-                }
-            })
-            .collect();
+        // Per-bucket ring-tile geometry, bucket id = ladder position,
+        // tiles straight from the deployment's rung partitions.
+        let mut geoms = Vec::with_capacity(manifest.seq_buckets.len());
+        for &b in &manifest.seq_buckets {
+            let part = deployment.partition_for(b);
+            if part.heads != reference.heads || part.mlp_units != reference.mlp_units {
+                return Err(GalaxyError::Config(format!(
+                    "deployment rung {b} re-partitions heads/MLP units; per-bucket \
+                     weight partitions require per-bucket artifacts (only SP rows may \
+                     vary across rungs)"
+                )));
+            }
+            geoms.push(BucketGeom::from_tiles(b, part.seq));
+        }
         // Fail fast on a ladder the artifact set cannot serve: every
         // non-reference rung must have at least one `_s{b}`-tagged
         // program declared, or worker warm-up would die later with an
@@ -281,6 +326,10 @@ impl RealCluster {
             report: ExecReport::default(),
             overlap,
             seq_len: manifest.seq_len,
+            deployment: deployment.clone(),
+            manifest: manifest.clone(),
+            flavor: flavor.to_string(),
+            seed,
             geoms,
             bucket_stats: HashMap::new(),
             weights: WeightGen::new(model, seed),
@@ -320,6 +369,49 @@ impl RealCluster {
     /// Per-bucket ring-tile geometry (indexed by bucket id).
     pub fn geoms(&self) -> &[BucketGeom] {
         &self.geoms
+    }
+
+    /// The per-bucket partition truth the fabric executes under.
+    pub fn deployment(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    /// Swap the partition truth by re-spawning the worker ring against
+    /// `deployment` (weight shards are per-partition, so a live fabric
+    /// cannot re-slice in place). Only legal at a request boundary:
+    /// anything in flight or unharvested is a `Fabric` error. The timing
+    /// epoch and cumulative report carry over; measured per-bucket layer
+    /// costs reset (they were measured under the old partition), and the
+    /// respawned ring uses default threaded links — fault-injection
+    /// seams installed via [`RealCluster::spawn_with_links`] do not
+    /// survive a swap.
+    pub fn swap_deployment(&mut self, deployment: &Deployment) -> Result<()> {
+        self.check_poisoned()?;
+        if !self.inflight.is_empty() || !self.completed.is_empty() {
+            return Err(GalaxyError::Fabric(
+                "deployment swap requires a request boundary (requests in flight or \
+                 unharvested)"
+                    .into(),
+            ));
+        }
+        let model = self.model.clone();
+        let manifest = self.manifest.clone();
+        let flavor = self.flavor.clone();
+        let mut next = Self::spawn_deployment(
+            &model,
+            &manifest,
+            deployment,
+            self.overlap,
+            &flavor,
+            self.seed,
+        )?;
+        next.epoch = self.epoch;
+        next.first_start = self.first_start;
+        next.report = std::mem::take(&mut self.report);
+        next.oneshot_id = self.oneshot_id;
+        // Dropping the old value (via the swap) shuts the old ring down.
+        *self = next;
+        Ok(())
     }
 
     /// Measured mean per-layer service seconds at `bucket`, from the
@@ -413,6 +505,7 @@ impl RealCluster {
                 sync_points: 0,
                 exposed_comm_s: 0.0,
                 hidden_comm_s: 0.0,
+                device_busy_s: vec![0.0; self.n_devices()],
             },
         );
         let cmds = self.dispatcher.submit(id, bucket_id);
@@ -532,6 +625,7 @@ impl RealCluster {
                 sync_points,
                 exposed_comm_s,
                 hidden_comm_s,
+                busy_s,
             } => {
                 // Worker 0's Done is also the pacing ack for `Finish`.
                 if i == 0 {
@@ -553,6 +647,7 @@ impl RealCluster {
                 fl.sync_points = fl.sync_points.max(sync_points);
                 fl.exposed_comm_s = fl.exposed_comm_s.max(exposed_comm_s);
                 fl.hidden_comm_s = fl.hidden_comm_s.max(hidden_comm_s);
+                fl.device_busy_s[i] = busy_s;
                 fl.done_workers += 1;
                 if fl.done_workers == d {
                     self.finalize(req)?;
@@ -608,6 +703,7 @@ impl RealCluster {
             sync_points: fl.sync_points,
             exposed_comm_s: fl.exposed_comm_s,
             hidden_comm_s: fl.hidden_comm_s,
+            device_busy_s: fl.device_busy_s,
         });
         Ok(())
     }

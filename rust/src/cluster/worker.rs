@@ -78,6 +78,10 @@ pub enum WorkerReply {
         exposed_comm_s: f64,
         /// Wire seconds the transport hid behind this worker's compute.
         hidden_comm_s: f64,
+        /// Seconds this worker was busy on the request: layer-command
+        /// wall time net of its wire stalls (the measured twin of the
+        /// simulator's per-device busy accounting; feeds replanning).
+        busy_s: f64,
     },
     /// Fatal: the worker cannot continue (its ring position is now
     /// desynchronized), so the leader must poison the fabric.
@@ -103,6 +107,7 @@ struct ReqState {
     sync_points: u64,
     exposed_comm_s: f64,
     hidden_comm_s: f64,
+    busy_s: f64,
 }
 
 /// Everything a worker needs to set itself up (must be `Send`).
@@ -174,6 +179,7 @@ pub fn run(
                         sync_points: 0,
                         exposed_comm_s: 0.0,
                         hidden_comm_s: 0.0,
+                        busy_s: 0.0,
                     },
                 );
             }
@@ -205,6 +211,7 @@ pub fn run(
                         sync_points: st.sync_points,
                         exposed_comm_s: st.exposed_comm_s,
                         hidden_comm_s: st.hidden_comm_s,
+                        busy_s: st.busy_s,
                     },
                     None => WorkerReply::Failed(format!("finish for unknown request {req}")),
                 };
@@ -307,13 +314,20 @@ impl Worker {
             sync_points,
             exposed_comm_s,
             hidden_comm_s,
+            busy_s,
         } = st;
         let calls0 = self.rt.pjrt_calls();
         let bytes0 = io.bytes;
         let syncs0 = io.sync_points;
         let stats0 = io.link_stats();
+        let t0 = std::time::Instant::now();
         let out = self.layer(io, l, bucket, x_shard, &mask)?;
         let stats = io.link_stats();
+        // Busy = this layer command's wall time minus the seconds spent
+        // stalled on the wire during it (hidden wire time ran behind the
+        // compute and genuinely kept the device busy-overlapped).
+        let exposed_delta = stats.exposed_s - stats0.exposed_s;
+        let busy_delta = (t0.elapsed().as_secs_f64() - exposed_delta).max(0.0);
         self.states.insert(
             req,
             ReqState {
@@ -323,8 +337,9 @@ impl Worker {
                 ring_bytes: ring_bytes + (io.bytes - bytes0),
                 pjrt_calls: pjrt_calls + (self.rt.pjrt_calls() - calls0),
                 sync_points: sync_points + (io.sync_points - syncs0),
-                exposed_comm_s: exposed_comm_s + (stats.exposed_s - stats0.exposed_s),
+                exposed_comm_s: exposed_comm_s + exposed_delta,
                 hidden_comm_s: hidden_comm_s + (stats.hidden_s - stats0.hidden_s),
+                busy_s: busy_s + busy_delta,
             },
         );
         Ok(())

@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use crate::error::{GalaxyError, Result};
 use crate::model::{ModelConfig, ModelKind};
 use crate::parallel::OverlapMode;
+use crate::planner::StrategyKind;
 use crate::sim::{EdgeEnv, NetParams};
 use json::Json;
 
@@ -161,6 +162,9 @@ pub struct RunConfig {
     pub seq: usize,
     pub overlap: OverlapMode,
     pub requests: usize,
+    /// Planning strategy for the per-bucket deployment (Algorithm 1 by
+    /// default; the exhaustive oracle is practical for d <= 4).
+    pub strategy: StrategyKind,
 }
 
 impl Default for RunConfig {
@@ -172,6 +176,7 @@ impl Default for RunConfig {
             seq: 284,
             overlap: OverlapMode::Tiled,
             requests: 1,
+            strategy: StrategyKind::Heuristic,
         }
     }
 }
@@ -221,6 +226,7 @@ mod tests {
         assert_eq!(c.bandwidth_mbps, 125.0);
         assert_eq!(c.seq, 284);
         assert_eq!(c.overlap, OverlapMode::Tiled);
+        assert_eq!(c.strategy, StrategyKind::Heuristic);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::engine::{
     SubmittedBatch, DEFAULT_MAX_BATCH,
 };
 use crate::error::{GalaxyError, Result};
+use crate::planner::Deployment;
 use crate::serving::pad_and_mask;
 use crate::tensor::Tensor2;
 
@@ -62,6 +63,7 @@ fn outcome_from_finished(fin: FinishedRequest) -> Result<InferOutcome> {
         sync_points: fin.sync_points,
         ring_bytes: fin.ring_bytes,
         pjrt_calls: fin.pjrt_calls,
+        device_busy_s: fin.device_busy_s,
         output: Some(output),
         measured_span_s: Some((fin.started_s, fin.finished_s)),
     })
@@ -94,7 +96,15 @@ impl Engine for RealCluster {
             link_slots: crate::transport::LINK_SLOTS,
             // Batch members ride the native per-layer interleave.
             max_batch: DEFAULT_MAX_BATCH,
+            deployment: Some(self.deployment().clone()),
         }
+    }
+
+    /// Artifact-gated partition swap: re-spawns the worker ring against
+    /// the new deployment at a request boundary (weight shards are
+    /// per-partition on this backend).
+    fn install_deployment(&mut self, dep: &Deployment) -> Result<()> {
+        self.swap_deployment(dep)
     }
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {

@@ -38,6 +38,7 @@ pub mod sim;
 
 use crate::error::{GalaxyError, Result};
 use crate::parallel::OverlapMode;
+use crate::planner::Deployment;
 use crate::tensor::Tensor2;
 
 /// Default padded-length ladder for engines without AOT artifacts (the
@@ -166,6 +167,11 @@ pub struct EngineCaps {
     /// batched semantics or accept batch members through the native
     /// [`Engine::submit`] pipeline.
     pub max_batch: usize,
+    /// The per-bucket [`Deployment`] this engine executes under — the
+    /// single source of partition truth (`None` for mocks and engines
+    /// that carry no partition state). Schedulers and governors read it
+    /// here instead of re-deriving partitions.
+    pub deployment: Option<Deployment>,
 }
 
 impl EngineCaps {
@@ -241,6 +247,13 @@ pub struct InferOutcome {
     pub ring_bytes: u64,
     /// PJRT executions issued (0 for modeled engines).
     pub pjrt_calls: u64,
+    /// Per-device busy (compute) seconds attributed to this request —
+    /// modeled by the simulator, measured by the cluster workers as
+    /// their layer-command time net of wire stalls. Empty when the
+    /// engine reports no per-device telemetry (mocks). This is what the
+    /// serving governor folds back into the profile to detect straggler
+    /// drift.
+    pub device_busy_s: Vec<f64>,
     /// Output activations for the valid rows (None for modeled engines).
     pub output: Option<Tensor2>,
     /// Measured (start, finish) instants in seconds since the engine's
@@ -347,6 +360,19 @@ pub trait Engine {
     fn measured_now_s(&self) -> Option<f64> {
         None
     }
+
+    /// Install `dep` as the engine's partition truth. Callers only
+    /// invoke this at a request boundary (nothing in flight). The
+    /// default declines: an engine must opt into live replanning — the
+    /// simulator re-times instantly, the PJRT fabric re-spawns its
+    /// worker ring against the new shard partition (artifact-gated).
+    fn install_deployment(&mut self, dep: &Deployment) -> Result<()> {
+        let _ = dep;
+        Err(GalaxyError::Config(format!(
+            "engine `{}` does not support live deployment swaps",
+            self.caps().name
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +388,7 @@ mod tests {
             pipeline_depth: 4,
             link_slots: 2,
             max_batch: 1,
+            deployment: None,
         }
     }
 
@@ -452,6 +479,22 @@ mod tests {
         assert!(e.poll_complete(false).unwrap().is_none());
         assert!(e.poll_complete(true).unwrap().is_none());
         assert_eq!(e.measured_now_s(), None);
+    }
+
+    #[test]
+    fn default_install_deployment_declines() {
+        use crate::planner::{Partition, Plan};
+        let plan = Plan {
+            partition: Partition { heads: vec![2], mlp_units: vec![2], seq: vec![64] },
+            pred_mha_s: 0.0,
+            pred_mlp_s: 0.0,
+            pred_conn_s: 0.0,
+            mem_mb: vec![0.0],
+        };
+        let dep = Deployment::from_plan(plan, &[64]);
+        let mut e = ShimOnly;
+        let err = e.install_deployment(&dep).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "got {err}");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use crate::engine::{BucketLadder, BucketSpec, Engine, EngineCaps, InferOutcome, InferRequest};
 use crate::error::{GalaxyError, Result};
 use crate::parallel::OverlapMode;
+use crate::planner::Deployment;
 use crate::sim::{SimEngine, SimReport};
 
 /// Convert a closed-form timeline report into the unified per-request
@@ -17,6 +18,7 @@ pub fn outcome_from_sim(id: u64, rep: &SimReport) -> InferOutcome {
         sync_points: rep.sync_points as u64,
         ring_bytes: rep.ring_bytes,
         pjrt_calls: 0,
+        device_busy_s: rep.device_busy_s.clone(),
         output: None,
         measured_span_s: None,
     }
@@ -50,12 +52,19 @@ impl Engine for SimEngine<'_> {
             // the sim advertises the same slot capability.
             link_slots: crate::transport::LINK_SLOTS,
             max_batch: self.max_batch(),
+            deployment: Some(self.deployment().clone()),
         }
     }
 
     fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
         let rep = self.run_inference(req.bucket);
         Ok(outcome_from_sim(req.id, &rep))
+    }
+
+    /// Live replanning on the modeled timeline: the next request simply
+    /// times under the new deployment's partitions.
+    fn install_deployment(&mut self, dep: &Deployment) -> Result<()> {
+        self.swap_deployment(dep.clone())
     }
 
     /// Batched execution of bucket-compatible requests: the members enter
@@ -153,6 +162,10 @@ mod tests {
         assert!(costs[0] < costs[2], "per-layer cost must grow with the bucket");
         let want = eng.layer_cost(284).total_s();
         assert!((caps.ladder.get(1).unwrap().layer_cost_s - want).abs() < 1e-12);
+        // The caps expose the engine's partition truth.
+        let dep = caps.deployment.expect("sim caps carry the deployment");
+        assert_eq!(dep.n_devices(), 3);
+        assert_eq!(dep.partition_for(284).seq.iter().sum::<usize>(), 284);
     }
 
     #[test]

@@ -77,7 +77,7 @@ pub mod prelude {
     pub use crate::error::{GalaxyError, Result};
     pub use crate::model::{ModelConfig, ModelKind};
     pub use crate::parallel::{ExecReport, OverlapMode};
-    pub use crate::planner::{Partition, Plan, Planner};
+    pub use crate::planner::{Deployment, Partition, Plan, PlanStrategy, Planner, StrategyKind};
     pub use crate::profiler::{Profile, Profiler};
     pub use crate::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
     pub use crate::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};

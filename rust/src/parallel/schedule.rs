@@ -7,7 +7,7 @@
 //! simulated and real execution paths comparable.
 
 use crate::model::ModelConfig;
-use crate::planner::Plan;
+use crate::planner::{Deployment, Partition, Plan};
 
 /// Everything device `d` needs to know about its share of one layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -141,7 +141,11 @@ impl LayerSchedule {
     /// Derive the schedule from a plan (identical for every layer — HMP
     /// partitions each layer the same way, paper §III-C).
     pub fn from_plan(plan: &Plan) -> Self {
-        let p = &plan.partition;
+        Self::from_partition(&plan.partition)
+    }
+
+    /// Derive the schedule from a bare partition.
+    pub fn from_partition(p: &Partition) -> Self {
         let d = p.n_devices();
         let shards = (0..d)
             .map(|i| ShardSpec {
@@ -155,6 +159,13 @@ impl LayerSchedule {
             })
             .collect();
         LayerSchedule { shards, tiles: p.seq.clone() }
+    }
+
+    /// The schedule of a deployment's rung serving `seq` rows — the
+    /// deployment is the single source of partition truth, so consumers
+    /// consult it here rather than re-deriving shard splits ad hoc.
+    pub fn from_deployment(dep: &Deployment, seq: usize) -> Self {
+        Self::from_partition(&dep.partition_for(seq))
     }
 
     pub fn n_devices(&self) -> usize {
@@ -199,6 +210,21 @@ mod tests {
         assert_eq!(s.shards[2].head_offset, 9);
         assert_eq!(s.shards[2].unit_offset, 9);
         assert_eq!(s.shards[2].seq_offset, 40);
+    }
+
+    #[test]
+    fn schedule_from_deployment_uses_rung_partition() {
+        let p = plan(vec![5, 4, 3], vec![6, 3, 3], vec![20, 20, 20]);
+        let dep = Deployment::from_plan(p, &[36, 60]);
+        // Native rung keeps the plan's own rows; the smaller rung's rows
+        // come from the deployment's per-bucket derivation.
+        let s60 = LayerSchedule::from_deployment(&dep, 60);
+        assert_eq!(s60.tiles, vec![20, 20, 20]);
+        assert_eq!(s60.shards[0].k_heads, 5);
+        let s36 = LayerSchedule::from_deployment(&dep, 36);
+        assert_eq!(s36.tiles, vec![12, 12, 12]);
+        assert_eq!(s36.shards[2].u_units, 3);
+        assert_eq!(s36.shards[1].seq_offset, 12);
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Plans as first-class objects: a per-bucket [`Deployment`].
+//!
+//! Historically every consumer computed one [`Plan`] for a single
+//! reference sequence length and then privately re-derived the SP
+//! partition per bucket (`SimEngine` and the cluster's tile geometry
+//! each called [`equal_seq_partition`] themselves). A [`Deployment`]
+//! replaces that with one structure holding a plan per rung of the
+//! artifact bucket ladder — connective/SP row counts, head and MLP-unit
+//! partitions keyed by the padded bucket length — which every engine
+//! consults through [`Deployment::partition_for`]. The `api_surface`
+//! test pins that no engine calls `equal_seq_partition` on its own.
+//!
+//! A deployment built by [`Deployment::plan`] keeps its planning context
+//! (model, env, profile, strategy), so a serving-side governor can fold
+//! measured per-device costs into an updated [`Profile`] and call
+//! [`Deployment::refresh`] to obtain the next generation. Deployments
+//! lifted from a bare plan ([`Deployment::from_plan`]) have no context
+//! and refuse to refresh.
+//!
+//! Per-rung prediction caveat: the profile's MHA/MLP latency tables are
+//! recorded at one reference sequence length, and the head/MLP-unit
+//! partition they induce is sequence-invariant — so the strategy runs
+//! once per deployment and each rung re-derives only its SP rows and
+//! connective prediction. The MHA/MLP predictions are the
+//! reference-length ones; the engines' bucket ladders carry the true
+//! per-rung modeled/measured costs.
+
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::profiler::Profile;
+use crate::sim::EdgeEnv;
+
+use super::{equal_seq_partition, Partition, Plan, PlanStrategy, StrategyKind};
+
+/// One rung of a deployment: a padded bucket length and the plan that is
+/// the partition truth for requests executing at it.
+#[derive(Clone, Debug)]
+pub struct Rung {
+    /// Padded sequence length of this rung (its bucket on the ladder).
+    pub bucket: usize,
+    /// The partition truth at this rung.
+    pub plan: Plan,
+}
+
+/// Planning context a deployment keeps so it can replan itself.
+#[derive(Clone, Debug)]
+struct PlanCtx {
+    model: ModelConfig,
+    env: EdgeEnv,
+    profile: Profile,
+}
+
+/// A set of [`Plan`]s, one per bucket rung — the single source of
+/// partition truth for every engine (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    strategy: StrategyKind,
+    /// Rungs ascending by bucket length.
+    rungs: Vec<Rung>,
+    ctx: Option<PlanCtx>,
+    generation: u64,
+}
+
+impl Deployment {
+    /// Plan every rung of `buckets` with `strategy`. The head/MLP-unit
+    /// partition is *sequence-invariant* — both strategies choose it
+    /// from the profile's latency tables and the Eq. 5 weight-memory
+    /// constraint, neither of which depends on the padded length — so
+    /// the strategy runs **once** (keeping [`Exhaustive`]'s exponential
+    /// search affordable on multi-rung ladders and during governor
+    /// refreshes) and each rung re-derives its SP rows and connective
+    /// prediction for its own bucket.
+    ///
+    /// [`Exhaustive`]: super::Exhaustive
+    pub fn plan(
+        strategy: StrategyKind,
+        model: &ModelConfig,
+        env: &EdgeEnv,
+        profile: &Profile,
+        buckets: &[usize],
+    ) -> Result<Deployment> {
+        let buckets = normalize_buckets(buckets)?;
+        let mut p = profile.clone();
+        p.seq = *buckets.last().expect("normalized ladder is non-empty");
+        let base = strategy.plan(model, env, &p)?;
+        let d = base.partition.n_devices();
+        let mut rungs = Vec::with_capacity(buckets.len());
+        for bucket in buckets {
+            let seq = equal_seq_partition(bucket, d);
+            let pred_conn_s = seq
+                .iter()
+                .enumerate()
+                .map(|(i, &rows)| profile.conn_time(i, rows))
+                .fold(0.0, f64::max);
+            let plan = Plan {
+                partition: Partition {
+                    heads: base.partition.heads.clone(),
+                    mlp_units: base.partition.mlp_units.clone(),
+                    seq,
+                },
+                pred_conn_s,
+                ..base.clone()
+            };
+            rungs.push(Rung { bucket, plan });
+        }
+        Ok(Deployment {
+            strategy,
+            rungs,
+            ctx: Some(PlanCtx {
+                model: model.clone(),
+                env: env.clone(),
+                profile: profile.clone(),
+            }),
+            generation: 0,
+        })
+    }
+
+    /// Lift one already-computed plan into a deployment: the plan's
+    /// head/MLP-unit partition at every rung, its own SP rows at its
+    /// native length, and the equal split re-derived for every other
+    /// bucket. No planning context — [`Deployment::refresh`] refuses.
+    /// This constructor is infallible by design (it backs the legacy
+    /// single-plan engine constructors): a ladder with no positive
+    /// bucket degrades to one rung at the plan's native length instead
+    /// of erroring like [`Deployment::plan`].
+    pub fn from_plan(plan: Plan, buckets: &[usize]) -> Deployment {
+        let native: usize = plan.partition.seq.iter().sum();
+        let d = plan.partition.n_devices();
+        let buckets = match normalize_buckets(buckets) {
+            Ok(b) => b,
+            Err(_) => vec![native],
+        };
+        let rungs = buckets
+            .into_iter()
+            .map(|bucket| {
+                let plan_b = if bucket == native {
+                    plan.clone()
+                } else {
+                    Plan {
+                        partition: Partition {
+                            heads: plan.partition.heads.clone(),
+                            mlp_units: plan.partition.mlp_units.clone(),
+                            seq: equal_seq_partition(bucket, d),
+                        },
+                        ..plan.clone()
+                    }
+                };
+                Rung { bucket, plan: plan_b }
+            })
+            .collect();
+        Deployment { strategy: StrategyKind::Heuristic, rungs, ctx: None, generation: 0 }
+    }
+
+    /// Replan every rung from an updated profile (same strategy, model,
+    /// env, and ladder), bumping the generation. Errors when this
+    /// deployment was lifted from a bare plan and carries no planning
+    /// context.
+    pub fn refresh(&self, profile: &Profile) -> Result<Deployment> {
+        let ctx = self.ctx.as_ref().ok_or_else(|| {
+            GalaxyError::Config(
+                "deployment carries no planning context (built from a bare plan); \
+                 build it with Deployment::plan to enable replanning"
+                    .into(),
+            )
+        })?;
+        let buckets: Vec<usize> = self.buckets();
+        let mut next =
+            Deployment::plan(self.strategy, &ctx.model, &ctx.env, profile, &buckets)?;
+        next.generation = self.generation + 1;
+        Ok(next)
+    }
+
+    pub fn strategy(&self) -> StrategyKind {
+        self.strategy
+    }
+
+    /// How many times this deployment has been replanned.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn rungs(&self) -> &[Rung] {
+        &self.rungs
+    }
+
+    /// Ascending padded bucket lengths.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.rungs.iter().map(|r| r.bucket).collect()
+    }
+
+    /// The rung at exactly `bucket`, if the ladder has one.
+    pub fn rung(&self, bucket: usize) -> Option<&Rung> {
+        self.rungs.iter().find(|r| r.bucket == bucket)
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.rungs.first().map_or(0, |r| r.plan.partition.n_devices())
+    }
+
+    /// The profile the rungs were planned from (None for context-less
+    /// deployments lifted from a bare plan).
+    pub fn profile(&self) -> Option<&Profile> {
+        self.ctx.as_ref().map(|c| &c.profile)
+    }
+
+    /// Number of model layers (from the planning profile).
+    pub fn layers(&self) -> Option<usize> {
+        self.ctx.as_ref().map(|c| c.profile.layers)
+    }
+
+    /// The rung serving `seq` valid tokens: the smallest bucket that
+    /// fits, falling back to the largest rung for oversize lengths.
+    fn serving_rung(&self, seq: usize) -> &Rung {
+        self.rungs
+            .iter()
+            .find(|r| r.bucket >= seq)
+            .or_else(|| self.rungs.last())
+            .expect("deployment has at least one rung")
+    }
+
+    /// The partition truth for a request of `seq` rows — THE way engines
+    /// obtain partitions. An exact rung returns its planned partition
+    /// verbatim (including hand-crafted heterogeneous SP rows); any
+    /// other length keeps the serving rung's head/MLP-unit partition
+    /// with the SP rows re-derived for `seq` (§III-C.2 equal split —
+    /// this module is the one place that derivation lives).
+    pub fn partition_for(&self, seq: usize) -> Partition {
+        if let Some(r) = self.rung(seq) {
+            return r.plan.partition.clone();
+        }
+        let r = self.serving_rung(seq);
+        Partition {
+            heads: r.plan.partition.heads.clone(),
+            mlp_units: r.plan.partition.mlp_units.clone(),
+            seq: equal_seq_partition(seq, r.plan.partition.n_devices()),
+        }
+    }
+
+    /// Per-device weight memory (MB) of the rung serving `seq`.
+    pub fn mem_mb_for(&self, seq: usize) -> Vec<f64> {
+        self.serving_rung(seq).plan.mem_mb.clone()
+    }
+
+    /// Predicted straggler compute per layer at `bucket` (Eq. 5
+    /// objective of the rung's plan).
+    pub fn pred_layer_s(&self, bucket: usize) -> Option<f64> {
+        self.rung(bucket).map(|r| r.plan.pred_layer_compute_s())
+    }
+
+    /// Predicted per-device compute seconds of one layer at `bucket`
+    /// (MHA + MLP + two connective blocks, from the planning profile) —
+    /// what the governor compares measured per-device busy time against.
+    /// Uses the partition actually serving `bucket`
+    /// ([`Deployment::partition_for`]), so governors keep observing even
+    /// when an engine's advertised ladder and the governed deployment's
+    /// rungs disagree.
+    pub fn pred_device_layer_s(&self, bucket: usize) -> Option<Vec<f64>> {
+        let profile = self.profile()?;
+        let p = self.partition_for(bucket);
+        Some(
+            (0..p.n_devices())
+                .map(|i| {
+                    profile.mha_time(i, p.heads[i])
+                        + profile.mlp_time(i, p.mlp_units[i])
+                        + 2.0 * profile.conn_time(i, p.seq[i])
+                })
+                .collect(),
+        )
+    }
+}
+
+fn normalize_buckets(buckets: &[usize]) -> Result<Vec<usize>> {
+    let mut b: Vec<usize> = buckets.iter().copied().filter(|&x| x > 0).collect();
+    b.sort_unstable();
+    b.dedup();
+    if b.is_empty() {
+        return Err(GalaxyError::Config(
+            "a deployment needs at least one positive bucket length".into(),
+        ));
+    }
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::Profiler;
+
+    fn setup() -> (ModelConfig, EdgeEnv, Profile) {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_f(); // heterogeneous L + M + S
+        let profile = Profiler::analytic(&model, &env, 512).profile();
+        (model, env, profile)
+    }
+
+    #[test]
+    fn plans_one_rung_per_bucket_sorted() {
+        let (model, env, profile) = setup();
+        let dep = Deployment::plan(
+            StrategyKind::Heuristic,
+            &model,
+            &env,
+            &profile,
+            &[512, 128, 256, 128],
+        )
+        .unwrap();
+        assert_eq!(dep.buckets(), vec![128, 256, 512]);
+        assert_eq!(dep.generation(), 0);
+        assert_eq!(dep.n_devices(), 3);
+        for r in dep.rungs() {
+            assert_eq!(r.plan.partition.seq.iter().sum::<usize>(), r.bucket);
+            assert_eq!(r.plan.partition.heads.iter().sum::<usize>(), model.heads);
+        }
+    }
+
+    #[test]
+    fn partition_for_exact_rung_and_fallback() {
+        let (model, env, profile) = setup();
+        let dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[128, 512])
+                .unwrap();
+        // Exact rung: the planned partition verbatim.
+        let exact = dep.partition_for(128);
+        assert_eq!(exact, dep.rung(128).unwrap().plan.partition);
+        // Off-ladder length: serving rung's units, rows re-derived.
+        let off = dep.partition_for(200);
+        assert_eq!(off.heads, dep.rung(512).unwrap().plan.partition.heads);
+        assert_eq!(off.seq.iter().sum::<usize>(), 200);
+        assert!(off.seq.iter().max().unwrap() - off.seq.iter().min().unwrap() <= 1);
+        // Oversize falls back to the largest rung's units.
+        let big = dep.partition_for(1000);
+        assert_eq!(big.seq.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn from_plan_keeps_native_rows_and_rederives_others() {
+        let (model, env, profile) = setup();
+        let plan = StrategyKind::Heuristic.plan(&model, &env, &profile).unwrap();
+        let native_rows = plan.partition.seq.clone();
+        let dep = Deployment::from_plan(plan, &[128, 512]);
+        assert_eq!(dep.rung(512).unwrap().plan.partition.seq, native_rows);
+        assert_eq!(dep.rung(128).unwrap().plan.partition.seq.iter().sum::<usize>(), 128);
+        // No planning context: refresh must refuse, not panic.
+        let err = dep.refresh(&profile).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn refresh_replans_and_bumps_generation() {
+        let (model, env, profile) = setup();
+        let dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[128, 512])
+                .unwrap();
+        // Slow device 0 (the Nano-L) 4x: the refreshed rungs must shift
+        // units off it.
+        let drifted = profile.scaled(&[4.0, 1.0, 1.0]);
+        let next = dep.refresh(&drifted).unwrap();
+        assert_eq!(next.generation(), 1);
+        assert_eq!(next.buckets(), dep.buckets());
+        let before = dep.rung(512).unwrap().plan.partition.heads[0];
+        let after = next.rung(512).unwrap().plan.partition.heads[0];
+        assert!(after < before, "heads on the slowed device: {before} -> {after}");
+        assert_eq!(next.refresh(&drifted).unwrap().generation(), 2);
+    }
+
+    #[test]
+    fn pred_device_layer_covers_all_blocks() {
+        let (model, env, profile) = setup();
+        let dep = Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[512])
+            .unwrap();
+        let pred = dep.pred_device_layer_s(512).unwrap();
+        assert_eq!(pred.len(), 3);
+        assert!(pred.iter().all(|&t| t > 0.0));
+        // The plan's straggler prediction is the max over devices of the
+        // per-block terms, so the straggler of the per-device totals is
+        // bounded by the plan's summed straggler prediction.
+        let straggler = pred.iter().cloned().fold(0.0, f64::max);
+        let plan = &dep.rung(512).unwrap().plan;
+        assert!(straggler <= plan.pred_layer_compute_s() + 1e-12);
+        assert_eq!(dep.layers(), Some(model.layers));
+    }
+
+    #[test]
+    fn empty_ladder_is_a_config_error() {
+        let (model, env, profile) = setup();
+        let err = Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[])
+            .unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
+    }
+}

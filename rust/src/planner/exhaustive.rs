@@ -44,6 +44,7 @@ fn compositions(total: usize, n: usize) -> Vec<Vec<usize>> {
 
 /// Exhaustively optimal plan under paper Eq. 5, or `PlanInfeasible`.
 pub fn exhaustive_plan(model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan> {
+    super::check_device_counts(env, profile)?;
     let d = env.len();
     let h = model.heads;
     let l = profile.layers as f64;

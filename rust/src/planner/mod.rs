@@ -17,13 +17,127 @@
 //! Connective blocks use equal partition (§III-C.2): their cost is
 //! memory-bandwidth-bound, and equal split keeps ring-chunk sizes uniform
 //! for the tile-based overlap.
+//!
+//! ## Strategy / deployment / governor split
+//!
+//! Planning is a three-layer API rather than a pair of ad-hoc entry
+//! points:
+//!
+//! * **[`PlanStrategy`]** — *how* one `(model, env, profile)` triple
+//!   becomes a [`Plan`]. [`Heuristic`] is Algorithm 1; [`Exhaustive`] is
+//!   the straw-man oracle ([`exhaustive::exhaustive_plan`]) it is tested
+//!   against. [`StrategyKind`] is the copyable selector configs carry.
+//! * **[`Deployment`]** — *what is deployed*: one plan per rung of the
+//!   artifact bucket ladder, and the **single source of partition truth**
+//!   for every engine. `SimEngine`, the cluster's per-bucket tile
+//!   geometry, and the layer schedule all consult
+//!   [`Deployment::partition_for`] instead of privately re-deriving
+//!   [`equal_seq_partition`] (pinned by the `api_surface` test).
+//! * **`PlanGovernor`** (`crate::serving::governor`) — *when to replan*:
+//!   keeps a per-device EWMA of measured-vs-predicted busy time and
+//!   calls [`Deployment::refresh`] when the drift *skews* across devices
+//!   (the max/min factor ratio crosses a threshold — scale-free, so
+//!   uniform model error or a cluster-wide slowdown never triggers,
+//!   while one throttled device does); the serving scheduler installs
+//!   the refreshed deployment at a request boundary.
 
+pub mod deployment;
 pub mod exhaustive;
+
+pub use deployment::{Deployment, Rung};
 
 use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
 use crate::profiler::Profile;
 use crate::sim::EdgeEnv;
+
+/// A planning strategy: turns one `(model, env, profile)` triple into a
+/// [`Plan`]. User input (a profile recorded on a different cluster) must
+/// surface as a [`GalaxyError`], never a panic.
+pub trait PlanStrategy {
+    fn name(&self) -> &'static str;
+
+    fn plan(&self, model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan>;
+}
+
+/// Paper Algorithm 1 (BalancedPartition + MemoryAwareBalancing).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Heuristic;
+
+impl PlanStrategy for Heuristic {
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+
+    fn plan(&self, model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan> {
+        Planner::new(model, env, profile).plan()
+    }
+}
+
+/// The straw-man exhaustive search (§III-C.2): latency-optimal under
+/// Eq. 5, exponential in the device count — the oracle the heuristic is
+/// property-tested against, usable as a strategy for small clusters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Exhaustive;
+
+impl PlanStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn plan(&self, model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan> {
+        exhaustive::exhaustive_plan(model, env, profile)
+    }
+}
+
+/// Copyable strategy selector for configs and [`Deployment`]s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    Heuristic,
+    Exhaustive,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "heuristic" | "algorithm1" | "alg1" => Ok(StrategyKind::Heuristic),
+            "exhaustive" | "oracle" => Ok(StrategyKind::Exhaustive),
+            other => Err(GalaxyError::Config(format!(
+                "unknown plan strategy `{other}` (expected heuristic|exhaustive)"
+            ))),
+        }
+    }
+}
+
+impl PlanStrategy for StrategyKind {
+    fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Heuristic => Heuristic.name(),
+            StrategyKind::Exhaustive => Exhaustive.name(),
+        }
+    }
+
+    fn plan(&self, model: &ModelConfig, env: &EdgeEnv, profile: &Profile) -> Result<Plan> {
+        match self {
+            StrategyKind::Heuristic => Heuristic.plan(model, env, profile),
+            StrategyKind::Exhaustive => Exhaustive.plan(model, env, profile),
+        }
+    }
+}
+
+/// A profile recorded on a different cluster than the one being planned
+/// is user input, not an invariant: every strategy rejects it cleanly.
+pub(crate) fn check_device_counts(env: &EdgeEnv, profile: &Profile) -> Result<()> {
+    if env.len() != profile.n_devices() {
+        return Err(GalaxyError::Config(format!(
+            "profile covers {} device(s) but env `{}` has {}; re-profile this environment",
+            profile.n_devices(),
+            env.name,
+            env.len()
+        )));
+    }
+    Ok(())
+}
 
 /// Per-device partition of one Transformer layer's workload.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -122,14 +236,15 @@ pub struct Planner<'a> {
 
 impl<'a> Planner<'a> {
     pub fn new(model: &'a ModelConfig, env: &'a EdgeEnv, profile: &'a Profile) -> Self {
-        assert_eq!(env.len(), profile.n_devices(), "profile/env device count");
         Self { model, env, profile }
     }
 
     /// Run Algorithm 1 and return a [`Plan`], or
     /// [`GalaxyError::PlanInfeasible`] when the cluster cannot host the
-    /// model (lines 23-24).
+    /// model (lines 23-24). A profile/env device-count mismatch is a
+    /// [`GalaxyError::Config`] (it used to be an `assert_eq!` panic).
     pub fn plan(&self) -> Result<Plan> {
+        check_device_counts(self.env, self.profile)?;
         let d = self.env.len();
         let total_units = self.model.heads;
         let shares = self.profile.capacity_shares();
@@ -432,6 +547,42 @@ mod tests {
             "planned {} vs naive {naive_straggler}",
             plan.pred_mha_s
         );
+    }
+
+    #[test]
+    fn device_count_mismatch_is_an_error_not_a_panic() {
+        // Regression: Planner::new used to assert_eq! on the device
+        // counts — a stale profile (recorded on a 3-device cluster, fed
+        // to a 2-device env) is user input and must error cleanly
+        // through every strategy entry point.
+        let model = ModelConfig::bert_large();
+        let env2 = EdgeEnv::preset_a(); // 2 devices
+        let env3 = EdgeEnv::preset_b(); // 3 devices
+        let profile3 = Profiler::analytic(&model, &env3, 284).profile();
+        let err = Planner::new(&model, &env2, &profile3).plan().unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
+        let err = Heuristic.plan(&model, &env2, &profile3).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
+        let err = Exhaustive.plan(&model, &env2, &profile3).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn strategy_kinds_parse_and_delegate() {
+        assert_eq!(StrategyKind::parse("heuristic").unwrap(), StrategyKind::Heuristic);
+        assert_eq!(StrategyKind::parse("Exhaustive").unwrap(), StrategyKind::Exhaustive);
+        assert!(StrategyKind::parse("greedy").is_err());
+        assert_eq!(StrategyKind::Heuristic.name(), "heuristic");
+        assert_eq!(StrategyKind::Exhaustive.name(), "exhaustive");
+
+        // The kind delegates to the same implementations as the unit
+        // strategies.
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_f();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let via_kind = StrategyKind::Heuristic.plan(&model, &env, &profile).unwrap();
+        let direct = Heuristic.plan(&model, &env, &profile).unwrap();
+        assert_eq!(via_kind.partition, direct.partition);
     }
 
     #[test]

@@ -69,6 +69,38 @@ impl Profile {
         let sum: f64 = caps.iter().sum();
         caps.into_iter().map(|c| c / sum).collect()
     }
+
+    /// A copy with device `d`'s latency tables multiplied by
+    /// `factors[d]` (missing entries default to 1.0) — how measured
+    /// per-device drift folds back into a profile for replanning: a
+    /// device observed 2x slower gets a 2x table, halving its capacity.
+    pub fn scaled(&self, factors: &[f64]) -> Profile {
+        let f = |d: usize| factors.get(d).copied().unwrap_or(1.0);
+        Profile {
+            mha: self
+                .mha
+                .iter()
+                .enumerate()
+                .map(|(d, row)| row.iter().map(|t| t * f(d)).collect())
+                .collect(),
+            mlp: self
+                .mlp
+                .iter()
+                .enumerate()
+                .map(|(d, row)| row.iter().map(|t| t * f(d)).collect())
+                .collect(),
+            conn: self
+                .conn
+                .iter()
+                .enumerate()
+                .map(|(d, &(base, per_row))| (base * f(d), per_row * f(d)))
+                .collect(),
+            seq: self.seq,
+            mha_bytes: self.mha_bytes,
+            mlp_bytes: self.mlp_bytes,
+            layers: self.layers,
+        }
+    }
 }
 
 /// Builder for [`Profile`].
@@ -205,6 +237,22 @@ mod tests {
             let fitted = p.conn_time(0, rows);
             assert!((direct - fitted).abs() < 1e-9, "rows {rows}");
         }
+    }
+
+    #[test]
+    fn scaled_profile_shifts_capacity() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_c(); // 4 homogeneous devices
+        let p = Profiler::analytic(&m, &env, 284).profile();
+        let s = p.scaled(&[2.0]); // only device 0 slowed; rest default 1.0
+        assert!((s.mha_time(0, 4) - 2.0 * p.mha_time(0, 4)).abs() < 1e-12);
+        assert!((s.mha_time(1, 4) - p.mha_time(1, 4)).abs() < 1e-15);
+        assert!((s.conn_time(0, 50) - 2.0 * p.conn_time(0, 50)).abs() < 1e-12);
+        assert!((s.capacity(0) - p.capacity(0) / 2.0).abs() < 1e-9);
+        // Shares renormalize: the slowed device's share drops.
+        assert!(s.capacity_shares()[0] < p.capacity_shares()[0]);
+        assert_eq!(s.seq, p.seq);
+        assert_eq!(s.layers, p.layers);
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Measurement-driven replanning: the [`PlanGovernor`].
+//!
+//! The planner predicts per-device block latencies from a profile
+//! recorded once; real clusters drift (thermal throttling, co-located
+//! load, a battery-saving governor kicking in). The engines report
+//! per-device busy seconds with every completion
+//! ([`InferOutcome::device_busy_s`] — modeled by the simulator, measured
+//! by the cluster workers), and the governor folds them back into the
+//! planning loop:
+//!
+//! 1. **Calibrate** — the first [`GovernorConfig::min_observations`]
+//!    completions at each rung fix a per-device *baseline* ratio of
+//!    measured busy time to the deployment's prediction. The baseline
+//!    absorbs static model error — the profile's tables are recorded at
+//!    one reference length while requests execute at the rung's bucket,
+//!    and each device's conn/compute cost mix warps the ratio
+//!    differently (a zero-unit device is pure connective) — so only
+//!    *changes* relative to the calibrated normal count as drift.
+//! 2. **Observe** — per device, maintain an EWMA of the
+//!    baseline-normalized ratio.
+//! 3. **Trigger** — replan when the drift *skews* across devices: the
+//!    largest normalized factor exceeds the smallest by
+//!    [`GovernorConfig::drift_threshold`]. A uniform slowdown (which
+//!    replanning cannot help) never triggers; one throttled device does.
+//! 4. **Refresh** — scale the deployment's profile by the per-device
+//!    drift factors ([`crate::profiler::Profile::scaled`] — capacity
+//!    *shares* renormalize, so uniform factors cancel there too) and
+//!    call [`Deployment::refresh`]; the scheduler installs the new
+//!    generation at a request boundary
+//!    ([`crate::engine::Engine::install_deployment`]).
+//!
+//! After a refresh everything resets — drift factors to 1.0 and the
+//! baselines cleared — so the governor re-calibrates against the new
+//! partition's normal instead of compounding residual error into
+//! oscillation. Callers must install the returned deployment before
+//! feeding further completions (the serving scheduler gates its
+//! observations on the pending swap for exactly this reason:
+//! completions of requests dispatched under the old generation must not
+//! calibrate the new one).
+
+use crate::engine::InferOutcome;
+use crate::planner::Deployment;
+
+/// Replanning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// Replan when the largest per-device drift factor exceeds the
+    /// smallest by this ratio (1.3 = the most-drifted device runs 30%
+    /// further off its calibrated normal than the least-drifted one).
+    pub drift_threshold: f64,
+    /// Completions per rung that calibrate its baseline (and the
+    /// minimum number of normalized observations before a replan).
+    pub min_observations: usize,
+    /// Completions between consecutive replans (also gates the first).
+    pub cooldown: usize,
+    /// EWMA weight of the newest sample (0 < ewma <= 1).
+    pub ewma: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        Self { drift_threshold: 1.3, min_observations: 3, cooldown: 3, ewma: 0.5 }
+    }
+}
+
+/// Per-rung calibration of the expected measured/predicted ratio.
+#[derive(Clone, Debug)]
+struct Baseline {
+    sum: Vec<f64>,
+    count: usize,
+    /// Fixed per-device normals once `count` reaches the calibration
+    /// length.
+    fixed: Option<Vec<f64>>,
+}
+
+/// Serving-side replanning governor (see the module docs).
+#[derive(Clone, Debug)]
+pub struct PlanGovernor {
+    cfg: GovernorConfig,
+    deployment: Deployment,
+    /// Per-device EWMA of the baseline-normalized busy ratio.
+    drift: Vec<f64>,
+    /// Per-bucket calibration state.
+    baselines: std::collections::HashMap<usize, Baseline>,
+    observations: usize,
+    since_replan: usize,
+    replans: usize,
+}
+
+impl PlanGovernor {
+    /// Govern `deployment` with default knobs. The deployment should
+    /// carry planning context ([`Deployment::plan`]); a context-less one
+    /// never replans (every observation is a no-op).
+    pub fn new(deployment: Deployment) -> Self {
+        Self::with_config(deployment, GovernorConfig::default())
+    }
+
+    pub fn with_config(deployment: Deployment, cfg: GovernorConfig) -> Self {
+        let d = deployment.n_devices();
+        Self {
+            cfg,
+            deployment,
+            drift: vec![1.0; d],
+            baselines: std::collections::HashMap::new(),
+            observations: 0,
+            since_replan: 0,
+            replans: 0,
+        }
+    }
+
+    /// The deployment the governor currently considers active.
+    pub fn deployment(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    /// How many times the governor has replanned.
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Current per-device drift estimates (EWMA of the measured busy
+    /// ratio normalized to the rung's calibrated baseline; 1.0 = on
+    /// track).
+    pub fn drift(&self) -> &[f64] {
+        &self.drift
+    }
+
+    /// Fold one completion's telemetry in; returns the refreshed
+    /// [`Deployment`] when drift skewed past the threshold. The caller
+    /// must install the returned deployment on the engine at a request
+    /// boundary *before* feeding further completions (completions of
+    /// requests dispatched under the old generation would otherwise
+    /// calibrate the new one).
+    pub fn observe(&mut self, bucket: usize, outcome: &InferOutcome) -> Option<Deployment> {
+        let layers = self.deployment.layers()? as f64;
+        let pred = self.deployment.pred_device_layer_s(bucket)?;
+        if outcome.device_busy_s.len() != pred.len() || layers <= 0.0 {
+            return None;
+        }
+        // Raw measured/predicted ratio per device (devices predicted
+        // idle at this rung carry no signal and stay neutral).
+        let ratios: Vec<f64> = outcome
+            .device_busy_s
+            .iter()
+            .zip(pred.iter())
+            .map(|(&busy, &p)| if p > 1e-12 { (busy / layers) / p } else { 1.0 })
+            .collect();
+        // Calibration phase: the rung's first observations fix the
+        // baseline that absorbs static model error (module docs).
+        let calib = self.cfg.min_observations.max(1);
+        let b = self.baselines.entry(bucket).or_insert_with(|| Baseline {
+            sum: vec![0.0; ratios.len()],
+            count: 0,
+            fixed: None,
+        });
+        let Some(baseline) = b.fixed.clone() else {
+            for (s, &r) in b.sum.iter_mut().zip(ratios.iter()) {
+                *s += r;
+            }
+            b.count += 1;
+            if b.count >= calib {
+                let n = b.count as f64;
+                b.fixed = Some(b.sum.iter().map(|s| (s / n).max(1e-12)).collect());
+            }
+            return None;
+        };
+        let a = self.cfg.ewma.clamp(0.0, 1.0);
+        for (i, (&r, &base)) in ratios.iter().zip(baseline.iter()).enumerate() {
+            self.drift[i] = (1.0 - a) * self.drift[i] + a * (r / base);
+        }
+        self.observations += 1;
+        self.since_replan += 1;
+        if self.observations < self.cfg.min_observations
+            || self.since_replan < self.cfg.cooldown
+        {
+            return None;
+        }
+        // Skew trigger (module docs): only devices that predicted
+        // non-zero work at this rung carry a meaningful drift estimate.
+        let tracked: Vec<f64> = pred
+            .iter()
+            .zip(self.drift.iter())
+            .filter(|&(&p, _)| p > 1e-12)
+            .map(|(_, &f)| f)
+            .collect();
+        let max_drift = tracked.iter().copied().fold(0.0, f64::max);
+        let min_drift = tracked.iter().copied().fold(f64::INFINITY, f64::min);
+        if !min_drift.is_finite() || max_drift <= min_drift.max(1e-9) * self.cfg.drift_threshold
+        {
+            return None;
+        }
+        let profile = self.deployment.profile()?.scaled(&self.drift);
+        match self.deployment.refresh(&profile) {
+            Ok(next) => {
+                self.deployment = next.clone();
+                // Re-calibrate against the new partition's normal
+                // (residual error folds into fresh baselines instead of
+                // oscillating).
+                self.drift = vec![1.0; self.drift.len()];
+                self.baselines.clear();
+                self.observations = 0;
+                self.since_replan = 0;
+                self.replans += 1;
+                Some(next)
+            }
+            Err(_) => {
+                // The scaled profile produced no feasible plan: re-arm
+                // the cooldown so the (potentially expensive) replan is
+                // paced instead of retried on every completion.
+                self.since_replan = 0;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::planner::StrategyKind;
+    use crate::profiler::Profiler;
+    use crate::sim::EdgeEnv;
+
+    fn governed(cfg: GovernorConfig) -> (PlanGovernor, Deployment) {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[284]).unwrap();
+        (PlanGovernor::with_config(dep.clone(), cfg), dep)
+    }
+
+    /// An outcome whose per-device busy time is `factor[i]` times the
+    /// deployment's prediction.
+    fn outcome_with_drift(dep: &Deployment, bucket: usize, factors: &[f64]) -> InferOutcome {
+        let layers = dep.layers().unwrap() as f64;
+        let pred = dep.pred_device_layer_s(bucket).unwrap();
+        InferOutcome {
+            device_busy_s: pred
+                .iter()
+                .zip(factors.iter())
+                .map(|(&p, &f)| p * f * layers)
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn on_track_measurements_never_replan() {
+        let (mut gov, dep) = governed(GovernorConfig::default());
+        let o = outcome_with_drift(&dep, 284, &[1.0, 1.0, 1.0]);
+        for _ in 0..20 {
+            assert!(gov.observe(284, &o).is_none());
+        }
+        assert_eq!(gov.replans(), 0);
+        for &f in gov.drift() {
+            assert!((f - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn skewed_drift_triggers_a_replan_that_shifts_load() {
+        let cfg = GovernorConfig { min_observations: 2, cooldown: 2, ..Default::default() };
+        let (mut gov, dep) = governed(cfg);
+        // Calibration: the rung's first observations fix the baseline.
+        let healthy = outcome_with_drift(&dep, 284, &[1.0, 1.0, 1.0]);
+        for _ in 0..2 {
+            assert!(gov.observe(284, &healthy).is_none());
+        }
+        // Then device 1 throttles to half speed.
+        let slow1 = outcome_with_drift(&dep, 284, &[1.0, 2.0, 1.0]);
+        let mut swapped = None;
+        for _ in 0..6 {
+            if let Some(next) = gov.observe(284, &slow1) {
+                swapped = Some(next);
+                break;
+            }
+        }
+        let next = swapped.expect("2x skew on one device must cross a 1.3x threshold");
+        assert_eq!(gov.replans(), 1);
+        assert_eq!(next.generation(), 1);
+        let before = dep.rung(284).unwrap().plan.partition.heads[1];
+        let after = next.rung(284).unwrap().plan.partition.heads[1];
+        assert!(after < before, "slowed device keeps {after} heads (was {before})");
+        // Drift resets: it is now baked into the refreshed profile.
+        for &f in gov.drift() {
+            assert!((f - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn static_model_error_is_calibrated_away() {
+        let cfg = GovernorConfig { min_observations: 2, cooldown: 2, ..Default::default() };
+        let (mut gov, dep) = governed(cfg);
+        // A strongly device-skewed but *constant* measured/predicted
+        // ratio — the bucket-vs-reference scale and each device's
+        // conn/compute mix warp the raw ratios differently — is model
+        // error, not drift: the per-rung baseline absorbs it and the
+        // governor must stay quiet.
+        let warped = outcome_with_drift(&dep, 284, &[0.2, 0.9, 0.2]);
+        for _ in 0..10 {
+            assert!(gov.observe(284, &warped).is_none());
+        }
+        assert_eq!(gov.replans(), 0);
+        // Real drift on top of the warp still registers: device 0 now
+        // runs 2x its calibrated normal.
+        let drifted = outcome_with_drift(&dep, 284, &[0.4, 0.9, 0.2]);
+        let mut swapped = None;
+        for _ in 0..6 {
+            if let Some(next) = gov.observe(284, &drifted) {
+                swapped = Some(next);
+                break;
+            }
+        }
+        assert!(swapped.is_some(), "2x drift over the calibrated normal must replan");
+        assert_eq!(gov.replans(), 1);
+    }
+
+    #[test]
+    fn telemetry_free_outcomes_are_ignored() {
+        let (mut gov, _) = governed(GovernorConfig {
+            min_observations: 1,
+            cooldown: 1,
+            ..Default::default()
+        });
+        // Mocks report no per-device telemetry: never replan, never panic.
+        for _ in 0..5 {
+            assert!(gov.observe(284, &InferOutcome::default()).is_none());
+        }
+        assert_eq!(gov.replans(), 0);
+    }
+}

@@ -13,6 +13,11 @@
 //!   for serial-shim engines, measured start/finish instants for engines
 //!   with native request pipelining (the PJRT cluster's per-layer
 //!   worker protocol).
+//! * [`governor::PlanGovernor`] — measurement-driven replanning: folds
+//!   the engines' per-device busy telemetry back into the planning
+//!   profile and swaps the active [`crate::planner::Deployment`] at a
+//!   request boundary when the measured straggler drifts past the
+//!   predicted one.
 //! * [`pad_and_mask`] — request padding + additive key-mask construction
 //!   shared by every real-execution path.
 //!
@@ -26,9 +31,11 @@
 //! padded-token waste and batch occupancy reported by
 //! [`crate::metrics::ServeMetrics`].
 
+pub mod governor;
 pub mod policy;
 pub mod scheduler;
 
+pub use governor::{GovernorConfig, PlanGovernor};
 pub use policy::{Policy, Queued};
 pub use scheduler::{Completion, Rejection, SchedReport, Scheduler, SchedulerConfig};
 

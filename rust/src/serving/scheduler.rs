@@ -45,6 +45,8 @@ use std::collections::{HashMap, HashSet};
 use crate::engine::{Engine, InferOutcome, InferRequest, SubmittedBatch};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::ServeMetrics;
+use crate::planner::Deployment;
+use crate::serving::governor::PlanGovernor;
 use crate::serving::policy::{Policy, Queued};
 use crate::workload::Request;
 
@@ -134,6 +136,12 @@ impl SchedReport {
 pub struct Scheduler<E: Engine> {
     engine: E,
     cfg: SchedulerConfig,
+    /// Optional measurement-driven replanning: the governor observes
+    /// every completion's per-device telemetry; when it hands back a
+    /// refreshed deployment the scheduler installs it on the engine at
+    /// the next request boundary. Persists across runs, so drift
+    /// detected in one trace carries into the next.
+    governor: Option<PlanGovernor>,
 }
 
 impl<E: Engine> Scheduler<E> {
@@ -142,7 +150,18 @@ impl<E: Engine> Scheduler<E> {
     }
 
     pub fn with_config(engine: E, cfg: SchedulerConfig) -> Self {
-        Self { engine, cfg }
+        Self { engine, cfg, governor: None }
+    }
+
+    /// Attach a replanning governor (engines must support
+    /// [`Engine::install_deployment`] for its swaps to land).
+    pub fn with_governor(mut self, governor: PlanGovernor) -> Self {
+        self.governor = Some(governor);
+        self
+    }
+
+    pub fn governor(&self) -> Option<&PlanGovernor> {
+        self.governor.as_ref()
     }
 
     pub fn config(&self) -> &SchedulerConfig {
@@ -229,6 +248,9 @@ impl<E: Engine> Scheduler<E> {
         // `SubmittedBatch::InFlight`): dispatched, not yet harvested.
         let mut in_flight: HashMap<u64, (Queued, usize, u64)> = HashMap::new();
         let mut next_batch: u64 = 0;
+        // Governor-refreshed deployment awaiting a request boundary.
+        let mut pending_swap: Option<Deployment> = None;
+        let mut replans = 0usize;
 
         while next < pending.len() || !queue.is_empty() {
             // Engines executing in real time advance the clock on their
@@ -257,6 +279,21 @@ impl<E: Engine> Scheduler<E> {
                     });
                 }
             }
+            // Governor swap: install the refreshed deployment at a
+            // request boundary — nothing in the engine's native pipeline
+            // (the modeled timeline executes inline, so any point between
+            // dispatches is a boundary there).
+            if in_flight.is_empty() {
+                self.apply_pending_swap(&mut pending_swap, &mut replans);
+            }
+            // A pending swap waits for a request boundary: stop feeding
+            // the native pipeline and drain it so the boundary actually
+            // arrives (sustained arrivals would otherwise refill the
+            // window and starve the swap for the whole trace).
+            if pending_swap.is_some() && !in_flight.is_empty() {
+                self.harvest(&mut in_flight, &mut report, true, clock0, &mut pending_swap)?;
+                continue;
+            }
             if queue.is_empty() {
                 if next >= pending.len() {
                     // Everything remaining was rejected at admission.
@@ -267,7 +304,7 @@ impl<E: Engine> Scheduler<E> {
                 // modeled clock jumps, a measured one waits out the gap
                 // in short slices, keeping the engine polled (a native
                 // pipeline's command pacing only advances while polled).
-                if self.harvest(&mut in_flight, &mut report, false, clock0)? {
+                if self.harvest(&mut in_flight, &mut report, false, clock0, &mut pending_swap)? {
                     continue;
                 }
                 let target = pending[next].arrival_s;
@@ -276,7 +313,13 @@ impl<E: Engine> Scheduler<E> {
                     if now >= target {
                         break;
                     }
-                    if !self.harvest(&mut in_flight, &mut report, false, clock0)? {
+                    if !self.harvest(
+                        &mut in_flight,
+                        &mut report,
+                        false,
+                        clock0,
+                        &mut pending_swap,
+                    )? {
                         std::thread::sleep(std::time::Duration::from_secs_f64(
                             (target - now).min(0.01),
                         ));
@@ -288,7 +331,7 @@ impl<E: Engine> Scheduler<E> {
             // Native-pipeline window gate: at most `depth` requests in
             // flight; block on a completion before dispatching more.
             if !in_flight.is_empty() && in_flight.len() >= depth {
-                self.harvest(&mut in_flight, &mut report, true, clock0)?;
+                self.harvest(&mut in_flight, &mut report, true, clock0, &mut pending_swap)?;
                 continue;
             }
             // Modeled pipeline entry gate: the previous batch must have
@@ -396,6 +439,7 @@ impl<E: Engine> Scheduler<E> {
                 let outcome = by_id.remove(&q.id).ok_or_else(|| {
                     GalaxyError::Fabric(format!("engine returned no outcome for request {}", q.id))
                 })?;
+                self.governed_observe(bucket, &outcome, &mut pending_swap);
                 finishes.push(finish);
                 report.completions.push(Completion {
                     id: q.id,
@@ -413,12 +457,53 @@ impl<E: Engine> Scheduler<E> {
         }
         // Drain the native pipeline.
         while !in_flight.is_empty() {
-            self.harvest(&mut in_flight, &mut report, true, clock0)?;
+            self.harvest(&mut in_flight, &mut report, true, clock0, &mut pending_swap)?;
         }
+        // A swap triggered by the trailing completions still lands (the
+        // governor persists across runs — the next trace starts on the
+        // refreshed deployment).
+        self.apply_pending_swap(&mut pending_swap, &mut replans);
 
         report.peak_in_flight = peak_in_flight(&report.completions);
         report.metrics = build_metrics(&report);
+        report.metrics.replans = replans;
         Ok(report)
+    }
+
+    /// Feed one completion to the governor — unless a swap is pending:
+    /// completions of requests dispatched under a superseded generation
+    /// must not calibrate the new one.
+    fn governed_observe(
+        &mut self,
+        bucket: usize,
+        outcome: &InferOutcome,
+        pending_swap: &mut Option<Deployment>,
+    ) {
+        if pending_swap.is_some() {
+            return;
+        }
+        if let Some(gov) = self.governor.as_mut() {
+            if let Some(dep) = gov.observe(bucket, outcome) {
+                *pending_swap = Some(dep);
+            }
+        }
+    }
+
+    /// Install a pending governor swap. Best-effort: an engine that
+    /// declines live swaps loses the governor, not the run's completed
+    /// work.
+    fn apply_pending_swap(
+        &mut self,
+        pending_swap: &mut Option<Deployment>,
+        replans: &mut usize,
+    ) {
+        if let Some(dep) = pending_swap.take() {
+            if self.engine.install_deployment(&dep).is_ok() {
+                *replans += 1;
+            } else {
+                self.governor = None;
+            }
+        }
     }
 
     /// Harvest one completion from a natively pipelined engine and place
@@ -432,6 +517,7 @@ impl<E: Engine> Scheduler<E> {
         report: &mut SchedReport,
         wait: bool,
         clock0: f64,
+        pending_swap: &mut Option<Deployment>,
     ) -> Result<bool> {
         if in_flight.is_empty() {
             return Ok(false);
@@ -447,6 +533,7 @@ impl<E: Engine> Scheduler<E> {
         let (q, bucket, batch) = in_flight.remove(&outcome.id).ok_or_else(|| {
             GalaxyError::Fabric(format!("engine completed unknown request {}", outcome.id))
         })?;
+        self.governed_observe(bucket, &outcome, pending_swap);
         let (start, finish) = match outcome.measured_span_s {
             Some((s, f)) => {
                 // Re-express in the run's clock so arrivals, starts, and
@@ -554,6 +641,7 @@ mod tests {
                 pipeline_depth: self.depth,
                 link_slots: 1,
                 max_batch: 1,
+                deployment: None,
             }
         }
 
@@ -790,6 +878,7 @@ mod tests {
                 pipeline_depth: self.depth,
                 link_slots: 2,
                 max_batch: 1,
+                deployment: None,
             }
         }
 
@@ -954,6 +1043,7 @@ mod tests {
                 pipeline_depth: self.depth,
                 link_slots: 2,
                 max_batch: self.max_batch,
+                deployment: None,
             }
         }
 

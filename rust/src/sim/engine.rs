@@ -18,9 +18,10 @@
 //! exit   (GEMM ⊕ RS):  D steps;  steps 2..D carry partials + reduce-add
 //! ```
 
+use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
 use crate::parallel::OverlapMode;
-use crate::planner::{equal_seq_partition, Plan};
+use crate::planner::{Deployment, Plan};
 use crate::sim::device::EdgeEnv;
 use crate::sim::net::NetParams;
 
@@ -41,6 +42,11 @@ pub struct SimReport {
     pub ring_bytes: u64,
     /// Peak per-device memory demand in MB.
     pub mem_mb: Vec<f64>,
+    /// Per-device busy (compute) seconds — each device's own block times
+    /// summed over the timeline, not the straggler maxima. This is the
+    /// modeled twin of the workers' measured busy time; the serving
+    /// governor uses it to attribute straggler drift to a device.
+    pub device_busy_s: Vec<f64>,
 }
 
 impl SimReport {
@@ -97,27 +103,107 @@ impl LayerCost {
 
 /// Simulated HMP execution engine (the paper's Galaxy runtime on the
 /// modeled testbed).
+///
+/// All partitions come from the engine's [`Deployment`] — the single
+/// source of partition truth. [`SimEngine::new`] lifts a single plan
+/// into a one-rung deployment for the legacy call sites;
+/// [`SimEngine::from_deployment`] takes the per-bucket deployment
+/// directly, and [`crate::engine::Engine::install_deployment`] swaps it
+/// live (how governor-driven replanning reaches the modeled timeline).
 pub struct SimEngine<'a> {
     model: &'a ModelConfig,
     env: &'a EdgeEnv,
-    plan: Plan,
+    deployment: Deployment,
     net: NetParams,
     overlap: OverlapMode,
     buckets: Vec<usize>,
     max_batch: usize,
+    /// Per-device compute slowdown factors (1.0 = calibrated speed) —
+    /// the drift-injection seam for replanning tests: a device slowed
+    /// mid-trace shows up in every modeled block time and in the
+    /// reported per-device busy seconds.
+    slowdown: Vec<f64>,
 }
 
 impl<'a> SimEngine<'a> {
     pub fn new(model: &'a ModelConfig, env: &'a EdgeEnv, plan: Plan, net: NetParams) -> Self {
+        let native: usize = plan.partition.seq.iter().sum();
+        let deployment = Deployment::from_plan(plan, &[native]);
         Self {
             model,
             env,
-            plan,
+            deployment,
             net,
             overlap: OverlapMode::Tiled,
             buckets: crate::engine::DEFAULT_SEQ_BUCKETS.to_vec(),
             max_batch: 1,
+            slowdown: vec![1.0; env.len()],
         }
+    }
+
+    /// Build the engine on a per-bucket deployment: the advertised
+    /// ladder is the deployment's rungs and every partition is the
+    /// rung's plan.
+    pub fn from_deployment(
+        model: &'a ModelConfig,
+        env: &'a EdgeEnv,
+        deployment: Deployment,
+        net: NetParams,
+    ) -> Result<Self> {
+        if deployment.n_devices() != env.len() {
+            return Err(GalaxyError::Config(format!(
+                "deployment partitions {} device(s) but env `{}` has {}",
+                deployment.n_devices(),
+                env.name,
+                env.len()
+            )));
+        }
+        let buckets = deployment.buckets();
+        Ok(Self {
+            model,
+            env,
+            deployment,
+            net,
+            overlap: OverlapMode::Tiled,
+            buckets,
+            max_batch: 1,
+            slowdown: vec![1.0; env.len()],
+        })
+    }
+
+    /// The deployment this engine executes under.
+    pub fn deployment(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    /// Swap the partition truth (callers do this at a request boundary;
+    /// the modeled timeline has no in-flight state to drain). The
+    /// advertised ladder follows the new deployment's rungs so caps
+    /// never desync from the partitions actually executed.
+    pub fn swap_deployment(&mut self, deployment: Deployment) -> Result<()> {
+        if deployment.n_devices() != self.env.len() {
+            return Err(GalaxyError::Config(format!(
+                "deployment partitions {} device(s) but env `{}` has {}",
+                deployment.n_devices(),
+                self.env.name,
+                self.env.len()
+            )));
+        }
+        self.buckets = deployment.buckets();
+        self.deployment = deployment;
+        Ok(())
+    }
+
+    /// Slow device `i`'s compute by `factor` (drift injection; 1.0
+    /// restores the calibrated speed).
+    pub fn set_device_slowdown(&mut self, device: usize, factor: f64) {
+        if let Some(f) = self.slowdown.get_mut(device) {
+            *f = factor.max(0.0);
+        }
+    }
+
+    fn slow(&self, device: usize) -> f64 {
+        self.slowdown.get(device).copied().unwrap_or(1.0)
     }
 
     /// Select overlapped (default) or serialized synchronization.
@@ -176,13 +262,20 @@ impl<'a> SimEngine<'a> {
     }
 
     /// Simulate one single-shot inference of `seq` tokens end-to-end.
+    /// The partition — head/MLP-unit shards and SP ring tiles — comes
+    /// from the deployment's rung for `seq` (equal-split fallback for
+    /// off-ladder lengths lives in the planner, not here).
     pub fn run_inference(&self, seq: usize) -> SimReport {
         let d = self.env.len();
-        let p = &self.plan.partition;
+        let p = self.deployment.partition_for(seq);
         let m = self.model;
-        let mut rep = SimReport { mem_mb: self.plan.mem_mb.clone(), ..Default::default() };
+        let mut rep = SimReport {
+            mem_mb: self.deployment.mem_mb_for(seq),
+            device_busy_s: vec![0.0; d],
+            ..Default::default()
+        };
 
-        let seq_parts = equal_seq_partition(seq, d);
+        let seq_parts = p.seq.clone();
         let max_tile = *seq_parts.iter().max().unwrap();
         let chunk_bytes = (max_tile * m.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
         let wire = self.net.ring_step_time(chunk_bytes);
@@ -202,53 +295,74 @@ impl<'a> SimEngine<'a> {
             let kd = |i: usize| p.heads[i] * m.head_dim();
             if d > 1 {
                 let qkv = |i: usize, rows: usize| {
-                    self.env.devices[i].gemm_time(m, rows, m.hidden, 3 * kd(i))
+                    self.slow(i) * self.env.devices[i].gemm_time(m, rows, m.hidden, 3 * kd(i))
                 };
                 self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, qkv, &seq_parts);
                 rep.sync_points += 1;
             } else {
-                rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, 3 * kd(0)));
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, seq, m.hidden, 3 * kd(0)),
+                );
             }
             // middle: per-head attention cores (never synchronized).
-            rep.add_compute(
-                (0..d)
-                    .map(|i| self.env.devices[i].attn_core_time(m, seq, p.heads[i]))
-                    .fold(0.0, f64::max),
-            );
+            let mut worst = 0.0f64;
+            for i in 0..d {
+                let c = self.slow(i) * self.env.devices[i].attn_core_time(m, seq, p.heads[i]);
+                rep.device_busy_s[i] += c;
+                worst = worst.max(c);
+            }
+            rep.add_compute(worst);
             // exit: output projection tiles ⊕ ReduceScatter (Fig. 7).
             if d > 1 {
                 let out_proj = |i: usize, rows: usize| {
-                    self.env.devices[i].gemm_time(m, rows, kd(i), m.hidden)
+                    self.slow(i) * self.env.devices[i].gemm_time(m, rows, kd(i), m.hidden)
                 };
                 self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, out_proj, &seq_parts);
                 rep.sync_points += 1;
             } else {
-                rep.add_compute(self.env.devices[0].gemm_time(m, seq, kd(0), m.hidden));
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, seq, kd(0), m.hidden),
+                );
             }
             // ---- connective (SP) ---------------------------------------
-            rep.add_compute(self.conn_straggler(&seq_parts));
+            self.conn_block(&mut rep, &seq_parts);
 
             // ---- MLP block (TP) ----------------------------------------
             let w = |i: usize| p.mlp_units[i] * m.mlp_unit();
             if d > 1 {
                 let gemm1 = |i: usize, rows: usize| {
-                    self.env.devices[i].gemm_time(m, rows, m.hidden, w(i))
+                    self.slow(i) * self.env.devices[i].gemm_time(m, rows, m.hidden, w(i))
                 };
                 self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, gemm1, &seq_parts);
                 rep.sync_points += 1;
                 let gemm2 = |i: usize, rows: usize| {
-                    self.env.devices[i].gemm_time(m, rows, w(i), m.hidden)
+                    self.slow(i) * self.env.devices[i].gemm_time(m, rows, w(i), m.hidden)
                 };
                 self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, gemm2, &seq_parts);
                 rep.sync_points += 1;
             } else {
-                rep.add_compute(self.env.devices[0].gemm_time(m, seq, m.hidden, w(0)));
-                rep.add_compute(self.env.devices[0].gemm_time(m, seq, w(0), m.hidden));
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, seq, m.hidden, w(0)),
+                );
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, seq, w(0), m.hidden),
+                );
             }
             // ---- connective (SP) ---------------------------------------
-            rep.add_compute(self.conn_straggler(&seq_parts));
+            self.conn_block(&mut rep, &seq_parts);
         }
         rep
+    }
+
+    /// Single-device block: the whole cluster is one device, so the
+    /// block time is both the straggler and that device's busy time.
+    fn solo_block(&self, rep: &mut SimReport, compute_s: f64) {
+        rep.device_busy_s[0] += compute_s;
+        rep.add_compute(compute_s);
     }
 
     /// Cluster-wide channel bytes of one ring phase. In a Ring-AllGather
@@ -263,14 +377,16 @@ impl<'a> SimEngine<'a> {
                 .sum::<u64>()
     }
 
-    /// Straggler connective-block time over the SP partition.
-    fn conn_straggler(&self, seq_parts: &[usize]) -> f64 {
-        self.env
-            .devices
-            .iter()
-            .zip(seq_parts.iter())
-            .map(|(dev, &rows)| dev.connective_time(self.model, rows))
-            .fold(0.0, f64::max)
+    /// Connective (SP) block: per-device times accumulate into the busy
+    /// telemetry, the straggler onto the critical path.
+    fn conn_block(&self, rep: &mut SimReport, seq_parts: &[usize]) {
+        let mut worst = 0.0f64;
+        for (i, (dev, &rows)) in self.env.devices.iter().zip(seq_parts.iter()).enumerate() {
+            let c = self.slow(i) * dev.connective_time(self.model, rows);
+            rep.device_busy_s[i] += c;
+            worst = worst.max(c);
+        }
+        rep.add_compute(worst);
     }
 
     /// Entry boundary: AllGather ⊕ tile GEMMs (paper Fig. 6).
@@ -292,9 +408,12 @@ impl<'a> SimEngine<'a> {
         if overlapped {
             for step in 0..d {
                 // Device i processes tile (i - step) mod d in step `step`.
-                let compute = (0..d)
-                    .map(|i| gemm(i, seq_parts[(i + d - step) % d]))
-                    .fold(0.0, f64::max);
+                let mut compute = 0.0f64;
+                for i in 0..d {
+                    let c = gemm(i, seq_parts[(i + d - step) % d]);
+                    rep.device_busy_s[i] += c;
+                    compute = compute.max(c);
+                }
                 let wire_s = if step < d - 1 { wire } else { 0.0 };
                 let cpu = if step < d - 1 { step_cpu } else { 0.0 };
                 rep.add_step(wire_s, compute + cpu, true);
@@ -304,7 +423,13 @@ impl<'a> SimEngine<'a> {
                 rep.add_step(wire, step_cpu, false);
             }
             let total_rows: usize = seq_parts.iter().sum();
-            rep.add_compute((0..d).map(|i| gemm(i, total_rows)).fold(0.0, f64::max));
+            let mut worst = 0.0f64;
+            for i in 0..d {
+                let c = gemm(i, total_rows);
+                rep.device_busy_s[i] += c;
+                worst = worst.max(c);
+            }
+            rep.add_compute(worst);
         }
     }
 
@@ -337,9 +462,12 @@ impl<'a> SimEngine<'a> {
             .fold(0.0, f64::max);
         if overlapped {
             for step in 0..d {
-                let compute = (0..d)
-                    .map(|i| gemm(i, seq_parts[(i + 2 * d - 2 - step) % d]))
-                    .fold(0.0, f64::max);
+                let mut compute = 0.0f64;
+                for i in 0..d {
+                    let c = gemm(i, seq_parts[(i + 2 * d - 2 - step) % d]);
+                    rep.device_busy_s[i] += c;
+                    compute = compute.max(c);
+                }
                 if step == 0 {
                     rep.add_step(0.0, compute, true);
                 } else {
@@ -348,7 +476,13 @@ impl<'a> SimEngine<'a> {
             }
         } else {
             let total_rows: usize = seq_parts.iter().sum();
-            rep.add_compute((0..d).map(|i| gemm(i, total_rows)).fold(0.0, f64::max));
+            let mut worst = 0.0f64;
+            for i in 0..d {
+                let c = gemm(i, total_rows);
+                rep.device_busy_s[i] += c;
+                worst = worst.max(c);
+            }
+            rep.add_compute(worst);
             for _ in 0..d - 1 {
                 rep.add_step(wire, add + step_cpu, false);
             }
@@ -466,6 +600,67 @@ mod tests {
         assert!((lc.hidden_comm_s * m.layers as f64 - rep.hidden_comm_s).abs() < 1e-9);
         // Per-layer cost is monotone in the bucket, like the timeline.
         assert!(eng.layer_cost(128).total_s() < eng.layer_cost(512).total_s());
+    }
+
+    #[test]
+    fn device_busy_telemetry_and_slowdown_injection() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let mut eng = SimEngine::new(&m, &env, p, NetParams::mbps(125.0));
+        let base = eng.run_inference(284);
+        assert_eq!(base.device_busy_s.len(), 3);
+        assert!(base.device_busy_s.iter().all(|&b| b > 0.0));
+        // Each device's busy time never exceeds the straggler total.
+        for &b in &base.device_busy_s {
+            assert!(b <= base.compute_s + 1e-9, "busy {b} > straggler {}", base.compute_s);
+        }
+        // Slowing device 1 doubles exactly its busy seconds and shows up
+        // on the critical path.
+        eng.set_device_slowdown(1, 2.0);
+        let slowed = eng.run_inference(284);
+        let ratio = slowed.device_busy_s[1] / base.device_busy_s[1];
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio {ratio}");
+        assert!((slowed.device_busy_s[0] - base.device_busy_s[0]).abs() < 1e-12);
+        assert!(slowed.total_s() > base.total_s());
+        // Schedule properties are untouched by drift.
+        assert_eq!(slowed.ring_bytes, base.ring_bytes);
+        assert_eq!(slowed.sync_points, base.sync_points);
+    }
+
+    #[test]
+    fn tiles_come_from_the_deployment_not_a_private_split() {
+        // A hand-crafted heterogeneous SP partition at a rung must drive
+        // the modeled ring tiles: the skewed tiles enlarge the straggler
+        // ring chunk, so the timeline differs from the equal split even
+        // though the wire volume (Σ tiles) is identical.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let base_plan = plan(&m, &env, 284);
+        let mut skewed_plan = base_plan.clone();
+        skewed_plan.partition.seq = vec![184, 60, 40];
+        let equal = SimEngine::new(&m, &env, base_plan, NetParams::mbps(25.0));
+        let skewed = SimEngine::from_deployment(
+            &m,
+            &env,
+            crate::planner::Deployment::from_plan(skewed_plan, &[284]),
+            NetParams::mbps(25.0),
+        )
+        .unwrap();
+        let re = equal.run_inference(284);
+        let rs = skewed.run_inference(284);
+        assert_eq!(re.ring_bytes, rs.ring_bytes, "wire volume is Σ tiles, invariant");
+        assert!(
+            rs.total_s() > re.total_s() + 1e-9,
+            "skewed tiles must show up in the timeline: {} vs {}",
+            rs.total_s(),
+            re.total_s()
+        );
+        // Device-count mismatch is a config error, not a panic.
+        let tiny = EdgeEnv::preset_a();
+        let p2 = plan(&m, &tiny, 284);
+        let dep2 = crate::planner::Deployment::from_plan(p2, &[284]);
+        assert!(SimEngine::from_deployment(&m, &env, dep2, NetParams::mbps(25.0)).is_err());
     }
 
     #[test]

@@ -1,0 +1,55 @@
+//! Pins the planning API redesign's single-source-of-truth invariant:
+//! `equal_seq_partition` — the §III-C.2 sequence split — lives in the
+//! planner and is consulted through the [`Deployment`] API; no engine,
+//! cluster, schedule, or serving code re-derives it privately. (The
+//! `baselines` module still calls the planner's helper directly: it
+//! simulates *other systems'* partition strategies — Megatron-LM / SP —
+//! not Galaxy's partition truth.)
+
+#[test]
+fn equal_seq_partition_lives_only_in_the_planner() {
+    // Every file that historically duplicated the derivation (or could
+    // plausibly regress into doing so). `include_str!` keeps this a
+    // compile-time grep: a new call site fails the assert with the file
+    // named.
+    let sources = [
+        ("sim/engine.rs", include_str!("../src/sim/engine.rs")),
+        ("sim/net.rs", include_str!("../src/sim/net.rs")),
+        ("cluster/mod.rs", include_str!("../src/cluster/mod.rs")),
+        ("cluster/worker.rs", include_str!("../src/cluster/worker.rs")),
+        ("cluster/protocol.rs", include_str!("../src/cluster/protocol.rs")),
+        ("engine/mod.rs", include_str!("../src/engine/mod.rs")),
+        ("engine/sim.rs", include_str!("../src/engine/sim.rs")),
+        ("engine/cluster.rs", include_str!("../src/engine/cluster.rs")),
+        ("serving/mod.rs", include_str!("../src/serving/mod.rs")),
+        ("serving/scheduler.rs", include_str!("../src/serving/scheduler.rs")),
+        ("serving/governor.rs", include_str!("../src/serving/governor.rs")),
+        ("serving/policy.rs", include_str!("../src/serving/policy.rs")),
+        ("parallel/schedule.rs", include_str!("../src/parallel/schedule.rs")),
+        ("parallel/overlap.rs", include_str!("../src/parallel/overlap.rs")),
+        ("cli.rs", include_str!("../src/cli.rs")),
+    ];
+    for (name, src) in sources {
+        assert!(
+            !src.contains("equal_seq_partition"),
+            "{name} references equal_seq_partition — partitions must come from the \
+             Deployment (planner::deployment), the single source of partition truth"
+        );
+    }
+    // The one definition still lives (and is public) in the planner.
+    let planner = include_str!("../src/planner/mod.rs");
+    assert!(planner.contains("pub fn equal_seq_partition"));
+    // And the deployment is the only consumer outside Algorithm 1 / the
+    // oracle that turns it into engine-visible partitions.
+    let deployment = include_str!("../src/planner/deployment.rs");
+    assert!(deployment.contains("equal_seq_partition"));
+}
+
+#[test]
+fn cluster_geometry_has_no_private_equal_split() {
+    // The old `BucketGeom::equal(seq_len, d)` constructor is gone: the
+    // cluster derives every bucket's tiles from the deployment.
+    let cluster = include_str!("../src/cluster/mod.rs");
+    assert!(!cluster.contains("fn equal("), "BucketGeom regained a private equal split");
+    assert!(cluster.contains("fn from_deployment"), "BucketGeom must consult the Deployment");
+}

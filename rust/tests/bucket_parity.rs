@@ -17,7 +17,7 @@ use galaxy::cluster::protocol::{Cmd, Dispatcher};
 use galaxy::cluster::BucketGeom;
 use galaxy::engine::{Engine, InferRequest};
 use galaxy::model::ModelConfig;
-use galaxy::planner::Planner;
+use galaxy::planner::{Deployment, Planner, StrategyKind};
 use galaxy::profiler::Profiler;
 use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
 
@@ -45,9 +45,19 @@ struct MockCluster {
 }
 
 impl MockCluster {
-    fn new(d: usize, hidden: usize) -> Self {
-        let geoms = LADDER.iter().map(|&b| BucketGeom::equal(b, d)).collect();
-        Self { d, hidden, geoms, states: HashMap::new(), finished: HashMap::new() }
+    /// Geometry comes from the deployment — the same partition truth the
+    /// sim engine executes, exactly as the real leader derives its
+    /// per-bucket `BucketGeom`s.
+    fn new(dep: &Deployment, hidden: usize) -> Self {
+        let geoms =
+            dep.buckets().iter().map(|&b| BucketGeom::from_deployment(dep, b)).collect();
+        Self {
+            d: dep.n_devices(),
+            hidden,
+            geoms,
+            states: HashMap::new(),
+            finished: HashMap::new(),
+        }
     }
 
     fn exec(&mut self, cmds: &[Cmd]) {
@@ -92,11 +102,16 @@ fn env(d: usize) -> EdgeEnv {
     }
 }
 
-fn sim_engine<'a>(model: &'a ModelConfig, env: &'a EdgeEnv) -> SimEngine<'a> {
+/// One deployment is the single source of partition truth for both
+/// engines under parity.
+fn deployment(model: &ModelConfig, env: &EdgeEnv) -> Deployment {
     let profile = Profiler::analytic(model, env, *LADDER.last().unwrap()).profile();
     let plan = Planner::new(model, env, &profile).plan().unwrap();
-    SimEngine::new(model, env, plan, NetParams::paper_default())
-        .with_buckets(LADDER.to_vec())
+    Deployment::from_plan(plan, &LADDER)
+}
+
+fn sim_engine<'a>(model: &'a ModelConfig, env: &'a EdgeEnv, dep: Deployment) -> SimEngine<'a> {
+    SimEngine::from_deployment(model, env, dep, NetParams::paper_default()).unwrap()
 }
 
 #[test]
@@ -104,11 +119,12 @@ fn parity_mock_cluster_matches_sim_for_every_bucket() {
     let model = ModelConfig::bert_large();
     for d in [1usize, 2, 3, 4] {
         let env = env(d);
-        let mut sim = sim_engine(&model, &env);
+        let dep = deployment(&model, &env);
+        let mut sim = sim_engine(&model, &env, dep.clone());
 
         // Interleave one request per bucket through one dispatcher, the
         // way the leader's continuous batching submits them.
-        let mut mock = MockCluster::new(d, model.hidden);
+        let mut mock = MockCluster::new(&dep, model.hidden);
         let mut dispatcher = Dispatcher::new(model.layers, 2);
         for (bucket_id, _) in LADDER.iter().enumerate() {
             let cmds = dispatcher.submit(bucket_id as u64, bucket_id);
@@ -147,9 +163,10 @@ fn parity_interleaving_does_not_mix_bucket_accounting() {
     let model = ModelConfig::bert_large();
     let d = 3;
     let env = env(d);
-    let mut sim = sim_engine(&model, &env);
+    let dep = deployment(&model, &env);
+    let mut sim = sim_engine(&model, &env, dep.clone());
 
-    let mut mock = MockCluster::new(d, model.hidden);
+    let mut mock = MockCluster::new(&dep, model.hidden);
     let mut dispatcher = Dispatcher::new(model.layers, 1);
     // Tight window forces maximal interleaving of the two streams.
     mock.exec(&dispatcher.submit(0, 0));
@@ -177,10 +194,67 @@ fn parity_ladder_ring_bytes_scale_with_bucket() {
     // length, so the 128-bucket moves a quarter of the 512-bucket bytes.
     let model = ModelConfig::bert_large();
     let env = env(3);
-    let mut sim = sim_engine(&model, &env);
+    let dep = deployment(&model, &env);
+    let mut sim = sim_engine(&model, &env, dep);
     let engine: &mut dyn Engine = &mut sim;
     let small = engine.infer(&InferRequest::new(0, 128, 128)).unwrap();
     let large = engine.infer(&InferRequest::new(0, 512, 512)).unwrap();
     assert_eq!(small.ring_bytes * 4, large.ring_bytes);
     assert_eq!(small.sync_points, large.sync_points, "syncs are per layer, not per token");
+}
+
+#[test]
+fn parity_zero_unit_device_still_carries_sp_rows_through_the_ring() {
+    // Satellite: a device balanced down to 0 heads and 0 MLP units (no
+    // memory budget) still owns SP rows, so it stays a full ring
+    // participant — per-bucket tiles, sync points, and ring bytes are
+    // identical across engines and match the closed-form volume.
+    let model = ModelConfig::bert_large();
+    let d = 3;
+    let mut env = env(d);
+    env.devices[2].budget_mb = 0.0;
+    let profile = Profiler::analytic(&model, &env, *LADDER.last().unwrap()).profile();
+    let dep =
+        Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &LADDER).unwrap();
+    for rung in dep.rungs() {
+        let p = &rung.plan.partition;
+        assert_eq!(p.heads[2], 0, "no budget -> no heads at rung {}", rung.bucket);
+        assert_eq!(p.mlp_units[2], 0, "no budget -> no MLP units at rung {}", rung.bucket);
+        assert!(p.seq[2] > 0, "zero-unit device must keep SP rows at rung {}", rung.bucket);
+        assert_eq!(p.seq.iter().sum::<usize>(), rung.bucket);
+    }
+
+    let mut sim = sim_engine(&model, &env, dep.clone());
+    let mut mock = MockCluster::new(&dep, model.hidden);
+    let mut dispatcher = Dispatcher::new(model.layers, 2);
+    for (bucket_id, _) in LADDER.iter().enumerate() {
+        let cmds = dispatcher.submit(bucket_id as u64, bucket_id);
+        mock.exec(&cmds);
+    }
+    while dispatcher.outstanding() > 0 {
+        let cmds = dispatcher.ack();
+        mock.exec(&cmds);
+    }
+
+    for (bucket_id, &bucket) in LADDER.iter().enumerate() {
+        let modeled = {
+            let engine: &mut dyn Engine = &mut sim;
+            engine.infer(&InferRequest::new(50, bucket, bucket)).unwrap()
+        };
+        let (_, c) = mock.finished[&(bucket_id as u64)];
+        assert_eq!(c.sync_points, modeled.sync_points, "bucket {bucket}: sync points");
+        assert_eq!(c.ring_bytes, modeled.ring_bytes, "bucket {bucket}: ring bytes");
+        // Closed form: 4 ring phases per layer, each moving
+        // (d-1) · Σtiles · hidden fp32 elements cluster-wide — the
+        // zero-unit device's tiles are in that Σ.
+        let want = 4 * model.layers as u64
+            * (d as u64 - 1)
+            * (bucket * model.hidden * galaxy::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+        assert_eq!(c.ring_bytes, want, "bucket {bucket}: closed-form volume");
+        assert_eq!(c.sync_points, 4 * model.layers as u64);
+        // And the zero-unit device's busy telemetry is connective-only:
+        // present, but far below the unit-bearing devices.
+        assert!(modeled.device_busy_s[2] > 0.0);
+        assert!(modeled.device_busy_s[2] < modeled.device_busy_s[0] / 2.0);
+    }
 }

@@ -11,7 +11,7 @@ use galaxy::cluster::{local::LocalRunner, RealCluster};
 use galaxy::config::{default_artifacts_dir, Manifest};
 use galaxy::model::{ModelConfig, WeightGen};
 use galaxy::parallel::OverlapMode;
-use galaxy::planner::{equal_seq_partition, Partition, Plan};
+use galaxy::planner::{equal_seq_partition, Deployment, Partition, Plan};
 use galaxy::tensor::{nn, Tensor2};
 
 const SEED: u64 = 42;
@@ -226,6 +226,46 @@ fn masked_padding_preserves_valid_rows() {
         "padding leaked into valid rows: diff {}",
         av.max_abs_diff(&bv).unwrap()
     );
+}
+
+#[test]
+fn deployment_swap_respawns_ring_and_preserves_numerics() {
+    if !artifacts_built() {
+        return;
+    }
+    // The governor's real-engine surface: swapping the deployment at a
+    // request boundary re-spawns the worker ring against the new shard
+    // partition (even a different device count) and results stay
+    // partition-invariant.
+    let model = ModelConfig::galaxy_mini();
+    let (x, mask) = input(60);
+    let want = oracle_forward(&model, &x, &mask);
+    let m = manifest();
+    let mut cluster = RealCluster::spawn(
+        &model,
+        &m,
+        &plan_with(vec![6, 6], vec![6, 6], 60),
+        OverlapMode::Tiled,
+        "xla",
+        SEED,
+    )
+    .unwrap();
+    let a = cluster.infer(&x, &mask).unwrap();
+    assert!(a.allclose(&want, TOL, TOL));
+    // Skewed 3-device partition (same shard sizes other tests exercise).
+    let next =
+        Deployment::from_plan(plan_with(vec![6, 4, 2], vec![7, 3, 2], 60), &m.seq_buckets);
+    cluster.swap_deployment(&next).unwrap();
+    assert_eq!(cluster.n_devices(), 3);
+    assert_eq!(cluster.deployment().partition_for(60).heads, vec![6, 4, 2]);
+    let b = cluster.infer(&x, &mask).unwrap();
+    assert!(
+        b.allclose(&want, TOL, TOL),
+        "swap broke numerics: diff {}",
+        b.max_abs_diff(&want).unwrap()
+    );
+    // The cumulative report survives the respawn.
+    assert_eq!(cluster.report().requests, 2);
 }
 
 #[test]

@@ -255,6 +255,7 @@ impl Engine for LadderMock {
             pipeline_depth: 8,
             link_slots: 2,
             max_batch: 1,
+            deployment: None,
         }
     }
 
