@@ -20,6 +20,7 @@ use galaxy::planner::{Deployment, Planner, StrategyKind};
 use galaxy::profiler::Profiler;
 use galaxy::serving::{GovernorConfig, PlanGovernor, Policy, SchedReport, Scheduler, SchedulerConfig};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+use galaxy::transport::WireFormat;
 use galaxy::workload::{fixed_length, poisson_trace};
 
 const N: usize = 48;
@@ -166,6 +167,58 @@ fn main() -> galaxy::Result<()> {
         "tiled exposed comm {} exceeds serialized {}",
         fifo.metrics.exposed_comm_s,
         serial_links.metrics.exposed_comm_s
+    );
+
+    // Quantized wire: the same trace under each ring wire format. Tiles
+    // ship encoded (f16 halves, i8 quarters the bytes), so at 25 Mbps
+    // the exposed wire time — and with it the e2e tail — must drop.
+    let mut wire_reps: Vec<(WireFormat, SchedReport)> = Vec::new();
+    for wire in WireFormat::all() {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+            .with_wire_format(wire);
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        wire_reps.push((wire, Scheduler::with_config(engine, cfg).run(&trace)?));
+    }
+    let f32_exposed = wire_reps[0].1.metrics.exposed_comm_s;
+    let f32_p95 = wire_reps[0].1.metrics.e2e.p95_s();
+    let f32_ring = wire_reps[0].1.ring_bytes();
+    let mut wt = Table::new(
+        "wire format — per-trace ring traffic and comm deltas",
+        &["wire", "B/elem", "ring MB", "exposed comm", "e2e p95", "Δexposed", "Δp95"],
+    );
+    for (wire, rep) in &wire_reps {
+        let m = &rep.metrics;
+        wt.row(&[
+            wire.name().into(),
+            format!("{}", wire.elem_bytes()),
+            format!("{:.2}", rep.ring_bytes() as f64 / 1e6),
+            fmt_secs(m.exposed_comm_s),
+            fmt_secs(m.e2e.p95_s()),
+            format!("{:+.0}%", 100.0 * (m.exposed_comm_s / f32_exposed - 1.0)),
+            format!("{:+.0}%", 100.0 * (m.e2e.p95_s() / f32_p95 - 1.0)),
+        ]);
+    }
+    println!("{}", wt.render());
+    let (_, i8_rep) = wire_reps
+        .iter()
+        .find(|(w, _)| *w == WireFormat::I8)
+        .expect("i8 replay present");
+    assert!(
+        i8_rep.metrics.exposed_comm_s <= f32_exposed + 1e-9,
+        "i8 exposed comm {} exceeds f32's {} at {MBPS} Mbps",
+        i8_rep.metrics.exposed_comm_s,
+        f32_exposed
+    );
+    assert!(
+        i8_rep.metrics.e2e.p95_s() < f32_p95,
+        "i8 e2e p95 {} !< f32 e2e p95 {}",
+        i8_rep.metrics.e2e.p95_s(),
+        f32_p95
+    );
+    assert_eq!(
+        i8_rep.ring_bytes() * 4,
+        f32_ring,
+        "i8 wire must move exactly a quarter of the f32 bytes"
     );
 
     let speedup = fifo.metrics.throughput_rps() / serial.metrics.throughput_rps();

@@ -1,0 +1,308 @@
+//! §Bench trajectory harness: regenerates the committed `BENCH_*.json`
+//! files at the repository root — machine-readable snapshots of the three
+//! raw-speed surfaces the quantized-wire work optimizes:
+//!
+//! * `BENCH_transport.json`  — threaded-link AG-walk throughput per wire
+//!   format (tiles/s, wire MB/s) and encode-pool hit rate;
+//! * `BENCH_sim_engine.json` — `SimEngine` request throughput (wall
+//!   clock) plus the modeled per-format latency/exposed-comm numbers at
+//!   the paper's 25 Mbps low-bandwidth point;
+//! * `BENCH_scheduler.json`  — scheduler dispatch overhead per request on
+//!   a seeded replay trace (the sim engine resolves instantly in wall
+//!   clock, so wall time is pure scheduler bookkeeping).
+//!
+//! Run:   `cargo bench --bench bench_report`          (full, rewrites JSON)
+//! Smoke: `GALAXY_BENCH_SMOKE=1 cargo bench --bench bench_report`
+//!        (fewer iterations; exits non-zero when a throughput metric
+//!        regresses more than 25% against the committed baselines —
+//!        the CI gate. See BENCH.md for the schema.)
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use galaxy::config::json::Json;
+use galaxy::engine::{Engine, InferRequest};
+use galaxy::model::ModelConfig;
+use galaxy::parallel::overlap::all_gather_steps;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::serving::{Policy, Scheduler, SchedulerConfig};
+use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+use galaxy::tensor::Tensor2;
+use galaxy::testkit::{Arrival, TraceGen};
+use galaxy::transport::{self, WireFormat};
+
+/// The low-bandwidth point where the wire format matters most (paper
+/// Fig. 8 leftmost column; the trajectory tracks it per commit).
+const MBPS: f64 = 25.0;
+const SEQ: usize = 284;
+
+fn main() {
+    let smoke = std::env::var("GALAXY_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let root = repo_root();
+    let mut failures: Vec<String> = Vec::new();
+
+    let transport_json = bench_transport(smoke, &root, &mut failures);
+    let sim_json = bench_sim_engine(smoke, &root, &mut failures);
+    let sched_json = bench_scheduler(smoke, &root, &mut failures);
+
+    write_report(&root.join("BENCH_transport.json"), &transport_json);
+    write_report(&root.join("BENCH_sim_engine.json"), &sim_json);
+    write_report(&root.join("BENCH_scheduler.json"), &sched_json);
+
+    if !failures.is_empty() {
+        eprintln!("bench regression gate FAILED (>25% vs committed baseline):");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("bench trajectory written: BENCH_transport.json BENCH_sim_engine.json BENCH_scheduler.json");
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+// ---- transport -----------------------------------------------------------
+
+/// AG-walk a 2-device threaded ring `rounds` times per format and report
+/// wire throughput plus the encode-pool hit rate.
+fn bench_transport(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json {
+    let rounds: usize = if smoke { 60 } else { 400 };
+    let (tile_rows, tile_cols) = (128usize, 768usize);
+    let baseline = read_json(&root.join("BENCH_transport.json"));
+
+    let mut formats = BTreeMap::new();
+    for format in WireFormat::all() {
+        let d = 2usize;
+        let t0 = std::time::Instant::now();
+        let ring = transport::threaded_ring_with(d, format).expect("threaded ring");
+        let handles: Vec<_> = ring
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut io)| {
+                std::thread::spawn(move || {
+                    let steps = all_gather_steps(i, d);
+                    let my = Arc::new(Tensor2::full(tile_rows, tile_cols, 0.5 + i as f32));
+                    for _ in 0..rounds {
+                        let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                        tiles[i] = Some(my.clone());
+                        io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(())))
+                            .expect("ag walk");
+                    }
+                    (io.bytes, io.pool_stats())
+                })
+            })
+            .collect();
+        let mut wire_bytes = 0u64;
+        let (mut hits, mut allocs) = (0u64, 0u64);
+        for h in handles {
+            let (b, p) = h.join().expect("transport bench thread");
+            wire_bytes += b;
+            hits += p.hits;
+            allocs += p.allocs;
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let tiles_moved = (d * (d - 1) * rounds) as f64;
+        let wire_mb_per_s = wire_bytes as f64 / 1e6 / secs;
+        let hit_rate = if hits + allocs == 0 { 1.0 } else { hits as f64 / (hits + allocs) as f64 };
+
+        gate(
+            failures,
+            &format!("transport {format} wire MB/s"),
+            metric(baseline.as_ref(), &["formats", format.name(), "wire_mb_per_s"]),
+            wire_mb_per_s,
+        );
+        formats.insert(
+            format.name().to_string(),
+            obj(vec![
+                ("elem_bytes", Json::Num(format.elem_bytes() as f64)),
+                ("wire_mb", Json::Num(round3(wire_bytes as f64 / 1e6))),
+                ("wire_mb_per_s", Json::Num(round3(wire_mb_per_s))),
+                ("tiles_per_s", Json::Num(round3(tiles_moved / secs))),
+                ("pool_hit_rate", Json::Num(round3(hit_rate))),
+            ]),
+        );
+    }
+
+    obj(vec![
+        ("bench", Json::Str("transport".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("rounds", Json::Num(rounds as f64)),
+        ("tile_rows", Json::Num(tile_rows as f64)),
+        ("tile_cols", Json::Num(tile_cols as f64)),
+        ("formats", Json::Obj(formats)),
+    ])
+}
+
+// ---- sim engine ----------------------------------------------------------
+
+/// Wall-clock `SimEngine::infer` throughput plus the modeled per-format
+/// trajectory at the 25 Mbps point (Bert-L on the heterogeneous preset B).
+fn bench_sim_engine(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json {
+    let iters: usize = if smoke { 8 } else { 40 };
+    let baseline = read_json(&root.join("BENCH_sim_engine.json"));
+
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let profile = Profiler::analytic(&model, &env, SEQ).profile();
+    let plan = Planner::new(&model, &env, &profile).plan().expect("bert-l fits preset B");
+
+    let mut formats = BTreeMap::new();
+    let mut f32_rps = 0.0f64;
+    for format in WireFormat::all() {
+        let mut sim = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+            .with_wire_format(format);
+        let req = InferRequest::new(0, SEQ, SEQ);
+        let outcome = {
+            let engine: &mut dyn Engine = &mut sim;
+            engine.infer(&req).expect("sim infer")
+        };
+        let (mean_s, _best) = bench_util::time_n(iters, || {
+            let engine: &mut dyn Engine = &mut sim;
+            engine.infer(&req).expect("sim infer");
+        });
+        let rps = 1.0 / mean_s.max(1e-12);
+        if format == WireFormat::F32 {
+            f32_rps = rps;
+        }
+        formats.insert(
+            format.name().to_string(),
+            obj(vec![
+                ("requests_per_s", Json::Num(round3(rps))),
+                ("modeled_total_s", Json::Num(round6(outcome.total_s()))),
+                ("modeled_exposed_comm_s", Json::Num(round6(outcome.exposed_comm_s))),
+                ("modeled_hidden_comm_s", Json::Num(round6(outcome.hidden_comm_s))),
+                ("ring_mb", Json::Num(round3(outcome.ring_bytes as f64 / 1e6))),
+            ]),
+        );
+    }
+    gate(
+        failures,
+        "sim_engine f32 requests/s",
+        metric(baseline.as_ref(), &["formats", "f32", "requests_per_s"]),
+        f32_rps,
+    );
+
+    obj(vec![
+        ("bench", Json::Str("sim_engine".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("model", Json::Str("bert-l".into())),
+        ("env", Json::Str("B".into())),
+        ("mbps", Json::Num(MBPS)),
+        ("seq", Json::Num(SEQ as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("formats", Json::Obj(formats)),
+    ])
+}
+
+// ---- scheduler -----------------------------------------------------------
+
+/// Scheduler bookkeeping overhead on a seeded replay trace. The simulated
+/// engine returns instantly in wall clock, so elapsed wall time per
+/// request is dispatch overhead (queue ops, bucketing, batching, metric
+/// accumulation), not model execution.
+fn bench_scheduler(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json {
+    let n_requests: usize = 48;
+    let reps: usize = if smoke { 2 } else { 10 };
+    let baseline = read_json(&root.join("BENCH_scheduler.json"));
+
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let profile = Profiler::analytic(&model, &env, 512).profile();
+    let plan = Planner::new(&model, &env, &profile).plan().expect("bert-l fits preset B");
+    let trace = TraceGen::new(7)
+        .arrivals(Arrival::Poisson { rate_rps: 2.0 })
+        .lengths(&[(0.2, 64, 180), (0.6, 200, 360), (0.2, 380, 512)])
+        .requests(n_requests);
+
+    let mut last_report = None;
+    let (mean_s, _best) = bench_util::time_n(reps, || {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 30.0, max_in_flight: 0 };
+        last_report = Some(Scheduler::with_config(engine, cfg).run(&trace).expect("replay"));
+    });
+    let report = last_report.expect("at least one timed run");
+    let overhead_us = mean_s * 1e6 / n_requests as f64;
+    let dispatch_rps = n_requests as f64 / mean_s.max(1e-12);
+
+    gate(
+        failures,
+        "scheduler dispatch requests/s",
+        metric(baseline.as_ref(), &["dispatch_requests_per_s"]),
+        dispatch_rps,
+    );
+
+    obj(vec![
+        ("bench", Json::Str("scheduler".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("requests", Json::Num(n_requests as f64)),
+        ("rate_rps", Json::Num(2.0)),
+        ("seed", Json::Num(7.0)),
+        ("reps", Json::Num(reps as f64)),
+        ("dispatch_overhead_us_per_req", Json::Num(round3(overhead_us))),
+        ("dispatch_requests_per_s", Json::Num(round3(dispatch_rps))),
+        ("modeled_wall_span_s", Json::Num(round6(report.metrics.wall_span_s))),
+        ("modeled_service_p95_s", Json::Num(round6(report.metrics.service.p95_s()))),
+        ("served", Json::Num(report.served() as f64)),
+    ])
+}
+
+// ---- harness plumbing ----------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1e3).round() / 1e3
+}
+
+fn round6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
+
+fn read_json(path: &Path) -> Option<Json> {
+    std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok())
+}
+
+/// Walk `path` through nested objects; `None` when absent (bootstrap).
+fn metric(j: Option<&Json>, path: &[&str]) -> Option<f64> {
+    let mut cur = j?;
+    for k in path {
+        cur = cur.get(k).ok()?;
+    }
+    cur.as_f64().ok()
+}
+
+/// Throughput regression gate: fail when `measured` drops more than 25%
+/// below the committed baseline. Missing baselines bootstrap silently
+/// (first run on a new machine class regenerates them).
+fn gate(failures: &mut Vec<String>, name: &str, baseline: Option<f64>, measured: f64) {
+    let smoke = std::env::var("GALAXY_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if !smoke {
+        return; // full runs rewrite the trajectory, they don't gate on it
+    }
+    if let Some(base) = baseline {
+        if base > 0.0 && measured < base * 0.75 {
+            failures.push(format!("{name}: {measured:.3} < 75% of baseline {base:.3}"));
+        }
+    } else {
+        eprintln!("note: no committed baseline for `{name}` — gate skipped");
+    }
+}
+
+fn write_report(path: &Path, json: &Json) {
+    std::fs::write(path, json.to_string() + "\n")
+        .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

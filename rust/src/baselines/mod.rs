@@ -21,6 +21,7 @@ use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
 use crate::planner::{equal_seq_partition, quantize_shares};
 use crate::sim::{EdgeEnv, NetParams, SimReport};
+use crate::transport::WireFormat;
 
 /// Which strategy a simulated run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -52,11 +53,26 @@ pub fn simulate(
     net: NetParams,
     seq: usize,
 ) -> Result<SimReport> {
+    simulate_wire(kind, model, env, net, seq, WireFormat::F32)
+}
+
+/// [`simulate`] with an explicit activation wire format: the baselines'
+/// collective volumes and wire times scale with
+/// [`WireFormat::elem_bytes`], so quantized-transfer comparisons against
+/// Galaxy stay apples-to-apples.
+pub fn simulate_wire(
+    kind: BaselineKind,
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    net: NetParams,
+    seq: usize,
+    wire: WireFormat,
+) -> Result<SimReport> {
     match kind {
         BaselineKind::Local => local(model, &env.devices[0], seq),
-        BaselineKind::MegatronLm => megatron(model, env, net, seq),
-        BaselineKind::SeqPar => seqpar(model, env, net, seq),
-        BaselineKind::Pipeline => pipeline::simulate(model, env, net, seq),
+        BaselineKind::MegatronLm => megatron_wire(model, env, net, seq, wire),
+        BaselineKind::SeqPar => seqpar_wire(model, env, net, seq, wire),
+        BaselineKind::Pipeline => pipeline::simulate_wire(model, env, net, seq, wire),
     }
 }
 
@@ -91,6 +107,17 @@ pub fn local(model: &ModelConfig, dev: &crate::sim::DeviceSpec, seq: usize) -> R
 
 /// Megatron-LM style TP with equal splits + AllReduce per block.
 pub fn megatron(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) -> Result<SimReport> {
+    megatron_wire(model, env, net, seq, WireFormat::F32)
+}
+
+/// [`megatron`] with an explicit activation wire format.
+pub fn megatron_wire(
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    net: NetParams,
+    seq: usize,
+    wire: WireFormat,
+) -> Result<SimReport> {
     let d = env.len();
     // Equal split (heterogeneity-unaware), quantized to units.
     let shares = vec![1.0 / d as f64; d];
@@ -116,15 +143,18 @@ pub fn megatron(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) 
     }
 
     let mut rep = SimReport { mem_mb, ..Default::default() };
-    // Ring-AllReduce of a [seq, hidden] fp32 activation: 2(D-1) steps of
-    // chunk = N/D (see sim::net::WIRE_BYTES_PER_ELEM).
-    let tensor_bytes = (seq * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+    // Ring-AllReduce of a [seq, hidden] activation: 2(D-1) steps of
+    // chunk = N/D, at the wire format's bytes per element.
+    let tensor_bytes = (seq * model.hidden * wire.elem_bytes()) as u64;
     let chunk = tensor_bytes / d as u64;
     let step_wire = net.ring_step_time(chunk);
+    // The reduce-add runs on decoded f32 chunks, so its cost does not
+    // scale with the wire format (mirrors SimEngine::ring_exit).
+    let f32_chunk = (seq * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64 / d as u64;
     let add = env
         .devices
         .iter()
-        .map(|dev| dev.reduce_add_time(chunk))
+        .map(|dev| dev.reduce_add_time(f32_chunk))
         .fold(0.0, f64::max);
     let step_cpu = env
         .devices
@@ -176,6 +206,17 @@ pub fn megatron(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) 
 /// Sequence Parallelism: equal row shards, full weights everywhere, two
 /// AllGathers (K and V) inside every MHA block.
 pub fn seqpar(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) -> Result<SimReport> {
+    seqpar_wire(model, env, net, seq, WireFormat::F32)
+}
+
+/// [`seqpar`] with an explicit activation wire format.
+pub fn seqpar_wire(
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    net: NetParams,
+    seq: usize,
+    wire: WireFormat,
+) -> Result<SimReport> {
     let d = env.len();
     let rows = equal_seq_partition(seq, d);
 
@@ -192,9 +233,9 @@ pub fn seqpar(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) ->
 
     let mut rep = SimReport { mem_mb, ..Default::default() };
     let max_rows = *rows.iter().max().unwrap();
-    // AllGather of one [seq, hidden]-sized fp32 tensor: (D-1) ring steps
-    // of the max row-shard chunk.
-    let chunk = (max_rows * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+    // AllGather of one [seq, hidden]-sized tensor: (D-1) ring steps of
+    // the max row-shard chunk, at the wire format's bytes per element.
+    let chunk = (max_rows * model.hidden * wire.elem_bytes()) as u64;
     let step_wire = net.ring_step_time(chunk);
     let step_cpu = env
         .devices

@@ -12,6 +12,7 @@
 use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
 use crate::sim::{EdgeEnv, NetParams, SimReport};
+use crate::transport::WireFormat;
 
 /// Balanced contiguous layer split: stage sizes proportional to device
 /// capacity (same idea the paper's planner applies within layers).
@@ -40,6 +41,18 @@ pub fn stage_split(model: &ModelConfig, env: &EdgeEnv, seq: usize) -> Vec<usize>
 /// Simulate single-shot PP inference; Err(Oom) when any stage's layer
 /// weights exceed its device budget.
 pub fn simulate(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) -> Result<SimReport> {
+    simulate_wire(model, env, net, seq, WireFormat::F32)
+}
+
+/// [`simulate`] with an explicit activation wire format (scales the
+/// inter-stage hand-off bytes).
+pub fn simulate_wire(
+    model: &ModelConfig,
+    env: &EdgeEnv,
+    net: NetParams,
+    seq: usize,
+    wire: WireFormat,
+) -> Result<SimReport> {
     let stages = stage_split(model, env, seq);
     let per_layer_mb =
         (model.mha_bytes() + model.mlp_bytes()) as f64 / 1.0e6;
@@ -67,7 +80,7 @@ pub fn simulate(model: &ModelConfig, env: &EdgeEnv, net: NetParams, seq: usize) 
                 + dev.mlp_time(model, seq, model.heads)
                 + 2.0 * dev.connective_time(model, seq));
     }
-    let handoff = (seq * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+    let handoff = (seq * model.hidden * wire.elem_bytes()) as u64;
     for _ in 0..env.len().saturating_sub(1) {
         rep.exposed_comm_s += net.transfer_time(handoff);
         rep.sync_points += 1;

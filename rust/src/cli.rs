@@ -23,6 +23,7 @@ use crate::planner::{Deployment, Planner, StrategyKind};
 use crate::profiler::Profiler;
 use crate::serving::{Policy, Scheduler, SchedulerConfig};
 use crate::sim::{DeviceClass, EdgeEnv, SimEngine};
+use crate::transport::WireFormat;
 use crate::workload::QnliWorkload;
 
 /// Parsed `--key value` flags plus the subcommand.
@@ -95,9 +96,11 @@ USAGE:
                   [--strategy heuristic|exhaustive]
   galaxy simulate --model <m> --env <A..F|GPU> [--seq N] [--bandwidth MBPS]
                   [--strategy galaxy|mlm|sp|local] [--no-overlap]
+                  [--wire f32|f16|i8]
   galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
                   [--policy fifo|sjf|edf] [--window N] [--slo SECONDS]
                   [--no-overlap] [--artifacts DIR] [--seed S]
+                  [--wire f32|f16|i8]
 
 MODELS: distilbert bert-l gpt2-l opt-l opt-xl galaxy-mini
 ";
@@ -125,6 +128,9 @@ fn parse_common(args: &Args) -> Result<(ModelConfig, EdgeEnv, RunConfig)> {
     cfg.bandwidth_mbps = args.get_f64("bandwidth", 125.0)?;
     if args.has("no-overlap") {
         cfg.overlap = OverlapMode::None;
+    }
+    if let Some(w) = args.get("wire") {
+        cfg.wire = WireFormat::parse(w)?;
     }
     let model = cfg.model_config();
     let env = cfg.edge_env()?;
@@ -207,33 +213,43 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "galaxy" => {
             let profile = Profiler::analytic(&model, &env, cfg.seq).profile();
             let plan = Planner::new(&model, &env, &profile).plan()?;
-            let mut sim =
-                SimEngine::new(&model, &env, plan, cfg.net()).with_overlap(cfg.overlap);
+            let mut sim = SimEngine::new(&model, &env, plan, cfg.net())
+                .with_overlap(cfg.overlap)
+                .with_wire_format(cfg.wire);
             let engine: &mut dyn Engine = &mut sim;
             engine.infer(&InferRequest::new(0, cfg.seq, cfg.seq))?
         }
         "mlm" => outcome_from_sim(
             0,
-            &baselines::simulate(BaselineKind::MegatronLm, &model, &env, cfg.net(), cfg.seq)?,
+            &baselines::simulate_wire(
+                BaselineKind::MegatronLm,
+                &model,
+                &env,
+                cfg.net(),
+                cfg.seq,
+                cfg.wire,
+            )?,
         ),
         "sp" => outcome_from_sim(
             0,
-            &baselines::simulate(BaselineKind::SeqPar, &model, &env, cfg.net(), cfg.seq)?,
+            &baselines::simulate_wire(BaselineKind::SeqPar, &model, &env, cfg.net(), cfg.seq, cfg.wire)?,
         ),
         "local" => outcome_from_sim(
             0,
-            &baselines::simulate(BaselineKind::Local, &model, &env, cfg.net(), cfg.seq)?,
+            &baselines::simulate_wire(BaselineKind::Local, &model, &env, cfg.net(), cfg.seq, cfg.wire)?,
         ),
         other => return Err(GalaxyError::Config(format!("unknown strategy `{other}`"))),
     };
     println!(
-        "{} | {} | env {} | {} Mbps | seq {} | {}",
+        "{} | {} | env {} | {} Mbps | seq {} | {} | wire {} ({} B/elem)",
         strategy,
         model.kind.name(),
         env.name,
         cfg.bandwidth_mbps,
         cfg.seq,
-        cfg.overlap.name()
+        cfg.overlap.name(),
+        cfg.wire,
+        cfg.wire.elem_bytes()
     );
     println!(
         "end-to-end: {}  (compute {}, exposed comm {}, hidden comm {}, {} syncs, ring {:.2} MB)",
@@ -255,6 +271,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 8)?;
     let flavor = args.get_or("flavor", "xla");
     let seed = args.get_usize("seed", 42)? as u64;
+    let wire = WireFormat::parse(&args.get_or("wire", "f32"))?;
     let overlap = if args.has("no-overlap") { OverlapMode::None } else { OverlapMode::Tiled };
     let sched_cfg = SchedulerConfig {
         policy: Policy::parse(&args.get_or("policy", "fifo"))?,
@@ -273,13 +290,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let profile = Profiler::analytic(&model, &env, seq).profile();
     let plan = Planner::new(&model, &env, &profile).plan()?;
     println!(
-        "serving galaxy-mini on {d} worker(s), flavor {flavor}, {}, policy {} — partition heads {:?}",
+        "serving galaxy-mini on {d} worker(s), flavor {flavor}, {}, policy {}, wire {} — partition heads {:?}",
         overlap.name(),
         sched_cfg.policy.name(),
+        wire,
         plan.partition.heads
     );
 
-    let cluster = RealCluster::spawn(&model, &manifest, &plan, overlap, &flavor, seed)?;
+    let cluster = RealCluster::spawn_with_wire(&model, &manifest, &plan, overlap, &flavor, seed, wire)?;
     let mut scheduler = Scheduler::with_config(cluster, sched_cfg);
     let reqs = QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
         .generate(n_requests, seed);
@@ -320,8 +338,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.peak_in_flight
     );
     println!(
-        "ring traffic {:.2} MB, {} PJRT calls",
+        "ring traffic {:.2} MB on the {} wire ({} B/elem), {} PJRT calls",
         report.ring_bytes() as f64 / 1e6,
+        wire,
+        wire.elem_bytes(),
         report.pjrt_calls()
     );
     Ok(())
@@ -373,6 +393,15 @@ mod tests {
         for s in ["galaxy", "mlm", "sp", "local"] {
             run(&argv(&format!("simulate --model bert-l --env B --strategy {s}"))).unwrap();
         }
+    }
+
+    #[test]
+    fn simulate_wire_flag() {
+        for w in ["f32", "f16", "i8"] {
+            run(&argv(&format!("simulate --model bert-l --env B --wire {w}"))).unwrap();
+        }
+        let err = run(&argv("simulate --model bert-l --env B --wire f64")).unwrap_err();
+        assert!(matches!(err, GalaxyError::Config(_)), "{err}");
     }
 
     #[test]

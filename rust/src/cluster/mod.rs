@@ -44,7 +44,7 @@ use crate::model::{ModelConfig, WeightGen};
 use crate::parallel::{ExecReport, LayerSchedule, OverlapMode};
 use crate::planner::{Deployment, Plan};
 use crate::tensor::Tensor2;
-use crate::transport::{self, RingIo};
+use crate::transport::{self, RingIo, WireFormat};
 use protocol::{Cmd, Dispatcher};
 use worker::{LeaderCmd, WorkerReply};
 
@@ -158,6 +158,9 @@ pub struct RealCluster {
     manifest: Manifest,
     flavor: String,
     seed: u64,
+    /// Wire format the ring links encode tiles with; survives
+    /// [`RealCluster::swap_deployment`] re-spawns.
+    wire: WireFormat,
     /// Per-bucket ring-tile geometry, ascending by padded length; the
     /// index is the bucket id carried by `Begin`.
     geoms: Vec<BucketGeom>,
@@ -202,6 +205,28 @@ impl RealCluster {
         Self::spawn_deployment(model, manifest, &deployment, overlap, flavor, seed)
     }
 
+    /// [`RealCluster::spawn`] with an explicit ring wire format: tiles
+    /// are encoded on post (f16 halves the wire volume, i8 quarters it)
+    /// and decoded on completion, transparently to the workers.
+    pub fn spawn_with_wire(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        plan: &Plan,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+        wire: WireFormat,
+    ) -> Result<RealCluster> {
+        let deployment = Deployment::from_plan(plan.clone(), &manifest.seq_buckets);
+        let d = deployment.n_devices();
+        let links = transport::threaded_ring_with(d, wire)?;
+        let mut cluster = Self::spawn_deployment_with_links(
+            model, manifest, &deployment, overlap, flavor, seed, links,
+        )?;
+        cluster.wire = wire;
+        Ok(cluster)
+    }
+
     /// Spawn workers for a per-bucket [`Deployment`] — the general entry
     /// point; [`RealCluster::spawn`] lifts a single plan into a
     /// deployment over the manifest's bucket ladder.
@@ -213,9 +238,27 @@ impl RealCluster {
         flavor: &str,
         seed: u64,
     ) -> Result<RealCluster> {
+        Self::spawn_deployment_wire(model, manifest, deployment, overlap, flavor, seed, WireFormat::F32)
+    }
+
+    /// [`RealCluster::spawn_deployment`] with an explicit ring wire
+    /// format (see [`RealCluster::spawn_with_wire`]).
+    pub fn spawn_deployment_wire(
+        model: &ModelConfig,
+        manifest: &Manifest,
+        deployment: &Deployment,
+        overlap: OverlapMode,
+        flavor: &str,
+        seed: u64,
+        wire: WireFormat,
+    ) -> Result<RealCluster> {
         let d = deployment.n_devices();
-        let links = transport::threaded_ring(d)?;
-        Self::spawn_deployment_with_links(model, manifest, deployment, overlap, flavor, seed, links)
+        let links = transport::threaded_ring_with(d, wire)?;
+        let mut cluster = Self::spawn_deployment_with_links(
+            model, manifest, deployment, overlap, flavor, seed, links,
+        )?;
+        cluster.wire = wire;
+        Ok(cluster)
     }
 
     /// Spawn workers over caller-provided ring links — `links[i]` is
@@ -330,6 +373,9 @@ impl RealCluster {
             manifest: manifest.clone(),
             flavor: flavor.to_string(),
             seed,
+            // spawn_with_wire / spawn_deployment_wire overwrite this
+            // after the links (already carrying the codec) are wired.
+            wire: WireFormat::F32,
             geoms,
             bucket_stats: HashMap::new(),
             weights: WeightGen::new(model, seed),
@@ -353,6 +399,11 @@ impl RealCluster {
 
     pub fn overlap(&self) -> OverlapMode {
         self.overlap
+    }
+
+    /// Wire format the ring links move tiles in.
+    pub fn wire_format(&self) -> WireFormat {
+        self.wire
     }
 
     /// Reference (largest) padded sequence length of the loaded
@@ -397,13 +448,14 @@ impl RealCluster {
         let model = self.model.clone();
         let manifest = self.manifest.clone();
         let flavor = self.flavor.clone();
-        let mut next = Self::spawn_deployment(
+        let mut next = Self::spawn_deployment_wire(
             &model,
             &manifest,
             deployment,
             self.overlap,
             &flavor,
             self.seed,
+            self.wire,
         )?;
         next.epoch = self.epoch;
         next.first_start = self.first_start;

@@ -531,11 +531,15 @@ impl Worker {
             io.sync_points += 1;
         }
         let steps = all_gather_steps(i, d);
-        let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
-        tiles[i] = Some(my_tile);
+        // Slots hold refcounted tiles: posting one is a count bump (plus
+        // the codec's encode for lossy formats), never an f32 copy.
+        let mut tiles: Vec<Option<std::sync::Arc<Tensor2>>> = vec![None; d];
+        tiles[i] = Some(std::sync::Arc::new(my_tile));
         let outs = io.ag_walk(&steps, &mut tiles, compute)?;
         let full = Tensor2::concat_rows(
-            &(0..d).map(|r| tiles[r].take().expect("gathered")).collect::<Vec<_>>(),
+            &(0..d)
+                .map(|r| crate::transport::take_tile(tiles[r].take().expect("gathered")))
+                .collect::<Vec<_>>(),
         )?;
         Ok((full, outs))
     }

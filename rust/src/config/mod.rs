@@ -165,6 +165,9 @@ pub struct RunConfig {
     /// Planning strategy for the per-bucket deployment (Algorithm 1 by
     /// default; the exhaustive oracle is practical for d <= 4).
     pub strategy: StrategyKind,
+    /// Ring wire format activation tiles travel in (f32 exact, f16/i8
+    /// quantized — 2x/4x fewer synchronization bytes).
+    pub wire: crate::transport::WireFormat,
 }
 
 impl Default for RunConfig {
@@ -177,6 +180,7 @@ impl Default for RunConfig {
             overlap: OverlapMode::Tiled,
             requests: 1,
             strategy: StrategyKind::Heuristic,
+            wire: crate::transport::WireFormat::default(),
         }
     }
 }
@@ -227,6 +231,7 @@ mod tests {
         assert_eq!(c.seq, 284);
         assert_eq!(c.overlap, OverlapMode::Tiled);
         assert_eq!(c.strategy, StrategyKind::Heuristic);
+        assert_eq!(c.wire, crate::transport::WireFormat::F32);
     }
 
     #[test]

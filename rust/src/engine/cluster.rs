@@ -97,6 +97,7 @@ impl Engine for RealCluster {
             // Batch members ride the native per-layer interleave.
             max_batch: DEFAULT_MAX_BATCH,
             deployment: Some(self.deployment().clone()),
+            wire: self.wire_format(),
         }
     }
 

@@ -172,6 +172,10 @@ pub struct EngineCaps {
     /// that carry no partition state). Schedulers and governors read it
     /// here instead of re-deriving partitions.
     pub deployment: Option<Deployment>,
+    /// Wire format the engine's ring transport encodes activation tiles
+    /// with (f32 = 4 B/elem, f16 = 2, i8 = 1 + a per-tile scale header);
+    /// `ring_bytes` totals are encoded bytes, so they scale with it.
+    pub wire: crate::transport::WireFormat,
 }
 
 impl EngineCaps {
@@ -389,6 +393,7 @@ mod tests {
             link_slots: 2,
             max_batch: 1,
             deployment: None,
+            wire: crate::transport::WireFormat::F32,
         }
     }
 

@@ -53,6 +53,7 @@ impl Engine for SimEngine<'_> {
             link_slots: crate::transport::LINK_SLOTS,
             max_batch: self.max_batch(),
             deployment: Some(self.deployment().clone()),
+            wire: self.wire_format(),
         }
     }
 

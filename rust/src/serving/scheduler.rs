@@ -642,6 +642,7 @@ mod tests {
                 link_slots: 1,
                 max_batch: 1,
                 deployment: None,
+                wire: crate::transport::WireFormat::F32,
             }
         }
 
@@ -879,6 +880,7 @@ mod tests {
                 link_slots: 2,
                 max_batch: 1,
                 deployment: None,
+                wire: crate::transport::WireFormat::F32,
             }
         }
 
@@ -1044,6 +1046,7 @@ mod tests {
                 link_slots: 2,
                 max_batch: self.max_batch,
                 deployment: None,
+                wire: crate::transport::WireFormat::F32,
             }
         }
 

@@ -24,6 +24,7 @@ use crate::parallel::OverlapMode;
 use crate::planner::{Deployment, Plan};
 use crate::sim::device::EdgeEnv;
 use crate::sim::net::NetParams;
+use crate::transport::WireFormat;
 
 /// Latency breakdown of one simulated single-shot inference.
 #[derive(Clone, Debug, Default)]
@@ -118,6 +119,10 @@ pub struct SimEngine<'a> {
     overlap: OverlapMode,
     buckets: Vec<usize>,
     max_batch: usize,
+    /// Wire format the modeled ring links encode tiles with — the
+    /// bytes-per-element knob of the closed-form timeline, mirroring the
+    /// real transport's encode-on-post. F32 by default.
+    wire: WireFormat,
     /// Per-device compute slowdown factors (1.0 = calibrated speed) —
     /// the drift-injection seam for replanning tests: a device slowed
     /// mid-trace shows up in every modeled block time and in the
@@ -137,6 +142,7 @@ impl<'a> SimEngine<'a> {
             overlap: OverlapMode::Tiled,
             buckets: crate::engine::DEFAULT_SEQ_BUCKETS.to_vec(),
             max_batch: 1,
+            wire: WireFormat::F32,
             slowdown: vec![1.0; env.len()],
         }
     }
@@ -167,6 +173,7 @@ impl<'a> SimEngine<'a> {
             overlap: OverlapMode::Tiled,
             buckets,
             max_batch: 1,
+            wire: WireFormat::F32,
             slowdown: vec![1.0; env.len()],
         })
     }
@@ -210,6 +217,19 @@ impl<'a> SimEngine<'a> {
     pub fn with_overlap(mut self, overlap: OverlapMode) -> Self {
         self.overlap = overlap;
         self
+    }
+
+    /// Select the modeled ring wire format: per-element wire bytes (and
+    /// hence every ring step's serialization time and the reported
+    /// `ring_bytes`) follow [`WireFormat::elem_bytes`].
+    pub fn with_wire_format(mut self, wire: WireFormat) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    /// Wire format the modeled ring links move tiles in.
+    pub fn wire_format(&self) -> WireFormat {
+        self.wire
     }
 
     /// Override the admissible padded sequence lengths this engine
@@ -277,7 +297,7 @@ impl<'a> SimEngine<'a> {
 
         let seq_parts = p.seq.clone();
         let max_tile = *seq_parts.iter().max().unwrap();
-        let chunk_bytes = (max_tile * m.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+        let chunk_bytes = (max_tile * m.hidden * self.wire.elem_bytes()) as u64;
         let wire = self.net.ring_step_time(chunk_bytes);
         // Per-step collective CPU work (non-hideable; see DeviceClass).
         let step_cpu = self
@@ -369,12 +389,9 @@ impl<'a> SimEngine<'a> {
     /// every tile traverses `d-1` hops; in a Ring-ReduceScatter every
     /// partial is forwarded `d-1` times — identical totals either way,
     /// and exactly what the real workers' channel-send counters sum to.
-    fn phase_ring_bytes(d: usize, seq_parts: &[usize], hidden: usize) -> u64 {
+    fn phase_ring_bytes(d: usize, seq_parts: &[usize], hidden: usize, elem_bytes: usize) -> u64 {
         (d - 1) as u64
-            * seq_parts
-                .iter()
-                .map(|&r| (r * hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64)
-                .sum::<u64>()
+            * seq_parts.iter().map(|&r| (r * hidden * elem_bytes) as u64).sum::<u64>()
     }
 
     /// Connective (SP) block: per-device times accumulate into the busy
@@ -404,7 +421,8 @@ impl<'a> SimEngine<'a> {
         gemm: impl Fn(usize, usize) -> f64,
         seq_parts: &[usize],
     ) {
-        rep.ring_bytes += Self::phase_ring_bytes(d, seq_parts, self.model.hidden);
+        rep.ring_bytes +=
+            Self::phase_ring_bytes(d, seq_parts, self.model.hidden, self.wire.elem_bytes());
         if overlapped {
             for step in 0..d {
                 // Device i processes tile (i - step) mod d in step `step`.
@@ -448,8 +466,12 @@ impl<'a> SimEngine<'a> {
         gemm: impl Fn(usize, usize) -> f64,
         seq_parts: &[usize],
     ) {
-        rep.ring_bytes += Self::phase_ring_bytes(d, seq_parts, self.model.hidden);
+        rep.ring_bytes +=
+            Self::phase_ring_bytes(d, seq_parts, self.model.hidden, self.wire.elem_bytes());
         let max_tile = *seq_parts.iter().max().unwrap();
+        // The reduce-add always runs on decoded f32 tiles (the real
+        // workers decode on completion before add_assign), so its cost
+        // stays at WIRE_BYTES_PER_ELEM regardless of the wire format.
         let add = self
             .env
             .devices
@@ -670,6 +692,63 @@ mod tests {
         assert!(rep.exposed_comm_s > 0.0, "25 Mbps must leave exposed comm");
         let rep2 = run(&m, &EdgeEnv::preset_b(), 284, 1000.0, OverlapMode::Tiled);
         assert!(rep2.exposed_comm_s < rep.exposed_comm_s);
+    }
+
+    #[test]
+    fn quantized_wire_scales_ring_bytes_exactly() {
+        // ring_bytes is elems × elem_bytes: i8 moves a quarter of the
+        // f32 volume, f16 half, on the identical schedule.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let per_format = |wire: WireFormat| {
+            SimEngine::new(&m, &env, p.clone(), NetParams::mbps(125.0))
+                .with_wire_format(wire)
+                .run_inference(284)
+                .ring_bytes
+        };
+        let f32b = per_format(WireFormat::F32);
+        assert_eq!(per_format(WireFormat::F16) * 2, f32b);
+        assert_eq!(per_format(WireFormat::I8) * 4, f32b);
+        let d = env.len() as u64;
+        assert_eq!(f32b, 4 * m.layers as u64 * (d - 1) * (284 * m.hidden * 4) as u64);
+    }
+
+    #[test]
+    fn i8_wire_cuts_exposed_comm_at_25mbps() {
+        // The tentpole headline on the modeled side: at the paper's
+        // 25 Mbps setting the i8 wire format strictly reduces exposed
+        // comm (and end-to-end latency) vs f32 on the same plan, and the
+        // formats order f32 > f16 > i8 on exposed seconds.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let run_wire = |wire: WireFormat| {
+            SimEngine::new(&m, &env, p.clone(), NetParams::mbps(25.0))
+                .with_wire_format(wire)
+                .run_inference(284)
+        };
+        let f32r = run_wire(WireFormat::F32);
+        let f16r = run_wire(WireFormat::F16);
+        let i8r = run_wire(WireFormat::I8);
+        assert!(f32r.exposed_comm_s > 0.0, "25 Mbps must expose comm under f32");
+        assert!(
+            i8r.exposed_comm_s < f16r.exposed_comm_s
+                && f16r.exposed_comm_s < f32r.exposed_comm_s,
+            "exposed must order i8 {} < f16 {} < f32 {}",
+            i8r.exposed_comm_s,
+            f16r.exposed_comm_s,
+            f32r.exposed_comm_s
+        );
+        assert!(
+            i8r.total_s() < f32r.total_s(),
+            "i8 end-to-end {} must beat f32 {}",
+            i8r.total_s(),
+            f32r.total_s()
+        );
+        // Compute is untouched by the wire format; only wire seconds move.
+        assert!((i8r.compute_s - f32r.compute_s).abs() < 1e-12);
+        assert_eq!(i8r.sync_points, f32r.sync_points);
     }
 
     #[test]

@@ -6,12 +6,18 @@
 //! concurrently, so a ring step's wire time is the slowest link's
 //! serialization time plus a fixed per-message latency.
 
-/// Bytes per activation element on the wire. The paper's PyTorch/C++
-/// prototype stores weights in fp16 but exchanges activation tensors in
-/// fp32 (framework default for distributed ops), so synchronization volume
-/// is 4 B/elem regardless of the storage dtype — a factor that hits the
-/// serialized baselines harder than overlap-hiding Galaxy (see
-/// EXPERIMENTS.md calibration notes).
+/// Default bytes per activation element on the wire. The paper's
+/// PyTorch/C++ prototype stores weights in fp16 but exchanges activation
+/// tensors in fp32 (framework default for distributed ops), so
+/// synchronization volume is 4 B/elem regardless of the storage dtype — a
+/// factor that hits the serialized baselines harder than overlap-hiding
+/// Galaxy (see EXPERIMENTS.md calibration notes).
+///
+/// This is the [`crate::transport::WireFormat::F32`] setting: engines
+/// thread `WireFormat::elem_bytes()` through their ring-byte accounting
+/// (2 B for f16, 1 B for i8), and this constant remains the f32 anchor —
+/// e.g. the modeled reduce-add cost, which always runs on decoded f32
+/// tiles, keeps using it regardless of the wire format.
 pub const WIRE_BYTES_PER_ELEM: usize = 4;
 
 /// Link parameters applied uniformly to every D2D connection.

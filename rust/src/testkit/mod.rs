@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use crate::error::{GalaxyError, Result};
 use crate::tensor::Tensor2;
-use crate::transport::{LinkStats, RingLink};
+use crate::transport::{LinkStats, RingLink, WireTile};
 
 /// Fault-injection wrapper around any ring-link endpoint.
 ///
@@ -61,7 +61,7 @@ impl FaultLink {
 }
 
 impl RingLink for FaultLink {
-    fn post_send(&mut self, tile: Tensor2) -> Result<()> {
+    fn post_send(&mut self, tile: WireTile) -> Result<()> {
         if let Some(n) = self.drop_after {
             if self.posted >= n {
                 return Err(GalaxyError::Fabric(format!(
@@ -81,7 +81,7 @@ impl RingLink for FaultLink {
         self.inner.try_recv()
     }
 
-    fn complete_recv(&mut self) -> Result<Tensor2> {
+    fn complete_recv(&mut self) -> Result<WireTile> {
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
@@ -107,7 +107,7 @@ impl ScriptedRx {
 }
 
 impl RingLink for ScriptedRx {
-    fn post_send(&mut self, _tile: Tensor2) -> Result<()> {
+    fn post_send(&mut self, _tile: WireTile) -> Result<()> {
         Err(GalaxyError::Fabric("post_send on a receive endpoint".into()))
     }
 
@@ -115,10 +115,11 @@ impl RingLink for ScriptedRx {
         Ok(!self.tiles.is_empty())
     }
 
-    fn complete_recv(&mut self) -> Result<Tensor2> {
+    fn complete_recv(&mut self) -> Result<WireTile> {
         self.stats.tiles += 1;
         self.tiles
             .pop_front()
+            .map(WireTile::plain)
             .ok_or_else(|| GalaxyError::Fabric("scripted link exhausted".into()))
     }
 
@@ -344,14 +345,14 @@ mod tests {
         let (tx, mut rx) = crate::transport::threaded_pair().unwrap();
         let mut faulty = FaultLink::dropping(Box::new(tx), 1);
         let sender = std::thread::spawn(move || {
-            faulty.post_send(Tensor2::full(1, 2, 1.0)).unwrap();
-            let err = faulty.post_send(Tensor2::full(1, 2, 2.0)).unwrap_err();
+            faulty.post_send(WireTile::plain(Tensor2::full(1, 2, 1.0))).unwrap();
+            let err = faulty.post_send(WireTile::plain(Tensor2::full(1, 2, 2.0))).unwrap_err();
             assert!(err.to_string().contains("fault injection"), "{err}");
             // Thread exit drops `faulty` (and the inner endpoint).
         });
         let receiver = std::thread::spawn(move || {
-            let first = rx.complete_recv().unwrap();
-            assert_eq!(first, Tensor2::full(1, 2, 1.0));
+            let first = rx.complete_recv().unwrap().decode();
+            assert_eq!(*first, Tensor2::full(1, 2, 1.0));
             // The second tile never comes; the dropped sender must turn
             // this into an error, not a hang.
             let err = rx.complete_recv().unwrap_err();
@@ -367,10 +368,10 @@ mod tests {
         // arrives, in order.
         let (mut tx, rx) = crate::transport::threaded_pair().unwrap();
         let mut slow = FaultLink::delaying(Box::new(rx), Duration::from_millis(5));
-        tx.post_send(Tensor2::full(1, 2, 1.0)).unwrap();
-        tx.post_send(Tensor2::full(1, 2, 2.0)).unwrap();
-        assert_eq!(slow.complete_recv().unwrap(), Tensor2::full(1, 2, 1.0));
-        assert_eq!(slow.complete_recv().unwrap(), Tensor2::full(1, 2, 2.0));
+        tx.post_send(WireTile::plain(Tensor2::full(1, 2, 1.0))).unwrap();
+        tx.post_send(WireTile::plain(Tensor2::full(1, 2, 2.0))).unwrap();
+        assert_eq!(*slow.complete_recv().unwrap().decode(), Tensor2::full(1, 2, 1.0));
+        assert_eq!(*slow.complete_recv().unwrap().decode(), Tensor2::full(1, 2, 2.0));
         assert_eq!(slow.stats().tiles, 2);
     }
 
@@ -378,24 +379,24 @@ mod tests {
     fn fault_link_drop_counts_only_successful_posts() {
         let (tx, mut rx) = crate::transport::threaded_pair().unwrap();
         let mut faulty = FaultLink::dropping(Box::new(tx), 2);
-        faulty.post_send(Tensor2::full(1, 1, 1.0)).unwrap();
-        faulty.post_send(Tensor2::full(1, 1, 2.0)).unwrap();
-        assert!(faulty.post_send(Tensor2::full(1, 1, 3.0)).is_err());
-        assert!(faulty.post_send(Tensor2::full(1, 1, 4.0)).is_err());
+        faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 1.0))).unwrap();
+        faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 2.0))).unwrap();
+        assert!(faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 3.0))).is_err());
+        assert!(faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 4.0))).is_err());
         assert_eq!(faulty.stats().tiles, 2);
-        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 1.0));
-        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 2.0));
     }
 
     #[test]
     fn scripted_rx_replays_in_order() {
         let mut rx = ScriptedRx::new(vec![Tensor2::full(1, 1, 1.0), Tensor2::full(1, 1, 2.0)]);
         assert!(rx.try_recv().unwrap());
-        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 1.0));
-        assert_eq!(rx.complete_recv().unwrap(), Tensor2::full(1, 1, 2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 2.0));
         assert!(!rx.try_recv().unwrap());
         assert!(rx.complete_recv().is_err());
-        assert!(rx.post_send(Tensor2::full(1, 1, 0.0)).is_err());
+        assert!(rx.post_send(WireTile::plain(Tensor2::full(1, 1, 0.0))).is_err());
     }
 
     #[test]

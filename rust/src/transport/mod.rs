@@ -56,16 +56,37 @@
 //! backpressure stalls as exposed. Workers attribute the per-layer
 //! deltas to requests, and both engines report the totals through
 //! [`crate::engine::InferOutcome`].
+//!
+//! # Wire format + pool lease contract
+//!
+//! Links move [`WireTile`]s, not raw tensors: every [`RingIo`] owns a
+//! [`TileCodec`] that encodes on post and decodes on complete, so the
+//! walks (and everything above them — workers, collectives, engines)
+//! transparently move `elems × elem_bytes` wire bytes per tile under
+//! the selected [`WireFormat`] (4/2/1 B/elem for f32/f16/i8). `RingIo`
+//! byte counters always account the **encoded** size. F32 is exact and
+//! zero-copy (the payload is a refcounted tensor — posting and
+//! in-process forwarding never copy activation data); f16/i8 are lossy
+//! (bounds in [`wire`]'s docs) and write into buffers leased from the
+//! codec's [`TileBufPool`], which return to their origin pool when the
+//! decoded tile drops — steady-state posting allocates nothing, pinned
+//! by the no-alloc property test below and trended by the transport
+//! bench's pool hit rate.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{GalaxyError, Result};
 use crate::parallel::overlap::{AgStep, RsStep};
 use crate::tensor::Tensor2;
+
+pub mod wire;
+
+pub use wire::{PoolStats, TileBuf, TileBufPool, TileCodec, WireFormat, WireTile};
 
 /// Tiles a link keeps in flight before backpressuring the poster: the
 /// double-buffering of §III-D. The simulator's
@@ -93,10 +114,10 @@ pub struct LinkStats {
 /// only `try_recv`/`complete_recv`; calling the wrong direction is a
 /// `Fabric` error (never a silent no-op).
 pub trait RingLink {
-    /// Hand a tile to the link. Returns as soon as the tile occupies a
-    /// free slot; with [`LINK_SLOTS`] tiles already in flight the call
-    /// backpressures (threaded: blocks; in-process: errors).
-    fn post_send(&mut self, tile: Tensor2) -> Result<()>;
+    /// Hand an encoded tile to the link. Returns as soon as the tile
+    /// occupies a free slot; with [`LINK_SLOTS`] tiles already in flight
+    /// the call backpressures (threaded: blocks; in-process: errors).
+    fn post_send(&mut self, tile: WireTile) -> Result<()>;
 
     /// Non-blocking arrival check: polls the wire, parking an arrived
     /// tile in the endpoint's pending slot; returns whether a tile is
@@ -105,7 +126,7 @@ pub trait RingLink {
 
     /// Consume the next tile, blocking until it arrives. Blocked time is
     /// accounted as exposed communication.
-    fn complete_recv(&mut self) -> Result<Tensor2>;
+    fn complete_recv(&mut self) -> Result<WireTile>;
 
     /// Cumulative transfer accounting for this endpoint.
     fn stats(&self) -> LinkStats;
@@ -115,7 +136,7 @@ pub trait RingLink {
 /// (re-stamped by the io-thread at wire pickup) so the receiver can
 /// split the transfer into hidden and exposed seconds.
 struct TileMsg {
-    tile: Tensor2,
+    tile: WireTile,
     posted: Instant,
 }
 
@@ -175,7 +196,7 @@ pub fn threaded_pair() -> Result<(ThreadedTx, ThreadedRx)> {
 }
 
 impl RingLink for ThreadedTx {
-    fn post_send(&mut self, tile: Tensor2) -> Result<()> {
+    fn post_send(&mut self, tile: WireTile) -> Result<()> {
         let t0 = Instant::now();
         self.slots
             .send(TileMsg { tile, posted: t0 })
@@ -191,7 +212,7 @@ impl RingLink for ThreadedTx {
         Err(GalaxyError::Fabric("try_recv on a send endpoint".into()))
     }
 
-    fn complete_recv(&mut self) -> Result<Tensor2> {
+    fn complete_recv(&mut self) -> Result<WireTile> {
         Err(GalaxyError::Fabric("complete_recv on a send endpoint".into()))
     }
 
@@ -201,7 +222,7 @@ impl RingLink for ThreadedTx {
 }
 
 impl ThreadedRx {
-    fn consume(&mut self, msg: TileMsg, blocked_s: f64) -> Tensor2 {
+    fn consume(&mut self, msg: TileMsg, blocked_s: f64) -> WireTile {
         let span_s = msg.posted.elapsed().as_secs_f64();
         self.stats.exposed_s += blocked_s;
         self.stats.hidden_s += (span_s - blocked_s).max(0.0);
@@ -211,7 +232,7 @@ impl ThreadedRx {
 }
 
 impl RingLink for ThreadedRx {
-    fn post_send(&mut self, _tile: Tensor2) -> Result<()> {
+    fn post_send(&mut self, _tile: WireTile) -> Result<()> {
         Err(GalaxyError::Fabric("post_send on a receive endpoint".into()))
     }
 
@@ -231,7 +252,7 @@ impl RingLink for ThreadedRx {
         }
     }
 
-    fn complete_recv(&mut self) -> Result<Tensor2> {
+    fn complete_recv(&mut self) -> Result<WireTile> {
         if let Some(msg) = self.pending.take() {
             // Arrived while the consumer was computing: fully hidden.
             return Ok(self.consume(msg, 0.0));
@@ -257,9 +278,11 @@ impl RingLink for ThreadedRx {
 /// In-process link endpoint: both halves share one bounded queue with
 /// instant delivery. Where the threaded link would block, this one
 /// errors — a single-threaded lockstep has no other thread left to make
-/// progress, so a would-block *is* a deadlock and must surface.
+/// progress, so a would-block *is* a deadlock and must surface. The
+/// queue holds encoded [`WireTile`]s, so forwarding a transited F32
+/// tile moves a refcount, never a data copy.
 pub struct MemLink {
-    queue: Rc<RefCell<VecDeque<Tensor2>>>,
+    queue: Rc<RefCell<VecDeque<WireTile>>>,
     capacity: usize,
     /// Send endpoints post; receive endpoints consume.
     sender: bool,
@@ -303,7 +326,7 @@ pub fn mem_ring(d: usize, capacity: usize) -> Vec<(MemLink, MemLink)> {
 }
 
 impl RingLink for MemLink {
-    fn post_send(&mut self, tile: Tensor2) -> Result<()> {
+    fn post_send(&mut self, tile: WireTile) -> Result<()> {
         if !self.sender {
             return Err(GalaxyError::Fabric("post_send on a receive endpoint".into()));
         }
@@ -327,7 +350,7 @@ impl RingLink for MemLink {
         Ok(!self.queue.borrow().is_empty())
     }
 
-    fn complete_recv(&mut self) -> Result<Tensor2> {
+    fn complete_recv(&mut self) -> Result<WireTile> {
         if self.sender {
             return Err(GalaxyError::Fabric("complete_recv on a send endpoint".into()));
         }
@@ -350,13 +373,16 @@ impl RingLink for MemLink {
 // ---------------------------------------------------------------------
 
 /// One device's view of the ring: its send endpoint toward the successor,
-/// its receive endpoint from the predecessor, and the counters the
-/// cluster reports per request.
+/// its receive endpoint from the predecessor, the codec that encodes
+/// tiles for the wire, and the counters the cluster reports per request.
 pub struct RingIo {
     pub next: Box<dyn RingLink + Send>,
     pub prev: Box<dyn RingLink + Send>,
-    /// Bytes successfully posted — counted only **after** the link
-    /// accepted the tile, so failure paths never overreport traffic.
+    /// Encode-on-post / decode-on-complete for the walks.
+    codec: TileCodec,
+    /// **Encoded** bytes successfully posted — counted only **after**
+    /// the link accepted the tile, so failure paths never overreport
+    /// traffic, and quantized formats report their true wire volume.
     pub bytes: u64,
     /// Ring synchronization phases walked.
     pub sync_points: u64,
@@ -364,7 +390,26 @@ pub struct RingIo {
 
 impl RingIo {
     pub fn new(next: Box<dyn RingLink + Send>, prev: Box<dyn RingLink + Send>) -> Self {
-        Self { next, prev, bytes: 0, sync_points: 0 }
+        Self::with_format(next, prev, WireFormat::F32)
+    }
+
+    /// Ring I/O encoding posts under `format`.
+    pub fn with_format(
+        next: Box<dyn RingLink + Send>,
+        prev: Box<dyn RingLink + Send>,
+        format: WireFormat,
+    ) -> Self {
+        Self { next, prev, codec: TileCodec::new(format), bytes: 0, sync_points: 0 }
+    }
+
+    /// The wire format this device encodes posts with.
+    pub fn wire_format(&self) -> WireFormat {
+        self.codec.format()
+    }
+
+    /// Encode-buffer pool accounting for this device's codec.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.codec.pool_stats()
     }
 
     /// Combined endpoint accounting: exposed seconds from both sides
@@ -381,28 +426,31 @@ impl RingIo {
     /// Ring-AllGather walk (paper Fig. 6): on every step, **post the
     /// held tile first**, run the overlapped entry GEMM on it while the
     /// transfer proceeds, then reap the predecessor's tile. `tiles` is
-    /// the slot store with this device's own tile pre-placed; returns
-    /// the per-slot outputs of `compute` (None where nothing overlaps).
+    /// the slot store with this device's own tile pre-placed; slots are
+    /// refcounted, so posting and holding a tile never copy activation
+    /// data. Returns the per-slot outputs of `compute` (None where
+    /// nothing overlaps).
     pub fn ag_walk<T>(
         &mut self,
         steps: &[AgStep],
-        tiles: &mut [Option<Tensor2>],
+        tiles: &mut [Option<Arc<Tensor2>>],
         mut compute: impl FnMut(usize, &Tensor2) -> Result<Option<T>>,
     ) -> Result<Vec<Option<T>>> {
         let mut outs: Vec<Option<T>> = (0..tiles.len()).map(|_| None).collect();
         for step in steps {
             let slot = step.compute_tile;
             let xt = tiles[slot]
-                .clone()
+                .clone() // refcount bump, not a copy
                 .ok_or_else(|| GalaxyError::Fabric(format!("AG: tile {slot} missing")))?;
             if step.send_tile.is_some() {
-                let bytes = xt.size_bytes() as u64;
-                self.next.post_send(xt.clone())?;
+                let encoded = self.codec.encode(&xt);
+                let bytes = encoded.wire_bytes();
+                self.next.post_send(encoded)?;
                 self.bytes += bytes;
             }
-            outs[slot] = compute(slot, &xt)?;
+            outs[slot] = compute(slot, xt.as_ref())?;
             if let Some(r) = step.recv_tile {
-                tiles[r] = Some(self.prev.complete_recv()?);
+                tiles[r] = Some(self.prev.complete_recv()?.decode());
             }
         }
         Ok(outs)
@@ -417,33 +465,50 @@ impl RingIo {
         steps: &[RsStep],
         mut partial: impl FnMut(usize) -> Result<Tensor2>,
     ) -> Result<Tensor2> {
-        let mut acc: Option<Tensor2> = None;
+        let mut acc: Option<Arc<Tensor2>> = None;
         for step in steps {
             if step.send_tile.is_some() {
                 let t = acc.take().ok_or_else(|| {
                     GalaxyError::Fabric("RS: nothing accumulated to send".into())
                 })?;
-                let bytes = t.size_bytes() as u64;
-                self.next.post_send(t)?;
+                let encoded = self.codec.encode(&t);
+                let bytes = encoded.wire_bytes();
+                self.next.post_send(encoded)?;
                 self.bytes += bytes;
             }
             let mut o = partial(step.compute_tile)?;
             if step.recv_tile.is_some() {
-                o.add_assign(&self.prev.complete_recv()?)?;
+                o.add_assign(&self.prev.complete_recv()?.decode())?;
             }
-            acc = Some(o);
+            acc = Some(Arc::new(o));
         }
-        acc.ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))
+        let acc = acc.ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))?;
+        // The final accumulation was never posted, so the Arc is unique;
+        // the clone fallback only guards exotic custom links.
+        Ok(Arc::try_unwrap(acc).unwrap_or_else(|a| (*a).clone()))
     }
 }
 
 /// Wire a ring of `d` threaded links: element `i` is device `i`'s
-/// [`RingIo`] (sends to `(i+1)%d`, receives from `(i-1)%d`).
+/// [`RingIo`] (sends to `(i+1)%d`, receives from `(i-1)%d`). Posts are
+/// F32 (exact); use [`threaded_ring_with`] to quantize the wire.
 pub fn threaded_ring(d: usize) -> Result<Vec<RingIo>> {
+    threaded_ring_with(d, WireFormat::F32)
+}
+
+/// [`threaded_ring`] with every device encoding posts under `format`.
+pub fn threaded_ring_with(d: usize, format: WireFormat) -> Result<Vec<RingIo>> {
     Ok(ring_of(d, threaded_pair)?
         .into_iter()
-        .map(|(tx, rx)| RingIo::new(Box::new(tx), Box::new(rx)))
+        .map(|(tx, rx)| RingIo::with_format(Box::new(tx), Box::new(rx), format))
         .collect())
+}
+
+/// Move a gathered slot tile out of its `Arc` (unique after a walk — the
+/// only other holders were in-flight encodes, consumed by then; the
+/// clone fallback covers a neighbor still holding our own tile's ref).
+pub fn take_tile(tile: Arc<Tensor2>) -> Tensor2 {
+    Arc::try_unwrap(tile).unwrap_or_else(|a| (*a).clone())
 }
 
 #[cfg(test)]
@@ -485,7 +550,7 @@ mod tests {
     }
 
     impl RingLink for RecordingLink {
-        fn post_send(&mut self, _tile: Tensor2) -> Result<()> {
+        fn post_send(&mut self, _tile: WireTile) -> Result<()> {
             self.log("post");
             self.stats.tiles += 1;
             Ok(())
@@ -495,10 +560,11 @@ mod tests {
             Ok(!self.incoming.is_empty())
         }
 
-        fn complete_recv(&mut self) -> Result<Tensor2> {
+        fn complete_recv(&mut self) -> Result<WireTile> {
             self.log("recv");
             self.incoming
                 .pop_front()
+                .map(WireTile::plain)
                 .ok_or_else(|| GalaxyError::Fabric("recording link exhausted".into()))
         }
 
@@ -521,8 +587,8 @@ mod tests {
             Box::new(RecordingLink::new(journal.clone(), Vec::new())),
             Box::new(RecordingLink::new(journal.clone(), incoming)),
         );
-        let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
-        tiles[1] = Some(tile(9.0));
+        let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+        tiles[1] = Some(Arc::new(tile(9.0)));
         let gj = journal.clone();
         io.ag_walk(&steps, &mut tiles, |slot, _xt| {
             gj.lock().unwrap().push(format!("gemm-slot{slot}"));
@@ -583,13 +649,13 @@ mod tests {
         // byte counter.
         struct FailingTx;
         impl RingLink for FailingTx {
-            fn post_send(&mut self, _t: Tensor2) -> Result<()> {
+            fn post_send(&mut self, _t: WireTile) -> Result<()> {
                 Err(GalaxyError::Fabric("down".into()))
             }
             fn try_recv(&mut self) -> Result<bool> {
                 Ok(false)
             }
-            fn complete_recv(&mut self) -> Result<Tensor2> {
+            fn complete_recv(&mut self) -> Result<WireTile> {
                 Err(GalaxyError::Fabric("down".into()))
             }
             fn stats(&self) -> LinkStats {
@@ -599,7 +665,7 @@ mod tests {
         let (_keep_alive, rx) = threaded_pair().unwrap();
         let mut io = RingIo::new(Box::new(FailingTx), Box::new(rx));
         let steps = all_gather_steps(0, 2);
-        let mut tiles = vec![Some(tile(1.0)), None];
+        let mut tiles = vec![Some(Arc::new(tile(1.0))), None];
         let err = io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap_err();
         assert!(matches!(err, GalaxyError::Fabric(_)));
         assert_eq!(io.bytes, 0, "failed send must not count ring bytes");
@@ -608,19 +674,34 @@ mod tests {
     #[test]
     fn transport_mem_link_backpressures_on_third_tile() {
         let (mut tx, mut rx) = mem_link_pair(LINK_SLOTS);
-        tx.post_send(tile(1.0)).unwrap();
-        tx.post_send(tile(2.0)).unwrap();
-        let err = tx.post_send(tile(3.0)).unwrap_err();
+        tx.post_send(WireTile::plain(tile(1.0))).unwrap();
+        tx.post_send(WireTile::plain(tile(2.0))).unwrap();
+        let err = tx.post_send(WireTile::plain(tile(3.0))).unwrap_err();
         assert!(err.to_string().contains("backpressure"), "{err}");
         // Consuming one frees a slot.
         assert!(rx.try_recv().unwrap());
-        let got = rx.complete_recv().unwrap();
-        assert_eq!(got, tile(1.0));
-        tx.post_send(tile(3.0)).unwrap();
-        assert_eq!(rx.complete_recv().unwrap(), tile(2.0));
-        assert_eq!(rx.complete_recv().unwrap(), tile(3.0));
+        let got = rx.complete_recv().unwrap().decode();
+        assert_eq!(*got, tile(1.0));
+        tx.post_send(WireTile::plain(tile(3.0))).unwrap();
+        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(3.0));
         let err = rx.complete_recv().unwrap_err();
         assert!(err.to_string().contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn transport_mem_link_forwards_by_refcount_not_copy() {
+        // Satellite fix: a transited F32 tile is shared, never cloned —
+        // the payload a receiver decodes is the very allocation the
+        // sender posted.
+        let (mut tx, mut rx) = mem_link_pair(LINK_SLOTS);
+        let payload = Arc::new(tile(7.0));
+        let codec = TileCodec::new(WireFormat::F32);
+        tx.post_send(codec.encode(&payload)).unwrap();
+        assert_eq!(Arc::strong_count(&payload), 2, "the queue holds a ref, not a copy");
+        let got = rx.complete_recv().unwrap().decode();
+        assert!(Arc::ptr_eq(&payload, &got), "forward path must be zero-copy");
+        assert_eq!(codec.pool_stats(), PoolStats::default());
     }
 
     #[test]
@@ -628,10 +709,10 @@ mod tests {
         let (mut tx, mut rx) = mem_link_pair(LINK_SLOTS);
         assert!(tx.try_recv().is_err());
         assert!(tx.complete_recv().is_err());
-        assert!(rx.post_send(tile(0.0)).is_err());
+        assert!(rx.post_send(WireTile::plain(tile(0.0))).is_err());
         let (mut ttx, mut trx) = threaded_pair().unwrap();
         assert!(ttx.try_recv().is_err());
-        assert!(trx.post_send(tile(0.0)).is_err());
+        assert!(trx.post_send(WireTile::plain(tile(0.0))).is_err());
     }
 
     #[test]
@@ -639,22 +720,22 @@ mod tests {
         let (mut tx, mut rx) = threaded_pair().unwrap();
         // Two posts return without a consumer; the third blocks until a
         // slot frees (asserted via a flag the posting thread sets).
-        tx.post_send(tile(1.0)).unwrap();
-        tx.post_send(tile(2.0)).unwrap();
+        tx.post_send(WireTile::plain(tile(1.0))).unwrap();
+        tx.post_send(WireTile::plain(tile(2.0))).unwrap();
         let done = Arc::new(AtomicBool::new(false));
         let done2 = done.clone();
         let h = std::thread::spawn(move || {
-            tx.post_send(tile(3.0)).unwrap();
+            tx.post_send(WireTile::plain(tile(3.0))).unwrap();
             done2.store(true, Ordering::SeqCst);
             tx // keep the endpoint alive until joined
         });
         std::thread::sleep(Duration::from_millis(50));
         assert!(!done.load(Ordering::SeqCst), "third post must backpressure");
-        assert_eq!(rx.complete_recv().unwrap(), tile(1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(1.0));
         let tx = h.join().unwrap();
         assert!(done.load(Ordering::SeqCst));
-        assert_eq!(rx.complete_recv().unwrap(), tile(2.0));
-        assert_eq!(rx.complete_recv().unwrap(), tile(3.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(3.0));
         assert_eq!(tx.stats().tiles, 3);
         assert_eq!(rx.stats().tiles, 3);
         assert!(rx.stats().exposed_s >= 0.0 && rx.stats().hidden_s >= 0.0);
@@ -673,14 +754,14 @@ mod tests {
     #[test]
     fn transport_dropped_receiver_unblocks_sender() {
         let (mut tx, rx) = threaded_pair().unwrap();
-        tx.post_send(tile(1.0)).unwrap();
+        tx.post_send(WireTile::plain(tile(1.0))).unwrap();
         drop(rx);
         // The in-flight tile is lost with the receiver; subsequent posts
         // must error out once the io-thread has noticed (bounded retries
         // absorb the shutdown race).
         let mut failed = false;
         for _ in 0..50 {
-            if tx.post_send(tile(2.0)).is_err() {
+            if tx.post_send(WireTile::plain(tile(2.0))).is_err() {
                 failed = true;
                 break;
             }
@@ -703,8 +784,8 @@ mod tests {
             let my = shards[i].clone();
             handles.push(std::thread::spawn(move || {
                 let steps = all_gather_steps(i, d);
-                let mut tiles: Vec<Option<Tensor2>> = vec![None; d];
-                tiles[i] = Some(my);
+                let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                tiles[i] = Some(Arc::new(my));
                 io.ag_walk(&steps, &mut tiles, |_, _| {
                     // Stand-in for the entry GEMM the transfer overlaps.
                     std::thread::sleep(Duration::from_millis(1));
@@ -712,7 +793,7 @@ mod tests {
                 })
                 .unwrap();
                 let parts: Vec<Tensor2> =
-                    tiles.into_iter().map(|t| t.expect("gathered")).collect();
+                    tiles.into_iter().map(|t| take_tile(t.expect("gathered"))).collect();
                 (Tensor2::concat_rows(&parts).unwrap(), io.bytes, io.link_stats())
             }));
         }
@@ -722,6 +803,107 @@ mod tests {
             assert_eq!(bytes, (d as u64 - 1) * shards[0].size_bytes() as u64);
             assert_eq!(stats.tiles, 2 * (d as u64 - 1)); // sent + received
             assert!(stats.exposed_s >= 0.0 && stats.hidden_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn transport_quantized_walk_counts_encoded_bytes() {
+        // The byte counter reports the wire truth: an I8 walk moves a
+        // quarter of the F32 volume for the same schedule.
+        let d = 4;
+        let journal = Arc::new(Mutex::new(Vec::new()));
+        let steps = all_gather_steps(1, d);
+        let incoming: Vec<Tensor2> = (0..d - 1).map(|i| tile(i as f32)).collect();
+        let mut io = RingIo::with_format(
+            Box::new(RecordingLink::new(journal.clone(), Vec::new())),
+            Box::new(RecordingLink::new(journal, incoming)),
+            WireFormat::I8,
+        );
+        assert_eq!(io.wire_format(), WireFormat::I8);
+        let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+        tiles[1] = Some(Arc::new(tile(9.0)));
+        io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap();
+        let elems = tile(0.0).len() as u64;
+        assert_eq!(io.bytes, (d as u64 - 1) * elems, "i8 moves 1 B/elem");
+        assert_eq!(io.pool_stats().hits + io.pool_stats().allocs, d as u64 - 1);
+    }
+
+    #[test]
+    fn transport_steady_state_posting_never_allocates() {
+        // The no-alloc-per-post contract: after the first round leases
+        // its buffers, every further quantized post is a pool hit.
+        let d = 2;
+        let rounds = 30;
+        let ios = threaded_ring_with(d, WireFormat::I8).unwrap();
+        let mut handles = Vec::new();
+        for (i, mut io) in ios.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                let steps = all_gather_steps(i, d);
+                for r in 0..rounds {
+                    let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                    tiles[i] = Some(Arc::new(tile(r as f32 + 1.0)));
+                    io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap();
+                }
+                io.pool_stats()
+            }));
+        }
+        for h in handles {
+            let stats = h.join().unwrap();
+            assert_eq!(stats.hits + stats.allocs, rounds as u64, "one lease per post");
+            assert!(
+                stats.allocs <= LINK_SLOTS as u64 + 1,
+                "steady-state posts must reuse pooled buffers, allocated {}",
+                stats.allocs
+            );
+            assert!(stats.hit_rate() > 0.8, "hit rate {}", stats.hit_rate());
+        }
+    }
+
+    #[test]
+    fn transport_quantized_ring_all_gather_stays_within_bounds() {
+        // A real threaded AG under each lossy format lands within the
+        // format's stated error bound of the exact gather.
+        let d = 3;
+        let mut vals = Vec::new();
+        let mut seed = 0.05f32;
+        for _ in 0..d {
+            let t = Tensor2::from_vec(2, 3, (0..6).map(|k| {
+                seed = (seed * 1.7 + 0.3) % 2.0 - 1.0;
+                seed * (k as f32 + 1.0)
+            }).collect())
+            .unwrap();
+            vals.push(t);
+        }
+        let want = reference::all_gather(&vals).unwrap();
+        for format in [WireFormat::F16, WireFormat::I8] {
+            let ios = threaded_ring_with(d, format).unwrap();
+            let mut handles = Vec::new();
+            for (i, mut io) in ios.into_iter().enumerate() {
+                let my = vals[i].clone();
+                handles.push(std::thread::spawn(move || {
+                    let steps = all_gather_steps(i, d);
+                    let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                    tiles[i] = Some(Arc::new(my));
+                    io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap();
+                    let parts: Vec<Tensor2> =
+                        tiles.into_iter().map(|t| take_tile(t.expect("gathered"))).collect();
+                    Tensor2::concat_rows(&parts).unwrap()
+                }));
+            }
+            // AG re-encoding is idempotent, so even the farthest-traveled
+            // tile carries one encode's error (plus ulp-level scale drift).
+            let (rtol, atol) = match format {
+                WireFormat::F16 => (1e-3, 1e-4),
+                _ => (1e-2, 6e-2),
+            };
+            for h in handles {
+                let got = h.join().unwrap();
+                assert!(
+                    got.allclose(&want, rtol, atol),
+                    "{format}: diff {}",
+                    got.max_abs_diff(&want).unwrap()
+                );
+            }
         }
     }
 }

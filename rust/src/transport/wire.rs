@@ -1,0 +1,569 @@
+//! Quantized wire formats + pooled encode buffers for the ring transport.
+//!
+//! The ring moves activation tiles, and bytes are the cost the paper's
+//! bandwidth sweep (§V) punishes hardest — so the transport can encode
+//! tiles before they hit the wire. Three formats:
+//!
+//! * [`WireFormat::F32`] — the framework default (4 B/elem). Encoding is
+//!   a refcount bump: the payload is the `Arc<Tensor2>` itself, so an
+//!   F32 post copies **nothing** and an in-process forward is pointer-
+//!   sized.
+//! * [`WireFormat::F16`] — IEEE 754 binary16, 2 B/elem, hand-rolled bit
+//!   conversion (the offline registry has no `half` crate). Round-off is
+//!   ≤ 2⁻¹¹ relative in the normal range.
+//! * [`WireFormat::I8`] — symmetric per-tile int8: `scale = max|x|/127`,
+//!   `q = round(x/scale)`, 1 B/elem. The scale rides in the tile header
+//!   (out of band, excluded from byte accounting — a constant 4 B per
+//!   tile against KBs of payload, and excluding it keeps the modeled and
+//!   measured `ring_bytes` exactly `elems × elem_bytes` on both engines).
+//!
+//! Re-encoding a decoded tile is **idempotent** for both lossy formats
+//! (the max element quantizes to exactly ±127, so the tile's scale is a
+//! fixed point): an AllGather hop chain adds no error beyond the first
+//! encode. A ReduceScatter *does* compound — each hop re-quantizes the
+//! running partial sum — so its error bound grows with the ring size
+//! (the collective parity tests pin both bounds).
+//!
+//! # Pool lease contract
+//!
+//! Lossy encodes write into a [`TileBuf`] leased from a [`TileBufPool`]
+//! instead of allocating per post. The lease follows the tile: it
+//! travels to the receiving endpoint inside the [`WireTile`], and when
+//! the decoded tile drops the buffer returns to its **origin** pool
+//! (cross-thread safe — the pool is `Arc<Mutex<…>>` and the lease holds
+//! a weak handle, so an outliving buffer never keeps a dead pool
+//! alive). With `LINK_SLOTS` tiles in flight a ring steady-states on a
+//! handful of buffers; [`PoolStats`] counts leases served from the free
+//! list (`hits`) vs fresh allocations (`allocs`), which is what the
+//! no-alloc-per-post property test and the transport bench's pool hit
+//! rate read.
+
+use std::fmt;
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::error::{GalaxyError, Result};
+use crate::tensor::Tensor2;
+
+/// Encoding of activation tiles on the ring wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireFormat {
+    /// 4 B/elem, exact; payload is a refcounted `Tensor2` (zero-copy).
+    #[default]
+    F32,
+    /// 2 B/elem IEEE binary16; ≤ 2⁻¹¹ relative round-off per encode.
+    F16,
+    /// 1 B/elem symmetric int8 with a per-tile scale; ≤ `max|x|/254`
+    /// absolute error per encode.
+    I8,
+}
+
+impl WireFormat {
+    /// Bytes per activation element on the wire.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            WireFormat::F32 => 4,
+            WireFormat::F16 => 2,
+            WireFormat::I8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::F16 => "f16",
+            WireFormat::I8 => "i8",
+        }
+    }
+
+    /// Parse a CLI/config spelling (`f32`, `f16`, `i8`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(WireFormat::F32),
+            "f16" | "fp16" => Ok(WireFormat::F16),
+            "i8" | "int8" => Ok(WireFormat::I8),
+            other => Err(GalaxyError::Config(format!(
+                "unknown wire format `{other}` (expected f32, f16 or i8)"
+            ))),
+        }
+    }
+
+    /// All formats, for sweeps and parity tests.
+    pub fn all() -> [WireFormat; 3] {
+        [WireFormat::F32, WireFormat::F16, WireFormat::I8]
+    }
+}
+
+impl fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> f16 bit conversion (no `half` crate in the offline registry)
+// ---------------------------------------------------------------------
+
+/// Convert an `f32` to IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = (x >> 16) & 0x8000;
+    let mut mantissa = x & 0x007f_ffff;
+    let exp = (x >> 23) & 0xff;
+    if exp == 255 {
+        // Inf / NaN (keep a payload bit so NaN stays NaN).
+        let m = if mantissa != 0 { 0x0200 } else { 0 };
+        return (sign | 0x7c00 | m) as u16;
+    }
+    let e = exp as i32 - 127 + 15;
+    if e >= 31 {
+        return (sign | 0x7c00) as u16; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign as u16; // underflow → ±0
+        }
+        // Subnormal half: shift the 24-bit significand into the 10-bit
+        // field, round to nearest even.
+        mantissa |= 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = mantissa >> shift;
+        let rem = mantissa & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = half + u32::from(rem > halfway || (rem == halfway && (half & 1) == 1));
+        return (sign | rounded) as u16;
+    }
+    let half = ((e as u32) << 10) | (mantissa >> 13);
+    let rem = mantissa & 0x1fff;
+    // Round to nearest even; a carry propagates correctly into the
+    // exponent (1.11…1 rounds up to the next power of two / to inf).
+    let rounded = half + u32::from(rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1));
+    (sign | rounded) as u16
+}
+
+/// Convert IEEE binary16 bits back to `f32` (exact — every half value is
+/// representable in single precision).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e: i32 = 113;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // Inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------
+// Buffer pool
+// ---------------------------------------------------------------------
+
+/// Pool accounting: every lease is either a `hit` (served from the free
+/// list) or an `alloc` (fresh allocation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub allocs: u64,
+}
+
+impl PoolStats {
+    /// Fraction of leases served without allocating (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.allocs;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct PoolInner {
+    free: Vec<Vec<u8>>,
+    stats: PoolStats,
+}
+
+/// Shared free-list of encode buffers (see module docs for the lease
+/// contract). Cloning shares the pool.
+#[derive(Clone, Default)]
+pub struct TileBufPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl TileBufPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease a buffer with capacity for at least `len` bytes. The buffer
+    /// comes back empty; it returns to this pool when the lease drops.
+    pub fn lease(&self, len: usize) -> TileBuf {
+        let mut g = self.inner.lock().expect("tile pool poisoned");
+        let mut data = match g.free.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                g.stats.hits += 1;
+                g.free.swap_remove(i)
+            }
+            None => {
+                g.stats.allocs += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        data.clear();
+        TileBuf { data, pool: Arc::downgrade(&self.inner) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().expect("tile pool poisoned").stats
+    }
+}
+
+/// A pooled byte buffer: dereferences to its bytes, returns to its
+/// origin pool on drop (no-op if the pool is gone).
+pub struct TileBuf {
+    data: Vec<u8>,
+    pool: Weak<Mutex<PoolInner>>,
+}
+
+impl TileBuf {
+    /// A free-standing buffer not backed by any pool (tests, one-shots).
+    pub fn unpooled(data: Vec<u8>) -> Self {
+        Self { data, pool: Weak::new() }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    fn push_u16(&mut self, v: u16) {
+        self.data.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+impl Drop for TileBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            if let Ok(mut g) = pool.lock() {
+                g.free.push(std::mem::take(&mut self.data));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire tiles + codec
+// ---------------------------------------------------------------------
+
+enum Payload {
+    F32(Arc<Tensor2>),
+    F16(TileBuf),
+    I8 { buf: TileBuf, scale: f32 },
+}
+
+/// One encoded tile as it travels a ring link: shape header + payload.
+/// Produced by [`TileCodec::encode`] (or [`WireTile::plain`] for raw
+/// F32), consumed by [`WireTile::decode`].
+pub struct WireTile {
+    rows: usize,
+    cols: usize,
+    payload: Payload,
+}
+
+impl WireTile {
+    /// Wrap an owned tensor as an exact F32 tile (no codec needed).
+    pub fn plain(t: Tensor2) -> Self {
+        Self { rows: t.rows(), cols: t.cols(), payload: Payload::F32(Arc::new(t)) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn format(&self) -> WireFormat {
+        match self.payload {
+            Payload::F32(_) => WireFormat::F32,
+            Payload::F16(_) => WireFormat::F16,
+            Payload::I8 { .. } => WireFormat::I8,
+        }
+    }
+
+    /// Payload bytes this tile occupies on the wire: `elems × elem_bytes`
+    /// (the I8 scale is header, not payload — see module docs).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.rows * self.cols * self.format().elem_bytes()) as u64
+    }
+
+    /// Decode back to a tensor. F32 is a refcount move (zero-copy);
+    /// lossy formats reconstruct and release their pooled buffer.
+    pub fn decode(self) -> Arc<Tensor2> {
+        let (rows, cols) = (self.rows, self.cols);
+        match self.payload {
+            Payload::F32(t) => t,
+            Payload::F16(buf) => {
+                let data: Vec<f32> = buf
+                    .as_slice()
+                    .chunks_exact(2)
+                    .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                    .collect();
+                Arc::new(Tensor2::from_vec(rows, cols, data).expect("encoded shape"))
+            }
+            Payload::I8 { buf, scale } => {
+                let data: Vec<f32> =
+                    buf.as_slice().iter().map(|&b| (b as i8) as f32 * scale).collect();
+                Arc::new(Tensor2::from_vec(rows, cols, data).expect("encoded shape"))
+            }
+        }
+    }
+}
+
+/// Encoder for one ring endpoint: a wire format plus the buffer pool its
+/// lossy encodes lease from.
+pub struct TileCodec {
+    format: WireFormat,
+    pool: TileBufPool,
+}
+
+impl TileCodec {
+    pub fn new(format: WireFormat) -> Self {
+        Self { format, pool: TileBufPool::new() }
+    }
+
+    /// Share an existing pool (e.g. one pool across a lockstep ring).
+    pub fn with_pool(format: WireFormat, pool: TileBufPool) -> Self {
+        Self { format, pool }
+    }
+
+    pub fn format(&self) -> WireFormat {
+        self.format
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Encode a tile for the wire. F32 bumps the refcount; F16/I8 write
+    /// into a pooled buffer.
+    pub fn encode(&self, t: &Arc<Tensor2>) -> WireTile {
+        let (rows, cols) = (t.rows(), t.cols());
+        let payload = match self.format {
+            WireFormat::F32 => Payload::F32(t.clone()),
+            WireFormat::F16 => {
+                let mut buf = self.pool.lease(t.len() * 2);
+                for &x in t.data() {
+                    buf.push_u16(f32_to_f16_bits(x));
+                }
+                Payload::F16(buf)
+            }
+            WireFormat::I8 => {
+                let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = max_abs / 127.0;
+                let mut buf = self.pool.lease(t.len());
+                if scale == 0.0 {
+                    buf.data.resize(t.len(), 0);
+                } else {
+                    for &x in t.data() {
+                        let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
+                        buf.data.push(q as u8);
+                    }
+                }
+                Payload::I8 { buf, scale }
+            }
+        };
+        WireTile { rows, cols, payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Pcg64};
+
+    fn rand_tensor(rng: &mut Pcg64, rows: usize, cols: usize) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal()).collect()).unwrap()
+    }
+
+    #[test]
+    fn wire_format_parse_and_names() {
+        assert_eq!(WireFormat::parse("f32").unwrap(), WireFormat::F32);
+        assert_eq!(WireFormat::parse("FP16").unwrap(), WireFormat::F16);
+        assert_eq!(WireFormat::parse("int8").unwrap(), WireFormat::I8);
+        assert!(WireFormat::parse("q4").is_err());
+        assert_eq!(WireFormat::I8.to_string(), "i8");
+        assert_eq!(
+            WireFormat::all().map(|f| f.elem_bytes()),
+            [4, 2, 1],
+            "elem widths are the whole point"
+        );
+        assert_eq!(WireFormat::default(), WireFormat::F32);
+    }
+
+    #[test]
+    fn f16_known_values_round_trip_exactly() {
+        // Values exactly representable in binary16 must survive unchanged.
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY, "overflow → inf");
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0, "underflow → 0");
+        // Subnormal half: 2^-24 is the smallest positive binary16 value.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+    }
+
+    #[test]
+    fn prop_f16_round_trip_error_bound() {
+        // Normal range: relative error ≤ 2^-11 (half ulp of a 10-bit
+        // significand); below 2^-14 the error is bounded by the
+        // subnormal quantum 2^-25.
+        forall(
+            "f16 round-trip bound",
+            31,
+            300,
+            |rng| rng.normal() * 10f32.powi(rng.range(0, 6) as i32 - 3),
+            |&x| {
+                let back = f16_bits_to_f32(f32_to_f16_bits(x));
+                let bound = (x.abs() * 2f32.powi(-11)).max(2f32.powi(-25));
+                if (back - x).abs() <= bound {
+                    Ok(())
+                } else {
+                    Err(format!("|{back} - {x}| > {bound}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_i8_round_trip_error_bound() {
+        // Symmetric per-tile int8: absolute error ≤ scale/2 = max|x|/254.
+        forall(
+            "i8 round-trip bound",
+            32,
+            100,
+            |rng| {
+                let rows = rng.range(1, 8) as usize;
+                let cols = rng.range(1, 8) as usize;
+                rand_tensor(rng, rows, cols)
+            },
+            |t| {
+                let codec = TileCodec::new(WireFormat::I8);
+                let arc = Arc::new(t.clone());
+                let back = codec.encode(&arc).decode();
+                let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let bound = max_abs / 254.0 + 1e-7;
+                for (a, b) in t.data().iter().zip(back.data()) {
+                    if (a - b).abs() > bound {
+                        return Err(format!("|{a} - {b}| > {bound}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn lossy_re_encode_is_idempotent() {
+        // The AG-hop invariant: encode∘decode is a projection, so a tile
+        // forwarded d-1 hops carries only the first encode's error. The
+        // per-hop scale may drift by an ulp, never the quantized codes.
+        let mut rng = Pcg64::new(33);
+        for format in [WireFormat::F16, WireFormat::I8] {
+            let codec = TileCodec::new(format);
+            let mut t = Arc::new(rand_tensor(&mut rng, 6, 5));
+            let first = codec.encode(&t).decode();
+            t = first.clone();
+            for hop in 0..4 {
+                t = codec.encode(&t).decode();
+                assert!(
+                    t.allclose(&first, 1e-6, 1e-9),
+                    "{format}: hop {hop} drifted beyond ulp noise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_all_zero_tile_is_exact() {
+        let codec = TileCodec::new(WireFormat::I8);
+        let z = Arc::new(Tensor2::zeros(3, 4));
+        let back = codec.encode(&z).decode();
+        assert_eq!(*back, *z, "zero tile must not divide by a zero scale");
+    }
+
+    #[test]
+    fn f32_encode_is_a_refcount_bump() {
+        let codec = TileCodec::new(WireFormat::F32);
+        let t = Arc::new(Tensor2::full(2, 2, 3.0));
+        let wt = codec.encode(&t);
+        assert_eq!(Arc::strong_count(&t), 2, "encode must share, not copy");
+        let back = wt.decode();
+        assert!(Arc::ptr_eq(&t, &back), "decode must return the same allocation");
+        assert_eq!(codec.pool_stats(), PoolStats::default(), "F32 never touches the pool");
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_the_format() {
+        let t = Arc::new(Tensor2::full(4, 8, 1.5));
+        for format in WireFormat::all() {
+            let codec = TileCodec::new(format);
+            let wt = codec.encode(&t);
+            assert_eq!(wt.format(), format);
+            assert_eq!(wt.wire_bytes(), (4 * 8 * format.elem_bytes()) as u64);
+            assert_eq!((wt.rows(), wt.cols()), (4, 8));
+        }
+        assert_eq!(WireTile::plain(Tensor2::zeros(2, 3)).wire_bytes(), 24);
+    }
+
+    #[test]
+    fn pool_reuses_buffers_after_warmup() {
+        // The lease contract: once as many buffers exist as are ever
+        // simultaneously live, every further lease is a hit.
+        let codec = TileCodec::new(WireFormat::I8);
+        let t = Arc::new(Tensor2::full(8, 8, 2.0));
+        for _ in 0..3 {
+            drop(codec.encode(&t)); // warm-up leases, returned on drop
+        }
+        let after_warmup = codec.pool_stats().allocs;
+        for _ in 0..50 {
+            let wt = codec.encode(&t);
+            drop(wt.decode()); // decode consumes the tile, lease returns
+        }
+        let stats = codec.pool_stats();
+        assert_eq!(stats.allocs, after_warmup, "steady state must not allocate");
+        assert!(stats.hits >= 50);
+        assert!(stats.hit_rate() > 0.9, "hit rate {}", stats.hit_rate());
+    }
+
+    #[test]
+    fn pool_survives_cross_scope_returns() {
+        let pool = TileBufPool::new();
+        let codec = TileCodec::with_pool(WireFormat::F16, pool.clone());
+        let t = Arc::new(Tensor2::full(4, 4, 1.0));
+        let wt = codec.encode(&t);
+        drop(codec); // codec gone; the lease still knows its pool
+        drop(wt);
+        assert_eq!(pool.stats().allocs, 1);
+        let _second = pool.lease(32);
+        assert_eq!(pool.stats().hits, 1, "returned buffer must be reused");
+    }
+}

@@ -39,6 +39,9 @@ struct Counters {
 struct MockCluster {
     d: usize,
     hidden: usize,
+    /// Bytes per element on the wire — `WireFormat::elem_bytes()` on the
+    /// real path; the mock applies the same encoded-bytes accounting.
+    elem_bytes: usize,
     geoms: Vec<BucketGeom>,
     states: HashMap<u64, (usize, Counters)>,
     finished: HashMap<u64, (usize, Counters)>,
@@ -49,11 +52,18 @@ impl MockCluster {
     /// sim engine executes, exactly as the real leader derives its
     /// per-bucket `BucketGeom`s.
     fn new(dep: &Deployment, hidden: usize) -> Self {
+        Self::new_wire(dep, hidden, galaxy::sim::net::WIRE_BYTES_PER_ELEM)
+    }
+
+    /// Like [`MockCluster::new`], but accounting a quantized wire format
+    /// (`elem_bytes` = 2 for f16, 1 for i8).
+    fn new_wire(dep: &Deployment, hidden: usize, elem_bytes: usize) -> Self {
         let geoms =
             dep.buckets().iter().map(|&b| BucketGeom::from_deployment(dep, b)).collect();
         Self {
             d: dep.n_devices(),
             hidden,
+            elem_bytes,
             geoms,
             states: HashMap::new(),
             finished: HashMap::new(),
@@ -74,8 +84,8 @@ impl MockCluster {
                     let geom = &self.geoms[*bucket];
                     let tile_elems: usize =
                         geom.tiles.iter().map(|&t| t * self.hidden).sum();
-                    let phase_bytes = (self.d - 1) as u64
-                        * (tile_elems * galaxy::sim::net::WIRE_BYTES_PER_ELEM) as u64;
+                    let phase_bytes =
+                        (self.d - 1) as u64 * (tile_elems * self.elem_bytes) as u64;
                     c.ring_bytes += 4 * phase_bytes;
                     if self.d > 1 {
                         c.sync_points += 4;
@@ -201,6 +211,60 @@ fn parity_ladder_ring_bytes_scale_with_bucket() {
     let large = engine.infer(&InferRequest::new(0, 512, 512)).unwrap();
     assert_eq!(small.ring_bytes * 4, large.ring_bytes);
     assert_eq!(small.sync_points, large.sync_points, "syncs are per layer, not per token");
+}
+
+#[test]
+fn parity_quantized_wire_scales_ring_bytes_on_both_engines() {
+    // Satellite: ring-byte totals are *encoded* bytes on both engines,
+    // so switching the wire format scales them by exactly
+    // elem_bytes / 4 relative to f32 — and the two engines keep agreeing
+    // per request for every format, bucket, and device count. Sync
+    // points are format-independent (same schedule, smaller tiles).
+    let model = ModelConfig::bert_large();
+    for d in [2usize, 3, 4] {
+        let env = env(d);
+        let dep = deployment(&model, &env);
+        let mut f32_per_bucket: Vec<u64> = Vec::new();
+        for wire in galaxy::transport::WireFormat::all() {
+            let mut sim = sim_engine(&model, &env, dep.clone()).with_wire_format(wire);
+            let mut mock = MockCluster::new_wire(&dep, model.hidden, wire.elem_bytes());
+            let mut dispatcher = Dispatcher::new(model.layers, 2);
+            for (bucket_id, _) in LADDER.iter().enumerate() {
+                let cmds = dispatcher.submit(bucket_id as u64, bucket_id);
+                mock.exec(&cmds);
+            }
+            while dispatcher.outstanding() > 0 {
+                let cmds = dispatcher.ack();
+                mock.exec(&cmds);
+            }
+
+            for (bucket_id, &bucket) in LADDER.iter().enumerate() {
+                let modeled = {
+                    let engine: &mut dyn Engine = &mut sim;
+                    engine.infer(&InferRequest::new(9, bucket, bucket)).unwrap()
+                };
+                let (_, c) = mock.finished[&(bucket_id as u64)];
+                assert_eq!(
+                    c.ring_bytes, modeled.ring_bytes,
+                    "d={d} bucket={bucket} wire={wire}: ring bytes diverged"
+                );
+                assert_eq!(
+                    c.sync_points, modeled.sync_points,
+                    "d={d} bucket={bucket} wire={wire}: sync points diverged"
+                );
+                if wire == galaxy::transport::WireFormat::F32 {
+                    f32_per_bucket.push(modeled.ring_bytes);
+                } else {
+                    // Exact byte ratio vs the f32 anchor, per bucket.
+                    assert_eq!(
+                        modeled.ring_bytes * 4,
+                        f32_per_bucket[bucket_id] * wire.elem_bytes() as u64,
+                        "d={d} bucket={bucket} wire={wire}: byte ratio"
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]

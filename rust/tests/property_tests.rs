@@ -256,6 +256,7 @@ impl Engine for LadderMock {
             link_slots: 2,
             max_batch: 1,
             deployment: None,
+            wire: galaxy::transport::WireFormat::F32,
         }
     }
 

@@ -11,6 +11,7 @@ use galaxy::profiler::Profiler;
 use galaxy::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
 use galaxy::testkit::{Arrival, TraceGen};
+use galaxy::transport::WireFormat;
 use galaxy::workload::Request;
 
 // Low-bandwidth regime: communication bubbles dominate service time,
@@ -203,6 +204,59 @@ fn bucket_ladder_cuts_padded_waste_while_batching() {
     assert!(ladder.ring_bytes() < single.ring_bytes());
     // And the ladder must not cost wall-clock time.
     assert!(ladder.metrics.wall_span_s <= single.metrics.wall_span_s * 1.01 + 1e-9);
+}
+
+#[test]
+fn i8_wire_cuts_e2e_p95_and_exposed_comm_on_the_replay_trace() {
+    // The quantized-wire acceptance check: on the seeded 25 Mbps replay
+    // trace, shipping ring tiles as i8 (1 B/elem instead of 4) must cut
+    // both the end-to-end p95 latency and the trace's total exposed
+    // communication time versus the f32 wire — while serving the exact
+    // same requests through the exact same schedule.
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let trace = qnli_trace(24, 2.0, 7);
+    let run = |wire: WireFormat| -> SchedReport {
+        let engine = SimEngine::new(&model, &env, plan(&model, &env, 512), NetParams::mbps(MBPS))
+            .with_wire_format(wire);
+        Scheduler::new(engine).run(&trace).unwrap()
+    };
+    let base = run(WireFormat::F32);
+    let quant = run(WireFormat::I8);
+    assert_eq!(base.served(), 24);
+    assert_eq!(quant.served(), 24);
+
+    let e2e_p95 = |r: &SchedReport| -> f64 {
+        let mut e2e: Vec<f64> =
+            r.completions.iter().map(|c| c.queueing_s + c.service_s).collect();
+        e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        e2e[((e2e.len() * 95 + 99) / 100).saturating_sub(1)]
+    };
+    let exposed = |r: &SchedReport| -> f64 {
+        r.completions.iter().map(|c| c.outcome.exposed_comm_s).sum()
+    };
+
+    assert!(
+        exposed(&quant) < exposed(&base),
+        "i8 exposed comm {} !< f32 exposed comm {}",
+        exposed(&quant),
+        exposed(&base)
+    );
+    assert!(
+        e2e_p95(&quant) < e2e_p95(&base),
+        "i8 e2e p95 {} !< f32 e2e p95 {}",
+        e2e_p95(&quant),
+        e2e_p95(&base)
+    );
+    // The byte ratio is exact: same elements, a quarter of the bytes.
+    assert_eq!(quant.ring_bytes() * 4, base.ring_bytes());
+    // And quantization never changes what was scheduled, only how fast
+    // the wire phases drained.
+    assert_eq!(base.completions.len(), quant.completions.len());
+    for (a, b) in base.completions.iter().zip(quant.completions.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.bucket, b.bucket);
+    }
 }
 
 #[test]
