@@ -96,7 +96,7 @@ fn bench_transport(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json
                         io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(())))
                             .expect("ag walk");
                     }
-                    (io.bytes, io.pool_stats())
+                    (io.bytes, io.pool_stats().expect("pool stats"))
                 })
             })
             .collect();

@@ -150,6 +150,8 @@ pub fn megatron_wire(
     let step_wire = net.ring_step_time(chunk);
     // The reduce-add runs on decoded f32 chunks, so its cost does not
     // scale with the wire format (mirrors SimEngine::ring_exit).
+    // lint: allow(wire-elem-bytes): reduce-add operands are decoded f32,
+    // independent of the wire format (mirrors SimEngine::ring_exit)
     let f32_chunk = (seq * model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64 / d as u64;
     let add = env
         .devices
@@ -232,7 +234,7 @@ pub fn seqpar_wire(
     }
 
     let mut rep = SimReport { mem_mb, ..Default::default() };
-    let max_rows = *rows.iter().max().unwrap();
+    let max_rows = rows.iter().copied().max().unwrap_or(0);
     // AllGather of one [seq, hidden]-sized tensor: (D-1) ring steps of
     // the max row-shard chunk, at the wire format's bytes per element.
     let chunk = (max_rows * model.hidden * wire.elem_bytes()) as u64;

@@ -101,6 +101,9 @@ USAGE:
                   [--policy fifo|sjf|edf] [--window N] [--slo SECONDS]
                   [--no-overlap] [--artifacts DIR] [--seed S]
                   [--wire f32|f16|i8]
+  galaxy lint     [--fix-allowlist]
+                  checks the invariant rule table (docs/INVARIANTS.md)
+                  against the crate sources; exits non-zero on violations
 
 MODELS: distilbert bert-l gpt2-l opt-l opt-xl galaxy-mini
 ";
@@ -112,6 +115,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -148,9 +152,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
     buckets.push(cfg.seq);
     let deployment = Deployment::plan(cfg.strategy, &model, &env, &profile, &buckets)?;
 
-    let reference = deployment
-        .rung(cfg.seq)
-        .expect("deployment covers the reference length");
+    let reference = deployment.rung(cfg.seq).ok_or_else(|| {
+        GalaxyError::Config(format!("deployment has no rung for the reference seq {}", cfg.seq))
+    })?;
     let plan = &reference.plan;
     let mut t = Table::new(
         format!(
@@ -345,6 +349,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.pjrt_calls()
     );
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let violations = crate::lint::check()?;
+    if violations.is_empty() {
+        println!("galaxy lint: clean ({} rules)", crate::lint::RULES.len());
+        return Ok(());
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    if args.has("fix-allowlist") {
+        println!("\nallowlist stanzas for intentional violations:");
+        print!("{}", crate::lint::fix_allowlist(&violations));
+    }
+    Err(GalaxyError::Lint(format!("{} violation(s)", violations.len())))
 }
 
 #[cfg(test)]

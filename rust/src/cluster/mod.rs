@@ -599,7 +599,9 @@ impl RealCluster {
         self.check_poisoned()?;
         loop {
             if let Some(pos) = self.completed.iter().position(|f| f.id == id) {
-                return Ok(self.completed.remove(pos).expect("position just found"));
+                if let Some(done) = self.completed.remove(pos) {
+                    return Ok(done);
+                }
             }
             if !self.inflight.contains_key(&id) {
                 return Err(GalaxyError::Fabric(format!("request {id} is not in flight")));
@@ -629,8 +631,9 @@ impl RealCluster {
         for cmd in cmds {
             match *cmd {
                 Cmd::Begin { req, bucket } => {
-                    let (x, mask) =
-                        begin_payload.expect("Begin emitted outside its own submission");
+                    let (x, mask) = begin_payload.ok_or_else(|| {
+                        GalaxyError::Fabric("Begin emitted outside its own submission".into())
+                    })?;
                     let geom = &self.geoms[bucket];
                     for (i, tx) in self.to_workers.iter().enumerate() {
                         let shard = x.slice_rows(geom.offsets[i], geom.tiles[i])?;
@@ -718,9 +721,19 @@ impl RealCluster {
     /// fold the counters into the cumulative report, and queue the
     /// completion for harvesting.
     fn finalize(&mut self, req: u64) -> Result<()> {
-        let fl = self.inflight.remove(&req).expect("finalize of in-flight request");
-        let parts: Vec<Tensor2> =
-            fl.shards.into_iter().map(|s| s.expect("all workers replied")).collect();
+        let fl = self.inflight.remove(&req).ok_or_else(|| {
+            GalaxyError::Fabric(format!("finalize of request {req} that is not in flight"))
+        })?;
+        let parts = fl
+            .shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| {
+                    GalaxyError::Fabric(format!("finalize of {req}: worker {i} never replied"))
+                })
+            })
+            .collect::<Result<Vec<Tensor2>>>()?;
         let output = Tensor2::concat_rows(&parts)?;
         let service_s = fl.started.elapsed().as_secs_f64();
         let finished_s = fl.started_s + service_s;

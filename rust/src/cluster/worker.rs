@@ -345,6 +345,14 @@ impl Worker {
         Ok(())
     }
 
+    /// Fetch a weight shard `load_weights` should have materialized. A
+    /// missing shard means the leader sequenced commands wrong — a
+    /// fabric fault the leader can poison on, never a worker panic.
+    fn shard_ref<'a, T>(w: &'a Option<T>, l: usize, name: &str) -> Result<&'a T> {
+        w.as_ref()
+            .ok_or_else(|| GalaxyError::Fabric(format!("layer {l}: {name} shard not loaded")))
+    }
+
     /// One HMP layer; input/output are this device's SP row-shards,
     /// tiled by the request's bucket geometry.
     fn layer(
@@ -381,7 +389,7 @@ impl Worker {
             let rows = geom.tiles[slot];
             let name = self.art(&format!("qkv_tile_t{rows}_k{}", s.k_heads));
             let xt_lit = literal::from_tensor(xt)?;
-            let wqkv = self.layers[l].wqkv.as_ref().expect("wqkv");
+            let wqkv = Self::shard_ref(&self.layers[l].wqkv, l, "wqkv")?;
             Ok(Some(self.rt.exec_tensor(&name, &[&xt_lit, wqkv], rows, 3 * kd)?))
         })?;
 
@@ -392,9 +400,16 @@ impl Worker {
             let tiles = geom.tiles.clone();
             c_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
-            let qkv = Tensor2::concat_rows(
-                &qkv_tiles.into_iter().map(|t| t.expect("qkv tile")).collect::<Vec<_>>(),
-            )?;
+            let qkv_tiles = qkv_tiles
+                .into_iter()
+                .enumerate()
+                .map(|(slot, t)| {
+                    t.ok_or_else(|| {
+                        GalaxyError::Fabric(format!("AG left no qkv tile for slot {slot}"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let qkv = Tensor2::concat_rows(&qkv_tiles)?;
             let q = qkv.slice_cols(0, kd)?;
             let k = qkv.slice_cols(kd, kd)?;
             let v = qkv.slice_cols(2 * kd, kd)?;
@@ -414,20 +429,17 @@ impl Worker {
                 let name = self.art(&format!("out_proj_tile_t{rows}_k{k_heads}"));
                 let bt = b.slice_rows(off, rows)?;
                 let bt_lit = literal::from_tensor(&bt)?;
-                let wout = self.layers[l].wout.as_ref().expect("wout");
+                let wout = Self::shard_ref(&self.layers[l].wout, l, "wout")?;
                 self.rt.exec_tensor(&name, &[&bt_lit, wout], rows, h)
             });
         } else {
             // Serial mode: one fused artifact produces the full partial C_i.
             let x_lit = literal::from_tensor(&x_full)?;
+            let wqkv = Self::shard_ref(&self.layers[l].wqkv, l, "wqkv")?;
+            let wout = Self::shard_ref(&self.layers[l].wout, l, "wout")?;
             let c = self.rt.exec_tensor(
                 &self.art_seq("mha_shard", &format!("k{}", s.k_heads), seq),
-                &[
-                    &x_lit,
-                    self.layers[l].wqkv.as_ref().expect("wqkv"),
-                    self.layers[l].wout.as_ref().expect("wout"),
-                    &mask_lit,
-                ],
+                &[&x_lit, wqkv, wout, &mask_lit],
                 seq,
                 h,
             )?;
@@ -458,7 +470,7 @@ impl Worker {
             let rows = geom.tiles[slot];
             let name = self.art(&format!("mlp_gemm1_tile_t{rows}_u{}", s.u_units));
             let ht_lit = literal::from_tensor(ht)?;
-            let w1 = self.layers[l].w1.as_ref().expect("w1");
+            let w1 = Self::shard_ref(&self.layers[l].w1, l, "w1")?;
             Ok(Some(self.rt.exec_tensor(&name, &[&ht_lit, w1], rows, width)?))
         })?;
 
@@ -467,9 +479,16 @@ impl Worker {
             let tiles = geom.tiles.clone();
             f_partial_tile = Box::new(move |slot| Ok(Tensor2::zeros(tiles[slot], h)));
         } else if tiled {
-            let e = Tensor2::concat_rows(
-                &e_tiles.into_iter().map(|t| t.expect("e tile")).collect::<Vec<_>>(),
-            )?;
+            let e_tiles = e_tiles
+                .into_iter()
+                .enumerate()
+                .map(|(slot, t)| {
+                    t.ok_or_else(|| {
+                        GalaxyError::Fabric(format!("AG left no mlp tile for slot {slot}"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let e = Tensor2::concat_rows(&e_tiles)?;
             let u_units = s.u_units;
             f_partial_tile = Box::new(move |slot| {
                 let rows = geom.tiles[slot];
@@ -477,18 +496,16 @@ impl Worker {
                 let name = self.art(&format!("mlp_gemm2_tile_t{rows}_u{u_units}"));
                 let et = e.slice_rows(off, rows)?;
                 let et_lit = literal::from_tensor(&et)?;
-                let w2 = self.layers[l].w2.as_ref().expect("w2");
+                let w2 = Self::shard_ref(&self.layers[l].w2, l, "w2")?;
                 self.rt.exec_tensor(&name, &[&et_lit, w2], rows, h)
             });
         } else {
             let h1_lit = literal::from_tensor(&h1_full)?;
+            let w1 = Self::shard_ref(&self.layers[l].w1, l, "w1")?;
+            let w2 = Self::shard_ref(&self.layers[l].w2, l, "w2")?;
             let f = self.rt.exec_tensor(
                 &self.art_seq("mlp_shard", &format!("u{}", s.u_units), seq),
-                &[
-                    &h1_lit,
-                    self.layers[l].w1.as_ref().expect("w1"),
-                    self.layers[l].w2.as_ref().expect("w2"),
-                ],
+                &[&h1_lit, w1, w2],
                 seq,
                 h,
             )?;
@@ -536,11 +553,14 @@ impl Worker {
         let mut tiles: Vec<Option<std::sync::Arc<Tensor2>>> = vec![None; d];
         tiles[i] = Some(std::sync::Arc::new(my_tile));
         let outs = io.ag_walk(&steps, &mut tiles, compute)?;
-        let full = Tensor2::concat_rows(
-            &(0..d)
-                .map(|r| crate::transport::take_tile(tiles[r].take().expect("gathered")))
-                .collect::<Vec<_>>(),
-        )?;
+        let parts = (0..d)
+            .map(|r| {
+                tiles[r].take().map(crate::transport::take_tile).ok_or_else(|| {
+                    GalaxyError::Fabric(format!("AG: tile {r} missing after walk"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let full = Tensor2::concat_rows(&parts)?;
         Ok((full, outs))
     }
 

@@ -92,7 +92,9 @@ pub fn ring_all_gather(shards: &[Tensor2]) -> Result<Vec<Tensor2>> {
 /// moving 2x/4x fewer bytes.
 pub fn ring_all_gather_wire(shards: &[Tensor2], format: WireFormat) -> Result<Vec<Tensor2>> {
     let mut per_req = ring_all_gather_multi_wire(std::slice::from_ref(&shards.to_vec()), format)?;
-    Ok(per_req.pop().expect("one request in, one out"))
+    per_req
+        .pop()
+        .ok_or_else(|| GalaxyError::Fabric("ring_all_gather: one request in, none out".into()))
 }
 
 /// Lockstep Ring-AllGather for one or more **interleaved requests** over
@@ -154,7 +156,7 @@ pub fn ring_all_gather_multi_wire(
                     let payload = tiles[q][i][t].clone().ok_or_else(|| {
                         GalaxyError::Fabric(format!("dev {i} step {s}: tile {t} not yet held"))
                     })?;
-                    links[i].0.post_send(codec.encode(&payload))?;
+                    links[i].0.post_send(codec.encode(&payload)?)?;
                 }
             }
         }
@@ -168,7 +170,7 @@ pub fn ring_all_gather_multi_wire(
                             "dev {i} step {s}: tile {r} did not arrive — schedule broken"
                         )));
                     }
-                    tiles[q][i][r] = Some(links[i].1.complete_recv()?.decode());
+                    tiles[q][i][r] = Some(links[i].1.complete_recv()?.decode()?);
                 }
                 let ct = plans[i][s].compute_tile;
                 if tiles[q][i][ct].is_none() {
@@ -185,8 +187,13 @@ pub fn ring_all_gather_multi_wire(
             per_dev
                 .into_iter()
                 .map(|mut held| {
-                    let parts: Vec<Tensor2> =
-                        (0..d).map(|r| take_tile(held[r].take().expect("gathered"))).collect();
+                    let parts = (0..d)
+                        .map(|r| {
+                            held[r].take().map(take_tile).ok_or_else(|| {
+                                GalaxyError::Fabric(format!("AG: tile {r} missing after walk"))
+                            })
+                        })
+                        .collect::<Result<Vec<Tensor2>>>()?;
                     Tensor2::concat_rows(&parts)
                 })
                 .collect()
@@ -213,7 +220,9 @@ pub fn ring_reduce_scatter_wire(
 ) -> Result<Vec<Tensor2>> {
     let req = (partials.to_vec(), seq_parts.to_vec());
     let mut per_req = ring_reduce_scatter_multi_wire(std::slice::from_ref(&req), format)?;
-    Ok(per_req.pop().expect("one request in, one out"))
+    per_req
+        .pop()
+        .ok_or_else(|| GalaxyError::Fabric("ring_reduce_scatter: one request in, none out".into()))
 }
 
 /// Lockstep Ring-ReduceScatter for one or more interleaved requests over
@@ -268,7 +277,7 @@ pub fn ring_reduce_scatter_multi_wire(
                     let t = acc[q][i].take().ok_or_else(|| {
                         GalaxyError::Fabric(format!("dev {i} had nothing to send at step {s}"))
                     })?;
-                    links[i].0.post_send(codec.encode(&t))?;
+                    links[i].0.post_send(codec.encode(&t)?)?;
                 }
             }
         }
@@ -279,16 +288,25 @@ pub fn ring_reduce_scatter_multi_wire(
             for i in 0..d {
                 let mut mine = tile_of(q, i, plans[i][s].compute_tile)?;
                 if plans[i][s].recv_tile.is_some() {
-                    mine.add_assign(&links[i].1.complete_recv()?.decode())?;
+                    mine.add_assign(&links[i].1.complete_recv()?.decode()?)?;
                 }
                 acc[q][i] = Some(Arc::new(mine));
             }
         }
     }
-    Ok(acc
-        .into_iter()
-        .map(|per_dev| per_dev.into_iter().map(|a| take_tile(a.expect("reduced"))).collect())
-        .collect())
+    acc.into_iter()
+        .map(|per_dev| {
+            per_dev
+                .into_iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    a.map(take_tile).ok_or_else(|| {
+                        GalaxyError::Fabric(format!("RS: device {i} never accumulated"))
+                    })
+                })
+                .collect::<Result<Vec<Tensor2>>>()
+        })
+        .collect()
 }
 
 /// Ring-AllReduce = Ring-ReduceScatter + Ring-AllGather (the Megatron-LM

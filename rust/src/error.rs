@@ -33,6 +33,10 @@ pub enum GalaxyError {
     /// Cluster fabric failure (a worker died or a channel closed).
     Fabric(String),
 
+    /// `galaxy lint` found invariant violations (the message carries
+    /// the file:line diagnostics).
+    Lint(String),
+
     Io(std::io::Error),
 }
 
@@ -49,6 +53,7 @@ impl fmt::Display for GalaxyError {
             GalaxyError::Xla(m) => write!(f, "xla runtime: {m}"),
             GalaxyError::Config(m) => write!(f, "config: {m}"),
             GalaxyError::Fabric(m) => write!(f, "fabric: {m}"),
+            GalaxyError::Lint(m) => write!(f, "lint: {m}"),
             GalaxyError::Io(e) => write!(f, "{e}"),
         }
     }

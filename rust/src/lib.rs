@@ -54,6 +54,7 @@ pub mod collective;
 pub mod config;
 pub mod engine;
 pub mod error;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod parallel;

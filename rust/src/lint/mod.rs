@@ -1,0 +1,636 @@
+//! `galaxy lint` — the repo's invariant checker.
+//!
+//! Several of this codebase's load-bearing invariants are *textual*: they
+//! say "this token may only appear in that module", which no type system
+//! enforces. They used to live as `include_str!` grep pins inside
+//! `tests/api_surface.rs`; this module promotes them into a first-class
+//! lint pass with a declarative rule table, real `file:line` diagnostics,
+//! and an inline allowlist. The `galaxy lint` CLI subcommand and the
+//! `api_surface` integration test are both thin wrappers over [`RULES`].
+//!
+//! The scanner is deliberately *not* a Rust parser: it tokenizes just far
+//! enough to strip comments, string/char literals, and `#[cfg(test)]`
+//! module bodies, then substring-matches the rule table against what is
+//! left. That keeps the checker dependency-free (no rustc plugin, no
+//! syn), fast, and — because every rule is a plain token — trivially
+//! auditable. Each rule documents *why* in [`Rule::why`]; the full
+//! catalogue with allowlisting instructions lives in
+//! `docs/INVARIANTS.md`.
+//!
+//! # Allowlisting
+//!
+//! A violation that is intentional is suppressed by a comment on (or
+//! directly above) the flagged line:
+//!
+//! ```text
+//! // lint: allow(rule-id): one-line justification
+//! ```
+//!
+//! The marker covers its own line and, when it sits on a pure comment
+//! line, extends through the next line that carries code — so a
+//! multi-line justification comment block protects exactly the statement
+//! it precedes. `galaxy lint --fix-allowlist` prints a paste-ready stanza
+//! for every current violation.
+
+use crate::error::{GalaxyError, Result};
+use std::collections::BTreeMap;
+use std::ffi::OsStr;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One declarative invariant: forbid tokens in a path scope, require
+/// pins elsewhere. All paths are `/`-separated and relative to the
+/// source root (`rust/src`); a trailing `/` scopes a whole module tree.
+pub struct Rule {
+    /// Stable id, referenced by `lint: allow(<id>)` markers.
+    pub id: &'static str,
+    /// Why the invariant exists (shown in diagnostics).
+    pub why: &'static str,
+    /// Path prefixes this rule scans. Empty means every file.
+    pub scan: &'static [&'static str],
+    /// Path prefixes exempt from the forbid tokens.
+    pub except: &'static [&'static str],
+    /// Tokens that must not appear in scanned, non-exempt code.
+    pub forbid: &'static [&'static str],
+    /// Skip `#[cfg(test)]` / `#[cfg(all(test, ..))]` item bodies.
+    pub skip_test_code: bool,
+    /// `(file, token)` pins that must be present — the positive half of
+    /// the invariant (the blessed definition/consultation sites).
+    pub require: &'static [(&'static str, &'static str)],
+}
+
+/// The rule table. Every entry subsumes a pin that previously lived in
+/// `tests/api_surface.rs` or a review checklist; see `docs/INVARIANTS.md`
+/// for the catalogue (origin PR, rationale, allowlisting).
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "partition-truth",
+        why: "the §III-C.2 sequence split is planner truth; engines consult the \
+              Deployment instead of re-deriving it (baselines simulate *other* \
+              systems' strategies and are exempt)",
+        scan: &[],
+        except: &["planner/", "baselines/"],
+        forbid: &["equal_seq_partition"],
+        skip_test_code: false,
+        require: &[
+            ("planner/mod.rs", "pub fn equal_seq_partition"),
+            ("planner/deployment.rs", "equal_seq_partition"),
+        ],
+    },
+    Rule {
+        id: "bucket-geom",
+        why: "BucketGeom must derive tile geometry from the Deployment, not a \
+              private equal split",
+        scan: &["cluster/mod.rs"],
+        except: &[],
+        forbid: &["fn equal("],
+        skip_test_code: false,
+        require: &[("cluster/mod.rs", "fn from_deployment")],
+    },
+    Rule {
+        id: "transport-sync-shim",
+        why: "transport code must go through transport::sync so the loom model \
+              checks the exact synchronization the real build runs",
+        scan: &["transport/"],
+        except: &["transport/sync.rs"],
+        forbid: &["std::sync", "std::thread", "std::time"],
+        skip_test_code: true,
+        require: &[
+            ("transport/mod.rs", "use self::sync::"),
+            ("transport/wire.rs", "use super::sync::"),
+        ],
+    },
+    Rule {
+        id: "no-unwrap",
+        why: "library code propagates GalaxyError; a panic in an io-thread \
+              poisons locks instead of degrading like a dead neighbor",
+        scan: &[],
+        except: &[],
+        forbid: &[".unwrap()", ".expect("],
+        skip_test_code: true,
+        require: &[],
+    },
+    Rule {
+        id: "wire-elem-bytes",
+        why: "ring-byte accounting must follow WireFormat::elem_bytes so \
+              quantized formats shrink modeled and measured bytes alike",
+        scan: &[],
+        except: &["sim/net.rs"],
+        forbid: &["WIRE_BYTES_PER_ELEM"],
+        skip_test_code: true,
+        require: &[
+            ("sim/engine.rs", "elem_bytes"),
+            ("baselines/mod.rs", "elem_bytes"),
+            ("baselines/pipeline.rs", "elem_bytes"),
+            ("cli.rs", "elem_bytes"),
+        ],
+    },
+    Rule {
+        id: "measured-clock",
+        why: "wall-clock reads outside the measurement plumbing make replans \
+              depend on un-modeled time; route timing through the cluster's \
+              measured path (Engine::measured_now_s)",
+        scan: &[],
+        except: &[
+            "cluster/local.rs",
+            "cluster/mod.rs",
+            "cluster/worker.rs",
+            "profiler/real.rs",
+            "transport/sync.rs",
+        ],
+        forbid: &["Instant::now", "SystemTime::now"],
+        skip_test_code: true,
+        require: &[("engine/mod.rs", "measured_now_s")],
+    },
+];
+
+/// A single lint diagnostic. `line == 0` marks a file-level violation
+/// (a missing require-pin).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A scanned source file: comment/string-stripped text (newlines
+/// preserved, so line numbers survive), per-line allow markers, and the
+/// `#[cfg(test)]`-body mask.
+pub struct FileScan {
+    /// Whole stripped text (for require-pin checks).
+    pub stripped: String,
+    /// Stripped text split into lines (no trailing newline per entry).
+    pub lines: Vec<String>,
+    /// 1-based line -> rule ids allowed there via `lint: allow(..)`.
+    pub allows: BTreeMap<usize, Vec<String>>,
+    /// `mask[i]` is true when 1-based line `i + 1` is inside a
+    /// `#[cfg(test)]`-gated item body.
+    pub test_mask: Vec<bool>,
+}
+
+/// Strip comments (line and nested block), string literals (plain, raw,
+/// byte), and char literals from Rust source, replacing them with spaces
+/// and preserving every newline. Lifetimes (`'a`) survive; `'x'` char
+/// literals do not — the lookahead distinguishes them.
+pub fn strip_code(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let n = chars.len();
+    let mut i = 0;
+
+    // Emit a blank for a stripped char, preserving newlines.
+    fn blank(out: &mut String, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+
+    while i < n {
+        let c = chars[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, chars[i]);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, chars[i]);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw byte) string: r"..", r#".."#, br#".."#.
+        let ident_before = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if (c == 'r' || c == 'b') && !ident_before {
+            let start = if c == 'b' && i + 1 < n && chars[i + 1] == 'r' { i + 2 } else { i + 1 };
+            let is_raw = c == 'r' || (c == 'b' && start == i + 2);
+            let mut hashes = 0usize;
+            let mut j = start;
+            while is_raw && j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if is_raw && j < n && chars[j] == '"' {
+                // Keep the prefix chars blanked, scan to `"` + hashes `#`s.
+                for k in i..=j {
+                    blank(&mut out, chars[k]);
+                }
+                i = j + 1;
+                while i < n {
+                    let closes = chars[i] == '"'
+                        && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closes {
+                        for k in i..(i + 1 + hashes).min(n) {
+                            blank(&mut out, chars[k]);
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Not a raw string: fall through and emit `r`/`b` literally
+            // (a following `"` is handled as a plain string next round).
+        }
+        // Plain (or byte) string literal.
+        if c == '"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    blank(&mut out, chars[i]);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = chars[i] == '"';
+                blank(&mut out, chars[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: after `'`, a backslash or a
+        // char-then-`'` means char literal; anything else is a lifetime.
+        if c == '\'' {
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            let is_char = matches!(next, Some('\\')) || matches!(after, Some('\''));
+            if is_char {
+                blank(&mut out, c);
+                i += 1;
+                while i < n {
+                    if chars[i] == '\\' && i + 1 < n {
+                        blank(&mut out, chars[i]);
+                        blank(&mut out, chars[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    let done = chars[i] == '\'';
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Collect `lint: allow(rule-id)` markers from the *raw* source (they
+/// live in comments, which stripping removes). Returns 1-based marker
+/// line -> rule ids on that line.
+pub fn inline_allows(src: &str) -> BTreeMap<usize, Vec<String>> {
+    let mut out: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let mut rest = raw;
+        while let Some(pos) = rest.find("lint: allow(") {
+            rest = &rest[pos + "lint: allow(".len()..];
+            if let Some(end) = rest.find(')') {
+                out.entry(idx + 1).or_default().push(rest[..end].to_string());
+                rest = &rest[end..];
+            } else {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)]` / `#[cfg(all(test, ..))]`
+/// gated item body, by brace counting on stripped lines.
+fn test_line_mask(lines: &[String]) -> Vec<bool> {
+    let n = lines.len();
+    let mut mask = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        let l = &lines[i];
+        if !(l.contains("#[cfg(test)") || l.contains("#[cfg(all(test")) {
+            i += 1;
+            continue;
+        }
+        // Walk forward over the gated item: everything through its
+        // closing brace (or terminating `;` for a brace-less item).
+        let mut depth = 0usize;
+        let mut started = false;
+        let mut j = i;
+        'item: while j < n {
+            mask[j] = true;
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => {
+                        depth = depth.saturating_sub(1);
+                        if started && depth == 0 {
+                            break 'item;
+                        }
+                    }
+                    ';' if !started => break 'item,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Run the full scanner over one file's source.
+pub fn scan_source(src: &str) -> FileScan {
+    let stripped = strip_code(src);
+    let lines: Vec<String> = stripped.lines().map(str::to_string).collect();
+    // Expand each allow marker: it covers its own line and, when that
+    // line holds no code, extends through the next code-bearing line.
+    let mut allows: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for (marker, ids) in inline_allows(src) {
+        let mut l = marker;
+        allows.entry(l).or_default().extend(ids.iter().cloned());
+        while l <= lines.len() && lines[l - 1].trim().is_empty() {
+            l += 1;
+            allows.entry(l).or_default().extend(ids.iter().cloned());
+        }
+    }
+    let test_mask = test_line_mask(&lines);
+    FileScan { stripped, lines, allows, test_mask }
+}
+
+fn in_scope(rule: &Rule, rel: &str) -> bool {
+    rule.scan.is_empty() || rule.scan.iter().any(|p| rel.starts_with(p))
+}
+
+fn exempt(rule: &Rule, rel: &str) -> bool {
+    rule.except.iter().any(|p| rel.starts_with(p))
+}
+
+/// Apply every in-scope rule's forbid tokens to one scanned file.
+/// Require-pins are directory-level and checked by [`check_dir`].
+pub fn check_source(rel: &str, src: &str) -> Vec<Violation> {
+    let scan = scan_source(src);
+    let mut out = Vec::new();
+    for rule in RULES {
+        if !in_scope(rule, rel) || exempt(rule, rel) {
+            continue;
+        }
+        for (idx, line) in scan.lines.iter().enumerate() {
+            let lineno = idx + 1;
+            if rule.skip_test_code && scan.test_mask[idx] {
+                continue;
+            }
+            let allowed = scan
+                .allows
+                .get(&lineno)
+                .map_or(false, |ids| ids.iter().any(|id| id == rule.id));
+            if allowed {
+                continue;
+            }
+            for token in rule.forbid {
+                if line.contains(token) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: rule.id,
+                        message: format!("forbidden token `{token}`: {}", rule.why),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Locate the crate source root: `rust/src` from the repo root, `src`
+/// from inside the crate (integration tests run there).
+pub fn src_root() -> Result<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = Path::new(cand);
+        if p.is_dir() {
+            return Ok(p.to_path_buf());
+        }
+    }
+    Err(GalaxyError::MissingArtifact(
+        "cannot locate the crate source root (run `galaxy lint` from the repo root)".into(),
+    ))
+}
+
+/// Deterministic (sorted) recursive walk of `.rs` files under `root`.
+fn rs_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension() == Some(OsStr::new("rs")) {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root` against [`RULES`], including the
+/// directory-level require-pins. Violations come back sorted by
+/// `(file, line, rule)`; empty means the tree is clean.
+pub fn check_dir(root: &Path) -> Result<Vec<Violation>> {
+    let mut sources: BTreeMap<String, String> = BTreeMap::new();
+    for path in rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.insert(rel, fs::read_to_string(&path)?);
+    }
+    let mut out = Vec::new();
+    for (rel, src) in &sources {
+        out.extend(check_source(rel, src));
+    }
+    for rule in RULES {
+        for (file, token) in rule.require {
+            let present =
+                sources.get(*file).map(|src| strip_code(src).contains(token)).unwrap_or(false);
+            if !present {
+                out.push(Violation {
+                    file: (*file).to_string(),
+                    line: 0,
+                    rule: rule.id,
+                    message: format!("required pin `{token}` is missing: {}", rule.why),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+/// Lint the crate from wherever we are (CLI and test entry point).
+pub fn check() -> Result<Vec<Violation>> {
+    check_dir(&src_root()?)
+}
+
+/// A paste-ready allowlist stanza for every line-level violation —
+/// `galaxy lint --fix-allowlist`.
+pub fn fix_allowlist(violations: &[Violation]) -> String {
+    let mut out = String::new();
+    for v in violations.iter().filter(|v| v.line > 0) {
+        out.push_str(&format!(
+            "{}:{}: insert above the flagged line:\n    \
+             // lint: allow({}): <why this site is exempt>\n",
+            v.file, v.line, v.rule
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_removes_comments_and_strings_preserving_lines() {
+        let src = concat!(
+            "let a = 1; // trailing .unwrap()\n",
+            "/* block\n",
+            ".expect( */\n",
+            "let b = \"x.unwrap()\";\n"
+        );
+        let s = strip_code(src);
+        assert_eq!(s.lines().count(), src.lines().count());
+        assert!(!s.contains(".unwrap()"));
+        assert!(!s.contains(".expect("));
+        assert!(s.contains("let a = 1;"));
+        assert!(s.contains("let b ="));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_chars_and_lifetimes() {
+        let src = concat!(
+            "let r = r#\"contains .unwrap() here\"#;\n",
+            "fn f<'a>(x: &'a str) -> char { '\\'' }\n",
+            "let q = 'u';\n"
+        );
+        let s = strip_code(src);
+        assert!(!s.contains(".unwrap()"), "raw string not stripped: {s}");
+        assert!(s.contains("fn f<'a>(x: &'a str)"), "lifetimes must survive: {s}");
+        assert!(!s.contains("'u'"), "char literal must be stripped: {s}");
+    }
+
+    #[test]
+    fn nested_block_comments_strip_fully() {
+        let src = "/* outer /* inner .unwrap() */ still comment */ let x = 2;\n";
+        let s = strip_code(src);
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("let x = 2;"));
+    }
+
+    #[test]
+    fn allow_marker_covers_the_next_code_line() {
+        let src = concat!(
+            "// lint: allow(no-unwrap): justified\n",
+            "// continues\n",
+            "v.last().expect(\"ok\");\n",
+            "v.first().expect(\"not ok\");\n"
+        );
+        let v = check_source("metrics/mod.rs", src);
+        let unwraps: Vec<_> = v.iter().filter(|v| v.rule == "no-unwrap").collect();
+        assert_eq!(unwraps.len(), 1, "{unwraps:?}");
+        assert_eq!(unwraps[0].line, 4);
+    }
+
+    #[test]
+    fn cfg_test_bodies_are_skipped_for_skip_test_rules() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let v = check_source("metrics/mod.rs", src);
+        assert!(v.iter().all(|v| v.rule != "no-unwrap"), "{v:?}");
+        // ...but a library-code unwrap on the same file still fires.
+        let src2 = "fn lib(x: Option<u8>) { x.unwrap(); }\n";
+        let v2 = check_source("metrics/mod.rs", src2);
+        assert!(v2.iter().any(|v| v.rule == "no-unwrap"));
+    }
+
+    #[test]
+    fn partition_truth_fires_outside_the_planner_only() {
+        let src = "fn f() { let p = equal_seq_partition(8, 2); }\n";
+        let out = check_source("engine/mod.rs", src);
+        assert!(out.iter().any(|v| v.rule == "partition-truth" && v.line == 1));
+        assert!(check_source("planner/mod.rs", src).iter().all(|v| v.rule != "partition-truth"));
+        assert!(check_source("baselines/mod.rs", src).iter().all(|v| v.rule != "partition-truth"));
+    }
+
+    #[test]
+    fn transport_sync_shim_scopes_to_transport_tree() {
+        let src = "use std::sync::Mutex;\n";
+        assert!(check_source("transport/mod.rs", src)
+            .iter()
+            .any(|v| v.rule == "transport-sync-shim"));
+        assert!(check_source("transport/sync.rs", src)
+            .iter()
+            .all(|v| v.rule != "transport-sync-shim"));
+        assert!(check_source("serving/mod.rs", src)
+            .iter()
+            .all(|v| v.rule != "transport-sync-shim"));
+    }
+
+    #[test]
+    fn fix_allowlist_emits_a_stanza_per_line_violation() {
+        let v = check_source("engine/mod.rs", "let t = Instant::now();\n");
+        assert!(v.iter().any(|v| v.rule == "measured-clock"));
+        let stanza = fix_allowlist(&v);
+        assert!(stanza.contains("lint: allow(measured-clock)"), "{stanza}");
+        assert!(stanza.contains("engine/mod.rs:1"), "{stanza}");
+    }
+
+    #[test]
+    fn the_tree_is_clean() {
+        // The repo's own sources must pass the lint — the same check the
+        // CLI and CI run. Root resolution handles both unit-test (crate
+        // dir) and repo-root working directories.
+        let violations = check().expect("lint walk");
+        assert!(
+            violations.is_empty(),
+            "lint violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -43,6 +43,7 @@ impl WeightGen {
     fn tensor(&self, layer: usize, tag: u64, rows: usize, cols: usize) -> Tensor2 {
         let mut rng = self.layer_rng(layer, tag);
         let data = (0..rows * cols).map(|_| rng.normal() * self.scale).collect();
+        // lint: allow(no-unwrap): the vec is constructed as rows*cols right here
         Tensor2::from_vec(rows, cols, data).expect("weight shape")
     }
 
@@ -71,6 +72,7 @@ impl WeightGen {
         let mut rng = Pcg64::new(self.seed ^ 0xabcd_ef01_2345_6789 ^ id);
         let h = self.cfg.hidden;
         Tensor2::from_vec(seq, h, (0..seq * h).map(|_| rng.normal() * 0.5).collect())
+            // lint: allow(no-unwrap): the vec is constructed as seq*h right here
             .expect("input shape")
     }
 

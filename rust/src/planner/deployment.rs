@@ -81,7 +81,9 @@ impl Deployment {
     ) -> Result<Deployment> {
         let buckets = normalize_buckets(buckets)?;
         let mut p = profile.clone();
-        p.seq = *buckets.last().expect("normalized ladder is non-empty");
+        p.seq = *buckets
+            .last()
+            .ok_or_else(|| GalaxyError::Config("bucket ladder is empty".into()))?;
         let base = strategy.plan(model, env, &p)?;
         let d = base.partition.n_devices();
         let mut rungs = Vec::with_capacity(buckets.len());
@@ -215,6 +217,8 @@ impl Deployment {
             .iter()
             .find(|r| r.bucket >= seq)
             .or_else(|| self.rungs.last())
+            // lint: allow(no-unwrap): Deployment::plan rejects an empty
+            // ladder, so a constructed deployment always has ≥ 1 rung
             .expect("deployment has at least one rung")
     }
 

@@ -63,7 +63,7 @@ pub fn exhaustive_plan(model: &ModelConfig, env: &EdgeEnv, profile: &Profile) ->
         .iter()
         .map(|c| (straggler(c, &|i, u| profile.mlp_time(i, u)), c))
         .collect();
-    mlp_sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    mlp_sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
 
     let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
     for a in &comps {

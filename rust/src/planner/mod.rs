@@ -212,7 +212,7 @@ pub fn quantize_shares(shares: &[f64], total: usize) -> Vec<usize> {
     order.sort_by(|&a, &b| {
         let fa = raw[a] - raw[a].floor();
         let fb = raw[b] - raw[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        fb.total_cmp(&fa).then(a.cmp(&b))
     });
     for i in 0..total.saturating_sub(assigned) {
         units[order[i % order.len()]] += 1;

@@ -85,7 +85,14 @@ impl<'a> RealProfiler<'a> {
 
         // Connective linear fit from the two smallest artifact tiles.
         let tiles = &self.rt.manifest().seq_tiles;
-        let (t_small, t_large) = (tiles[0], *tiles.last().unwrap());
+        let (t_small, t_large) = match (tiles.first(), tiles.last()) {
+            (Some(&a), Some(&b)) => (a, b),
+            _ => {
+                return Err(crate::error::GalaxyError::MissingArtifact(
+                    "manifest lists no seq tiles".into(),
+                ))
+            }
+        };
         let gamma = literal::from_slice(&p.gamma1);
         let beta = literal::from_slice(&p.beta1);
         let measure_conn = |rows: usize| -> Result<f64> {

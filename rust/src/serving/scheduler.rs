@@ -362,7 +362,12 @@ impl<E: Engine> Scheduler<E> {
             let i = self.cfg.policy.pick(&queue);
             let leader = queue.remove(i);
             // Admission already filtered unservable requests.
-            let bucket = caps.bucket_for(leader.seq_len).expect("admitted request has a bucket");
+            let bucket = caps.bucket_for(leader.seq_len).ok_or_else(|| {
+                GalaxyError::Fabric(format!(
+                    "request {}: admitted with seq {} but no bucket serves it",
+                    leader.id, leader.seq_len
+                ))
+            })?;
             let mut batch = vec![leader];
             if batch_cap > 1 {
                 // One scan builds the bucket-compatible pool; picks then

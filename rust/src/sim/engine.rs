@@ -296,7 +296,7 @@ impl<'a> SimEngine<'a> {
         };
 
         let seq_parts = p.seq.clone();
-        let max_tile = *seq_parts.iter().max().unwrap();
+        let max_tile = seq_parts.iter().copied().max().unwrap_or(0);
         let chunk_bytes = (max_tile * m.hidden * self.wire.elem_bytes()) as u64;
         let wire = self.net.ring_step_time(chunk_bytes);
         // Per-step collective CPU work (non-hideable; see DeviceClass).
@@ -468,7 +468,7 @@ impl<'a> SimEngine<'a> {
     ) {
         rep.ring_bytes +=
             Self::phase_ring_bytes(d, seq_parts, self.model.hidden, self.wire.elem_bytes());
-        let max_tile = *seq_parts.iter().max().unwrap();
+        let max_tile = seq_parts.iter().copied().max().unwrap_or(0);
         // The reduce-add always runs on decoded f32 tiles (the real
         // workers decode on completion before add_assign), so its cost
         // stays at WIRE_BYTES_PER_ELEM regardless of the wire format.
@@ -478,6 +478,8 @@ impl<'a> SimEngine<'a> {
             .iter()
             .map(|dev| {
                 dev.reduce_add_time(
+                    // lint: allow(wire-elem-bytes): reduce-add operands are
+                    // decoded f32, independent of the wire format
                     (max_tile * self.model.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64,
                 )
             })

@@ -351,7 +351,7 @@ mod tests {
             // Thread exit drops `faulty` (and the inner endpoint).
         });
         let receiver = std::thread::spawn(move || {
-            let first = rx.complete_recv().unwrap().decode();
+            let first = rx.complete_recv().unwrap().decode().unwrap();
             assert_eq!(*first, Tensor2::full(1, 2, 1.0));
             // The second tile never comes; the dropped sender must turn
             // this into an error, not a hang.
@@ -370,8 +370,8 @@ mod tests {
         let mut slow = FaultLink::delaying(Box::new(rx), Duration::from_millis(5));
         tx.post_send(WireTile::plain(Tensor2::full(1, 2, 1.0))).unwrap();
         tx.post_send(WireTile::plain(Tensor2::full(1, 2, 2.0))).unwrap();
-        assert_eq!(*slow.complete_recv().unwrap().decode(), Tensor2::full(1, 2, 1.0));
-        assert_eq!(*slow.complete_recv().unwrap().decode(), Tensor2::full(1, 2, 2.0));
+        assert_eq!(*slow.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 2, 1.0));
+        assert_eq!(*slow.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 2, 2.0));
         assert_eq!(slow.stats().tiles, 2);
     }
 
@@ -384,16 +384,16 @@ mod tests {
         assert!(faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 3.0))).is_err());
         assert!(faulty.post_send(WireTile::plain(Tensor2::full(1, 1, 4.0))).is_err());
         assert_eq!(faulty.stats().tiles, 2);
-        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 1.0));
-        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 1, 2.0));
     }
 
     #[test]
     fn scripted_rx_replays_in_order() {
         let mut rx = ScriptedRx::new(vec![Tensor2::full(1, 1, 1.0), Tensor2::full(1, 1, 2.0)]);
         assert!(rx.try_recv().unwrap());
-        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 1.0));
-        assert_eq!(*rx.complete_recv().unwrap().decode(), Tensor2::full(1, 1, 2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 1, 1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), Tensor2::full(1, 1, 2.0));
         assert!(!rx.try_recv().unwrap());
         assert!(rx.complete_recv().is_err());
         assert!(rx.post_send(WireTile::plain(Tensor2::full(1, 1, 0.0))).is_err());

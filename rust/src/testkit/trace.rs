@@ -123,6 +123,9 @@ where
             return item;
         }
     }
+    // lint: allow(no-unwrap): documented contract — callers pass a
+    // non-empty slice, and the loop above only falls through when the
+    // accumulated weights left `u` positive (float round-off)
     items.last().expect("non-empty weighted slice")
 }
 

@@ -72,18 +72,29 @@
 //! decoded tile drops — steady-state posting allocates nothing, pinned
 //! by the no-alloc property test below and trended by the transport
 //! bench's pool hit rate.
+//!
+//! # Model-checked concurrency
+//!
+//! Every thread, lock, channel and clock in this module comes from the
+//! [`sync`] shim — `std`-backed normally, swapped for the vendored
+//! `loom` model checker under `RUSTFLAGS="--cfg loom"` so
+//! `tests/loom_transport.rs` can exhaustively explore the slot
+//! protocol's schedules (no deadlock, no lost tile, backpressure
+//! exactly at [`LINK_SLOTS`] — the catalogue lives in
+//! `docs/INVARIANTS.md`). The `transport-sync-shim` lint rule keeps new
+//! transport code from bypassing the shim.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
-use std::sync::Arc;
-use std::time::Instant;
 
+use self::sync::time::{self, Instant};
+use self::sync::{Arc, Receiver, Sender, TryRecvError};
 use crate::error::{GalaxyError, Result};
 use crate::parallel::overlap::{AgStep, RsStep};
 use crate::tensor::Tensor2;
 
+pub mod sync;
 pub mod wire;
 
 pub use wire::{PoolStats, TileBuf, TileBufPool, TileCodec, WireFormat, WireTile};
@@ -92,6 +103,19 @@ pub use wire::{PoolStats, TileBuf, TileBufPool, TileCodec, WireFormat, WireTile}
 /// double-buffering of §III-D. The simulator's
 /// [`crate::sim::net::LinkModel`] models the same bound.
 pub const LINK_SLOTS: usize = 2;
+
+/// Buffered slots in the io-thread's queue. The io-thread's in-hand tile
+/// is the other slot, so the poster backpressures after exactly
+/// [`LINK_SLOTS`] tiles in flight.
+///
+/// Under `--cfg galaxy_mutate_backpressure` this is deliberately
+/// mutated to `LINK_SLOTS` (three tiles in flight) — a seeded bug whose
+/// only purpose is proving the loom suite has teeth: the
+/// `mutation_*` test in `tests/loom_transport.rs` must fail against it.
+#[cfg(not(galaxy_mutate_backpressure))]
+const SLOT_BUFFER: usize = LINK_SLOTS - 1;
+#[cfg(galaxy_mutate_backpressure)]
+const SLOT_BUFFER: usize = LINK_SLOTS;
 
 /// Cumulative per-endpoint transfer accounting.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -151,7 +175,7 @@ pub struct ThreadedTx {
     /// One buffered slot; the io-thread's in-hand tile is the second —
     /// together the link holds [`LINK_SLOTS`] tiles, and the next post
     /// blocks until the receiver consumes one.
-    slots: SyncSender<TileMsg>,
+    slots: Sender<TileMsg>,
     stats: LinkStats,
 }
 
@@ -169,26 +193,23 @@ pub struct ThreadedRx {
 /// `post_send`/`complete_recv` calls return `Fabric` errors, and the
 /// leader poisons the cluster instead of both neighbors deadlocking.
 pub fn threaded_pair() -> Result<(ThreadedTx, ThreadedRx)> {
-    let (slot_tx, slot_rx) = std::sync::mpsc::sync_channel::<TileMsg>(LINK_SLOTS - 1);
+    let (slot_tx, slot_rx) = sync::sync_channel::<TileMsg>(SLOT_BUFFER);
     // Rendezvous wire: the io-thread's send completes only when the
     // receiver consumes, so "in flight" = slot + io-hand = LINK_SLOTS.
-    let (wire_tx, wire_rx) = std::sync::mpsc::sync_channel::<TileMsg>(0);
-    std::thread::Builder::new()
-        .name("galaxy-link-io".into())
-        .spawn(move || {
-            while let Ok(mut msg) = slot_rx.recv() {
-                // Re-stamp at wire pickup: sender-side dwell (slot queue,
-                // backpressure blocking) is already accounted as the
-                // sender's exposed time — stamping here keeps it out of
-                // the receiver's hidden/exposed split, so no wall-clock
-                // second is counted on both sides.
-                msg.posted = Instant::now();
-                if wire_tx.send(msg).is_err() {
-                    break; // receive endpoint gone
-                }
+    let (wire_tx, wire_rx) = sync::sync_channel::<TileMsg>(0);
+    sync::thread::spawn_named("galaxy-link-io", move || {
+        while let Ok(mut msg) = slot_rx.recv() {
+            // Re-stamp at wire pickup: sender-side dwell (slot queue,
+            // backpressure blocking) is already accounted as the
+            // sender's exposed time — stamping here keeps it out of
+            // the receiver's hidden/exposed split, so no wall-clock
+            // second is counted on both sides.
+            msg.posted = time::now();
+            if wire_tx.send(msg).is_err() {
+                break; // receive endpoint gone
             }
-        })
-        .map_err(|e| GalaxyError::Fabric(format!("spawn link io-thread: {e}")))?;
+        }
+    })?;
     Ok((
         ThreadedTx { slots: slot_tx, stats: LinkStats::default() },
         ThreadedRx { wire: wire_rx, pending: None, stats: LinkStats::default() },
@@ -197,7 +218,7 @@ pub fn threaded_pair() -> Result<(ThreadedTx, ThreadedRx)> {
 
 impl RingLink for ThreadedTx {
     fn post_send(&mut self, tile: WireTile) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = time::now();
         self.slots
             .send(TileMsg { tile, posted: t0 })
             .map_err(|_| GalaxyError::Fabric("ring link down: receive endpoint dropped".into()))?;
@@ -257,7 +278,7 @@ impl RingLink for ThreadedRx {
             // Arrived while the consumer was computing: fully hidden.
             return Ok(self.consume(msg, 0.0));
         }
-        let waited = Instant::now();
+        let waited = time::now();
         let msg = self
             .wire
             .recv()
@@ -298,31 +319,36 @@ pub fn mem_link_pair(capacity: usize) -> (MemLink, MemLink) {
     )
 }
 
+/// Pair each device's send endpoint with its predecessor's receive
+/// endpoint: pair `i`'s receive half serves device `(i+1) % d`, so
+/// rotating the receive column right by one lines the ring up — the one
+/// place the ring rotation lives.
+fn rotate_ring<T, R>(txs: Vec<T>, mut rxs: Vec<R>) -> Vec<(T, R)> {
+    rxs.rotate_right(1);
+    txs.into_iter().zip(rxs).collect()
+}
+
 /// Wire `d` link pairs into a ring: element `i` of the result is device
-/// `i`'s (send-to-`(i+1)%d`, receive-from-`(i-1)%d`) endpoint pair —
-/// the one place the ring rotation lives.
+/// `i`'s (send-to-`(i+1)%d`, receive-from-`(i-1)%d`) endpoint pair.
 fn ring_of<T, R>(
     d: usize,
     mut pair: impl FnMut() -> Result<(T, R)>,
 ) -> Result<Vec<(T, R)>> {
-    let mut txs: Vec<Option<T>> = (0..d).map(|_| None).collect();
-    let mut rxs: Vec<Option<R>> = (0..d).map(|_| None).collect();
-    for i in 0..d {
+    let mut txs = Vec::with_capacity(d);
+    let mut rxs = Vec::with_capacity(d);
+    for _ in 0..d {
         let (tx, rx) = pair()?;
-        txs[i] = Some(tx);
-        rxs[(i + 1) % d] = Some(rx);
+        txs.push(tx);
+        rxs.push(rx);
     }
-    Ok(txs
-        .into_iter()
-        .zip(rxs)
-        .map(|(tx, rx)| (tx.expect("ring tx"), rx.expect("ring rx")))
-        .collect())
+    Ok(rotate_ring(txs, rxs))
 }
 
 /// Wire a ring of `d` in-process links: element `i` is device `i`'s
 /// (send-to-successor, receive-from-predecessor) endpoint pair.
 pub fn mem_ring(d: usize, capacity: usize) -> Vec<(MemLink, MemLink)> {
-    ring_of(d, || Ok(mem_link_pair(capacity))).expect("mem_link_pair is infallible")
+    let (txs, rxs) = (0..d).map(|_| mem_link_pair(capacity)).unzip();
+    rotate_ring(txs, rxs)
 }
 
 impl RingLink for MemLink {
@@ -407,8 +433,10 @@ impl RingIo {
         self.codec.format()
     }
 
-    /// Encode-buffer pool accounting for this device's codec.
-    pub fn pool_stats(&self) -> PoolStats {
+    /// Encode-buffer pool accounting for this device's codec. Errors if
+    /// a peer thread died while holding the pool lock (poison maps to
+    /// [`GalaxyError::Fabric`], like a dead neighbor).
+    pub fn pool_stats(&self) -> Result<PoolStats> {
         self.codec.pool_stats()
     }
 
@@ -443,14 +471,14 @@ impl RingIo {
                 .clone() // refcount bump, not a copy
                 .ok_or_else(|| GalaxyError::Fabric(format!("AG: tile {slot} missing")))?;
             if step.send_tile.is_some() {
-                let encoded = self.codec.encode(&xt);
+                let encoded = self.codec.encode(&xt)?;
                 let bytes = encoded.wire_bytes();
                 self.next.post_send(encoded)?;
                 self.bytes += bytes;
             }
             outs[slot] = compute(slot, xt.as_ref())?;
             if let Some(r) = step.recv_tile {
-                tiles[r] = Some(self.prev.complete_recv()?.decode());
+                tiles[r] = Some(self.prev.complete_recv()?.decode()?);
             }
         }
         Ok(outs)
@@ -471,14 +499,14 @@ impl RingIo {
                 let t = acc.take().ok_or_else(|| {
                     GalaxyError::Fabric("RS: nothing accumulated to send".into())
                 })?;
-                let encoded = self.codec.encode(&t);
+                let encoded = self.codec.encode(&t)?;
                 let bytes = encoded.wire_bytes();
                 self.next.post_send(encoded)?;
                 self.bytes += bytes;
             }
             let mut o = partial(step.compute_tile)?;
             if step.recv_tile.is_some() {
-                o.add_assign(&self.prev.complete_recv()?.decode())?;
+                o.add_assign(&self.prev.complete_recv()?.decode()?)?;
             }
             acc = Some(Arc::new(o));
         }
@@ -680,11 +708,11 @@ mod tests {
         assert!(err.to_string().contains("backpressure"), "{err}");
         // Consuming one frees a slot.
         assert!(rx.try_recv().unwrap());
-        let got = rx.complete_recv().unwrap().decode();
+        let got = rx.complete_recv().unwrap().decode().unwrap();
         assert_eq!(*got, tile(1.0));
         tx.post_send(WireTile::plain(tile(3.0))).unwrap();
-        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(2.0));
-        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(3.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), tile(2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), tile(3.0));
         let err = rx.complete_recv().unwrap_err();
         assert!(err.to_string().contains("deadlock"), "{err}");
     }
@@ -697,11 +725,11 @@ mod tests {
         let (mut tx, mut rx) = mem_link_pair(LINK_SLOTS);
         let payload = Arc::new(tile(7.0));
         let codec = TileCodec::new(WireFormat::F32);
-        tx.post_send(codec.encode(&payload)).unwrap();
+        tx.post_send(codec.encode(&payload).unwrap()).unwrap();
         assert_eq!(Arc::strong_count(&payload), 2, "the queue holds a ref, not a copy");
-        let got = rx.complete_recv().unwrap().decode();
+        let got = rx.complete_recv().unwrap().decode().unwrap();
         assert!(Arc::ptr_eq(&payload, &got), "forward path must be zero-copy");
-        assert_eq!(codec.pool_stats(), PoolStats::default());
+        assert_eq!(codec.pool_stats().unwrap(), PoolStats::default());
     }
 
     #[test]
@@ -731,11 +759,11 @@ mod tests {
         });
         std::thread::sleep(Duration::from_millis(50));
         assert!(!done.load(Ordering::SeqCst), "third post must backpressure");
-        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(1.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), tile(1.0));
         let tx = h.join().unwrap();
         assert!(done.load(Ordering::SeqCst));
-        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(2.0));
-        assert_eq!(*rx.complete_recv().unwrap().decode(), tile(3.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), tile(2.0));
+        assert_eq!(*rx.complete_recv().unwrap().decode().unwrap(), tile(3.0));
         assert_eq!(tx.stats().tiles, 3);
         assert_eq!(rx.stats().tiles, 3);
         assert!(rx.stats().exposed_s >= 0.0 && rx.stats().hidden_s >= 0.0);
@@ -825,7 +853,8 @@ mod tests {
         io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap();
         let elems = tile(0.0).len() as u64;
         assert_eq!(io.bytes, (d as u64 - 1) * elems, "i8 moves 1 B/elem");
-        assert_eq!(io.pool_stats().hits + io.pool_stats().allocs, d as u64 - 1);
+        let pool = io.pool_stats().unwrap();
+        assert_eq!(pool.hits + pool.allocs, d as u64 - 1);
     }
 
     #[test]
@@ -844,7 +873,7 @@ mod tests {
                     tiles[i] = Some(Arc::new(tile(r as f32 + 1.0)));
                     io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).unwrap();
                 }
-                io.pool_stats()
+                io.pool_stats().unwrap()
             }));
         }
         for h in handles {

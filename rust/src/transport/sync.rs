@@ -1,0 +1,305 @@
+//! The transport's one doorway to threads, locks and clocks —
+//! cfg-switched between `std` and the `loom` model checker.
+//!
+//! Everything concurrent in `transport/` (io-threads, the slot channel,
+//! the tile-buffer pool's mutex, the wall clock behind the
+//! exposed/hidden split) goes through this module and nothing else; the
+//! `transport-sync-shim` lint rule forbids raw `std::sync` /
+//! `std::thread` / `std::time::Instant` anywhere else under
+//! `transport/`. That discipline is what makes the loom suite honest:
+//! under `RUSTFLAGS="--cfg loom"` these re-exports swap to the model
+//! checker's primitives, so `tests/loom_transport.rs` explores the
+//! *production* slot protocol, not a test double.
+//!
+//! The bounded channel here replaces `std::sync::mpsc::sync_channel` on
+//! the transport hot path for the same reason: std's channel is opaque
+//! to the model checker, while this one is built on the shim's own
+//! `Mutex`/`Condvar` and therefore schedules under loom. Semantics
+//! match what the transport relied on: `capacity ≥ 1` buffers that many
+//! items and blocks the sender on a full queue; `capacity == 0` is a
+//! rendezvous (send returns only once the receiver has taken the item);
+//! dropping the receiver fails senders (current and future), dropping
+//! the last sender lets the receiver drain the queue and then fail —
+//! dead neighbors poison, they never deadlock.
+
+#[cfg(loom)]
+pub use loom::sync::{atomic, Arc, Condvar, Mutex, MutexGuard, Weak};
+#[cfg(not(loom))]
+pub use std::sync::{atomic, Arc, Condvar, Mutex, MutexGuard, Weak};
+
+use std::collections::VecDeque;
+
+use crate::error::{GalaxyError, Result};
+
+/// Lock a shim mutex, mapping a poisoned lock (a peer thread died while
+/// holding it) to the same [`GalaxyError::Fabric`] a dead neighbor
+/// produces — the caller's link degrades instead of the process
+/// aborting.
+pub fn fabric_lock<'a, T>(m: &'a Mutex<T>, what: &str) -> Result<MutexGuard<'a, T>> {
+    m.lock().map_err(|_| {
+        GalaxyError::Fabric(format!("{what}: lock poisoned by a failed peer thread"))
+    })
+}
+
+pub mod thread {
+    //! Thread spawning for the transport's io-threads. The handle is
+    //! deliberately not returned: io-threads are detached and exit when
+    //! their channels disconnect (loom joins its model threads itself
+    //! at the end of every explored schedule).
+
+    use crate::error::Result;
+
+    #[cfg(not(loom))]
+    pub fn spawn_named(name: &str, f: impl FnOnce() + Send + 'static) -> Result<()> {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .map(|_| ())
+            .map_err(|e| crate::error::GalaxyError::Fabric(format!("spawn {name}: {e}")))
+    }
+
+    #[cfg(loom)]
+    pub fn spawn_named(name: &str, f: impl FnOnce() + Send + 'static) -> Result<()> {
+        let _ = name; // loom names its model threads itself
+        drop(loom::thread::spawn(f));
+        Ok(())
+    }
+}
+
+pub mod time {
+    //! The transport's clock. Under loom, model schedules have no
+    //! meaningful wall time, so instants are inert and every span is
+    //! zero — the accounting code paths still execute, their sums are
+    //! just exactly 0.
+
+    #[cfg(not(loom))]
+    pub use std::time::Instant;
+
+    #[cfg(not(loom))]
+    pub fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[cfg(loom)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct Instant;
+
+    #[cfg(loom)]
+    impl Instant {
+        pub fn elapsed(&self) -> std::time::Duration {
+            std::time::Duration::ZERO
+        }
+    }
+
+    #[cfg(loom)]
+    pub fn now() -> Instant {
+        Instant
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded channel (model-checkable twin of std::sync::mpsc::sync_channel)
+// ---------------------------------------------------------------------
+
+/// Send half disconnected: the receiver is gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+
+/// Receive half failed: every sender is gone and the queue is drained.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Non-blocking receive outcomes mirroring `std::sync::mpsc`.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+struct Chan<T> {
+    q: VecDeque<T>,
+    /// Buffered capacity; 0 selects rendezvous handshakes.
+    cap: usize,
+    senders: usize,
+    receiver_alive: bool,
+    /// Items consumed so far — a rendezvous sender's receipt: its item
+    /// is delivered once `taken` passes the tick recorded at post time.
+    taken: u64,
+}
+
+struct Shared<T> {
+    m: Mutex<Chan<T>>,
+    cv: Condvar,
+}
+
+/// Sending half of [`sync_channel`].
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half of [`sync_channel`].
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// A bounded channel with `std::sync::mpsc::sync_channel` semantics,
+/// built on the shim's lock primitives so loom can model it.
+pub fn sync_channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        m: Mutex::new(Chan {
+            q: VecDeque::new(),
+            cap: capacity,
+            senders: 1,
+            receiver_alive: true,
+            taken: 0,
+        }),
+        cv: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Block until the item occupies a slot (buffered) or has been taken
+    /// by the receiver (rendezvous). Errors once the receiver is gone —
+    /// including while blocked, which is what unblocks a backpressured
+    /// poster when its neighbor dies.
+    pub fn send(&self, value: T) -> std::result::Result<(), SendError> {
+        let mut g = self.shared.m.lock().map_err(|_| SendError)?;
+        if g.cap == 0 {
+            // Rendezvous: park the item, then wait for the receipt.
+            while !g.q.is_empty() && g.receiver_alive {
+                g = self.shared.cv.wait(g).map_err(|_| SendError)?;
+            }
+            if !g.receiver_alive {
+                return Err(SendError);
+            }
+            g.q.push_back(value);
+            let receipt = g.taken + 1;
+            self.shared.cv.notify_all();
+            while g.taken < receipt && g.receiver_alive {
+                g = self.shared.cv.wait(g).map_err(|_| SendError)?;
+            }
+            if g.taken < receipt {
+                return Err(SendError);
+            }
+            return Ok(());
+        }
+        while g.q.len() >= g.cap && g.receiver_alive {
+            g = self.shared.cv.wait(g).map_err(|_| SendError)?;
+        }
+        if !g.receiver_alive {
+            return Err(SendError);
+        }
+        g.q.push_back(value);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until an item arrives. Drains buffered items even after
+    /// every sender dropped, then errors.
+    pub fn recv(&self) -> std::result::Result<T, RecvError> {
+        let mut g = self.shared.m.lock().map_err(|_| RecvError)?;
+        loop {
+            if let Some(v) = g.q.pop_front() {
+                g.taken += 1;
+                self.shared.cv.notify_all();
+                return Ok(v);
+            }
+            if g.senders == 0 {
+                return Err(RecvError);
+            }
+            g = self.shared.cv.wait(g).map_err(|_| RecvError)?;
+        }
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<T, TryRecvError> {
+        let mut g = self.shared.m.lock().map_err(|_| TryRecvError::Disconnected)?;
+        if let Some(v) = g.q.pop_front() {
+            g.taken += 1;
+            self.shared.cv.notify_all();
+            return Ok(v);
+        }
+        if g.senders == 0 {
+            return Err(TryRecvError::Disconnected);
+        }
+        Err(TryRecvError::Empty)
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if let Ok(mut g) = self.shared.m.lock() {
+            g.senders -= 1;
+            if g.senders == 0 {
+                self.shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        if let Ok(mut g) = self.shared.m.lock() {
+            g.receiver_alive = false;
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn transport_shim_channel_buffers_then_blocks() {
+        let (tx, rx) = sync_channel::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the receiver takes 1
+            tx
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        let tx = h.join().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn transport_shim_channel_rendezvous_waits_for_the_take() {
+        let (tx, rx) = sync_channel::<u32>(0);
+        let h = std::thread::spawn(move || {
+            tx.send(7).unwrap();
+            tx.send(8).unwrap();
+        });
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(rx.recv().unwrap(), 8);
+        h.join().unwrap();
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn transport_shim_channel_dead_receiver_fails_blocked_sender() {
+        let (tx, rx) = sync_channel::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || tx.send(2)); // blocked: queue full
+        std::thread::sleep(Duration::from_millis(20));
+        drop(rx);
+        assert_eq!(h.join().unwrap(), Err(SendError), "sender must unblock with an error");
+    }
+
+    #[test]
+    fn transport_shim_channel_drains_after_sender_drop() {
+        let (tx, rx) = sync_channel::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+}

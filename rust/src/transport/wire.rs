@@ -39,8 +39,8 @@
 //! rate read.
 
 use std::fmt;
-use std::sync::{Arc, Mutex, Weak};
 
+use super::sync::{fabric_lock, Arc, Mutex, Weak};
 use crate::error::{GalaxyError, Result};
 use crate::tensor::Tensor2;
 
@@ -211,8 +211,11 @@ impl TileBufPool {
 
     /// Lease a buffer with capacity for at least `len` bytes. The buffer
     /// comes back empty; it returns to this pool when the lease drops.
-    pub fn lease(&self, len: usize) -> TileBuf {
-        let mut g = self.inner.lock().expect("tile pool poisoned");
+    /// A poisoned pool (a peer thread died mid-lease) degrades to a
+    /// [`GalaxyError::Fabric`] error, like a dead neighbor — it never
+    /// aborts the process.
+    pub fn lease(&self, len: usize) -> Result<TileBuf> {
+        let mut g = fabric_lock(&self.inner, "tile pool lease")?;
         let mut data = match g.free.iter().position(|b| b.capacity() >= len) {
             Some(i) => {
                 g.stats.hits += 1;
@@ -224,11 +227,11 @@ impl TileBufPool {
             }
         };
         data.clear();
-        TileBuf { data, pool: Arc::downgrade(&self.inner) }
+        Ok(TileBuf { data, pool: Arc::downgrade(&self.inner) })
     }
 
-    pub fn stats(&self) -> PoolStats {
-        self.inner.lock().expect("tile pool poisoned").stats
+    pub fn stats(&self) -> Result<PoolStats> {
+        Ok(fabric_lock(&self.inner, "tile pool stats")?.stats)
     }
 }
 
@@ -312,23 +315,25 @@ impl WireTile {
     }
 
     /// Decode back to a tensor. F32 is a refcount move (zero-copy);
-    /// lossy formats reconstruct and release their pooled buffer.
-    pub fn decode(self) -> Arc<Tensor2> {
+    /// lossy formats reconstruct and release their pooled buffer. Errors
+    /// only on a corrupt header (payload length disagreeing with the
+    /// tile's stated shape) — a `Fabric` fault, never a panic.
+    pub fn decode(self) -> Result<Arc<Tensor2>> {
         let (rows, cols) = (self.rows, self.cols);
         match self.payload {
-            Payload::F32(t) => t,
+            Payload::F32(t) => Ok(t),
             Payload::F16(buf) => {
                 let data: Vec<f32> = buf
                     .as_slice()
                     .chunks_exact(2)
                     .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
                     .collect();
-                Arc::new(Tensor2::from_vec(rows, cols, data).expect("encoded shape"))
+                Ok(Arc::new(Tensor2::from_vec(rows, cols, data)?))
             }
             Payload::I8 { buf, scale } => {
                 let data: Vec<f32> =
                     buf.as_slice().iter().map(|&b| (b as i8) as f32 * scale).collect();
-                Arc::new(Tensor2::from_vec(rows, cols, data).expect("encoded shape"))
+                Ok(Arc::new(Tensor2::from_vec(rows, cols, data)?))
             }
         }
     }
@@ -355,18 +360,19 @@ impl TileCodec {
         self.format
     }
 
-    pub fn pool_stats(&self) -> PoolStats {
+    pub fn pool_stats(&self) -> Result<PoolStats> {
         self.pool.stats()
     }
 
     /// Encode a tile for the wire. F32 bumps the refcount; F16/I8 write
-    /// into a pooled buffer.
-    pub fn encode(&self, t: &Arc<Tensor2>) -> WireTile {
+    /// into a pooled buffer (errors if the pool lock was poisoned by a
+    /// failed peer thread).
+    pub fn encode(&self, t: &Arc<Tensor2>) -> Result<WireTile> {
         let (rows, cols) = (t.rows(), t.cols());
         let payload = match self.format {
             WireFormat::F32 => Payload::F32(t.clone()),
             WireFormat::F16 => {
-                let mut buf = self.pool.lease(t.len() * 2);
+                let mut buf = self.pool.lease(t.len() * 2)?;
                 for &x in t.data() {
                     buf.push_u16(f32_to_f16_bits(x));
                 }
@@ -375,7 +381,7 @@ impl TileCodec {
             WireFormat::I8 => {
                 let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
                 let scale = max_abs / 127.0;
-                let mut buf = self.pool.lease(t.len());
+                let mut buf = self.pool.lease(t.len())?;
                 if scale == 0.0 {
                     buf.data.resize(t.len(), 0);
                 } else {
@@ -387,7 +393,7 @@ impl TileCodec {
                 Payload::I8 { buf, scale }
             }
         };
-        WireTile { rows, cols, payload }
+        Ok(WireTile { rows, cols, payload })
     }
 }
 
@@ -468,7 +474,7 @@ mod tests {
             |t| {
                 let codec = TileCodec::new(WireFormat::I8);
                 let arc = Arc::new(t.clone());
-                let back = codec.encode(&arc).decode();
+                let back = codec.encode(&arc).unwrap().decode().unwrap();
                 let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
                 let bound = max_abs / 254.0 + 1e-7;
                 for (a, b) in t.data().iter().zip(back.data()) {
@@ -490,10 +496,10 @@ mod tests {
         for format in [WireFormat::F16, WireFormat::I8] {
             let codec = TileCodec::new(format);
             let mut t = Arc::new(rand_tensor(&mut rng, 6, 5));
-            let first = codec.encode(&t).decode();
+            let first = codec.encode(&t).unwrap().decode().unwrap();
             t = first.clone();
             for hop in 0..4 {
-                t = codec.encode(&t).decode();
+                t = codec.encode(&t).unwrap().decode().unwrap();
                 assert!(
                     t.allclose(&first, 1e-6, 1e-9),
                     "{format}: hop {hop} drifted beyond ulp noise"
@@ -506,7 +512,7 @@ mod tests {
     fn i8_all_zero_tile_is_exact() {
         let codec = TileCodec::new(WireFormat::I8);
         let z = Arc::new(Tensor2::zeros(3, 4));
-        let back = codec.encode(&z).decode();
+        let back = codec.encode(&z).unwrap().decode().unwrap();
         assert_eq!(*back, *z, "zero tile must not divide by a zero scale");
     }
 
@@ -514,11 +520,11 @@ mod tests {
     fn f32_encode_is_a_refcount_bump() {
         let codec = TileCodec::new(WireFormat::F32);
         let t = Arc::new(Tensor2::full(2, 2, 3.0));
-        let wt = codec.encode(&t);
+        let wt = codec.encode(&t).unwrap();
         assert_eq!(Arc::strong_count(&t), 2, "encode must share, not copy");
-        let back = wt.decode();
+        let back = wt.decode().unwrap();
         assert!(Arc::ptr_eq(&t, &back), "decode must return the same allocation");
-        assert_eq!(codec.pool_stats(), PoolStats::default(), "F32 never touches the pool");
+        assert_eq!(codec.pool_stats().unwrap(), PoolStats::default(), "F32 never touches the pool");
     }
 
     #[test]
@@ -526,7 +532,7 @@ mod tests {
         let t = Arc::new(Tensor2::full(4, 8, 1.5));
         for format in WireFormat::all() {
             let codec = TileCodec::new(format);
-            let wt = codec.encode(&t);
+            let wt = codec.encode(&t).unwrap();
             assert_eq!(wt.format(), format);
             assert_eq!(wt.wire_bytes(), (4 * 8 * format.elem_bytes()) as u64);
             assert_eq!((wt.rows(), wt.cols()), (4, 8));
@@ -541,14 +547,14 @@ mod tests {
         let codec = TileCodec::new(WireFormat::I8);
         let t = Arc::new(Tensor2::full(8, 8, 2.0));
         for _ in 0..3 {
-            drop(codec.encode(&t)); // warm-up leases, returned on drop
+            drop(codec.encode(&t).unwrap()); // warm-up leases, returned on drop
         }
-        let after_warmup = codec.pool_stats().allocs;
+        let after_warmup = codec.pool_stats().unwrap().allocs;
         for _ in 0..50 {
-            let wt = codec.encode(&t);
-            drop(wt.decode()); // decode consumes the tile, lease returns
+            let wt = codec.encode(&t).unwrap();
+            drop(wt.decode().unwrap()); // decode consumes the tile, lease returns
         }
-        let stats = codec.pool_stats();
+        let stats = codec.pool_stats().unwrap();
         assert_eq!(stats.allocs, after_warmup, "steady state must not allocate");
         assert!(stats.hits >= 50);
         assert!(stats.hit_rate() > 0.9, "hit rate {}", stats.hit_rate());
@@ -559,11 +565,11 @@ mod tests {
         let pool = TileBufPool::new();
         let codec = TileCodec::with_pool(WireFormat::F16, pool.clone());
         let t = Arc::new(Tensor2::full(4, 4, 1.0));
-        let wt = codec.encode(&t);
+        let wt = codec.encode(&t).unwrap();
         drop(codec); // codec gone; the lease still knows its pool
         drop(wt);
-        assert_eq!(pool.stats().allocs, 1);
-        let _second = pool.lease(32);
-        assert_eq!(pool.stats().hits, 1, "returned buffer must be reused");
+        assert_eq!(pool.stats().unwrap().allocs, 1);
+        let _second = pool.lease(32).unwrap();
+        assert_eq!(pool.stats().unwrap().hits, 1, "returned buffer must be reused");
     }
 }

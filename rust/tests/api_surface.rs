@@ -1,55 +1,117 @@
-//! Pins the planning API redesign's single-source-of-truth invariant:
-//! `equal_seq_partition` — the §III-C.2 sequence split — lives in the
-//! planner and is consulted through the [`Deployment`] API; no engine,
-//! cluster, schedule, or serving code re-derives it privately. (The
-//! `baselines` module still calls the planner's helper directly: it
-//! simulates *other systems'* partition strategies — Megatron-LM / SP —
-//! not Galaxy's partition truth.)
+//! The API-surface pins, now served by `galaxy lint`.
+//!
+//! This file used to hold hand-rolled `include_str!` grep pins (no
+//! private `equal_seq_partition` call sites, no private `BucketGeom`
+//! equal split). Those pins — and four newer ones — live in the
+//! declarative rule table at `galaxy::lint::RULES`, documented in
+//! `docs/INVARIANTS.md`, and are enforced three ways from the same
+//! table: this test, the `galaxy lint` CLI subcommand, and the CI
+//! `static-analysis` job. This test stays a thin wrapper: it runs the
+//! same checker and additionally proves the rules still have teeth by
+//! feeding the scanner synthetic violations.
 
+use galaxy::lint;
+
+/// The whole crate passes the lint — the exact check `galaxy lint`
+/// runs. Integration tests execute with the crate directory as CWD, so
+/// the checker resolves `src/` (the CLI resolves `rust/src` from the
+/// repo root).
 #[test]
-fn equal_seq_partition_lives_only_in_the_planner() {
-    // Every file that historically duplicated the derivation (or could
-    // plausibly regress into doing so). `include_str!` keeps this a
-    // compile-time grep: a new call site fails the assert with the file
-    // named.
-    let sources = [
-        ("sim/engine.rs", include_str!("../src/sim/engine.rs")),
-        ("sim/net.rs", include_str!("../src/sim/net.rs")),
-        ("cluster/mod.rs", include_str!("../src/cluster/mod.rs")),
-        ("cluster/worker.rs", include_str!("../src/cluster/worker.rs")),
-        ("cluster/protocol.rs", include_str!("../src/cluster/protocol.rs")),
-        ("engine/mod.rs", include_str!("../src/engine/mod.rs")),
-        ("engine/sim.rs", include_str!("../src/engine/sim.rs")),
-        ("engine/cluster.rs", include_str!("../src/engine/cluster.rs")),
-        ("serving/mod.rs", include_str!("../src/serving/mod.rs")),
-        ("serving/scheduler.rs", include_str!("../src/serving/scheduler.rs")),
-        ("serving/governor.rs", include_str!("../src/serving/governor.rs")),
-        ("serving/policy.rs", include_str!("../src/serving/policy.rs")),
-        ("parallel/schedule.rs", include_str!("../src/parallel/schedule.rs")),
-        ("parallel/overlap.rs", include_str!("../src/parallel/overlap.rs")),
-        ("cli.rs", include_str!("../src/cli.rs")),
-    ];
-    for (name, src) in sources {
-        assert!(
-            !src.contains("equal_seq_partition"),
-            "{name} references equal_seq_partition — partitions must come from the \
-             Deployment (planner::deployment), the single source of partition truth"
-        );
-    }
-    // The one definition still lives (and is public) in the planner.
-    let planner = include_str!("../src/planner/mod.rs");
-    assert!(planner.contains("pub fn equal_seq_partition"));
-    // And the deployment is the only consumer outside Algorithm 1 / the
-    // oracle that turns it into engine-visible partitions.
-    let deployment = include_str!("../src/planner/deployment.rs");
-    assert!(deployment.contains("equal_seq_partition"));
+fn the_crate_is_lint_clean() {
+    let violations = lint::check().expect("lint walk");
+    assert!(
+        violations.is_empty(),
+        "galaxy lint violations:\n{}",
+        violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
 }
 
+/// Every pin this file historically enforced is present in the rule
+/// table — deleting or renaming a rule breaks the wrapper loudly.
 #[test]
-fn cluster_geometry_has_no_private_equal_split() {
-    // The old `BucketGeom::equal(seq_len, d)` constructor is gone: the
-    // cluster derives every bucket's tiles from the deployment.
-    let cluster = include_str!("../src/cluster/mod.rs");
-    assert!(!cluster.contains("fn equal("), "BucketGeom regained a private equal split");
-    assert!(cluster.contains("fn from_deployment"), "BucketGeom must consult the Deployment");
+fn the_rule_table_subsumes_the_legacy_pins() {
+    let ids: Vec<&str> = lint::RULES.iter().map(|r| r.id).collect();
+    for id in [
+        "partition-truth",
+        "bucket-geom",
+        "transport-sync-shim",
+        "no-unwrap",
+        "wire-elem-bytes",
+        "measured-clock",
+    ] {
+        assert!(ids.contains(&id), "rule `{id}` disappeared from lint::RULES");
+    }
+    // The positive halves of the legacy pins: the blessed definition
+    // and consultation sites are require-pins, not just absences.
+    let requires: Vec<(&str, &str)> =
+        lint::RULES.iter().flat_map(|r| r.require.iter().copied()).collect();
+    for pin in [
+        ("planner/mod.rs", "pub fn equal_seq_partition"),
+        ("planner/deployment.rs", "equal_seq_partition"),
+        ("cluster/mod.rs", "fn from_deployment"),
+    ] {
+        assert!(requires.contains(&pin), "require-pin {pin:?} disappeared from lint::RULES");
+    }
+}
+
+/// The checker actually fires: inject one violation per rule and assert
+/// a `file:line` diagnostic comes back. A rule that silently stops
+/// matching would pass `the_crate_is_lint_clean` forever.
+#[test]
+fn every_rule_fires_on_an_injected_violation() {
+    let cases = [
+        ("partition-truth", "engine/mod.rs", "let p = equal_seq_partition(64, 4);\n"),
+        ("bucket-geom", "cluster/mod.rs", "fn equal(seq: usize, d: usize) {}\n"),
+        ("transport-sync-shim", "transport/mod.rs", "use std::sync::Mutex;\n"),
+        ("no-unwrap", "serving/mod.rs", "let x = maybe.unwrap();\n"),
+        ("wire-elem-bytes", "sim/engine.rs", "let b = n * WIRE_BYTES_PER_ELEM;\n"),
+        ("measured-clock", "engine/mod.rs", "let t = Instant::now();\n"),
+    ];
+    for (rule, file, src) in cases {
+        let hits = lint::check_source(file, src);
+        assert!(
+            hits.iter().any(|v| v.rule == rule && v.line == 1),
+            "rule `{rule}` did not fire on injected violation in {file}: {hits:?}"
+        );
+        let rendered = format!("{}", hits[0]);
+        assert!(rendered.starts_with(&format!("{file}:1:")), "diagnostic format: {rendered}");
+    }
+}
+
+/// Allowlisting works end to end: the same injected violation is
+/// silenced by a `lint: allow` marker, and `--fix-allowlist` emits the
+/// stanza that would silence it.
+#[test]
+fn allow_markers_and_fix_allowlist_round_trip() {
+    let bare = "let x = maybe.unwrap();\n";
+    let hits = lint::check_source("serving/mod.rs", bare);
+    assert!(hits.iter().any(|v| v.rule == "no-unwrap"));
+    let stanza = lint::fix_allowlist(&hits);
+    assert!(stanza.contains("lint: allow(no-unwrap)"), "stanza: {stanza}");
+
+    let allowed =
+        "// lint: allow(no-unwrap): test fixture, provably Some\nlet x = maybe.unwrap();\n";
+    let hits = lint::check_source("serving/mod.rs", allowed);
+    assert!(hits.iter().all(|v| v.rule != "no-unwrap"), "marker failed to silence: {hits:?}");
+}
+
+/// Comments, strings, and `#[cfg(test)]` bodies never trip rules — the
+/// property that lets the rule table describe itself and lets test code
+/// keep using `.unwrap()`.
+#[test]
+fn stripped_contexts_do_not_trip_rules() {
+    let src = "\
+// a comment mentioning equal_seq_partition and .unwrap()
+let s = \"equal_seq_partition .unwrap() WIRE_BYTES_PER_ELEM\";
+#[cfg(test)]
+mod tests {
+    fn t(x: Option<u8>) {
+        x.unwrap();
+    }
+}
+";
+    let hits = lint::check_source("engine/mod.rs", src);
+    // partition-truth scans test code too, but only real code: the
+    // comment and string mentions above must not fire it.
+    assert!(hits.is_empty(), "false positives: {hits:?}");
 }

@@ -1,0 +1,234 @@
+//! Model-checked transport: exhaustive (delay-bounded) exploration of
+//! the slot protocol under the vendored loom checker.
+//!
+//! Build with `RUSTFLAGS="--cfg loom"` — the `transport::sync` shim then
+//! swaps its `std` primitives for the model checker's, so these tests
+//! explore the *production* io-thread / slot-channel / pool code, not a
+//! double. Each model asserts a schedule-independent property:
+//!
+//! * a single link accepts at most [`LINK_SLOTS`] tiles before the
+//!   consumer takes one (backpressure), and delivers every tile in
+//!   order (no loss, no reorder);
+//! * a ring of 3 threaded links rotates and full-AG-walks to completion
+//!   on every explored schedule (no deadlock, no lost tile);
+//! * the tile-buffer pool stays consistent under concurrent
+//!   lease/return;
+//! * dead endpoints (receiver dropped, sender dropped, peer device
+//!   dropped mid-walk) surface as `Fabric` errors, never hangs — loom's
+//!   deadlock detector proves the "never hangs" half.
+//!
+//! The `mutation` module is the suite's teeth test: under
+//! `--cfg galaxy_mutate_backpressure` (a seeded bug that widens the
+//! slot buffer by one) the backpressure model MUST fail. CI runs it in
+//! a separate lane; see `docs/INVARIANTS.md` for the catalogue and
+//! `LOOM_MAX_PREEMPTIONS` notes (the mutation needs a delay budget of
+//! 3 to surface — do not lower the env cap below that).
+
+#![cfg(loom)]
+
+use galaxy::error::GalaxyError;
+use galaxy::parallel::overlap::all_gather_steps;
+use galaxy::tensor::Tensor2;
+use galaxy::transport::{
+    take_tile, threaded_pair, threaded_ring, RingLink, TileBufPool, WireTile, LINK_SLOTS,
+};
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::{thread, Builder};
+
+fn tile(v: f32) -> Tensor2 {
+    Tensor2::full(1, 1, v)
+}
+
+/// The backpressure model shared by the real test and the mutation
+/// teeth test: a producer posts 3 tiles through one threaded link,
+/// bumping `progress` after each accepted post; the consumer asserts —
+/// before taking anything off the wire — that at most [`LINK_SLOTS`]
+/// posts were accepted, then drains all 3 tiles in order.
+///
+/// The delay budget of 3 is what the seeded mutation needs to surface
+/// (spawn-switch to the producer, wake the io-thread at the slot queue,
+/// then hand back to the producer for the over-admitted third post).
+fn backpressure_model() {
+    Builder { preemption_bound: Some(3), ..Builder::default() }.check(|| {
+        let (mut tx, mut rx) = threaded_pair().expect("threaded pair");
+        let progress = Arc::new(AtomicUsize::new(0));
+        let posted = progress.clone();
+        let producer = thread::spawn(move || {
+            for v in 1..=3u32 {
+                tx.post_send(WireTile::plain(tile(v as f32))).expect("post");
+                posted.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        let in_flight = progress.load(Ordering::SeqCst);
+        assert!(
+            in_flight <= LINK_SLOTS,
+            "backpressure bound violated: {in_flight} tiles accepted before any take"
+        );
+        for v in 1..=3u32 {
+            let got = rx.complete_recv().expect("recv").decode().expect("decode");
+            assert_eq!(*got, tile(v as f32), "tile {v} lost or reordered");
+        }
+        producer.join().expect("producer");
+    });
+}
+
+/// Backpressure lands exactly at [`LINK_SLOTS`] on every explored
+/// schedule, and no tile is lost or reordered.
+#[cfg(not(galaxy_mutate_backpressure))]
+#[test]
+fn loom_single_link_backpressures_exactly_at_link_slots() {
+    backpressure_model();
+}
+
+/// One full ring rotation on 3 threaded links: every device posts to
+/// its successor and must receive its predecessor's tile — in every
+/// explored schedule, with no deadlock (7 threads: 3 workers, 3
+/// io-threads, main).
+#[test]
+fn loom_ring_of_three_rotates_without_deadlock_or_loss() {
+    Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+        let d = 3;
+        let mut handles = Vec::new();
+        for (i, mut io) in threaded_ring(d).expect("ring").into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                io.next.post_send(WireTile::plain(tile(i as f32 + 1.0))).expect("post");
+                let got = io.prev.complete_recv().expect("recv").decode().expect("decode");
+                let from = (i + d - 1) % d;
+                assert_eq!(*got, tile(from as f32 + 1.0), "device {i}: wrong predecessor tile");
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker");
+        }
+    });
+}
+
+/// The production AG walk ([`galaxy::transport::RingIo::ag_walk`]) on a
+/// ring of 3: every device must finish holding all 3 tiles. This is the
+/// exact code path the cluster workers run.
+#[test]
+fn loom_ring_of_three_ag_walk_gathers_every_tile() {
+    Builder { preemption_bound: Some(1), ..Builder::default() }.check(|| {
+        let d = 3;
+        let mut handles = Vec::new();
+        for (i, mut io) in threaded_ring(d).expect("ring").into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                let steps = all_gather_steps(i, d);
+                let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                tiles[i] = Some(Arc::new(tile(i as f32 + 1.0)));
+                io.ag_walk(&steps, &mut tiles, |_, _| Ok(Some(()))).expect("ag walk");
+                tiles
+            }));
+        }
+        for h in handles {
+            let tiles = h.join().expect("worker");
+            for (k, t) in tiles.into_iter().enumerate() {
+                let got = take_tile(t.expect("gathered tile"));
+                assert_eq!(got, tile(k as f32 + 1.0), "slot {k} holds the wrong tile");
+            }
+        }
+    });
+}
+
+/// Concurrent lease/return on the shared tile-buffer pool: every lease
+/// is a hit or an alloc, and allocations never exceed the number of
+/// concurrently outstanding leases (2 here), in every schedule.
+#[test]
+fn loom_pool_concurrent_leases_stay_consistent() {
+    Builder { preemption_bound: Some(3), ..Builder::default() }.check(|| {
+        let pool = TileBufPool::new();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = pool.clone();
+                thread::spawn(move || {
+                    for _ in 0..2 {
+                        drop(pool.lease(8).expect("lease"));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("leaser");
+        }
+        let stats = pool.stats().expect("pool stats");
+        assert_eq!(stats.hits + stats.allocs, 4, "every lease is a hit or an alloc");
+        assert!(
+            (1..=2).contains(&stats.allocs),
+            "allocs {} outside the concurrent-lease bound",
+            stats.allocs
+        );
+    });
+}
+
+/// A dropped receive endpoint fails the poster with a `Fabric` error
+/// within the slot budget — never a hang (the io-thread notices the
+/// dead wire, exits, and the slot channel disconnects).
+#[test]
+fn loom_dead_receiver_fails_posts_instead_of_hanging() {
+    Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+        let (mut tx, rx) = threaded_pair().expect("threaded pair");
+        drop(rx);
+        let mut failed = false;
+        for v in 1..=3u32 {
+            if tx.post_send(WireTile::plain(tile(v as f32))).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "posts to a dropped receiver must fail within the slot budget");
+    });
+}
+
+/// A dropped send endpoint still delivers the tile already in flight,
+/// then errors — dead neighbors drain before they poison.
+#[test]
+fn loom_dead_sender_drains_then_errors() {
+    Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+        let (mut tx, mut rx) = threaded_pair().expect("threaded pair");
+        tx.post_send(WireTile::plain(tile(5.0))).expect("post");
+        drop(tx);
+        let got = rx.complete_recv().expect("in-flight tile must still deliver");
+        assert_eq!(*got.decode().expect("decode"), tile(5.0));
+        let err = rx.complete_recv().expect_err("drained dead link must error");
+        assert!(matches!(err, GalaxyError::Fabric(_)), "{err}");
+    });
+}
+
+/// A peer device dropping its endpoints mid-walk (worker death) turns
+/// the survivor's walk into a `Fabric` error on every schedule — loom's
+/// deadlock detector proves the walk can never hang on the dead link.
+#[test]
+fn loom_peer_drop_mid_walk_errors_not_deadlocks() {
+    Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+        let d = 2;
+        let mut ios = threaded_ring(d).expect("ring");
+        let dead = ios.pop().expect("device 1");
+        let mut io = ios.pop().expect("device 0");
+        drop(dead); // device 1 dies: both its endpoints drop
+        let steps = all_gather_steps(0, d);
+        let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+        tiles[0] = Some(Arc::new(tile(1.0)));
+        let err = io
+            .ag_walk(&steps, &mut tiles, |_, _| Ok(Some(())))
+            .expect_err("walk against a dead peer must fail, not hang");
+        assert!(matches!(err, GalaxyError::Fabric(_)), "{err}");
+    });
+}
+
+/// Teeth test: with the seeded over-admission bug compiled in
+/// (`--cfg galaxy_mutate_backpressure` widens the slot buffer to
+/// `LINK_SLOTS`, letting a third tile through with nothing consumed),
+/// the same backpressure model that passes above MUST fail — proving
+/// the loom suite actually discriminates. CI runs this in its own lane.
+#[cfg(galaxy_mutate_backpressure)]
+mod mutation {
+    #[test]
+    fn mutation_backpressure_over_admission_is_caught() {
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(super::backpressure_model));
+        let payload = caught.expect_err("loom failed to catch the widened slot buffer");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("backpressure bound violated"), "unexpected failure: {msg}");
+    }
+}

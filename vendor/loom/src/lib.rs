@@ -1,0 +1,981 @@
+//! Offline mini-loom: a systematic concurrency model checker exposing the
+//! subset of the `loom` crate API the galaxy transport uses.
+//!
+//! `model(f)` runs the closure under a cooperative scheduler: model
+//! threads are real OS threads, but a token protocol keeps exactly one
+//! runnable at a time, and every synchronization operation (mutex
+//! lock/unlock, condvar wait/notify, atomic access, spawn/join/yield) is
+//! a *decision point* where the scheduler may switch threads. The
+//! checker then drives a depth-first search over those decisions —
+//! replaying a recorded prefix, flipping the last decision with
+//! remaining alternatives — until the (preemption-bounded) schedule
+//! space is exhausted. A panic in any schedule (assertion failure, or a
+//! detected deadlock: no runnable thread while some thread is blocked)
+//! aborts the search and re-panics from `model`, so a plain `#[test]`
+//! fails with the offending message, and `catch_unwind(|| model(..))`
+//! can assert that a seeded bug *is* found.
+//!
+//! Delay bounding (CHESS-family) keeps the search tractable: at every
+//! decision the scheduler has a default pick (the running thread while
+//! it can continue, else the lowest-id runnable thread), and any
+//! *non-default* pick — preempting a runnable thread, or waking a
+//! different waiter after a forced switch — costs one unit of the
+//! budget. Schedules are explored exhaustively within the budget, and
+//! the schedule count stays polynomial in execution length instead of
+//! exponential in the number of forced switches. `LOOM_MAX_PREEMPTIONS`
+//! caps the budget process-wide, `Builder { preemption_bound }` sets it
+//! per model, and `LOOM_MAX_ITERATIONS` bounds the total number of
+//! schedules (exceeding it panics loudly rather than passing
+//! vacuously).
+//!
+//! Scope: sequentially consistent semantics only (atomics ignore their
+//! `Ordering` argument), no spurious condvar wakeups, `sync::Arc` is a
+//! plain `std` re-export (refcounts need no modeling for these tests).
+//! Outside `model` every primitive transparently falls back to its
+//! `std` twin, so code built with `--cfg loom` still behaves normally
+//! when exercised outside a model run.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool as StdAtomicBool, Ordering as StdOrdering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+const NO_ACTIVE: usize = usize::MAX;
+const DEFAULT_PREEMPTION_BOUND: usize = 2;
+const DEFAULT_MAX_ITERATIONS: usize = 500_000;
+
+/// Panic payload used to unwind parked threads once a failure is
+/// recorded; never reported as a failure itself.
+struct LoomAbort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Res {
+    Lock(usize),
+    Cond(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Runnable,
+    Blocked(Res),
+    Finished,
+}
+
+/// One recorded scheduling decision: which thread got the token, out of
+/// which candidates, and the delay budget spent before it. Selecting
+/// anything but `candidates[0]` (the default pick) costs one unit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Choice {
+    /// Runnable thread ids in try order (running thread first when it
+    /// was itself still runnable, lowest-id first otherwise).
+    candidates: Vec<usize>,
+    sel: usize,
+    preemptions_before: usize,
+}
+
+struct SchedState {
+    threads: Vec<Run>,
+    active: usize,
+    /// Mutex ownership by resource id (condvar ids share the space and
+    /// leave their slots unused).
+    mutex_owner: Vec<Option<usize>>,
+    next_resource: usize,
+    path: Vec<Choice>,
+    pos: usize,
+    preemptions: usize,
+    panic: Option<String>,
+}
+
+impl SchedState {
+    fn wake_all(&mut self, res: Res) {
+        for t in &mut self.threads {
+            if *t == Run::Blocked(res) {
+                *t = Run::Runnable;
+            }
+        }
+    }
+
+    fn wake_one(&mut self, res: Res) {
+        for t in &mut self.threads {
+            if *t == Run::Blocked(res) {
+                *t = Run::Runnable;
+                return;
+            }
+        }
+    }
+
+    fn all_finished(&self) -> bool {
+        self.threads.iter().all(|t| matches!(t, Run::Finished))
+    }
+
+    fn describe_deadlock(&self) -> String {
+        let mut parts = Vec::new();
+        for (tid, t) in self.threads.iter().enumerate() {
+            if let Run::Blocked(res) = t {
+                let what = match res {
+                    Res::Lock(id) => format!("mutex #{id}"),
+                    Res::Cond(id) => format!("condvar #{id}"),
+                    Res::Join(other) => format!("join of thread {other}"),
+                };
+                parts.push(format!("thread {tid} blocked on {what}"));
+            }
+        }
+        format!("loom: deadlock — no runnable thread ({})", parts.join("; "))
+    }
+}
+
+struct Execution {
+    m: StdMutex<SchedState>,
+    cv: StdCondvar,
+    os_handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+    panicked: StdAtomicBool,
+}
+
+impl Execution {
+    fn new(prefix: Vec<Choice>) -> Self {
+        Self {
+            m: StdMutex::new(SchedState {
+                threads: vec![Run::Runnable],
+                active: 0,
+                mutex_owner: Vec::new(),
+                next_resource: 0,
+                path: prefix,
+                pos: 0,
+                preemptions: 0,
+                panic: None,
+            }),
+            cv: StdCondvar::new(),
+            os_handles: StdMutex::new(Vec::new()),
+            panicked: StdAtomicBool::new(false),
+        }
+    }
+
+    fn bypassed(&self) -> bool {
+        self.panicked.load(StdOrdering::SeqCst)
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        match self.m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Pick the next thread to run. Returns a deadlock message when no
+    /// thread is runnable but some are blocked (the state's panic slot
+    /// is filled and everyone is woken before returning).
+    fn schedule(&self, s: &mut SchedState, me: usize) -> Option<String> {
+        let mut cands: Vec<usize> = s
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t, Run::Runnable))
+            .map(|(tid, _)| tid)
+            .collect();
+        let voluntary = cands.contains(&me);
+        if voluntary {
+            cands.retain(|&t| t != me);
+            cands.insert(0, me);
+        }
+        if cands.is_empty() {
+            if s.all_finished() {
+                s.active = NO_ACTIVE;
+                self.cv.notify_all();
+                return None;
+            }
+            let msg = s.describe_deadlock();
+            if s.panic.is_none() {
+                s.panic = Some(msg.clone());
+            }
+            self.panicked.store(true, StdOrdering::SeqCst);
+            self.cv.notify_all();
+            return Some(msg);
+        }
+        if s.pos < s.path.len() {
+            assert_eq!(
+                s.path[s.pos].candidates, cands,
+                "loom internal error: schedule replay diverged at decision {}",
+                s.pos
+            );
+        } else {
+            let preemptions_before = s.preemptions;
+            s.path.push(Choice { candidates: cands, sel: 0, preemptions_before });
+        }
+        let c = &s.path[s.pos];
+        let cost = usize::from(c.sel != 0);
+        s.preemptions = c.preemptions_before + cost;
+        s.active = c.candidates[c.sel];
+        s.pos += 1;
+        self.cv.notify_all();
+        None
+    }
+
+    /// Park until this thread holds the token again (or unwind if the
+    /// execution failed meanwhile).
+    fn wait_for_token(&self, me: usize) {
+        let mut s = self.state();
+        loop {
+            if s.panic.is_some() {
+                drop(s);
+                std::panic::panic_any(LoomAbort);
+            }
+            if s.active == me && matches!(s.threads[me], Run::Runnable) {
+                return;
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// A decision point taken by the running thread.
+    fn branch(&self, me: usize) {
+        {
+            let mut s = self.state();
+            if s.panic.is_none() {
+                let dead = self.schedule(&mut s, me);
+                debug_assert!(dead.is_none(), "running thread cannot deadlock");
+            }
+        }
+        self.wait_for_token(me);
+    }
+
+    /// Block the running thread on `res` and hand the token off (a
+    /// forced, preemption-free switch). Returns once woken *and*
+    /// re-granted the token.
+    fn block_on(&self, res: Res, me: usize) {
+        let dead = {
+            let mut s = self.state();
+            s.threads[me] = Run::Blocked(res);
+            self.schedule(&mut s, me)
+        };
+        if let Some(msg) = dead {
+            std::panic::panic_any(msg);
+        }
+        self.wait_for_token(me);
+    }
+
+    fn resource_id(&self, cell: &std::sync::atomic::AtomicUsize) -> usize {
+        let v = cell.load(StdOrdering::Relaxed);
+        if v != 0 {
+            return v;
+        }
+        let mut s = self.state();
+        let v = cell.load(StdOrdering::Relaxed);
+        if v != 0 {
+            return v;
+        }
+        s.next_resource += 1;
+        let id = s.next_resource;
+        if s.mutex_owner.len() <= id {
+            s.mutex_owner.resize(id + 1, None);
+        }
+        cell.store(id, StdOrdering::Relaxed);
+        id
+    }
+
+    fn acquire_mutex(&self, id: usize, me: usize) {
+        loop {
+            self.branch(me);
+            {
+                let mut s = self.state();
+                if s.panic.is_some() {
+                    drop(s);
+                    std::panic::panic_any(LoomAbort);
+                }
+                if s.mutex_owner[id].is_none() {
+                    s.mutex_owner[id] = Some(me);
+                    return;
+                }
+            }
+            self.block_on(Res::Lock(id), me);
+        }
+    }
+
+    fn release_mutex(&self, id: usize, me: usize) {
+        {
+            let mut s = self.state();
+            if s.panic.is_some() {
+                return;
+            }
+            if s.mutex_owner.get(id).copied().flatten() != Some(me) {
+                return;
+            }
+            s.mutex_owner[id] = None;
+            s.wake_all(Res::Lock(id));
+        }
+        self.branch(me);
+    }
+
+    /// Condvar wait: release the mutex (waking lock waiters), park on
+    /// the condvar, and — once notified — re-acquire the mutex.
+    fn condvar_wait(&self, cv: usize, mutex: usize, me: usize) {
+        {
+            let mut s = self.state();
+            if s.mutex_owner.get(mutex).copied().flatten() == Some(me) {
+                s.mutex_owner[mutex] = None;
+                s.wake_all(Res::Lock(mutex));
+            }
+        }
+        self.block_on(Res::Cond(cv), me);
+        self.acquire_mutex(mutex, me);
+    }
+
+    fn notify(&self, cv: usize, all: bool, me: usize) {
+        {
+            let mut s = self.state();
+            if s.panic.is_some() {
+                return;
+            }
+            if all {
+                s.wake_all(Res::Cond(cv));
+            } else {
+                s.wake_one(Res::Cond(cv));
+            }
+        }
+        self.branch(me);
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut s = self.state();
+        s.threads.push(Run::Runnable);
+        s.threads.len() - 1
+    }
+
+    fn record_panic(&self, payload: Box<dyn std::any::Any + Send>) {
+        if payload.downcast_ref::<LoomAbort>().is_some() {
+            return;
+        }
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_string()))
+            .unwrap_or_else(|| "loom: model thread panicked".to_string());
+        let mut s = self.state();
+        if s.panic.is_none() {
+            s.panic = Some(msg);
+        }
+        self.panicked.store(true, StdOrdering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    fn finish_thread(&self, tid: usize) {
+        let mut s = self.state();
+        s.threads[tid] = Run::Finished;
+        s.wake_all(Res::Join(tid));
+        if s.panic.is_some() {
+            self.cv.notify_all();
+        } else {
+            // Deadlock here is recorded by `schedule`; this thread is
+            // exiting, so there is nothing to unwind.
+            let _ = self.schedule(&mut s, tid);
+        }
+    }
+
+    fn join_model_thread(&self, tid: usize, me: usize) {
+        self.branch(me);
+        let finished = {
+            let s = self.state();
+            matches!(s.threads[tid], Run::Finished)
+        };
+        if !finished {
+            self.block_on(Res::Join(tid), me);
+        }
+    }
+
+    fn wait_all_finished(&self) {
+        let mut s = self.state();
+        while !s.all_finished() {
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn join_os_handles(&self) {
+        let handles: Vec<_> = match self.os_handles.lock() {
+            Ok(mut g) => g.drain(..).collect(),
+            Err(p) => p.into_inner().drain(..).collect(),
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    fn outcome(&self) -> (Vec<Choice>, Option<String>) {
+        let mut s = self.state();
+        (std::mem::take(&mut s.path), s.panic.take())
+    }
+}
+
+mod rt {
+    use super::{Arc, Execution};
+    use std::cell::RefCell;
+
+    thread_local! {
+        static CURRENT: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+    }
+
+    pub(crate) fn set(exec: Arc<Execution>, tid: usize) {
+        CURRENT.with(|c| *c.borrow_mut() = Some((exec, tid)));
+    }
+
+    pub(crate) fn clear() {
+        CURRENT.with(|c| *c.borrow_mut() = None);
+    }
+
+    /// The execution this thread models under, unless the run already
+    /// failed (or this thread is unwinding) — in which case every
+    /// primitive falls back to plain `std` behavior so teardown cannot
+    /// re-enter the scheduler.
+    pub(crate) fn active() -> Option<(Arc<Execution>, usize)> {
+        if std::thread::panicking() {
+            return None;
+        }
+        CURRENT
+            .with(|c| c.borrow().clone())
+            .filter(|(exec, _)| !exec.bypassed())
+    }
+}
+
+/// Advance the DFS frontier: flip the deepest decision that still has an
+/// unexplored, budget-respecting alternative. Returns false when the
+/// bounded schedule space is exhausted.
+fn advance(path: &mut Vec<Choice>, bound: usize) -> bool {
+    while let Some(mut c) = path.pop() {
+        loop {
+            c.sel += 1;
+            if c.sel >= c.candidates.len() {
+                break;
+            }
+            let cost = usize::from(c.sel != 0);
+            if c.preemptions_before + cost <= bound {
+                path.push(c);
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+}
+
+/// Per-model knobs, mirroring `loom::model::Builder`.
+#[derive(Clone, Debug, Default)]
+pub struct Builder {
+    /// Delay budget per schedule: the max number of non-default
+    /// scheduling picks (preemptions and forced-switch reorderings).
+    /// `None` defers to `LOOM_MAX_PREEMPTIONS` (default 2); the env var
+    /// always caps. Named for API parity with the real loom crate.
+    pub preemption_bound: Option<usize>,
+    /// Max schedules to explore before panicking (default 500k or
+    /// `LOOM_MAX_ITERATIONS`). Exhausting the space sooner is success.
+    pub max_iterations: Option<usize>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exhaustively check `f` over the bounded schedule space.
+    pub fn check<F: Fn()>(&self, f: F) {
+        let env_cap = env_usize("LOOM_MAX_PREEMPTIONS");
+        let mut bound =
+            self.preemption_bound.unwrap_or_else(|| env_cap.unwrap_or(DEFAULT_PREEMPTION_BOUND));
+        if let Some(cap) = env_cap {
+            bound = bound.min(cap);
+        }
+        let max_iters = self
+            .max_iterations
+            .or_else(|| env_usize("LOOM_MAX_ITERATIONS"))
+            .unwrap_or(DEFAULT_MAX_ITERATIONS);
+        let mut path: Vec<Choice> = Vec::new();
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            assert!(
+                iters <= max_iters,
+                "loom: exceeded {max_iters} schedules without exhausting the space; \
+                 lower the preemption bound or shrink the model"
+            );
+            let exec = Arc::new(Execution::new(path));
+            rt::set(exec.clone(), 0);
+            let result = catch_unwind(AssertUnwindSafe(&f));
+            if let Err(payload) = result {
+                exec.record_panic(payload);
+            }
+            exec.finish_thread(0);
+            exec.wait_all_finished();
+            rt::clear();
+            exec.join_os_handles();
+            let (explored, failure) = exec.outcome();
+            if let Some(msg) = failure {
+                std::panic::panic_any(msg);
+            }
+            path = explored;
+            if !advance(&mut path, bound) {
+                break;
+            }
+        }
+    }
+}
+
+/// Model-check `f` with the default (env-tunable) bounds.
+pub fn model<F: Fn()>(f: F) {
+    Builder::new().check(f)
+}
+
+pub mod thread {
+    use super::rt;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Mutex};
+
+    enum Inner<T> {
+        Modeled { exec: Arc<super::Execution>, tid: usize, slot: Arc<Mutex<Option<T>>> },
+        Std(std::thread::JoinHandle<T>),
+    }
+
+    /// Handle to a spawned model (or fallback OS) thread.
+    pub struct JoinHandle<T> {
+        inner: Inner<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.inner {
+                Inner::Std(h) => h.join(),
+                Inner::Modeled { exec, tid, slot } => {
+                    let me = rt::active().map(|(_, me)| me).unwrap_or(0);
+                    exec.join_model_thread(tid, me);
+                    let taken = match slot.lock() {
+                        Ok(mut g) => g.take(),
+                        Err(p) => p.into_inner().take(),
+                    };
+                    match taken {
+                        Some(v) => Ok(v),
+                        None => Err(Box::new("loom: joined thread panicked".to_string())),
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match rt::active() {
+            Some((exec, me)) => {
+                let tid = exec.register_thread();
+                let slot: Arc<Mutex<Option<T>>> = Arc::new(Mutex::new(None));
+                let slot2 = slot.clone();
+                let exec2 = exec.clone();
+                let os = std::thread::Builder::new()
+                    .name(format!("loom-{tid}"))
+                    .spawn(move || {
+                        rt::set(exec2.clone(), tid);
+                        exec2.wait_for_token(tid);
+                        match catch_unwind(AssertUnwindSafe(f)) {
+                            Ok(v) => {
+                                if let Ok(mut g) = slot2.lock() {
+                                    *g = Some(v);
+                                }
+                            }
+                            Err(payload) => exec2.record_panic(payload),
+                        }
+                        exec2.finish_thread(tid);
+                        rt::clear();
+                    })
+                    .expect("loom: failed to spawn model thread");
+                match exec.os_handles.lock() {
+                    Ok(mut g) => g.push(os),
+                    Err(p) => p.into_inner().push(os),
+                }
+                exec.branch(me);
+                JoinHandle { inner: Inner::Modeled { exec, tid, slot } }
+            }
+            None => JoinHandle { inner: Inner::Std(std::thread::spawn(f)) },
+        }
+    }
+
+    /// A pure decision point: let the scheduler switch if it wants to.
+    pub fn yield_now() {
+        if let Some((exec, me)) = rt::active() {
+            exec.branch(me);
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+pub mod sync {
+    pub use std::sync::{Arc, LockResult, PoisonError, Weak};
+
+    use super::rt;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::atomic::AtomicUsize as IdCell;
+
+    /// Model-checked mutex: `std::sync::Mutex` semantics, with every
+    /// acquire/release a scheduling decision point under `model`.
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+        id: IdCell,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        lock: &'a Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Self { inner: std::sync::Mutex::new(t), id: IdCell::new(0) }
+        }
+
+        fn guard<'a>(
+            &'a self,
+            res: Result<std::sync::MutexGuard<'a, T>, PoisonError<std::sync::MutexGuard<'a, T>>>,
+        ) -> LockResult<MutexGuard<'a, T>> {
+            match res {
+                Ok(g) => Ok(MutexGuard { inner: Some(g), lock: self }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    inner: Some(p.into_inner()),
+                    lock: self,
+                })),
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if let Some((exec, me)) = rt::active() {
+                let id = exec.resource_id(&self.id);
+                exec.acquire_mutex(id, me);
+                // Model ownership is exclusive, so the std lock below
+                // cannot contend (the previous holder dropped its std
+                // guard before releasing model ownership).
+                self.guard(self.inner.lock())
+            } else {
+                self.guard(self.inner.lock())
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("loom: guard already released")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("loom: guard already released")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Drop the std guard *before* releasing model ownership so
+            // the next modeled owner never contends on the std lock.
+            if self.inner.take().is_none() {
+                return;
+            }
+            if let Some((exec, me)) = rt::active() {
+                let id = self.lock.id.load(std::sync::atomic::Ordering::Relaxed);
+                if id != 0 {
+                    exec.release_mutex(id, me);
+                }
+            }
+        }
+    }
+
+    /// Model-checked condvar (no spurious wakeups under `model`).
+    pub struct Condvar {
+        inner: std::sync::Condvar,
+        id: IdCell,
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Self { inner: std::sync::Condvar::new(), id: IdCell::new(0) }
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let mut guard = guard;
+            if let Some((exec, me)) = rt::active() {
+                let cv = exec.resource_id(&self.id);
+                let mutex_id = exec.resource_id(&guard.lock.id);
+                let lock = guard.lock;
+                // Drop only the std guard; the model-level release (and
+                // waking of lock waiters) is part of condvar_wait, so
+                // the plain Drop bookkeeping must not run.
+                drop(guard.inner.take());
+                exec.condvar_wait(cv, mutex_id, me);
+                lock.guard(lock.inner.lock())
+            } else {
+                let lock = guard.lock;
+                let std_guard = guard.inner.take().expect("loom: guard already released");
+                lock.guard(self.inner.wait(std_guard))
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((exec, me)) = rt::active() {
+                let cv = exec.resource_id(&self.id);
+                exec.notify(cv, false, me);
+            }
+            self.inner.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((exec, me)) = rt::active() {
+                let cv = exec.resource_id(&self.id);
+                exec.notify(cv, true, me);
+            }
+            self.inner.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        use crate::rt;
+
+        fn point() {
+            if let Some((exec, me)) = rt::active() {
+                exec.branch(me);
+            }
+        }
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ty, $val:ty) => {
+                /// Sequentially-consistent model atomic; every access is
+                /// a scheduling decision point under `model`.
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    inner: $std,
+                }
+
+                impl $name {
+                    pub fn new(v: $val) -> Self {
+                        Self { inner: <$std>::new(v) }
+                    }
+
+                    pub fn load(&self, _order: Ordering) -> $val {
+                        point();
+                        self.inner.load(Ordering::SeqCst)
+                    }
+
+                    pub fn store(&self, v: $val, _order: Ordering) {
+                        point();
+                        self.inner.store(v, Ordering::SeqCst)
+                    }
+
+                    pub fn swap(&self, v: $val, _order: Ordering) -> $val {
+                        point();
+                        self.inner.swap(v, Ordering::SeqCst)
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+
+        impl AtomicUsize {
+            pub fn fetch_add(&self, v: usize, _order: Ordering) -> usize {
+                point();
+                self.inner.fetch_add(v, Ordering::SeqCst)
+            }
+
+            pub fn fetch_sub(&self, v: usize, _order: Ordering) -> usize {
+                point();
+                self.inner.fetch_sub(v, Ordering::SeqCst)
+            }
+        }
+
+        impl AtomicU64 {
+            pub fn fetch_add(&self, v: u64, _order: Ordering) -> u64 {
+                point();
+                self.inner.fetch_add(v, Ordering::SeqCst)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use super::{model, thread, Builder};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn mutex_counter_is_exact_across_all_schedules() {
+        model(|| {
+            let c = Arc::new(Mutex::new(0usize));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = c.clone();
+                    thread::spawn(move || {
+                        let mut g = c.lock().expect("model mutex");
+                        *g += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("model thread");
+            }
+            assert_eq!(*c.lock().expect("model mutex"), 2);
+        });
+    }
+
+    #[test]
+    fn finds_unsynchronized_lost_update() {
+        // Classic read-modify-write race: needs one preemption between a
+        // thread's load and store to lose an increment.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+                let a = Arc::new(AtomicUsize::new(0));
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let a = a.clone();
+                        thread::spawn(move || {
+                            let v = a.load(Ordering::SeqCst);
+                            a.store(v + 1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("model thread");
+                }
+                assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+            });
+        }));
+        assert!(caught.is_err(), "the lost-update race must be found");
+    }
+
+    #[test]
+    fn preemption_bound_zero_hides_the_race() {
+        // With zero preemptions each thread runs its read-modify-write
+        // atomically, so the same buggy program explores clean — the
+        // bound is real.
+        Builder { preemption_bound: Some(0), ..Builder::default() }.check(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let a = a.clone();
+                    thread::spawn(move || {
+                        let v = a.load(Ordering::SeqCst);
+                        a.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("model thread");
+            }
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn detects_abba_deadlock() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            model(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (a.clone(), b.clone());
+                let h1 = thread::spawn(move || {
+                    let _ga = a2.lock().expect("lock a");
+                    let _gb = b2.lock().expect("lock b");
+                });
+                let (a3, b3) = (a.clone(), b.clone());
+                let h2 = thread::spawn(move || {
+                    let _gb = b3.lock().expect("lock b");
+                    let _ga = a3.lock().expect("lock a");
+                });
+                let _ = h1.join();
+                let _ = h2.join();
+            });
+        }));
+        let payload = caught.expect_err("ABBA deadlock must be found");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn condvar_handoff_with_predicate_loop_is_clean() {
+        model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let pair2 = pair.clone();
+            let waiter = thread::spawn(move || {
+                let (m, cv) = &*pair2;
+                let mut ready = m.lock().expect("lock");
+                while !*ready {
+                    ready = cv.wait(ready).expect("wait");
+                }
+            });
+            {
+                let (m, cv) = &*pair;
+                *m.lock().expect("lock") = true;
+                cv.notify_one();
+            }
+            waiter.join().expect("waiter");
+        });
+    }
+
+    #[test]
+    fn finds_missed_wakeup_when_predicate_is_unlocked() {
+        // Bug: checking the flag outside the mutex lets the notify land
+        // between the check and the wait — the waiter sleeps forever and
+        // the model reports a deadlock.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            Builder { preemption_bound: Some(2), ..Builder::default() }.check(|| {
+                let flag = Arc::new(AtomicBool::new(false));
+                let pair = Arc::new((Mutex::new(()), Condvar::new()));
+                let (flag2, pair2) = (flag.clone(), pair.clone());
+                let waiter = thread::spawn(move || {
+                    if !flag2.load(Ordering::SeqCst) {
+                        let (m, cv) = &*pair2;
+                        let g = m.lock().expect("lock");
+                        let _g = cv.wait(g).expect("wait");
+                    }
+                });
+                flag.store(true, Ordering::SeqCst);
+                pair.1.notify_one();
+                let _ = waiter.join();
+            });
+        }));
+        let payload = caught.expect_err("missed wakeup must be found");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    #[test]
+    fn primitives_fall_back_to_std_outside_model() {
+        let m = Mutex::new(5usize);
+        *m.lock().expect("std fallback lock") += 1;
+        assert_eq!(*m.lock().expect("std fallback lock"), 6);
+        let a = AtomicUsize::new(1);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 1);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+        let h = thread::spawn(|| 41 + 1);
+        assert_eq!(h.join().expect("std fallback thread"), 42);
+    }
+}
