@@ -221,6 +221,66 @@ fn main() -> galaxy::Result<()> {
         "i8 wire must move exactly a quarter of the f32 bytes"
     );
 
+    // Planned overlap grain: the planner picks a per-rung micro-tile
+    // count T ≥ d that re-slices each ring transfer so micro-tile k's
+    // wire time hides under micro-tile k-1's GEMM. At 25 Mbps the f32
+    // wire is exposure-dominated, so the chosen grain must cut both the
+    // trace's exposed-comm total and its e2e p95 — without moving a
+    // single extra ring byte or adding a sync point.
+    let coarse_dep = Deployment::from_plan(plan.clone(), &[128, 256, 512]);
+    let mut grained_dep = coarse_dep.clone();
+    grained_dep.choose_tile_grains(&model, &env, NetParams::mbps(MBPS), WireFormat::F32)?;
+    println!("\nplanned overlap grain (f32 wire at {MBPS:.0} Mbps):");
+    for rung in grained_dep.rungs() {
+        if let Some(ch) = rung.grain_choice {
+            println!(
+                "  bucket {:>3}: T = {:>2}  modeled exposed {} (T=d baseline {})",
+                rung.bucket,
+                ch.grain,
+                fmt_secs(ch.exposed_s),
+                fmt_secs(ch.baseline_exposed_s),
+            );
+        }
+    }
+    let replay_dep = |dep: Deployment| -> galaxy::Result<SchedReport> {
+        let engine = SimEngine::from_deployment(&model, &env, dep, NetParams::mbps(MBPS))?;
+        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        Scheduler::with_config(engine, cfg).run(&trace)
+    };
+    let coarse_rep = replay_dep(coarse_dep)?;
+    let grained_rep = replay_dep(grained_dep.clone())?;
+    println!(
+        "grain replay: T=d e2e p95 {} → planned-T e2e p95 {}",
+        fmt_secs(coarse_rep.metrics.e2e.p95_s()),
+        fmt_secs(grained_rep.metrics.e2e.p95_s()),
+    );
+    assert!(
+        grained_dep.rungs().iter().any(|r| r.tile_grain > grained_dep.n_devices()),
+        "chooser refined no rung at 25 Mbps f32"
+    );
+    assert!(
+        grained_rep.metrics.exposed_comm_s < coarse_rep.metrics.exposed_comm_s,
+        "planned grain exposed {} !< T=d exposed {}",
+        grained_rep.metrics.exposed_comm_s,
+        coarse_rep.metrics.exposed_comm_s
+    );
+    assert!(
+        grained_rep.metrics.e2e.p95_s() < coarse_rep.metrics.e2e.p95_s(),
+        "planned grain e2e p95 {} !< T=d e2e p95 {}",
+        grained_rep.metrics.e2e.p95_s(),
+        coarse_rep.metrics.e2e.p95_s()
+    );
+    assert_eq!(
+        grained_rep.ring_bytes(),
+        coarse_rep.ring_bytes(),
+        "grain must never change the collective volume"
+    );
+    assert_eq!(
+        grained_rep.sync_points(),
+        coarse_rep.sync_points(),
+        "grain must never change the sync-point count"
+    );
+
     let speedup = fifo.metrics.throughput_rps() / serial.metrics.throughput_rps();
     println!(
         "pipelining: peak {} requests in flight, {:.2}x the serial FIFO throughput",

@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (the offline registry has no `clap`; DESIGN.md §4).
 //!
 //! ```text
-//! galaxy plan     --model bert-l --env F [--seq 284]
+//! galaxy plan     --model bert-l --env F [--seq 284] [--wire i8]
 //! galaxy simulate --model bert-l --env B [--seq 284] [--bandwidth 125]
 //!                 [--strategy galaxy|mlm|sp|local] [--no-overlap]
 //! galaxy serve    --devices 3 [--requests 8] [--flavor xla|pallas]
@@ -94,6 +94,7 @@ galaxy — collaborative edge Transformer inference (paper reproduction)
 USAGE:
   galaxy plan     --model <m> --env <A..F|GPU> [--seq N]
                   [--strategy heuristic|exhaustive]
+                  [--bandwidth MBPS] [--wire f32|f16|i8]
   galaxy simulate --model <m> --env <A..F|GPU> [--seq N] [--bandwidth MBPS]
                   [--strategy galaxy|mlm|sp|local] [--no-overlap]
                   [--wire f32|f16|i8]
@@ -150,7 +151,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mut buckets: Vec<usize> =
         DEFAULT_SEQ_BUCKETS.iter().copied().filter(|&b| b < cfg.seq).collect();
     buckets.push(cfg.seq);
-    let deployment = Deployment::plan(cfg.strategy, &model, &env, &profile, &buckets)?;
+    let mut deployment = Deployment::plan(cfg.strategy, &model, &env, &profile, &buckets)?;
+    // Overlap grain is part of the plan: pick the per-rung micro-tile
+    // count T for the flagged bandwidth and wire format.
+    deployment.choose_tile_grains(&model, &env, cfg.net(), cfg.wire)?;
 
     let reference = deployment.rung(cfg.seq).ok_or_else(|| {
         GalaxyError::Config(format!("deployment has no rung for the reference seq {}", cfg.seq))
@@ -192,7 +196,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let sim = SimEngine::from_deployment(&model, &env, deployment.clone(), cfg.net())?;
     let mut tb = Table::new(
         format!("Per-bucket deployment (generation {})", deployment.generation()),
-        &["bucket", "heads", "mlp units", "seq rows", "pred layer (Eq.5)", "timeline layer"],
+        &["bucket", "heads", "mlp units", "seq rows", "grain T", "pred layer (Eq.5)", "timeline layer"],
     );
     for rung in deployment.rungs() {
         tb.row(&[
@@ -200,11 +204,40 @@ fn cmd_plan(args: &Args) -> Result<()> {
             format!("{:?}", rung.plan.partition.heads),
             format!("{:?}", rung.plan.partition.mlp_units),
             format!("{:?}", rung.plan.partition.seq),
+            format!("{}", rung.tile_grain),
             fmt_secs(rung.plan.pred_layer_compute_s()),
             fmt_secs(sim.layer_cost(rung.bucket).total_s()),
         ]);
     }
     println!("{}", tb.render());
+
+    // The overlap-grain trajectory: predicted exposed communication of
+    // the chosen T against the coarse T = d walk, per rung.
+    println!(
+        "overlap grain (wire {}, {} Mbps, per-post overhead {:.0} us):",
+        cfg.wire,
+        cfg.bandwidth_mbps,
+        cfg.net().per_post_overhead_s * 1e6
+    );
+    for rung in deployment.rungs() {
+        match rung.grain_choice {
+            Some(ch) if ch.grain > deployment.n_devices() => println!(
+                "  bucket {:>4}: T = {:>2}  exposed {} (T=d baseline {}, grain overhead {})",
+                rung.bucket,
+                ch.grain,
+                fmt_secs(ch.exposed_s),
+                fmt_secs(ch.baseline_exposed_s),
+                fmt_secs(ch.overhead_s),
+            ),
+            Some(ch) => println!(
+                "  bucket {:>4}: T = {:>2}  (coarse walk is optimal; exposed {})",
+                rung.bucket,
+                ch.grain,
+                fmt_secs(ch.exposed_s),
+            ),
+            None => println!("  bucket {:>4}: T = {:>2}  (no choice recorded)", rung.bucket, rung.tile_grain),
+        }
+    }
     Ok(())
 }
 

@@ -69,17 +69,44 @@ pub struct BucketGeom {
     pub tiles: Vec<usize>,
     /// Row offset of each device's tile.
     pub offsets: Vec<usize>,
+    /// Planned overlap grain `T` for this bucket's ring phases: the
+    /// cluster-wide micro-tile count per phase, from the deployment rung
+    /// ([`Deployment::tile_grain_for`]). `T = d` is the coarse
+    /// one-tile-per-device walk; the workers pick the micro walk when
+    /// `T > d`. Never chosen here — the `tile-grain-truth` lint pins
+    /// grain selection to the planner.
+    pub tile_grain: usize,
 }
 
 impl BucketGeom {
     pub fn from_tiles(seq_len: usize, tiles: Vec<usize>) -> Self {
         let offsets = (0..tiles.len()).map(|i| tiles[..i].iter().sum()).collect();
-        Self { seq_len, tiles, offsets }
+        let tile_grain = tiles.len();
+        Self { seq_len, tiles, offsets, tile_grain }
     }
 
-    /// Geometry of the deployment's rung serving `seq_len` rows.
+    /// Geometry of the deployment's rung serving `seq_len` rows,
+    /// carrying the rung's planned overlap grain when this geometry can
+    /// walk it.
     pub fn from_deployment(dep: &Deployment, seq_len: usize) -> Self {
         Self::from_tiles(seq_len, dep.partition_for(seq_len).seq)
+            .with_planned_grain(dep.tile_grain_for(seq_len))
+    }
+
+    /// Adopt a planned overlap grain if this geometry can walk it: the
+    /// grain must be a multiple of the device count and every tile must
+    /// donate `T/d` micro-tile rows. Unwalkable grains keep the coarse
+    /// one-tile-per-device walk (e.g. an off-ladder request whose
+    /// re-derived rows are shorter than the rung's planned split).
+    pub fn with_planned_grain(mut self, grain: usize) -> Self {
+        let d = self.tiles.len();
+        let min_rows = self.tiles.iter().copied().min().unwrap_or(0);
+        if d > 1 && grain > d && grain % d == 0 && grain / d <= min_rows {
+            // lint: allow(tile-grain-truth): adopts the planner's already-chosen
+            // grain after a walkability check; never originates a value.
+            self.tile_grain = grain;
+        }
+        self
     }
 }
 
@@ -316,7 +343,10 @@ impl RealCluster {
                      vary across rungs)"
                 )));
             }
-            geoms.push(BucketGeom::from_tiles(b, part.seq));
+            geoms.push(
+                BucketGeom::from_tiles(b, part.seq)
+                    .with_planned_grain(deployment.tile_grain_for(b)),
+            );
         }
         // Fail fast on a ladder the artifact set cannot serve: every
         // non-reference rung must have at least one `_s{b}`-tagged

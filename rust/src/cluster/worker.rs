@@ -31,6 +31,17 @@
 //! In [`OverlapMode::None`] the same ring walks run with communication and
 //! computation strictly serialized (fused shard artifacts) — the ablation
 //! baseline and the numerics cross-check for the tiled path.
+//!
+//! When the bucket's geometry carries a planned overlap grain `T > d`
+//! (from the deployment rung, see [`crate::cluster::BucketGeom`]), both
+//! phases run the micro-tile walks instead
+//! ([`RingIo::ag_walk_micro`]/[`RingIo::rs_walk_micro`] over the
+//! `*_micro_steps` schedules): each SP row moves as `T/d` row-slices so
+//! a micro-tile's transfer overlaps the neighbouring compute *within* a
+//! ring step. GEMMs stay tile-granular (the AOT artifact set is keyed by
+//! tile row counts), sync points and ring bytes are grain-invariant, and
+//! backpressure stays bounded by `LINK_SLOTS` because every sub-step
+//! still pairs one post with one consume.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -39,7 +50,9 @@ use std::sync::mpsc::{Receiver, Sender};
 use crate::config::Manifest;
 use crate::error::{GalaxyError, Result};
 use crate::model::{ModelConfig, WeightGen};
-use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+use crate::parallel::overlap::{
+    all_gather_micro_steps, all_gather_steps, reduce_scatter_micro_steps, reduce_scatter_steps,
+};
 use crate::parallel::schedule::{seq_program, ShardSpec};
 use crate::parallel::OverlapMode;
 use crate::runtime::{literal, Runtime};
@@ -378,11 +391,15 @@ impl Worker {
         let my_rows = geom.tiles[self.spec.index];
         let my_off = geom.offsets[self.spec.index];
         let tiled = self.spec.overlap == OverlapMode::Tiled;
+        // Serial mode has nothing to hide inside a step, so a planned
+        // micro grain would only multiply posts; degrade to coarse
+        // (mirrors the simulator's gating).
+        let grain = if tiled { geom.tile_grain } else { self.spec.n_devices };
 
         // ---- MHA block -------------------------------------------------
         // Entry AllGather ⊕ QKV tiles: the transport posts each tile
         // before this closure dispatches its GEMM.
-        let (x_full, qkv_tiles) = self.ag_phase(io, x_shard, |slot, xt| {
+        let (x_full, qkv_tiles) = self.ag_phase(io, grain, x_shard, |slot, xt| {
             if !tiled || s.k_heads == 0 {
                 return Ok(None);
             }
@@ -448,7 +465,7 @@ impl Worker {
         }
 
         // Exit GEMM ⊕ ReduceScatter.
-        let g_mine = self.rs_phase(io, c_partial_tile)?;
+        let g_mine = self.rs_phase(io, grain, c_partial_tile)?;
 
         // SP connective #1: H_i = LN(G_i + A_i).
         let a_mine = x_full.slice_rows(my_off, my_rows)?;
@@ -463,7 +480,7 @@ impl Worker {
 
         // ---- MLP block --------------------------------------------------
         // Entry AllGather ⊕ GEMM1 tiles.
-        let (h1_full, e_tiles) = self.ag_phase(io, h1_shard, |slot, ht| {
+        let (h1_full, e_tiles) = self.ag_phase(io, grain, h1_shard, |slot, ht| {
             if !tiled || s.u_units == 0 {
                 return Ok(None);
             }
@@ -514,7 +531,7 @@ impl Worker {
         }
 
         // Exit GEMM2 ⊕ ReduceScatter.
-        let g2_mine = self.rs_phase(io, f_partial_tile)?;
+        let g2_mine = self.rs_phase(io, grain, f_partial_tile)?;
 
         // SP connective #2: H'_i = LN(G'_i + H_i).
         let res_mine = h1_full.slice_rows(my_off, my_rows)?;
@@ -539,6 +556,7 @@ impl Worker {
     fn ag_phase(
         &self,
         io: &mut RingIo,
+        grain: usize,
         my_tile: Tensor2,
         compute: impl FnMut(usize, &Tensor2) -> Result<Option<Tensor2>>,
     ) -> Result<(Tensor2, Vec<Option<Tensor2>>)> {
@@ -547,12 +565,17 @@ impl Worker {
         if d > 1 {
             io.sync_points += 1;
         }
-        let steps = all_gather_steps(i, d);
         // Slots hold refcounted tiles: posting one is a count bump (plus
         // the codec's encode for lossy formats), never an f32 copy.
         let mut tiles: Vec<Option<std::sync::Arc<Tensor2>>> = vec![None; d];
         tiles[i] = Some(std::sync::Arc::new(my_tile));
-        let outs = io.ag_walk(&steps, &mut tiles, compute)?;
+        let outs = if d > 1 && grain > d {
+            let steps = all_gather_micro_steps(i, d, grain);
+            io.ag_walk_micro(&steps, grain, &mut tiles, compute)?
+        } else {
+            let steps = all_gather_steps(i, d);
+            io.ag_walk(&steps, &mut tiles, compute)?
+        };
         let parts = (0..d)
             .map(|r| {
                 tiles[r].take().map(crate::transport::take_tile).ok_or_else(|| {
@@ -570,6 +593,7 @@ impl Worker {
     fn rs_phase(
         &self,
         io: &mut RingIo,
+        grain: usize,
         partial: impl FnMut(usize) -> Result<Tensor2>,
     ) -> Result<Tensor2> {
         let i = self.spec.index;
@@ -577,7 +601,12 @@ impl Worker {
         if d > 1 {
             io.sync_points += 1;
         }
-        let steps = reduce_scatter_steps(i, d);
-        io.rs_walk(&steps, partial)
+        if d > 1 && grain > d {
+            let steps = reduce_scatter_micro_steps(i, d, grain);
+            io.rs_walk_micro(&steps, grain, partial)
+        } else {
+            let steps = reduce_scatter_steps(i, d);
+            io.rs_walk(&steps, partial)
+        }
     }
 }

@@ -22,7 +22,10 @@
 use std::sync::Arc;
 
 use crate::error::{GalaxyError, Result};
-use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+use crate::parallel::overlap::{
+    all_gather_micro_steps, all_gather_steps, micro_rows, reduce_scatter_micro_steps,
+    reduce_scatter_steps,
+};
 use crate::tensor::Tensor2;
 use crate::transport::{mem_ring, take_tile, RingLink, TileCodec, WireFormat, LINK_SLOTS};
 
@@ -309,6 +312,249 @@ pub fn ring_reduce_scatter_multi_wire(
         .collect()
 }
 
+/// Shared validation for the micro-grain lockstep walks: the grain must
+/// be a positive multiple of the ring size, and every tile must have at
+/// least `per = grain/d` rows to split.
+fn check_micro_grain(d: usize, grain: usize, min_rows: usize) -> Result<usize> {
+    if grain < d || grain % d != 0 {
+        return Err(GalaxyError::Config(format!(
+            "overlap grain {grain} is not a multiple of the ring size {d}"
+        )));
+    }
+    let per = grain / d;
+    if min_rows < per {
+        return Err(GalaxyError::Config(format!(
+            "overlap grain {grain} needs {per} micro-tiles per SP row but the \
+             smallest tile has only {min_rows} rows"
+        )));
+    }
+    Ok(per)
+}
+
+/// Row-slice micro `micro` of `per` out of a tile, using the same split
+/// as the schedules ([`micro_rows`]).
+fn micro_slice(t: &Tensor2, per: usize, micro: usize) -> Result<Tensor2> {
+    let rows = micro_rows(t.rows(), per);
+    let off: usize = rows[..micro].iter().sum();
+    t.slice_rows(off, rows[micro])
+}
+
+/// Lockstep micro-grain Ring-AllGather for one or more interleaved
+/// requests: the planner-grain refinement of
+/// [`ring_all_gather_multi_wire`]. Each device's tile splits into
+/// `grain/d` row-sliced micro-tiles and every lockstep sub-step moves
+/// one micro-tile per request over the shared double-buffered links —
+/// so two requests' **micro**-tiles share each link's [`LINK_SLOTS`]
+/// slots exactly like their coarse tiles do, and a third request still
+/// backpressures. At f32 the result is bit-identical to the coarse walk
+/// for every grain (pure slicing and reassembly).
+pub fn ring_all_gather_micro_wire(
+    requests: &[Vec<Tensor2>],
+    format: WireFormat,
+    grain: usize,
+) -> Result<Vec<Vec<Tensor2>>> {
+    let d = requests.first().map(|r| r.len()).unwrap_or(0);
+    if d == 0 {
+        return Err(GalaxyError::Shape("ring_all_gather: empty".into()));
+    }
+    if requests.iter().any(|r| r.len() != d) {
+        return Err(GalaxyError::Shape("ring_all_gather: uneven device counts".into()));
+    }
+    let min_rows = requests.iter().flatten().map(Tensor2::rows).min().unwrap_or(0);
+    let per = check_micro_grain(d, grain, min_rows)?;
+    let nq = requests.len();
+    let mut links = mem_ring(d, LINK_SLOTS);
+    let codec = TileCodec::new(format);
+    let mut tiles: Vec<Vec<Vec<Option<Arc<Tensor2>>>>> = (0..nq)
+        .map(|q| {
+            (0..d)
+                .map(|i| {
+                    (0..d)
+                        .map(|r| {
+                            if r == i {
+                                Some(Arc::new(requests[q][r].clone()))
+                            } else {
+                                None
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    // inbox[q][i]: decoded micro-slices of the tile device i is currently
+    // receiving for request q (arrival order == row order).
+    let mut inbox: Vec<Vec<Vec<Arc<Tensor2>>>> = vec![vec![Vec::new(); d]; nq];
+    let plans: Vec<_> = (0..d).map(|i| all_gather_micro_steps(i, d, grain)).collect();
+    for u in 0..d * per {
+        // Wire: every device posts its sub-step micro for every request
+        // before any is consumed — interleaved micro-traffic sharing the
+        // slots, exactly the coarse contract.
+        for q in 0..nq {
+            for (i, link) in links.iter_mut().enumerate() {
+                if let Some(send) = plans[i][u].send {
+                    let held = tiles[q][i][send.tile].clone().ok_or_else(|| {
+                        GalaxyError::Fabric(format!(
+                            "dev {i} sub-step {u}: tile {} not yet held",
+                            send.tile
+                        ))
+                    })?;
+                    let payload = Arc::new(micro_slice(&held, per, send.micro)?);
+                    link.0.post_send(codec.encode(&payload)?)?;
+                }
+            }
+        }
+        for q in 0..nq {
+            for (i, link) in links.iter_mut().enumerate() {
+                if let Some(recv) = plans[i][u].recv {
+                    if !link.1.try_recv()? {
+                        return Err(GalaxyError::Fabric(format!(
+                            "dev {i} sub-step {u}: micro of tile {} did not arrive — \
+                             schedule broken",
+                            recv.tile
+                        )));
+                    }
+                    inbox[q][i].push(link.1.complete_recv()?.decode()?);
+                    if recv.micro + 1 == per {
+                        let parts: Vec<Tensor2> =
+                            inbox[q][i].drain(..).map(take_tile).collect();
+                        tiles[q][i][recv.tile] = Some(Arc::new(Tensor2::concat_rows(&parts)?));
+                    }
+                }
+                let c = plans[i][u].compute;
+                if c.micro == 0 && tiles[q][i][c.tile].is_none() {
+                    return Err(GalaxyError::Fabric(format!(
+                        "dev {i} sub-step {u}: compute tile {} missing — schedule broken",
+                        c.tile
+                    )));
+                }
+            }
+        }
+    }
+    tiles
+        .into_iter()
+        .map(|per_dev| {
+            per_dev
+                .into_iter()
+                .map(|mut held| {
+                    let parts = (0..d)
+                        .map(|r| {
+                            held[r].take().map(take_tile).ok_or_else(|| {
+                                GalaxyError::Fabric(format!("AG: tile {r} missing after walk"))
+                            })
+                        })
+                        .collect::<Result<Vec<Tensor2>>>()?;
+                    Tensor2::concat_rows(&parts)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Lockstep micro-grain Ring-ReduceScatter for one or more interleaved
+/// requests: the planner-grain refinement of
+/// [`ring_reduce_scatter_multi_wire`]. The previous coarse step's
+/// accumulation is forwarded one micro-slice per sub-step; arriving
+/// micro partials reduce-add into their row range of the running tile.
+/// At f32 each element sees the same additions in the same hop order as
+/// the coarse walk, so the reduced tiles are bit-identical.
+pub fn ring_reduce_scatter_micro_wire(
+    requests: &[(Vec<Tensor2>, Vec<usize>)],
+    format: WireFormat,
+    grain: usize,
+) -> Result<Vec<Vec<Tensor2>>> {
+    let d = requests.first().map(|(p, _)| p.len()).unwrap_or(0);
+    if d == 0 {
+        return Err(GalaxyError::Shape("ring_reduce_scatter: empty".into()));
+    }
+    for (partials, seq_parts) in requests {
+        if partials.len() != d || seq_parts.len() != d {
+            return Err(GalaxyError::Shape(format!(
+                "ring_reduce_scatter: {} devices vs {} parts",
+                partials.len(),
+                seq_parts.len()
+            )));
+        }
+    }
+    let min_rows =
+        requests.iter().flat_map(|(_, parts)| parts.iter().copied()).min().unwrap_or(0);
+    let per = check_micro_grain(d, grain, min_rows)?;
+    let nq = requests.len();
+    let mut links = mem_ring(d, LINK_SLOTS);
+    let codec = TileCodec::new(format);
+    let offsets: Vec<Vec<usize>> = requests
+        .iter()
+        .map(|(_, parts)| (0..d).map(|r| parts[..r].iter().sum()).collect())
+        .collect();
+    let tile_of = |q: usize, i: usize, r: usize| -> Result<Tensor2> {
+        requests[q].0[i].slice_rows(offsets[q][r], requests[q].1[r])
+    };
+    let plans: Vec<_> = (0..d).map(|i| reduce_scatter_micro_steps(i, d, grain)).collect();
+    // acc[q][i] = the fully accumulated tile of the previous coarse step
+    // (being forwarded micro by micro); cur[q][i] = the tile this coarse
+    // step is reducing into.
+    let mut acc: Vec<Vec<Option<Arc<Tensor2>>>> = vec![vec![None; d]; nq];
+    let mut cur: Vec<Vec<Option<Tensor2>>> = vec![vec![None; d]; nq];
+    for u in 0..d * per {
+        for q in 0..nq {
+            for (i, link) in links.iter_mut().enumerate() {
+                if let Some(send) = plans[i][u].send {
+                    let t = acc[q][i].clone().ok_or_else(|| {
+                        GalaxyError::Fabric(format!(
+                            "dev {i} had nothing to send at sub-step {u}"
+                        ))
+                    })?;
+                    let payload = Arc::new(micro_slice(&t, per, send.micro)?);
+                    link.0.post_send(codec.encode(&payload)?)?;
+                    if send.micro + 1 == per {
+                        acc[q][i] = None; // fully forwarded
+                    }
+                }
+            }
+        }
+        for q in 0..nq {
+            for (i, link) in links.iter_mut().enumerate() {
+                let step = plans[i][u];
+                if step.compute.micro == 0 {
+                    cur[q][i] = Some(tile_of(q, i, step.compute.tile)?);
+                }
+                if let Some(recv) = step.recv {
+                    let got = link.1.complete_recv()?.decode()?;
+                    let o = cur[q][i].as_mut().ok_or_else(|| {
+                        GalaxyError::Fabric(format!(
+                            "dev {i} sub-step {u}: micro partial arrived before its tile"
+                        ))
+                    })?;
+                    let rows = micro_rows(o.rows(), per);
+                    let off: usize = rows[..recv.micro].iter().sum();
+                    o.add_assign_rows(off, &got)?;
+                }
+                if step.compute.micro + 1 == per {
+                    let done = cur[q][i].take().ok_or_else(|| {
+                        GalaxyError::Fabric(format!(
+                            "dev {i} sub-step {u}: coarse step ended with no tile"
+                        ))
+                    })?;
+                    acc[q][i] = Some(Arc::new(done));
+                }
+            }
+        }
+    }
+    acc.into_iter()
+        .map(|per_dev| {
+            per_dev
+                .into_iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    a.map(take_tile).ok_or_else(|| {
+                        GalaxyError::Fabric(format!("RS: device {i} never accumulated"))
+                    })
+                })
+                .collect::<Result<Vec<Tensor2>>>()
+        })
+        .collect()
+}
+
 /// Ring-AllReduce = Ring-ReduceScatter + Ring-AllGather (the Megatron-LM
 /// baseline synchronization; paper §III-B.5 merit 2).
 pub fn ring_all_reduce(partials: &[Tensor2], seq_parts: &[usize]) -> Result<Vec<Tensor2>> {
@@ -460,6 +706,93 @@ mod tests {
     }
 
     #[test]
+    fn micro_grain_collectives_reproduce_plain_bit_exact() {
+        // The tentpole equivalence property: for every ring size d ≤ 8
+        // and grain T ∈ {d, 2d, 4d} over uneven SP partitions, the
+        // micro-grain walks at f32 reproduce the plain (coarse) ring
+        // walks bit-exactly — AG is pure slicing and reassembly, RS
+        // applies the same additions in the same hop order.
+        let mut rng = Pcg64::new(41);
+        for d in 1..=8usize {
+            for mult in [1usize, 2, 4] {
+                let grain = mult * d;
+                // Uneven partition; ≥ 4 rows so every tile splits 4 ways.
+                let parts: Vec<usize> = (0..d).map(|_| rng.range(4, 9) as usize).collect();
+                let shards: Vec<Tensor2> =
+                    parts.iter().map(|&r| rand_tensor(&mut rng, r, 3)).collect();
+                let want_ag = reference::all_gather(&shards).unwrap();
+                let got_ag = ring_all_gather_micro_wire(
+                    std::slice::from_ref(&shards),
+                    WireFormat::F32,
+                    grain,
+                )
+                .unwrap();
+                for per_dev in &got_ag[0] {
+                    assert_eq!(*per_dev, want_ag, "AG d={d} T={grain}");
+                }
+                let seq: usize = parts.iter().sum();
+                let partials: Vec<Tensor2> =
+                    (0..d).map(|_| rand_tensor(&mut rng, seq, 3)).collect();
+                // Coarse lockstep is the bit-exactness oracle (the naive
+                // reference sums in a different order).
+                let want_rs = ring_reduce_scatter(&partials, &parts).unwrap();
+                let req = (partials, parts);
+                let got_rs = ring_reduce_scatter_micro_wire(
+                    std::slice::from_ref(&req),
+                    WireFormat::F32,
+                    grain,
+                )
+                .unwrap();
+                assert_eq!(got_rs[0], want_rs, "RS d={d} T={grain}");
+            }
+        }
+    }
+
+    #[test]
+    fn micro_interleaved_requests_share_slots_without_ordering_loss() {
+        // Two requests' micro-tiles ride the same double-buffered links:
+        // both must come out exactly right (no ordering loss between the
+        // interleaved micro streams), and a third concurrent request
+        // still backpressures at LINK_SLOTS regardless of the grain.
+        let mut rng = Pcg64::new(42);
+        let d = 3;
+        let grain = 2 * d;
+        let reqs: Vec<Vec<Tensor2>> = (0..2)
+            .map(|_| (0..d).map(|_| rand_tensor(&mut rng, 4, 3)).collect())
+            .collect();
+        let got = ring_all_gather_micro_wire(&reqs, WireFormat::F32, grain).unwrap();
+        for (q, req) in reqs.iter().enumerate() {
+            let want = reference::all_gather(req).unwrap();
+            for per_dev in &got[q] {
+                assert_eq!(*per_dev, want, "q={q}");
+            }
+        }
+        let reqs3: Vec<Vec<Tensor2>> = (0..3)
+            .map(|_| (0..d).map(|_| rand_tensor(&mut rng, 4, 3)).collect())
+            .collect();
+        let err = ring_all_gather_micro_wire(&reqs3, WireFormat::F32, grain).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+    }
+
+    #[test]
+    fn micro_grain_rejects_oversplit_tiles() {
+        // A grain demanding more micro-tiles than a tile has rows must be
+        // a Config error at the walk boundary, not a panic mid-ring.
+        let mut rng = Pcg64::new(43);
+        let shards: Vec<Tensor2> = (0..2).map(|_| rand_tensor(&mut rng, 2, 3)).collect();
+        let err = ring_all_gather_micro_wire(
+            std::slice::from_ref(&shards),
+            WireFormat::F32,
+            8, // per = 4 > 2 rows
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("micro-tiles"), "{err}");
+        let err = ring_all_gather_micro_wire(std::slice::from_ref(&shards), WireFormat::F32, 3)
+            .unwrap_err();
+        assert!(err.to_string().contains("multiple of the ring size"), "{err}");
+    }
+
+    #[test]
     fn prop_ring_ag_equals_reference() {
         forall(
             "ring_ag==naive_ag",
@@ -514,6 +847,9 @@ mod tests {
                 // one encode's error; RS re-quantizes the running sum on
                 // each of its d-1 reduce hops, so its bound scales with d.
                 for format in WireFormat::all() {
+                    // I8 scales are per-channel (row-wise max-abs), so the
+                    // true per-row bound is max|row|/254 ≤ this tile-max
+                    // bound — the tile-max form stays a valid ceiling.
                     let per_encode = |m: f32| match format {
                         WireFormat::F32 => 0.0f32,
                         WireFormat::F16 => m * 2.0f32.powi(-11) + 2.0f32.powi(-24),

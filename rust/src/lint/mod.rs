@@ -127,6 +127,22 @@ pub const RULES: &[Rule] = &[
         ],
     },
     Rule {
+        id: "tile-grain-truth",
+        why: "the overlap micro-tile grain T is a planned per-rung quantity: only \
+              the planner selects it (Deployment::choose_tile_grains / \
+              set_tile_grain); engines and clusters consult tile_grain_for",
+        scan: &[],
+        except: &["planner/"],
+        forbid: &[".tile_grain ="],
+        skip_test_code: true,
+        require: &[
+            ("planner/deployment.rs", "pub fn choose_tile_grains"),
+            ("planner/deployment.rs", "pub fn set_tile_grain"),
+            ("sim/engine.rs", "tile_grain_for"),
+            ("cluster/mod.rs", "tile_grain_for"),
+        ],
+    },
+    Rule {
         id: "measured-clock",
         why: "wall-clock reads outside the measurement plumbing make replans \
               depend on un-modeled time; route timing through the cluster's \
@@ -610,6 +626,17 @@ mod tests {
         assert!(check_source("serving/mod.rs", src)
             .iter()
             .all(|v| v.rule != "transport-sync-shim"));
+    }
+
+    #[test]
+    fn tile_grain_truth_pins_selection_to_the_planner() {
+        let src = "fn f(g: &mut BucketGeom) { g.tile_grain = 8; }\n";
+        assert!(check_source("cluster/mod.rs", src)
+            .iter()
+            .any(|v| v.rule == "tile-grain-truth"));
+        assert!(check_source("planner/deployment.rs", src)
+            .iter()
+            .all(|v| v.rule != "tile-grain-truth"));
     }
 
     #[test]

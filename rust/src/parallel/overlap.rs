@@ -83,6 +83,119 @@ pub fn reduce_scatter_steps(i: usize, d: usize) -> Vec<RsStep> {
         .collect()
 }
 
+/// One micro-tile of the overlap schedule: row-chunk `micro` (of the
+/// `grain/d` chunks) of SP tile `tile`.
+///
+/// A plain schedule moves whole SP tiles — overlap granularity `d`. A
+/// micro-tile schedule refines every ring step into `grain/d` sub-steps
+/// so each post carries a fraction of a tile and micro-tile `k`'s
+/// transfer overlaps micro-tile `k-1`'s GEMM *within* the step (paper
+/// §III-D taken to its granularity limit). Totals are invariant in the
+/// grain: the same rows cross the wire and the ring still synchronizes
+/// once per phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MicroRef {
+    /// SP tile (ring slot) the micro-tile is a row-chunk of.
+    pub tile: usize,
+    /// Chunk index within the tile, `0..grain/d`.
+    pub micro: usize,
+}
+
+/// One sub-step of the micro-tile Ring-AllGather overlap for one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AgMicroStep {
+    /// Micro-tile to run the entry GEMM on during this sub-step.
+    pub compute: MicroRef,
+    /// Micro-tile to forward to the successor (None in the last step).
+    pub send: Option<MicroRef>,
+    /// Micro-tile arriving from the predecessor (None in the last step).
+    pub recv: Option<MicroRef>,
+}
+
+/// One sub-step of the micro-tile Ring-ReduceScatter overlap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RsMicroStep {
+    /// Micro-tile to run the exit GEMM on during this sub-step.
+    pub compute: MicroRef,
+    /// Accumulated partial micro-tile to forward (None in the first step).
+    pub send: Option<MicroRef>,
+    /// Partial micro-tile arriving to be reduce-added (None in the first
+    /// step).
+    pub recv: Option<MicroRef>,
+}
+
+/// Micro-tiles per device tile for an overlap grain: `grain` is the
+/// *total* micro-tile count `T`, so each device's SP row splits into
+/// `T/d` chunks. Panics on an unplannable grain — the planner's
+/// granularity chooser only emits valid ones.
+pub fn micro_per_tile(d: usize, grain: usize) -> usize {
+    assert!(d >= 1, "ring needs at least one device");
+    assert!(
+        grain >= d && grain % d == 0,
+        "overlap grain {grain} must be a multiple of the device count {d}"
+    );
+    grain / d
+}
+
+/// Near-equal split of one tile's `rows` into `per` micro-tile row
+/// counts (remainder spread over the first chunks, mirroring the SP
+/// equal split). Every chunk must be non-empty: ring posts carry data.
+pub fn micro_rows(rows: usize, per: usize) -> Vec<usize> {
+    assert!(per >= 1 && rows >= per, "cannot split {rows} rows into {per} micro-tiles");
+    let base = rows / per;
+    let rem = rows % per;
+    (0..per).map(|m| base + usize::from(m < rem)).collect()
+}
+
+/// Row offset of micro-tile `micro` within a tile of `rows` rows.
+pub fn micro_offset(rows: usize, per: usize, micro: usize) -> usize {
+    micro_rows(rows, per)[..micro].iter().sum()
+}
+
+/// Full micro-tile Ring-AllGather schedule for device `i` of `d` at
+/// overlap grain `grain` (a multiple of `d`; `grain == d` degenerates
+/// to [`all_gather_steps`] with every `micro == 0`).
+///
+/// Ring step `s` refines into `grain/d` sub-steps: sub-step `m`
+/// forwards and computes micro-tile `m` of the step's tile, so the
+/// transfer of micro-tile `m` overlaps the GEMM of micro-tile `m-1`
+/// and each post carries `1/per` of a tile. Slot discipline is
+/// unchanged — one post and one receive per sub-step — so backpressure
+/// still triggers at `LINK_SLOTS` regardless of the grain.
+pub fn all_gather_micro_steps(i: usize, d: usize, grain: usize) -> Vec<AgMicroStep> {
+    let per = micro_per_tile(d, grain);
+    all_gather_steps(i, d)
+        .into_iter()
+        .flat_map(|s| {
+            (0..per).map(move |m| AgMicroStep {
+                compute: MicroRef { tile: s.compute_tile, micro: m },
+                send: s.send_tile.map(|t| MicroRef { tile: t, micro: m }),
+                recv: s.recv_tile.map(|t| MicroRef { tile: t, micro: m }),
+            })
+        })
+        .collect()
+}
+
+/// Full micro-tile Ring-ReduceScatter schedule for device `i` of `d` at
+/// overlap grain `grain` (`grain == d` degenerates to
+/// [`reduce_scatter_steps`] with every `micro == 0`). Accumulated
+/// partials ride the ring one micro-tile per sub-step; after the last
+/// step device `i` holds its fully reduced tile exactly as in the
+/// coarse schedule.
+pub fn reduce_scatter_micro_steps(i: usize, d: usize, grain: usize) -> Vec<RsMicroStep> {
+    let per = micro_per_tile(d, grain);
+    reduce_scatter_steps(i, d)
+        .into_iter()
+        .flat_map(|s| {
+            (0..per).map(move |m| RsMicroStep {
+                compute: MicroRef { tile: s.compute_tile, micro: m },
+                send: s.send_tile.map(|t| MicroRef { tile: t, micro: m }),
+                recv: s.recv_tile.map(|t| MicroRef { tile: t, micro: m }),
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,5 +340,104 @@ mod tests {
         assert_eq!(ag[0].send_tile, None);
         let rs = reduce_scatter_steps(0, 1);
         assert_eq!(rs[0].compute_tile, 0);
+    }
+
+    #[test]
+    fn micro_grain_d_degenerates_to_coarse_schedules() {
+        // T = d is the one-tile-per-device baseline: every micro index is
+        // 0 and the (tile, send, recv) sequence is the coarse schedule.
+        for d in 1..=8 {
+            for i in 0..d {
+                let coarse = all_gather_steps(i, d);
+                let micro = all_gather_micro_steps(i, d, d);
+                assert_eq!(micro.len(), coarse.len());
+                for (ms, cs) in micro.iter().zip(coarse.iter()) {
+                    assert_eq!(ms.compute, MicroRef { tile: cs.compute_tile, micro: 0 });
+                    assert_eq!(ms.send, cs.send_tile.map(|t| MicroRef { tile: t, micro: 0 }));
+                    assert_eq!(ms.recv, cs.recv_tile.map(|t| MicroRef { tile: t, micro: 0 }));
+                }
+                let coarse = reduce_scatter_steps(i, d);
+                let micro = reduce_scatter_micro_steps(i, d, d);
+                for (ms, cs) in micro.iter().zip(coarse.iter()) {
+                    assert_eq!(ms.compute, MicroRef { tile: cs.compute_tile, micro: 0 });
+                    assert_eq!(ms.send, cs.send_tile.map(|t| MicroRef { tile: t, micro: 0 }));
+                    assert_eq!(ms.recv, cs.recv_tile.map(|t| MicroRef { tile: t, micro: 0 }));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn micro_schedules_cover_every_micro_tile_once() {
+        // Each device GEMMs all d * per micro-tiles exactly once and
+        // forwards (d-1) * per of them — the coarse invariants refined.
+        for d in 1..=8usize {
+            for grain in [d, 2 * d, 4 * d] {
+                let per = micro_per_tile(d, grain);
+                for i in 0..d {
+                    let ag = all_gather_micro_steps(i, d, grain);
+                    assert_eq!(ag.len(), d * per);
+                    let computed: HashSet<MicroRef> = ag.iter().map(|s| s.compute).collect();
+                    assert_eq!(computed.len(), d * per, "d={d} grain={grain} i={i}");
+                    assert_eq!(
+                        ag.iter().filter(|s| s.send.is_some()).count(),
+                        (d - 1) * per
+                    );
+                    let rs = reduce_scatter_micro_steps(i, d, grain);
+                    let computed: HashSet<MicroRef> = rs.iter().map(|s| s.compute).collect();
+                    assert_eq!(computed.len(), d * per);
+                    assert_eq!(
+                        rs.iter().filter(|s| s.recv.is_some()).count(),
+                        (d - 1) * per
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn micro_send_matches_successor_recv() {
+        // Lockstep pairing at micro granularity: what device i posts at
+        // sub-step u is what (i+1)%d expects at sub-step u.
+        for d in 2..=5usize {
+            for grain in [d, 2 * d, 3 * d] {
+                for i in 0..d {
+                    let me = all_gather_micro_steps(i, d, grain);
+                    let succ = all_gather_micro_steps((i + 1) % d, d, grain);
+                    for (u, (a, b)) in me.iter().zip(succ.iter()).enumerate() {
+                        assert_eq!(a.send, b.recv, "AG d={d} grain={grain} i={i} u={u}");
+                    }
+                    let me = reduce_scatter_micro_steps(i, d, grain);
+                    let succ = reduce_scatter_micro_steps((i + 1) % d, d, grain);
+                    for (u, (a, b)) in me.iter().zip(succ.iter()).enumerate() {
+                        assert_eq!(a.send, b.recv, "RS d={d} grain={grain} i={i} u={u}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn micro_rows_sum_and_balance() {
+        assert_eq!(micro_rows(12, 3), vec![4, 4, 4]);
+        assert_eq!(micro_rows(13, 4), vec![4, 3, 3, 3]);
+        assert_eq!(micro_rows(5, 5), vec![1; 5]);
+        for rows in [7usize, 71, 95, 284] {
+            for per in [1usize, 2, 3, 4] {
+                let chunks = micro_rows(rows, per);
+                assert_eq!(chunks.iter().sum::<usize>(), rows);
+                assert!(chunks.iter().max().unwrap() - chunks.iter().min().unwrap() <= 1);
+                assert!(chunks.iter().all(|&c| c > 0));
+                // Offsets are the prefix sums.
+                assert_eq!(micro_offset(rows, per, 0), 0);
+                assert_eq!(micro_offset(rows, per, per - 1) + chunks[per - 1], rows);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of the device count")]
+    fn non_multiple_grain_panics() {
+        micro_per_tile(3, 7);
     }
 }

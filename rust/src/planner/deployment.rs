@@ -17,6 +17,14 @@
 //! lifted from a bare plan ([`Deployment::from_plan`]) have no context
 //! and refuse to refresh.
 //!
+//! Each rung also carries the planned overlap grain `T` (`tile_grain`):
+//! how many micro-tiles the ring phases at that bucket split into
+//! cluster-wide. [`Deployment::choose_tile_grains`] selects it by
+//! minimizing modeled exposed communication plus the per-post fixed
+//! cost; engines read it through [`Deployment::tile_grain_for`]. The
+//! `tile-grain-truth` lint pins grain *selection* to this module the
+//! same way `api_surface` pins partition derivation.
+//!
 //! Per-rung prediction caveat: the profile's MHA/MLP latency tables are
 //! recorded at one reference sequence length, and the head/MLP-unit
 //! partition they induce is sequence-invariant — so the strategy runs
@@ -28,7 +36,8 @@
 use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
 use crate::profiler::Profile;
-use crate::sim::EdgeEnv;
+use crate::sim::{EdgeEnv, NetParams, SimEngine};
+use crate::transport::WireFormat;
 
 use super::{equal_seq_partition, Partition, Plan, PlanStrategy, StrategyKind};
 
@@ -40,6 +49,35 @@ pub struct Rung {
     pub bucket: usize,
     /// The partition truth at this rung.
     pub plan: Plan,
+    /// Planned overlap grain `T` for this rung's ring phases: the total
+    /// number of micro-tiles per phase across the cluster, `T >= d` and
+    /// a multiple of `d`. `T = d` is the coarse one-tile-per-device
+    /// walk; larger grains split each SP row into `T/d` wire micro-tiles
+    /// so a micro-tile's transfer overlaps its predecessor's compute
+    /// within a ring step. Selected only by
+    /// [`Deployment::choose_tile_grains`] — the `tile-grain-truth` lint
+    /// pins grain selection to this module.
+    pub tile_grain: usize,
+    /// Prediction recorded by the grain chooser (None until
+    /// [`Deployment::choose_tile_grains`] runs, or when the coarse grain
+    /// was kept because the rung cannot split).
+    pub grain_choice: Option<GrainChoice>,
+}
+
+/// Outcome of the planner's per-rung overlap-granularity choice: the
+/// modeled exposed-communication seconds per inference at the chosen
+/// grain versus the one-tile-per-device baseline, plus the fixed
+/// per-post cost the objective charged. `galaxy plan` prints these.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GrainChoice {
+    /// The chosen grain `T` (total micro-tiles per ring phase).
+    pub grain: usize,
+    /// Modeled exposed communication per inference at the chosen grain.
+    pub exposed_s: f64,
+    /// Modeled exposed communication at the `T = d` baseline.
+    pub baseline_exposed_s: f64,
+    /// Fixed per-post cost charged by the objective: `T * per_post_overhead_s`.
+    pub overhead_s: f64,
 }
 
 /// Planning context a deployment keeps so it can replan itself.
@@ -103,7 +141,7 @@ impl Deployment {
                 pred_conn_s,
                 ..base.clone()
             };
-            rungs.push(Rung { bucket, plan });
+            rungs.push(Rung { bucket, plan, tile_grain: d, grain_choice: None });
         }
         Ok(Deployment {
             strategy,
@@ -147,7 +185,7 @@ impl Deployment {
                         ..plan.clone()
                     }
                 };
-                Rung { bucket, plan: plan_b }
+                Rung { bucket, plan: plan_b, tile_grain: d, grain_choice: None }
             })
             .collect();
         Deployment { strategy: StrategyKind::Heuristic, rungs, ctx: None, generation: 0 }
@@ -243,6 +281,118 @@ impl Deployment {
     /// Per-device weight memory (MB) of the rung serving `seq`.
     pub fn mem_mb_for(&self, seq: usize) -> Vec<f64> {
         self.serving_rung(seq).plan.mem_mb.clone()
+    }
+
+    /// Planned overlap grain for requests of `seq` valid tokens: the
+    /// serving rung's `tile_grain`, clamped to at least one tile per
+    /// device. Engines consume the grain only through this accessor;
+    /// only [`Deployment::choose_tile_grains`] sets it.
+    pub fn tile_grain_for(&self, seq: usize) -> usize {
+        let r = self.serving_rung(seq);
+        r.tile_grain.max(r.plan.partition.n_devices())
+    }
+
+    /// Override one rung's overlap grain (a testing/experiment seam —
+    /// normal callers let [`Deployment::choose_tile_grains`] pick).
+    /// Rejects grains the rung cannot walk: `grain` must be a positive
+    /// multiple of the device count and every SP row must be able to
+    /// donate `grain/d` micro-tile rows.
+    pub fn set_tile_grain(&mut self, bucket: usize, grain: usize) -> Result<()> {
+        let d = self.n_devices().max(1);
+        let r = self
+            .rungs
+            .iter_mut()
+            .find(|r| r.bucket == bucket)
+            .ok_or_else(|| GalaxyError::Config(format!("no rung at bucket {bucket}")))?;
+        let min_rows = r.plan.partition.seq.iter().copied().min().unwrap_or(0);
+        if grain == 0 || grain % d != 0 || grain / d > min_rows.max(1) {
+            return Err(GalaxyError::Config(format!(
+                "grain {grain} is not walkable at bucket {bucket} \
+                 (d={d}, smallest SP row {min_rows})"
+            )));
+        }
+        r.tile_grain = grain;
+        r.grain_choice = None;
+        Ok(())
+    }
+
+    /// Choose each rung's overlap grain `T` by minimizing the modeled
+    /// objective `exposed_comm_s + T * per_post_overhead_s` over the
+    /// candidate ladder `T ∈ {d, 2d, 4d, 8d}`, clamped so every SP row
+    /// can donate `T/d` micro-tiles, evaluated with [`SimEngine`] under
+    /// `net` and the active wire format. Ties keep the coarser grain, so
+    /// `T = d` survives unless refinement strictly pays. Each rung
+    /// records a [`GrainChoice`] so `galaxy plan` can print the chosen
+    /// grain against the one-tile-per-device baseline.
+    ///
+    /// The optimum is format-dependent: quantized wire formats move 4x
+    /// (i8) or 2x (f16) fewer bytes per micro-tile, so a rung that is
+    /// wire-bound at f32 can be compute-bound at i8 — where refinement
+    /// buys nothing and only costs per-post overhead — hence i8's
+    /// optimum `T` is generally at or below f32's at the same bandwidth.
+    ///
+    /// Replanning note: [`Deployment::refresh`] rebuilds rungs at the
+    /// coarse default, so a governor that replans must re-run the
+    /// chooser with its current network calibration.
+    pub fn choose_tile_grains(
+        &mut self,
+        model: &ModelConfig,
+        env: &EdgeEnv,
+        net: NetParams,
+        wire: WireFormat,
+    ) -> Result<()> {
+        let d = self.n_devices();
+        if d == 0 {
+            return Err(GalaxyError::Config(
+                "deployment has no devices to grain-plan".into(),
+            ));
+        }
+        for idx in 0..self.rungs.len() {
+            let bucket = self.rungs[idx].bucket;
+            let plan = self.rungs[idx].plan.clone();
+            let min_rows = plan.partition.seq.iter().copied().min().unwrap_or(0);
+            let mut baseline_exposed = 0.0f64;
+            let mut best: Option<(f64, GrainChoice)> = None;
+            for mult in [1usize, 2, 4, 8] {
+                // A ring needs >= 2 devices and every SP row must split
+                // into `mult` micro-tiles for the grain to be walkable.
+                if mult > 1 && (d < 2 || mult > min_rows) {
+                    break;
+                }
+                let grain = mult * d;
+                let mut probe = Deployment::from_plan(plan.clone(), &[bucket]);
+                probe.rungs[0].tile_grain = grain;
+                let rep = SimEngine::from_deployment(model, env, probe, net)?
+                    .with_wire_format(wire)
+                    .run_inference(bucket);
+                if mult == 1 {
+                    baseline_exposed = rep.exposed_comm_s;
+                }
+                let overhead_s = grain as f64 * net.per_post_overhead_s;
+                let objective = rep.exposed_comm_s + overhead_s;
+                let better = match &best {
+                    None => true,
+                    Some((obj, _)) => objective < *obj,
+                };
+                if better {
+                    best = Some((
+                        objective,
+                        GrainChoice {
+                            grain,
+                            exposed_s: rep.exposed_comm_s,
+                            baseline_exposed_s: 0.0,
+                            overhead_s,
+                        },
+                    ));
+                }
+            }
+            if let Some((_, mut choice)) = best {
+                choice.baseline_exposed_s = baseline_exposed;
+                self.rungs[idx].tile_grain = choice.grain;
+                self.rungs[idx].grain_choice = Some(choice);
+            }
+        }
+        Ok(())
     }
 
     /// Predicted straggler compute per layer at `bucket` (Eq. 5
@@ -382,6 +532,65 @@ mod tests {
         let plan = &dep.rung(512).unwrap().plan;
         assert!(straggler <= plan.pred_layer_compute_s() + 1e-12);
         assert_eq!(dep.layers(), Some(model.layers));
+    }
+
+    #[test]
+    fn grain_chooser_refines_when_wire_bound_and_records_choice() {
+        // Bert-L on preset B at 25 Mbps is deeply wire-bound at f32: the
+        // chooser must pick a finer-than-coarse grain and record a
+        // strictly lower modeled exposure than the T = d baseline.
+        let model = ModelConfig::bert_large();
+        let env = crate::sim::EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let mut dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[284])
+                .unwrap();
+        let d = dep.n_devices();
+        dep.choose_tile_grains(
+            &model,
+            &env,
+            crate::sim::NetParams::mbps(25.0),
+            WireFormat::F32,
+        )
+        .unwrap();
+        let r = &dep.rungs()[0];
+        assert_eq!(r.tile_grain % d, 0, "grain must stay a multiple of d");
+        assert!(r.tile_grain > d, "25 Mbps must refine past T = d, got {}", r.tile_grain);
+        assert_eq!(dep.tile_grain_for(284), r.tile_grain);
+        let choice = r.grain_choice.expect("chooser records its prediction");
+        assert_eq!(choice.grain, r.tile_grain);
+        assert!(
+            choice.exposed_s < choice.baseline_exposed_s,
+            "refined exposure {} must beat baseline {}",
+            choice.exposed_s,
+            choice.baseline_exposed_s
+        );
+        assert!(choice.overhead_s > 0.0);
+    }
+
+    #[test]
+    fn grain_chooser_keeps_coarse_grain_when_compute_bound() {
+        // At fabric-class bandwidth nothing is exposed at any grain, so
+        // the tie-break keeps the coarse walk: refinement would only pay
+        // per-post overhead.
+        let model = ModelConfig::bert_large();
+        let env = crate::sim::EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let mut dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[284])
+                .unwrap();
+        let d = dep.n_devices();
+        dep.choose_tile_grains(
+            &model,
+            &env,
+            crate::sim::NetParams::mbps(100_000.0),
+            WireFormat::F32,
+        )
+        .unwrap();
+        assert_eq!(dep.rungs()[0].tile_grain, d);
+        let choice = dep.rungs()[0].grain_choice.unwrap();
+        assert_eq!(choice.grain, d);
+        assert!((choice.exposed_s - choice.baseline_exposed_s).abs() < 1e-12);
     }
 
     #[test]

@@ -44,7 +44,7 @@
 pub mod deployment;
 pub mod exhaustive;
 
-pub use deployment::{Deployment, Rung};
+pub use deployment::{Deployment, GrainChoice, Rung};
 
 use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;

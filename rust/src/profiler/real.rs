@@ -11,6 +11,7 @@
 
 use crate::error::Result;
 use crate::model::{ModelConfig, WeightGen};
+use crate::planner::Deployment;
 use crate::runtime::{literal, Runtime};
 use crate::tensor::Tensor2;
 
@@ -20,6 +21,10 @@ use super::Profile;
 pub struct RealProfiler<'a> {
     rt: &'a Runtime,
     model: &'a ModelConfig,
+    /// Partition truth for the connective probe: when a deployment is
+    /// installed, its rung SP rows pick the probe tile sizes, so the
+    /// linear fit brackets exactly the tiles the planner will price.
+    deployment: Option<&'a Deployment>,
     /// Repetitions per configuration (min is taken — calibration runs on
     /// an otherwise idle device, so min is the stable statistic).
     pub reps: usize,
@@ -28,7 +33,51 @@ pub struct RealProfiler<'a> {
 
 impl<'a> RealProfiler<'a> {
     pub fn new(rt: &'a Runtime, model: &'a ModelConfig) -> Self {
-        Self { rt, model, reps: 3, seed: 7 }
+        Self { rt, model, deployment: None, reps: 3, seed: 7 }
+    }
+
+    /// Re-profile through a served [`Deployment`]: the connective probe
+    /// measures the rung partitions' own row tiles instead of the
+    /// manifest ladder. Used by measurement-driven replanning, where the
+    /// geometry of record is the deployment, not the artifact set.
+    pub fn with_deployment(mut self, deployment: &'a Deployment) -> Self {
+        self.deployment = Some(deployment);
+        self
+    }
+
+    /// Smallest and largest tile rows the connective probe measures.
+    ///
+    /// An installed [`Deployment`] is the partition truth — its rungs'
+    /// SP rows are what serving will actually run, so the fit brackets
+    /// them. The bootstrap profile (no deployment yet: profiling
+    /// precedes the first plan) falls back to the manifest's AOT tile
+    /// ladder, the geometry the artifacts were lowered for.
+    fn probe_rows(&self) -> Result<(usize, usize)> {
+        if let Some(dep) = self.deployment {
+            let mut lo = usize::MAX;
+            let mut hi = 0usize;
+            for rung in dep.rungs() {
+                for &rows in &rung.plan.partition.seq {
+                    if rows > 0 {
+                        lo = lo.min(rows);
+                        hi = hi.max(rows);
+                    }
+                }
+            }
+            if hi == 0 {
+                return Err(crate::error::GalaxyError::Config(
+                    "deployment has no non-empty SP rows to probe".into(),
+                ));
+            }
+            return Ok((lo, hi));
+        }
+        let tiles = &self.rt.manifest().seq_tiles;
+        match (tiles.first(), tiles.last()) {
+            (Some(&a), Some(&b)) => Ok((a, b)),
+            _ => Err(crate::error::GalaxyError::MissingArtifact(
+                "manifest lists no seq tiles".into(),
+            )),
+        }
     }
 
     fn time_min(&self, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
@@ -83,16 +132,10 @@ impl<'a> RealProfiler<'a> {
             })?;
         }
 
-        // Connective linear fit from the two smallest artifact tiles.
-        let tiles = &self.rt.manifest().seq_tiles;
-        let (t_small, t_large) = match (tiles.first(), tiles.last()) {
-            (Some(&a), Some(&b)) => (a, b),
-            _ => {
-                return Err(crate::error::GalaxyError::MissingArtifact(
-                    "manifest lists no seq tiles".into(),
-                ))
-            }
-        };
+        // Connective linear fit bracketing the probe tile geometry
+        // (deployment rung rows when installed, manifest ladder at
+        // bootstrap — see `probe_rows`).
+        let (t_small, t_large) = self.probe_rows()?;
         let gamma = literal::from_slice(&p.gamma1);
         let beta = literal::from_slice(&p.beta1);
         let measure_conn = |rows: usize| -> Result<f64> {
@@ -105,9 +148,15 @@ impl<'a> RealProfiler<'a> {
             self.time_min(|| self.rt.exec(&name, &[&g_lit, &r_lit, &gamma, &beta]).map(|_| ()))
         };
         let c_small = measure_conn(t_small)?;
-        let c_large = measure_conn(t_large)?;
-        let per_row = ((c_large - c_small) / (t_large - t_small) as f64).max(0.0);
-        let base = (c_small - per_row * t_small as f64).max(0.0);
+        let (per_row, base) = if t_large > t_small {
+            let c_large = measure_conn(t_large)?;
+            let slope = ((c_large - c_small) / (t_large - t_small) as f64).max(0.0);
+            (slope, (c_small - slope * t_small as f64).max(0.0))
+        } else {
+            // Degenerate bracket (every rung row equal): a single point
+            // cannot separate base from slope; charge it all as base.
+            (0.0, c_small)
+        };
 
         Ok(super::measured_profile(
             m,
@@ -123,7 +172,7 @@ impl<'a> RealProfiler<'a> {
 mod tests {
     use super::*;
     use crate::config::{default_artifacts_dir, Manifest};
-    use crate::planner::Planner;
+    use crate::planner::{Partition, Plan, Planner};
     use crate::sim::{DeviceClass, EdgeEnv};
     use std::rc::Rc;
 
@@ -148,6 +197,45 @@ mod tests {
         let env = EdgeEnv::new("3x", &[DeviceClass::NanoM; 3]);
         let plan = Planner::new(&model, &env, &prof).plan().unwrap();
         assert_eq!(plan.partition.heads.iter().sum::<usize>(), 12);
+
+        // Replanning round-trip: once a deployment exists it becomes the
+        // probe geometry of record (partition truth), and the profiler
+        // must still produce a plannable profile through it.
+        let dep = Deployment::from_plan(plan, &[60]);
+        let prof2 = RealProfiler::new(&rt, &model)
+            .with_deployment(&dep)
+            .profile(3, 60)
+            .unwrap();
+        let plan2 = Planner::new(&model, &env, &prof2).plan().unwrap();
+        assert_eq!(plan2.partition.heads.iter().sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn deployment_probe_brackets_rung_rows() {
+        let Some(rt) = runtime() else { return };
+        let model = ModelConfig::galaxy_mini();
+        // Uneven SP rows whose tiles (15, 30) are on the AOT ladder: the
+        // probe must bracket the deployment's own rows, not the
+        // manifest's smallest/largest tile.
+        let plan = Plan {
+            partition: Partition {
+                heads: vec![4, 4, 4],
+                mlp_units: vec![4, 4, 4],
+                seq: vec![15, 15, 30],
+            },
+            pred_mha_s: 0.0,
+            pred_mlp_s: 0.0,
+            pred_conn_s: 0.0,
+            mem_mb: vec![0.0; 3],
+        };
+        let dep = Deployment::from_plan(plan, &[60]);
+        let prof = RealProfiler::new(&rt, &model)
+            .with_deployment(&dep)
+            .profile(3, 60)
+            .unwrap();
+        assert_eq!(prof.n_devices(), 3);
+        // The fitted linear model is non-decreasing in rows.
+        assert!(prof.conn_time(0, 30) >= prof.conn_time(0, 15));
     }
 
     #[test]

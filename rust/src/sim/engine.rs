@@ -17,6 +17,19 @@
 //! middle (attention core / GELU path): compute only
 //! exit   (GEMM ⊕ RS):  D steps;  steps 2..D carry partials + reduce-add
 //! ```
+//!
+//! When the deployment's rung plans an overlap grain `T > d`
+//! ([`Deployment::tile_grain_for`]), each ring phase refines into
+//! `T/d` micro-tiles per step and the bulk-synchronous per-step
+//! `max(wire, compute)` accounting is replaced by a pipelined event
+//! model: micro-transfers chain on the (serialized) link, forwarding a
+//! micro-tile the moment it arrives, while the compute stream chases
+//! deliveries at micro granularity and accrues only its true stalls as
+//! exposed communication. Per-post fixed cost
+//! ([`NetParams::per_post_overhead_s`]) is charged once per micro post,
+//! so finer grains trade per-step latency/overhead against intra-step
+//! overlap — the planner's grain chooser arbitrates. The coarse `T = d`
+//! path is bit-identical to the historical bulk-synchronous model.
 
 use crate::error::{GalaxyError, Result};
 use crate::model::ModelConfig;
@@ -307,6 +320,26 @@ impl<'a> SimEngine<'a> {
             .map(|dev| dev.class.collective_step_overhead_s())
             .fold(0.0, f64::max);
         let overlapped = self.overlap == OverlapMode::Tiled && d > 1;
+        // Planned overlap grain for this rung: T/d micro-tiles per SP
+        // row. Ungrainable configurations (serial mode, T not a
+        // multiple of d, or a tile too short to donate T/d rows)
+        // degrade to the coarse one-tile-per-device walk.
+        let grain = self.deployment.tile_grain_for(seq);
+        let min_tile = seq_parts.iter().copied().min().unwrap_or(0);
+        let per = if overlapped && grain > d && grain % d == 0 && grain / d <= min_tile {
+            grain / d
+        } else {
+            1
+        };
+        // Straggler micro-transfer: the largest micro slice of the
+        // largest tile (ceil split, matching `micro_rows`).
+        let wire_micro = if per > 1 {
+            let micro_rows = (max_tile + per - 1) / per;
+            self.net
+                .ring_step_time((micro_rows * m.hidden * self.wire.elem_bytes()) as u64)
+        } else {
+            wire
+        };
 
         for _layer in 0..m.layers {
             // ---- MHA block (TP) ----------------------------------------
@@ -317,7 +350,7 @@ impl<'a> SimEngine<'a> {
                 let qkv = |i: usize, rows: usize| {
                     self.slow(i) * self.env.devices[i].gemm_time(m, rows, m.hidden, 3 * kd(i))
                 };
-                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, qkv, &seq_parts);
+                self.ring_entry(&mut rep, d, wire, wire_micro, per, step_cpu, overlapped, qkv, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 self.solo_block(
@@ -338,7 +371,7 @@ impl<'a> SimEngine<'a> {
                 let out_proj = |i: usize, rows: usize| {
                     self.slow(i) * self.env.devices[i].gemm_time(m, rows, kd(i), m.hidden)
                 };
-                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, out_proj, &seq_parts);
+                self.ring_exit(&mut rep, d, wire, wire_micro, per, step_cpu, overlapped, out_proj, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 self.solo_block(
@@ -355,12 +388,12 @@ impl<'a> SimEngine<'a> {
                 let gemm1 = |i: usize, rows: usize| {
                     self.slow(i) * self.env.devices[i].gemm_time(m, rows, m.hidden, w(i))
                 };
-                self.ring_entry(&mut rep, d, wire, step_cpu, overlapped, gemm1, &seq_parts);
+                self.ring_entry(&mut rep, d, wire, wire_micro, per, step_cpu, overlapped, gemm1, &seq_parts);
                 rep.sync_points += 1;
                 let gemm2 = |i: usize, rows: usize| {
                     self.slow(i) * self.env.devices[i].gemm_time(m, rows, w(i), m.hidden)
                 };
-                self.ring_exit(&mut rep, d, wire, step_cpu, overlapped, gemm2, &seq_parts);
+                self.ring_exit(&mut rep, d, wire, wire_micro, per, step_cpu, overlapped, gemm2, &seq_parts);
                 rep.sync_points += 1;
             } else {
                 self.solo_block(
@@ -410,12 +443,17 @@ impl<'a> SimEngine<'a> {
     ///
     /// D ring steps; in step r every device GEMMs one sequence tile while
     /// forwarding the previously received tile. The last step has no wire.
-    /// Non-overlapped mode: (D-1) wire steps, then one fused GEMM.
+    /// With a planned grain `T > d` (`per = T/d > 1`) the phase runs the
+    /// pipelined micro model instead of the bulk-synchronous per-step
+    /// max. Non-overlapped mode: (D-1) wire steps, then one fused GEMM.
+    #[allow(clippy::too_many_arguments)]
     fn ring_entry(
         &self,
         rep: &mut SimReport,
         d: usize,
         wire: f64,
+        wire_micro: f64,
+        per: usize,
         step_cpu: f64,
         overlapped: bool,
         gemm: impl Fn(usize, usize) -> f64,
@@ -423,6 +461,63 @@ impl<'a> SimEngine<'a> {
     ) {
         rep.ring_bytes +=
             Self::phase_ring_bytes(d, seq_parts, self.model.hidden, self.wire.elem_bytes());
+        if overlapped && per > 1 {
+            // Straggler compute per coarse step (device i GEMMs tile
+            // (i - step) mod d), busy telemetry exactly as the coarse
+            // path accrues it.
+            let c: Vec<f64> = (0..d)
+                .map(|step| {
+                    let mut compute = 0.0f64;
+                    for i in 0..d {
+                        let g = gemm(i, seq_parts[(i + d - step) % d]);
+                        rep.device_busy_s[i] += g;
+                        compute = compute.max(g);
+                    }
+                    compute
+                })
+                .collect();
+            // Wire chain: (d-1)*per micro-transfers on the serialized
+            // link. The first `per` posts are the device's own tile
+            // (ready at t=0); every later micro forwards the one it
+            // received exactly one coarse step (= `per` posts) earlier.
+            let mut delivery = Vec::with_capacity((d - 1) * per);
+            let mut wire_free = 0.0f64;
+            for u in 0..(d - 1) * per {
+                let send_ready = if u < per { 0.0 } else { delivery[u - per] };
+                let dv = send_ready.max(wire_free) + wire_micro;
+                wire_free = dv;
+                delivery.push(dv);
+            }
+            // Compute stream: the step-s GEMM (s > 0) runs over the tile
+            // received during step s-1 and chases its micro arrivals at
+            // micro granularity (§III-D fine-grained overlap); stalls
+            // are the exposed communication. Per-post CPU cost rides the
+            // compute stream like step_cpu does.
+            let o = self.net.per_post_overhead_s;
+            let mut t = 0.0f64;
+            let mut exposed = 0.0f64;
+            for s in 0..d {
+                let c_micro = c[s] / per as f64;
+                for m in 0..per {
+                    if s > 0 {
+                        let ready = delivery[(s - 1) * per + m];
+                        if ready > t {
+                            exposed += ready - t;
+                            t = ready;
+                        }
+                    }
+                    t += c_micro;
+                }
+                if s < d - 1 {
+                    t += step_cpu + per as f64 * o;
+                }
+            }
+            let total_wire = (d - 1) as f64 * per as f64 * wire_micro;
+            rep.compute_s += t - exposed;
+            rep.exposed_comm_s += exposed;
+            rep.hidden_comm_s += (total_wire - exposed).max(0.0);
+            return;
+        }
         if overlapped {
             for step in 0..d {
                 // Device i processes tile (i - step) mod d in step `step`.
@@ -454,13 +549,18 @@ impl<'a> SimEngine<'a> {
     /// Exit boundary: tile GEMMs ⊕ ReduceScatter (paper Fig. 7).
     ///
     /// D rounds of tile GEMMs; from round 2 on, the previous round's
-    /// partial rides the ring and is reduce-added on arrival. Non-
-    /// overlapped: one fused GEMM, then (D-1) wire+add steps.
+    /// partial rides the ring and is reduce-added on arrival. With a
+    /// planned grain `T > d` the arriving partial is consumed as `T/d`
+    /// micro-tiles whose reduce-adds chase deliveries. Non-overlapped:
+    /// one fused GEMM, then (D-1) wire+add steps.
+    #[allow(clippy::too_many_arguments)]
     fn ring_exit(
         &self,
         rep: &mut SimReport,
         d: usize,
         wire: f64,
+        wire_micro: f64,
+        per: usize,
         step_cpu: f64,
         overlapped: bool,
         gemm: impl Fn(usize, usize) -> f64,
@@ -484,6 +584,63 @@ impl<'a> SimEngine<'a> {
                 )
             })
             .fold(0.0, f64::max);
+        if overlapped && per > 1 {
+            let c: Vec<f64> = (0..d)
+                .map(|step| {
+                    let mut compute = 0.0f64;
+                    for i in 0..d {
+                        let g = gemm(i, seq_parts[(i + 2 * d - 2 - step) % d]);
+                        rep.device_busy_s[i] += g;
+                        compute = compute.max(g);
+                    }
+                    compute
+                })
+                .collect();
+            // RS pipelined micro model: the partial accumulated by the
+            // end of step s-1 is forwarded as `per` micro-tiles at the
+            // start of step s (the real walk posts before the GEMM), so
+            // a micro's send-ready time is the previous step's
+            // compute-stream finish; the link serializes the rest. The
+            // step-s reduce-adds then chase those deliveries at micro
+            // granularity behind the step's own GEMM.
+            let o = self.net.per_post_overhead_s;
+            let add_micro = add / per as f64;
+            let mut wire_free = 0.0f64;
+            let mut t = 0.0f64;
+            let mut exposed = 0.0f64;
+            let mut prev_end = 0.0f64;
+            for s in 0..d {
+                let mut deliveries = Vec::with_capacity(per);
+                if s > 0 {
+                    for _ in 0..per {
+                        let dv = prev_end.max(wire_free) + wire_micro;
+                        wire_free = dv;
+                        deliveries.push(dv);
+                    }
+                }
+                t += c[s];
+                if s > 0 {
+                    // Progress-engine work and post costs run ahead of
+                    // the add-chase so the incoming micro chain absorbs
+                    // them, mirroring how the coarse model hides
+                    // step_cpu inside max(wire, compute).
+                    t += step_cpu + per as f64 * o;
+                    for &ready in &deliveries {
+                        if ready > t {
+                            exposed += ready - t;
+                            t = ready;
+                        }
+                        t += add_micro;
+                    }
+                }
+                prev_end = t;
+            }
+            let total_wire = (d - 1) as f64 * per as f64 * wire_micro;
+            rep.compute_s += t - exposed;
+            rep.exposed_comm_s += exposed;
+            rep.hidden_comm_s += (total_wire - exposed).max(0.0);
+            return;
+        }
         if overlapped {
             for step in 0..d {
                 let mut compute = 0.0f64;
@@ -751,6 +908,114 @@ mod tests {
         // Compute is untouched by the wire format; only wire seconds move.
         assert!((i8r.compute_s - f32r.compute_s).abs() < 1e-12);
         assert_eq!(i8r.sync_points, f32r.sync_points);
+    }
+
+    #[test]
+    fn planned_grain_strictly_cuts_exposed_comm_at_25mbps() {
+        // Tentpole acceptance, modeled side: at Bert-L / preset B /
+        // 25 Mbps the planner-chosen grain strictly reduces exposed comm
+        // and end-to-end latency vs the one-tile-per-device baseline,
+        // while the schedule invariants — ring bytes and sync points —
+        // are untouched by the grain.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let net = NetParams::mbps(25.0);
+        let d = env.len();
+        let base_dep = crate::planner::Deployment::from_plan(p.clone(), &[284]);
+        let mut planned_dep = crate::planner::Deployment::from_plan(p, &[284]);
+        planned_dep.choose_tile_grains(&m, &env, net, WireFormat::F32).unwrap();
+        let (chosen, choice) = {
+            let r = &planned_dep.rungs()[0];
+            (r.tile_grain, r.grain_choice.unwrap())
+        };
+        assert!(chosen > d, "wire-bound 25 Mbps must refine past T=d, got {chosen}");
+        let base = SimEngine::from_deployment(&m, &env, base_dep, net)
+            .unwrap()
+            .run_inference(284);
+        let fine = SimEngine::from_deployment(&m, &env, planned_dep, net)
+            .unwrap()
+            .run_inference(284);
+        assert!(
+            fine.exposed_comm_s < base.exposed_comm_s,
+            "planned T={chosen}: exposed {} must beat baseline {}",
+            fine.exposed_comm_s,
+            base.exposed_comm_s
+        );
+        assert!(
+            fine.total_s() < base.total_s(),
+            "planned T={chosen}: e2e {} must beat baseline {}",
+            fine.total_s(),
+            base.total_s()
+        );
+        assert_eq!(fine.ring_bytes, base.ring_bytes, "grain must not change wire volume");
+        assert_eq!(fine.sync_points, base.sync_points, "grain must not change sync points");
+        // The chooser's recorded prediction is the engine's own model,
+        // so replaying it must reproduce both numbers exactly.
+        assert!((fine.exposed_comm_s - choice.exposed_s).abs() < 1e-12);
+        assert!((base.exposed_comm_s - choice.baseline_exposed_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn i8_grain_optimum_sits_below_f32s_in_the_transition_band() {
+        // The ISSUE's format-dependence claim: i8 tiles are 4x cheaper
+        // on the wire, so there is a bandwidth band where f32 is still
+        // wire-bound (refinement pays) while i8 is already compute-bound
+        // (refinement only costs per-post overhead, the chooser keeps
+        // T=d). Sweep a x2 bandwidth ladder and require such a point.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let chosen = |mbps: f64, wire: WireFormat| {
+            let mut dep = crate::planner::Deployment::from_plan(p.clone(), &[284]);
+            dep.choose_tile_grains(&m, &env, NetParams::mbps(mbps), wire).unwrap();
+            dep.rungs()[0].tile_grain
+        };
+        let mut split = None;
+        let mut mbps = 2.0;
+        while mbps <= 4096.0 {
+            let g_f32 = chosen(mbps, WireFormat::F32);
+            let g_i8 = chosen(mbps, WireFormat::I8);
+            if g_i8 < g_f32 {
+                split = Some((mbps, g_f32, g_i8));
+                break;
+            }
+            mbps *= 2.0;
+        }
+        let (mbps, g_f32, g_i8) = split.expect(
+            "some bandwidth in [2, 4096] Mbps must separate the i8 and f32 grain optima",
+        );
+        assert!(g_i8 < g_f32, "at {mbps} Mbps: i8 T={g_i8} vs f32 T={g_f32}");
+    }
+
+    #[test]
+    fn unwalkable_grain_falls_back_to_the_coarse_path() {
+        // A planned grain the serving partition cannot split (off-ladder
+        // request whose re-derived rows are shorter than T/d) must
+        // degrade to the coarse walk, not skew the timeline.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let net = NetParams::mbps(25.0);
+        let base_dep = crate::planner::Deployment::from_plan(p.clone(), &[284]);
+        let mut grained = crate::planner::Deployment::from_plan(p, &[284]);
+        grained.set_tile_grain(284, 8 * env.len()).unwrap();
+        // seq=9 re-derives 3-row tiles: per=8 cannot split 3 rows.
+        let b = SimEngine::from_deployment(&m, &env, base_dep, net)
+            .unwrap()
+            .run_inference(9);
+        let g = SimEngine::from_deployment(&m, &env, grained, net)
+            .unwrap()
+            .run_inference(9);
+        assert_eq!(b.ring_bytes, g.ring_bytes);
+        assert!((b.total_s() - g.total_s()).abs() < 1e-15);
+        assert!((b.exposed_comm_s - g.exposed_comm_s).abs() < 1e-15);
+        // And a grain the planner refuses outright stays refused.
+        let mut dep = SimEngine::new(&m, &env, plan(&m, &env, 284), net)
+            .deployment()
+            .clone();
+        assert!(dep.set_tile_grain(284, 5).is_err(), "non-multiple grain must be rejected");
+        assert!(dep.set_tile_grain(284, 1000 * env.len()).is_err(), "oversplit grain must be rejected");
     }
 
     #[test]

@@ -20,6 +20,15 @@
 /// tiles, keeps using it regardless of the wire format.
 pub const WIRE_BYTES_PER_ELEM: usize = 4;
 
+/// Fixed CPU-side cost of posting one tile to a ring link, in seconds:
+/// codec dispatch, slot handoff and io-thread wakeup — everything that
+/// scales with the *number* of posts rather than their bytes. The
+/// default is calibrated from the transport micro-bench (see
+/// `BENCH_overlap.json`'s `per_post_overhead_s`, measured by
+/// `bench_report` on the real threaded links); it is what stops the
+/// granularity chooser from slicing tiles arbitrarily fine.
+pub const DEFAULT_PER_POST_OVERHEAD_S: f64 = 12e-6;
+
 /// Link parameters applied uniformly to every D2D connection.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetParams {
@@ -27,13 +36,29 @@ pub struct NetParams {
     pub bandwidth_mbps: f64,
     /// Fixed one-way message latency in seconds (switch + stack).
     pub latency_s: f64,
+    /// Fixed per-post CPU cost in seconds (see
+    /// [`DEFAULT_PER_POST_OVERHEAD_S`]). Finer overlap grains pay this
+    /// once per micro-tile, which is the counterweight the planner's
+    /// grain chooser minimizes against exposed communication.
+    pub per_post_overhead_s: f64,
 }
 
 impl NetParams {
     /// The paper's default LAN latency is sub-millisecond; 0.3 ms models
     /// the Jetson's software stack + switch.
     pub fn mbps(bandwidth_mbps: f64) -> Self {
-        Self { bandwidth_mbps, latency_s: 0.3e-3 }
+        Self {
+            bandwidth_mbps,
+            latency_s: 0.3e-3,
+            per_post_overhead_s: DEFAULT_PER_POST_OVERHEAD_S,
+        }
+    }
+
+    /// Override the calibrated per-post fixed cost (e.g. re-calibrated
+    /// from a fresh `BENCH_overlap.json` on the target hardware).
+    pub fn with_per_post_overhead(mut self, seconds: f64) -> Self {
+        self.per_post_overhead_s = seconds;
+        self
     }
 
     /// Paper default for Table IV / Fig 9 (125 Mbps).

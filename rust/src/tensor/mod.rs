@@ -237,6 +237,28 @@ impl Tensor2 {
         self.zip_with(rhs, |a, b| a + b)
     }
 
+    /// In-place accumulation of `rhs` into rows `[start, start+rhs.rows)`
+    /// of `self` (column counts must match). This is the reduce-add of a
+    /// micro-tile ReduceScatter hop: the wire moves a row slice, the
+    /// accumulator is the whole tile.
+    pub fn add_assign_rows(&mut self, start: usize, rhs: &Tensor2) -> Result<()> {
+        if rhs.cols != self.cols || start + rhs.rows > self.rows {
+            return Err(GalaxyError::Shape(format!(
+                "add_assign_rows: {}x{} into rows [{start}, {}) of {}x{}",
+                rhs.rows,
+                rhs.cols,
+                start + rhs.rows,
+                self.rows,
+                self.cols
+            )));
+        }
+        let off = start * self.cols;
+        for (a, b) in self.data[off..off + rhs.data.len()].iter_mut().zip(rhs.data.iter()) {
+            *a += b;
+        }
+        Ok(())
+    }
+
     /// In-place element-wise accumulation.
     pub fn add_assign(&mut self, rhs: &Tensor2) -> Result<()> {
         if self.shape() != rhs.shape() {
@@ -384,6 +406,17 @@ mod tests {
         let a = t(2, 3, &[1., 2., 3., 4., 5., 6.]);
         assert_eq!(a.transpose().transpose(), a);
         assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn add_assign_rows_matches_whole_tensor_add() {
+        let mut a = t(4, 2, &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        let mid = t(2, 2, &[10., 20., 30., 40.]);
+        a.add_assign_rows(1, &mid).unwrap();
+        assert_eq!(a, t(4, 2, &[0., 1., 12., 23., 34., 45., 6., 7.]));
+        // Out-of-range and column-mismatch must error, not clobber.
+        assert!(a.add_assign_rows(3, &mid).is_err());
+        assert!(a.add_assign_rows(0, &t(1, 3, &[0., 0., 0.])).is_err());
     }
 
     #[test]

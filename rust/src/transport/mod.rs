@@ -45,6 +45,21 @@
 //! and the PJRT dispatch genuinely overlap. The transport-order unit
 //! test below pins that ordering.
 //!
+//! [`RingIo::ag_walk_micro`] / [`RingIo::rs_walk_micro`] are the
+//! planner-grain refinements: each device's SP tile splits into
+//! `T/d` micro-tiles (row slices) and the walk posts **one micro-tile
+//! per sub-step**, so a micro-tile's transfer overlaps the previous
+//! micro-tile's wire time *within* a ring step and the exposed tail of
+//! each phase shrinks from one tile transfer to one micro transfer.
+//! The GEMM stays tile-granular (the AOT PJRT artifacts exist only at
+//! manifest tile shapes), firing at each tile's first sub-step. Because
+//! every sub-step still pairs one post with one blocking consume, the
+//! lockstep skew stays at one sub-step and the slot bound is unchanged:
+//! backpressure triggers at [`LINK_SLOTS`] regardless of the grain `T`
+//! (the loom micro-walk model pins this). Per phase the walk moves the
+//! same total rows as the coarse walk — ring bytes and sync points are
+//! grain-invariant, parity pinned by the collective and engine tests.
+//!
 //! # Exposed vs hidden accounting
 //!
 //! Each tile carries its transfer-start instant (stamped by the
@@ -91,7 +106,7 @@ use std::rc::Rc;
 use self::sync::time::{self, Instant};
 use self::sync::{Arc, Receiver, Sender, TryRecvError};
 use crate::error::{GalaxyError, Result};
-use crate::parallel::overlap::{AgStep, RsStep};
+use crate::parallel::overlap::{micro_rows, AgMicroStep, AgStep, RsMicroStep, RsStep};
 use crate::tensor::Tensor2;
 
 pub mod sync;
@@ -484,6 +499,114 @@ impl RingIo {
         Ok(outs)
     }
 
+    /// Micro-grain Ring-AllGather walk: the planned refinement of
+    /// [`RingIo::ag_walk`]. The wire moves `grain/d` row-sliced
+    /// micro-tiles per ring step; the entry GEMM still runs once per
+    /// whole tile (at the tile's first sub-step — AOT artifacts only
+    /// exist at tile shapes). Received micro-slices are reassembled into
+    /// whole tiles, so at f32 the gathered slots are bit-identical to
+    /// the coarse walk's. With `grain == tiles.len()` this degenerates
+    /// to exactly one post per step, the coarse schedule.
+    pub fn ag_walk_micro<T>(
+        &mut self,
+        steps: &[AgMicroStep],
+        grain: usize,
+        tiles: &mut [Option<Arc<Tensor2>>],
+        mut compute: impl FnMut(usize, &Tensor2) -> Result<Option<T>>,
+    ) -> Result<Vec<Option<T>>> {
+        let per = micro_split_arity(tiles.len(), grain)?;
+        let mut outs: Vec<Option<T>> = (0..tiles.len()).map(|_| None).collect();
+        // Arrival order is the schedule order, and a coarse step receives
+        // all of one tile's micros before the next step starts — one
+        // inbox reassembles every transited tile in turn.
+        let mut inbox: Vec<Arc<Tensor2>> = Vec::with_capacity(per);
+        for step in steps {
+            let slot = step.compute.tile;
+            let xt = tiles[slot]
+                .clone() // refcount bump, not a copy
+                .ok_or_else(|| GalaxyError::Fabric(format!("AG: tile {slot} missing")))?;
+            if let Some(send) = step.send {
+                let micro = Arc::new(slice_micro(&xt, per, send.micro)?);
+                let encoded = self.codec.encode(&micro)?;
+                let bytes = encoded.wire_bytes();
+                self.next.post_send(encoded)?;
+                self.bytes += bytes;
+            }
+            if step.compute.micro == 0 {
+                outs[slot] = compute(slot, xt.as_ref())?;
+            }
+            if let Some(recv) = step.recv {
+                inbox.push(self.prev.complete_recv()?.decode()?);
+                if recv.micro + 1 == per {
+                    let parts: Vec<Tensor2> = inbox.drain(..).map(take_tile).collect();
+                    tiles[recv.tile] = Some(Arc::new(Tensor2::concat_rows(&parts)?));
+                }
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Micro-grain Ring-ReduceScatter walk: the planned refinement of
+    /// [`RingIo::rs_walk`]. The previous step's accumulation is forwarded
+    /// one row-sliced micro-tile per sub-step; the exit GEMM still runs
+    /// once per whole tile, and arriving micro partials reduce-add into
+    /// their row range of the running tile. Per element the addition
+    /// chain is hop-for-hop the coarse walk's, so the reduced tile is
+    /// bit-identical at f32.
+    pub fn rs_walk_micro(
+        &mut self,
+        steps: &[RsMicroStep],
+        grain: usize,
+        mut partial: impl FnMut(usize) -> Result<Tensor2>,
+    ) -> Result<Tensor2> {
+        // The compute refs cover every tile index exactly `per` times,
+        // so the ring size is the largest index + 1.
+        let d = steps
+            .iter()
+            .map(|s| s.compute.tile + 1)
+            .max()
+            .ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))?;
+        let per = micro_split_arity(d, grain)?;
+        let mut acc: Option<Arc<Tensor2>> = None;
+        let mut cur: Option<Tensor2> = None;
+        for step in steps {
+            if let Some(send) = step.send {
+                let t = acc.as_ref().ok_or_else(|| {
+                    GalaxyError::Fabric("RS: nothing accumulated to send".into())
+                })?;
+                let micro = Arc::new(slice_micro(t, per, send.micro)?);
+                let encoded = self.codec.encode(&micro)?;
+                let bytes = encoded.wire_bytes();
+                self.next.post_send(encoded)?;
+                self.bytes += bytes;
+                if send.micro + 1 == per {
+                    acc = None; // fully forwarded
+                }
+            }
+            if step.compute.micro == 0 {
+                cur = Some(partial(step.compute.tile)?);
+            }
+            if let Some(recv) = step.recv {
+                let got = self.prev.complete_recv()?.decode()?;
+                let o = cur.as_mut().ok_or_else(|| {
+                    GalaxyError::Fabric("RS: micro partial arrived before its tile".into())
+                })?;
+                let off = micro_split_offset(o.rows(), per, recv.micro)?;
+                o.add_assign_rows(off, &got)?;
+            }
+            if step.compute.micro + 1 == per {
+                let done = cur.take().ok_or_else(|| {
+                    GalaxyError::Fabric("RS: micro schedule finished a tile it never started".into())
+                })?;
+                acc = Some(Arc::new(done));
+            }
+        }
+        let acc = acc.ok_or_else(|| GalaxyError::Fabric("RS: empty schedule".into()))?;
+        // The final accumulation was never posted, so the Arc is unique;
+        // the clone fallback only guards exotic custom links.
+        Ok(Arc::try_unwrap(acc).unwrap_or_else(|a| (*a).clone()))
+    }
+
     /// Ring-ReduceScatter walk (paper Fig. 7): **forward the previous
     /// step's accumulation first**, run the exit GEMM while it rides the
     /// ring, then reduce-add the partial arriving from the predecessor.
@@ -539,11 +662,50 @@ pub fn take_tile(tile: Arc<Tensor2>) -> Tensor2 {
     Arc::try_unwrap(tile).unwrap_or_else(|a| (*a).clone())
 }
 
+/// Fallible twin of [`crate::parallel::overlap::micro_per_tile`]: a
+/// malformed grain arriving over the control plane is a `Fabric` error,
+/// not a panic.
+fn micro_split_arity(d: usize, grain: usize) -> Result<usize> {
+    if d == 0 || grain < d || grain % d != 0 {
+        return Err(GalaxyError::Fabric(format!(
+            "micro walk: grain {grain} is not a positive multiple of the ring size {d}"
+        )));
+    }
+    Ok(grain / d)
+}
+
+/// Row-slice micro-tile `micro` of `per` out of a tile (the split is
+/// [`crate::parallel::overlap::micro_rows`], shared with the schedules
+/// and the simulator so every layer agrees on the geometry).
+fn slice_micro(tile: &Arc<Tensor2>, per: usize, micro: usize) -> Result<Tensor2> {
+    let rows = checked_micro_rows(tile.rows(), per)?;
+    let off: usize = rows[..micro].iter().sum();
+    tile.slice_rows(off, rows[micro])
+}
+
+/// Row offset of micro-tile `micro` within its tile.
+fn micro_split_offset(tile_rows: usize, per: usize, micro: usize) -> Result<usize> {
+    let rows = checked_micro_rows(tile_rows, per)?;
+    Ok(rows[..micro].iter().sum())
+}
+
+fn checked_micro_rows(tile_rows: usize, per: usize) -> Result<Vec<usize>> {
+    if per == 0 || tile_rows < per {
+        return Err(GalaxyError::Fabric(format!(
+            "micro walk: cannot split a {tile_rows}-row tile into {per} micro-tiles"
+        )));
+    }
+    Ok(micro_rows(tile_rows, per))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::collective::reference;
-    use crate::parallel::overlap::{all_gather_steps, reduce_scatter_steps};
+    use crate::parallel::overlap::{
+        all_gather_micro_steps, all_gather_steps, reduce_scatter_micro_steps,
+        reduce_scatter_steps,
+    };
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{Arc, Mutex};
     use std::time::Duration;
@@ -832,6 +994,144 @@ mod tests {
             assert_eq!(stats.tiles, 2 * (d as u64 - 1)); // sent + received
             assert!(stats.exposed_s >= 0.0 && stats.hidden_s >= 0.0);
         }
+    }
+
+    #[test]
+    fn transport_micro_ag_matches_coarse_bit_exact() {
+        // Grain 2d over an uneven SP partition: the gathered slots must
+        // be bit-identical to the reference concat (pure row slicing and
+        // reassembly at f32), the GEMM must fire once per tile — not per
+        // micro — and the encoded ring volume must equal the coarse
+        // walk's (same tiles transit, just sliced).
+        let d = 3;
+        let grain = 2 * d;
+        let rows = [4usize, 3, 5];
+        let shards: Vec<Tensor2> = (0..d)
+            .map(|t| {
+                Tensor2::from_vec(
+                    rows[t],
+                    3,
+                    (0..rows[t] * 3).map(|k| (t * 100 + k) as f32 * 0.5 - 7.0).collect(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let want = reference::all_gather(&shards).unwrap();
+        let ios = threaded_ring(d).unwrap();
+        let mut handles = Vec::new();
+        for (i, mut io) in ios.into_iter().enumerate() {
+            let my = shards[i].clone();
+            handles.push(std::thread::spawn(move || {
+                let steps = all_gather_micro_steps(i, d, grain);
+                let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                tiles[i] = Some(Arc::new(my));
+                let outs = io
+                    .ag_walk_micro(&steps, grain, &mut tiles, |_, _| Ok(Some(())))
+                    .unwrap();
+                assert_eq!(outs.iter().flatten().count(), d, "one GEMM per tile");
+                let parts: Vec<Tensor2> =
+                    tiles.into_iter().map(|t| take_tile(t.expect("gathered"))).collect();
+                (Tensor2::concat_rows(&parts).unwrap(), io.bytes)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let (got, bytes) = h.join().unwrap();
+            assert_eq!(got, want, "device {i}: micro AG must be bit-exact at f32");
+            let coarse: u64 =
+                (0..d - 1).map(|s| (rows[(i + d - s) % d] * 3 * 4) as u64).sum();
+            assert_eq!(bytes, coarse, "device {i}: grain must not change ring bytes");
+        }
+    }
+
+    #[test]
+    fn transport_micro_rs_matches_coarse_bit_exact() {
+        // Per element the micro RS applies the same f32 additions in the
+        // same hop order as the coarse walk, so the reduced tiles must
+        // agree to the bit, not within a tolerance.
+        const D: usize = 4;
+        const ROWS: [usize; D] = [3, 5, 4, 3];
+        fn partial(i: usize, t: usize) -> Tensor2 {
+            Tensor2::from_vec(
+                ROWS[t],
+                2,
+                (0..ROWS[t] * 2).map(|k| ((i * 31 + t * 7 + k) as f32).sin()).collect(),
+            )
+            .unwrap()
+        }
+        let run = |micro: bool| -> Vec<Tensor2> {
+            let ios = threaded_ring(D).unwrap();
+            let mut handles = Vec::new();
+            for (i, mut io) in ios.into_iter().enumerate() {
+                handles.push(std::thread::spawn(move || {
+                    if micro {
+                        let grain = 2 * D;
+                        let steps = reduce_scatter_micro_steps(i, D, grain);
+                        io.rs_walk_micro(&steps, grain, |t| Ok(partial(i, t))).unwrap()
+                    } else {
+                        let steps = reduce_scatter_steps(i, D);
+                        io.rs_walk(&steps, |t| Ok(partial(i, t))).unwrap()
+                    }
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        let coarse = run(false);
+        let micro = run(true);
+        assert_eq!(micro, coarse, "micro RS must reproduce the coarse reduction bit-exactly");
+    }
+
+    #[test]
+    fn transport_micro_order_one_post_per_substep() {
+        // The slot-safety core of the grain contract: every sub-step
+        // posts exactly one micro-tile and consumes exactly one, the
+        // GEMM fires only at a tile's first sub-step — so lockstep skew
+        // stays at one sub-step and backpressure still triggers at
+        // LINK_SLOTS regardless of the grain.
+        let d = 3;
+        let grain = 2 * d; // per = 2
+        let journal = Arc::new(Mutex::new(Vec::new()));
+        let steps = all_gather_micro_steps(1, d, grain);
+        let incoming: Vec<Tensor2> = (0..(d - 1) * 2).map(|i| tile(i as f32)).collect();
+        let mut io = RingIo::new(
+            Box::new(RecordingLink::new(journal.clone(), Vec::new())),
+            Box::new(RecordingLink::new(journal.clone(), incoming)),
+        );
+        let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+        tiles[1] = Some(Arc::new(tile(9.0)));
+        let gj = journal.clone();
+        io.ag_walk_micro(&steps, grain, &mut tiles, |slot, _xt| {
+            gj.lock().unwrap().push(format!("gemm-slot{slot}"));
+            Ok(Some(()))
+        })
+        .unwrap();
+        let log = journal.lock().unwrap().clone();
+        let want: Vec<String> = [
+            // step 0 (own tile 1): micro 0 posts, GEMM, reap; micro 1
+            // posts and reaps with no second GEMM.
+            "post0", "gemm-slot1", "recv0", "post1", "recv1",
+            // step 1 (transited tile 0, reassembled from two micros).
+            "post2", "gemm-slot0", "recv2", "post3", "recv3",
+            // final step: silent, GEMM only.
+            "gemm-slot2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(log, want, "micro AG transport order broken");
+    }
+
+    #[test]
+    fn transport_micro_walk_rejects_bad_grain() {
+        let (tx, rx) = mem_link_pair(LINK_SLOTS);
+        let mut io = RingIo::new(Box::new(tx), Box::new(rx));
+        let steps = all_gather_micro_steps(0, 2, 4);
+        let mut tiles = vec![Some(Arc::new(tile(1.0))), None];
+        // Grain not a multiple of the ring size.
+        let err = io.ag_walk_micro(&steps, 3, &mut tiles, |_, _| Ok(Some(()))).unwrap_err();
+        assert!(err.to_string().contains("multiple of the ring size"), "{err}");
+        // More micro-tiles than rows: the 2-row tile cannot split 4 ways.
+        let err = io.ag_walk_micro(&steps, 8, &mut tiles, |_, _| Ok(Some(()))).unwrap_err();
+        assert!(err.to_string().contains("micro-tiles"), "{err}");
     }
 
     #[test]

@@ -11,16 +11,20 @@
 //! * [`WireFormat::F16`] — IEEE 754 binary16, 2 B/elem, hand-rolled bit
 //!   conversion (the offline registry has no `half` crate). Round-off is
 //!   ≤ 2⁻¹¹ relative in the normal range.
-//! * [`WireFormat::I8`] — symmetric per-tile int8: `scale = max|x|/127`,
-//!   `q = round(x/scale)`, 1 B/elem. The scale rides in the tile header
-//!   (out of band, excluded from byte accounting — a constant 4 B per
-//!   tile against KBs of payload, and excluding it keeps the modeled and
-//!   measured `ring_bytes` exactly `elems × elem_bytes` on both engines).
+//! * [`WireFormat::I8`] — symmetric **per-channel** int8: every row
+//!   (sequence position) gets its own `scale = max|row|/127`,
+//!   `q = round(x/scale)`, 1 B/elem. A per-tile scale let one outlier
+//!   row blow up the quantization error of every other row; row-wise
+//!   max-abs bounds each row's error by its *own* magnitude. The scale
+//!   vector rides in the tile header (out of band, excluded from byte
+//!   accounting — 4 B per row against KBs of payload, and excluding it
+//!   keeps the modeled and measured `ring_bytes` exactly
+//!   `elems × elem_bytes` on both engines).
 //!
 //! Re-encoding a decoded tile is **idempotent** for both lossy formats
-//! (the max element quantizes to exactly ±127, so the tile's scale is a
-//! fixed point): an AllGather hop chain adds no error beyond the first
-//! encode. A ReduceScatter *does* compound — each hop re-quantizes the
+//! (each row's max element quantizes to exactly ±127, so the row's scale
+//! is a fixed point): an AllGather hop chain adds no error beyond the
+//! first encode. A ReduceScatter *does* compound — each hop re-quantizes the
 //! running partial sum — so its error bound grows with the ring size
 //! (the collective parity tests pin both bounds).
 //!
@@ -52,8 +56,8 @@ pub enum WireFormat {
     F32,
     /// 2 B/elem IEEE binary16; ≤ 2⁻¹¹ relative round-off per encode.
     F16,
-    /// 1 B/elem symmetric int8 with a per-tile scale; ≤ `max|x|/254`
-    /// absolute error per encode.
+    /// 1 B/elem symmetric int8 with a per-channel (row-wise max-abs)
+    /// scale; ≤ `max|row|/254` absolute error per encode, per row.
     I8,
 }
 
@@ -274,7 +278,9 @@ impl Drop for TileBuf {
 enum Payload {
     F32(Arc<Tensor2>),
     F16(TileBuf),
-    I8 { buf: TileBuf, scale: f32 },
+    /// Row-major int8 codes plus one scale per row (per-channel
+    /// quantization: row `r` decodes as `code × scales[r]`).
+    I8 { buf: TileBuf, scales: Vec<f32> },
 }
 
 /// One encoded tile as it travels a ring link: shape header + payload.
@@ -330,9 +336,18 @@ impl WireTile {
                     .collect();
                 Ok(Arc::new(Tensor2::from_vec(rows, cols, data)?))
             }
-            Payload::I8 { buf, scale } => {
-                let data: Vec<f32> =
-                    buf.as_slice().iter().map(|&b| (b as i8) as f32 * scale).collect();
+            Payload::I8 { buf, scales } => {
+                if scales.len() != rows {
+                    return Err(GalaxyError::Fabric(format!(
+                        "i8 tile header corrupt: {} scales for {rows} rows",
+                        scales.len()
+                    )));
+                }
+                let mut data = Vec::with_capacity(rows * cols);
+                for (r, row) in buf.as_slice().chunks_exact(cols.max(1)).enumerate() {
+                    let scale = scales[r];
+                    data.extend(row.iter().map(|&b| (b as i8) as f32 * scale));
+                }
                 Ok(Arc::new(Tensor2::from_vec(rows, cols, data)?))
             }
         }
@@ -379,18 +394,23 @@ impl TileCodec {
                 Payload::F16(buf)
             }
             WireFormat::I8 => {
-                let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-                let scale = max_abs / 127.0;
                 let mut buf = self.pool.lease(t.len())?;
-                if scale == 0.0 {
-                    buf.data.resize(t.len(), 0);
-                } else {
-                    for &x in t.data() {
-                        let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
-                        buf.data.push(q as u8);
+                let mut scales = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let row = t.row(r);
+                    let max_abs = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    let scale = max_abs / 127.0;
+                    scales.push(scale);
+                    if scale == 0.0 {
+                        buf.data.resize(buf.data.len() + cols, 0);
+                    } else {
+                        for &x in row {
+                            let q = (x / scale).round().clamp(-127.0, 127.0) as i8;
+                            buf.data.push(q as u8);
+                        }
                     }
                 }
-                Payload::I8 { buf, scale }
+                Payload::I8 { buf, scales }
             }
         };
         Ok(WireTile { rows, cols, payload })
@@ -461,9 +481,11 @@ mod tests {
 
     #[test]
     fn prop_i8_round_trip_error_bound() {
-        // Symmetric per-tile int8: absolute error ≤ scale/2 = max|x|/254.
+        // Symmetric per-channel int8: each row's absolute error is
+        // bounded by *its own* half-quantum, scale/2 = max|row|/254 —
+        // strictly tighter than the old per-tile max|x|/254 bound.
         forall(
-            "i8 round-trip bound",
+            "i8 per-row round-trip bound",
             32,
             100,
             |rng| {
@@ -475,16 +497,45 @@ mod tests {
                 let codec = TileCodec::new(WireFormat::I8);
                 let arc = Arc::new(t.clone());
                 let back = codec.encode(&arc).unwrap().decode().unwrap();
-                let max_abs = t.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-                let bound = max_abs / 254.0 + 1e-7;
-                for (a, b) in t.data().iter().zip(back.data()) {
-                    if (a - b).abs() > bound {
-                        return Err(format!("|{a} - {b}| > {bound}"));
+                for r in 0..t.rows() {
+                    let row_max = t.row(r).iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    let bound = row_max / 254.0 + 1e-7;
+                    for (a, b) in t.row(r).iter().zip(back.row(r)) {
+                        if (a - b).abs() > bound {
+                            return Err(format!("row {r}: |{a} - {b}| > {bound}"));
+                        }
                     }
                 }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn i8_per_channel_scales_isolate_outlier_rows() {
+        // The point of row-wise scales: a huge row must not degrade a
+        // tiny row's precision. Under a per-tile scale the small row
+        // would quantize entirely to zero (error ≈ 0.01 ≫ 100/254 is
+        // false the other way: quantum 100/127 ≈ 0.79 swallows it);
+        // per-channel keeps its error at its own half-quantum.
+        let big = vec![100.0f32, -55.0, 73.0, 9.0];
+        let small = vec![0.011f32, -0.007, 0.0042, 0.0099];
+        let t = Arc::new(
+            Tensor2::from_vec(2, 4, big.iter().chain(&small).copied().collect()).unwrap(),
+        );
+        let codec = TileCodec::new(WireFormat::I8);
+        let back = codec.encode(&t).unwrap().decode().unwrap();
+        let small_bound = 0.011 / 254.0 + 1e-7;
+        for (a, b) in t.row(1).iter().zip(back.row(1)) {
+            assert!(
+                (a - b).abs() <= small_bound,
+                "outlier row degraded a small row: |{a} - {b}| > {small_bound}"
+            );
+        }
+        let big_bound = 100.0 / 254.0 + 1e-6;
+        for (a, b) in t.row(0).iter().zip(back.row(0)) {
+            assert!((a - b).abs() <= big_bound, "|{a} - {b}| > {big_bound}");
+        }
     }
 
     #[test]

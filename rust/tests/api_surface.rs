@@ -37,6 +37,7 @@ fn the_rule_table_subsumes_the_legacy_pins() {
         "transport-sync-shim",
         "no-unwrap",
         "wire-elem-bytes",
+        "tile-grain-truth",
         "measured-clock",
     ] {
         assert!(ids.contains(&id), "rule `{id}` disappeared from lint::RULES");
@@ -49,6 +50,8 @@ fn the_rule_table_subsumes_the_legacy_pins() {
         ("planner/mod.rs", "pub fn equal_seq_partition"),
         ("planner/deployment.rs", "equal_seq_partition"),
         ("cluster/mod.rs", "fn from_deployment"),
+        ("planner/deployment.rs", "pub fn choose_tile_grains"),
+        ("sim/engine.rs", "tile_grain_for"),
     ] {
         assert!(requires.contains(&pin), "require-pin {pin:?} disappeared from lint::RULES");
     }
@@ -65,6 +68,7 @@ fn every_rule_fires_on_an_injected_violation() {
         ("transport-sync-shim", "transport/mod.rs", "use std::sync::Mutex;\n"),
         ("no-unwrap", "serving/mod.rs", "let x = maybe.unwrap();\n"),
         ("wire-elem-bytes", "sim/engine.rs", "let b = n * WIRE_BYTES_PER_ELEM;\n"),
+        ("tile-grain-truth", "cluster/worker.rs", "geom.tile_grain = 12;\n"),
         ("measured-clock", "engine/mod.rs", "let t = Instant::now();\n"),
     ];
     for (rule, file, src) in cases {

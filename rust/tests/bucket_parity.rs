@@ -268,6 +268,71 @@ fn parity_quantized_wire_scales_ring_bytes_on_both_engines() {
 }
 
 #[test]
+fn parity_overlap_grain_preserves_ring_bytes_and_sync_points() {
+    // Tentpole parity: the planned micro-tile grain T re-slices ring
+    // transfers, it never changes what is moved or how often the ring
+    // synchronizes. For every (wire format, grain) pair the sim engine
+    // must agree with the dispatcher-driven mock — whose accounting is
+    // grain-blind by construction — on ring bytes and sync points, for
+    // every bucket in the ladder.
+    let model = ModelConfig::bert_large();
+    let d = 3;
+    let env = env(d);
+    let base = deployment(&model, &env);
+    let mut anchor: Vec<(u64, u64)> = Vec::new(); // (ring_bytes, syncs) per (wire, bucket) at T=d
+    for wire in galaxy::transport::WireFormat::all() {
+        for (gi, mult) in [1usize, 2, 4].iter().enumerate() {
+            let mut dep = base.clone();
+            if *mult > 1 {
+                for bucket in dep.buckets() {
+                    dep.set_tile_grain(bucket, mult * d).unwrap();
+                }
+            }
+            let mut sim = sim_engine(&model, &env, dep.clone()).with_wire_format(wire);
+            let mut mock = MockCluster::new_wire(&dep, model.hidden, wire.elem_bytes());
+            let mut dispatcher = Dispatcher::new(model.layers, 2);
+            for (bucket_id, _) in LADDER.iter().enumerate() {
+                let cmds = dispatcher.submit(bucket_id as u64, bucket_id);
+                mock.exec(&cmds);
+            }
+            while dispatcher.outstanding() > 0 {
+                let cmds = dispatcher.ack();
+                mock.exec(&cmds);
+            }
+            for (bucket_id, &bucket) in LADDER.iter().enumerate() {
+                let modeled = {
+                    let engine: &mut dyn Engine = &mut sim;
+                    engine.infer(&InferRequest::new(13, bucket, bucket)).unwrap()
+                };
+                let (_, c) = mock.finished[&(bucket_id as u64)];
+                assert_eq!(
+                    c.ring_bytes, modeled.ring_bytes,
+                    "wire={wire} T={}d bucket={bucket}: ring bytes diverged",
+                    mult
+                );
+                assert_eq!(
+                    c.sync_points, modeled.sync_points,
+                    "wire={wire} T={}d bucket={bucket}: sync points diverged",
+                    mult
+                );
+                if gi == 0 {
+                    anchor.push((modeled.ring_bytes, modeled.sync_points));
+                } else {
+                    // Finer grains pin to the coarse anchor exactly.
+                    let idx = anchor.len() - LADDER.len() + bucket_id;
+                    assert_eq!(
+                        (modeled.ring_bytes, modeled.sync_points),
+                        anchor[idx],
+                        "wire={wire} T={}d bucket={bucket}: grain changed the volume",
+                        mult
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn parity_zero_unit_device_still_carries_sp_rows_through_the_ring() {
     // Satellite: a device balanced down to 0 heads and 0 MLP units (no
     // memory budget) still owns SP rows, so it stays a full ring

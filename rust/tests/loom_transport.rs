@@ -27,7 +27,7 @@
 #![cfg(loom)]
 
 use galaxy::error::GalaxyError;
-use galaxy::parallel::overlap::all_gather_steps;
+use galaxy::parallel::overlap::{all_gather_micro_steps, all_gather_steps};
 use galaxy::tensor::Tensor2;
 use galaxy::transport::{
     take_tile, threaded_pair, threaded_ring, RingLink, TileBufPool, WireTile, LINK_SLOTS,
@@ -126,6 +126,44 @@ fn loom_ring_of_three_ag_walk_gathers_every_tile() {
             for (k, t) in tiles.into_iter().enumerate() {
                 let got = take_tile(t.expect("gathered tile"));
                 assert_eq!(got, tile(k as f32 + 1.0), "slot {k} holds the wrong tile");
+            }
+        }
+    });
+}
+
+/// The production micro-tile AG walk
+/// ([`galaxy::transport::RingIo::ag_walk_micro`]) on a ring of 2 at
+/// grain T = 2d (two micro-tiles per SP row): the walk posts one
+/// micro-slice and consumes one per sub-step, so in-flight tiles stay
+/// within [`LINK_SLOTS`] for *any* grain — loom proves no schedule can
+/// deadlock or lose a slice, and every device finishes holding both
+/// reassembled tiles. This is the exact worker code path when the
+/// planner picks a grain finer than d.
+#[test]
+fn loom_ring_micro_walk_completes_within_slot_budget() {
+    Builder { preemption_bound: Some(1), ..Builder::default() }.check(|| {
+        let d = 2;
+        let grain = 4; // per = grain / d = 2 micro-tiles per row
+        let mut handles = Vec::new();
+        for (i, mut io) in threaded_ring(d).expect("ring").into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                let steps = all_gather_micro_steps(i, d, grain);
+                let mut tiles: Vec<Option<Arc<Tensor2>>> = vec![None; d];
+                tiles[i] = Some(Arc::new(Tensor2::full(2, 1, i as f32 + 1.0)));
+                io.ag_walk_micro(&steps, grain, &mut tiles, |_, _| Ok(Some(())))
+                    .expect("micro ag walk");
+                tiles
+            }));
+        }
+        for h in handles {
+            let tiles = h.join().expect("worker");
+            for (k, t) in tiles.into_iter().enumerate() {
+                let got = take_tile(t.expect("gathered tile"));
+                assert_eq!(
+                    got,
+                    Tensor2::full(2, 1, k as f32 + 1.0),
+                    "slot {k} holds the wrong tile after the micro walk"
+                );
             }
         }
     });

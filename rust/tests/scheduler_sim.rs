@@ -6,7 +6,7 @@
 
 use galaxy::engine::Engine;
 use galaxy::model::ModelConfig;
-use galaxy::planner::{Plan, Planner};
+use galaxy::planner::{Deployment, Plan, Planner};
 use galaxy::profiler::Profiler;
 use galaxy::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
@@ -254,6 +254,71 @@ fn i8_wire_cuts_e2e_p95_and_exposed_comm_on_the_replay_trace() {
     // the wire phases drained.
     assert_eq!(base.completions.len(), quant.completions.len());
     for (a, b) in base.completions.iter().zip(quant.completions.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.bucket, b.bucket);
+    }
+}
+
+#[test]
+fn planned_overlap_grain_cuts_e2e_p95_on_the_replay_trace() {
+    // The overlap-granularity acceptance check: at the 25 Mbps point the
+    // planner's per-rung micro-tile grain T must beat the coarse T = d
+    // walk on the seeded replay trace — strictly less total exposed
+    // communication AND strictly lower end-to-end p95 — while moving
+    // exactly the same ring bytes through exactly the same sync points
+    // (grain re-slices transfers; it never changes collective volume).
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let trace = qnli_trace(24, 2.0, 7);
+    let net = NetParams::mbps(MBPS);
+    let coarse_dep = Deployment::from_plan(plan(&model, &env, 512), &[128, 256, 512]);
+    let mut fine_dep = coarse_dep.clone();
+    fine_dep.choose_tile_grains(&model, &env, net, WireFormat::F32).unwrap();
+    let d = fine_dep.n_devices();
+    let top = fine_dep.rungs().last().unwrap();
+    assert!(
+        top.tile_grain > d && top.tile_grain % d == 0,
+        "chooser must refine the top rung at 25 Mbps f32, got T = {}",
+        top.tile_grain
+    );
+
+    let run = |dep: Deployment| -> SchedReport {
+        let engine = SimEngine::from_deployment(&model, &env, dep, net).unwrap();
+        Scheduler::new(engine).run(&trace).unwrap()
+    };
+    let coarse = run(coarse_dep);
+    let fine = run(fine_dep);
+    assert_eq!(coarse.served(), 24);
+    assert_eq!(fine.served(), 24);
+
+    let e2e_p95 = |r: &SchedReport| -> f64 {
+        let mut e2e: Vec<f64> =
+            r.completions.iter().map(|c| c.queueing_s + c.service_s).collect();
+        e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        e2e[((e2e.len() * 95 + 99) / 100).saturating_sub(1)]
+    };
+    let exposed = |r: &SchedReport| -> f64 {
+        r.completions.iter().map(|c| c.outcome.exposed_comm_s).sum()
+    };
+
+    assert!(
+        exposed(&fine) < exposed(&coarse),
+        "planned grain exposed comm {} !< T=d exposed comm {}",
+        exposed(&fine),
+        exposed(&coarse)
+    );
+    assert!(
+        e2e_p95(&fine) < e2e_p95(&coarse),
+        "planned grain e2e p95 {} !< T=d e2e p95 {}",
+        e2e_p95(&fine),
+        e2e_p95(&coarse)
+    );
+    // Grain parity: identical collective volume and sync structure.
+    assert_eq!(fine.ring_bytes(), coarse.ring_bytes());
+    assert_eq!(fine.sync_points(), coarse.sync_points());
+    // Same requests through the same schedule.
+    assert_eq!(fine.completions.len(), coarse.completions.len());
+    for (a, b) in coarse.completions.iter().zip(fine.completions.iter()) {
         assert_eq!(a.id, b.id);
         assert_eq!(a.bucket, b.bucket);
     }
