@@ -7,21 +7,32 @@
 //! trace replayed under the old serial-FIFO discipline and under the
 //! pipelined FIFO / SJF / EDF policies, with wall-clock throughput
 //! measured over the span — pipelining must keep ≥ 2 requests in flight
-//! and beat the serial FIFO baseline.
+//! and beat the serial FIFO baseline. It closes with a 10x overload
+//! storm: SLO-tiered traffic through the admission predictor, per-tier
+//! goodput/shed/downgrade accounting against the shed-nothing baseline.
 //!
 //! ```bash
 //! cargo run --release --example traffic_replay
+//! # reweight the storm's interactive:batch:best-effort draw, scale SLOs
+//! cargo run --release --example traffic_replay -- --tier-mix 0.5:0.3:0.2 --slo 2.0
 //! ```
+//!
+//! The storm's hard assertions only run at the default knobs (custom
+//! mixes/SLOs are exploratory, not pinned).
 
+use galaxy::GalaxyError;
 use galaxy::metrics::{fmt_secs, Table};
 use galaxy::model::ModelConfig;
 use galaxy::parallel::OverlapMode;
 use galaxy::planner::{Deployment, Planner, StrategyKind};
 use galaxy::profiler::Profiler;
-use galaxy::serving::{GovernorConfig, PlanGovernor, Policy, SchedReport, Scheduler, SchedulerConfig};
+use galaxy::serving::{
+    GovernorConfig, PlanGovernor, Policy, SchedReport, Scheduler, SchedulerConfig,
+};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
+use galaxy::testkit::{Arrival, TraceGen};
 use galaxy::transport::WireFormat;
-use galaxy::workload::{fixed_length, poisson_trace};
+use galaxy::workload::{fixed_length, poisson_trace, Request, Tier};
 
 const N: usize = 48;
 const RATE_RPS: f64 = 2.0;
@@ -49,7 +60,12 @@ fn main() -> galaxy::Result<()> {
 
     let run = |policy: Policy, window: usize| -> galaxy::Result<SchedReport> {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
-        let cfg = SchedulerConfig { policy, slo_s: 20.0, max_in_flight: window };
+        let cfg = SchedulerConfig {
+            policy,
+            slo_s: 20.0,
+            max_in_flight: window,
+            ..Default::default()
+        };
         Scheduler::with_config(engine, cfg).run(&trace)
     };
 
@@ -106,7 +122,12 @@ fn main() -> galaxy::Result<()> {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
             .with_buckets(vec![128, 256, 512])
             .with_max_batch(max_batch);
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 20.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         Scheduler::with_config(engine, cfg).run(&trace)
     };
     let unbatched = coarse(1)?;
@@ -142,7 +163,12 @@ fn main() -> galaxy::Result<()> {
     let serial_links = {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
             .with_overlap(OverlapMode::None);
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 20.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         Scheduler::with_config(engine, cfg).run(&trace)?
     };
     println!(
@@ -176,7 +202,12 @@ fn main() -> galaxy::Result<()> {
     for wire in WireFormat::all() {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
             .with_wire_format(wire);
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 20.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         wire_reps.push((wire, Scheduler::with_config(engine, cfg).run(&trace)?));
     }
     let f32_exposed = wire_reps[0].1.metrics.exposed_comm_s;
@@ -244,7 +275,12 @@ fn main() -> galaxy::Result<()> {
     }
     let replay_dep = |dep: Deployment| -> galaxy::Result<SchedReport> {
         let engine = SimEngine::from_deployment(&model, &env, dep, NetParams::mbps(MBPS))?;
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 20.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         Scheduler::with_config(engine, cfg).run(&trace)
     };
     let coarse_rep = replay_dep(coarse_dep)?;
@@ -323,13 +359,18 @@ fn main() -> galaxy::Result<()> {
     let drifted = |governed: bool| -> galaxy::Result<SchedReport> {
         let engine =
             SimEngine::from_deployment(&model, &env, deployment.clone(), NetParams::mbps(MBPS))?;
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 20.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 20.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         let mut sched = Scheduler::with_config(engine, cfg);
         if governed {
             sched = sched.with_governor(PlanGovernor::with_config(
                 deployment.clone(),
                 GovernorConfig { min_observations: 2, cooldown: 2, ..Default::default() },
-            ));
+            )?);
         }
         let warm = sched.run(&healthy_trace)?;
         assert_eq!(warm.metrics.replans, 0, "no drift, no replan");
@@ -354,5 +395,147 @@ fn main() -> galaxy::Result<()> {
         gov.metrics.service.p95_s(),
         stat.metrics.service.p95_s()
     );
+
+    // SLO-tiered admission under a 10x overload storm: Poisson arrivals
+    // at ten times the strictly-serial service rate, split across the
+    // interactive/batch/best-effort tiers. The shed-nothing baseline
+    // grinds through doomed work and interactive deadlines blow past;
+    // with the admission predictor on, provably-unmeetable interactive
+    // and best-effort requests are shed at arrival and batch requests
+    // ride the downgrade lane, so server slots go to work that can still
+    // meet its deadline.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let custom = flag_value(&argv, "--tier-mix").is_some() || flag_value(&argv, "--slo").is_some();
+    let weights = match flag_value(&argv, "--tier-mix") {
+        None => [0.3, 0.4, 0.3],
+        Some(raw) => {
+            let parts: Vec<f64> = raw
+                .split(':')
+                .map(|p| {
+                    p.parse::<f64>().map_err(|_| {
+                        GalaxyError::Config(format!("--tier-mix: not a number: {p}"))
+                    })
+                })
+                .collect::<galaxy::Result<_>>()?;
+            if parts.len() != 3 || parts.iter().any(|w| !w.is_finite() || *w < 0.0) {
+                return Err(GalaxyError::Config(format!(
+                    "--tier-mix wants three non-negative weights I:B:E, got `{raw}`"
+                )));
+            }
+            [parts[0], parts[1], parts[2]]
+        }
+    };
+    let slo_scale: f64 = match flag_value(&argv, "--slo") {
+        None => 1.0,
+        Some(raw) => raw
+            .parse()
+            .ok()
+            .filter(|s: &f64| s.is_finite() && *s > 0.0)
+            .ok_or_else(|| GalaxyError::Config(format!("--slo: not a positive number: {raw}")))?,
+    };
+
+    // The single-request service time S pins the storm to the testbed's
+    // actual capacity (service rate 1/S) rather than a hard-coded rate.
+    let s = {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
+        let probe = vec![Request { id: 0, seq_len: 200, arrival_s: 0.0, tier: Tier::default() }];
+        Scheduler::new(engine).run(&probe)?.completions[0].service_s
+    };
+    let mix: Vec<(f64, Tier, f64)> = [
+        (weights[0], Tier::Interactive, 4.0 * s * slo_scale),
+        (weights[1], Tier::Batch, 12.0 * s * slo_scale),
+        (weights[2], Tier::BestEffort, 6.0 * s * slo_scale),
+    ]
+    .into_iter()
+    .filter(|&(w, ..)| w > 0.0)
+    .collect();
+    if mix.is_empty() {
+        return Err(GalaxyError::Config("--tier-mix needs at least one positive weight".into()));
+    }
+    let storm = TraceGen::new(29)
+        .arrivals(Arrival::Poisson { rate_rps: 10.0 / s })
+        .fixed_len(200)
+        .tiers(&mix)
+        .queued(120);
+    let storm_run = |admission_control: bool| -> galaxy::Result<SchedReport> {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
+        let cfg = SchedulerConfig {
+            policy: Policy::EarliestDeadline,
+            max_in_flight: 1, // strictly serial: capacity is exactly 1/S
+            admission_control,
+            ..Default::default()
+        };
+        Scheduler::with_config(engine, cfg).run_trace(&storm)
+    };
+    let shed_nothing = storm_run(false)?;
+    let tiered = storm_run(true)?;
+
+    println!(
+        "\n10x overload storm: {} requests at {:.2} req/s against a serial \
+         service rate of {:.2} req/s (S = {})",
+        storm.len(),
+        10.0 / s,
+        1.0 / s,
+        fmt_secs(s),
+    );
+    let mut st = Table::new(
+        "per-tier SLO accounting — predictive admission on",
+        &["tier", "served", "met", "missed", "shed", "downgraded", "e2e p95", "goodput rps"],
+    );
+    for t in Tier::ALL {
+        let ts = tiered.metrics.tier(t);
+        st.row(&[
+            t.name().into(),
+            format!("{}", ts.served),
+            format!("{}", ts.deadlines_met),
+            format!("{}", ts.deadlines_missed),
+            format!("{}", ts.shed),
+            format!("{}", ts.downgraded),
+            fmt_secs(ts.e2e.p95_s()),
+            format!("{:.2}", tiered.metrics.tier_goodput_rps(t)),
+        ]);
+    }
+    println!("{}", st.render());
+    let tiered_good = tiered.metrics.tier_goodput_rps(Tier::Interactive);
+    let baseline_good = shed_nothing.metrics.tier_goodput_rps(Tier::Interactive);
+    println!(
+        "interactive goodput: shed-nothing {baseline_good:.2} req/s → tiered \
+         {tiered_good:.2} req/s ({} shed, {} downgraded across tiers)",
+        tiered.metrics.shed(),
+        tiered.metrics.downgraded(),
+    );
+    if custom {
+        println!("(custom --tier-mix/--slo: storm assertions skipped)");
+    } else {
+        assert_eq!(shed_nothing.metrics.shed(), 0, "baseline must shed nothing");
+        assert_eq!(
+            tiered.served() + tiered.rejections.len(),
+            storm.len(),
+            "every storm request must be served or shed"
+        );
+        assert!(
+            tiered.metrics.tier(Tier::Interactive).shed > 0
+                && tiered.metrics.tier(Tier::BestEffort).shed > 0,
+            "a 10x storm must shed unmeetable interactive/best-effort work"
+        );
+        assert!(
+            tiered.metrics.tier(Tier::Batch).downgraded > 0,
+            "batch work rides the downgrade lane, not the shed lane"
+        );
+        assert!(
+            tiered_good >= (1.0 / s) / 4.0,
+            "tiered interactive goodput {tiered_good} fell below (1/S)/4 = {}",
+            (1.0 / s) / 4.0
+        );
+        assert!(
+            tiered_good > baseline_good,
+            "tiered interactive goodput {tiered_good} !> shed-nothing {baseline_good}"
+        );
+    }
     Ok(())
+}
+
+/// `--flag value` lookup over the example's argv tail.
+fn flag_value(argv: &[String], name: &str) -> Option<String> {
+    argv.iter().position(|a| a == name).and_then(|i| argv.get(i + 1).cloned())
 }

@@ -240,7 +240,12 @@ fn bench_scheduler(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json
     let mut last_report = None;
     let (mean_s, _best) = bench_util::time_n(reps, || {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
-        let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 30.0, max_in_flight: 0 };
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 30.0,
+            max_in_flight: 0,
+            ..Default::default()
+        };
         last_report = Some(Scheduler::with_config(engine, cfg).run(&trace).expect("replay"));
     });
     let report = last_report.expect("at least one timed run");

@@ -23,8 +23,9 @@ use crate::planner::{Deployment, Planner, StrategyKind};
 use crate::profiler::Profiler;
 use crate::serving::{Policy, Scheduler, SchedulerConfig};
 use crate::sim::{DeviceClass, EdgeEnv, SimEngine};
+use crate::testkit::Pcg64;
 use crate::transport::WireFormat;
-use crate::workload::QnliWorkload;
+use crate::workload::{QnliWorkload, Tier};
 
 /// Parsed `--key value` flags plus the subcommand.
 pub struct Args {
@@ -100,8 +101,13 @@ USAGE:
                   [--wire f32|f16|i8]
   galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
                   [--policy fifo|sjf|edf] [--window N] [--slo SECONDS]
+                  [--tier-mix I:B:E] [--shed]
                   [--no-overlap] [--artifacts DIR] [--seed S]
                   [--wire f32|f16|i8]
+                  --policy accepts `deadline` as an alias for `edf`;
+                  --tier-mix draws interactive:batch:best-effort tiers at
+                  the given weights, --shed turns on predictive admission
+                  control (unmeetable requests shed or downgraded)
   galaxy lint     [--fix-allowlist]
                   checks the invariant rule table (docs/INVARIANTS.md)
                   against the crate sources; exits non-zero on violations
@@ -310,10 +316,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42)? as u64;
     let wire = WireFormat::parse(&args.get_or("wire", "f32"))?;
     let overlap = if args.has("no-overlap") { OverlapMode::None } else { OverlapMode::Tiled };
+    let tier_mix = parse_tier_mix(args.get("tier-mix"))?;
     let sched_cfg = SchedulerConfig {
         policy: Policy::parse(&args.get_or("policy", "fifo"))?,
         slo_s: args.get_f64("slo", 10.0)?,
         max_in_flight: args.get_usize("window", 0)?,
+        admission_control: args.has("shed"),
     };
     let dir = args
         .get("artifacts")
@@ -336,8 +344,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let cluster = RealCluster::spawn_with_wire(&model, &manifest, &plan, overlap, &flavor, seed, wire)?;
     let mut scheduler = Scheduler::with_config(cluster, sched_cfg);
-    let reqs = QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
-        .generate(n_requests, seed);
+    let mut reqs =
+        QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
+            .generate(n_requests, seed);
+    if let Some(weights) = tier_mix {
+        // Seeded weighted tier draw, decoupled from the length stream so
+        // the same seed serves the same lengths with or without tiers.
+        let mut rng = Pcg64::new(seed ^ 0x71e5);
+        let total: f64 = weights.iter().sum();
+        for r in &mut reqs {
+            let mut u = rng.uniform() as f64 * total;
+            r.tier = Tier::ALL
+                .into_iter()
+                .find(|t| {
+                    u -= weights[t.rank()];
+                    u <= 0.0
+                })
+                .unwrap_or(Tier::BestEffort);
+        }
+    }
     let report = scheduler.run(&reqs)?;
     for c in &report.completions {
         let sample: &[f32] = match &c.outcome.output {
@@ -381,7 +406,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wire.elem_bytes(),
         report.pjrt_calls()
     );
+    if tier_mix.is_some() || args.has("shed") {
+        let mut tt = Table::new(
+            "Per-tier SLO accounting".to_string(),
+            &["tier", "served", "met", "missed", "shed", "downgraded", "e2e p95", "goodput rps"],
+        );
+        for t in Tier::ALL {
+            let ts = m.tier(t);
+            tt.row(&[
+                t.name().to_string(),
+                format!("{}", ts.served),
+                format!("{}", ts.deadlines_met),
+                format!("{}", ts.deadlines_missed),
+                format!("{}", ts.shed),
+                format!("{}", ts.downgraded),
+                fmt_secs(ts.e2e.p95_s()),
+                format!("{:.2}", m.tier_goodput_rps(t)),
+            ]);
+        }
+        println!("{}", tt.render());
+        println!(
+            "overall: {} met, {} shed, {} downgraded, goodput {:.2} req/s",
+            m.deadlines_met(),
+            m.shed(),
+            m.downgraded(),
+            m.goodput_rps()
+        );
+    }
     Ok(())
+}
+
+/// Parse `--tier-mix I:B:E`: three non-negative weights in tier-rank
+/// order (interactive:batch:best-effort), at least one positive.
+fn parse_tier_mix(raw: Option<&str>) -> Result<Option<[f64; 3]>> {
+    let Some(raw) = raw else { return Ok(None) };
+    let parts: Vec<f64> = raw
+        .split(':')
+        .map(|p| {
+            p.parse::<f64>()
+                .map_err(|_| GalaxyError::Config(format!("--tier-mix: not a number: {p}")))
+        })
+        .collect::<Result<_>>()?;
+    if parts.len() != 3
+        || parts.iter().any(|w| !w.is_finite() || *w < 0.0)
+        || parts.iter().sum::<f64>() <= 0.0
+    {
+        return Err(GalaxyError::Config(format!(
+            "--tier-mix wants three non-negative weights I:B:E (one positive), got `{raw}`"
+        )));
+    }
+    Ok(Some([parts[0], parts[1], parts[2]]))
 }
 
 fn cmd_lint(args: &Args) -> Result<()> {
@@ -416,6 +490,16 @@ mod tests {
         assert!(a.has("no-overlap"));
         assert_eq!(a.get_usize("seq", 0).unwrap(), 64);
         assert_eq!(a.get_f64("bandwidth", 125.0).unwrap(), 125.0);
+    }
+
+    #[test]
+    fn tier_mix_flag_parses_and_rejects_garbage() {
+        assert_eq!(parse_tier_mix(None).unwrap(), None);
+        assert_eq!(parse_tier_mix(Some("3:5:2")).unwrap(), Some([3.0, 5.0, 2.0]));
+        assert_eq!(parse_tier_mix(Some("0.3:0.4:0.3")).unwrap(), Some([0.3, 0.4, 0.3]));
+        for bad in ["1:2", "1:2:3:4", "1:a:2", "0:0:0", "-1:2:2", "inf:1:1"] {
+            assert!(parse_tier_mix(Some(bad)).is_err(), "accepted `{bad}`");
+        }
     }
 
     #[test]

@@ -86,6 +86,7 @@ impl Engine for RealCluster {
             name: "pjrt",
             devices: self.n_devices(),
             ladder,
+            layers: self.model().layers.max(1),
             overlap: self.overlap(),
             // Per-layer worker protocol: request n+1 enters layer 0 as
             // soon as request n vacates it, so up to `layers` requests

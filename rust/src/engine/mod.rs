@@ -145,6 +145,11 @@ pub struct EngineCaps {
     /// ascending. A request longer than the last rung cannot be served by
     /// this engine.
     pub ladder: BucketLadder,
+    /// Transformer layer count of the executed schedule — what
+    /// multiplies the ladder's per-layer cost into a whole-request
+    /// service estimate (the serving admission predictor's conservative
+    /// serial bound). 1 for engines without a layered model (mocks).
+    pub layers: usize,
     /// Whether boundary synchronizations overlap with tile GEMMs.
     pub overlap: OverlapMode,
     /// How many consecutive requests can overlap through the HMP layer
@@ -187,6 +192,18 @@ impl EngineCaps {
     /// Largest admissible padded length (0 when no buckets exist).
     pub fn max_seq(&self) -> usize {
         self.ladder.max_seq()
+    }
+
+    /// Conservative whole-request service estimate for `seq_len` valid
+    /// tokens at its minimal admissible bucket: the ladder's per-layer
+    /// straggler cost times [`EngineCaps::layers`] — a *serial* (no
+    /// pipelining, no batching) upper bound on drain rate. `None` when no
+    /// bucket fits or the rung carries no cost estimate yet (bare
+    /// ladders; the real fabric before a rung has served).
+    pub fn est_service_s(&self, seq_len: usize) -> Option<f64> {
+        let (_, spec) = self.ladder.bucket_for(seq_len)?;
+        let s = spec.layer_cost_s * self.layers.max(1) as f64;
+        (s > 0.0).then_some(s)
     }
 }
 
@@ -388,6 +405,7 @@ mod tests {
             name: "test",
             devices: 2,
             ladder: BucketLadder::from_lens(buckets),
+            layers: 1,
             overlap: OverlapMode::Tiled,
             pipeline_depth: 4,
             link_slots: 2,
@@ -413,6 +431,23 @@ mod tests {
         assert_eq!(c.bucket_for(129), None);
         assert_eq!(c.max_seq(), 128);
         assert_eq!(caps(&[]).max_seq(), 0);
+    }
+
+    #[test]
+    fn est_service_scales_layer_cost_by_layers() {
+        let mut c = caps(&[64, 128]);
+        // Bare ladder (no cost estimates): no service estimate either.
+        assert_eq!(c.est_service_s(64), None);
+        c.ladder = BucketLadder::new(vec![
+            BucketSpec { seq_len: 64, layer_cost_s: 0.01 },
+            BucketSpec { seq_len: 128, layer_cost_s: 0.0 },
+        ]);
+        c.layers = 24;
+        assert_eq!(c.est_service_s(50), Some(0.24));
+        // A rung without a cost estimate yet stays estimate-free.
+        assert_eq!(c.est_service_s(100), None);
+        // Oversize: no bucket, no estimate.
+        assert_eq!(c.est_service_s(999), None);
     }
 
     #[test]

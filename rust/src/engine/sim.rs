@@ -39,6 +39,7 @@ impl Engine for SimEngine<'_> {
             name: "sim",
             devices: self.n_devices(),
             ladder,
+            layers: self.model().layers.max(1),
             overlap: self.overlap(),
             // Upper bound from schedule granularity: request n+1 may
             // enter layer 0 once request n has left it. The scheduler

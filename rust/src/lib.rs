@@ -35,7 +35,10 @@
 //! never dispatch on the concrete backend. [`serving`] builds on it: an
 //! admission queue with pluggable ordering (FIFO/SJF/EDF), padding to
 //! the nearest artifact bucket, and pipelined dispatch that overlaps
-//! consecutive requests through the HMP layer schedule.
+//! consecutive requests through the HMP layer schedule. Requests carry
+//! an SLO tier ([`workload::Tier`]); under overload the predictive
+//! admission controller ([`serving::admission`]) sheds or downgrades
+//! work that provably cannot meet its deadline.
 //!
 //! ## Paper-section → module map
 //!
@@ -84,4 +87,5 @@ pub mod prelude {
     pub use crate::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
     pub use crate::tensor::Tensor2;
     pub use crate::transport::{RingIo, RingLink};
+    pub use crate::workload::{Request, Tier};
 }

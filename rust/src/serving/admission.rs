@@ -1,0 +1,215 @@
+//! SLO-tiered admission control: the completion-time predictor.
+//!
+//! Under sustained overload an admission queue grows without bound; EDF
+//! then reorders hopeless work but nothing sheds it, so *every* tier's
+//! deadline-hit rate collapses together. [`Admission`] decides at the
+//! moment a request arrives whether its deadline is **provably
+//! unmeetable** under the engine's own cost model, and if so removes it
+//! from the contended queue — shedding it ([`Tier::Interactive`] /
+//! [`Tier::BestEffort`]) or downgrading it to best-effort
+//! ([`Tier::Batch`]) — before it can poison the backlog for requests
+//! whose deadlines are still reachable.
+//!
+//! ## The predictor
+//!
+//! The per-request service estimate comes from the active deployment's
+//! bucket ladder: the rung's per-layer straggler cost times the model's
+//! layer count ([`EngineCaps::est_service_s`] — modeled by the
+//! simulator, measured by the real fabric once a rung has served). The
+//! predicted finish of a candidate admitted at `now` is
+//!
+//! ```text
+//! finish ≤ now + in-flight drain + Σ service(queued, same-or-higher tier) + service(own)
+//! ```
+//!
+//! Every term is an over-estimate of the work that can actually delay
+//! the candidate:
+//!
+//! * the serial sum over the backlog ignores request pipelining and
+//!   continuous batching, both of which only *shorten* the drain (the
+//!   scheduler's modeled stage gap is `max(compute, span/stages) ≤
+//!   span`, and batch mates share one span);
+//! * policies are tier-major, so queued lower-priority work cannot delay
+//!   the candidate and is excluded, while counting *all* same-tier
+//!   backlog assumes the candidate dispatches last among its peers;
+//! * in-flight work is counted in full even though it is partially done.
+//!
+//! The prediction is therefore **conservative**: a request it admits as
+//! meetable can only finish *earlier* than predicted under a truthful
+//! cost profile, and — because the scheduler never sheds after admission
+//! — an admitted request is never shed later (docs/INVARIANTS.md). The
+//! price of conservatism is over-shedding near the boundary, never a
+//! broken promise to an admitted request.
+//!
+//! Engines whose ladder carries no cost estimate yet (bare mock ladders;
+//! the real fabric before a rung has served) yield no prediction and the
+//! controller **fails open** — every request is admitted, exactly the
+//! pre-admission-control behaviour.
+
+use crate::engine::EngineCaps;
+use crate::serving::policy::Queued;
+use crate::workload::Tier;
+
+/// Outcome of an admission assessment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// The deadline is not provably unmeetable: admit.
+    Admit,
+    /// Provably unmeetable, tier [`Tier::Batch`]: keep the work, waive
+    /// its priority — re-admit on the target tier (the original deadline
+    /// is kept for per-tier accounting, where it counts as missed).
+    Downgrade { to: Tier, predicted_finish_s: f64 },
+    /// Provably unmeetable, sheddable tier: reject at admission.
+    Shed { predicted_finish_s: f64 },
+}
+
+/// Completion-time predictor over an engine's capability metadata (see
+/// the module docs for the estimate and its conservatism argument).
+#[derive(Clone, Debug)]
+pub struct Admission {
+    caps: EngineCaps,
+}
+
+impl Admission {
+    /// Build the predictor from the engine's advertised capabilities
+    /// (the active deployment's bucket ladder and layer count).
+    pub fn from_caps(caps: &EngineCaps) -> Self {
+        Self { caps: caps.clone() }
+    }
+
+    /// Conservative service estimate for one request (`None` when the
+    /// minimal admissible rung carries no cost estimate — fail open).
+    pub fn est_service_s(&self, seq_len: usize) -> Option<f64> {
+        self.caps.est_service_s(seq_len)
+    }
+
+    /// Upper bound on the finish instant of `q` admitted at `now_s` with
+    /// `inflight_s` seconds of dispatched-but-unfinished work and the
+    /// given admission queue ahead of it. `None` when the engine has no
+    /// cost estimate for `q`'s rung.
+    pub fn predicted_finish_s(
+        &self,
+        q: &Queued,
+        now_s: f64,
+        inflight_s: f64,
+        queue: &[Queued],
+    ) -> Option<f64> {
+        let own = self.est_service_s(q.seq_len)?;
+        // Tier-major policies: only same-or-higher-priority backlog can
+        // dispatch ahead of the candidate. Queued requests without a
+        // cost estimate contribute nothing (under-counting them keeps
+        // the bound one-sided only per-rung; in practice a ladder has
+        // estimates for all rungs or none).
+        let backlog: f64 = queue
+            .iter()
+            .filter(|p| p.tier.rank() <= q.tier.rank())
+            .filter_map(|p| self.est_service_s(p.seq_len))
+            .sum();
+        Some(now_s + inflight_s.max(0.0) + backlog + own)
+    }
+
+    /// Assess one candidate at admission time.
+    pub fn assess(&self, q: &Queued, now_s: f64, inflight_s: f64, queue: &[Queued]) -> Decision {
+        let Some(predicted) = self.predicted_finish_s(q, now_s, inflight_s, queue) else {
+            return Decision::Admit;
+        };
+        if predicted <= q.deadline_s + 1e-9 {
+            return Decision::Admit;
+        }
+        match q.tier {
+            // A late interactive answer is worthless and its service
+            // time would push later deadlines past their own SLOs.
+            Tier::Interactive => Decision::Shed { predicted_finish_s: predicted },
+            // Batch work must still complete; only the latency target
+            // is soft — demote it below everything deadline-bearing.
+            Tier::Batch => {
+                Decision::Downgrade { to: Tier::BestEffort, predicted_finish_s: predicted }
+            }
+            Tier::BestEffort => Decision::Shed { predicted_finish_s: predicted },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{BucketLadder, BucketSpec, EngineCaps};
+    use crate::parallel::OverlapMode;
+
+    fn caps(layer_cost_s: f64) -> EngineCaps {
+        EngineCaps {
+            name: "admission-test",
+            devices: 2,
+            ladder: BucketLadder::new(vec![
+                BucketSpec { seq_len: 64, layer_cost_s },
+                BucketSpec { seq_len: 128, layer_cost_s: layer_cost_s * 2.0 },
+            ]),
+            layers: 10,
+            overlap: OverlapMode::Tiled,
+            pipeline_depth: 4,
+            link_slots: 2,
+            max_batch: 1,
+            deployment: None,
+            wire: crate::transport::WireFormat::F32,
+        }
+    }
+
+    fn q(id: u64, tier: Tier, deadline_s: f64) -> Queued {
+        Queued { id, seq_len: 64, arrival_s: 0.0, deadline_s, tier, arrival_idx: id }
+    }
+
+    #[test]
+    fn cost_free_ladders_fail_open() {
+        let adm = Admission::from_caps(&caps(0.0));
+        assert_eq!(adm.est_service_s(64), None);
+        // Even a deadline already in the past admits: no estimate, no
+        // proof of unmeetability.
+        assert_eq!(adm.assess(&q(0, Tier::BestEffort, -1.0), 5.0, 9.0, &[]), Decision::Admit);
+    }
+
+    #[test]
+    fn prediction_sums_inflight_backlog_and_own_service() {
+        // 10 layers x 0.01 s = 0.1 s per 64-token request.
+        let adm = Admission::from_caps(&caps(0.01));
+        assert_eq!(adm.est_service_s(64), Some(0.1));
+        let backlog = vec![q(1, Tier::Interactive, 9.0), q(2, Tier::Interactive, 9.0)];
+        let p = adm.predicted_finish_s(&q(0, Tier::Interactive, 9.0), 1.0, 0.05, &backlog);
+        assert!((p.unwrap() - (1.0 + 0.05 + 0.2 + 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_priority_backlog_never_delays_the_candidate() {
+        let adm = Admission::from_caps(&caps(0.01));
+        // 0.1 s of own service against a 0.15 s deadline: meetable as
+        // long as the queued best-effort work (which a tier-major policy
+        // dispatches after us) is excluded from the backlog.
+        let backlog: Vec<Queued> = (1..=8).map(|i| q(i, Tier::BestEffort, 99.0)).collect();
+        let cand = q(0, Tier::Interactive, 0.15);
+        assert_eq!(adm.assess(&cand, 0.0, 0.0, &backlog), Decision::Admit);
+        // The same backlog on the candidate's own tier makes the
+        // deadline provably unmeetable.
+        let peers: Vec<Queued> = (1..=8).map(|i| q(i, Tier::Interactive, 99.0)).collect();
+        assert!(matches!(adm.assess(&cand, 0.0, 0.0, &peers), Decision::Shed { .. }));
+    }
+
+    #[test]
+    fn verdicts_follow_the_tier() {
+        let adm = Admission::from_caps(&caps(0.01));
+        // Deadline 0.05 s < own service 0.1 s: unmeetable even with an
+        // empty system.
+        let sheds = |t: Tier| adm.assess(&q(0, t, 0.05), 0.0, 0.0, &[]);
+        assert!(matches!(sheds(Tier::Interactive), Decision::Shed { .. }));
+        assert!(matches!(sheds(Tier::BestEffort), Decision::Shed { .. }));
+        match sheds(Tier::Batch) {
+            Decision::Downgrade { to, predicted_finish_s } => {
+                assert_eq!(to, Tier::BestEffort);
+                assert!((predicted_finish_s - 0.1).abs() < 1e-12);
+            }
+            other => panic!("batch must downgrade, got {other:?}"),
+        }
+        // A meetable deadline admits on every tier.
+        for t in Tier::ALL {
+            assert_eq!(adm.assess(&q(0, t, 0.5), 0.0, 0.0, &[]), Decision::Admit);
+        }
+    }
+}

@@ -39,6 +39,7 @@
 //! calibrate the new one).
 
 use crate::engine::InferOutcome;
+use crate::error::{GalaxyError, Result};
 use crate::planner::Deployment;
 
 /// Replanning knobs.
@@ -53,8 +54,25 @@ pub struct GovernorConfig {
     pub min_observations: usize,
     /// Completions between consecutive replans (also gates the first).
     pub cooldown: usize,
-    /// EWMA weight of the newest sample (0 < ewma <= 1).
+    /// EWMA weight of the newest sample (0 < ewma <= 1; validated at
+    /// construction).
     pub ewma: f64,
+}
+
+impl GovernorConfig {
+    /// Enforce the documented domain. `ewma = 0` would silently freeze
+    /// drift tracking (every observation discarded, the governor
+    /// permanently blind — the old code clamped into exactly that state);
+    /// NaN or > 1 corrupt the average.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ewma > 0.0 && self.ewma <= 1.0) {
+            return Err(GalaxyError::Config(format!(
+                "governor ewma weight must be in (0, 1], got {}",
+                self.ewma
+            )));
+        }
+        Ok(())
+    }
 }
 
 impl Default for GovernorConfig {
@@ -92,10 +110,18 @@ impl PlanGovernor {
     /// carry planning context ([`Deployment::plan`]); a context-less one
     /// never replans (every observation is a no-op).
     pub fn new(deployment: Deployment) -> Self {
-        Self::with_config(deployment, GovernorConfig::default())
+        // The default config is statically valid.
+        Self::build(deployment, GovernorConfig::default())
     }
 
-    pub fn with_config(deployment: Deployment, cfg: GovernorConfig) -> Self {
+    /// Govern with explicit knobs; rejects configs outside their
+    /// documented domain ([`GovernorConfig::validate`]).
+    pub fn with_config(deployment: Deployment, cfg: GovernorConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self::build(deployment, cfg))
+    }
+
+    fn build(deployment: Deployment, cfg: GovernorConfig) -> Self {
         let d = deployment.n_devices();
         Self {
             cfg,
@@ -164,7 +190,9 @@ impl PlanGovernor {
             }
             return None;
         };
-        let a = self.cfg.ewma.clamp(0.0, 1.0);
+        // Domain enforced at construction — no clamp: clamping 0.0 "into
+        // range" silently froze drift tracking forever.
+        let a = self.cfg.ewma;
         for (i, (&r, &base)) in ratios.iter().zip(baseline.iter()).enumerate() {
             self.drift[i] = (1.0 - a) * self.drift[i] + a * (r / base);
         }
@@ -228,7 +256,7 @@ mod tests {
         let profile = Profiler::analytic(&model, &env, 284).profile();
         let dep =
             Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[284]).unwrap();
-        (PlanGovernor::with_config(dep.clone(), cfg), dep)
+        (PlanGovernor::with_config(dep.clone(), cfg).unwrap(), dep)
     }
 
     /// An outcome whose per-device busy time is `factor[i]` times the
@@ -315,6 +343,30 @@ mod tests {
         }
         assert!(swapped.is_some(), "2x drift over the calibrated normal must replan");
         assert_eq!(gov.replans(), 1);
+    }
+
+    #[test]
+    fn out_of_domain_ewma_is_a_config_error() {
+        // Regression: the docs promised 0 < ewma <= 1 but `observe`
+        // clamped with clamp(0.0, 1.0), so ewma = 0.0 was accepted and
+        // silently froze drift tracking (every sample weighted 0). Now
+        // rejected at construction, along with the rest of the domain.
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let profile = Profiler::analytic(&model, &env, 284).profile();
+        let dep =
+            Deployment::plan(StrategyKind::Heuristic, &model, &env, &profile, &[284]).unwrap();
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let cfg = GovernorConfig { ewma: bad, ..Default::default() };
+            let err = PlanGovernor::with_config(dep.clone(), cfg).unwrap_err();
+            assert!(
+                matches!(err, crate::error::GalaxyError::Config(_)),
+                "ewma {bad} must be a Config error, got {err}"
+            );
+        }
+        // The boundary that is in-domain still constructs.
+        let cfg = GovernorConfig { ewma: 1.0, ..Default::default() };
+        assert!(PlanGovernor::with_config(dep, cfg).is_ok());
     }
 
     #[test]

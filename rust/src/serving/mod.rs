@@ -13,6 +13,13 @@
 //!   for serial-shim engines, measured start/finish instants for engines
 //!   with native request pipelining (the PJRT cluster's per-layer
 //!   worker protocol).
+//! * [`admission::Admission`] — SLO-tiered admission control: requests
+//!   carry a service tier ([`Tier`]: interactive > batch > best-effort)
+//!   that leads every policy's ordering key, and a conservative
+//!   completion-time predictor (ladder per-layer cost × layer count,
+//!   plus queue backlog and in-flight work) sheds or downgrades
+//!   provably-unmeetable requests *at admission* — never after — so
+//!   interactive goodput survives sustained overload.
 //! * [`governor::PlanGovernor`] — measurement-driven replanning: folds
 //!   the engines' per-device busy telemetry back into the planning
 //!   profile and swaps the active [`crate::planner::Deployment`] at a
@@ -31,13 +38,17 @@
 //! padded-token waste and batch occupancy reported by
 //! [`crate::metrics::ServeMetrics`].
 
+pub mod admission;
 pub mod governor;
 pub mod policy;
 pub mod scheduler;
 
+pub use admission::{Admission, Decision};
 pub use governor::{GovernorConfig, PlanGovernor};
 pub use policy::{Policy, Queued};
-pub use scheduler::{Completion, Rejection, SchedReport, Scheduler, SchedulerConfig};
+pub use scheduler::{Completion, RejectKind, Rejection, SchedReport, Scheduler, SchedulerConfig};
+
+pub use crate::workload::Tier;
 
 use crate::error::{GalaxyError, Result};
 use crate::tensor::Tensor2;

@@ -4,6 +4,12 @@
 //! admission queue; whenever the engine pipeline can accept a new request
 //! the active policy picks which queued request enters next.
 //!
+//! Every policy is *tier-major*: the service tier ([`Tier`]) leads each
+//! ordering key, so a queued interactive request always dispatches
+//! before a queued batch one and batch before best-effort — the policy
+//! only orders *within* a tier. Untagged traffic (all requests on the
+//! default tier) is ordered exactly as before tiers existed.
+//!
 //! Tie-breaking is deterministic and *stable by arrival index*: the
 //! scheduler stamps every admitted request with its position in the
 //! arrival order ([`Queued::arrival_idx`]) and every policy's key ends
@@ -13,6 +19,7 @@
 //! assigned (duplicate or non-monotone ids used to leak into the order).
 
 use crate::error::{GalaxyError, Result};
+use crate::workload::Tier;
 
 /// One queued request as the policy sees it.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -24,6 +31,10 @@ pub struct Queued {
     pub arrival_s: f64,
     /// Completion deadline (arrival + SLO), seconds from trace start.
     pub deadline_s: f64,
+    /// SLO class: the leading key of every policy (interactive before
+    /// batch before best-effort), and what the admission predictor sheds
+    /// or downgrades by under overload.
+    pub tier: Tier,
     /// Position in the arrival order, stamped by the scheduler at
     /// admission (callers constructing traces may leave it 0 — the
     /// scheduler overwrites it). The final tie-break key of every policy.
@@ -61,23 +72,24 @@ impl Policy {
         }
     }
 
-    /// Index of the queued request to dispatch next. Ties break by
-    /// arrival time then arrival index, so every policy is deterministic
-    /// and independent of queue-internal order and caller-assigned ids.
+    /// Index of the queued request to dispatch next. The service tier
+    /// leads every key (higher-priority tiers dispatch first); ties then
+    /// break by arrival time then arrival index, so every policy is
+    /// deterministic and independent of queue-internal order and
+    /// caller-assigned ids.
     pub fn pick(&self, queue: &[Queued]) -> usize {
         assert!(!queue.is_empty(), "policy over empty queue");
-        let key = |q: &Queued| -> (f64, f64, u64) {
+        let key = |q: &Queued| -> (usize, f64, f64, u64) {
+            let t = q.tier.rank();
             match self {
-                Policy::Fifo => (q.arrival_s, 0.0, q.arrival_idx),
-                Policy::ShortestJobFirst => (q.seq_len as f64, q.arrival_s, q.arrival_idx),
-                Policy::EarliestDeadline => (q.deadline_s, q.arrival_s, q.arrival_idx),
+                Policy::Fifo => (t, q.arrival_s, 0.0, q.arrival_idx),
+                Policy::ShortestJobFirst => (t, q.seq_len as f64, q.arrival_s, q.arrival_idx),
+                Policy::EarliestDeadline => (t, q.deadline_s, q.arrival_s, q.arrival_idx),
             }
         };
         let mut best = 0;
         for i in 1..queue.len() {
-            let (a, b, c) = key(&queue[i]);
-            let (ba, bb, bc) = key(&queue[best]);
-            if (a, b, c) < (ba, bb, bc) {
+            if key(&queue[i]) < key(&queue[best]) {
                 best = i;
             }
         }
@@ -90,7 +102,7 @@ mod tests {
     use super::*;
 
     fn q(id: u64, seq_len: usize, arrival_s: f64, deadline_s: f64, arrival_idx: u64) -> Queued {
-        Queued { id, seq_len, arrival_s, deadline_s, arrival_idx }
+        Queued { id, seq_len, arrival_s, deadline_s, tier: Tier::default(), arrival_idx }
     }
 
     /// Drain a queue through repeated picks; returns dispatch order.
@@ -151,6 +163,24 @@ mod tests {
                 order
             };
             assert_eq!(idxs, vec![0, 1, 2], "{p:?} must follow arrival indices");
+        }
+    }
+
+    #[test]
+    fn tiers_lead_every_policy_key() {
+        // A best-effort request with the earliest deadline / shortest job
+        // / earliest arrival still dispatches after every interactive
+        // one: the tier is the leading key of every policy.
+        let mut queue = vec![
+            q(0, 10, 0.0, 0.5, 0),
+            q(1, 500, 0.2, 9.0, 1),
+            q(2, 400, 0.3, 8.0, 2),
+        ];
+        queue[0].tier = Tier::BestEffort;
+        queue[1].tier = Tier::Interactive;
+        queue[2].tier = Tier::Batch;
+        for p in [Policy::Fifo, Policy::ShortestJobFirst, Policy::EarliestDeadline] {
+            assert_eq!(drain(p, queue.clone()), vec![1, 2, 0], "{p:?}");
         }
     }
 

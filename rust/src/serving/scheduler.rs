@@ -37,8 +37,17 @@
 //! backends without dispatching on the concrete engine type.
 //!
 //! Malformed traces are rejected at admission: a request whose arrival
-//! timestamp is NaN, infinite, or negative becomes a [`Rejection`]
-//! (never a panic inside a sort comparator).
+//! timestamp is NaN, infinite, or negative becomes a [`Rejection`], and
+//! so does one whose deadline is NaN, infinite, or earlier than its own
+//! arrival (never a panic inside a sort comparator, never a deadline no
+//! schedule could meet).
+//!
+//! With [`SchedulerConfig::admission_control`] on, the SLO-tiered
+//! admission predictor ([`crate::serving::admission::Admission`])
+//! additionally sheds or downgrades provably-unmeetable requests at
+//! admission — see that module for the predictor and its conservatism
+//! contract. Shedding happens *only* at admission: once admitted, a
+//! request is always served.
 
 use std::collections::{HashMap, HashSet};
 
@@ -46,9 +55,10 @@ use crate::engine::{Engine, InferOutcome, InferRequest, SubmittedBatch};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::ServeMetrics;
 use crate::planner::Deployment;
+use crate::serving::admission::{Admission, Decision};
 use crate::serving::governor::PlanGovernor;
 use crate::serving::policy::{Policy, Queued};
-use crate::workload::Request;
+use crate::workload::{Request, Tier};
 
 /// Scheduler tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -62,11 +72,18 @@ pub struct SchedulerConfig {
     /// engine's pipeline depth allows". 1 forces strictly serial service
     /// (the old FIFO server behaviour, useful as a baseline).
     pub max_in_flight: usize,
+    /// Predictive load shedding: when on, each arrival is assessed by the
+    /// tiered admission predictor and provably-unmeetable requests are
+    /// shed (interactive / best-effort) or downgraded to best-effort
+    /// (batch) instead of queuing. Off by default — the shed-nothing
+    /// baseline. Engines without ladder cost estimates fail open either
+    /// way.
+    pub admission_control: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { policy: Policy::Fifo, slo_s: 10.0, max_in_flight: 0 }
+        Self { policy: Policy::Fifo, slo_s: 10.0, max_in_flight: 0, admission_control: false }
     }
 }
 
@@ -89,7 +106,27 @@ pub struct Completion {
     pub queueing_s: f64,
     /// Engine service time (pipeline stalls excluded).
     pub service_s: f64,
+    /// Tier the request was *served* on (a downgraded batch request
+    /// completes as best-effort).
+    pub tier: Tier,
+    /// The request's deadline — kept through downgrades, so per-tier
+    /// accounting judges a downgraded request against its original SLO.
+    pub deadline_s: f64,
     pub outcome: InferOutcome,
+}
+
+/// Why a request was rejected at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Arrival timestamp NaN, infinite, or negative.
+    MalformedArrival,
+    /// Deadline NaN, infinite, or earlier than the arrival.
+    MalformedDeadline,
+    /// Sequence exceeds the largest artifact bucket.
+    Oversize,
+    /// Predictively shed: the admission predictor proved the deadline
+    /// unmeetable ([`SchedulerConfig::admission_control`]).
+    Shed,
 }
 
 /// A request the scheduler could not admit.
@@ -97,6 +134,8 @@ pub struct Completion {
 pub struct Rejection {
     pub id: u64,
     pub seq_len: usize,
+    pub tier: Tier,
+    pub kind: RejectKind,
     pub reason: String,
 }
 
@@ -190,6 +229,7 @@ impl<E: Engine> Scheduler<E> {
                 seq_len: r.seq_len,
                 arrival_s: r.arrival_s,
                 deadline_s: r.arrival_s + slo,
+                tier: r.tier,
                 arrival_idx: 0, // stamped at admission
             })
             .collect();
@@ -212,17 +252,35 @@ impl<E: Engine> Scheduler<E> {
         let mut report = SchedReport::default();
         // Trace validation: a NaN/infinite/negative arrival timestamp is
         // a malformed request — reject it up front rather than letting it
-        // poison a sort comparator or the admission clock.
+        // poison a sort comparator or the admission clock. Deadlines get
+        // the same treatment: NaN/infinite deadlines would corrupt EDF's
+        // ordering key and the admission predictor's comparison, and a
+        // deadline earlier than its own arrival is unmeetable by
+        // construction (regression: these used to pass unvalidated while
+        // NaN arrivals were rejected).
         let mut pending: Vec<Queued> = Vec::with_capacity(trace.len());
         for q in trace {
-            if q.arrival_s.is_finite() && q.arrival_s >= 0.0 {
-                pending.push(*q);
-            } else {
+            if !(q.arrival_s.is_finite() && q.arrival_s >= 0.0) {
                 report.rejections.push(Rejection {
                     id: q.id,
                     seq_len: q.seq_len,
+                    tier: q.tier,
+                    kind: RejectKind::MalformedArrival,
                     reason: format!("malformed arrival timestamp {}", q.arrival_s),
                 });
+            } else if !q.deadline_s.is_finite() || q.deadline_s < q.arrival_s {
+                report.rejections.push(Rejection {
+                    id: q.id,
+                    seq_len: q.seq_len,
+                    tier: q.tier,
+                    kind: RejectKind::MalformedDeadline,
+                    reason: format!(
+                        "malformed deadline {} (arrival {})",
+                        q.deadline_s, q.arrival_s
+                    ),
+                });
+            } else {
+                pending.push(*q);
             }
         }
         pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
@@ -251,6 +309,10 @@ impl<E: Engine> Scheduler<E> {
         // Governor-refreshed deployment awaiting a request boundary.
         let mut pending_swap: Option<Deployment> = None;
         let mut replans = 0usize;
+        // Tiered admission predictor (opt-in). Downgrades are counted
+        // against the request's *original* tier.
+        let admission = self.cfg.admission_control.then(|| Admission::from_caps(&caps));
+        let mut downgrades = [0usize; Tier::COUNT];
 
         while next < pending.len() || !queue.is_empty() {
             // Engines executing in real time advance the clock on their
@@ -263,21 +325,57 @@ impl<E: Engine> Scheduler<E> {
             // where a reordering policy (SJF) could starve them forever
             // behind shorter work instead of failing fast.
             while next < pending.len() && pending[next].arrival_s <= t + 1e-12 {
-                let q = pending[next];
+                let mut q = pending[next];
                 next += 1;
-                if caps.bucket_for(q.seq_len).is_some() {
-                    queue.push(q);
-                } else {
+                if caps.bucket_for(q.seq_len).is_none() {
                     report.rejections.push(Rejection {
                         id: q.id,
                         seq_len: q.seq_len,
+                        tier: q.tier,
+                        kind: RejectKind::Oversize,
                         reason: format!(
                             "request of {} tokens exceeds the largest artifact bucket ({})",
                             q.seq_len,
                             caps.max_seq()
                         ),
                     });
+                    continue;
                 }
+                if let Some(adm) = &admission {
+                    // Unfinished work ahead of the candidate: the modeled
+                    // timeline's tail beyond `t`, plus every native
+                    // in-flight submission counted at its full estimate
+                    // (both over-estimates — see the admission module's
+                    // conservatism argument).
+                    let modeled_tail = finishes.last().map_or(0.0, |&f| (f - t).max(0.0));
+                    let native_tail: f64 = in_flight
+                        .values()
+                        .filter_map(|(p, _, _)| adm.est_service_s(p.seq_len))
+                        .sum();
+                    match adm.assess(&q, t.max(q.arrival_s), modeled_tail + native_tail, &queue)
+                    {
+                        Decision::Admit => {}
+                        Decision::Downgrade { to, predicted_finish_s: _ } => {
+                            downgrades[q.tier.rank()] += 1;
+                            q.tier = to;
+                        }
+                        Decision::Shed { predicted_finish_s } => {
+                            report.rejections.push(Rejection {
+                                id: q.id,
+                                seq_len: q.seq_len,
+                                tier: q.tier,
+                                kind: RejectKind::Shed,
+                                reason: format!(
+                                    "shed at admission: predicted finish {:.3}s exceeds \
+                                     deadline {:.3}s",
+                                    predicted_finish_s, q.deadline_s
+                                ),
+                            });
+                            continue;
+                        }
+                    }
+                }
+                queue.push(q);
             }
             // Governor swap: install the refreshed deployment at a
             // request boundary — nothing in the engine's native pipeline
@@ -456,6 +554,8 @@ impl<E: Engine> Scheduler<E> {
                     finish_s: finish,
                     queueing_s: start - q.arrival_s,
                     service_s: outcome.service_s,
+                    tier: q.tier,
+                    deadline_s: q.deadline_s,
                     outcome,
                 });
             }
@@ -470,7 +570,7 @@ impl<E: Engine> Scheduler<E> {
         self.apply_pending_swap(&mut pending_swap, &mut replans);
 
         report.peak_in_flight = peak_in_flight(&report.completions);
-        report.metrics = build_metrics(&report);
+        report.metrics = build_metrics(&report, &downgrades);
         report.metrics.replans = replans;
         Ok(report)
     }
@@ -562,6 +662,8 @@ impl<E: Engine> Scheduler<E> {
             // arrival stamp; queueing delay is never negative.
             queueing_s: (start - q.arrival_s).max(0.0),
             service_s: outcome.service_s,
+            tier: q.tier,
+            deadline_s: q.deadline_s,
             outcome,
         });
         Ok(true)
@@ -587,7 +689,7 @@ fn peak_in_flight(completions: &[Completion]) -> usize {
     peak.max(0) as usize
 }
 
-fn build_metrics(report: &SchedReport) -> ServeMetrics {
+fn build_metrics(report: &SchedReport, downgrades: &[usize; Tier::COUNT]) -> ServeMetrics {
     let mut m = ServeMetrics {
         served: report.completions.len(),
         rejected: report.rejections.len(),
@@ -607,6 +709,24 @@ fn build_metrics(report: &SchedReport) -> ServeMetrics {
         batch_ids.insert(c.batch);
         first_arrival = first_arrival.min(c.arrival_s);
         last_finish = last_finish.max(c.finish_s);
+        // Per-tier accounting on the *served* tier, against the
+        // request's original deadline (downgrades keep it).
+        let ts = &mut m.tiers[c.tier.rank()];
+        ts.served += 1;
+        ts.e2e.record(c.finish_s - c.arrival_s);
+        if c.finish_s <= c.deadline_s + 1e-9 {
+            ts.deadlines_met += 1;
+        } else {
+            ts.deadlines_missed += 1;
+        }
+    }
+    for r in &report.rejections {
+        if r.kind == RejectKind::Shed {
+            m.tiers[r.tier.rank()].shed += 1;
+        }
+    }
+    for (k, &d) in downgrades.iter().enumerate() {
+        m.tiers[k].downgraded = d;
     }
     m.batches = batch_ids.len();
     if !report.completions.is_empty() {
@@ -642,6 +762,7 @@ mod tests {
                 name: "mock",
                 devices: 2,
                 ladder: BucketLadder::from_lens(&[64, 128, 256]),
+                layers: 1,
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
                 link_slots: 1,
@@ -674,7 +795,12 @@ mod tests {
     fn burst(lens: &[usize]) -> Vec<Request> {
         lens.iter()
             .enumerate()
-            .map(|(i, &l)| Request { id: i as u64, seq_len: l, arrival_s: 0.0 })
+            .map(|(i, &l)| Request {
+                id: i as u64,
+                seq_len: l,
+                arrival_s: 0.0,
+                tier: Tier::default(),
+            })
             .collect()
     }
 
@@ -775,8 +901,8 @@ mod tests {
         assert_eq!(rep.metrics.wall_span_s, 0.0);
         // Oversize stragglers arriving after servable work, too.
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0 },
-            Request { id: 1, seq_len: 999, arrival_s: 5.0 },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 1, seq_len: 999, arrival_s: 5.0, tier: Tier::default() },
         ];
         let rep = Scheduler::new(MockEngine::new(4)).run(&reqs).unwrap();
         assert_eq!(rep.served(), 1);
@@ -803,11 +929,15 @@ mod tests {
 
     #[test]
     fn edf_honors_explicit_deadlines() {
-        let trace = vec![
-            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 9.0, arrival_idx: 0 },
-            Queued { id: 1, seq_len: 64, arrival_s: 0.0, deadline_s: 0.1, arrival_idx: 0 },
-            Queued { id: 2, seq_len: 64, arrival_s: 0.0, deadline_s: 1.0, arrival_idx: 0 },
-        ];
+        let q = |id: u64, deadline_s: f64| Queued {
+            id,
+            seq_len: 64,
+            arrival_s: 0.0,
+            deadline_s,
+            tier: Tier::default(),
+            arrival_idx: 0,
+        };
+        let trace = vec![q(0, 9.0), q(1, 0.1), q(2, 1.0)];
         let cfg = SchedulerConfig {
             policy: Policy::EarliestDeadline,
             max_in_flight: 1,
@@ -821,8 +951,8 @@ mod tests {
     #[test]
     fn fifo_never_dispatches_before_arrival() {
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0 },
-            Request { id: 1, seq_len: 64, arrival_s: 5.0 },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 1, seq_len: 64, arrival_s: 5.0, tier: Tier::default() },
         ];
         let rep = Scheduler::new(MockEngine::new(8)).run(&reqs).unwrap();
         assert!(rep.completions[1].start_s >= 5.0);
@@ -880,6 +1010,7 @@ mod tests {
                 name: "mock-async",
                 devices: 2,
                 ladder: BucketLadder::from_lens(&[64, 128, 256]),
+                layers: 1,
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
                 link_slots: 2,
@@ -959,18 +1090,15 @@ mod tests {
         // Regression: NaN arrivals used to panic inside the admission
         // sort's `partial_cmp().unwrap()`; negative ones predate the
         // trace clock. Both are admission rejections now.
-        let trace = vec![
-            Queued { id: 0, seq_len: 64, arrival_s: 0.0, deadline_s: 10.0, arrival_idx: 0 },
-            Queued { id: 1, seq_len: 64, arrival_s: f64::NAN, deadline_s: 10.0, arrival_idx: 0 },
-            Queued { id: 2, seq_len: 64, arrival_s: -3.0, deadline_s: 10.0, arrival_idx: 0 },
-            Queued {
-                id: 3,
-                seq_len: 64,
-                arrival_s: f64::INFINITY,
-                deadline_s: 10.0,
-                arrival_idx: 0,
-            },
-        ];
+        let q = |id: u64, arrival_s: f64| Queued {
+            id,
+            seq_len: 64,
+            arrival_s,
+            deadline_s: 10.0,
+            tier: Tier::default(),
+            arrival_idx: 0,
+        };
+        let trace = vec![q(0, 0.0), q(1, f64::NAN), q(2, -3.0), q(3, f64::INFINITY)];
         let rep = Scheduler::new(MockEngine::new(4)).run_trace(&trace).unwrap();
         assert_eq!(rep.served(), 1);
         assert_eq!(rep.completions[0].id, 0);
@@ -979,19 +1107,81 @@ mod tests {
         assert_eq!(rejected, vec![1, 2, 3]);
         for r in &rep.rejections {
             assert!(r.reason.contains("malformed arrival"), "reason: {}", r.reason);
+            assert_eq!(r.kind, RejectKind::MalformedArrival);
         }
         // An entirely malformed trace terminates cleanly too.
         let rep = Scheduler::new(MockEngine::new(4))
-            .run_trace(&[Queued {
-                id: 9,
-                seq_len: 64,
-                arrival_s: f64::NAN,
-                deadline_s: 1.0,
-                arrival_idx: 0,
-            }])
+            .run_trace(&[q(9, f64::NAN)])
             .unwrap();
         assert_eq!(rep.served(), 0);
         assert_eq!(rep.rejections.len(), 1);
+    }
+
+    #[test]
+    fn malformed_deadlines_rejected_like_malformed_arrivals() {
+        // Regression (satellite of the tiered-admission PR): NaN /
+        // infinite / inverted deadlines used to pass admission
+        // unvalidated while NaN arrivals were rejected — a NaN deadline
+        // then corrupted EDF's ordering key silently. Mirror of
+        // `nan_and_negative_arrivals_rejected_not_panicking`.
+        let q = |id: u64, deadline_s: f64| Queued {
+            id,
+            seq_len: 64,
+            arrival_s: 1.0,
+            deadline_s,
+            tier: Tier::default(),
+            arrival_idx: 0,
+        };
+        let trace = vec![
+            q(0, 5.0),           // well-formed
+            q(1, f64::NAN),      // NaN deadline
+            q(2, f64::INFINITY), // never-due deadline
+            q(3, 0.5),           // due before its own arrival
+            q(4, 1.0),           // deadline == arrival is legal (instant SLO)
+        ];
+        let cfg = SchedulerConfig { policy: Policy::EarliestDeadline, ..Default::default() };
+        let rep = Scheduler::with_config(MockEngine::new(4), cfg).run_trace(&trace).unwrap();
+        assert_eq!(rep.served(), 2);
+        let rejected: Vec<u64> = rep.rejections.iter().map(|r| r.id).collect();
+        assert_eq!(rejected, vec![1, 2, 3]);
+        for r in &rep.rejections {
+            assert_eq!(r.kind, RejectKind::MalformedDeadline);
+            assert!(r.reason.contains("malformed deadline"), "reason: {}", r.reason);
+        }
+        // An entirely malformed trace terminates cleanly too.
+        let rep = Scheduler::new(MockEngine::new(4)).run_trace(&[q(9, f64::NAN)]).unwrap();
+        assert_eq!(rep.served(), 0);
+        assert_eq!(rep.rejections.len(), 1);
+    }
+
+    #[test]
+    fn edf_equal_deadlines_fall_back_to_arrival_order() {
+        // Satellite coverage: `edf_honors_explicit_deadlines` gives every
+        // request a distinct deadline, so the stable `arrival_idx`
+        // fallback was untested. Equal deadlines with distinct arrivals
+        // must dispatch in arrival order, deterministically.
+        let q = |id: u64, arrival_s: f64| Queued {
+            id,
+            seq_len: 64,
+            arrival_s,
+            deadline_s: 7.0,
+            tier: Tier::default(),
+            arrival_idx: 0, // re-stamped by the scheduler
+        };
+        // Shuffled ids; arrival order is 2, 0, 1 (id 5 ties id 2's
+        // arrival and loses on the id-stable admission sort).
+        let trace = vec![q(4, 0.2), q(2, 0.0), q(5, 0.0), q(9, 0.1)];
+        let cfg = SchedulerConfig {
+            policy: Policy::EarliestDeadline,
+            max_in_flight: 1,
+            ..Default::default()
+        };
+        let rep1 = Scheduler::with_config(MockEngine::new(1), cfg).run_trace(&trace).unwrap();
+        let rep2 = Scheduler::with_config(MockEngine::new(1), cfg).run_trace(&trace).unwrap();
+        let order1: Vec<u64> = rep1.completions.iter().map(|c| c.id).collect();
+        let order2: Vec<u64> = rep2.completions.iter().map(|c| c.id).collect();
+        assert_eq!(order1, vec![2, 5, 9, 4]);
+        assert_eq!(order1, order2, "equal-deadline EDF must be deterministic");
     }
 
     #[test]
@@ -999,8 +1189,8 @@ mod tests {
         // A long request followed by a short one: the short one may enter
         // early but must exit at least one stage after its predecessor.
         let reqs = vec![
-            Request { id: 0, seq_len: 256, arrival_s: 0.0 },
-            Request { id: 1, seq_len: 10, arrival_s: 0.0 },
+            Request { id: 0, seq_len: 256, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 1, seq_len: 10, arrival_s: 0.0, tier: Tier::default() },
         ];
         let rep = Scheduler::new(MockEngine::new(4)).run(&reqs).unwrap();
         let c0 = &rep.completions[0];
@@ -1046,6 +1236,7 @@ mod tests {
                 name: "mock-batch",
                 devices: 2,
                 ladder: BucketLadder::from_lens(&[64, 128, 256]),
+                layers: 1,
                 overlap: OverlapMode::Tiled,
                 pipeline_depth: self.depth,
                 link_slots: 2,
@@ -1150,15 +1341,145 @@ mod tests {
         // Continuous batching: a request arriving after the first batch
         // dispatched must not time-travel into it.
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0 },
-            Request { id: 1, seq_len: 64, arrival_s: 0.0 },
-            Request { id: 2, seq_len: 64, arrival_s: 5.0 },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 1, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 2, seq_len: 64, arrival_s: 5.0, tier: Tier::default() },
         ];
         let rep = Scheduler::new(BatchMock::new(12, 4)).run(&reqs).unwrap();
         let by_id = |id: u64| rep.completions.iter().find(|c| c.id == id).unwrap();
         assert_eq!(by_id(0).batch, by_id(1).batch);
         assert_ne!(by_id(0).batch, by_id(2).batch);
         assert!(by_id(2).start_s >= 5.0);
+    }
+
+    /// Mock whose ladder advertises truthful per-layer costs (layers: 1,
+    /// so est_service_s == service_s == bucket × 1 ms), enabling the
+    /// admission predictor.
+    struct CostedMock {
+        inner: MockEngine,
+    }
+
+    impl CostedMock {
+        fn new(depth: usize) -> Self {
+            Self { inner: MockEngine::new(depth) }
+        }
+    }
+
+    impl Engine for CostedMock {
+        fn caps(&self) -> EngineCaps {
+            let mut caps = self.inner.caps();
+            caps.ladder = BucketLadder::new(
+                [64usize, 128, 256]
+                    .iter()
+                    .map(|&b| crate::engine::BucketSpec {
+                        seq_len: b,
+                        layer_cost_s: b as f64 * self.inner.per_token_s,
+                    })
+                    .collect(),
+            );
+            caps
+        }
+
+        fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+            self.inner.infer(req)
+        }
+    }
+
+    #[test]
+    fn admission_sheds_unmeetable_interactive_and_is_off_by_default() {
+        // 5 interactive requests of 64 ms service against an 0.1 s SLO on
+        // a serial engine: only the head of the burst is meetable — the
+        // predictor sheds the rest at admission. With admission control
+        // off (the default), everything is served and most deadlines
+        // simply miss.
+        let trace: Vec<Queued> = (0..5)
+            .map(|id| Queued {
+                id,
+                seq_len: 64,
+                arrival_s: 0.0,
+                deadline_s: 0.1,
+                tier: Tier::Interactive,
+                arrival_idx: 0,
+            })
+            .collect();
+        let base_cfg = SchedulerConfig {
+            policy: Policy::EarliestDeadline,
+            max_in_flight: 1,
+            ..Default::default()
+        };
+        let baseline =
+            Scheduler::with_config(CostedMock::new(1), base_cfg).run_trace(&trace).unwrap();
+        assert_eq!(baseline.served(), 5);
+        assert_eq!(baseline.metrics.shed(), 0);
+        let it = baseline.metrics.tier(Tier::Interactive);
+        assert_eq!(it.served, 5);
+        assert_eq!(it.deadlines_met, 1, "only the burst head meets 0.1 s");
+        assert_eq!(it.deadlines_missed, 4);
+
+        let cfg = SchedulerConfig { admission_control: true, ..base_cfg };
+        let shed = Scheduler::with_config(CostedMock::new(1), cfg).run_trace(&trace).unwrap();
+        assert_eq!(shed.served(), 1);
+        assert_eq!(shed.rejections.len(), 4);
+        assert!(shed.rejections.iter().all(|r| r.kind == RejectKind::Shed));
+        assert!(shed.rejections.iter().all(|r| r.reason.contains("shed at admission")));
+        let it = shed.metrics.tier(Tier::Interactive);
+        assert_eq!(it.shed, 4);
+        assert_eq!(it.served, 1);
+        // The admission-predictor contract: every admitted request met
+        // its deadline — the prediction was conservative.
+        assert_eq!(it.deadlines_met, 1);
+        assert_eq!(it.deadlines_missed, 0);
+        // Work conservation: served + rejected covers the whole trace.
+        assert_eq!(shed.served() + shed.rejections.len(), trace.len());
+    }
+
+    #[test]
+    fn admission_downgrades_batch_to_best_effort() {
+        // Two batch requests against a one-request SLO: the second is
+        // unmeetable, but batch work must not be dropped — it completes
+        // on the best-effort tier, judged against its original deadline.
+        let trace: Vec<Queued> = (0..2)
+            .map(|id| Queued {
+                id,
+                seq_len: 64,
+                arrival_s: 0.0,
+                deadline_s: 0.1,
+                tier: Tier::Batch,
+                arrival_idx: 0,
+            })
+            .collect();
+        let cfg = SchedulerConfig {
+            max_in_flight: 1,
+            admission_control: true,
+            ..Default::default()
+        };
+        let rep = Scheduler::with_config(CostedMock::new(1), cfg).run_trace(&trace).unwrap();
+        assert_eq!(rep.served(), 2, "downgrade keeps the work");
+        assert!(rep.rejections.is_empty());
+        assert_eq!(rep.metrics.tier(Tier::Batch).downgraded, 1);
+        assert_eq!(rep.metrics.tier(Tier::Batch).served, 1);
+        assert_eq!(rep.metrics.tier(Tier::BestEffort).served, 1);
+        // The downgraded completion keeps its original deadline and is
+        // honestly scored as a best-effort miss.
+        assert_eq!(rep.metrics.tier(Tier::BestEffort).deadlines_missed, 1);
+        let down = rep.completions.iter().find(|c| c.tier == Tier::BestEffort).unwrap();
+        assert_eq!(down.deadline_s, 0.1);
+    }
+
+    #[test]
+    fn cost_free_ladder_fails_open_even_with_admission_on() {
+        // MockEngine's ladder has no cost estimates: admission control
+        // must be inert, not reject-everything.
+        let cfg = SchedulerConfig {
+            max_in_flight: 1,
+            admission_control: true,
+            ..Default::default()
+        };
+        let rep = Scheduler::with_config(MockEngine::new(1), cfg)
+            .run(&burst(&[64, 64, 64]))
+            .unwrap();
+        assert_eq!(rep.served(), 3);
+        assert!(rep.rejections.is_empty());
     }
 
     #[test]
@@ -1173,6 +1494,7 @@ mod tests {
                 seq_len: 64,
                 arrival_s,
                 deadline_s: 10.0,
+                tier: Tier::default(),
                 arrival_idx: 0,
             })
             .collect();

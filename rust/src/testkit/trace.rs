@@ -5,12 +5,13 @@
 //! own ad-hoc trace. [`TraceGen`] is the one place that builds them:
 //! an arrival process ([`Arrival`]: burst / uniform / Poisson), a
 //! sequence-length mixture (weighted uniform components), and a deadline
-//! mix (weighted SLOs), all drawn from one seeded [`Pcg64`] stream — the
-//! same trace reproduces from the same seed, by construction.
+//! mix (weighted SLOs) — or a tier mix pairing each [`Tier`] with its
+//! own SLO — all drawn from one seeded [`Pcg64`] stream — the same trace
+//! reproduces from the same seed, by construction.
 
 use crate::serving::Queued;
 use crate::testkit::Pcg64;
-use crate::workload::Request;
+use crate::workload::{Request, Tier};
 
 /// Arrival process of a generated trace.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -34,6 +35,11 @@ pub struct TraceGen {
     lengths: Vec<(f64, usize, usize)>,
     /// Weighted SLO mix: (weight, slo_s); deadline = arrival + slo.
     deadlines: Vec<(f64, f64)>,
+    /// Weighted tier mix: (weight, tier, slo_s). Empty = untiered — every
+    /// request on the default tier with a deadline from `deadlines`
+    /// (preserves the pre-tier rng draw order exactly). Non-empty: one
+    /// joint draw picks the request's tier *and* SLO together.
+    tiers: Vec<(f64, Tier, f64)>,
 }
 
 impl TraceGen {
@@ -44,6 +50,7 @@ impl TraceGen {
             arrival: Arrival::Burst,
             lengths: vec![(1.0, 16, 512)],
             deadlines: vec![(1.0, 10.0)],
+            tiers: Vec::new(),
         }
     }
 
@@ -74,11 +81,26 @@ impl TraceGen {
         self
     }
 
+    /// Weighted tier mix; each request draws its tier and SLO jointly
+    /// from `(weight, tier, slo_s)` components (deadline = arrival +
+    /// the tier's SLO). Supersedes [`TraceGen::deadlines`].
+    pub fn tiers(mut self, mix: &[(f64, Tier, f64)]) -> Self {
+        assert!(!mix.is_empty(), "tier mix needs a component");
+        assert!(mix.iter().all(|&(w, _, slo)| w > 0.0 && slo > 0.0 && slo.is_finite()));
+        self.tiers = mix.to_vec();
+        self
+    }
+
     /// Draw `n` arrival-stamped requests (ids 0..n in arrival order).
     pub fn requests(&self, n: usize) -> Vec<Request> {
         self.queued(n)
             .into_iter()
-            .map(|q| Request { id: q.id, seq_len: q.seq_len, arrival_s: q.arrival_s })
+            .map(|q| Request {
+                id: q.id,
+                seq_len: q.seq_len,
+                arrival_s: q.arrival_s,
+                tier: q.tier,
+            })
             .collect()
     }
 
@@ -97,12 +119,21 @@ impl TraceGen {
                         -(1.0 - rng.uniform() as f64).ln() / rate_rps
                     }
                 };
-                let (_, slo) = weighted(&mut rng, &self.deadlines, |&(w, _)| w);
+                // One weighted draw either way, so tiered and untiered
+                // traces consume the rng stream identically.
+                let (tier, slo) = if self.tiers.is_empty() {
+                    let &(_, slo) = weighted(&mut rng, &self.deadlines, |&(w, _)| w);
+                    (Tier::default(), slo)
+                } else {
+                    let &(_, tier, slo) = weighted(&mut rng, &self.tiers, |&(w, ..)| w);
+                    (tier, slo)
+                };
                 Queued {
                     id,
                     seq_len,
                     arrival_s: t,
                     deadline_s: t + slo,
+                    tier,
                     arrival_idx: id,
                 }
             })
@@ -181,6 +212,40 @@ mod tests {
         assert!(small > 100 && large > 100, "small {small} large {large}");
         // Fixed-length helper degenerates to a point mass.
         assert!(TraceGen::new(5).fixed_len(64).requests(50).iter().all(|r| r.seq_len == 64));
+    }
+
+    #[test]
+    fn tier_mix_draws_tiers_with_their_slos() {
+        let g = TraceGen::new(11).arrivals(Arrival::Uniform { gap_s: 1.0 }).tiers(&[
+            (0.3, Tier::Interactive, 0.5),
+            (0.4, Tier::Batch, 4.0),
+            (0.3, Tier::BestEffort, 2.0),
+        ]);
+        let trace = g.queued(600);
+        let mut counts = [0usize; Tier::COUNT];
+        for q in &trace {
+            counts[q.tier.rank()] += 1;
+            // The SLO rides with the tier.
+            let slo = q.deadline_s - q.arrival_s;
+            let want = match q.tier {
+                Tier::Interactive => 0.5,
+                Tier::Batch => 4.0,
+                Tier::BestEffort => 2.0,
+            };
+            assert!((slo - want).abs() < 1e-9, "{:?} slo {slo}", q.tier);
+        }
+        // Every component is drawn roughly at its weight (loose bounds;
+        // the draw is seeded, so this can never flake).
+        assert!(counts.iter().all(|&c| c > 100), "counts {counts:?}");
+        assert!(counts[Tier::Batch.rank()] > counts[Tier::Interactive.rank()] / 2);
+        // Untiered generation stays on the default tier and reproduces
+        // the legacy deadline path.
+        assert!(TraceGen::new(11).queued(50).iter().all(|q| q.tier == Tier::default()));
+        // Requests carry the drawn tier through.
+        assert_eq!(
+            g.requests(40).iter().map(|r| r.tier).collect::<Vec<_>>(),
+            g.queued(40).iter().map(|q| q.tier).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -4,7 +4,65 @@
 //! paper's reported subset average — plus the fixed-length workloads the
 //! scaling experiments use.
 
+use crate::error::{GalaxyError, Result};
 use crate::testkit::Pcg64;
+
+/// Service tier of a request — the SLO class the serving layer schedules
+/// and sheds by. Tiers are strictly ordered: a queued interactive request
+/// always dispatches before a queued batch one, which dispatches before
+/// best-effort work ([`crate::serving::Policy`] orders within a tier).
+/// Under overload the admission predictor treats them differently:
+/// interactive requests whose deadline is provably unmeetable are shed
+/// (late answers are worthless), batch requests are *downgraded* to
+/// best-effort (the work must still complete; the latency target is
+/// soft), and best-effort requests are shed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// User-facing, latency-critical (the default — untagged traffic
+    /// behaves exactly as before tiers existed).
+    #[default]
+    Interactive,
+    /// Throughput work with a soft deadline; downgraded instead of shed.
+    Batch,
+    /// Discardable background work.
+    BestEffort,
+}
+
+impl Tier {
+    /// Number of tiers (per-tier metric arrays index by [`Tier::rank`]).
+    pub const COUNT: usize = 3;
+
+    /// Every tier in priority order (highest first).
+    pub const ALL: [Tier; Tier::COUNT] = [Tier::Interactive, Tier::Batch, Tier::BestEffort];
+
+    /// Dispatch priority: lower rank dispatches first.
+    pub fn rank(self) -> usize {
+        match self {
+            Tier::Interactive => 0,
+            Tier::Batch => 1,
+            Tier::BestEffort => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Batch => "batch",
+            Tier::BestEffort => "best-effort",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" | "i" => Ok(Tier::Interactive),
+            "batch" | "b" => Ok(Tier::Batch),
+            "best-effort" | "besteffort" | "e" => Ok(Tier::BestEffort),
+            other => Err(GalaxyError::Config(format!(
+                "unknown tier `{other}` (expected interactive|batch|best-effort)"
+            ))),
+        }
+    }
+}
 
 /// One single-shot inference request (the paper's "single voice command").
 #[derive(Clone, Debug, PartialEq)]
@@ -14,6 +72,8 @@ pub struct Request {
     pub seq_len: usize,
     /// Arrival offset from workload start, seconds.
     pub arrival_s: f64,
+    /// SLO class the serving layer schedules and sheds by.
+    pub tier: Tier,
 }
 
 /// QNLI-like length distribution: clipped normal around the paper's
@@ -46,7 +106,7 @@ impl QnliWorkload {
                     .clamp(self.min_len as f64, self.max_len as f64) as usize;
                 // Exponential inter-arrival via inverse CDF.
                 t += -self.mean_gap_s * (1.0 - rng.uniform() as f64).ln();
-                Request { id, seq_len: len, arrival_s: t }
+                Request { id, seq_len: len, arrival_s: t, tier: Tier::default() }
             })
             .collect()
     }
@@ -56,7 +116,7 @@ impl QnliWorkload {
 /// uses 384).
 pub fn fixed_length(n: usize, seq_len: usize) -> Vec<Request> {
     (0..n as u64)
-        .map(|id| Request { id, seq_len, arrival_s: id as f64 })
+        .map(|id| Request { id, seq_len, arrival_s: id as f64, tier: Tier::default() })
         .collect()
 }
 
@@ -112,6 +172,19 @@ mod tests {
         for w in reqs.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s);
         }
+    }
+
+    #[test]
+    fn tier_ranks_names_and_parse_roundtrip() {
+        assert_eq!(Tier::default(), Tier::Interactive);
+        for (i, t) in Tier::ALL.iter().enumerate() {
+            assert_eq!(t.rank(), i, "ALL must be in priority order");
+            assert_eq!(Tier::parse(t.name()).unwrap(), *t);
+        }
+        assert_eq!(Tier::parse("B").unwrap(), Tier::Batch);
+        assert!(Tier::parse("platinum").is_err());
+        // Untagged workloads default to the interactive tier.
+        assert!(fixed_length(3, 64).iter().all(|r| r.tier == Tier::Interactive));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use galaxy::planner::{Deployment, Exhaustive, Heuristic, PlanStrategy, StrategyK
 use galaxy::profiler::Profiler;
 use galaxy::serving::{GovernorConfig, PlanGovernor, Policy, Scheduler, SchedulerConfig};
 use galaxy::sim::{DeviceClass, DeviceSpec, EdgeEnv, NetParams, SimEngine};
-use galaxy::workload::Request;
+use galaxy::workload::{Request, Tier};
 
 // ---------------------------------------------------------------------
 // Strategy oracle property
@@ -113,7 +113,9 @@ fn engine_caps_expose_the_per_bucket_deployment() {
 const N: usize = 48;
 
 fn burst(seq_len: usize, n: usize) -> Vec<Request> {
-    (0..n).map(|i| Request { id: i as u64, seq_len, arrival_s: 0.0 }).collect()
+    (0..n)
+        .map(|i| Request { id: i as u64, seq_len, arrival_s: 0.0, tier: Tier::default() })
+        .collect()
 }
 
 /// One device slowed 2x mid-workload: with a governor the scheduler
@@ -132,7 +134,12 @@ fn governor_replanning_beats_static_plan_under_2x_drift() {
         &[128, 256, 512],
     )
     .unwrap();
-    let cfg = SchedulerConfig { policy: Policy::Fifo, slo_s: 60.0, max_in_flight: 1 };
+    let cfg = SchedulerConfig {
+        policy: Policy::Fifo,
+        slo_s: 60.0,
+        max_in_flight: 1,
+        ..Default::default()
+    };
     let gov_cfg = GovernorConfig { min_observations: 2, cooldown: 2, ..Default::default() };
     // All requests pad to the 128 bucket; the trace is split into a
     // healthy phase and a drifted phase (the 2x slowdown lands between
@@ -146,7 +153,7 @@ fn governor_replanning_beats_static_plan_under_2x_drift() {
                 .unwrap();
         let mut sched = Scheduler::with_config(engine, cfg);
         if governed {
-            sched = sched.with_governor(PlanGovernor::with_config(dep.clone(), gov_cfg));
+            sched = sched.with_governor(PlanGovernor::with_config(dep.clone(), gov_cfg).unwrap());
         }
         // Phase 1: on-track service; the governor must not replan.
         let warm = sched.run(&healthy).unwrap();
@@ -206,7 +213,8 @@ fn governor_is_inert_without_device_telemetry() {
     let mut gov = PlanGovernor::with_config(
         bare,
         GovernorConfig { min_observations: 1, cooldown: 1, ..Default::default() },
-    );
+    )
+    .unwrap();
     let outcome = galaxy::engine::InferOutcome::default();
     for _ in 0..4 {
         assert!(gov.observe(512, &outcome).is_none());

@@ -20,7 +20,7 @@ use galaxy::serving::{pad_and_mask, Scheduler, SchedulerConfig};
 use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
 use galaxy::tensor::Tensor2;
 use galaxy::testkit::TraceGen;
-use galaxy::workload::Request;
+use galaxy::workload::{Request, Tier};
 
 const SEED: u64 = 99;
 
@@ -288,7 +288,12 @@ fn multi_bucket_artifacts_serve_every_rung() {
     let reqs: Vec<Request> = buckets
         .iter()
         .enumerate()
-        .map(|(i, &b)| Request { id: i as u64, seq_len: b - 1, arrival_s: 0.0 })
+        .map(|(i, &b)| Request {
+            id: i as u64,
+            seq_len: b - 1,
+            arrival_s: 0.0,
+            tier: Tier::default(),
+        })
         .collect();
     let report = Scheduler::new(cluster).run(&reqs).unwrap();
     assert_eq!(report.served(), reqs.len());

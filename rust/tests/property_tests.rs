@@ -251,6 +251,7 @@ impl Engine for LadderMock {
             name: "ladder-mock",
             devices: 2,
             ladder: BucketLadder::from_lens(&self.lens),
+            layers: 1,
             overlap: OverlapMode::Tiled,
             pipeline_depth: 8,
             link_slots: 2,

@@ -8,11 +8,11 @@ use galaxy::engine::Engine;
 use galaxy::model::ModelConfig;
 use galaxy::planner::{Deployment, Plan, Planner};
 use galaxy::profiler::Profiler;
-use galaxy::serving::{Policy, SchedReport, Scheduler, SchedulerConfig};
+use galaxy::serving::{Policy, RejectKind, SchedReport, Scheduler, SchedulerConfig};
 use galaxy::sim::{EdgeEnv, NetParams, SimEngine};
 use galaxy::testkit::{Arrival, TraceGen};
 use galaxy::transport::WireFormat;
-use galaxy::workload::Request;
+use galaxy::workload::{Request, Tier};
 
 // Low-bandwidth regime: communication bubbles dominate service time,
 // which is exactly where pipelining consecutive requests pays (the
@@ -42,7 +42,7 @@ fn replay(
     reqs: &[Request],
 ) -> SchedReport {
     let engine = SimEngine::new(model, env, plan(model, env, 512), NetParams::mbps(MBPS));
-    let cfg = SchedulerConfig { policy, slo_s: 30.0, max_in_flight: window };
+    let cfg = SchedulerConfig { policy, slo_s: 30.0, max_in_flight: window, ..Default::default() };
     Scheduler::with_config(engine, cfg).run(reqs).unwrap()
 }
 
@@ -82,7 +82,7 @@ fn bucketing_pads_to_smallest_admissible_bucket() {
     let caps = engine.caps();
     let reqs: Vec<Request> = [(0u64, 30usize), (1, 64), (2, 65), (3, 400)]
         .iter()
-        .map(|&(id, l)| Request { id, seq_len: l, arrival_s: 0.0 })
+        .map(|&(id, l)| Request { id, seq_len: l, arrival_s: 0.0, tier: Tier::default() })
         .collect();
     let report = Scheduler::new(engine).run(&reqs).unwrap();
     let buckets: Vec<usize> = report.completions.iter().map(|c| c.bucket).collect();
@@ -99,8 +99,8 @@ fn oversize_requests_are_rejected() {
     let engine = SimEngine::new(&model, &env, plan(&model, &env, 256), NetParams::mbps(MBPS))
         .with_buckets(vec![128, 256]);
     let reqs = vec![
-        Request { id: 0, seq_len: 100, arrival_s: 0.0 },
-        Request { id: 1, seq_len: 400, arrival_s: 0.0 },
+        Request { id: 0, seq_len: 100, arrival_s: 0.0, tier: Tier::default() },
+        Request { id: 1, seq_len: 400, arrival_s: 0.0, tier: Tier::default() },
     ];
     let report = Scheduler::new(engine).run(&reqs).unwrap();
     assert_eq!(report.served(), 1);
@@ -116,7 +116,7 @@ fn sjf_cuts_mean_queueing_under_mixed_lengths() {
     // a serial server).
     let model = ModelConfig::bert_large();
     let env = EdgeEnv::preset_b();
-    let mut reqs = vec![Request { id: 0, seq_len: 512, arrival_s: 0.0 }];
+    let mut reqs = vec![Request { id: 0, seq_len: 512, arrival_s: 0.0, tier: Tier::default() }];
     reqs.extend(TraceGen::new(5).fixed_len(32).requests(7).into_iter().map(|mut r| {
         r.id += 1;
         r
@@ -322,6 +322,90 @@ fn planned_overlap_grain_cuts_e2e_p95_on_the_replay_trace() {
         assert_eq!(a.id, b.id);
         assert_eq!(a.bucket, b.bucket);
     }
+}
+
+#[test]
+fn tiered_admission_keeps_interactive_goodput_under_10x_overload() {
+    // The headline SLO-tier acceptance check: a seeded Poisson trace at
+    // 10x the strictly-serial service rate, 30% of it interactive on a
+    // tight deadline. Shed-nothing EDF drowns — the queue grows without
+    // bound and interactive deadlines blow past while the server grinds
+    // through doomed work. With the admission predictor on, unmeetable
+    // interactive/best-effort work is shed at arrival and batch work
+    // rides the downgrade lane, so server slots go to requests that can
+    // still meet their deadlines: interactive goodput stays within a
+    // fixed factor of the serial service rate 1/S and beats the
+    // shed-nothing baseline on the same trace.
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let make = || SimEngine::new(&model, &env, plan(&model, &env, 512), NetParams::mbps(MBPS));
+
+    // Measure the single-request service time S (service rate 1/S).
+    let probe = vec![Request { id: 0, seq_len: 200, arrival_s: 0.0, tier: Tier::default() }];
+    let s = Scheduler::new(make()).run(&probe).unwrap().completions[0].service_s;
+    assert!(s > 0.0 && s.is_finite(), "probe service time {s}");
+
+    let n = 120;
+    let trace = TraceGen::new(29)
+        .arrivals(Arrival::Poisson { rate_rps: 10.0 / s })
+        .fixed_len(200)
+        .tiers(&[
+            (0.3, Tier::Interactive, 4.0 * s),
+            (0.4, Tier::Batch, 12.0 * s),
+            (0.3, Tier::BestEffort, 6.0 * s),
+        ])
+        .queued(n);
+
+    let run = |admission_control: bool| -> SchedReport {
+        let cfg = SchedulerConfig {
+            policy: Policy::EarliestDeadline,
+            max_in_flight: 1, // strictly serial: capacity is exactly 1/S
+            admission_control,
+            ..Default::default()
+        };
+        Scheduler::with_config(make(), cfg).run_trace(&trace).unwrap()
+    };
+    let baseline = run(false);
+    let tiered = run(true);
+
+    // The baseline admits everything and sheds nothing.
+    assert_eq!(baseline.served(), n);
+    assert!(baseline.rejections.is_empty());
+    assert_eq!(baseline.metrics.shed(), 0);
+
+    // Conservation under admission control: every request is either
+    // served or shed, never silently lost.
+    assert_eq!(tiered.served() + tiered.rejections.len(), n);
+    assert!(tiered.rejections.iter().all(|r| r.kind == RejectKind::Shed));
+
+    // Overload is actually shed, and per the tier contract: unmeetable
+    // interactive and best-effort work is rejected outright, batch work
+    // is downgraded instead of shed.
+    let ti = tiered.metrics.tier(Tier::Interactive);
+    assert!(ti.shed > 0, "interactive shed {}", ti.shed);
+    assert!(tiered.metrics.tier(Tier::BestEffort).shed > 0);
+    assert!(tiered.metrics.tier(Tier::Batch).downgraded > 0);
+    assert_eq!(tiered.metrics.tier(Tier::Batch).shed, 0, "batch rides the downgrade lane");
+
+    // Headline pin: at 10x sustained overload, interactive goodput holds
+    // within a fixed factor (4x) of the serial service rate ...
+    let mu = 1.0 / s;
+    let tiered_good = tiered.metrics.tier_goodput_rps(Tier::Interactive);
+    assert!(
+        tiered_good >= mu / 4.0,
+        "interactive goodput {tiered_good} rps below (1/S)/4 = {} rps",
+        mu / 4.0
+    );
+    // ... and beats the shed-nothing baseline on the same trace, in both
+    // rate and met-deadline count.
+    let base_good = baseline.metrics.tier_goodput_rps(Tier::Interactive);
+    assert!(tiered_good > base_good, "tiered {tiered_good} !> baseline {base_good}");
+    assert!(
+        ti.deadlines_met > baseline.metrics.tier(Tier::Interactive).deadlines_met,
+        "tiered met {} !> baseline met {}",
+        ti.deadlines_met,
+        baseline.metrics.tier(Tier::Interactive).deadlines_met
+    );
 }
 
 #[test]
