@@ -7,9 +7,12 @@
 //! trace replayed under the old serial-FIFO discipline and under the
 //! pipelined FIFO / SJF / EDF policies, with wall-clock throughput
 //! measured over the span — pipelining must keep ≥ 2 requests in flight
-//! and beat the serial FIFO baseline. It closes with a 10x overload
-//! storm: SLO-tiered traffic through the admission predictor, per-tier
-//! goodput/shed/downgrade accounting against the shed-nothing baseline.
+//! and beat the serial FIFO baseline. A generative burst then compares
+//! token-level continuous batching against serial per-request decode
+//! (TTFT p95 and tokens/s must both improve), and it closes with a 10x
+//! overload storm: SLO-tiered traffic through the admission predictor,
+//! per-tier goodput/shed/downgrade accounting against the shed-nothing
+//! baseline.
 //!
 //! ```bash
 //! cargo run --release --example traffic_replay
@@ -332,6 +335,70 @@ fn main() -> galaxy::Result<()> {
         "pipelined FIFO did not beat the serial baseline"
     );
 
+    // Generative decode: requests carry a max_new_tokens budget; after
+    // prefill the scheduler runs seq-len-1 decode steps against the
+    // deployment-sharded KV cache. With token-level continuous batching
+    // the decode batch re-forms every step (vLLM-style) and prefills
+    // keep priority; the baseline decodes each request serially at
+    // dispatch, admission-time batching only. Same seeded burst, same
+    // engine — token batching must cut TTFT p95 and raise tokens/s.
+    let mut gen_trace = TraceGen::new(17)
+        .lengths(&[(1.0, 80, 200)])
+        .generative(&[(1.0, 8, 24)])
+        .requests(16);
+    for r in &mut gen_trace {
+        r.arrival_s = 0.0; // burst: decode contends with queued prefills
+    }
+    let gen_run = |token_batching: bool| -> galaxy::Result<SchedReport> {
+        let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+            .with_buckets(vec![128, 256, 512])
+            .with_max_batch(4);
+        let cfg = SchedulerConfig {
+            policy: Policy::Fifo,
+            slo_s: 600.0,
+            max_in_flight: 0,
+            token_batching,
+            ..Default::default()
+        };
+        Scheduler::with_config(engine, cfg).run(&gen_trace)
+    };
+    let gen_serial = gen_run(false)?;
+    let gen_batched = gen_run(true)?;
+    let mut gt = Table::new(
+        "generative decode — token-level batching vs serial decode",
+        &["mode", "ttft mean", "ttft p95", "tpot mean", "tokens", "tok/s"],
+    );
+    for (name, rep) in [("serial decode", &gen_serial), ("token batching", &gen_batched)] {
+        let m = &rep.metrics;
+        gt.row(&[
+            name.into(),
+            fmt_secs(m.ttft.mean_s()),
+            fmt_secs(m.ttft.p95_s()),
+            fmt_secs(m.tpot.mean_s()),
+            format!("{}", m.generated_tokens),
+            format!("{:.2}", m.tokens_per_s()),
+        ]);
+    }
+    println!("{}", gt.render());
+    assert_eq!(gen_batched.served(), gen_serial.served());
+    assert_eq!(
+        gen_batched.metrics.generated_tokens, gen_serial.metrics.generated_tokens,
+        "both decode modes must generate every budgeted token"
+    );
+    assert!(gen_batched.metrics.generated_tokens > 0, "generative mix produced no tokens");
+    assert!(
+        gen_batched.metrics.ttft.p95_s() < gen_serial.metrics.ttft.p95_s(),
+        "token batching ttft p95 {} !< serial decode {}",
+        gen_batched.metrics.ttft.p95_s(),
+        gen_serial.metrics.ttft.p95_s()
+    );
+    assert!(
+        gen_batched.metrics.tokens_per_s() > gen_serial.metrics.tokens_per_s(),
+        "token batching {:.2} tok/s !> serial decode {:.2} tok/s",
+        gen_batched.metrics.tokens_per_s(),
+        gen_serial.metrics.tokens_per_s()
+    );
+
     // Measurement-driven replanning: the per-bucket deployment is the
     // engines' single source of partition truth, and a PlanGovernor
     // folds per-device busy telemetry back into the profile. Inject a
@@ -438,7 +505,13 @@ fn main() -> galaxy::Result<()> {
     // actual capacity (service rate 1/S) rather than a hard-coded rate.
     let s = {
         let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS));
-        let probe = vec![Request { id: 0, seq_len: 200, arrival_s: 0.0, tier: Tier::default() }];
+        let probe = vec![Request {
+            id: 0,
+            seq_len: 200,
+            arrival_s: 0.0,
+            tier: Tier::default(),
+            max_new_tokens: 0,
+        }];
         Scheduler::new(engine).run(&probe)?.completions[0].service_s
     };
     let mix: Vec<(f64, Tier, f64)> = [

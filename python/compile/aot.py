@@ -116,6 +116,23 @@ def enumerate_programs():
         # Overlap tiles: xla flavor only (they are plain GEMMs; the Pallas
         # matmul kernel is already validated via the fused programs + pytest).
         if flavor == "xla":
+            # Per-rung seq-len-1 generative decode steps: one program per
+            # bucket of the ladder, attending over a KV cache shaped at
+            # the rung's full capacity (bucket - 1 cached positions + the
+            # new token). Listed under the manifest's `decode_programs`
+            # key; manifests without it degrade to sim-only decode.
+            for b in shapes.SEQ_BUCKETS:
+                add(
+                    f"decode_s{b}__{flavor}",
+                    model.decode_layer,
+                    (
+                        _sd(1, H), _sd(H, 3 * H), _sd(H, H),
+                        _sd(H, shapes.FFN_DIM), _sd(shapes.FFN_DIM, H),
+                        _sd(H), _sd(H), _sd(H), _sd(H),
+                        _sd(b - 1, H), _sd(b - 1, H), _sd(b),
+                    ),
+                    flavor,
+                )
             for t in shapes.SEQ_TILES:
                 for k in shapes.HEAD_SHARDS:
                     kd = k * DH
@@ -179,6 +196,10 @@ def main() -> None:
             "ln_eps": shapes.LN_EPS,
         },
         "programs": [],
+        # Per-rung seq-len-1 decode step names (generative serving); the
+        # Rust Manifest treats an absent key as "decode is sim-only".
+        "decode_programs": [name for name, _, _, _ in progs
+                            if name.startswith("decode_")],
     }
 
     t_start = time.time()

@@ -112,6 +112,58 @@ def mlp_gemm2_tile(e_tile, w2, *, flavor="pallas"):
 
 
 # --------------------------------------------------------------------------
+# Generative decode (seq-len-1 steps over a per-rung KV cache)
+# --------------------------------------------------------------------------
+
+def decode_mha(x, wqkv, wout, kcache, vcache, mask, *, n_heads=shapes.N_HEADS,
+               head_dim=shapes.HEAD_DIM):
+    """Seq-len-1 MHA step: project the new token, attend over the KV cache
+    plus the fresh entry, and return ``(out, k_new, v_new)`` so the runtime
+    appends the new K/V rows to its deployment-sharded cache.
+
+    The cache capacity is the rung bucket: ``kcache``/``vcache`` hold the
+    first ``bucket - 1`` positions and the new token completes the rung,
+    so every step is shaped at the rung's full KV capacity regardless of
+    how many positions are valid (``mask`` carries the padding, additive
+    over all ``bucket`` attention slots). Pure jnp — decode steps are
+    wire-bound, not kernel-bound, so only the xla flavor is lowered.
+    """
+    kd = n_heads * head_dim
+    qkv = jnp.dot(x, wqkv)
+    q, k_new, v_new = qkv[:, :kd], qkv[:, kd:2 * kd], qkv[:, 2 * kd:]
+    keys = jnp.concatenate([kcache, k_new], axis=0)
+    vals = jnp.concatenate([vcache, v_new], axis=0)
+    s = keys.shape[0]
+    qh = q.reshape(1, n_heads, head_dim).transpose(1, 0, 2)
+    kh = keys.reshape(s, n_heads, head_dim).transpose(1, 0, 2)
+    vh = vals.reshape(s, n_heads, head_dim).transpose(1, 0, 2)
+    logits = jnp.matmul(qh, kh.transpose(0, 2, 1)) / jnp.sqrt(float(head_dim))
+    logits = logits + mask[None, None, :]
+    peak = jnp.max(logits, axis=-1, keepdims=True)
+    expd = jnp.exp(logits - peak)
+    attn = expd / jnp.sum(expd, axis=-1, keepdims=True)
+    b = jnp.matmul(attn, vh).transpose(1, 0, 2).reshape(1, kd)
+    return jnp.dot(b, wout), k_new, v_new
+
+
+def decode_layer(x, wqkv, wout, w1, w2, gamma1, beta1, gamma2, beta2,
+                 kcache, vcache, mask, *, n_heads=shapes.N_HEADS,
+                 head_dim=shapes.HEAD_DIM):
+    """Full post-LN layer for one generated token over a rung's KV cache.
+
+    The per-rung ``decode_s{bucket}__xla`` artifact ``aot.py`` lowers from
+    this body is what generative serving dispatches natively; manifests
+    without the ``decode_programs`` key degrade to modeled (sim-only)
+    decode steps.
+    """
+    c, k_new, v_new = decode_mha(x, wqkv, wout, kcache, vcache, mask,
+                                 n_heads=n_heads, head_dim=head_dim)
+    h1 = connective_block(c, x, gamma1, beta1, flavor="xla")
+    f = mlp_shard(h1, w1, w2, flavor="xla")
+    return connective_block(f, h1, gamma2, beta2, flavor="xla"), k_new, v_new
+
+
+# --------------------------------------------------------------------------
 # Local baseline (whole layer on one device)
 # --------------------------------------------------------------------------
 

@@ -12,7 +12,11 @@
 //!   clock, so wall time is pure scheduler bookkeeping);
 //! * `BENCH_overlap.json`    — measured per-post ring overhead (the
 //!   calibration input behind `NetParams::per_post_overhead_s`) and the
-//!   planner's modeled per-format overlap grain choice at 25 Mbps.
+//!   planner's modeled per-format overlap grain choice at 25 Mbps;
+//! * `BENCH_decode.json`     — generative decode on a seeded trace:
+//!   modeled TTFT/TPOT and token throughput for the token-level
+//!   continuous batcher against the serial-decode baseline, plus the
+//!   wall-clock scheduler bookkeeping cost per generated token.
 //!
 //! Run:   `cargo bench --bench bench_report`          (full, rewrites JSON)
 //! Smoke: `GALAXY_BENCH_SMOKE=1 cargo bench --bench bench_report`
@@ -54,11 +58,13 @@ fn main() {
     let sim_json = bench_sim_engine(smoke, &root, &mut failures);
     let sched_json = bench_scheduler(smoke, &root, &mut failures);
     let overlap_json = bench_overlap(smoke, &root, &mut failures);
+    let decode_json = bench_decode(smoke, &root, &mut failures);
 
     write_report(&root.join("BENCH_transport.json"), &transport_json);
     write_report(&root.join("BENCH_sim_engine.json"), &sim_json);
     write_report(&root.join("BENCH_scheduler.json"), &sched_json);
     write_report(&root.join("BENCH_overlap.json"), &overlap_json);
+    write_report(&root.join("BENCH_decode.json"), &decode_json);
 
     if !failures.is_empty() {
         eprintln!("bench regression gate FAILED (>25% vs committed baseline):");
@@ -69,7 +75,7 @@ fn main() {
     }
     println!(
         "bench trajectory written: BENCH_transport.json BENCH_sim_engine.json \
-         BENCH_scheduler.json BENCH_overlap.json"
+         BENCH_scheduler.json BENCH_overlap.json BENCH_decode.json"
     );
 }
 
@@ -356,6 +362,89 @@ fn bench_overlap(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json {
         ("mbps", Json::Num(MBPS)),
         ("seq", Json::Num(SEQ as f64)),
         ("formats", Json::Obj(formats)),
+    ])
+}
+
+// ---- generative decode ---------------------------------------------------
+
+/// Generative decode on a seeded trace: the same replay run through the
+/// token-level continuous batcher and through the serial-decode baseline.
+/// The committed trajectory tracks the *modeled* numbers (TTFT p95, TPOT,
+/// tokens/s — deterministic per commit, machine-independent); the
+/// wall-clock bookkeeping cost per generated token rides along ungated.
+fn bench_decode(smoke: bool, root: &Path, failures: &mut Vec<String>) -> Json {
+    let n_requests: usize = 32;
+    let reps: usize = if smoke { 2 } else { 10 };
+    let baseline = read_json(&root.join("BENCH_decode.json"));
+
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let profile = Profiler::analytic(&model, &env, 512).profile();
+    let plan = Planner::new(&model, &env, &profile).plan().expect("bert-l fits preset B");
+    let trace = TraceGen::new(11)
+        .arrivals(Arrival::Poisson { rate_rps: 4.0 })
+        .lengths(&[(1.0, 64, 200)])
+        .generative(&[(1.0, 8, 24)])
+        .requests(n_requests);
+
+    let mut run = |token_batching: bool| {
+        let mut last = None;
+        let (mean_s, _best) = bench_util::time_n(reps, || {
+            let engine = SimEngine::new(&model, &env, plan.clone(), NetParams::mbps(MBPS))
+                .with_buckets(vec![128, 256, 512])
+                .with_max_batch(4);
+            let cfg = SchedulerConfig {
+                policy: Policy::Fifo,
+                slo_s: 600.0,
+                max_in_flight: 0,
+                token_batching,
+                ..Default::default()
+            };
+            last = Some(Scheduler::with_config(engine, cfg).run(&trace).expect("replay"));
+        });
+        (last.expect("at least one timed run"), mean_s)
+    };
+    let (batched, wall_s) = run(true);
+    let (serial, _) = run(false);
+
+    let mode_json = |r: &galaxy::serving::SchedReport, wall: Option<f64>| {
+        let mut pairs = vec![
+            ("ttft_p95_s", Json::Num(round6(r.metrics.ttft.p95_s()))),
+            ("ttft_mean_s", Json::Num(round6(r.metrics.ttft.mean_s()))),
+            ("tpot_mean_s", Json::Num(round6(r.metrics.tpot.mean_s()))),
+            ("modeled_tokens_per_s", Json::Num(round3(r.metrics.tokens_per_s()))),
+            ("generated_tokens", Json::Num(r.metrics.generated_tokens as f64)),
+            ("modeled_wall_span_s", Json::Num(round6(r.metrics.wall_span_s))),
+        ];
+        if let Some(w) = wall {
+            let per_token_us = w * 1e6 / (r.metrics.generated_tokens as f64).max(1.0);
+            pairs.push(("dispatch_overhead_us_per_token", Json::Num(round3(per_token_us))));
+        }
+        obj(pairs)
+    };
+
+    gate(
+        failures,
+        "decode batched tokens/s",
+        metric(baseline.as_ref(), &["batched", "modeled_tokens_per_s"]),
+        batched.metrics.tokens_per_s(),
+    );
+
+    let speedup = serial.metrics.ttft.p95_s() / batched.metrics.ttft.p95_s().max(1e-12);
+    obj(vec![
+        ("bench", Json::Str("decode".into())),
+        ("schema_version", Json::Num(1.0)),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.into())),
+        ("model", Json::Str("bert-l".into())),
+        ("env", Json::Str("B".into())),
+        ("mbps", Json::Num(MBPS)),
+        ("requests", Json::Num(n_requests as f64)),
+        ("seed", Json::Num(11.0)),
+        ("max_batch", Json::Num(4.0)),
+        ("reps", Json::Num(reps as f64)),
+        ("batched", mode_json(&batched, Some(wall_s))),
+        ("serial", mode_json(&serial, None)),
+        ("batched_ttft_p95_speedup", Json::Num(round3(speedup))),
     ])
 }
 

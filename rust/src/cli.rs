@@ -101,13 +101,16 @@ USAGE:
                   [--wire f32|f16|i8]
   galaxy serve    --devices <1..4> [--requests N] [--flavor xla|pallas]
                   [--policy fifo|sjf|edf] [--window N] [--slo SECONDS]
-                  [--tier-mix I:B:E] [--shed]
+                  [--tier-mix I:B:E] [--shed] [--decode-tokens N]
                   [--no-overlap] [--artifacts DIR] [--seed S]
                   [--wire f32|f16|i8]
                   --policy accepts `deadline` as an alias for `edf`;
                   --tier-mix draws interactive:batch:best-effort tiers at
                   the given weights, --shed turns on predictive admission
-                  control (unmeetable requests shed or downgraded)
+                  control (unmeetable requests shed or downgraded),
+                  --decode-tokens generates N tokens per request after
+                  prefill (TTFT/TPOT reported; admission charges the
+                  whole decode budget)
   galaxy lint     [--fix-allowlist]
                   checks the invariant rule table (docs/INVARIANTS.md)
                   against the crate sources; exits non-zero on violations
@@ -317,11 +320,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wire = WireFormat::parse(&args.get_or("wire", "f32"))?;
     let overlap = if args.has("no-overlap") { OverlapMode::None } else { OverlapMode::Tiled };
     let tier_mix = parse_tier_mix(args.get("tier-mix"))?;
+    let decode_tokens = args.get_usize("decode-tokens", 0)?;
     let sched_cfg = SchedulerConfig {
         policy: Policy::parse(&args.get_or("policy", "fifo"))?,
         slo_s: args.get_f64("slo", 10.0)?,
         max_in_flight: args.get_usize("window", 0)?,
         admission_control: args.has("shed"),
+        ..Default::default()
     };
     let dir = args
         .get("artifacts")
@@ -347,6 +352,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut reqs =
         QnliWorkload { mean_len: 48, std_len: 8.0, min_len: 8, max_len: seq, mean_gap_s: 0.0 }
             .generate(n_requests, seed);
+    if decode_tokens > 0 {
+        // Generative serving: every request decodes N tokens after its
+        // prefill; the total length must still fit the artifact ladder.
+        for r in &mut reqs {
+            r.seq_len = r.seq_len.min(seq.saturating_sub(decode_tokens).max(1));
+            r.max_new_tokens = decode_tokens;
+        }
+    }
     if let Some(weights) = tier_mix {
         // Seeded weighted tier draw, decoupled from the length stream so
         // the same seed serves the same lengths with or without tiers.
@@ -406,6 +419,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wire.elem_bytes(),
         report.pjrt_calls()
     );
+    if m.generated_tokens > 0 {
+        println!(
+            "generated {} tokens ({:.2} tok/s modeled+measured)",
+            m.generated_tokens,
+            m.tokens_per_s()
+        );
+        let mut gt = Table::new(
+            "Generative latency".to_string(),
+            &["tier", "ttft mean", "ttft p95", "tpot mean", "tpot p95"],
+        );
+        gt.row(&[
+            "all".to_string(),
+            fmt_secs(m.ttft.mean_s()),
+            fmt_secs(m.ttft.p95_s()),
+            fmt_secs(m.tpot.mean_s()),
+            fmt_secs(m.tpot.p95_s()),
+        ]);
+        for t in Tier::ALL {
+            let ts = m.tier(t);
+            if ts.ttft.count() == 0 {
+                continue;
+            }
+            gt.row(&[
+                t.name().to_string(),
+                fmt_secs(ts.ttft.mean_s()),
+                fmt_secs(ts.ttft.p95_s()),
+                fmt_secs(ts.tpot.mean_s()),
+                fmt_secs(ts.tpot.p95_s()),
+            ]);
+        }
+        println!("{}", gt.render());
+    }
     if tier_mix.is_some() || args.has("shed") {
         let mut tt = Table::new(
             "Per-tier SLO accounting".to_string(),

@@ -676,6 +676,15 @@ impl RealCluster {
                         .map_err(|e| GalaxyError::Fabric(format!("worker {i} gone: {e}")))?;
                     }
                 }
+                Cmd::Decode { req, .. } => {
+                    // Workers have no seq-len-1 decode executables until
+                    // the manifest ships `decode_programs`; the engine
+                    // shim models decode steps instead of issuing them,
+                    // so reaching here is a protocol bug, not a fallback.
+                    return Err(GalaxyError::Fabric(format!(
+                        "Decode command for request {req} issued without decode artifacts"
+                    )));
+                }
                 Cmd::Layer { req, layer } => {
                     for (i, tx) in self.to_workers.iter().enumerate() {
                         tx.send(LeaderCmd::Layer { req, layer })

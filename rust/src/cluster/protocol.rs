@@ -32,6 +32,13 @@ pub enum Cmd {
     /// selecting which per-bucket executables and ring-tile geometry the
     /// workers use for every subsequent `Layer` of this request.
     Begin { req: u64, bucket: usize },
+    /// Register one generative decode step: a seq-len-1 pass at position
+    /// `pos` of request `req`, reading the worker's KV shard for rung
+    /// `bucket`. Like `Begin` it opens a per-layer command stream (the
+    /// paced `Layer`/`Finish` commands that follow walk the decode
+    /// programs instead of the prefill ones), so a decode step rides the
+    /// same round-robin interleave as full requests.
+    Decode { req: u64, bucket: usize, pos: usize },
     /// Execute one HMP layer of the request on the worker's shard.
     Layer { req: u64, layer: usize },
     /// Emit the request's output shard and drop its state.
@@ -89,6 +96,20 @@ impl Dispatcher {
         cmds
     }
 
+    /// Admit one decode step of request `req` at position `pos` against
+    /// rung `bucket`: returns its `Decode` opener (unpaced, like `Begin`)
+    /// plus whatever the credit window allows. The step then advances
+    /// through the same `Layer` rotation as prefill requests, so a
+    /// decode step and a prefill interleave layer-wise on the fabric.
+    pub fn submit_decode(&mut self, req: u64, bucket: usize, pos: usize) -> Vec<Cmd> {
+        debug_assert!(!self.next_layer.contains_key(&req), "duplicate request id {req}");
+        self.next_layer.insert(req, 0);
+        self.rotation.push_back(req);
+        let mut cmds = vec![Cmd::Decode { req, bucket, pos }];
+        self.pump(&mut cmds);
+        cmds
+    }
+
     /// One paced command was acknowledged (worker 0 finished a layer or a
     /// finish); returns the follow-on commands the freed credit allows.
     pub fn ack(&mut self) -> Vec<Cmd> {
@@ -139,9 +160,10 @@ mod tests {
         let mine: Vec<&Cmd> = stream
             .iter()
             .filter(|c| match c {
-                Cmd::Begin { req: r, .. } | Cmd::Layer { req: r, .. } | Cmd::Finish { req: r } => {
-                    *r == req
-                }
+                Cmd::Begin { req: r, .. }
+                | Cmd::Decode { req: r, .. }
+                | Cmd::Layer { req: r, .. }
+                | Cmd::Finish { req: r } => *r == req,
             })
             .collect();
         assert_eq!(mine.len(), layers + 2, "req {req}: {mine:?}");
@@ -283,6 +305,41 @@ mod tests {
             assert_request_shape(&stream, req, layers);
         }
         assert_eq!(d.active(), 0);
+    }
+
+    #[test]
+    fn decode_step_opens_with_decode_and_interleaves_with_prefill() {
+        // A decode step has the same paced shape as a request (layers
+        // then finish) but opens with `Decode` carrying the KV position;
+        // it joins the round-robin rotation, so it interleaves with an
+        // in-flight prefill rather than queuing behind it.
+        let mut d = Dispatcher::new(3, 1);
+        let mut stream = d.submit(0, 1);
+        stream.extend(d.submit_decode(9, 1, 41));
+        let stream = drain(&mut d, stream);
+        assert_request_shape(&stream, 0, 3);
+        let mine: Vec<&Cmd> = stream
+            .iter()
+            .filter(|c| match c {
+                Cmd::Begin { req: r, .. }
+                | Cmd::Decode { req: r, .. }
+                | Cmd::Layer { req: r, .. }
+                | Cmd::Finish { req: r } => *r == 9,
+            })
+            .collect();
+        assert_eq!(mine.len(), 3 + 2, "decode step stream: {mine:?}");
+        assert_eq!(*mine[0], Cmd::Decode { req: 9, bucket: 1, pos: 41 });
+        for (l, c) in mine[1..=3].iter().enumerate() {
+            assert_eq!(**c, Cmd::Layer { req: 9, layer: l });
+        }
+        assert_eq!(*mine[4], Cmd::Finish { req: 9 });
+        // Interleaved: the decode step's first layer is issued before the
+        // prefill's last layer.
+        let pos = |c: Cmd| stream.iter().position(|x| *x == c).unwrap();
+        assert!(
+            pos(Cmd::Layer { req: 9, layer: 0 }) < pos(Cmd::Layer { req: 0, layer: 2 }),
+            "decode step serialized behind the prefill: {stream:?}"
+        );
     }
 
     #[test]

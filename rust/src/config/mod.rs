@@ -43,6 +43,12 @@ pub struct Manifest {
     /// equal `seq_len`.
     pub seq_buckets: Vec<usize>,
     pub programs: Vec<ManifestProgram>,
+    /// Names of per-rung seq-len-1 decode programs (generative KV-cache
+    /// steps), one per bucket when present. Older manifests predate
+    /// generative decode: an absent key degrades to an empty list, and
+    /// the serving stack models decode steps instead of running them
+    /// natively (sim-only decode).
+    pub decode_programs: Vec<String>,
     /// Directory the manifest was loaded from (artifact files live here).
     pub dir: PathBuf,
 }
@@ -95,6 +101,16 @@ impl Manifest {
                  seq_len {seq_len}; re-run `make artifacts`"
             )));
         }
+        // Decode programs are optional: manifests lowered before the
+        // generative-decode subsystem simply lack the key.
+        let decode_programs = match j.as_obj()?.get("decode_programs") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|p| Ok(p.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(Manifest {
             model_name: m.get("name")?.as_str()?.to_string(),
             hidden: m.get("hidden")?.as_usize()?,
@@ -112,8 +128,16 @@ impl Manifest {
                 .collect::<Result<Vec<_>>>()?,
             seq_buckets,
             programs,
+            decode_programs,
             dir,
         })
+    }
+
+    /// Whether the artifacts include the per-rung seq-len-1 decode
+    /// programs generative serving needs to run natively. `false` means
+    /// decode steps are modeled (sim-only) rather than dispatched.
+    pub fn has_decode_programs(&self) -> bool {
+        !self.decode_programs.is_empty()
     }
 
     /// Cross-check the manifest against the Rust-side model constants.
@@ -301,6 +325,26 @@ mod tests {
         .unwrap();
         assert_eq!(m.seq_buckets, vec![24, 36, 60]);
         assert_eq!(m.seq_len, 60);
+    }
+
+    #[test]
+    fn manifest_without_decode_programs_degrades_to_sim_only() {
+        let m = load_from_str("nodec", &manifest_json("")).unwrap();
+        assert!(m.decode_programs.is_empty());
+        assert!(!m.has_decode_programs());
+    }
+
+    #[test]
+    fn manifest_decode_programs_parse_when_present() {
+        let text = r#"{"model": {"name": "galaxy-mini", "hidden": 384, "n_heads": 12,
+                "head_dim": 32, "ffn_dim": 1536, "mlp_unit": 128, "n_layers": 6,
+                "seq_len": 60, "seq_tiles": [15, 20, 30, 60],
+                "seq_buckets": [24, 60]},
+              "programs": [],
+              "decode_programs": ["decode_s24__xla", "decode_s60__xla"]}"#;
+        let m = load_from_str("dec", text).unwrap();
+        assert_eq!(m.decode_programs, vec!["decode_s24__xla", "decode_s60__xla"]);
+        assert!(m.has_decode_programs());
     }
 
     #[test]

@@ -17,8 +17,8 @@
 
 use crate::cluster::{FinishedRequest, RealCluster};
 use crate::engine::{
-    BucketLadder, BucketSpec, Engine, EngineCaps, InferOutcome, InferRequest, Submitted,
-    SubmittedBatch, DEFAULT_MAX_BATCH,
+    decode_step_schedule, BucketLadder, BucketSpec, DecodeStep, Engine, EngineCaps, InferOutcome,
+    InferRequest, Submitted, SubmittedBatch, DEFAULT_MAX_BATCH,
 };
 use crate::error::{GalaxyError, Result};
 use crate::planner::Deployment;
@@ -66,6 +66,7 @@ fn outcome_from_finished(fin: FinishedRequest) -> Result<InferOutcome> {
         device_busy_s: fin.device_busy_s,
         output: Some(output),
         measured_span_s: Some((fin.started_s, fin.finished_s)),
+        decode_pos: None,
     })
 }
 
@@ -79,6 +80,10 @@ impl Engine for RealCluster {
                 .map(|b| BucketSpec {
                     seq_len: b,
                     layer_cost_s: self.measured_layer_cost_s(b).unwrap_or(0.0),
+                    // No decode measurements until decode programs exist
+                    // (manifest `decode_programs`); fails open like the
+                    // prefill cost before a rung has served.
+                    decode_cost_s: 0.0,
                 })
                 .collect(),
         );
@@ -145,5 +150,45 @@ impl Engine for RealCluster {
 
     fn measured_now_s(&self) -> Option<f64> {
         Some(self.elapsed_s())
+    }
+
+    /// One decode step on the fabric. Until per-rung seq-len-1 decode
+    /// programs are lowered (manifest `decode_programs` — see
+    /// `python/compile/aot.py`), the workers cannot execute a cached
+    /// step natively, so the cluster reports the schedule-derived counts
+    /// — [`decode_step_schedule`], identical to the simulator's walk,
+    /// which is exactly what the cross-engine parity suite pins — with a
+    /// measured-ladder service estimate (a per-token slice of the rung's
+    /// measured whole-pass cost; 0.0 before the rung has served, like
+    /// every other pre-measurement estimate).
+    fn decode_step(&mut self, step: &DecodeStep) -> Result<InferOutcome> {
+        if !self.seq_buckets().contains(&step.bucket) {
+            return Err(GalaxyError::Shape(format!(
+                "bucket {} not admissible: artifacts are lowered for {:?}",
+                step.bucket,
+                self.seq_buckets()
+            )));
+        }
+        let m = self.model();
+        let (sync_points, ring_bytes) = decode_step_schedule(
+            self.n_devices(),
+            m.layers,
+            m.hidden,
+            self.wire_format().elem_bytes(),
+        );
+        let caps = self.caps();
+        let service_s = caps
+            .est_decode_step_s(step.bucket)
+            .or_else(|| caps.est_service_s(step.bucket).map(|s| s / step.bucket.max(1) as f64))
+            .unwrap_or(0.0);
+        Ok(InferOutcome {
+            id: step.id,
+            service_s,
+            compute_s: service_s,
+            sync_points,
+            ring_bytes,
+            decode_pos: Some(step.pos),
+            ..Default::default()
+        })
     }
 }

@@ -62,6 +62,12 @@ pub struct BucketSpec {
     pub seq_len: usize,
     /// Straggler cost of one HMP layer at this bucket, seconds.
     pub layer_cost_s: f64,
+    /// Straggler cost of one HMP layer of a *decode step* at this bucket
+    /// — a seq-len-1 pass reading a KV cache of up to `seq_len` tokens
+    /// (modeled by the simulator, measured by the real fabric; 0.0 when
+    /// the engine has no estimate yet, which fails open exactly like
+    /// `layer_cost_s`).
+    pub decode_cost_s: f64,
 }
 
 /// The engine-visible artifact bucket ladder: ascending padded sequence
@@ -84,7 +90,11 @@ impl BucketLadder {
 
     /// Ladder of bare lengths with no cost estimates.
     pub fn from_lens(lens: &[usize]) -> Self {
-        Self::new(lens.iter().map(|&l| BucketSpec { seq_len: l, layer_cost_s: 0.0 }).collect())
+        Self::new(
+            lens.iter()
+                .map(|&l| BucketSpec { seq_len: l, layer_cost_s: 0.0, decode_cost_s: 0.0 })
+                .collect(),
+        )
     }
 
     pub fn len(&self) -> usize {
@@ -205,6 +215,18 @@ impl EngineCaps {
         let s = spec.layer_cost_s * self.layers.max(1) as f64;
         (s > 0.0).then_some(s)
     }
+
+    /// Conservative one-token decode-step service estimate at the rung
+    /// that fits `seq_len` tokens of KV capacity: the ladder's per-layer
+    /// decode cost times [`EngineCaps::layers`]. `None` when no bucket
+    /// fits or the rung carries no decode estimate yet — the admission
+    /// predictor then falls back to charging a whole prefill-shaped pass
+    /// per token (loose, but still one-sided).
+    pub fn est_decode_step_s(&self, seq_len: usize) -> Option<f64> {
+        let (_, spec) = self.ladder.bucket_for(seq_len)?;
+        let s = spec.decode_cost_s * self.layers.max(1) as f64;
+        (s > 0.0).then_some(s)
+    }
 }
 
 /// One inference request as the engine sees it: identity, valid token
@@ -240,6 +262,51 @@ impl InferRequest {
         }
         Ok(self.seq_len)
     }
+}
+
+/// One autoregressive decode step as the engine sees it: which
+/// generation it belongs to, the rung whose KV capacity the generation
+/// was admitted at, and the token position being produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeStep {
+    /// Request id of the generation (the prefill ran under the same id).
+    pub id: u64,
+    /// Padded rung the generation executes at. Fixed for the whole
+    /// generation: the scheduler buckets at `prompt + max_new_tokens` so
+    /// the KV cache never outgrows its rung, and the decode-step
+    /// slot-budget contract charges every step at this rung's full KV
+    /// capacity regardless of `pos` (position-independent cost).
+    pub bucket: usize,
+    /// Token position this step produces (the KV cache holds `pos`
+    /// tokens going in and `pos + 1` coming out). The first decode step
+    /// after a prefill of `n` prompt tokens has `pos == n`.
+    pub pos: usize,
+}
+
+/// Schedule-property counts of one decode step under tensor parallelism:
+/// `(sync_points, ring_bytes)` for a seq-len-1 pass across `devices`
+/// devices. This is the *single source of truth* both engines report
+/// from — the cross-engine decode parity suite pins
+/// [`crate::sim::SimEngine`]'s walked counts and the cluster's modeled
+/// counts against it.
+///
+/// Per layer the four ring phases of the HMP block (qkv entry, out-proj
+/// exit, MLP gemm1 entry, gemm2 exit) each synchronize once and move the
+/// single new token's activation (`hidden · elem_bytes` encoded bytes)
+/// through `devices − 1` ring hops. Solo deployments have no ring:
+/// `(0, 0)`.
+pub fn decode_step_schedule(
+    devices: usize,
+    layers: usize,
+    hidden: usize,
+    elem_bytes: usize,
+) -> (u64, u64) {
+    if devices <= 1 {
+        return (0, 0);
+    }
+    let syncs = 4 * layers as u64;
+    let bytes = syncs * (devices as u64 - 1) * (hidden * elem_bytes) as u64;
+    (syncs, bytes)
 }
 
 /// Per-request execution report, filled by every backend with identical
@@ -282,6 +349,10 @@ pub struct InferOutcome {
     /// The scheduler prefers these over modeled stage arithmetic when
     /// placing the request on its timeline.
     pub measured_span_s: Option<(f64, f64)>,
+    /// Token position when this outcome reports one decode step
+    /// ([`Engine::decode_step`]) — the per-token timing record of a
+    /// generation. `None` for whole-sequence (prefill-shaped) passes.
+    pub decode_pos: Option<usize>,
 }
 
 impl InferOutcome {
@@ -387,12 +458,64 @@ pub trait Engine {
     /// default declines: an engine must opt into live replanning — the
     /// simulator re-times instantly, the PJRT fabric re-spawns its
     /// worker ring against the new shard partition (artifact-gated).
+    ///
+    /// Engines that hold live KV caches additionally migrate them here
+    /// (see [`crate::kvcache`]): a replan that preserves the rung's head
+    /// partition keeps every shard in place, any other replan rebuilds
+    /// the affected caches against the new layout — either way the token
+    /// stream of an in-progress generation continues unchanged.
     fn install_deployment(&mut self, dep: &Deployment) -> Result<()> {
         let _ = dep;
         Err(GalaxyError::Config(format!(
             "engine `{}` does not support live deployment swaps",
             self.caps().name
         )))
+    }
+
+    /// Execute one autoregressive decode step: a seq-len-1 pass at
+    /// `step.bucket` reading the generation's KV cache and appending one
+    /// token to it. The default is a *modeled shim* for engines without
+    /// native decode (mocks, the admission-only baseline): service is
+    /// the capability ladder's decode-step estimate — falling back to a
+    /// whole prefill-shaped pass when the rung carries no decode cost,
+    /// and to zero on bare ladders — with no sync/ring accounting.
+    fn decode_step(&mut self, step: &DecodeStep) -> Result<InferOutcome> {
+        let caps = self.caps();
+        let service_s = caps
+            .est_decode_step_s(step.bucket)
+            .or_else(|| caps.est_service_s(step.bucket))
+            .unwrap_or(0.0);
+        Ok(InferOutcome {
+            id: step.id,
+            service_s,
+            compute_s: service_s,
+            decode_pos: Some(step.pos),
+            ..Default::default()
+        })
+    }
+
+    /// Execute one lockstep decode *iteration*: every member advances by
+    /// one token together (the token-level continuous-batching step), so
+    /// each outcome's `service_s` is the iteration span — the straggler
+    /// member's step time. Outcomes come back in submission order. The
+    /// default loops [`Engine::decode_step`] and widens every member to
+    /// the max, which is exact for engines whose decode step occupies
+    /// all devices (tensor parallelism).
+    fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<InferOutcome>> {
+        let mut outs =
+            steps.iter().map(|s| self.decode_step(s)).collect::<Result<Vec<InferOutcome>>>()?;
+        let span = outs.iter().map(|o| o.service_s).fold(0.0, f64::max);
+        for o in &mut outs {
+            o.service_s = span;
+        }
+        Ok(outs)
+    }
+
+    /// The generation `id` is complete (or shed): release its KV cache.
+    /// Engines without per-generation state accept silently.
+    fn end_generation(&mut self, id: u64) -> Result<()> {
+        let _ = id;
+        Ok(())
     }
 }
 
@@ -439,8 +562,8 @@ mod tests {
         // Bare ladder (no cost estimates): no service estimate either.
         assert_eq!(c.est_service_s(64), None);
         c.ladder = BucketLadder::new(vec![
-            BucketSpec { seq_len: 64, layer_cost_s: 0.01 },
-            BucketSpec { seq_len: 128, layer_cost_s: 0.0 },
+            BucketSpec { seq_len: 64, layer_cost_s: 0.01, decode_cost_s: 0.0 },
+            BucketSpec { seq_len: 128, layer_cost_s: 0.0, decode_cost_s: 0.0 },
         ]);
         c.layers = 24;
         assert_eq!(c.est_service_s(50), Some(0.24));
@@ -448,6 +571,81 @@ mod tests {
         assert_eq!(c.est_service_s(100), None);
         // Oversize: no bucket, no estimate.
         assert_eq!(c.est_service_s(999), None);
+    }
+
+    #[test]
+    fn est_decode_step_scales_decode_cost_by_layers() {
+        let mut c = caps(&[64, 128]);
+        // Bare ladder: neither a prefill nor a decode estimate.
+        assert_eq!(c.est_decode_step_s(64), None);
+        c.ladder = BucketLadder::new(vec![
+            BucketSpec { seq_len: 64, layer_cost_s: 0.01, decode_cost_s: 0.002 },
+            BucketSpec { seq_len: 128, layer_cost_s: 0.02, decode_cost_s: 0.0 },
+        ]);
+        c.layers = 24;
+        assert!((c.est_decode_step_s(50).unwrap() - 0.048).abs() < 1e-12);
+        // A rung without a decode estimate fails open (None), even when
+        // its prefill estimate exists.
+        assert_eq!(c.est_decode_step_s(100), None);
+        assert_eq!(c.est_service_s(100), Some(0.48));
+        assert_eq!(c.est_decode_step_s(999), None);
+    }
+
+    #[test]
+    fn decode_step_schedule_counts() {
+        // Solo: no ring, no syncs.
+        assert_eq!(decode_step_schedule(1, 24, 768, 4), (0, 0));
+        // d devices: 4 syncs per layer, each phase moving the single new
+        // token's activation through d-1 ring hops.
+        let (syncs, bytes) = decode_step_schedule(3, 24, 768, 4);
+        assert_eq!(syncs, 4 * 24);
+        assert_eq!(bytes, 4 * 24 * 2 * 768 * 4);
+        // Ring bytes scale with the wire format's encoded element size.
+        let (_, half) = decode_step_schedule(3, 24, 768, 2);
+        assert_eq!(half * 2, bytes);
+    }
+
+    #[test]
+    fn default_decode_step_models_from_caps() {
+        // ShimOnly's bare ladder carries no cost estimates: the modeled
+        // decode shim fails open to zero service but still stamps the
+        // per-token position.
+        let mut e = ShimOnly;
+        let o = e.decode_step(&DecodeStep { id: 7, bucket: 64, pos: 32 }).unwrap();
+        assert_eq!(o.id, 7);
+        assert_eq!(o.decode_pos, Some(32));
+        assert_eq!(o.service_s, 0.0);
+        e.end_generation(7).unwrap();
+
+        // With a costed ladder the shim charges the decode estimate, and
+        // the default lockstep batch widens every member to the span.
+        struct Costed;
+        impl Engine for Costed {
+            fn caps(&self) -> EngineCaps {
+                let mut c = caps(&[64, 128]);
+                c.ladder = BucketLadder::new(vec![
+                    BucketSpec { seq_len: 64, layer_cost_s: 0.01, decode_cost_s: 0.002 },
+                    BucketSpec { seq_len: 128, layer_cost_s: 0.02, decode_cost_s: 0.005 },
+                ]);
+                c
+            }
+            fn infer(&mut self, req: &InferRequest) -> Result<InferOutcome> {
+                Ok(InferOutcome { id: req.id, ..Default::default() })
+            }
+        }
+        let mut e = Costed;
+        let o = e.decode_step(&DecodeStep { id: 1, bucket: 64, pos: 10 }).unwrap();
+        assert!((o.service_s - 0.002).abs() < 1e-12);
+        let outs = e
+            .decode_batch(&[
+                DecodeStep { id: 1, bucket: 64, pos: 11 },
+                DecodeStep { id: 2, bucket: 128, pos: 90 },
+            ])
+            .unwrap();
+        assert_eq!(outs.iter().map(|o| o.id).collect::<Vec<_>>(), vec![1, 2]);
+        // Lockstep: both members report the straggler's step span.
+        assert!((outs[0].service_s - 0.005).abs() < 1e-12);
+        assert!((outs[1].service_s - 0.005).abs() < 1e-12);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! [`Engine`] implementation for the calibrated simulator.
 
-use crate::engine::{BucketLadder, BucketSpec, Engine, EngineCaps, InferOutcome, InferRequest};
+use crate::engine::{
+    BucketLadder, BucketSpec, DecodeStep, Engine, EngineCaps, InferOutcome, InferRequest,
+};
 use crate::error::{GalaxyError, Result};
 use crate::parallel::OverlapMode;
 use crate::planner::Deployment;
@@ -21,6 +23,7 @@ pub fn outcome_from_sim(id: u64, rep: &SimReport) -> InferOutcome {
         device_busy_s: rep.device_busy_s.clone(),
         output: None,
         measured_span_s: None,
+        decode_pos: None,
     }
 }
 
@@ -32,7 +35,11 @@ impl Engine for SimEngine<'_> {
         let ladder = BucketLadder::new(
             self.buckets()
                 .iter()
-                .map(|&b| BucketSpec { seq_len: b, layer_cost_s: self.layer_cost(b).total_s() })
+                .map(|&b| BucketSpec {
+                    seq_len: b,
+                    layer_cost_s: self.layer_cost(b).total_s(),
+                    decode_cost_s: self.decode_cost(b).total_s(),
+                })
                 .collect(),
         );
         EngineCaps {
@@ -64,9 +71,30 @@ impl Engine for SimEngine<'_> {
     }
 
     /// Live replanning on the modeled timeline: the next request simply
-    /// times under the new deployment's partitions.
+    /// times under the new deployment's partitions. Live KV caches
+    /// migrate with the swap (preserved when the rung's head partition
+    /// survives, re-sharded otherwise) so in-progress generations keep
+    /// decoding correctly.
     fn install_deployment(&mut self, dep: &Deployment) -> Result<()> {
         self.swap_deployment(dep.clone())
+    }
+
+    /// One autoregressive decode step on the modeled timeline: validate
+    /// and advance the generation's deployment-sharded KV cache, then
+    /// time the seq-len-1 walk at the rung. The cache is created lazily
+    /// at the first step (the prefill populated `pos` prompt tokens).
+    fn decode_step(&mut self, step: &DecodeStep) -> Result<InferOutcome> {
+        self.kv_prepare(step.id, step.bucket, step.pos)?;
+        let rep = self.run_decode_step(step.bucket);
+        self.kv_append(step.id, 1)?;
+        let mut o = outcome_from_sim(step.id, &rep);
+        o.decode_pos = Some(step.pos);
+        Ok(o)
+    }
+
+    fn end_generation(&mut self, id: u64) -> Result<()> {
+        self.kv_end(id);
+        Ok(())
     }
 
     /// Batched execution of bucket-compatible requests: the members enter
@@ -243,6 +271,44 @@ mod tests {
             assert_eq!(o.hidden_comm_s, 0.0);
             assert!((o.exposed_comm_s - single.exposed_comm_s).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn trait_decode_walks_the_kv_cache() {
+        let model = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let mut eng = engine(&model, &env, 284);
+        // Ladder rungs now carry a decode estimate alongside the prefill
+        // cost — strictly cheaper per layer.
+        let caps = eng.caps();
+        let rung = caps.ladder.bucket_for(284).unwrap().1;
+        assert!(rung.decode_cost_s > 0.0);
+        assert!(rung.decode_cost_s < rung.layer_cost_s);
+        // Prefill then a short decode loop: positions must advance in
+        // order, the cache is created lazily and freed at the end.
+        eng.infer(&InferRequest::new(4, 200, 284)).unwrap();
+        let direct = eng.run_decode_step(284);
+        for k in 0..3 {
+            let o = eng.decode_step(&DecodeStep { id: 4, bucket: 284, pos: 200 + k }).unwrap();
+            assert_eq!(o.decode_pos, Some(200 + k));
+            assert!((o.service_s - direct.total_s()).abs() < 1e-12);
+            assert_eq!(o.sync_points, direct.sync_points as u64);
+            assert_eq!(o.ring_bytes, direct.ring_bytes);
+        }
+        assert_eq!(eng.kv_len(4), Some(203));
+        // Skipping a position is a shape error, not silent corruption.
+        let err = eng.decode_step(&DecodeStep { id: 4, bucket: 284, pos: 999 }).unwrap_err();
+        assert!(matches!(err, GalaxyError::Shape(_)), "got {err}");
+        eng.end_generation(4).unwrap();
+        assert_eq!(eng.kv_active(), 0);
+        // The default lockstep decode_batch widens members to the span.
+        let steps =
+            [DecodeStep { id: 8, bucket: 284, pos: 10 }, DecodeStep { id: 9, bucket: 284, pos: 50 }];
+        let outs = eng.decode_batch(&steps).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!((outs[0].service_s - outs[1].service_s).abs() < 1e-15);
+        eng.end_generation(8).unwrap();
+        eng.end_generation(9).unwrap();
     }
 
     #[test]

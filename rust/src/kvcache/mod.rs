@@ -1,0 +1,303 @@
+//! Deployment-sharded KV-cache bookkeeping for generative decode.
+//!
+//! A generation's KV cache lives where its attention heads live: device
+//! *i* caches exactly the K/V projections of the heads the rung's
+//! partition assigns it, so a decode step reads its shard locally and
+//! the ring only ever moves the single new token's activation. That
+//! makes the shard layout a *derived* artifact of the [`Deployment`] —
+//! the single source of partition truth — and never something a caller
+//! computes for itself. The `kv-partition-truth` lint rule enforces the
+//! boundary mechanically: constructing a [`KvShardSpec`] outside this
+//! module is a lint error, so every layout in the tree flows through
+//! [`KvLayout::for_rung`] and therefore through
+//! [`Deployment::partition_for`].
+//!
+//! ## Capacity: the decode-step slot-budget contract
+//!
+//! A generation is admitted at the rung that fits `prompt +
+//! max_new_tokens` tokens, and its cache capacity *is* that rung's
+//! padded bucket. Every decode step is budgeted at the rung's full KV
+//! capacity (the simulator streams `bucket` rows of K/V per layer
+//! regardless of how full the cache is), which keeps per-step cost a
+//! per-rung constant: admission's `n × step` estimate is a one-sided
+//! upper bound and the cross-engine parity pins are position-
+//! independent.
+//!
+//! ## Replans mid-generation
+//!
+//! [`crate::engine::Engine::install_deployment`] migrates live caches
+//! via [`KvCache::migrate`]: when the new deployment keeps the rung's
+//! head partition, every shard is already in the right place
+//! ([`KvMigration::Preserved`]); otherwise the cache is re-sharded
+//! against the new layout ([`KvMigration::Rebuilt`], bumping the cache
+//! generation). Either way the cached token count — and therefore the
+//! token stream of the in-progress generation — is preserved.
+
+use crate::error::{GalaxyError, Result};
+use crate::model::ModelConfig;
+use crate::planner::Deployment;
+
+/// Bytes per cached element. K/V operands are decoded f32 on every
+/// device regardless of the ring's wire format (quantization is a
+/// transport encoding, not a storage format).
+pub const KV_BYTES_PER_ELEM: usize = 4;
+
+/// One device's slice of a generation's KV cache at a rung: which
+/// attention heads it holds and how many token slots it budgets.
+///
+/// Only [`KvLayout::for_rung`] may construct these (lint rule
+/// `kv-partition-truth`): the shard map is derived from the rung's head
+/// partition, never hand-assembled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvShardSpec {
+    /// Device holding this shard (its rank in the partition).
+    pub device: usize,
+    /// Attention heads cached here — exactly the rung partition's head
+    /// count for this device.
+    pub heads: usize,
+    /// Per-head projection width.
+    pub head_dim: usize,
+    /// Token-slot capacity: the rung's padded bucket.
+    pub capacity: usize,
+}
+
+impl KvShardSpec {
+    /// Bytes one cached token occupies in this shard per layer (K and V).
+    pub fn bytes_per_token(&self) -> usize {
+        2 * self.heads * self.head_dim * KV_BYTES_PER_ELEM
+    }
+
+    /// Full-capacity shard footprint per layer, bytes.
+    pub fn bytes(&self) -> usize {
+        self.capacity * self.bytes_per_token()
+    }
+}
+
+/// The per-device shard map of one generation's KV cache at its rung —
+/// derived from [`Deployment::partition_for`] and nothing else.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    shards: Vec<KvShardSpec>,
+    bucket: usize,
+}
+
+impl KvLayout {
+    /// Derive the shard layout for a generation admitted at `bucket`
+    /// padded tokens: device *i* caches the heads the rung's partition
+    /// assigns it, with token capacity equal to the rung bucket.
+    pub fn for_rung(dep: &Deployment, model: &ModelConfig, bucket: usize) -> Self {
+        let partition = dep.partition_for(bucket);
+        let shards = partition
+            .heads
+            .iter()
+            .enumerate()
+            .map(|(device, &heads)| KvShardSpec {
+                device,
+                heads,
+                head_dim: model.head_dim(),
+                capacity: bucket,
+            })
+            .collect();
+        Self { shards, bucket }
+    }
+
+    pub fn shards(&self) -> &[KvShardSpec] {
+        &self.shards
+    }
+
+    /// The rung bucket this layout budgets (token capacity of every
+    /// shard).
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Head total across shards — must equal the model's head count
+    /// whenever the deployment partitions the full model.
+    pub fn total_heads(&self) -> usize {
+        self.shards.iter().map(|s| s.heads).sum()
+    }
+
+    /// Aggregate bytes one cached token occupies across all shards per
+    /// layer.
+    pub fn bytes_per_token(&self) -> usize {
+        self.shards.iter().map(|s| s.bytes_per_token()).sum()
+    }
+}
+
+/// What [`KvCache::migrate`] did to a cache when a new deployment was
+/// installed mid-generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMigration {
+    /// The new deployment keeps the rung's head partition: every shard
+    /// already lives on the right device, nothing moves.
+    Preserved,
+    /// The head partition changed: the cache was re-sharded against the
+    /// new layout (generation counter bumped), cached length kept.
+    Rebuilt,
+}
+
+/// One generation's KV cache: its derived shard layout plus how many
+/// token slots are filled. The engine holding it models (or executes)
+/// the actual K/V storage; this type owns the layout/capacity contract.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    id: u64,
+    layout: KvLayout,
+    len: usize,
+    generation: u64,
+}
+
+impl KvCache {
+    /// Fresh cache with `len` tokens already cached (the prefill's
+    /// prompt). Errs when `len` exceeds the layout's rung capacity.
+    pub fn with_len(id: u64, layout: KvLayout, len: usize) -> Result<Self> {
+        if len > layout.bucket() {
+            return Err(GalaxyError::Shape(format!(
+                "KV cache for request {id}: {len} cached tokens exceed rung capacity {}",
+                layout.bucket()
+            )));
+        }
+        Ok(Self { id, layout, len, generation: 0 })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn layout(&self) -> &KvLayout {
+        &self.layout
+    }
+
+    /// Cached token count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Token-slot capacity (the rung bucket).
+    pub fn capacity(&self) -> usize {
+        self.layout.bucket()
+    }
+
+    /// How many times this cache has been re-sharded by replans.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Append `n` freshly decoded tokens. Exceeding the rung capacity is
+    /// a [`GalaxyError::Shape`] error — the scheduler buckets at
+    /// `prompt + max_new_tokens`, so a well-formed generation never
+    /// overflows.
+    pub fn append(&mut self, n: usize) -> Result<()> {
+        if self.len + n > self.capacity() {
+            return Err(GalaxyError::Shape(format!(
+                "KV cache for request {}: appending {n} tokens to {} exceeds rung capacity {}",
+                self.id,
+                self.len,
+                self.capacity()
+            )));
+        }
+        self.len += n;
+        Ok(())
+    }
+
+    /// Re-derive the shard layout under a newly installed deployment.
+    /// The cached token count survives either way; only the shard map
+    /// (and the cache generation, when it changes) is touched.
+    pub fn migrate(&mut self, dep: &Deployment, model: &ModelConfig) -> KvMigration {
+        let fresh = KvLayout::for_rung(dep, model, self.layout.bucket());
+        if fresh == self.layout {
+            return KvMigration::Preserved;
+        }
+        self.layout = fresh;
+        self.generation += 1;
+        KvMigration::Rebuilt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::planner::{Partition, Plan};
+
+    fn model() -> ModelConfig {
+        // 12 heads, hidden 768 → head_dim 64.
+        ModelConfig::distilbert()
+    }
+
+    fn dep(heads: Vec<usize>, buckets: &[usize]) -> Deployment {
+        let n = heads.len();
+        let total: usize = heads.iter().sum();
+        let plan = Plan {
+            partition: Partition {
+                heads,
+                mlp_units: vec![total / n.max(1); n],
+                seq: vec![64; n],
+            },
+            pred_mha_s: 0.0,
+            pred_mlp_s: 0.0,
+            pred_conn_s: 0.0,
+            mem_mb: vec![0.0; n],
+        };
+        Deployment::from_plan(plan, buckets)
+    }
+
+    #[test]
+    fn layout_follows_the_rung_head_partition() {
+        let m = model();
+        let d = dep(vec![7, 5], &[64, 128]);
+        let layout = KvLayout::for_rung(&d, &m, 128);
+        let p = d.partition_for(128);
+        assert_eq!(layout.shards().len(), p.heads.len());
+        for (shard, &heads) in layout.shards().iter().zip(&p.heads) {
+            assert_eq!(shard.heads, heads);
+            assert_eq!(shard.head_dim, m.head_dim());
+            assert_eq!(shard.capacity, 128);
+        }
+        assert_eq!(layout.total_heads(), m.heads);
+        assert_eq!(layout.bucket(), 128);
+        // K + V, f32, per layer.
+        assert_eq!(layout.bytes_per_token(), 2 * m.hidden * KV_BYTES_PER_ELEM);
+    }
+
+    #[test]
+    fn append_is_capacity_checked() {
+        let m = model();
+        let d = dep(vec![6, 6], &[64]);
+        let layout = KvLayout::for_rung(&d, &m, 64);
+        // Prefill longer than the rung is rejected outright.
+        assert!(KvCache::with_len(1, layout.clone(), 65).is_err());
+        let mut cache = KvCache::with_len(1, layout, 60).unwrap();
+        assert_eq!((cache.len(), cache.capacity()), (60, 64));
+        for _ in 0..4 {
+            cache.append(1).unwrap();
+        }
+        let err = cache.append(1).unwrap_err();
+        assert!(matches!(err, GalaxyError::Shape(_)), "got {err}");
+        assert_eq!(cache.len(), 64, "failed append must not advance the cache");
+    }
+
+    #[test]
+    fn migrate_preserves_matching_partitions_and_rebuilds_changed_ones() {
+        let m = model();
+        let d1 = dep(vec![8, 4], &[64, 128]);
+        let mut cache = KvCache::with_len(3, KvLayout::for_rung(&d1, &m, 128), 40).unwrap();
+
+        // Same head partition (a replan that only re-times): shards stay.
+        let d1b = dep(vec![8, 4], &[64, 128]);
+        assert_eq!(cache.migrate(&d1b, &m), KvMigration::Preserved);
+        assert_eq!((cache.len(), cache.generation()), (40, 0));
+
+        // Head partition moved: re-shard, keep the cached tokens.
+        let d2 = dep(vec![6, 6], &[64, 128]);
+        assert_eq!(cache.migrate(&d2, &m), KvMigration::Rebuilt);
+        assert_eq!((cache.len(), cache.generation()), (40, 1));
+        let p = d2.partition_for(128);
+        let shard_heads: Vec<usize> = cache.layout().shards().iter().map(|s| s.heads).collect();
+        assert_eq!(shard_heads, p.heads);
+    }
+}

@@ -57,6 +57,7 @@ pub mod collective;
 pub mod config;
 pub mod engine;
 pub mod error;
+pub mod kvcache;
 pub mod lint;
 pub mod metrics;
 pub mod model;

@@ -143,6 +143,21 @@ pub const RULES: &[Rule] = &[
         ],
     },
     Rule {
+        id: "kv-partition-truth",
+        why: "KV-cache shard layouts are derived from the rung's head partition \
+              (Deployment::partition_for) via KvLayout::for_rung; hand-built \
+              KvShardSpec maps outside kvcache/ would fork partition truth",
+        scan: &[],
+        except: &["kvcache/"],
+        forbid: &["KvShardSpec {"],
+        skip_test_code: true,
+        require: &[
+            ("kvcache/mod.rs", "partition_for"),
+            ("kvcache/mod.rs", "pub fn for_rung"),
+            ("sim/engine.rs", "for_rung"),
+        ],
+    },
+    Rule {
         id: "measured-clock",
         why: "wall-clock reads outside the measurement plumbing make replans \
               depend on un-modeled time; route timing through the cluster's \

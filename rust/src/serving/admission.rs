@@ -15,8 +15,12 @@
 //! The per-request service estimate comes from the active deployment's
 //! bucket ladder: the rung's per-layer straggler cost times the model's
 //! layer count ([`EngineCaps::est_service_s`] — modeled by the
-//! simulator, measured by the real fabric once a rung has served). The
-//! predicted finish of a candidate admitted at `now` is
+//! simulator, measured by the real fabric once a rung has served).
+//! Generative requests are charged their whole budget up front —
+//! prefill at the rung covering the *finished* length plus
+//! `max_new_tokens` decode steps ([`Admission::est_request_s`]), with a
+//! full prefill pass per token when the ladder carries no decode cost.
+//! The predicted finish of a candidate admitted at `now` is
 //!
 //! ```text
 //! finish ≤ now + in-flight drain + Σ service(queued, same-or-higher tier) + service(own)
@@ -83,6 +87,31 @@ impl Admission {
         self.caps.est_service_s(seq_len)
     }
 
+    /// Per-token decode-step estimate at the rung covering `seq_len`
+    /// (`None` when the rung carries no decode cost — e.g. the real
+    /// fabric before decode programs exist).
+    pub fn est_decode_step_s(&self, seq_len: usize) -> Option<f64> {
+        self.caps.est_decode_step_s(seq_len)
+    }
+
+    /// Conservative whole-request estimate: prefill plus the full
+    /// generative budget. The rung is chosen at `seq_len +
+    /// max_new_tokens` — the KV cache must hold the finished sequence,
+    /// so that is the rung the request actually occupies — and when the
+    /// ladder carries no decode-step cost each decode token is charged a
+    /// whole prefill pass (decode is strictly cheaper, so the bound
+    /// stays one-sided). Classic requests (`max_new_tokens == 0`)
+    /// reduce to [`Admission::est_service_s`] exactly.
+    pub fn est_request_s(&self, q: &Queued) -> Option<f64> {
+        let total = q.seq_len + q.max_new_tokens;
+        let prefill = self.est_service_s(total)?;
+        if q.max_new_tokens == 0 {
+            return Some(prefill);
+        }
+        let step = self.est_decode_step_s(total).unwrap_or(prefill);
+        Some(prefill + q.max_new_tokens as f64 * step)
+    }
+
     /// Upper bound on the finish instant of `q` admitted at `now_s` with
     /// `inflight_s` seconds of dispatched-but-unfinished work and the
     /// given admission queue ahead of it. `None` when the engine has no
@@ -94,16 +123,18 @@ impl Admission {
         inflight_s: f64,
         queue: &[Queued],
     ) -> Option<f64> {
-        let own = self.est_service_s(q.seq_len)?;
+        let own = self.est_request_s(q)?;
         // Tier-major policies: only same-or-higher-priority backlog can
         // dispatch ahead of the candidate. Queued requests without a
         // cost estimate contribute nothing (under-counting them keeps
         // the bound one-sided only per-rung; in practice a ladder has
-        // estimates for all rungs or none).
+        // estimates for all rungs or none). Generative backlog is
+        // charged its full prefill + decode budget: decode tokens hold
+        // the engine just like queued prefills do.
         let backlog: f64 = queue
             .iter()
             .filter(|p| p.tier.rank() <= q.tier.rank())
-            .filter_map(|p| self.est_service_s(p.seq_len))
+            .filter_map(|p| self.est_request_s(p))
             .sum();
         Some(now_s + inflight_s.max(0.0) + backlog + own)
     }
@@ -141,8 +172,12 @@ mod tests {
             name: "admission-test",
             devices: 2,
             ladder: BucketLadder::new(vec![
-                BucketSpec { seq_len: 64, layer_cost_s },
-                BucketSpec { seq_len: 128, layer_cost_s: layer_cost_s * 2.0 },
+                BucketSpec { seq_len: 64, layer_cost_s, decode_cost_s: layer_cost_s * 0.1 },
+                BucketSpec {
+                    seq_len: 128,
+                    layer_cost_s: layer_cost_s * 2.0,
+                    decode_cost_s: layer_cost_s * 0.2,
+                },
             ]),
             layers: 10,
             overlap: OverlapMode::Tiled,
@@ -155,7 +190,19 @@ mod tests {
     }
 
     fn q(id: u64, tier: Tier, deadline_s: f64) -> Queued {
-        Queued { id, seq_len: 64, arrival_s: 0.0, deadline_s, tier, arrival_idx: id }
+        Queued {
+            id,
+            seq_len: 64,
+            arrival_s: 0.0,
+            deadline_s,
+            tier,
+            arrival_idx: id,
+            max_new_tokens: 0,
+        }
+    }
+
+    fn gq(id: u64, seq_len: usize, max_new_tokens: usize, deadline_s: f64) -> Queued {
+        Queued { seq_len, max_new_tokens, ..q(id, Tier::Interactive, deadline_s) }
     }
 
     #[test]
@@ -190,6 +237,41 @@ mod tests {
         // deadline provably unmeetable.
         let peers: Vec<Queued> = (1..=8).map(|i| q(i, Tier::Interactive, 99.0)).collect();
         assert!(matches!(adm.assess(&cand, 0.0, 0.0, &peers), Decision::Shed { .. }));
+    }
+
+    #[test]
+    fn generative_requests_charge_prefill_plus_decode() {
+        // 10 layers x 0.01 s/layer. Rung selection uses the *finished*
+        // length: 64 input + 30 new tokens needs the 128 rung, so
+        // prefill = 0.2 s and each decode step = 10 x 0.002 = 0.02 s.
+        let adm = Admission::from_caps(&caps(0.01));
+        let cand = gq(0, 64, 30, 9.0);
+        let est = adm.est_request_s(&cand).unwrap();
+        assert!((est - (0.2 + 30.0 * 0.02)).abs() < 1e-12, "est {est}");
+        // max_new_tokens = 0 reduces exactly to the prefill estimate.
+        assert_eq!(adm.est_request_s(&q(1, Tier::Interactive, 9.0)), Some(0.1));
+        // Generative backlog delays the candidate by its full budget.
+        let p = adm
+            .predicted_finish_s(&q(1, Tier::Interactive, 9.0), 0.0, 0.0, &[cand])
+            .unwrap();
+        assert!((p - (0.8 + 0.1)).abs() < 1e-12, "predicted {p}");
+        // A finished length past the top rung has no estimate: fail open.
+        assert_eq!(adm.est_request_s(&gq(2, 100, 100, 9.0)), None);
+        assert_eq!(adm.assess(&gq(2, 100, 100, -1.0), 0.0, 0.0, &[]), Decision::Admit);
+    }
+
+    #[test]
+    fn decode_cost_free_ladders_charge_a_prefill_per_token() {
+        // A ladder with prefill costs but no decode measurements (the
+        // real fabric before decode programs exist) stays conservative:
+        // every decode token is charged one whole prefill pass.
+        let mut c = caps(0.01);
+        let rungs = c.ladder.iter().map(|r| BucketSpec { decode_cost_s: 0.0, ..*r }).collect();
+        c.ladder = BucketLadder::new(rungs);
+        let adm = Admission::from_caps(&c);
+        assert_eq!(adm.est_decode_step_s(64), None);
+        let est = adm.est_request_s(&gq(0, 32, 3, 9.0)).unwrap();
+        assert!((est - 0.1 * 4.0).abs() < 1e-12, "est {est}");
     }
 
     #[test]

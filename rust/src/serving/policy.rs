@@ -39,6 +39,11 @@ pub struct Queued {
     /// admission (callers constructing traces may leave it 0 — the
     /// scheduler overwrites it). The final tie-break key of every policy.
     pub arrival_idx: u64,
+    /// Generative budget: tokens to decode after prefill (0 = classic
+    /// single-shot request). Policies ignore it — prefill ordering is
+    /// tier/SLO-driven — but admission charges prefill + decode service
+    /// and the scheduler's decode loop consumes it token by token.
+    pub max_new_tokens: usize,
 }
 
 /// Admission-queue ordering policy.
@@ -102,7 +107,15 @@ mod tests {
     use super::*;
 
     fn q(id: u64, seq_len: usize, arrival_s: f64, deadline_s: f64, arrival_idx: u64) -> Queued {
-        Queued { id, seq_len, arrival_s, deadline_s, tier: Tier::default(), arrival_idx }
+        Queued {
+            id,
+            seq_len,
+            arrival_s,
+            deadline_s,
+            tier: Tier::default(),
+            arrival_idx,
+            max_new_tokens: 0,
+        }
     }
 
     /// Drain a queue through repeated picks; returns dispatch order.

@@ -48,10 +48,29 @@
 //! admission — see that module for the predictor and its conservatism
 //! contract. Shedding happens *only* at admission: once admitted, a
 //! request is always served.
+//!
+//! **Generative decode** ([`Request::max_new_tokens`] > 0): the prefill
+//! pass rides the machinery above unchanged; afterwards the request
+//! enters a decode loop of seq-len-1 steps against its
+//! deployment-sharded KV cache ([`crate::kvcache`]). With
+//! [`SchedulerConfig::token_batching`] (the default) decode is
+//! token-level continuous batching, vLLM-style: each iteration batches
+//! one decode step from every ready in-progress generation (tier-major,
+//! up to `max_batch`), so a new arrival's prefill never waits out
+//! another request's whole generation and concurrent generations share
+//! each step's sync/comm cost. Prefill keeps priority — decode
+//! iterations run while the admission queue is empty — which also keeps
+//! non-generative traces bit-identical to the pre-generative scheduler.
+//! Buckets are chosen at `seq_len + max_new_tokens` (the KV cache must
+//! hold the *finished* sequence), admission charges the whole
+//! generative budget up front, and completions carry first-token and
+//! per-token timing (TTFT / TPOT in [`ServeMetrics`]). Natively
+//! pipelined engines decode inline at harvest, after the measured
+//! prefill span.
 
 use std::collections::{HashMap, HashSet};
 
-use crate::engine::{Engine, InferOutcome, InferRequest, SubmittedBatch};
+use crate::engine::{DecodeStep, Engine, InferOutcome, InferRequest, SubmittedBatch};
 use crate::error::{GalaxyError, Result};
 use crate::metrics::ServeMetrics;
 use crate::planner::Deployment;
@@ -79,11 +98,24 @@ pub struct SchedulerConfig {
     /// baseline. Engines without ladder cost estimates fail open either
     /// way.
     pub admission_control: bool,
+    /// Token-level continuous batching for generative requests (vLLM
+    /// style, the default): each decode iteration batches one seq-len-1
+    /// step from every ready in-progress generation. Off = the
+    /// admission-time-only baseline — a generative request holds the
+    /// engine through its entire decode loop after prefill. Irrelevant
+    /// to non-generative traces.
+    pub token_batching: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { policy: Policy::Fifo, slo_s: 10.0, max_in_flight: 0, admission_control: false }
+        Self {
+            policy: Policy::Fifo,
+            slo_s: 10.0,
+            max_in_flight: 0,
+            admission_control: false,
+            token_batching: true,
+        }
     }
 }
 
@@ -112,6 +144,13 @@ pub struct Completion {
     /// The request's deadline — kept through downgrades, so per-tier
     /// accounting judges a downgraded request against its original SLO.
     pub deadline_s: f64,
+    /// Instant the first decoded token completed (`None` for classic
+    /// single-shot requests).
+    pub first_token_s: Option<f64>,
+    /// Decoded tokens produced (0 = classic single-shot request).
+    pub new_tokens: usize,
+    /// Aggregated engine outcome: the prefill pass plus every decode
+    /// step of this request folded together ([`fold_outcome`]).
     pub outcome: InferOutcome,
 }
 
@@ -231,6 +270,7 @@ impl<E: Engine> Scheduler<E> {
                 deadline_s: r.arrival_s + slo,
                 tier: r.tier,
                 arrival_idx: 0, // stamped at admission
+                max_new_tokens: r.max_new_tokens,
             })
             .collect();
         self.run_trace(&trace)
@@ -306,6 +346,11 @@ impl<E: Engine> Scheduler<E> {
         // `SubmittedBatch::InFlight`): dispatched, not yet harvested.
         let mut in_flight: HashMap<u64, (Queued, usize, u64)> = HashMap::new();
         let mut next_batch: u64 = 0;
+        // Generative requests past prefill, between decode steps
+        // (modeled engines only — natively pipelined engines decode
+        // inline at harvest). Drained by decode iterations whenever the
+        // admission queue is empty.
+        let mut decoding: Vec<Decoding> = Vec::new();
         // Governor-refreshed deployment awaiting a request boundary.
         let mut pending_swap: Option<Deployment> = None;
         let mut replans = 0usize;
@@ -314,7 +359,7 @@ impl<E: Engine> Scheduler<E> {
         let admission = self.cfg.admission_control.then(|| Admission::from_caps(&caps));
         let mut downgrades = [0usize; Tier::COUNT];
 
-        while next < pending.len() || !queue.is_empty() {
+        while next < pending.len() || !queue.is_empty() || !decoding.is_empty() {
             // Engines executing in real time advance the clock on their
             // own; the trace clock never runs behind the measured one.
             if let Some(now) = self.engine.measured_now_s() {
@@ -327,15 +372,22 @@ impl<E: Engine> Scheduler<E> {
             while next < pending.len() && pending[next].arrival_s <= t + 1e-12 {
                 let mut q = pending[next];
                 next += 1;
-                if caps.bucket_for(q.seq_len).is_none() {
+                // Generative requests bucket at their *finished* length:
+                // the KV cache (and the padded artifact) must hold the
+                // prompt plus every decoded token.
+                let total_len = q.seq_len + q.max_new_tokens;
+                if caps.bucket_for(total_len).is_none() {
                     report.rejections.push(Rejection {
                         id: q.id,
                         seq_len: q.seq_len,
                         tier: q.tier,
                         kind: RejectKind::Oversize,
                         reason: format!(
-                            "request of {} tokens exceeds the largest artifact bucket ({})",
+                            "request of {} tokens ({} prompt + {} decode budget) exceeds \
+                             the largest artifact bucket ({})",
+                            total_len,
                             q.seq_len,
+                            q.max_new_tokens,
                             caps.max_seq()
                         ),
                     });
@@ -350,10 +402,27 @@ impl<E: Engine> Scheduler<E> {
                     let modeled_tail = finishes.last().map_or(0.0, |&f| (f - t).max(0.0));
                     let native_tail: f64 = in_flight
                         .values()
-                        .filter_map(|(p, _, _)| adm.est_service_s(p.seq_len))
+                        .filter_map(|(p, _, _)| adm.est_request_s(p))
                         .sum();
-                    match adm.assess(&q, t.max(q.arrival_s), modeled_tail + native_tail, &queue)
-                    {
+                    // In-progress generations: every undecoded token is
+                    // unfinished work ahead of the candidate, charged at
+                    // the decode-step estimate (prefill estimate when the
+                    // ladder carries no decode costs — conservative).
+                    let decode_tail: f64 = decoding
+                        .iter()
+                        .filter_map(|d| {
+                            let total = d.q.seq_len + d.q.max_new_tokens;
+                            adm.est_decode_step_s(total)
+                                .or_else(|| adm.est_service_s(total))
+                                .map(|s| (d.q.max_new_tokens - d.tokens_done) as f64 * s)
+                        })
+                        .sum();
+                    match adm.assess(
+                        &q,
+                        t.max(q.arrival_s),
+                        modeled_tail + native_tail + decode_tail,
+                        &queue,
+                    ) {
                         Decision::Admit => {}
                         Decision::Downgrade { to, predicted_finish_s: _ } => {
                             downgrades[q.tier.rank()] += 1;
@@ -393,6 +462,24 @@ impl<E: Engine> Scheduler<E> {
                 continue;
             }
             if queue.is_empty() {
+                // Token-level continuous batching: with no prefill work
+                // queued, run one decode iteration — a seq-len-1 step for
+                // every ready generation, batched tier-major. Prefill
+                // keeps priority: if the next arrival lands before the
+                // decode cohort could even start, advance to it and admit
+                // first (the iteration would only delay its prefill).
+                if !decoding.is_empty() {
+                    let gate = finishes.last().copied().unwrap_or(0.0);
+                    let ready =
+                        decoding.iter().map(|d| d.ready_at).fold(f64::INFINITY, f64::min);
+                    let start_at = t.max(ready).max(gate);
+                    if next < pending.len() && pending[next].arrival_s <= start_at + 1e-12 {
+                        t = t.max(pending[next].arrival_s);
+                        continue;
+                    }
+                    self.decode_iteration(&mut decoding, &mut t, gate, max_batch, &mut report)?;
+                    continue;
+                }
                 if next >= pending.len() {
                     // Everything remaining was rejected at admission.
                     break;
@@ -459,11 +546,14 @@ impl<E: Engine> Scheduler<E> {
 
             let i = self.cfg.policy.pick(&queue);
             let leader = queue.remove(i);
-            // Admission already filtered unservable requests.
-            let bucket = caps.bucket_for(leader.seq_len).ok_or_else(|| {
+            // Admission already filtered unservable requests. Generative
+            // requests bucket at prompt + decode budget — the artifact
+            // that holds the finished sequence.
+            let total_len = |q: &Queued| q.seq_len + q.max_new_tokens;
+            let bucket = caps.bucket_for(total_len(&leader)).ok_or_else(|| {
                 GalaxyError::Fabric(format!(
-                    "request {}: admitted with seq {} but no bucket serves it",
-                    leader.id, leader.seq_len
+                    "request {}: admitted with seq {} (+{} decode) but no bucket serves it",
+                    leader.id, leader.seq_len, leader.max_new_tokens
                 ))
             })?;
             let mut batch = vec![leader];
@@ -471,7 +561,7 @@ impl<E: Engine> Scheduler<E> {
                 // One scan builds the bucket-compatible pool; picks then
                 // shrink it in policy order without rescanning the queue.
                 let mut mates: Vec<usize> = (0..queue.len())
-                    .filter(|&j| caps.bucket_for(queue[j].seq_len) == Some(bucket))
+                    .filter(|&j| caps.bucket_for(total_len(&queue[j])) == Some(bucket))
                     .collect();
                 let mut pool: Vec<Queued> = mates.iter().map(|&j| queue[j]).collect();
                 let mut chosen: Vec<usize> = Vec::new();
@@ -538,26 +628,92 @@ impl<E: Engine> Scheduler<E> {
             last_stage_gate = start + stage_s;
             t = start;
 
+            // Baseline serial-decode cursor: with token batching off, each
+            // generative member holds the engine through its whole decode
+            // loop, one member after another, starting at the batch exit.
+            let mut gen_cursor = finish;
             for q in batch {
                 let outcome = by_id.remove(&q.id).ok_or_else(|| {
                     GalaxyError::Fabric(format!("engine returned no outcome for request {}", q.id))
                 })?;
+                // The governor calibrates on prefill passes only — decode
+                // steps have their own cost model and would skew the
+                // per-layer telemetry it averages.
                 self.governed_observe(bucket, &outcome, &mut pending_swap);
-                finishes.push(finish);
-                report.completions.push(Completion {
-                    id: q.id,
-                    seq_len: q.seq_len,
-                    bucket,
-                    batch: batch_id,
-                    arrival_s: q.arrival_s,
-                    start_s: start,
-                    finish_s: finish,
-                    queueing_s: start - q.arrival_s,
-                    service_s: outcome.service_s,
-                    tier: q.tier,
-                    deadline_s: q.deadline_s,
-                    outcome,
-                });
+                if q.max_new_tokens == 0 {
+                    finishes.push(finish);
+                    report.completions.push(Completion {
+                        id: q.id,
+                        seq_len: q.seq_len,
+                        bucket,
+                        batch: batch_id,
+                        arrival_s: q.arrival_s,
+                        start_s: start,
+                        finish_s: finish,
+                        queueing_s: start - q.arrival_s,
+                        service_s: outcome.service_s,
+                        tier: q.tier,
+                        deadline_s: q.deadline_s,
+                        first_token_s: None,
+                        new_tokens: 0,
+                        outcome,
+                    });
+                } else if self.cfg.token_batching {
+                    // Prefill done: the generation joins the decode set
+                    // and produces tokens in shared iterations.
+                    finishes.push(finish);
+                    decoding.push(Decoding {
+                        q,
+                        bucket,
+                        batch: batch_id,
+                        start_s: start,
+                        first_token_s: None,
+                        tokens_done: 0,
+                        ready_at: finish,
+                        outcome,
+                    });
+                } else {
+                    // Admission-time-only baseline: decode the whole
+                    // budget serially, seq-len-1 step by step.
+                    let mut acc = outcome;
+                    let mut first = None;
+                    let mut fin = gen_cursor;
+                    for k in 0..q.max_new_tokens {
+                        let step =
+                            DecodeStep { id: q.id, bucket, pos: q.seq_len + k };
+                        let o = self.engine.decode_step(&step)?;
+                        fin += o.service_s;
+                        first.get_or_insert(fin);
+                        fold_outcome(&mut acc, &o);
+                    }
+                    self.engine.end_generation(q.id)?;
+                    gen_cursor = fin;
+                    // Keep the finish timeline non-decreasing (window
+                    // checks index it directly).
+                    let fin = finishes.last().map_or(fin, |&l| fin.max(l));
+                    finishes.push(fin);
+                    report.completions.push(Completion {
+                        id: q.id,
+                        seq_len: q.seq_len,
+                        bucket,
+                        batch: batch_id,
+                        arrival_s: q.arrival_s,
+                        start_s: start,
+                        finish_s: fin,
+                        queueing_s: start - q.arrival_s,
+                        service_s: acc.service_s,
+                        tier: q.tier,
+                        deadline_s: q.deadline_s,
+                        first_token_s: first,
+                        new_tokens: q.max_new_tokens,
+                        outcome: acc,
+                    });
+                }
+            }
+            if gen_cursor > finish {
+                // Serial decode occupies every device (decode steps are
+                // tensor-parallel): nothing else may enter meanwhile.
+                last_stage_gate = last_stage_gate.max(gen_cursor);
             }
         }
         // Drain the native pipeline.
@@ -650,6 +806,25 @@ impl<E: Engine> Scheduler<E> {
             }
             None => (q.arrival_s, q.arrival_s + outcome.service_s),
         };
+        // Natively pipelined engines decode inline, serially, after the
+        // measured prefill span: the per-layer dispatcher has no decode
+        // lockstep yet, so the decode loop extends this request's own
+        // timeline rather than joining a shared iteration.
+        let mut first_token_s = None;
+        let mut new_tokens = 0usize;
+        let mut finish = finish;
+        let mut outcome = outcome;
+        for k in 0..q.max_new_tokens {
+            let step = DecodeStep { id: q.id, bucket, pos: q.seq_len + k };
+            let o = self.engine.decode_step(&step)?;
+            finish += o.service_s;
+            first_token_s.get_or_insert(finish);
+            new_tokens += 1;
+            fold_outcome(&mut outcome, &o);
+        }
+        if q.max_new_tokens > 0 {
+            self.engine.end_generation(q.id)?;
+        }
         report.completions.push(Completion {
             id: q.id,
             seq_len: q.seq_len,
@@ -664,10 +839,132 @@ impl<E: Engine> Scheduler<E> {
             service_s: outcome.service_s,
             tier: q.tier,
             deadline_s: q.deadline_s,
+            first_token_s,
+            new_tokens,
             outcome,
         });
         Ok(true)
     }
+
+    /// One token-level decode iteration: batch a seq-len-1 step for
+    /// every ready in-progress generation (tier-major, arrival-stable,
+    /// up to `max_batch`), run them in lockstep, and retire generations
+    /// that exhausted their budget. Called only while the admission
+    /// queue is empty — prefill keeps priority — and never earlier than
+    /// `gate_s`, the modeled prefill pipeline's tail (decode steps are
+    /// tensor-parallel: they hold every device and cannot fill another
+    /// request's bubbles).
+    fn decode_iteration(
+        &mut self,
+        decoding: &mut Vec<Decoding>,
+        t: &mut f64,
+        gate_s: f64,
+        max_batch: usize,
+        report: &mut SchedReport,
+    ) -> Result<()> {
+        let ready_min = decoding.iter().map(|d| d.ready_at).fold(f64::INFINITY, f64::min);
+        let t_eff = t.max(ready_min).max(gate_s);
+        let mut members: Vec<usize> = (0..decoding.len())
+            .filter(|&i| decoding[i].ready_at <= t_eff + 1e-12)
+            .collect();
+        members.sort_by_key(|&i| (decoding[i].q.tier.rank(), decoding[i].q.arrival_idx));
+        members.truncate(max_batch.max(1));
+        let steps: Vec<DecodeStep> = members
+            .iter()
+            .map(|&i| {
+                let d = &decoding[i];
+                DecodeStep { id: d.q.id, bucket: d.bucket, pos: d.q.seq_len + d.tokens_done }
+            })
+            .collect();
+        let outcomes = self.engine.decode_batch(&steps)?;
+        if outcomes.len() != steps.len() {
+            return Err(GalaxyError::Fabric(format!(
+                "engine returned {} outcomes for a decode iteration of {}",
+                outcomes.len(),
+                steps.len()
+            )));
+        }
+        // Lockstep exit: the iteration spans its slowest member.
+        let span = outcomes.iter().map(|o| o.service_s).fold(0.0, f64::max);
+        let finish = t_eff + span;
+        for (&i, o) in members.iter().zip(&outcomes) {
+            let d = &mut decoding[i];
+            d.tokens_done += 1;
+            d.first_token_s.get_or_insert(finish);
+            d.ready_at = finish;
+            fold_outcome(&mut d.outcome, o);
+        }
+        *t = t.max(finish);
+        // Retire exhausted generations (in stable order — completions
+        // stay deterministic).
+        let mut i = 0;
+        while i < decoding.len() {
+            if decoding[i].tokens_done >= decoding[i].q.max_new_tokens {
+                let d = decoding.remove(i);
+                self.engine.end_generation(d.q.id)?;
+                report.completions.push(Completion {
+                    id: d.q.id,
+                    seq_len: d.q.seq_len,
+                    bucket: d.bucket,
+                    batch: d.batch,
+                    arrival_s: d.q.arrival_s,
+                    start_s: d.start_s,
+                    finish_s: d.ready_at,
+                    queueing_s: (d.start_s - d.q.arrival_s).max(0.0),
+                    service_s: d.outcome.service_s,
+                    tier: d.q.tier,
+                    deadline_s: d.q.deadline_s,
+                    first_token_s: d.first_token_s,
+                    new_tokens: d.tokens_done,
+                    outcome: d.outcome,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A generative request past its prefill pass: produces one token per
+/// decode iteration it joins until the budget is exhausted.
+struct Decoding {
+    q: Queued,
+    /// The rung the request was admitted at — prompt + decode budget;
+    /// every decode step and the KV shard layout stay on it.
+    bucket: usize,
+    /// Prefill batch id (completions keep it — TTFT analysis groups by
+    /// the prefill cohort).
+    batch: u64,
+    /// Prefill dispatch instant.
+    start_s: f64,
+    first_token_s: Option<f64>,
+    tokens_done: usize,
+    /// Instant this generation's last step (or prefill) finished; it may
+    /// join iterations starting at or after this.
+    ready_at: f64,
+    /// Prefill outcome with every decode step folded in.
+    outcome: InferOutcome,
+}
+
+/// Fold a decode-step outcome into a request's aggregate: times, sync
+/// points, bytes, and calls add up; per-device busy time adds
+/// elementwise.
+fn fold_outcome(acc: &mut InferOutcome, o: &InferOutcome) {
+    acc.service_s += o.service_s;
+    acc.compute_s += o.compute_s;
+    acc.exposed_comm_s += o.exposed_comm_s;
+    acc.hidden_comm_s += o.hidden_comm_s;
+    acc.sync_points += o.sync_points;
+    acc.ring_bytes += o.ring_bytes;
+    acc.pjrt_calls += o.pjrt_calls;
+    if acc.device_busy_s.len() < o.device_busy_s.len() {
+        acc.device_busy_s.resize(o.device_busy_s.len(), 0.0);
+    }
+    for (a, b) in acc.device_busy_s.iter_mut().zip(&o.device_busy_s) {
+        *a += b;
+    }
+    acc.decode_pos = o.decode_pos;
 }
 
 /// Maximum number of simultaneously in-flight requests on the timeline.
@@ -714,6 +1011,18 @@ fn build_metrics(report: &SchedReport, downgrades: &[usize; Tier::COUNT]) -> Ser
         let ts = &mut m.tiers[c.tier.rank()];
         ts.served += 1;
         ts.e2e.record(c.finish_s - c.arrival_s);
+        // Generative timing: TTFT from arrival (queueing + prefill +
+        // first decode step), TPOT over the remaining inter-token gaps.
+        if let Some(ft) = c.first_token_s {
+            m.ttft.record(ft - c.arrival_s);
+            ts.ttft.record(ft - c.arrival_s);
+            m.generated_tokens += c.new_tokens as u64;
+            if c.new_tokens >= 2 {
+                let tpot = (c.finish_s - ft) / (c.new_tokens - 1) as f64;
+                m.tpot.record(tpot);
+                ts.tpot.record(tpot);
+            }
+        }
         if c.finish_s <= c.deadline_s + 1e-9 {
             ts.deadlines_met += 1;
         } else {
@@ -800,6 +1109,7 @@ mod tests {
                 seq_len: l,
                 arrival_s: 0.0,
                 tier: Tier::default(),
+                max_new_tokens: 0,
             })
             .collect()
     }
@@ -901,8 +1211,8 @@ mod tests {
         assert_eq!(rep.metrics.wall_span_s, 0.0);
         // Oversize stragglers arriving after servable work, too.
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
-            Request { id: 1, seq_len: 999, arrival_s: 5.0, tier: Tier::default() },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+            Request { id: 1, seq_len: 999, arrival_s: 5.0, tier: Tier::default(), max_new_tokens: 0 },
         ];
         let rep = Scheduler::new(MockEngine::new(4)).run(&reqs).unwrap();
         assert_eq!(rep.served(), 1);
@@ -936,6 +1246,7 @@ mod tests {
             deadline_s,
             tier: Tier::default(),
             arrival_idx: 0,
+            max_new_tokens: 0,
         };
         let trace = vec![q(0, 9.0), q(1, 0.1), q(2, 1.0)];
         let cfg = SchedulerConfig {
@@ -951,8 +1262,8 @@ mod tests {
     #[test]
     fn fifo_never_dispatches_before_arrival() {
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
-            Request { id: 1, seq_len: 64, arrival_s: 5.0, tier: Tier::default() },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+            Request { id: 1, seq_len: 64, arrival_s: 5.0, tier: Tier::default(), max_new_tokens: 0 },
         ];
         let rep = Scheduler::new(MockEngine::new(8)).run(&reqs).unwrap();
         assert!(rep.completions[1].start_s >= 5.0);
@@ -1097,6 +1408,7 @@ mod tests {
             deadline_s: 10.0,
             tier: Tier::default(),
             arrival_idx: 0,
+            max_new_tokens: 0,
         };
         let trace = vec![q(0, 0.0), q(1, f64::NAN), q(2, -3.0), q(3, f64::INFINITY)];
         let rep = Scheduler::new(MockEngine::new(4)).run_trace(&trace).unwrap();
@@ -1131,6 +1443,7 @@ mod tests {
             deadline_s,
             tier: Tier::default(),
             arrival_idx: 0,
+            max_new_tokens: 0,
         };
         let trace = vec![
             q(0, 5.0),           // well-formed
@@ -1167,6 +1480,7 @@ mod tests {
             deadline_s: 7.0,
             tier: Tier::default(),
             arrival_idx: 0, // re-stamped by the scheduler
+            max_new_tokens: 0,
         };
         // Shuffled ids; arrival order is 2, 0, 1 (id 5 ties id 2's
         // arrival and loses on the id-stable admission sort).
@@ -1189,8 +1503,8 @@ mod tests {
         // A long request followed by a short one: the short one may enter
         // early but must exit at least one stage after its predecessor.
         let reqs = vec![
-            Request { id: 0, seq_len: 256, arrival_s: 0.0, tier: Tier::default() },
-            Request { id: 1, seq_len: 10, arrival_s: 0.0, tier: Tier::default() },
+            Request { id: 0, seq_len: 256, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+            Request { id: 1, seq_len: 10, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
         ];
         let rep = Scheduler::new(MockEngine::new(4)).run(&reqs).unwrap();
         let c0 = &rep.completions[0];
@@ -1341,9 +1655,9 @@ mod tests {
         // Continuous batching: a request arriving after the first batch
         // dispatched must not time-travel into it.
         let reqs = vec![
-            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
-            Request { id: 1, seq_len: 64, arrival_s: 0.0, tier: Tier::default() },
-            Request { id: 2, seq_len: 64, arrival_s: 5.0, tier: Tier::default() },
+            Request { id: 0, seq_len: 64, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+            Request { id: 1, seq_len: 64, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+            Request { id: 2, seq_len: 64, arrival_s: 5.0, tier: Tier::default(), max_new_tokens: 0 },
         ];
         let rep = Scheduler::new(BatchMock::new(12, 4)).run(&reqs).unwrap();
         let by_id = |id: u64| rep.completions.iter().find(|c| c.id == id).unwrap();
@@ -1357,23 +1671,35 @@ mod tests {
     /// admission predictor.
     struct CostedMock {
         inner: MockEngine,
+        max_batch: usize,
     }
 
     impl CostedMock {
         fn new(depth: usize) -> Self {
-            Self { inner: MockEngine::new(depth) }
+            Self::batched(depth, 1)
+        }
+
+        /// Decode-capable variant: decode iterations batch up to
+        /// `max_batch` steps in lockstep (prefill batching stays limited
+        /// by the pipeline window).
+        fn batched(depth: usize, max_batch: usize) -> Self {
+            Self { inner: MockEngine::new(depth), max_batch }
         }
     }
 
     impl Engine for CostedMock {
         fn caps(&self) -> EngineCaps {
             let mut caps = self.inner.caps();
+            caps.max_batch = self.max_batch;
             caps.ladder = BucketLadder::new(
                 [64usize, 128, 256]
                     .iter()
                     .map(|&b| crate::engine::BucketSpec {
                         seq_len: b,
                         layer_cost_s: b as f64 * self.inner.per_token_s,
+                        // A decode step streams the rung's KV once: 1/16
+                        // of the prefill pass in this mock.
+                        decode_cost_s: b as f64 * self.inner.per_token_s / 16.0,
                     })
                     .collect(),
             );
@@ -1400,6 +1726,7 @@ mod tests {
                 deadline_s: 0.1,
                 tier: Tier::Interactive,
                 arrival_idx: 0,
+                max_new_tokens: 0,
             })
             .collect();
         let base_cfg = SchedulerConfig {
@@ -1446,6 +1773,7 @@ mod tests {
                 deadline_s: 0.1,
                 tier: Tier::Batch,
                 arrival_idx: 0,
+                max_new_tokens: 0,
             })
             .collect();
         let cfg = SchedulerConfig {
@@ -1496,6 +1824,7 @@ mod tests {
                 deadline_s: 10.0,
                 tier: Tier::default(),
                 arrival_idx: 0,
+                max_new_tokens: 0,
             })
             .collect();
         let rep1 = Scheduler::new(BatchMock::new(12, 2)).run_trace(&trace).unwrap();
@@ -1505,5 +1834,187 @@ mod tests {
         assert_eq!(order1, order2, "tie-breaking must be deterministic");
         // Admission sorts by (arrival, id) stably: 1, 3, 3, then 9.
         assert_eq!(order1, vec![1, 3, 3, 9]);
+    }
+
+    fn gen_burst(n: u64, seq_len: usize, max_new_tokens: usize) -> Vec<Request> {
+        (0..n)
+            .map(|id| Request {
+                id,
+                seq_len,
+                arrival_s: 0.0,
+                tier: Tier::default(),
+                max_new_tokens,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn token_batching_beats_serial_decode_on_ttft_and_token_rate() {
+        // Acceptance pin: 4 generative requests (64-token prompts, 32
+        // new tokens each; 128-token rung → 0.128 s prefill, 8 ms decode
+        // steps) on a serial costed engine. Token-level continuous
+        // batching prefills everything first, then decodes all four
+        // generations in shared lockstep iterations; the baseline holds
+        // the engine through each request's entire decode loop, so the
+        // tail request waits out three whole generations before its
+        // first token.
+        let reqs = gen_burst(4, 64, 32);
+        let run = |token_batching: bool| {
+            let cfg = SchedulerConfig { max_in_flight: 1, token_batching, ..Default::default() };
+            Scheduler::with_config(CostedMock::batched(1, 4), cfg).run(&reqs).unwrap()
+        };
+        let batched = run(true);
+        let serial = run(false);
+        assert_eq!(batched.served(), 4);
+        assert_eq!(serial.served(), 4);
+        assert_eq!(batched.metrics.generated_tokens, 128);
+        assert_eq!(serial.metrics.generated_tokens, 128);
+        assert!(
+            batched.metrics.ttft.p95_s() < serial.metrics.ttft.p95_s(),
+            "ttft p95: batched {} !< serial {}",
+            batched.metrics.ttft.p95_s(),
+            serial.metrics.ttft.p95_s()
+        );
+        assert!(
+            batched.metrics.tokens_per_s() > serial.metrics.tokens_per_s() * 1.5,
+            "tokens/s: batched {} !> 1.5 × serial {}",
+            batched.metrics.tokens_per_s(),
+            serial.metrics.tokens_per_s()
+        );
+        // Every completion carries per-token timing, and decode steps
+        // are modeled strictly cheaper than re-running prefill.
+        for rep in [&batched, &serial] {
+            for c in &rep.completions {
+                assert_eq!(c.new_tokens, 32);
+                let ft = c.first_token_s.expect("generative completion reports TTFT");
+                assert!(ft >= c.start_s - 1e-12 && ft <= c.finish_s + 1e-12);
+            }
+            assert!(rep.metrics.tpot.mean_s() < 0.128 / 2.0);
+        }
+        // 4-wide lockstep iterations: first tokens land together, one
+        // shared step after the last prefill (4 × 0.128 + 0.008).
+        for c in &batched.completions {
+            assert!((c.first_token_s.unwrap() - 0.52).abs() < 1e-9, "{:?}", c.first_token_s);
+        }
+    }
+
+    #[test]
+    fn non_generative_traces_ignore_token_batching_mode() {
+        // The decode machinery must be invisible to classic single-shot
+        // traces: bit-identical timelines with the flag on or off.
+        let reqs = burst(&[64, 128, 64, 256, 100]);
+        let run = |token_batching: bool| {
+            let cfg = SchedulerConfig { token_batching, ..Default::default() };
+            Scheduler::with_config(CostedMock::new(4), cfg).run(&reqs).unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.served(), off.served());
+        for (a, b) in on.completions.iter().zip(&off.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.first_token_s, None);
+            assert_eq!(a.new_tokens, 0);
+        }
+        assert_eq!(on.metrics.ttft.count(), 0);
+        assert_eq!(on.metrics.generated_tokens, 0);
+    }
+
+    #[test]
+    fn generative_admission_charges_decode_budget_at_10x_overload() {
+        // Regression pin: 20 generative requests burst at t = 0 — an
+        // order of magnitude more work than a 0.6 s deadline admits. The
+        // conservative estimate charges prefill + max_new × decode-step
+        // (0.128 + 32 × 0.008 = 0.384 s each), so only the burst head is
+        // admitted — and every admitted request meets its deadline.
+        let trace: Vec<Queued> = (0..20)
+            .map(|id| Queued {
+                id,
+                seq_len: 64,
+                arrival_s: 0.0,
+                deadline_s: 0.6,
+                tier: Tier::Interactive,
+                arrival_idx: 0,
+                max_new_tokens: 32,
+            })
+            .collect();
+        let cfg =
+            SchedulerConfig { max_in_flight: 1, admission_control: true, ..Default::default() };
+        let rep = Scheduler::with_config(CostedMock::new(1), cfg).run_trace(&trace).unwrap();
+        assert_eq!(rep.served(), 1, "one 0.384 s generation fits a 0.6 s deadline");
+        assert_eq!(rep.rejections.len(), 19);
+        assert!(rep.rejections.iter().all(|r| r.kind == RejectKind::Shed));
+        let it = rep.metrics.tier(Tier::Interactive);
+        assert_eq!(it.deadlines_met, 1);
+        assert_eq!(it.deadlines_missed, 0, "admitted generative work met its SLO");
+        assert_eq!(rep.metrics.generated_tokens, 32);
+    }
+
+    #[test]
+    fn admission_charges_in_progress_generations() {
+        // A request arriving mid-way through another's generation: its
+        // predicted finish must include the first's *remaining* decode
+        // budget (the decode tail), not just queued and in-flight
+        // prefill work. Without the tail, id 1 would be admitted
+        // (0.2 + 0.384 = 0.584 ≤ 0.7) and then miss; the tail (~23
+        // steps ≈ 0.184 s) pushes the prediction past the deadline.
+        let q = |id: u64, arrival_s: f64, deadline_s: f64| Queued {
+            id,
+            seq_len: 64,
+            arrival_s,
+            deadline_s,
+            tier: Tier::Interactive,
+            arrival_idx: 0,
+            max_new_tokens: 32,
+        };
+        let trace = vec![q(0, 0.0, 0.6), q(1, 0.2, 0.7)];
+        let cfg =
+            SchedulerConfig { max_in_flight: 1, admission_control: true, ..Default::default() };
+        let rep = Scheduler::with_config(CostedMock::new(1), cfg).run_trace(&trace).unwrap();
+        assert_eq!(rep.served(), 1);
+        assert_eq!(rep.completions[0].id, 0);
+        assert_eq!(rep.rejections.len(), 1);
+        assert_eq!(rep.rejections[0].id, 1);
+        assert_eq!(rep.rejections[0].kind, RejectKind::Shed);
+        // The in-progress generation was untouched by the assessment.
+        let it = rep.metrics.tier(Tier::Interactive);
+        assert_eq!(it.deadlines_met, 1);
+        assert_eq!(it.deadlines_missed, 0);
+    }
+
+    #[test]
+    fn native_engines_decode_inline_after_measured_prefill() {
+        // Natively pipelined engines (measured spans via harvest) decode
+        // serially after the measured prefill finish. AsyncMockEngine's
+        // ladder carries no decode costs, so steps are free in the model
+        // and the first token lands exactly at the prefill finish.
+        let reqs = gen_burst(3, 64, 4);
+        let rep = Scheduler::new(AsyncMockEngine::new(8)).run(&reqs).unwrap();
+        assert_eq!(rep.served(), 3);
+        for c in &rep.completions {
+            assert_eq!(c.new_tokens, 4);
+            let ft = c.first_token_s.expect("harvested generative completion reports TTFT");
+            assert!((ft - (c.start_s + 0.2)).abs() < 1e-9);
+        }
+        assert_eq!(rep.metrics.generated_tokens, 12);
+        assert_eq!(rep.metrics.ttft.count(), 3);
+    }
+
+    #[test]
+    fn generative_bucketing_charges_the_finished_length() {
+        // A 100-token prompt with a 100-token budget needs the 256 rung
+        // (200 finished tokens); with a 200-token budget it exceeds the
+        // ladder entirely and is rejected as oversize.
+        let mut s = Scheduler::new(CostedMock::batched(4, 2));
+        let rep = s.run(&gen_burst(1, 100, 100)).unwrap();
+        assert_eq!(rep.served(), 1);
+        assert_eq!(rep.completions[0].bucket, 256);
+
+        let rep = Scheduler::new(CostedMock::new(4)).run(&gen_burst(1, 100, 200)).unwrap();
+        assert_eq!(rep.served(), 0);
+        assert_eq!(rep.rejections.len(), 1);
+        assert_eq!(rep.rejections[0].kind, RejectKind::Oversize);
+        assert!(rep.rejections[0].reason.contains("decode budget"));
     }
 }

@@ -31,7 +31,10 @@
 //! overlap — the planner's grain chooser arbitrates. The coarse `T = d`
 //! path is bit-identical to the historical bulk-synchronous model.
 
+use std::collections::HashMap;
+
 use crate::error::{GalaxyError, Result};
+use crate::kvcache::{KvCache, KvLayout, KvMigration};
 use crate::model::ModelConfig;
 use crate::parallel::OverlapMode;
 use crate::planner::{Deployment, Plan};
@@ -141,6 +144,15 @@ pub struct SimEngine<'a> {
     /// mid-trace shows up in every modeled block time and in the
     /// reported per-device busy seconds.
     slowdown: Vec<f64>,
+    /// Live KV caches by request id — created lazily on a generation's
+    /// first decode step, freed by `end_generation`, migrated by
+    /// [`SimEngine::swap_deployment`]. Layouts are always derived via
+    /// [`KvLayout::for_rung`] (lint rule `kv-partition-truth`).
+    kv: HashMap<u64, KvCache>,
+    /// Replan migration telemetry: caches whose shard layout survived a
+    /// deployment swap vs caches re-sharded by one.
+    kv_preserved: usize,
+    kv_rebuilt: usize,
 }
 
 impl<'a> SimEngine<'a> {
@@ -157,6 +169,9 @@ impl<'a> SimEngine<'a> {
             max_batch: 1,
             wire: WireFormat::F32,
             slowdown: vec![1.0; env.len()],
+            kv: HashMap::new(),
+            kv_preserved: 0,
+            kv_rebuilt: 0,
         }
     }
 
@@ -188,6 +203,9 @@ impl<'a> SimEngine<'a> {
             max_batch: 1,
             wire: WireFormat::F32,
             slowdown: vec![1.0; env.len()],
+            kv: HashMap::new(),
+            kv_preserved: 0,
+            kv_rebuilt: 0,
         })
     }
 
@@ -200,6 +218,13 @@ impl<'a> SimEngine<'a> {
     /// the modeled timeline has no in-flight state to drain). The
     /// advertised ladder follows the new deployment's rungs so caps
     /// never desync from the partitions actually executed.
+    ///
+    /// Live KV caches migrate with the swap: a replan that keeps a
+    /// cache's rung head partition leaves its shards in place, any other
+    /// replan re-shards the cache against the new layout — the cached
+    /// token count (and hence the in-progress token stream) survives
+    /// either way. Counters are readable via
+    /// [`SimEngine::kv_migrations`].
     pub fn swap_deployment(&mut self, deployment: Deployment) -> Result<()> {
         if deployment.n_devices() != self.env.len() {
             return Err(GalaxyError::Config(format!(
@@ -211,6 +236,12 @@ impl<'a> SimEngine<'a> {
         }
         self.buckets = deployment.buckets();
         self.deployment = deployment;
+        for cache in self.kv.values_mut() {
+            match cache.migrate(&self.deployment, self.model) {
+                KvMigration::Preserved => self.kv_preserved += 1,
+                KvMigration::Rebuilt => self.kv_rebuilt += 1,
+            }
+        }
         Ok(())
     }
 
@@ -273,6 +304,19 @@ impl<'a> SimEngine<'a> {
     /// Modeled per-layer straggler cost at one bucket.
     pub fn layer_cost(&self, bucket: usize) -> LayerCost {
         let rep = self.run_inference(bucket);
+        let layers = self.model.layers.max(1) as f64;
+        LayerCost {
+            seq_len: bucket,
+            compute_s: rep.compute_s / layers,
+            exposed_comm_s: rep.exposed_comm_s / layers,
+            hidden_comm_s: rep.hidden_comm_s / layers,
+        }
+    }
+
+    /// Modeled per-layer straggler cost of one *decode step* at one
+    /// bucket (what the capability ladder's `decode_cost_s` carries).
+    pub fn decode_cost(&self, bucket: usize) -> LayerCost {
+        let rep = self.run_decode_step(bucket);
         let layers = self.model.layers.max(1) as f64;
         LayerCost {
             seq_len: bucket,
@@ -409,6 +453,210 @@ impl<'a> SimEngine<'a> {
             self.conn_block(&mut rep, &seq_parts);
         }
         rep
+    }
+
+    /// Simulate one autoregressive decode step at `bucket`: a seq-len-1
+    /// pass reading the generation's deployment-sharded KV cache.
+    ///
+    /// The walk mirrors [`SimEngine::run_inference`]'s four ring phases
+    /// per layer, but the wire only ever carries the single new token's
+    /// activation (`hidden · elem_bytes` per hop), and the attention
+    /// core adds a cache-read term: device *i* streams its KV shard —
+    /// the rung's *full* capacity of `bucket` tokens for its heads (the
+    /// decode-step slot-budget contract; see [`crate::kvcache`]) —
+    /// regardless of how many slots are actually filled, so per-step
+    /// cost is a per-rung constant. Sync points (4·layers) and ring
+    /// bytes per step equal [`crate::engine::decode_step_schedule`]
+    /// exactly — the cross-engine parity pin.
+    pub fn run_decode_step(&self, bucket: usize) -> SimReport {
+        let d = self.env.len();
+        let p = self.deployment.partition_for(bucket);
+        let m = self.model;
+        let mut rep = SimReport {
+            mem_mb: self.deployment.mem_mb_for(bucket),
+            device_busy_s: vec![0.0; d],
+            ..Default::default()
+        };
+        let kd = |i: usize| p.heads[i] * m.head_dim();
+        let w = |i: usize| p.mlp_units[i] * m.mlp_unit();
+        // One token's activation per ring hop.
+        let wire = self.net.ring_step_time((m.hidden * self.wire.elem_bytes()) as u64);
+        let step_cpu = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| dev.class.collective_step_overhead_s())
+            .fold(0.0, f64::max);
+        let overlapped = self.overlap == OverlapMode::Tiled && d > 1;
+        // Partials are reduce-added as decoded f32, like the prefill exit.
+        let add = self
+            .env
+            .devices
+            .iter()
+            .map(|dev| {
+                dev.reduce_add_time(
+                    // lint: allow(wire-elem-bytes): reduce-add operands are
+                    // decoded f32, independent of the wire format
+                    (m.hidden * crate::sim::net::WIRE_BYTES_PER_ELEM) as u64,
+                )
+            })
+            .fold(0.0, f64::max);
+
+        for _layer in 0..m.layers {
+            // ---- MHA block (TP) ----------------------------------------
+            if d > 1 {
+                self.decode_ring_phase(&mut rep, d, wire, step_cpu, overlapped, 0.0, |i| {
+                    self.slow(i) * self.env.devices[i].gemm_time(m, 1, m.hidden, 3 * kd(i))
+                });
+            } else {
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, 1, m.hidden, 3 * kd(0)),
+                );
+            }
+            // middle: the fresh token attends over device-local KV shards
+            // — per-head core on one query row plus the shard stream
+            // (K and V, f32, at the rung's full slot budget).
+            let mut worst = 0.0f64;
+            for i in 0..d {
+                let shard_bytes =
+                    (2 * bucket * kd(i) * crate::kvcache::KV_BYTES_PER_ELEM) as u64;
+                let c = self.slow(i)
+                    * (self.env.devices[i].attn_core_time(m, 1, p.heads[i])
+                        + self.env.devices[i].reduce_add_time(shard_bytes));
+                rep.device_busy_s[i] += c;
+                worst = worst.max(c);
+            }
+            rep.add_compute(worst);
+            // exit: output projection of the one row ⊕ ReduceScatter.
+            if d > 1 {
+                self.decode_ring_phase(&mut rep, d, wire, step_cpu, overlapped, add, |i| {
+                    self.slow(i) * self.env.devices[i].gemm_time(m, 1, kd(i), m.hidden)
+                });
+            } else {
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, 1, kd(0), m.hidden),
+                );
+            }
+            // ---- connective (SP) ---------------------------------------
+            // The single token's row lives on one device; charge its home.
+            self.solo_block(&mut rep, self.slow(0) * self.env.devices[0].connective_time(m, 1));
+
+            // ---- MLP block (TP) ----------------------------------------
+            if d > 1 {
+                self.decode_ring_phase(&mut rep, d, wire, step_cpu, overlapped, 0.0, |i| {
+                    self.slow(i) * self.env.devices[i].gemm_time(m, 1, m.hidden, w(i))
+                });
+                self.decode_ring_phase(&mut rep, d, wire, step_cpu, overlapped, add, |i| {
+                    self.slow(i) * self.env.devices[i].gemm_time(m, 1, w(i), m.hidden)
+                });
+            } else {
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, 1, m.hidden, w(0)),
+                );
+                self.solo_block(
+                    &mut rep,
+                    self.slow(0) * self.env.devices[0].gemm_time(m, 1, w(0), m.hidden),
+                );
+            }
+            // ---- connective (SP) ---------------------------------------
+            self.solo_block(&mut rep, self.slow(0) * self.env.devices[0].connective_time(m, 1));
+        }
+        rep
+    }
+
+    /// One decode ring phase: every device GEMMs the single token's
+    /// projection for its shard while the token's activation (or the
+    /// accumulating partial, on exit phases — `add_s` > 0) rides `d-1`
+    /// ring hops. Counts are the schedule property the parity suite
+    /// pins: 1 sync point and `(d-1) · hidden · elem_bytes` ring bytes
+    /// per phase.
+    fn decode_ring_phase(
+        &self,
+        rep: &mut SimReport,
+        d: usize,
+        wire: f64,
+        step_cpu: f64,
+        overlapped: bool,
+        add_s: f64,
+        gemm: impl Fn(usize) -> f64,
+    ) {
+        rep.sync_points += 1;
+        rep.ring_bytes += (d as u64 - 1) * (self.model.hidden * self.wire.elem_bytes()) as u64;
+        let mut compute = 0.0f64;
+        for i in 0..d {
+            let g = gemm(i);
+            rep.device_busy_s[i] += g;
+            compute = compute.max(g);
+        }
+        let hops = (d - 1) as f64;
+        rep.add_step(hops * wire, compute + hops * (step_cpu + add_s), overlapped);
+    }
+
+    // ---- KV-cache registry (generative decode state) -------------------
+
+    /// Ensure the generation `id` has a live KV cache at `bucket` with
+    /// exactly `pos` tokens cached (created lazily at the first decode
+    /// step — the prefill populated `pos` prompt tokens). A bucket
+    /// mismatch or an out-of-order position is a shape error.
+    pub fn kv_prepare(&mut self, id: u64, bucket: usize, pos: usize) -> Result<()> {
+        if let Some(cache) = self.kv.get(&id) {
+            if cache.capacity() != bucket {
+                return Err(GalaxyError::Shape(format!(
+                    "request {id}: decode step at bucket {bucket} but its KV cache was \
+                     built at rung {}",
+                    cache.capacity()
+                )));
+            }
+            if cache.len() != pos {
+                return Err(GalaxyError::Shape(format!(
+                    "request {id}: decode step at position {pos} but the KV cache holds {} \
+                     tokens",
+                    cache.len()
+                )));
+            }
+            return Ok(());
+        }
+        let layout = KvLayout::for_rung(&self.deployment, self.model, bucket);
+        let cache = KvCache::with_len(id, layout, pos)?;
+        self.kv.insert(id, cache);
+        Ok(())
+    }
+
+    /// Append `n` decoded tokens to `id`'s cache (capacity-checked).
+    pub fn kv_append(&mut self, id: u64, n: usize) -> Result<()> {
+        match self.kv.get_mut(&id) {
+            Some(cache) => cache.append(n),
+            None => Err(GalaxyError::Shape(format!("request {id} has no live KV cache"))),
+        }
+    }
+
+    /// Release the generation `id`'s KV cache (idempotent).
+    pub fn kv_end(&mut self, id: u64) {
+        self.kv.remove(&id);
+    }
+
+    /// Live generations holding KV caches.
+    pub fn kv_active(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// Shard layout of a live generation's cache.
+    pub fn kv_layout(&self, id: u64) -> Option<&KvLayout> {
+        self.kv.get(&id).map(|c| c.layout())
+    }
+
+    /// Cached token count of a live generation.
+    pub fn kv_len(&self, id: u64) -> Option<usize> {
+        self.kv.get(&id).map(|c| c.len())
+    }
+
+    /// Replan migration telemetry: `(preserved, rebuilt)` cache counts
+    /// across every deployment swap this engine has performed.
+    pub fn kv_migrations(&self) -> (usize, usize) {
+        (self.kv_preserved, self.kv_rebuilt)
     }
 
     /// Single-device block: the whole cluster is one device, so the
@@ -1016,6 +1264,110 @@ mod tests {
             .clone();
         assert!(dep.set_tile_grain(284, 5).is_err(), "non-multiple grain must be rejected");
         assert!(dep.set_tile_grain(284, 1000 * env.len()).is_err(), "oversplit grain must be rejected");
+    }
+
+    #[test]
+    fn decode_counts_match_the_shared_schedule() {
+        // The decode-step sync-point and ring-byte counts are schedule
+        // properties: they must equal `engine::decode_step_schedule` —
+        // the single formula the cluster reports from — for every wire
+        // format, and be invariant to overlap mode and drift.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        for wire in [WireFormat::F32, WireFormat::F16, WireFormat::I8] {
+            let eng = SimEngine::new(&m, &env, p.clone(), NetParams::mbps(125.0))
+                .with_wire_format(wire);
+            let rep = eng.run_decode_step(284);
+            let (syncs, bytes) = crate::engine::decode_step_schedule(
+                env.len(),
+                m.layers,
+                m.hidden,
+                wire.elem_bytes(),
+            );
+            assert_eq!(rep.sync_points as u64, syncs);
+            assert_eq!(rep.ring_bytes, bytes);
+            let serial = SimEngine::new(&m, &env, p.clone(), NetParams::mbps(125.0))
+                .with_wire_format(wire)
+                .with_overlap(OverlapMode::None)
+                .run_decode_step(284);
+            assert_eq!(serial.ring_bytes, bytes);
+            assert_eq!(serial.sync_points as u64, syncs);
+        }
+    }
+
+    #[test]
+    fn decode_step_is_cheap_and_slot_budgeted() {
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let eng = SimEngine::new(&m, &env, p, NetParams::mbps(125.0));
+        // A one-token step is far cheaper than the whole-sequence pass.
+        let prefill = eng.run_inference(284).total_s();
+        let step = eng.run_decode_step(284).total_s();
+        assert!(step > 0.0);
+        assert!(step < prefill / 4.0, "decode step {step} vs prefill {prefill}");
+        // The cache-read term follows the rung's slot budget: a bigger
+        // rung streams more KV per step.
+        assert!(eng.run_decode_step(512).total_s() > eng.run_decode_step(128).total_s());
+        // decode_cost is the per-layer share the capability ladder carries.
+        let dc = eng.decode_cost(284);
+        assert!((dc.total_s() * m.layers as f64 - step).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solo_decode_has_no_comm() {
+        let m = ModelConfig::distilbert();
+        let env = EdgeEnv::new("solo", &[crate::sim::DeviceClass::NanoM]);
+        let p = plan(&m, &env, 128);
+        let rep = SimEngine::new(&m, &env, p, NetParams::mbps(125.0)).run_decode_step(128);
+        assert_eq!(rep.sync_points, 0);
+        assert_eq!(rep.ring_bytes, 0);
+        assert_eq!(rep.exposed_comm_s, 0.0);
+        assert_eq!(rep.hidden_comm_s, 0.0);
+        assert!(rep.compute_s > 0.0);
+    }
+
+    #[test]
+    fn mid_generation_replan_migrates_the_kv_cache() {
+        // The install_deployment contract for generative state: a replan
+        // that keeps the rung's head partition preserves every shard, a
+        // head move re-shards — and either way the cached token count
+        // (the generation's token stream) survives.
+        let m = ModelConfig::bert_large();
+        let env = EdgeEnv::preset_b();
+        let p = plan(&m, &env, 284);
+        let mut eng = SimEngine::new(&m, &env, p.clone(), NetParams::mbps(125.0));
+        let native: usize = p.partition.seq.iter().sum();
+        eng.kv_prepare(7, native, 40).unwrap();
+        eng.kv_append(7, 3).unwrap();
+        assert_eq!(eng.kv_len(7), Some(43));
+
+        // Same plan re-installed: heads unchanged → shards preserved.
+        let dep_same = crate::planner::Deployment::from_plan(p.clone(), &[native]);
+        eng.swap_deployment(dep_same).unwrap();
+        assert_eq!(eng.kv_migrations(), (1, 0));
+        assert_eq!(eng.kv_len(7), Some(43));
+
+        // Skewed head partition: the cache re-shards to follow it.
+        let mut skewed = p.clone();
+        let moved = skewed.partition.heads[0] - 1;
+        skewed.partition.heads[0] = moved;
+        skewed.partition.heads[1] += 1;
+        let dep_skew = crate::planner::Deployment::from_plan(skewed, &[native]);
+        eng.swap_deployment(dep_skew).unwrap();
+        assert_eq!(eng.kv_migrations(), (1, 1));
+        assert_eq!(eng.kv_len(7), Some(43), "re-sharding must not lose cached tokens");
+        let layout = eng.kv_layout(7).unwrap();
+        assert_eq!(layout.shards()[0].heads, moved, "shards must follow the new partition");
+        // Further decode steps keep walking in order.
+        eng.kv_prepare(7, native, 43).unwrap();
+        eng.kv_append(7, 1).unwrap();
+        // Out-of-order positions and foreign buckets are shape errors.
+        assert!(eng.kv_prepare(7, native, 99).is_err());
+        assert!(eng.kv_prepare(7, native + 1, 44).is_err());
+        eng.kv_end(7);
+        assert_eq!(eng.kv_active(), 0);
     }
 
     #[test]

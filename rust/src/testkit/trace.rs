@@ -40,6 +40,12 @@ pub struct TraceGen {
     /// (preserves the pre-tier rng draw order exactly). Non-empty: one
     /// joint draw picks the request's tier *and* SLO together.
     tiers: Vec<(f64, Tier, f64)>,
+    /// Weighted generative-budget mix: (weight, lo, hi) new-token ranges
+    /// (inclusive; a `(w, 0, 0)` component mixes in classic single-shot
+    /// requests). Empty = non-generative — `max_new_tokens` is 0 and *no
+    /// extra rng draw happens*, so pre-generative traces reproduce their
+    /// seeded streams bit-exactly.
+    generative: Vec<(f64, usize, usize)>,
 }
 
 impl TraceGen {
@@ -51,6 +57,7 @@ impl TraceGen {
             lengths: vec![(1.0, 16, 512)],
             deadlines: vec![(1.0, 10.0)],
             tiers: Vec::new(),
+            generative: Vec::new(),
         }
     }
 
@@ -91,6 +98,17 @@ impl TraceGen {
         self
     }
 
+    /// Weighted generative-budget mix; each request draws its
+    /// `max_new_tokens` uniformly inside a `(weight, lo, hi)` component.
+    /// A `(w, 0, 0)` component mixes classic single-shot requests into a
+    /// generative trace.
+    pub fn generative(mut self, mix: &[(f64, usize, usize)]) -> Self {
+        assert!(!mix.is_empty(), "generative mix needs a component");
+        assert!(mix.iter().all(|&(w, lo, hi)| w > 0.0 && lo <= hi));
+        self.generative = mix.to_vec();
+        self
+    }
+
     /// Draw `n` arrival-stamped requests (ids 0..n in arrival order).
     pub fn requests(&self, n: usize) -> Vec<Request> {
         self.queued(n)
@@ -100,6 +118,7 @@ impl TraceGen {
                 seq_len: q.seq_len,
                 arrival_s: q.arrival_s,
                 tier: q.tier,
+                max_new_tokens: q.max_new_tokens,
             })
             .collect()
     }
@@ -128,6 +147,15 @@ impl TraceGen {
                     let &(_, tier, slo) = weighted(&mut rng, &self.tiers, |&(w, ..)| w);
                     (tier, slo)
                 };
+                // Generative draw last, and only when configured: a
+                // non-generative trace consumes the rng stream exactly
+                // as it did before generative mixes existed.
+                let max_new_tokens = if self.generative.is_empty() {
+                    0
+                } else {
+                    let &(_, lo, hi) = weighted(&mut rng, &self.generative, |&(w, ..)| w);
+                    rng.range(lo as u64, hi as u64) as usize
+                };
                 Queued {
                     id,
                     seq_len,
@@ -135,6 +163,7 @@ impl TraceGen {
                     deadline_s: t + slo,
                     tier,
                     arrival_idx: id,
+                    max_new_tokens,
                 }
             })
             .collect()
@@ -245,6 +274,35 @@ mod tests {
         assert_eq!(
             g.requests(40).iter().map(|r| r.tier).collect::<Vec<_>>(),
             g.queued(40).iter().map(|q| q.tier).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn generative_mix_draws_budgets_without_disturbing_the_stream() {
+        let base = TraceGen::new(21).arrivals(Arrival::Uniform { gap_s: 0.5 });
+        let gen = base.clone().generative(&[(0.5, 0, 0), (0.5, 16, 64)]);
+        let plain = base.queued(200);
+        let mixed = gen.queued(200);
+        // The generative draw comes after everything else, so the
+        // non-generative fields of every request are bit-identical to
+        // the ungenerative trace from the same seed.
+        for (p, m) in plain.iter().zip(&mixed) {
+            assert_eq!((p.id, p.seq_len, p.tier), (m.id, m.seq_len, m.tier));
+            assert_eq!(p.arrival_s.to_bits(), m.arrival_s.to_bits());
+            assert_eq!(p.deadline_s.to_bits(), m.deadline_s.to_bits());
+            assert_eq!(p.max_new_tokens, 0);
+        }
+        // Both components are drawn: classic requests and generative
+        // ones inside the configured range.
+        let (zeros, gens): (Vec<_>, Vec<_>) =
+            mixed.iter().partition(|q| q.max_new_tokens == 0);
+        assert!(zeros.len() > 40 && gens.len() > 40, "{} / {}", zeros.len(), gens.len());
+        assert!(gens.iter().all(|q| (16..=64).contains(&q.max_new_tokens)));
+        // Budgets ride through to Requests, deterministically.
+        assert_eq!(gen.requests(50), gen.requests(50));
+        assert_eq!(
+            gen.requests(50).iter().map(|r| r.max_new_tokens).collect::<Vec<_>>(),
+            gen.queued(50).iter().map(|q| q.max_new_tokens).collect::<Vec<_>>()
         );
     }
 

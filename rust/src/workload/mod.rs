@@ -74,6 +74,11 @@ pub struct Request {
     pub arrival_s: f64,
     /// SLO class the serving layer schedules and sheds by.
     pub tier: Tier,
+    /// Generative budget: tokens to decode after the prefill pass. 0 (the
+    /// default everywhere) is a classic single-shot request — the
+    /// scheduler completes it at prefill and never enters the decode
+    /// loop, so pre-generative workloads behave bit-identically.
+    pub max_new_tokens: usize,
 }
 
 /// QNLI-like length distribution: clipped normal around the paper's
@@ -106,7 +111,7 @@ impl QnliWorkload {
                     .clamp(self.min_len as f64, self.max_len as f64) as usize;
                 // Exponential inter-arrival via inverse CDF.
                 t += -self.mean_gap_s * (1.0 - rng.uniform() as f64).ln();
-                Request { id, seq_len: len, arrival_s: t, tier: Tier::default() }
+                Request { id, seq_len: len, arrival_s: t, tier: Tier::default(), max_new_tokens: 0 }
             })
             .collect()
     }
@@ -116,7 +121,13 @@ impl QnliWorkload {
 /// uses 384).
 pub fn fixed_length(n: usize, seq_len: usize) -> Vec<Request> {
     (0..n as u64)
-        .map(|id| Request { id, seq_len, arrival_s: id as f64, tier: Tier::default() })
+        .map(|id| Request {
+            id,
+            seq_len,
+            arrival_s: id as f64,
+            tier: Tier::default(),
+            max_new_tokens: 0,
+        })
         .collect()
 }
 

@@ -39,6 +39,7 @@ fn the_rule_table_subsumes_the_legacy_pins() {
         "wire-elem-bytes",
         "tile-grain-truth",
         "measured-clock",
+        "kv-partition-truth",
     ] {
         assert!(ids.contains(&id), "rule `{id}` disappeared from lint::RULES");
     }
@@ -70,6 +71,11 @@ fn every_rule_fires_on_an_injected_violation() {
         ("wire-elem-bytes", "sim/engine.rs", "let b = n * WIRE_BYTES_PER_ELEM;\n"),
         ("tile-grain-truth", "cluster/worker.rs", "geom.tile_grain = 12;\n"),
         ("measured-clock", "engine/mod.rs", "let t = Instant::now();\n"),
+        (
+            "kv-partition-truth",
+            "sim/engine.rs",
+            "let s = KvShardSpec { device: 0, heads: 4, head_dim: 64, capacity: 64 };\n",
+        ),
     ];
     for (rule, file, src) in cases {
         let hits = lint::check_source(file, src);

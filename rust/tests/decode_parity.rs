@@ -1,0 +1,177 @@
+//! Cross-engine generative-decode parity: the decode-step schedule
+//! (sync points, ring bytes) and the deployment-sharded KV layout are
+//! *schedule properties* — identical numbers from the simulator's
+//! walked counts, the cluster's modeled counts, and the shared
+//! [`decode_step_schedule`] source of truth, per ladder rung, device
+//! count d = 1..4, and wire format. KV shard shapes are pinned against
+//! the deployment rung partition (`kv-partition-truth`): the layout is
+//! derived from [`Deployment::partition_for`], never computed locally.
+
+mod common;
+
+use common::artifacts_built;
+use galaxy::cluster::RealCluster;
+use galaxy::config::{default_artifacts_dir, Manifest};
+use galaxy::engine::{decode_step_schedule, DecodeStep, Engine};
+use galaxy::kvcache::KvLayout;
+use galaxy::model::ModelConfig;
+use galaxy::parallel::OverlapMode;
+use galaxy::planner::Planner;
+use galaxy::profiler::Profiler;
+use galaxy::sim::{DeviceClass, EdgeEnv, NetParams, SimEngine};
+use galaxy::transport::WireFormat;
+
+const BUCKETS: [usize; 3] = [64, 128, 256];
+const WIRES: [WireFormat; 3] = [WireFormat::F32, WireFormat::F16, WireFormat::I8];
+
+fn sim_engine<'a>(
+    model: &'a ModelConfig,
+    env: &'a EdgeEnv,
+    wire: WireFormat,
+) -> SimEngine<'a> {
+    let profile = Profiler::analytic(model, env, 256).profile();
+    let plan = Planner::new(model, env, &profile).plan().unwrap();
+    SimEngine::new(model, env, plan, NetParams::mbps(100.0))
+        .with_buckets(BUCKETS.to_vec())
+        .with_wire_format(wire)
+}
+
+#[test]
+fn sim_decode_counts_match_the_shared_schedule() {
+    // Every (rung × d × wire) cell: the simulator's walked decode-step
+    // sync-point and ring-byte counts must equal the shared schedule —
+    // 4 syncs per layer, one new-token activation over d−1 hops each,
+    // and (0, 0) for solo deployments.
+    let model = ModelConfig::distilbert();
+    for d in 1..=4usize {
+        let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+        for wire in WIRES {
+            let mut engine = sim_engine(&model, &env, wire);
+            for (k, &bucket) in BUCKETS.iter().enumerate() {
+                let id = (d * 100 + k) as u64;
+                let out = engine
+                    .decode_step(&DecodeStep { id, bucket, pos: bucket / 2 })
+                    .unwrap();
+                let (syncs, bytes) =
+                    decode_step_schedule(d, model.layers, model.hidden, wire.elem_bytes());
+                assert_eq!(
+                    (out.sync_points, out.ring_bytes),
+                    (syncs, bytes),
+                    "d={d} wire={wire:?} bucket={bucket}"
+                );
+                assert_eq!(out.decode_pos, Some(bucket / 2));
+                if d == 1 {
+                    assert_eq!((syncs, bytes), (0, 0), "solo decode has no ring");
+                }
+                engine.end_generation(id).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_step_cost_is_position_independent() {
+    // The decode-step slot-budget contract: every step at a rung is
+    // budgeted at the rung's full KV capacity, so cost and counts do
+    // not depend on how full the cache actually is.
+    let model = ModelConfig::distilbert();
+    let env = EdgeEnv::preset_b();
+    let mut engine = sim_engine(&model, &env, WireFormat::F32);
+    for (k, &bucket) in BUCKETS.iter().enumerate() {
+        let early = engine
+            .decode_step(&DecodeStep { id: k as u64, bucket, pos: 1 })
+            .unwrap();
+        let late = engine
+            .decode_step(&DecodeStep { id: (k + 10) as u64, bucket, pos: bucket - 1 })
+            .unwrap();
+        assert_eq!(early.sync_points, late.sync_points);
+        assert_eq!(early.ring_bytes, late.ring_bytes);
+        assert!(
+            (early.service_s - late.service_s).abs() < 1e-12,
+            "bucket {bucket}: step cost must be a per-rung constant, got {} vs {}",
+            early.service_s,
+            late.service_s
+        );
+        engine.end_generation(k as u64).unwrap();
+        engine.end_generation((k + 10) as u64).unwrap();
+    }
+}
+
+#[test]
+fn kv_shard_layouts_follow_the_deployment_rung_partition() {
+    // The KV shards a decode step materializes must be exactly the
+    // layout derived from the deployment's rung partition: same shard
+    // count as devices, per-shard heads equal to `partition_for`'s head
+    // split, capacity equal to the rung bucket.
+    let model = ModelConfig::distilbert();
+    for d in 1..=4usize {
+        let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+        let mut engine = sim_engine(&model, &env, WireFormat::F32);
+        for (k, &bucket) in BUCKETS.iter().enumerate() {
+            let id = (d * 10 + k) as u64;
+            engine.decode_step(&DecodeStep { id, bucket, pos: 3 }).unwrap();
+            let layout = engine.kv_layout(id).expect("decode step materializes a cache");
+            let want = KvLayout::for_rung(engine.deployment(), &model, bucket);
+            assert_eq!(layout, &want, "d={d} bucket={bucket}");
+            assert_eq!(layout.shards().len(), d);
+            assert_eq!(layout.bucket(), bucket);
+            assert_eq!(layout.total_heads(), model.heads);
+            let partition = engine.deployment().partition_for(bucket);
+            let shard_heads: Vec<usize> =
+                layout.shards().iter().map(|s| s.heads).collect();
+            assert_eq!(shard_heads, partition.heads, "d={d} bucket={bucket}");
+            assert_eq!(engine.kv_len(id), Some(4), "pos 3 + the decoded token");
+            engine.end_generation(id).unwrap();
+        }
+        assert_eq!(engine.kv_active(), 0, "ended generations release their caches");
+    }
+}
+
+#[test]
+fn cluster_decode_counts_match_sim_and_schedule() {
+    // Artifact-gated cross-engine pin: the real cluster's modeled
+    // decode-step counts must equal both the shared schedule and the
+    // simulator's walked counts on the same topology, per manifest rung.
+    if !artifacts_built() {
+        return;
+    }
+    let model = ModelConfig::galaxy_mini();
+    let manifest = Manifest::load(default_artifacts_dir()).unwrap();
+    for d in 2..=3usize {
+        let env = EdgeEnv::new(format!("{d}x"), &vec![DeviceClass::NanoM; d]);
+        let profile = Profiler::analytic(&model, &env, manifest.seq_len).profile();
+        let plan = Planner::new(&model, &env, &profile).plan().unwrap();
+        let mut cluster =
+            RealCluster::spawn(&model, &manifest, &plan, OverlapMode::Tiled, "xla", 7).unwrap();
+        let buckets = cluster.seq_buckets();
+        let mut sim = SimEngine::new(&model, &env, plan, NetParams::mbps(100.0))
+            .with_buckets(buckets.clone());
+        for (k, &bucket) in buckets.iter().enumerate() {
+            let id = (d * 100 + k) as u64;
+            let step = DecodeStep { id, bucket, pos: bucket / 2 };
+            let real = cluster.decode_step(&step).unwrap();
+            let modeled = sim.decode_step(&step).unwrap();
+            let (syncs, bytes) = decode_step_schedule(
+                d,
+                model.layers,
+                model.hidden,
+                cluster.wire_format().elem_bytes(),
+            );
+            assert_eq!(
+                (real.sync_points, real.ring_bytes),
+                (syncs, bytes),
+                "cluster counts off the shared schedule: d={d} bucket={bucket}"
+            );
+            assert_eq!(
+                (modeled.sync_points, modeled.ring_bytes),
+                (real.sync_points, real.ring_bytes),
+                "sim/cluster decode divergence: d={d} bucket={bucket}"
+            );
+            assert_eq!(real.decode_pos, Some(bucket / 2));
+            sim.end_generation(id).unwrap();
+        }
+        // An off-ladder rung is rejected, not silently served.
+        let bad = DecodeStep { id: 999, bucket: 7, pos: 1 };
+        assert!(cluster.decode_step(&bad).is_err());
+    }
+}

@@ -114,7 +114,13 @@ const N: usize = 48;
 
 fn burst(seq_len: usize, n: usize) -> Vec<Request> {
     (0..n)
-        .map(|i| Request { id: i as u64, seq_len, arrival_s: 0.0, tier: Tier::default() })
+        .map(|i| Request {
+            id: i as u64,
+            seq_len,
+            arrival_s: 0.0,
+            tier: Tier::default(),
+            max_new_tokens: 0,
+        })
         .collect()
 }
 

@@ -293,6 +293,7 @@ fn multi_bucket_artifacts_serve_every_rung() {
             seq_len: b - 1,
             arrival_s: 0.0,
             tier: Tier::default(),
+            max_new_tokens: 0,
         })
         .collect();
     let report = Scheduler::new(cluster).run(&reqs).unwrap();

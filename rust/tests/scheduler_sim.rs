@@ -82,7 +82,13 @@ fn bucketing_pads_to_smallest_admissible_bucket() {
     let caps = engine.caps();
     let reqs: Vec<Request> = [(0u64, 30usize), (1, 64), (2, 65), (3, 400)]
         .iter()
-        .map(|&(id, l)| Request { id, seq_len: l, arrival_s: 0.0, tier: Tier::default() })
+        .map(|&(id, l)| Request {
+            id,
+            seq_len: l,
+            arrival_s: 0.0,
+            tier: Tier::default(),
+            max_new_tokens: 0,
+        })
         .collect();
     let report = Scheduler::new(engine).run(&reqs).unwrap();
     let buckets: Vec<usize> = report.completions.iter().map(|c| c.bucket).collect();
@@ -99,8 +105,8 @@ fn oversize_requests_are_rejected() {
     let engine = SimEngine::new(&model, &env, plan(&model, &env, 256), NetParams::mbps(MBPS))
         .with_buckets(vec![128, 256]);
     let reqs = vec![
-        Request { id: 0, seq_len: 100, arrival_s: 0.0, tier: Tier::default() },
-        Request { id: 1, seq_len: 400, arrival_s: 0.0, tier: Tier::default() },
+        Request { id: 0, seq_len: 100, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
+        Request { id: 1, seq_len: 400, arrival_s: 0.0, tier: Tier::default(), max_new_tokens: 0 },
     ];
     let report = Scheduler::new(engine).run(&reqs).unwrap();
     assert_eq!(report.served(), 1);
@@ -116,7 +122,13 @@ fn sjf_cuts_mean_queueing_under_mixed_lengths() {
     // a serial server).
     let model = ModelConfig::bert_large();
     let env = EdgeEnv::preset_b();
-    let mut reqs = vec![Request { id: 0, seq_len: 512, arrival_s: 0.0, tier: Tier::default() }];
+    let mut reqs = vec![Request {
+        id: 0,
+        seq_len: 512,
+        arrival_s: 0.0,
+        tier: Tier::default(),
+        max_new_tokens: 0,
+    }];
     reqs.extend(TraceGen::new(5).fixed_len(32).requests(7).into_iter().map(|mut r| {
         r.id += 1;
         r
@@ -341,7 +353,13 @@ fn tiered_admission_keeps_interactive_goodput_under_10x_overload() {
     let make = || SimEngine::new(&model, &env, plan(&model, &env, 512), NetParams::mbps(MBPS));
 
     // Measure the single-request service time S (service rate 1/S).
-    let probe = vec![Request { id: 0, seq_len: 200, arrival_s: 0.0, tier: Tier::default() }];
+    let probe = vec![Request {
+        id: 0,
+        seq_len: 200,
+        arrival_s: 0.0,
+        tier: Tier::default(),
+        max_new_tokens: 0,
+    }];
     let s = Scheduler::new(make()).run(&probe).unwrap().completions[0].service_s;
     assert!(s > 0.0 && s.is_finite(), "probe service time {s}");
 
@@ -405,6 +423,68 @@ fn tiered_admission_keeps_interactive_goodput_under_10x_overload() {
         "tiered met {} !> baseline met {}",
         ti.deadlines_met,
         baseline.metrics.tier(Tier::Interactive).deadlines_met
+    );
+}
+
+#[test]
+fn generative_replay_token_batching_beats_serial_decode() {
+    // The generative-decode acceptance pin on the full sim stack: a
+    // seeded generative burst (every request carries a decode budget)
+    // replayed twice over the same SimEngine — once with token-level
+    // continuous batching (the default), once in the admission-time-only
+    // baseline where each generation holds the engine through its whole
+    // decode loop. Token batching must win on both TTFT p95 and
+    // sustained token rate, while producing exactly the same tokens.
+    let model = ModelConfig::bert_large();
+    let env = EdgeEnv::preset_b();
+    let mut trace = TraceGen::new(17)
+        .lengths(&[(1.0, 80, 200)])
+        .generative(&[(1.0, 8, 24)])
+        .requests(16);
+    for r in &mut trace {
+        r.arrival_s = 0.0; // burst: decode pressure overlaps prefill demand
+    }
+    assert!(trace.iter().all(|r| (8..=24).contains(&r.max_new_tokens)));
+    let total_tokens: u64 = trace.iter().map(|r| r.max_new_tokens as u64).sum();
+
+    let run = |token_batching: bool| -> (SchedReport, SimEngine) {
+        let engine = SimEngine::new(&model, &env, plan(&model, &env, 512), NetParams::mbps(MBPS))
+            .with_buckets(vec![128, 256, 512])
+            .with_max_batch(4);
+        let cfg = SchedulerConfig { slo_s: 600.0, token_batching, ..Default::default() };
+        let mut sched = Scheduler::with_config(engine, cfg);
+        let rep = sched.run(&trace).unwrap();
+        (rep, sched.into_engine())
+    };
+    let (batched, batched_engine) = run(true);
+    let (serial, serial_engine) = run(false);
+
+    for rep in [&batched, &serial] {
+        assert_eq!(rep.served(), 16);
+        assert_eq!(rep.metrics.generated_tokens, total_tokens);
+        assert_eq!(rep.metrics.ttft.count(), 16);
+        for c in &rep.completions {
+            let want = trace.iter().find(|r| r.id == c.id).unwrap().max_new_tokens;
+            assert_eq!(c.new_tokens, want, "request {} decoded its whole budget", c.id);
+            let ft = c.first_token_s.expect("generative completion reports TTFT");
+            assert!(ft >= c.start_s && ft <= c.finish_s + 1e-9);
+        }
+    }
+    // Every generation was ended: no KV cache leaks past its request.
+    assert_eq!(batched_engine.kv_active(), 0);
+    assert_eq!(serial_engine.kv_active(), 0);
+
+    assert!(
+        batched.metrics.ttft.p95_s() < serial.metrics.ttft.p95_s(),
+        "ttft p95: token batching {} !< serial decode {}",
+        batched.metrics.ttft.p95_s(),
+        serial.metrics.ttft.p95_s()
+    );
+    assert!(
+        batched.metrics.tokens_per_s() > serial.metrics.tokens_per_s(),
+        "tokens/s: token batching {} !> serial decode {}",
+        batched.metrics.tokens_per_s(),
+        serial.metrics.tokens_per_s()
     );
 }
 
